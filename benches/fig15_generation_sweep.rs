@@ -1,0 +1,79 @@
+//! Fig 15 — UC1 gain vs *generation time*.
+//!
+//! Paper setup (§6.2): one simulation generating 500 elements, process
+//! time fixed at 60 000 ms, generation time swept 100→2000 ms; 2 workers
+//! with 36 and 48 cores; the simulation occupies 48 cores; 5 runs.
+//! Expected shape: gain ≈ 0 at 100 ms rising to a ~19–23 % plateau.
+
+use hybridws::apps::uc1_simulation::{self, Uc1Config};
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::util::bench::{banner, bench_scale, f2, full_sweep, pct, reps, Table};
+
+fn run_once(cfg: &Uc1Config, hybrid: bool) -> f64 {
+    let rt = CometRuntime::builder()
+        .workers(&[36, 48])
+        .scale(bench_scale())
+        .name("fig15")
+        .build()
+        .unwrap();
+    let r = if hybrid {
+        uc1_simulation::run_hybrid(&rt, cfg).unwrap()
+    } else {
+        uc1_simulation::run_task_based(&rt, cfg).unwrap()
+    };
+    rt.shutdown().unwrap();
+    r.elapsed_s
+}
+
+fn main() {
+    hybridws::apps::register_all();
+    banner("Fig 15", "UC1 gain with increasing generation time");
+
+    // Paper: 500 elements; trimmed: 100 (shape-preserving).
+    let elements = if full_sweep() { 500 } else { 100 };
+    let gens: &[u64] =
+        if full_sweep() { &[100, 250, 500, 1000, 2000] } else { &[100, 500, 2000] };
+    // Paper-reported gains for reference at matching generation times.
+    let paper = |gen: u64| match gen {
+        100 => 0.01,
+        250 => 0.10,
+        500 => 0.19,
+        1000 => 0.21,
+        2000 => 0.23,
+        _ => f64::NAN,
+    };
+
+    let table = Table::new(&["gen_ms", "task-based_s", "hybrid_s", "gain", "paper_gain"]);
+    for &gen in gens {
+        let base = std::env::temp_dir().join(format!("hybridws-fig15-{gen}-{}", std::process::id()));
+        let mut tb_total = 0.0;
+        let mut hy_total = 0.0;
+        for rep in 0..reps() {
+            let cfg = Uc1Config {
+                num_sims: 1,
+                files_per_sim: elements,
+                gen_ms: gen,
+                proc_ms: 60_000,
+                sim_cores: 48,
+                proc_cores: 1,
+                merge_cores: 1,
+                dir: base.join(format!("rep{rep}")),
+            };
+            let _ = std::fs::remove_dir_all(&cfg.dir);
+            tb_total += run_once(&cfg, false);
+            hy_total += run_once(&cfg, true);
+            let _ = std::fs::remove_dir_all(&cfg.dir);
+        }
+        let tb = tb_total / reps() as f64;
+        let hy = hy_total / reps() as f64;
+        table.row(&[
+            gen.to_string(),
+            f2(tb),
+            f2(hy),
+            pct(uc1_simulation::gain(tb, hy)),
+            pct(paper(gen)),
+        ]);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+    println!("\nshape check: gain ~0 at gen=100ms, rising toward a plateau ≈20% at 500ms+.");
+}

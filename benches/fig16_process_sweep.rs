@@ -1,0 +1,77 @@
+//! Fig 16 — UC1 gain vs *process time*.
+//!
+//! Paper setup (§6.2): 500 process tasks, generation time fixed at 100 ms
+//! (total simulation 50 000 ms), process time swept 5 000→60 000 ms.
+//! Expected shape: gain ≈ 23 % at 5 000 ms decaying to ≈ 0 at 60 000 ms.
+
+use hybridws::apps::uc1_simulation::{self, Uc1Config};
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::util::bench::{banner, bench_scale, f2, full_sweep, pct, reps, Table};
+
+fn run_once(cfg: &Uc1Config, hybrid: bool) -> f64 {
+    let rt = CometRuntime::builder()
+        .workers(&[36, 48])
+        .scale(bench_scale())
+        .name("fig16")
+        .build()
+        .unwrap();
+    let r = if hybrid {
+        uc1_simulation::run_hybrid(&rt, cfg).unwrap()
+    } else {
+        uc1_simulation::run_task_based(&rt, cfg).unwrap()
+    };
+    rt.shutdown().unwrap();
+    r.elapsed_s
+}
+
+fn main() {
+    hybridws::apps::register_all();
+    banner("Fig 16", "UC1 gain with increasing process time");
+
+    let elements = if full_sweep() { 500 } else { 100 };
+    let procs: &[u64] =
+        if full_sweep() { &[5_000, 15_000, 30_000, 45_000, 60_000] } else { &[5_000, 15_000, 60_000] };
+    let paper = |proc: u64| match proc {
+        5_000 => 0.23,
+        15_000 => 0.18,
+        30_000 => 0.12,
+        45_000 => 0.06,
+        60_000 => 0.02,
+        _ => f64::NAN,
+    };
+
+    let table = Table::new(&["proc_ms", "task-based_s", "hybrid_s", "gain", "paper_gain"]);
+    for &proc in procs {
+        let base =
+            std::env::temp_dir().join(format!("hybridws-fig16-{proc}-{}", std::process::id()));
+        let mut tb_total = 0.0;
+        let mut hy_total = 0.0;
+        for rep in 0..reps() {
+            let cfg = Uc1Config {
+                num_sims: 1,
+                files_per_sim: elements,
+                gen_ms: 100,
+                proc_ms: proc,
+                sim_cores: 48,
+                proc_cores: 1,
+                merge_cores: 1,
+                dir: base.join(format!("rep{rep}")),
+            };
+            let _ = std::fs::remove_dir_all(&cfg.dir);
+            tb_total += run_once(&cfg, false);
+            hy_total += run_once(&cfg, true);
+            let _ = std::fs::remove_dir_all(&cfg.dir);
+        }
+        let tb = tb_total / reps() as f64;
+        let hy = hy_total / reps() as f64;
+        table.row(&[
+            proc.to_string(),
+            f2(tb),
+            f2(hy),
+            pct(uc1_simulation::gain(tb, hy)),
+            pct(paper(proc)),
+        ]);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+    println!("\nshape check: gain decays as the process time approaches the total generation time.");
+}

@@ -1,0 +1,92 @@
+//! Figs 19 & 20 — stream writers/readers scalability and load balance.
+//!
+//! Paper setup (§6.4): one stream, N writers and M readers (1→8), 100
+//! elements of 24 bytes, 1 000 ms to process an element, each task on its
+//! own node. Expected shape (Fig 19): execution time insensitive to
+//! writers, speed-up ≈ 4.8× at 8 readers, efficiency ≈ 87 % at 1 reader
+//! dropping to ≈ 50 % at 8. Fig 20: greedy first-poller-wins imbalance —
+//! roughly half the readers take ~70 % of the elements.
+
+use hybridws::apps::workload;
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::util::bench::{banner, bench_scale, f2, full_sweep, pct, reps, Table};
+
+const ELEMENTS: usize = 100;
+const PAYLOAD: usize = 24;
+const PROCESS_MS: u64 = 1_000;
+// Element-creation gap: elements arrive while readers process (paper: the
+// writers' creation time). 200 ms/element ≈ the arrival rate that caps the
+// paper's 8-reader speed-up near 4.8x.
+const GAP_MS: u64 = 200;
+
+fn main() {
+    hybridws::apps::register_all();
+    banner("Fig 19", "execution time & efficiency vs readers (per writer count)");
+    let counts: &[usize] = if full_sweep() { &[1, 2, 4, 8] } else { &[1, 2, 8] };
+
+    // One core per stream task, each on "its own node": 16 single-slot
+    // workers mirror the paper's task-per-node placement.
+    let slots = vec![1usize; 16];
+    let scale = bench_scale();
+    let ideal_total = |readers: usize| {
+        scale.paper_ms(PROCESS_MS).as_secs_f64() * ELEMENTS as f64 / readers as f64
+    };
+
+    let table = Table::new(&["writers", "readers", "time_s", "speedup", "efficiency"]);
+    let mut one_reader_time = f64::NAN;
+    for &writers in counts {
+        for &readers in counts {
+            let mut total = 0.0;
+            for _ in 0..reps() {
+                let rt = CometRuntime::builder()
+                    .workers(&slots)
+                    .scale(scale)
+                    .name("fig19")
+                    .build()
+                    .unwrap();
+                let r = workload::run_writers_readers_gap(
+                    &rt, writers, readers, ELEMENTS, PAYLOAD, PROCESS_MS, GAP_MS,
+                )
+                .unwrap();
+                assert_eq!(r.per_reader.iter().sum::<usize>(), ELEMENTS);
+                total += r.elapsed_s;
+                rt.shutdown().unwrap();
+            }
+            let time = total / reps() as f64;
+            if writers == 1 && readers == 1 {
+                one_reader_time = time;
+            }
+            let speedup = one_reader_time / time;
+            let eff = ideal_total(readers) / time;
+            table.row(&[
+                writers.to_string(),
+                readers.to_string(),
+                f2(time),
+                f2(speedup),
+                pct(eff),
+            ]);
+        }
+    }
+
+    banner("Fig 20", "elements processed per reader (load balance, 1 writer)");
+    let table = Table::new(&["readers", "distribution", "top_half_share"]);
+    for &readers in counts {
+        let rt =
+            CometRuntime::builder().workers(&slots).scale(scale).name("fig20").build().unwrap();
+        let r = workload::run_writers_readers_gap(
+            &rt, 1, readers, ELEMENTS, PAYLOAD, PROCESS_MS, GAP_MS,
+        )
+        .unwrap();
+        rt.shutdown().unwrap();
+        let mut counts_sorted = r.per_reader.clone();
+        counts_sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top_half: usize = counts_sorted.iter().take(readers.div_ceil(2)).sum();
+        table.row(&[
+            readers.to_string(),
+            format!("{counts_sorted:?}"),
+            pct(top_half as f64 / ELEMENTS as f64),
+        ]);
+    }
+    println!("\nshape check: Fig 19 speed-up well below ideal at 8 readers (~4.8x in the paper);");
+    println!("Fig 20: the busiest half of the readers takes ~70% of the elements.");
+}

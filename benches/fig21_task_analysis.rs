@@ -1,0 +1,64 @@
+//! Fig 21 — mean *task analysis* time: ObjectParameter (OP) vs
+//! StreamParameter (SP), for (a) one parameter of increasing size and
+//! (b) an increasing number of 8 MB parameters.
+//!
+//! Paper expectation: flat vs size for both (≈0.05 ms apart); grows with
+//! the parameter *count* for OP, flat for SP (a stream stays one
+//! parameter no matter how many objects ride it).
+
+use hybridws::apps::workload;
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::coordinator::metrics::Phase;
+use hybridws::util::bench::{banner, f2, full_sweep, Table};
+use hybridws::util::timeutil::TimeScale;
+
+const TASKS: usize = 100;
+const MB: usize = 1 << 20;
+
+fn measure(objs_per_task: usize, obj_bytes: usize, phase: Phase) -> (f64, f64) {
+    let tasks = hybridws::util::bench::tasks_for(objs_per_task * obj_bytes, TASKS);
+    let mut out = [0.0f64; 2];
+    for (i, sp) in [false, true].into_iter().enumerate() {
+        let rt = CometRuntime::builder()
+            .workers(&[8])
+            .scale(TimeScale::IDENTITY)
+            .name("fig21")
+            .build()
+            .unwrap();
+        // Warm-up: first-run allocator/thread effects, then reset metrics.
+        workload::run_op_batch(&rt, 4, 1, 1024).unwrap();
+        workload::run_sp_batch(&rt, 4, 1, 1024).unwrap();
+        rt.metrics().clear();
+        if sp {
+            workload::run_sp_batch(&rt, tasks, objs_per_task, obj_bytes).unwrap();
+            out[i] = rt.metrics().mean_phase(phase, "wl.sp_task"); // µs
+        } else {
+            workload::run_op_batch(&rt, tasks, objs_per_task, obj_bytes).unwrap();
+            out[i] = rt.metrics().mean_phase(phase, "wl.op_task");
+        }
+        rt.shutdown().unwrap();
+    }
+    (out[0], out[1])
+}
+
+fn main() {
+    hybridws::apps::register_all();
+    banner("Fig 21", "task analysis time: OP vs SP");
+
+    let sizes: &[usize] = if full_sweep() { &[1, 8, 32, 64, 128] } else { &[1, 32, 128] };
+    println!("(a) one parameter of increasing size ({TASKS} tasks)");
+    let t = Table::new(&["size_MB", "OP_us", "SP_us"]);
+    for &mb in sizes {
+        let (op, sp) = measure(1, mb * MB, Phase::Analysis);
+        t.row(&[mb.to_string(), f2(op), f2(sp)]);
+    }
+
+    let counts: &[usize] = if full_sweep() { &[1, 2, 4, 8, 16] } else { &[1, 4, 16] };
+    println!("\n(b) increasing number of 8 MB parameters ({TASKS} tasks)");
+    let t = Table::new(&["count", "OP_us", "SP_us"]);
+    for &n in counts {
+        let (op, sp) = measure(n, 8 * MB, Phase::Analysis);
+        t.row(&[n.to_string(), f2(op), f2(sp)]);
+    }
+    println!("\nshape check: flat vs size; OP grows with count while SP stays flat.");
+}

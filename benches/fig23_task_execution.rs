@@ -1,0 +1,78 @@
+//! Fig 23 — mean *task execution* time (transfer + run): OP vs SP.
+//!
+//! Paper expectation: OP grows with size and with count (serialisation +
+//! transfer per parameter); SP pays the stream fetch instead, with the
+//! real object transfers happening at `publish` time on the main code
+//! path. OP wins below a crossover (paper: ≈48 MB total / ≈12 objects),
+//! SP wins above it.
+
+use hybridws::apps::workload;
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::coordinator::metrics::Phase;
+use hybridws::util::bench::{banner, f2, full_sweep, Table};
+use hybridws::util::timeutil::TimeScale;
+
+const TASKS: usize = 50;
+const MB: usize = 1 << 20;
+
+/// Mean transfer+exec per task, ms.
+fn measure(objs_per_task: usize, obj_bytes: usize) -> (f64, f64) {
+    let tasks = hybridws::util::bench::tasks_for(objs_per_task * obj_bytes, TASKS);
+    let mut out = [0.0f64; 2];
+    for (i, sp) in [false, true].into_iter().enumerate() {
+        let rt = CometRuntime::builder()
+            .workers(&[8])
+            .scale(TimeScale::IDENTITY)
+            .name("fig23")
+            .build()
+            .unwrap();
+        // Warm-up: first-run allocator/thread effects, then reset metrics.
+        workload::run_op_batch(&rt, 4, 1, 1024).unwrap();
+        workload::run_sp_batch(&rt, 4, 1, 1024).unwrap();
+        rt.metrics().clear();
+        let name = if sp { "wl.sp_task" } else { "wl.op_task" };
+        if sp {
+            workload::run_sp_batch(&rt, tasks, objs_per_task, obj_bytes).unwrap();
+        } else {
+            workload::run_op_batch(&rt, tasks, objs_per_task, obj_bytes).unwrap();
+        }
+        let transfer = rt.metrics().mean_phase(Phase::Transfer, name);
+        let exec = rt.metrics().mean_phase(Phase::Exec, name);
+        out[i] = (transfer + exec) / 1000.0;
+        rt.shutdown().unwrap();
+    }
+    (out[0], out[1])
+}
+
+fn main() {
+    hybridws::apps::register_all();
+    banner("Fig 23", "task execution time (transfer + run): OP vs SP");
+
+    let sizes: &[usize] = if full_sweep() { &[1, 8, 16, 32, 48, 64, 128] } else { &[1, 32, 128] };
+    println!("(a) one parameter of increasing size ({TASKS} tasks)");
+    let t = Table::new(&["size_MB", "OP_ms", "SP_ms", "winner"]);
+    for &mb in sizes {
+        let (op, sp) = measure(1, mb * MB);
+        t.row(&[
+            mb.to_string(),
+            f2(op),
+            f2(sp),
+            if op <= sp { "OP".into() } else { "SP".into() },
+        ]);
+    }
+
+    let counts: &[usize] = if full_sweep() { &[1, 2, 4, 6, 8, 12, 16] } else { &[1, 6, 16] };
+    println!("\n(b) increasing number of 8 MB parameters ({TASKS} tasks)");
+    let t = Table::new(&["count", "OP_ms", "SP_ms", "winner"]);
+    for &n in counts {
+        let (op, sp) = measure(n, 8 * MB);
+        t.row(&[
+            n.to_string(),
+            f2(op),
+            f2(sp),
+            if op <= sp { "OP".into() } else { "SP".into() },
+        ]);
+    }
+    println!("\nshape check: OP grows with total parameter bytes; a crossover hands the win");
+    println!("to SP for large/many objects (paper: ≈48 MB / ≈12 objects).");
+}

@@ -1,0 +1,60 @@
+//! Fig 24 — *total* benchmark time vs number of 8 MB objects: OP vs SP.
+//!
+//! Unlike Fig 23 this includes the main-code side (`publish` costs for SP,
+//! object registration for OP). Paper expectation: both grow with the
+//! total bytes; SP outperforms OP past ≈12 objects.
+
+use hybridws::apps::workload;
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::util::bench::{banner, f2, full_sweep, reps, Table};
+use hybridws::util::timeutil::TimeScale;
+
+const TASKS: usize = 50;
+const MB: usize = 1 << 20;
+
+fn measure(objs_per_task: usize) -> (f64, f64) {
+    let tasks = hybridws::util::bench::tasks_for(objs_per_task * 8 * MB, TASKS);
+    let mut op_total = 0.0;
+    let mut sp_total = 0.0;
+    for _ in 0..reps() {
+        let rt = CometRuntime::builder()
+            .workers(&[8])
+            .scale(TimeScale::IDENTITY)
+            .name("fig24")
+            .build()
+            .unwrap();
+        op_total += workload::run_op_batch(&rt, tasks, objs_per_task, 8 * MB).unwrap();
+        rt.shutdown().unwrap();
+        let rt = CometRuntime::builder()
+            .workers(&[8])
+            .scale(TimeScale::IDENTITY)
+            .name("fig24")
+            .build()
+            .unwrap();
+        sp_total += workload::run_sp_batch(&rt, tasks, objs_per_task, 8 * MB).unwrap();
+        rt.shutdown().unwrap();
+    }
+    // Normalise to per-task cost so rows with different task caps compare.
+    let denom = (reps() * tasks) as f64;
+    (op_total / denom * 1e3, sp_total / denom * 1e3)
+}
+
+fn main() {
+    hybridws::apps::register_all();
+    banner("Fig 24", "total benchmark time vs number of 8 MB objects");
+
+    let counts: &[usize] =
+        if full_sweep() { &[1, 2, 4, 8, 12, 16, 24] } else { &[1, 8, 16] };
+    let t = Table::new(&["count", "OP_ms_per_task", "SP_ms_per_task", "winner"]);
+    for &n in counts {
+        let (op, sp) = measure(n);
+        t.row(&[
+            n.to_string(),
+            f2(op),
+            f2(sp),
+            if op <= sp { "OP".into() } else { "SP".into() },
+        ]);
+    }
+    println!("\nshape check: both grow with total bytes; SP wins past the object-count");
+    println!("crossover (paper: >12 objects of 8 MB).");
+}

@@ -1,0 +1,199 @@
+//! Microbenchmarks of the L3 hot paths (the §Perf instrumentation):
+//! broker publish/poll, wire codec, task analysis, scheduling throughput,
+//! FDS directory scan and PJRT execution latency.
+
+use std::time::Instant;
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{AssignmentMode, BrokerCore};
+use hybridws::coordinator::analyser::TaskAnalyser;
+use hybridws::coordinator::annotations::{Arg, TaskSpec};
+use hybridws::coordinator::data::DataRegistry;
+use hybridws::coordinator::scheduler::{SchedulerConfig, TaskScheduler};
+use hybridws::util::bench::{banner, Table};
+use hybridws::util::timeutil::human_rate;
+use hybridws::util::wire::{Blob, Wire};
+
+fn bench_broker() {
+    banner("micro", "broker publish/poll throughput (embedded)");
+    let t = Table::new(&["payload_B", "publish_per_s", "poll_drain_per_s", "bandwidth"]);
+    for payload in [24usize, 1024, 65536] {
+        let core = BrokerCore::new();
+        core.create_topic("t", 4).unwrap();
+        let n = if payload > 4096 { 20_000 } else { 100_000 };
+        let t0 = Instant::now();
+        for _ in 0..n {
+            core.publish("t", ProducerRecord::new(vec![0xAB; payload])).unwrap();
+        }
+        let pub_dur = t0.elapsed();
+        core.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let t1 = Instant::now();
+        let mut got = 0;
+        while got < n {
+            got += core.poll("g", "t", "m", 4096).unwrap().len();
+        }
+        let poll_dur = t1.elapsed();
+        t.row(&[
+            payload.to_string(),
+            format!("{:.0}", n as f64 / pub_dur.as_secs_f64()),
+            format!("{:.0}", n as f64 / poll_dur.as_secs_f64()),
+            human_rate((n * payload) as u64, pub_dur),
+        ]);
+    }
+}
+
+fn bench_wire() {
+    banner("micro", "wire codec encode/decode");
+    let t = Table::new(&["payload", "encode", "decode"]);
+    let blob = Blob(vec![7u8; 1 << 20]);
+    let n = 200;
+    let t0 = Instant::now();
+    let mut encoded = Vec::new();
+    for _ in 0..n {
+        encoded = blob.encode_vec();
+    }
+    let enc = t0.elapsed();
+    let t1 = Instant::now();
+    for _ in 0..n {
+        let _ = Blob::decode_exact(&encoded).unwrap();
+    }
+    let dec = t1.elapsed();
+    t.row(&[
+        "1 MiB blob".into(),
+        human_rate((n << 20) as u64, enc),
+        human_rate((n << 20) as u64, dec),
+    ]);
+}
+
+fn bench_analysis() {
+    banner("micro", "task analysis throughput (8-parameter tasks)");
+    let mut analyser = TaskAnalyser::new();
+    let data: Vec<_> = (0..8).map(|_| analyser.data.new_data()).collect();
+    let n = 100_000;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let mut spec = TaskSpec::new("micro");
+        for d in &data {
+            spec = spec.arg(Arg::In(*d));
+        }
+        let _ = analyser.analyse(spec, 0);
+    }
+    let dur = t0.elapsed();
+    println!(
+        "{n} tasks analysed in {:.2}s → {:.1} µs/task ({:.0}k tasks/s)\n",
+        dur.as_secs_f64(),
+        dur.as_secs_f64() * 1e6 / n as f64,
+        n as f64 / dur.as_secs_f64() / 1e3,
+    );
+}
+
+fn bench_scheduler() {
+    banner("micro", "scheduler placement latency");
+    let t = Table::new(&["ready_tasks", "workers", "us_per_decision"]);
+    for (ready, workers) in [(100usize, 2usize), (1000, 8), (5000, 16)] {
+        let mut analyser = TaskAnalyser::new();
+        let data = DataRegistry::new();
+        let slots = vec![ready; workers]; // everything placeable
+        let mut sched = TaskScheduler::new(&slots, SchedulerConfig::default());
+        let mut records = Vec::new();
+        for _ in 0..ready {
+            let (rec, _) = analyser.analyse(TaskSpec::new("micro"), 0);
+            records.push(rec);
+        }
+        let t0 = Instant::now();
+        for r in &records {
+            sched.enqueue(r);
+        }
+        let placed = sched.schedule(&data);
+        let dur = t0.elapsed();
+        assert_eq!(placed.len(), ready);
+        t.row(&[
+            ready.to_string(),
+            workers.to_string(),
+            format!("{:.2}", dur.as_secs_f64() * 1e6 / ready as f64),
+        ]);
+    }
+}
+
+fn bench_pjrt() {
+    banner("micro", "PJRT execution latency per AOT model");
+    let Some(dir) = hybridws::runtime::find_artifacts_dir() else {
+        println!("artifacts not found — run `make artifacts` (skipping)\n");
+        return;
+    };
+    let zoo = hybridws::runtime::ModelZoo::load(&dir).unwrap();
+    let t = Table::new(&["model", "us_per_exec"]);
+    for spec in zoo.specs() {
+        let inputs: Vec<Vec<f32>> =
+            spec.inputs.iter().map(|s| vec![0.25f32; s.iter().product()]).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        // Warm-up.
+        zoo.execute(&spec.name, &refs).unwrap();
+        let n = 50;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            zoo.execute(&spec.name, &refs).unwrap();
+        }
+        let dur = t0.elapsed();
+        t.row(&[spec.name.clone(), format!("{:.0}", dur.as_secs_f64() * 1e6 / n as f64)]);
+    }
+}
+
+fn bench_runtime_throughput() {
+    banner("micro", "end-to-end task throughput (no-op tasks, full runtime)");
+    use hybridws::coordinator::prelude::*;
+    register_task_fn("micro.noop", |_| Ok(()));
+    let rt = hybridws::coordinator::api::CometRuntime::builder()
+        .workers(&[4, 4])
+        .scale(hybridws::util::timeutil::TimeScale::IDENTITY)
+        .build()
+        .unwrap();
+    let n = 20_000;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        rt.submit(TaskSpec::new("micro.noop")).unwrap();
+    }
+    rt.barrier().unwrap();
+    let dur = t0.elapsed();
+    println!(
+        "{n} tasks submitted+executed in {:.2}s → {:.0} tasks/s ({:.1} µs/task)\n",
+        dur.as_secs_f64(),
+        n as f64 / dur.as_secs_f64(),
+        dur.as_secs_f64() * 1e6 / n as f64,
+    );
+    rt.shutdown().unwrap();
+}
+
+fn bench_ods_roundtrip() {
+    banner("micro", "ODS publish→poll roundtrip latency (exactly-once)");
+    use hybridws::dstream::DistroStreamHub;
+    let (hub, _, _) = DistroStreamHub::embedded("micro");
+    let t = Table::new(&["payload_B", "us_per_roundtrip"]);
+    for payload in [24usize, 4096] {
+        let s = hub.object_stream::<Blob>(None).unwrap();
+        let msg = Blob(vec![0xCD; payload]);
+        // Warm-up registers producer+consumer.
+        s.publish(&msg).unwrap();
+        while s.poll().unwrap().is_empty() {}
+        let n = 20_000;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            s.publish(&msg).unwrap();
+            let got = s.poll().unwrap();
+            assert!(!got.is_empty());
+        }
+        let dur = t0.elapsed();
+        t.row(&[payload.to_string(), format!("{:.2}", dur.as_secs_f64() * 1e6 / n as f64)]);
+    }
+}
+
+fn main() {
+    hybridws::apps::register_all();
+    bench_broker();
+    bench_wire();
+    bench_analysis();
+    bench_scheduler();
+    bench_runtime_throughput();
+    bench_ods_roundtrip();
+    bench_pjrt();
+}

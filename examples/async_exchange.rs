@@ -1,0 +1,43 @@
+//! UC2 (paper §5.2/§6.3): parallel iterative computations exchanging state
+//! at every iteration — synchronisation tasks (task-based) vs asynchronous
+//! stream exchange (hybrid).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example async_exchange
+//! ```
+
+use hybridws::apps::uc2_sweep::{self, Uc2Config};
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::util::timeutil::TimeScale;
+
+fn main() -> anyhow::Result<()> {
+    hybridws::apps::register_all();
+    let scale = TimeScale::new(0.02);
+
+    println!("== UC2 asynchronous data exchange ==");
+    println!("{:>6} | {:>12} | {:>12} | {:>6}", "iters", "task-based", "hybrid", "gain");
+    for iterations in [4, 16, 64] {
+        let cfg = Uc2Config { computations: 2, iterations, iter_ms: 2_000 };
+
+        let rt = CometRuntime::builder().workers(&[8]).scale(scale).with_models().build()?;
+        let tb = uc2_sweep::run_task_based(&rt, &cfg)?;
+        rt.shutdown()?;
+
+        let rt = CometRuntime::builder().workers(&[8]).scale(scale).with_models().build()?;
+        let hy = uc2_sweep::run_hybrid(&rt, &cfg)?;
+        rt.shutdown()?;
+
+        let gain = (tb.elapsed_s - hy.elapsed_s) / tb.elapsed_s;
+        println!(
+            "{iterations:>6} | {:>10.2}s | {:>10.2}s | {:>5.1}%",
+            tb.elapsed_s,
+            hy.elapsed_s,
+            gain * 100.0
+        );
+        // Both must converge to finite states of the right shape.
+        anyhow::ensure!(tb.finals.iter().all(|f| f.iter().all(|v| v.is_finite())));
+        anyhow::ensure!(hy.finals.iter().all(|f| f.iter().all(|v| v.is_finite())));
+    }
+    println!("(paper: ~42% at 1 iteration, settling ≈33% beyond 32 iterations)");
+    Ok(())
+}

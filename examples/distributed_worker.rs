@@ -1,0 +1,62 @@
+//! Distributed deployment demo: the master drives one in-process worker
+//! plus one **remote worker over TCP** (the `hybridws worker` role, here
+//! hosted on a thread so the example is self-contained — start it in
+//! another process/host with `hybridws worker --listen <addr> --slots 4`
+//! for a real multi-process run).
+//!
+//! ```sh
+//! cargo run --release --example distributed_worker
+//! ```
+
+use std::net::TcpListener;
+
+use hybridws::coordinator::prelude::*;
+use hybridws::coordinator::remote::serve_worker;
+
+fn main() -> anyhow::Result<()> {
+    hybridws::apps::register_all();
+    register_task_fn("where-am-i", |ctx| {
+        // Long enough that 12 tasks cannot all be absorbed by the 2 local
+        // slots before the scheduler spills to the remote worker.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let tag = if ctx.worker_id == usize::MAX { "remote".to_string() } else {
+            format!("local worker {}", ctx.worker_id)
+        };
+        ctx.set_output_as(0, &tag);
+        Ok(())
+    });
+
+    // Host a remote worker on a thread (same registry, own TCP endpoint).
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let worker_thread = std::thread::spawn(move || serve_worker(listener, 4));
+
+    let rt = CometRuntime::builder()
+        .workers(&[2])
+        .remote_worker(&addr, 4)
+        .name("distributed")
+        .build()?;
+    println!("master up: 1 local worker (2 slots) + 1 remote worker (4 slots) at {addr}");
+
+    // Saturate both workers.
+    let outs: Vec<DataRef> = (0..12).map(|_| rt.new_object()).collect();
+    for o in &outs {
+        rt.submit(TaskSpec::new("where-am-i").arg(Arg::Out(o.id())))?;
+    }
+    let mut local = 0;
+    let mut remote = 0;
+    for o in &outs {
+        let tag: String = rt.wait_on_as(o)?;
+        if tag == "remote" {
+            remote += 1;
+        } else {
+            local += 1;
+        }
+    }
+    println!("placements: {local} local, {remote} remote");
+    anyhow::ensure!(remote > 0, "the remote worker must receive tasks");
+    rt.shutdown()?;
+    drop(rt); // closes the remote connection; the worker thread exits
+    let _ = worker_thread.join();
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: one hybrid workflow mixing the three parameter kinds.
+//!
+//! A `produce` task streams numbers (dataflow), a `consume` task reduces
+//! them as they arrive (no dependency edge between the two — they run
+//! concurrently), and a classic task-based `square` task post-processes
+//! the reduction through an object dependency.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hybridws::coordinator::prelude::*;
+use hybridws::util::timeutil::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Register task functions (once per process).
+    register_task_fn("produce", |ctx| {
+        let stream = ctx.object_stream::<u64>(0); // STREAM_OUT
+        let n: u64 = ctx.scalar(1)?;
+        for i in 0..n {
+            stream.publish(&i)?;
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        stream.close()?;
+        Ok(())
+    });
+
+    register_task_fn("consume", |ctx| {
+        let stream = ctx.object_stream::<u64>(0); // STREAM_IN
+        let mut sum = 0u64;
+        let mut polls = 0u32;
+        // The paper's canonical loop: poll until the stream closes, drain.
+        loop {
+            let closed = stream.is_closed();
+            let items = stream.poll()?;
+            if items.is_empty() && closed {
+                break;
+            }
+            sum += items.iter().sum::<u64>();
+            polls += 1;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        println!("  consume: reduced the stream in {polls} polls, sum = {sum}");
+        ctx.set_output_as(1, &sum); // OUT object
+        Ok(())
+    });
+
+    register_task_fn("square", |ctx| {
+        let v: u64 = ctx.obj_in_as(0)?; // IN object (depends on `consume`)
+        ctx.set_output_as(1, &(v * v)); // OUT object
+        Ok(())
+    });
+
+    // 2. Build a runtime: 2 workers with 4 core slots each.
+    let rt = CometRuntime::builder().workers(&[4, 4]).name("quickstart").build()?;
+
+    // 3. Create a stream and submit the hybrid workflow.
+    let numbers = rt.object_stream::<u64>(Some("numbers"))?;
+    let sum_ref = rt.new_object();
+    let squared_ref = rt.new_object();
+
+    let sw = Stopwatch::start();
+    rt.submit(
+        TaskSpec::new("produce")
+            .arg(Arg::StreamOut(numbers.handle().clone()))
+            .arg(Arg::scalar(&100u64)),
+    )?;
+    rt.submit(
+        TaskSpec::new("consume")
+            .arg(Arg::StreamIn(numbers.handle().clone()))
+            .arg(Arg::Out(sum_ref.id())),
+    )?;
+    rt.submit(
+        TaskSpec::new("square").arg(Arg::In(sum_ref.id())).arg(Arg::Out(squared_ref.id())),
+    )?;
+
+    // 4. Synchronise, COMPSs-style.
+    let sum: u64 = rt.wait_on_as(&sum_ref)?;
+    let squared: u64 = rt.wait_on_as(&squared_ref)?;
+    println!("sum(0..100) = {sum}, squared = {squared}  ({})",
+        hybridws::util::timeutil::human_duration(sw.elapsed()));
+    assert_eq!(sum, 4950);
+    assert_eq!(squared, 4950 * 4950);
+
+    // 5. Inspect what the runtime did.
+    let stats = rt.stats();
+    println!(
+        "tasks: {} submitted, {} completed, {} failed",
+        stats.submitted, stats.completed, stats.failed
+    );
+    println!("{}", rt.trace().ascii_gantt(72));
+    rt.shutdown()?;
+    Ok(())
+}

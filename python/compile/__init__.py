@@ -1,0 +1,6 @@
+"""Build-time-only Python package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Nothing in this package is imported at runtime; ``compile.aot`` lowers the
+model entry points to HLO text once (``make artifacts``) and the rust
+coordinator executes the artifacts via PJRT.
+"""

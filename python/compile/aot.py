@@ -1,0 +1,82 @@
+"""AOT: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the rust ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text, with a tupled result."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, fn, specs):
+    """Lower one entry point; returns (hlo_text, manifest_entry)."""
+    wrapped = lambda *args: (fn(*args),)  # noqa: E731 — tuple the result
+    lowered = jax.jit(wrapped).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_aval = jax.eval_shape(fn, *specs)
+    entry = {
+        "name": name,
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "output": {
+            "shape": list(out_aval.shape),
+            "dtype": str(out_aval.dtype),
+        },
+        "file": f"{name}.hlo.txt",
+    }
+    return text, entry
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated entry-point subset"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    eps = model.entry_points()
+    if args.only:
+        keep = set(args.only.split(","))
+        eps = {k: v for k, v in eps.items() if k in keep}
+
+    manifest = {"grid_h": model.GRID_H, "grid_w": model.GRID_W, "models": []}
+    for name, (fn, specs) in sorted(eps.items()):
+        text, entry = lower_entry(name, fn, specs)
+        path = os.path.join(args.out, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["models"].append(entry)
+        print(f"  lowered {name:<14} -> {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['models'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the workloads' compute hot-spots.
+
+- heat:   5-point stencil step (UC1 "simulation")
+- stats:  per-tile frame statistics (UC1 "process")
+- matmul: blocked matmul + ReLU (UC3/UC4 "big computation")
+- ref:    pure-jnp oracles for all of the above
+"""
+
+# NOTE: no re-exports — submodule names (heat, stats, matmul) would be
+# shadowed by same-named functions; import the submodules directly.

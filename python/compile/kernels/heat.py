@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: 2-D heat-diffusion (5-point stencil) step.
+
+This is the compute hot-spot of the UC1 "simulation" tasks (the paper's
+``simulation`` task continuously generating output elements).  The kernel is
+tiled over row blocks: each grid step reads a (tile+2)-row halo window of the
+padded input from the full-array ref and writes one (tile, W) output block.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each row tile is a
+VMEM-resident block; the halo is expressed with dynamic slices on the input
+ref rather than overlapping BlockSpecs (standard Pallas blocks cannot
+overlap).  On this image the kernel runs with ``interpret=True`` because the
+CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default diffusion coefficient; keep < 0.25 for numerical stability of the
+# explicit scheme.
+ALPHA = 0.1
+
+
+def _heat_kernel(x_ref, o_ref, *, tile: int, width: int, alpha: float):
+    """One row-tile of the 5-point stencil over the padded input.
+
+    ``x_ref`` is the full padded array (H+2, W+2); ``o_ref`` is the (tile, W)
+    output block for this grid step.
+    """
+    i = pl.program_id(0)
+    r0 = i * tile
+    # Padded coordinates: interior rows are 1..H, interior cols are 1..W.
+    center = x_ref[pl.ds(r0 + 1, tile), pl.ds(1, width)]
+    up = x_ref[pl.ds(r0, tile), pl.ds(1, width)]
+    down = x_ref[pl.ds(r0 + 2, tile), pl.ds(1, width)]
+    left = x_ref[pl.ds(r0 + 1, tile), pl.ds(0, width)]
+    right = x_ref[pl.ds(r0 + 1, tile), pl.ds(2, width)]
+    o_ref[...] = center + alpha * (up + down + left + right - 4.0 * center)
+
+
+def _pick_tile(h: int) -> int:
+    """Largest power-of-two row tile (<=32) that divides ``h``."""
+    for t in (32, 16, 8, 4, 2, 1):
+        if h % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def heat_step(grid: jax.Array, *, alpha: float = ALPHA) -> jax.Array:
+    """One explicit heat-diffusion step with zero (Dirichlet) boundaries.
+
+    Args:
+      grid: (H, W) float32 temperature field.
+      alpha: diffusion coefficient.
+
+    Returns:
+      (H, W) float32 field after one step.
+    """
+    h, w = grid.shape
+    tile = _pick_tile(h)
+    padded = jnp.pad(grid, 1)
+    kernel = functools.partial(_heat_kernel, tile=tile, width=w, alpha=alpha)
+    return pl.pallas_call(
+        kernel,
+        grid=(h // tile,),
+        in_specs=[pl.BlockSpec(padded.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((tile, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), grid.dtype),
+        interpret=True,
+    )(padded)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: tiled matmul (+ bias-free ReLU epilogue option).
+
+Used by the UC3/UC4 "big computation" tasks (``model.big_compute``).  Classic
+MXU-style blocking: grid (M/bm, N/bn, K/bk); the accumulator block lives in
+VMEM across the K loop and is initialised on the first K step with
+``pl.when``.  ``interpret=True`` for CPU-PJRT execution (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, relu: bool, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ y_ref[...]
+
+    if relu:
+        @pl.when(pl.program_id(2) == k_steps - 1)
+        def _epilogue():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest power-of-two block (<= pref) dividing ``n``."""
+    t = pref
+    while t > 1 and n % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    relu: bool = False,
+    bm: int = 32,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """Blocked ``x @ y`` with optional ReLU epilogue.
+
+    Args:
+      x: (M, K) float32.
+      y: (K, N) float32.
+      relu: apply max(0, .) on the final K step.
+      bm/bn/bk: preferred block sizes (clamped to divisors of M/N/K).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    k_steps = k // bk
+    kernel = functools.partial(_matmul_kernel, relu=relu, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)

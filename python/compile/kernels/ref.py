@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness signal).
+
+Each function here must be the semantic ground truth its kernel twin is
+tested against (pytest + hypothesis in python/tests/).  No Pallas imports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def heat_step_ref(grid: jax.Array, alpha: float = 0.1) -> jax.Array:
+    """5-point-stencil heat step with zero Dirichlet boundaries."""
+    p = jnp.pad(grid, 1)
+    center = p[1:-1, 1:-1]
+    up = p[:-2, 1:-1]
+    down = p[2:, 1:-1]
+    left = p[1:-1, :-2]
+    right = p[1:-1, 2:]
+    return center + alpha * (up + down + left + right - 4.0 * center)
+
+
+def tile_stats_ref(frame: jax.Array, tile: int) -> jax.Array:
+    """Per-row-tile [sum, sumsq, min, max] partials of a (H, W) frame."""
+    h, _ = frame.shape
+    blocks = frame.reshape(h // tile, tile, -1)
+    return jnp.stack(
+        [
+            blocks.sum(axis=(1, 2)),
+            (blocks * blocks).sum(axis=(1, 2)),
+            blocks.min(axis=(1, 2)),
+            blocks.max(axis=(1, 2)),
+        ],
+        axis=1,
+    )
+
+
+def frame_stats_ref(frame: jax.Array) -> jax.Array:
+    """Full-frame [mean, variance, min, max]."""
+    mean = frame.mean()
+    var = (frame * frame).mean() - mean * mean
+    return jnp.stack([mean, var, frame.min(), frame.max()])
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, relu: bool = False) -> jax.Array:
+    out = x @ y
+    return jnp.maximum(out, 0.0) if relu else out

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: per-frame statistics (sum, sum-of-squares, min, max).
+
+This is the compute hot-spot of the UC1 "process" tasks (the paper's
+``process_sim_file``): every frame emitted by the simulation is reduced to a
+small statistics vector.  The kernel reduces row tiles into per-tile partial
+results; the final cross-tile combine happens in plain jnp at L2
+(``model.frame_stats``), mirroring the tile-accumulator structure a TPU
+implementation would use (partials in VMEM, combine on the VPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Partial layout per tile: [sum, sumsq, min, max].
+N_STATS = 4
+
+
+def _stats_kernel(x_ref, o_ref):
+    """Reduce one (tile, W) block to a (1, 4) partial-statistics row."""
+    x = x_ref[...]
+    o_ref[0, 0] = jnp.sum(x)
+    o_ref[0, 1] = jnp.sum(x * x)
+    o_ref[0, 2] = jnp.min(x)
+    o_ref[0, 3] = jnp.max(x)
+
+
+def _pick_tile(h: int) -> int:
+    """Largest power-of-two row tile (<=32) that divides ``h``."""
+    for t in (32, 16, 8, 4, 2, 1):
+        if h % t == 0:
+            return t
+    return 1
+
+
+@jax.jit
+def tile_stats(frame: jax.Array) -> jax.Array:
+    """Per-tile partial statistics of a (H, W) float32 frame.
+
+    Returns:
+      (H // tile, 4) float32 partials: [sum, sumsq, min, max] per row tile.
+    """
+    h, w = frame.shape
+    tile = _pick_tile(h)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(h // tile,),
+        in_specs=[pl.BlockSpec((tile, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, N_STATS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h // tile, N_STATS), frame.dtype),
+        interpret=True,
+    )(frame)

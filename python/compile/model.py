@@ -1,0 +1,110 @@
+"""L2: JAX model — the numeric workloads run by the rust coordinator.
+
+Every public function here is an AOT entry point lowered by ``compile.aot``
+to HLO text; the shapes are the static contract between L2 and the rust
+runtime (rust/src/runtime/models.rs mirrors ENTRY_POINTS below).
+
+Workload mapping to the paper's use cases:
+
+- ``heat_step``:    one step of the UC1 "simulation" task (generates frames).
+- ``heat_chunk``:   CHUNK_STEPS fused steps (what the simulation task runs
+                    between two emitted stream elements).
+- ``frame_stats``:  the UC1 "process_sim_file" task body — reduce a frame to
+                    [mean, var, min, max].
+- ``iter_update``:  the UC2 per-iteration state update (mixes own state with
+                    the peer state received over the stream).
+- ``big_compute``:  the UC3/UC4 "big computation" — ReLU(matmul) block.
+- ``sensor_filter``: the UC3 filter task — threshold + renormalise a sensor
+                    vector (vectorised VPU-style op).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.heat import heat_step as _heat_kernel_step
+from compile.kernels.matmul import matmul as _pallas_matmul
+from compile.kernels.stats import N_STATS, _pick_tile, tile_stats
+
+# Static shape contract (mirrored in rust/src/runtime/models.rs).
+GRID_H = 64
+GRID_W = 64
+CHUNK_STEPS = 4
+STATE_N = 16
+MM_N = 128
+SENSOR_N = 256
+
+
+def heat_step(grid: jax.Array) -> jax.Array:
+    """One explicit heat step on a (GRID_H, GRID_W) f32 field."""
+    return _heat_kernel_step(grid)
+
+
+def heat_chunk(grid: jax.Array) -> jax.Array:
+    """CHUNK_STEPS heat steps (one emitted simulation element's compute)."""
+
+    def body(_, g):
+        return _heat_kernel_step(g)
+
+    return jax.lax.fori_loop(0, CHUNK_STEPS, body, grid)
+
+
+def frame_stats(frame: jax.Array) -> jax.Array:
+    """Reduce a frame to [mean, variance, min, max] via tile partials."""
+    h, _ = frame.shape
+    tile = _pick_tile(h)
+    partials = tile_stats(frame)  # (H // tile, 4)
+    n = jnp.float32(frame.size)
+    total = partials[:, 0].sum()
+    totalsq = partials[:, 1].sum()
+    mean = total / n
+    var = totalsq / n - mean * mean
+    return jnp.stack([mean, var, partials[:, 2].min(), partials[:, 3].max()])
+
+
+def iter_update(state: jax.Array, peer: jax.Array) -> jax.Array:
+    """UC2 state update: damped mix with the peer's state + local drift.
+
+    Deliberately a contraction so parallel computations converge; the bench
+    only cares that both implementations (task-based and hybrid) run the
+    exact same update.
+    """
+    mixed = 0.5 * (state + peer)
+    drift = 0.1 * jnp.tanh(mixed)
+    return mixed + drift
+
+
+def big_compute(x: jax.Array, w: jax.Array) -> jax.Array:
+    """UC3/UC4 big computation: ReLU(x @ w) with the blocked Pallas matmul."""
+    return _pallas_matmul(x, w, relu=True)
+
+
+def sensor_filter(readings: jax.Array, threshold: jax.Array) -> jax.Array:
+    """UC3 filter task: zero readings below threshold, renormalise the rest.
+
+    ``threshold`` has shape (1,) — the rust runtime passes every input as a
+    rank>=1 f32 buffer.
+    """
+    thr = threshold[0]
+    kept = jnp.where(readings >= thr, readings, 0.0)
+    norm = jnp.maximum(jnp.abs(kept).max(), 1e-6)
+    return kept / norm
+
+
+# name -> (fn, [input ShapeDtypeStructs]) — the AOT contract.
+def entry_points():
+    f32 = jnp.float32
+    grid = jax.ShapeDtypeStruct((GRID_H, GRID_W), f32)
+    state = jax.ShapeDtypeStruct((STATE_N,), f32)
+    mm = jax.ShapeDtypeStruct((MM_N, MM_N), f32)
+    sensor = jax.ShapeDtypeStruct((SENSOR_N,), f32)
+    scalar = jax.ShapeDtypeStruct((1,), f32)
+    return {
+        "heat_step": (heat_step, [grid]),
+        "heat_chunk": (heat_chunk, [grid]),
+        "frame_stats": (frame_stats, [grid]),
+        "iter_update": (iter_update, [state, state]),
+        "big_compute": (big_compute, [mm, mm]),
+        "sensor_filter": (sensor_filter, [sensor, scalar]),
+    }

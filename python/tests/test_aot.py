@@ -1,0 +1,49 @@
+"""AOT pipeline checks: lowering produces parseable HLO text + manifest."""
+
+import json
+import os
+
+import jax
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestLowering:
+    def test_lower_all_entries(self, tmp_path):
+        eps = model.entry_points()
+        for name, (fn, specs) in eps.items():
+            text, entry = aot.lower_entry(name, fn, specs)
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+            assert entry["name"] == name
+            assert entry["file"] == f"{name}.hlo.txt"
+
+    def test_manifest_shapes_match_model(self, tmp_path):
+        (fn, specs) = model.entry_points()["heat_step"]
+        _, entry = aot.lower_entry("heat_step", fn, specs)
+        assert entry["inputs"][0]["shape"] == [model.GRID_H, model.GRID_W]
+        assert entry["output"]["shape"] == [model.GRID_H, model.GRID_W]
+        assert entry["inputs"][0]["dtype"] == "float32"
+
+    def test_pallas_lowers_to_plain_hlo(self):
+        # interpret=True must leave no custom-call in the HLO (CPU PJRT
+        # cannot run Mosaic custom-calls).
+        (fn, specs) = model.entry_points()["big_compute"]
+        text, _ = aot.lower_entry("big_compute", fn, specs)
+        assert "custom-call" not in text or "Sharding" in text
+
+    def test_main_writes_artifacts(self, tmp_path, monkeypatch, capsys):
+        out = tmp_path / "artifacts"
+        monkeypatch.setattr(
+            "sys.argv",
+            ["aot", "--out", str(out), "--only", "iter_update,sensor_filter"],
+        )
+        aot.main()
+        with open(out / "manifest.json") as f:
+            manifest = json.load(f)
+        names = [m["name"] for m in manifest["models"]]
+        assert names == ["iter_update", "sensor_filter"]
+        for m in manifest["models"]:
+            assert os.path.exists(out / m["file"])

@@ -1,0 +1,129 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and seeds for every Pallas kernel against its
+pure-jnp oracle in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import heat, matmul, ref, stats
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Shapes are kept modest: interpret-mode Pallas is CPU-numpy speed.
+DIMS = st.sampled_from([4, 8, 16, 32, 48, 64])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestHeat:
+    @settings(max_examples=20, deadline=None)
+    @given(h=DIMS, w=DIMS, seed=SEEDS)
+    def test_matches_ref(self, h, w, seed):
+        x = rand(seed, (h, w))
+        got = heat.heat_step(x)
+        want = ref.heat_step_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=SEEDS, alpha=st.floats(0.01, 0.24))
+    def test_alpha_sweep(self, seed, alpha):
+        x = rand(seed, (16, 16))
+        got = heat.heat_step(x, alpha=alpha)
+        want = ref.heat_step_ref(x, alpha=alpha)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_field_stays_zero(self):
+        x = jnp.zeros((32, 32), jnp.float32)
+        np.testing.assert_array_equal(heat.heat_step(x), x)
+
+    def test_uniform_field_decays_at_borders_only(self):
+        x = jnp.ones((16, 16), jnp.float32)
+        out = np.asarray(heat.heat_step(x))
+        # Interior: all four neighbours equal, no change.
+        np.testing.assert_allclose(out[2:-2, 2:-2], 1.0, rtol=1e-6)
+        # Corners lose heat to two zero boundary cells.
+        assert out[0, 0] < 1.0
+
+    def test_energy_decreases(self):
+        x = jnp.abs(rand(7, (32, 32)))
+        out = heat.heat_step(x)
+        assert float(jnp.sum(out)) < float(jnp.sum(x))
+
+    def test_odd_height_uses_tile_1(self):
+        x = rand(3, (7, 12))
+        got = heat.heat_step(x)
+        np.testing.assert_allclose(got, ref.heat_step_ref(x), rtol=1e-6, atol=1e-6)
+
+
+class TestStats:
+    @settings(max_examples=20, deadline=None)
+    @given(h=DIMS, w=DIMS, seed=SEEDS)
+    def test_tile_partials_match_ref(self, h, w, seed):
+        x = rand(seed, (h, w))
+        tile = stats._pick_tile(h)
+        got = stats.tile_stats(x)
+        want = ref.tile_stats_ref(x, tile)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_constant_frame(self):
+        x = jnp.full((32, 16), 3.5, jnp.float32)
+        got = np.asarray(stats.tile_stats(x))
+        tile = stats._pick_tile(32)
+        np.testing.assert_allclose(got[:, 0], 3.5 * tile * 16, rtol=1e-6)
+        np.testing.assert_allclose(got[:, 2], 3.5, rtol=1e-6)
+        np.testing.assert_allclose(got[:, 3], 3.5, rtol=1e-6)
+
+    def test_partial_count(self):
+        x = rand(0, (64, 8))
+        assert stats.tile_stats(x).shape == (64 // stats._pick_tile(64), 4)
+
+
+class TestMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 64]),
+        k=st.sampled_from([8, 32, 128]),
+        n=st.sampled_from([8, 32, 128]),
+        seed=SEEDS,
+        relu=st.booleans(),
+    )
+    def test_matches_ref(self, m, k, n, seed, relu):
+        x = rand(seed, (m, k))
+        y = rand(seed + 1, (k, n))
+        got = matmul.matmul(x, y, relu=relu)
+        want = ref.matmul_ref(x, y, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_identity(self):
+        x = rand(11, (32, 32))
+        eye = jnp.eye(32, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            matmul.matmul(x, eye), x, rtol=1e-6, atol=1e-6
+        )
+
+    def test_relu_epilogue_clamps(self):
+        x = rand(5, (16, 16))
+        y = rand(6, (16, 16))
+        out = np.asarray(matmul.matmul(x, y, relu=True))
+        assert (out >= 0).all()
+
+    def test_non_pow2_blocks_clamp(self):
+        # 24 is not divisible by the preferred 32-block: _pick_block clamps.
+        x = rand(1, (24, 24))
+        y = rand(2, (24, 24))
+        got = matmul.matmul(x, y)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-5, atol=2e-5)
+
+    def test_rejects_contraction_mismatch(self):
+        x = rand(1, (8, 16))
+        y = rand(2, (8, 8))
+        with pytest.raises(AssertionError):
+            matmul.matmul(x, y)

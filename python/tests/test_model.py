@@ -1,0 +1,94 @@
+"""L2 model entry-point checks: shapes, dtypes, semantics, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestEntryPoints:
+    def test_all_entry_points_eval(self):
+        for name, (fn, specs) in model.entry_points().items():
+            args = [
+                rand(i, s.shape).astype(s.dtype) for i, s in enumerate(specs)
+            ]
+            out = fn(*args)
+            aval = jax.eval_shape(fn, *specs)
+            assert out.shape == aval.shape, name
+            assert out.dtype == aval.dtype, name
+
+    def test_entry_point_names_are_stable(self):
+        # The rust runtime (runtime/models.rs) hard-codes these names.
+        assert set(model.entry_points()) == {
+            "heat_step",
+            "heat_chunk",
+            "frame_stats",
+            "iter_update",
+            "big_compute",
+            "sensor_filter",
+        }
+
+
+class TestHeatChunk:
+    def test_chunk_equals_repeated_steps(self):
+        g = rand(3, (model.GRID_H, model.GRID_W))
+        want = g
+        for _ in range(model.CHUNK_STEPS):
+            want = ref.heat_step_ref(want)
+        got = model.heat_chunk(g)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestFrameStats:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=SEEDS)
+    def test_matches_full_frame_ref(self, seed):
+        f = rand(seed, (model.GRID_H, model.GRID_W))
+        got = model.frame_stats(f)
+        want = ref.frame_stats_ref(f)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_variance_nonnegative(self):
+        f = rand(0, (model.GRID_H, model.GRID_W))
+        assert float(model.frame_stats(f)[1]) >= -1e-6
+
+
+class TestIterUpdate:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=SEEDS)
+    def test_symmetric_fixed_point(self, seed):
+        # Two computations with identical states stay identical.
+        s = rand(seed, (model.STATE_N,))
+        a = model.iter_update(s, s)
+        b = model.iter_update(s, s)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_contraction(self):
+        # Mixing shrinks the gap between two states.
+        a = rand(1, (model.STATE_N,))
+        b = rand(2, (model.STATE_N,))
+        a2 = model.iter_update(a, b)
+        b2 = model.iter_update(b, a)
+        assert float(jnp.abs(a2 - b2).max()) <= float(jnp.abs(a - b).max())
+
+
+class TestSensorFilter:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=SEEDS, thr=st.floats(-1.0, 1.0))
+    def test_threshold_and_norm(self, seed, thr):
+        r = rand(seed, (model.SENSOR_N,))
+        out = np.asarray(model.sensor_filter(r, jnp.full((1,), thr, jnp.float32)))
+        r_np = np.asarray(r)
+        assert (out[r_np < thr] == 0).all()
+        assert np.abs(out).max() <= 1.0 + 1e-6

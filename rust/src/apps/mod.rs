@@ -1,0 +1,30 @@
+//! The paper's four use-case workloads (§5), built on the public API.
+//!
+//! Every use case ships two implementations — the **pure task-based**
+//! workflow and the **hybrid** (stream-enabled) workflow — because every
+//! evaluation figure compares exactly those two. Drivers return structured
+//! results so examples and benches share one code path.
+//!
+//! - [`uc1_simulation`] — continuous data generation (§5.1, Figs 9/10/14/15/16)
+//! - [`uc2_sweep`] — asynchronous data exchange (§5.2, Figs 11/17/18)
+//! - [`uc3_sensor`] — external streams (§5.3, Fig 12)
+//! - [`uc4_nested`] — dataflows with nested task-based workflows (§5.4, Fig 13)
+//! - [`workload`] — N-writer/M-reader micro-workloads (§6.4, Figs 19/20)
+//!   and the OP-vs-SP overhead tasks (§6.5, Figs 21-24)
+//!
+//! Call [`register_all`] once per process before building a runtime.
+
+pub mod uc1_simulation;
+pub mod uc2_sweep;
+pub mod uc3_sensor;
+pub mod uc4_nested;
+pub mod workload;
+
+/// Register every app task function (idempotent).
+pub fn register_all() {
+    uc1_simulation::register();
+    uc2_sweep::register();
+    uc3_sensor::register();
+    uc4_nested::register();
+    workload::register();
+}

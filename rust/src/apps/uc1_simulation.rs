@@ -1,0 +1,411 @@
+//! UC1 — Continuous data generation (paper §5.1).
+//!
+//! A `simulation` task produces one output element per time step (a frame
+//! of a heat-diffusion field, computed with the AOT `heat_chunk` kernel
+//! when models are loaded); `process_sim_file` reduces each frame to
+//! statistics (`frame_stats` kernel); `merge_reduce` combines all the
+//! statistics of one simulation into a single summary ("GIF" in the paper).
+//!
+//! Two drivers reproduce the paper's Listings 8 and 9:
+//!
+//! - [`run_task_based`]: the simulation writes *files*; every processing
+//!   task depends on the simulation task, so nothing overlaps.
+//! - [`run_hybrid`]: the simulation publishes into a `FileDistroStream`;
+//!   the main code polls and spawns processing tasks while the simulation
+//!   is still running (Fig 10).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::api::CometRuntime;
+use crate::coordinator::executor::register_task_fn;
+use crate::coordinator::prelude::{Arg, TaskSpec};
+
+/// Workload parameters (durations in *paper milliseconds*).
+#[derive(Debug, Clone)]
+pub struct Uc1Config {
+    pub num_sims: usize,
+    pub files_per_sim: usize,
+    /// Time between two generated elements.
+    pub gen_ms: u64,
+    /// Time to process one element.
+    pub proc_ms: u64,
+    pub sim_cores: usize,
+    pub proc_cores: usize,
+    pub merge_cores: usize,
+    /// Working directory for frames / stream dirs.
+    pub dir: PathBuf,
+}
+
+impl Default for Uc1Config {
+    fn default() -> Self {
+        Self {
+            num_sims: 2,
+            files_per_sim: 5,
+            gen_ms: 500,
+            proc_ms: 2_000,
+            sim_cores: 4,
+            proc_cores: 1,
+            merge_cores: 1,
+            dir: std::env::temp_dir().join(format!("hybridws-uc1-{}", std::process::id())),
+        }
+    }
+}
+
+/// Result of one UC1 run.
+#[derive(Debug, Clone)]
+pub struct Uc1Result {
+    pub elapsed_s: f64,
+    pub frames: usize,
+    /// Mean of the per-frame mean temperature (sanity signal).
+    pub mean_of_means: f64,
+}
+
+/// Deterministic synthetic frame (when the PJRT zoo is absent the tasks
+/// still run the same data path).
+fn synth_frame(sim: usize, step: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i * 31 + step * 7 + sim * 13) % 97) as f32 / 97.0).collect()
+}
+
+fn frame_to_bytes(frame: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame.len() * 4);
+    for v in frame {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_frame(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Register UC1 task functions.
+pub fn register() {
+    // ---- hybrid producer: stream of frames ------------------------------
+    // args: [STREAM_OUT fds, scalar num_files, scalar gen_ms, scalar sim_idx]
+    register_task_fn("uc1.simulation", |ctx| {
+        let fds = ctx.file_stream(0);
+        let num_files: u64 = ctx.scalar(1)?;
+        let gen_ms: u64 = ctx.scalar(2)?;
+        let sim_idx: u64 = ctx.scalar(3)?;
+        let mut grid: Option<Vec<f32>> = None;
+        for step in 0..num_files {
+            ctx.sleep_paper_ms(gen_ms);
+            let frame = match ctx.zoo.as_ref() {
+                Some(zoo) => {
+                    // Real compute: advance the heat field by one chunk.
+                    let spec = zoo.spec("heat_chunk").expect("heat_chunk model");
+                    let n = spec.input_len(0);
+                    let g = grid.take().unwrap_or_else(|| synth_frame(sim_idx as usize, 0, n));
+                    let next = zoo.execute("heat_chunk", &[&g])?;
+                    grid = Some(next.clone());
+                    next
+                }
+                None => synth_frame(sim_idx as usize, step as usize, 64 * 64),
+            };
+            fds.write_file(
+                &format!("sim{sim_idx}_frame{step:04}.dat"),
+                &frame_to_bytes(&frame),
+            )?;
+        }
+        fds.close()?;
+        Ok(())
+    });
+
+    // ---- task-based producer: all frames as FileOut params ---------------
+    // args: [scalar num_files, scalar gen_ms, scalar sim_idx, FileOut...xN]
+    register_task_fn("uc1.simulation_batch", |ctx| {
+        let num_files: u64 = ctx.scalar(0)?;
+        let gen_ms: u64 = ctx.scalar(1)?;
+        let sim_idx: u64 = ctx.scalar(2)?;
+        let mut grid: Option<Vec<f32>> = None;
+        for step in 0..num_files as usize {
+            ctx.sleep_paper_ms(gen_ms);
+            let frame = match ctx.zoo.as_ref() {
+                Some(zoo) => {
+                    let spec = zoo.spec("heat_chunk").expect("heat_chunk model");
+                    let n = spec.input_len(0);
+                    let g = grid.take().unwrap_or_else(|| synth_frame(sim_idx as usize, 0, n));
+                    let next = zoo.execute("heat_chunk", &[&g])?;
+                    grid = Some(next.clone());
+                    next
+                }
+                None => synth_frame(sim_idx as usize, step, 64 * 64),
+            };
+            let path = ctx.file_path(3 + step).to_string();
+            std::fs::write(&path, frame_to_bytes(&frame))?;
+        }
+        Ok(())
+    });
+
+    // ---- processing: frame file -> stats file -----------------------------
+    // args: [FileIn frame, FileOut stats, scalar proc_ms]
+    register_task_fn("uc1.process_sim_file", |ctx| {
+        let input = ctx.file_path(0).to_string();
+        let output = ctx.file_path(1).to_string();
+        let proc_ms: u64 = ctx.scalar(2)?;
+        let frame = bytes_to_frame(&std::fs::read(&input)?);
+        ctx.sleep_paper_ms(proc_ms);
+        let stats = match ctx.zoo.as_ref() {
+            Some(zoo) if zoo.spec("frame_stats").map(|s| s.input_len(0)) == Some(frame.len()) => {
+                zoo.execute("frame_stats", &[&frame])?
+            }
+            _ => {
+                // CPU fallback: same [mean, var, min, max] contract.
+                let n = frame.len() as f32;
+                let mean = frame.iter().sum::<f32>() / n;
+                let var = frame.iter().map(|x| x * x).sum::<f32>() / n - mean * mean;
+                let min = frame.iter().cloned().fold(f32::INFINITY, f32::min);
+                let max = frame.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                vec![mean, var, min, max]
+            }
+        };
+        std::fs::write(&output, frame_to_bytes(&stats))?;
+        Ok(())
+    });
+
+    // ---- merge: stats files -> one summary --------------------------------
+    // args: [FileOut summary, FileIn...xN]
+    register_task_fn("uc1.merge_reduce", |ctx| {
+        let output = ctx.file_path(0).to_string();
+        let mut all = Vec::new();
+        for i in 1..ctx.args.len() {
+            let stats = bytes_to_frame(&std::fs::read(ctx.file_path(i))?);
+            all.extend(stats);
+        }
+        // Summary: mean of the frame means + count.
+        let means: Vec<f32> = all.chunks(4).map(|c| c[0]).collect();
+        let mean_of_means = means.iter().sum::<f32>() / means.len().max(1) as f32;
+        let mut summary = vec![mean_of_means, means.len() as f32];
+        summary.extend(means);
+        std::fs::write(&output, frame_to_bytes(&summary))?;
+        Ok(())
+    });
+}
+
+fn read_summary(path: &PathBuf) -> (f64, usize) {
+    let v = bytes_to_frame(&std::fs::read(path).unwrap_or_default());
+    (v.first().copied().unwrap_or(0.0) as f64, v.get(1).copied().unwrap_or(0.0) as usize)
+}
+
+/// Pure task-based workflow (paper Listing 8 / Fig 9).
+pub fn run_task_based(rt: &CometRuntime, cfg: &Uc1Config) -> Result<Uc1Result> {
+    std::fs::create_dir_all(&cfg.dir)?;
+    let t0 = Instant::now();
+    let mut summaries = Vec::new();
+    // Launch simulations.
+    for s in 0..cfg.num_sims {
+        let mut spec = TaskSpec::new("uc1.simulation_batch")
+            .arg(Arg::scalar(&(cfg.files_per_sim as u64)))
+            .arg(Arg::scalar(&cfg.gen_ms))
+            .arg(Arg::scalar(&(s as u64)))
+            .cores(cfg.sim_cores);
+        for f in 0..cfg.files_per_sim {
+            spec = spec.arg(Arg::FileOut(
+                cfg.dir.join(format!("tb_sim{s}_frame{f:04}.dat")).to_string_lossy().into_owned(),
+            ));
+        }
+        rt.submit(spec)?;
+    }
+    // Process generated files (depends on the simulation via file paths).
+    for s in 0..cfg.num_sims {
+        for f in 0..cfg.files_per_sim {
+            let frame = cfg.dir.join(format!("tb_sim{s}_frame{f:04}.dat"));
+            let stats = cfg.dir.join(format!("tb_sim{s}_stats{f:04}.dat"));
+            rt.submit(
+                TaskSpec::new("uc1.process_sim_file")
+                    .arg(Arg::FileIn(frame.to_string_lossy().into_owned()))
+                    .arg(Arg::FileOut(stats.to_string_lossy().into_owned()))
+                    .arg(Arg::scalar(&cfg.proc_ms))
+                    .cores(cfg.proc_cores),
+            )?;
+        }
+    }
+    // Merge phase.
+    for s in 0..cfg.num_sims {
+        let summary = cfg.dir.join(format!("tb_sim{s}_summary.dat"));
+        let mut spec = TaskSpec::new("uc1.merge_reduce")
+            .arg(Arg::FileOut(summary.to_string_lossy().into_owned()))
+            .cores(cfg.merge_cores);
+        for f in 0..cfg.files_per_sim {
+            let stats = cfg.dir.join(format!("tb_sim{s}_stats{f:04}.dat"));
+            spec = spec.arg(Arg::FileIn(stats.to_string_lossy().into_owned()));
+        }
+        rt.submit(spec)?;
+        summaries.push(summary);
+    }
+    // Synchronise.
+    for s in &summaries {
+        rt.wait_on_file(&s.to_string_lossy())?;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let (mut mom, mut frames) = (0.0, 0);
+    for s in &summaries {
+        let (m, n) = read_summary(s);
+        mom += m;
+        frames += n;
+    }
+    Ok(Uc1Result { elapsed_s, frames, mean_of_means: mom / cfg.num_sims as f64 })
+}
+
+/// Hybrid workflow (paper Listing 9 / Fig 10): processing overlaps the
+/// simulations through a `FileDistroStream` per simulation.
+pub fn run_hybrid(rt: &CometRuntime, cfg: &Uc1Config) -> Result<Uc1Result> {
+    let t0 = Instant::now();
+    // Initialise streams (one monitored dir per simulation).
+    let mut streams = Vec::new();
+    for s in 0..cfg.num_sims {
+        let dir = cfg.dir.join(format!("stream{s}"));
+        std::fs::create_dir_all(&dir)?;
+        streams.push(rt.file_stream(None, &dir.to_string_lossy())?);
+    }
+    // Launch simulations.
+    for (s, stream) in streams.iter().enumerate() {
+        rt.submit(
+            TaskSpec::new("uc1.simulation")
+                .arg(Arg::StreamOut(stream.handle().clone()))
+                .arg(Arg::scalar(&(cfg.files_per_sim as u64)))
+                .arg(Arg::scalar(&cfg.gen_ms))
+                .arg(Arg::scalar(&(s as u64)))
+                .cores(cfg.sim_cores),
+        )?;
+    }
+    // Process files as they are generated (Listing 9's poll loop).
+    let mut stats_files: Vec<Vec<PathBuf>> = vec![Vec::new(); cfg.num_sims];
+    let mut open: Vec<bool> = vec![true; cfg.num_sims];
+    while open.iter().any(|&o| o) {
+        let mut progress = false;
+        for (s, stream) in streams.iter().enumerate() {
+            if !open[s] {
+                continue;
+            }
+            let closed = stream.is_closed();
+            let new_files = stream.poll()?;
+            progress |= !new_files.is_empty();
+            for f in new_files {
+                let stats = cfg.dir.join(format!(
+                    "hy_sim{s}_stats{:04}.dat",
+                    stats_files[s].len()
+                ));
+                rt.submit(
+                    TaskSpec::new("uc1.process_sim_file")
+                        .arg(Arg::FileIn(f.to_string_lossy().into_owned()))
+                        .arg(Arg::FileOut(stats.to_string_lossy().into_owned()))
+                        .arg(Arg::scalar(&cfg.proc_ms))
+                        .cores(cfg.proc_cores),
+                )?;
+                stats_files[s].push(stats);
+            }
+            if closed && stats_files[s].len() >= cfg.files_per_sim {
+                open[s] = false;
+            }
+        }
+        if !progress {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+    }
+    // Merge phase.
+    let mut summaries = Vec::new();
+    for s in 0..cfg.num_sims {
+        let summary = cfg.dir.join(format!("hy_sim{s}_summary.dat"));
+        let mut spec = TaskSpec::new("uc1.merge_reduce")
+            .arg(Arg::FileOut(summary.to_string_lossy().into_owned()))
+            .cores(cfg.merge_cores);
+        for f in &stats_files[s] {
+            spec = spec.arg(Arg::FileIn(f.to_string_lossy().into_owned()));
+        }
+        rt.submit(spec)?;
+        summaries.push(summary);
+    }
+    for s in &summaries {
+        rt.wait_on_file(&s.to_string_lossy())?;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let (mut mom, mut frames) = (0.0, 0);
+    for s in &summaries {
+        let (m, n) = read_summary(s);
+        mom += m;
+        frames += n;
+    }
+    Ok(Uc1Result { elapsed_s, frames, mean_of_means: mom / cfg.num_sims as f64 })
+}
+
+/// Gain of hybrid over task-based (paper Eq. 1).
+pub fn gain(original_s: f64, hybrid_s: f64) -> f64 {
+    (original_s - hybrid_s) / original_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timeutil::TimeScale;
+
+    fn rt() -> CometRuntime {
+        crate::apps::register_all();
+        CometRuntime::builder()
+            .workers(&[8, 8])
+            .scale(TimeScale::new(0.001)) // 1000x speedup for unit tests
+            .build()
+            .unwrap()
+    }
+
+    fn cfg(tag: &str) -> Uc1Config {
+        Uc1Config {
+            num_sims: 2,
+            files_per_sim: 3,
+            gen_ms: 50,
+            proc_ms: 100,
+            sim_cores: 2,
+            proc_cores: 1,
+            merge_cores: 1,
+            dir: std::env::temp_dir().join(format!("hybridws-uc1t-{tag}-{}", std::process::id())),
+        }
+    }
+
+    #[test]
+    fn task_based_produces_all_frames() {
+        let rt = rt();
+        let c = cfg("tb");
+        let _ = std::fs::remove_dir_all(&c.dir);
+        let r = run_task_based(&rt, &c).unwrap();
+        assert_eq!(r.frames, 6);
+        assert!(r.mean_of_means.is_finite());
+        rt.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&c.dir);
+    }
+
+    #[test]
+    fn hybrid_produces_all_frames() {
+        let rt = rt();
+        let c = cfg("hy");
+        let _ = std::fs::remove_dir_all(&c.dir);
+        let r = run_hybrid(&rt, &c).unwrap();
+        assert_eq!(r.frames, 6);
+        rt.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&c.dir);
+    }
+
+    #[test]
+    fn hybrid_overlaps_processing_with_simulation() {
+        // With generous generation time, the hybrid run must overlap
+        // process tasks with the still-running simulation.
+        let rt = rt();
+        let mut c = cfg("ovl");
+        c.files_per_sim = 4;
+        c.gen_ms = 200;
+        c.proc_ms = 100;
+        let _ = std::fs::remove_dir_all(&c.dir);
+        let _ = run_hybrid(&rt, &c).unwrap();
+        let overlap = rt.trace().overlap_fraction("uc1.simulation", "uc1.process_sim_file");
+        assert!(overlap > 0.3, "expected processing inside simulation window, got {overlap}");
+        rt.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&c.dir);
+    }
+
+    #[test]
+    fn gain_formula_matches_paper() {
+        assert!((gain(100.0, 77.0) - 0.23).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,276 @@
+//! UC2 — Asynchronous data exchange (paper §5.2).
+//!
+//! Several iterative computations run simultaneously and exchange control
+//! data at the end of every iteration (parameter sweep / cross-validation /
+//! multi-start optimisation).
+//!
+//! - [`run_task_based`] (left of Fig 17): each iteration is a task per
+//!   computation plus a global `exchange` task that joins **all** states —
+//!   the synchronisation point the paper blames for the overhead.
+//! - [`run_hybrid`] (right of Fig 17): each computation is **one**
+//!   long-lived task; states are exchanged asynchronously over streams
+//!   (possibly reading slightly stale peer states, as the paper permits).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::api::{CometRuntime, DataRef};
+use crate::coordinator::executor::register_task_fn;
+use crate::coordinator::prelude::{Arg, TaskSpec};
+
+/// State vector length (mirrors the L2 `iter_update` contract).
+pub const STATE_N: usize = 16;
+
+/// Workload parameters (paper ms).
+#[derive(Debug, Clone)]
+pub struct Uc2Config {
+    pub computations: usize,
+    pub iterations: usize,
+    /// Compute time per iteration.
+    pub iter_ms: u64,
+}
+
+impl Default for Uc2Config {
+    fn default() -> Self {
+        Self { computations: 2, iterations: 8, iter_ms: 2_000 }
+    }
+}
+
+/// Result of one UC2 run.
+#[derive(Debug, Clone)]
+pub struct Uc2Result {
+    pub elapsed_s: f64,
+    /// Final state of each computation.
+    pub finals: Vec<Vec<f32>>,
+}
+
+fn state_to_bytes(s: &[f32]) -> Vec<u8> {
+    s.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn bytes_to_state(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn init_state(idx: u64) -> Vec<f32> {
+    (0..STATE_N).map(|i| ((i as u64 * 7 + idx * 31) % 13) as f32 / 13.0 - 0.5).collect()
+}
+
+/// One iteration's local update (zoo-backed when available).
+fn update(
+    zoo: Option<&std::sync::Arc<crate::runtime::ModelZoo>>,
+    state: &[f32],
+    peer: &[f32],
+) -> Vec<f32> {
+    match zoo {
+        Some(z) if z.spec("iter_update").map(|s| s.input_len(0)) == Some(state.len()) => {
+            z.execute("iter_update", &[state, peer]).expect("iter_update")
+        }
+        _ => {
+            // CPU fallback with the same semantics (damped mix + drift).
+            state
+                .iter()
+                .zip(peer)
+                .map(|(s, p)| {
+                    let mixed = 0.5 * (s + p);
+                    mixed + 0.1 * mixed.tanh()
+                })
+                .collect()
+        }
+    }
+}
+
+pub fn register() {
+    // Task-based pieces ----------------------------------------------------
+    // args: [Out state, scalar idx]
+    register_task_fn("uc2.init", |ctx| {
+        let idx: u64 = ctx.scalar(1)?;
+        ctx.set_output(0, state_to_bytes(&init_state(idx)));
+        Ok(())
+    });
+
+    // args: [InOut state, scalar iter_ms] — the per-iteration compute.
+    register_task_fn("uc2.compute_iter", |ctx| {
+        let iter_ms: u64 = ctx.scalar(1)?;
+        ctx.sleep_paper_ms(iter_ms);
+        let state = bytes_to_state(ctx.obj_in(0));
+        // Local compute only; the exchange task mixes the states.
+        let out: Vec<f32> = state.iter().map(|s| s + 0.1 * s.tanh()).collect();
+        ctx.set_output(0, state_to_bytes(&out));
+        Ok(())
+    });
+
+    // args: [InOut s0, InOut s1, ...] — the synchronisation point: reads
+    // every state and writes back the mixed versions.
+    register_task_fn("uc2.exchange", |ctx| {
+        let n = ctx.args.len();
+        let states: Vec<Vec<f32>> = (0..n).map(|i| bytes_to_state(ctx.obj_in(i))).collect();
+        let zoo = ctx.zoo.clone();
+        for i in 0..n {
+            let peer = &states[(i + 1) % n];
+            let mixed = update(zoo.as_ref(), &states[i], peer);
+            ctx.set_output(i, state_to_bytes(&mixed));
+        }
+        Ok(())
+    });
+
+    // Hybrid piece ----------------------------------------------------------
+    // One long-lived task per computation.
+    // args: [STREAM_OUT own, STREAM_IN peer, Out final, scalar idx,
+    //        scalar iterations, scalar iter_ms]
+    register_task_fn("uc2.computation", |ctx| {
+        let own = ctx.object_stream::<Vec<u8>>(0);
+        let peer_stream = ctx.object_stream::<Vec<u8>>(1);
+        let idx: u64 = ctx.scalar(3)?;
+        let iterations: u64 = ctx.scalar(4)?;
+        let iter_ms: u64 = ctx.scalar(5)?;
+
+        let mut state = init_state(idx);
+        let mut last_peer = state.clone();
+        let zoo = ctx.zoo.clone();
+        for _ in 0..iterations {
+            // Compute this iteration.
+            ctx.sleep_paper_ms(iter_ms);
+            // Publish our state, then asynchronously pick up whatever peer
+            // states are pending (they may lag an iteration — that is the
+            // point of the asynchronous exchange).
+            own.publish(&state_to_bytes(&state))?;
+            for msg in peer_stream.poll()? {
+                last_peer = bytes_to_state(&msg);
+            }
+            state = update(zoo.as_ref(), &state, &last_peer);
+        }
+        own.close()?;
+        ctx.set_output(2, state_to_bytes(&state));
+        Ok(())
+    });
+}
+
+/// Pure task-based sweep, structured exactly as the paper describes the
+/// synchronous exchange (§6.3): at the end of every iteration the main code
+/// *stops all the computations* (waits on every state), *retrieves all the
+/// states* to the master, creates an exchange task, and *transfers back*
+/// the new states by re-registering them for the next round of tasks.
+pub fn run_task_based(rt: &CometRuntime, cfg: &Uc2Config) -> Result<Uc2Result> {
+    let t0 = Instant::now();
+    let mut states: Vec<DataRef> = (0..cfg.computations).map(|_| rt.new_object()).collect();
+    for (i, s) in states.iter().enumerate() {
+        rt.submit(
+            TaskSpec::new("uc2.init").arg(Arg::Out(s.id())).arg(Arg::scalar(&(i as u64))),
+        )?;
+    }
+    for _ in 0..cfg.iterations {
+        // Parallel compute tasks...
+        for s in &states {
+            rt.submit(
+                TaskSpec::new("uc2.compute_iter")
+                    .arg(Arg::InOut(s.id()))
+                    .arg(Arg::scalar(&cfg.iter_ms)),
+            )?;
+        }
+        // ...the synchronisation/exchange task over ALL states...
+        let mut spec = TaskSpec::new("uc2.exchange");
+        for s in &states {
+            spec = spec.arg(Arg::InOut(s.id()));
+        }
+        rt.submit(spec)?;
+        // ...and the master-side stop/retrieve/transfer-back round-trip.
+        let mut retrieved = Vec::with_capacity(states.len());
+        for s in &states {
+            retrieved.push(rt.wait_on(s)?);
+        }
+        states = retrieved
+            .into_iter()
+            .map(|bytes| rt.register_object(bytes.as_ref().clone()))
+            .collect();
+    }
+    let mut finals = Vec::new();
+    for s in &states {
+        finals.push(bytes_to_state(&rt.wait_on(s)?));
+    }
+    Ok(Uc2Result { elapsed_s: t0.elapsed().as_secs_f64(), finals })
+}
+
+/// Hybrid sweep: one task per computation, stream-based exchange.
+pub fn run_hybrid(rt: &CometRuntime, cfg: &Uc2Config) -> Result<Uc2Result> {
+    let t0 = Instant::now();
+    // One stream per computation; each computation consumes its ring peer's.
+    let streams: Vec<_> = (0..cfg.computations)
+        .map(|i| rt.object_stream::<Vec<u8>>(Some(&format!("uc2-{i}"))).unwrap())
+        .collect();
+    let finals_refs: Vec<DataRef> = (0..cfg.computations).map(|_| rt.new_object()).collect();
+    for i in 0..cfg.computations {
+        let peer = (i + 1) % cfg.computations;
+        rt.submit(
+            TaskSpec::new("uc2.computation")
+                .arg(Arg::StreamOut(streams[i].handle().clone()))
+                .arg(Arg::StreamIn(streams[peer].handle().clone()))
+                .arg(Arg::Out(finals_refs[i].id()))
+                .arg(Arg::scalar(&(i as u64)))
+                .arg(Arg::scalar(&(cfg.iterations as u64)))
+                .arg(Arg::scalar(&cfg.iter_ms)),
+        )?;
+    }
+    let mut finals = Vec::new();
+    for f in &finals_refs {
+        finals.push(bytes_to_state(&rt.wait_on(f)?));
+    }
+    Ok(Uc2Result { elapsed_s: t0.elapsed().as_secs_f64(), finals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timeutil::TimeScale;
+
+    fn rt() -> CometRuntime {
+        crate::apps::register_all();
+        CometRuntime::builder().workers(&[8]).scale(TimeScale::new(0.001)).build().unwrap()
+    }
+
+    #[test]
+    fn task_based_runs_all_iterations() {
+        let rt = rt();
+        let r = run_task_based(&rt, &Uc2Config { computations: 2, iterations: 3, iter_ms: 20 })
+            .unwrap();
+        assert_eq!(r.finals.len(), 2);
+        assert_eq!(r.finals[0].len(), STATE_N);
+        assert!(r.finals[0].iter().all(|v| v.is_finite()));
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hybrid_runs_all_iterations() {
+        let rt = rt();
+        let r =
+            run_hybrid(&rt, &Uc2Config { computations: 2, iterations: 3, iter_ms: 20 }).unwrap();
+        assert_eq!(r.finals.len(), 2);
+        assert!(r.finals.iter().all(|f| f.iter().all(|v| v.is_finite())));
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hybrid_uses_fewer_tasks() {
+        let rt = rt();
+        let cfg = Uc2Config { computations: 2, iterations: 4, iter_ms: 10 };
+        run_task_based(&rt, &cfg).unwrap();
+        let tb_tasks = rt.stats().submitted;
+        run_hybrid(&rt, &cfg).unwrap();
+        let hy_tasks = rt.stats().submitted - tb_tasks;
+        // Task-based: init + (compute×2 + exchange) per iter = 2 + 12.
+        // Hybrid: 2 long-lived tasks.
+        assert_eq!(hy_tasks, 2);
+        assert!(tb_tasks > hy_tasks * 3);
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn three_computation_ring() {
+        let rt = rt();
+        let r =
+            run_hybrid(&rt, &Uc2Config { computations: 3, iterations: 2, iter_ms: 10 }).unwrap();
+        assert_eq!(r.finals.len(), 3);
+        rt.shutdown().unwrap();
+    }
+}

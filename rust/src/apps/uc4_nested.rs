@@ -1,0 +1,238 @@
+//! UC4 — Dataflows with nested task-based workflows (paper §5.4, Fig 13).
+//!
+//! A producer feeds a stream; a `batcher` stage accumulates the received
+//! elements into batches and — instead of one fixed filter — the main code
+//! spawns one `filter_batch` task **per batch**, dynamically adapting
+//! resource usage to the input rate (the paper's "nested task-based
+//! workflow inside a dataflow task"). The big computation is itself a
+//! nested task-based workflow: it is split into per-row-band partial
+//! matmul tasks plus a combine task.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::api::{CometRuntime, DataRef};
+use crate::coordinator::executor::register_task_fn;
+use crate::coordinator::prelude::{Arg, TaskSpec};
+
+/// Vector length per produced element.
+pub const ELEM_N: usize = 256;
+/// Row bands of the nested big computation.
+pub const BANDS: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct Uc4Config {
+    pub elements: usize,
+    pub batch_size: usize,
+    /// Paper-ms between produced elements.
+    pub emit_ms: u64,
+    /// Paper-ms of work per batch filter.
+    pub filter_ms: u64,
+}
+
+impl Default for Uc4Config {
+    fn default() -> Self {
+        Self { elements: 16, batch_size: 4, emit_ms: 50, filter_ms: 200 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Uc4Result {
+    pub elapsed_s: f64,
+    pub batches: usize,
+    pub output_norm: f64,
+}
+
+fn to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn from_bytes(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+pub fn register() {
+    // args: [STREAM_OUT data, scalar elements, scalar emit_ms]
+    register_task_fn("uc4.producer", |ctx| {
+        let out = ctx.object_stream::<Vec<u8>>(0);
+        let elements: u64 = ctx.scalar(1)?;
+        let emit_ms: u64 = ctx.scalar(2)?;
+        for i in 0..elements {
+            ctx.sleep_paper_ms(emit_ms);
+            let v: Vec<f32> =
+                (0..ELEM_N).map(|j| (((i as usize * 17 + j * 3) % 23) as f32 / 23.0) - 0.3).collect();
+            out.publish(&to_bytes(&v))?;
+        }
+        out.close()?;
+        Ok(())
+    });
+
+    // args: [In batch, Out filtered, scalar filter_ms] — one nested filter
+    // task per accumulated batch.
+    register_task_fn("uc4.filter_batch", |ctx| {
+        let filter_ms: u64 = ctx.scalar(2)?;
+        ctx.sleep_paper_ms(filter_ms);
+        let batch = from_bytes(ctx.obj_in(0));
+        let filtered: Vec<f32> = batch.iter().map(|v| v.max(0.0)).collect();
+        ctx.set_output(1, to_bytes(&filtered));
+        Ok(())
+    });
+
+    // args: [In all_filtered, Out band_out, scalar band] — one partial of
+    // the nested big computation.
+    register_task_fn("uc4.compute_band", |ctx| {
+        let band: u64 = ctx.scalar(2)?;
+        let data = from_bytes(ctx.obj_in(0));
+        let out = match ctx.zoo.as_ref() {
+            Some(z) if z.spec("big_compute").is_some() => {
+                let spec = z.spec("big_compute").unwrap();
+                let n = spec.inputs[0][0];
+                let x: Vec<f32> = (0..n * n)
+                    .map(|i| data.get(i % data.len().max(1)).copied().unwrap_or(0.0) / n as f32)
+                    .collect();
+                let w: Vec<f32> = (0..n * n)
+                    .map(|i| if (i / n + band as usize) % n == i % n { 1.0 } else { 0.0 })
+                    .collect();
+                z.execute("big_compute", &[&x, &w])?
+            }
+            _ => data.iter().map(|v| (v * (band as f32 + 1.0)).max(0.0)).collect(),
+        };
+        // Reduce the band to a compact signature to keep combine cheap.
+        let sig: Vec<f32> = vec![out.iter().sum::<f32>(), out.len() as f32, band as f32];
+        ctx.set_output(1, to_bytes(&sig));
+        Ok(())
+    });
+
+    // args: [Out combined, In band0, In band1, ...]
+    register_task_fn("uc4.combine", |ctx| {
+        let mut total = 0f32;
+        for i in 1..ctx.args.len() {
+            total += from_bytes(ctx.obj_in(i))[0];
+        }
+        ctx.set_output(0, to_bytes(&[total]));
+        Ok(())
+    });
+}
+
+/// Run the UC4 pipeline: producer → batched filters → nested big compute.
+pub fn run(rt: &CometRuntime, cfg: &Uc4Config) -> Result<Uc4Result> {
+    let t0 = Instant::now();
+    let data = rt.object_stream::<Vec<u8>>(Some("uc4-data"))?;
+    rt.submit(
+        TaskSpec::new("uc4.producer")
+            .arg(Arg::StreamOut(data.handle().clone()))
+            .arg(Arg::scalar(&(cfg.elements as u64)))
+            .arg(Arg::scalar(&cfg.emit_ms)),
+    )?;
+
+    // The "batcher" nested workflow: accumulate stream elements in the main
+    // code and spawn one filter task per batch — resource usage follows the
+    // input rate.
+    let mut buffer: Vec<f32> = Vec::new();
+    let mut filtered_refs: Vec<DataRef> = Vec::new();
+    let mut received = 0usize;
+    loop {
+        let closed = data.is_closed();
+        let msgs = data.poll()?;
+        for m in &msgs {
+            buffer.extend(from_bytes(m));
+            received += 1;
+        }
+        while buffer.len() >= cfg.batch_size * ELEM_N {
+            let batch: Vec<f32> = buffer.drain(..cfg.batch_size * ELEM_N).collect();
+            let batch_ref = rt.register_object(to_bytes(&batch));
+            let out_ref = rt.new_object();
+            rt.submit(
+                TaskSpec::new("uc4.filter_batch")
+                    .arg(Arg::In(batch_ref.id()))
+                    .arg(Arg::Out(out_ref.id()))
+                    .arg(Arg::scalar(&cfg.filter_ms)),
+            )?;
+            filtered_refs.push(out_ref);
+        }
+        if closed && received >= cfg.elements {
+            break;
+        }
+        if msgs.is_empty() {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        }
+    }
+    // Flush the tail batch.
+    if !buffer.is_empty() {
+        let batch_ref = rt.register_object(to_bytes(&buffer));
+        let out_ref = rt.new_object();
+        rt.submit(
+            TaskSpec::new("uc4.filter_batch")
+                .arg(Arg::In(batch_ref.id()))
+                .arg(Arg::Out(out_ref.id()))
+                .arg(Arg::scalar(&cfg.filter_ms)),
+        )?;
+        filtered_refs.push(out_ref);
+        buffer.clear();
+    }
+
+    // Concatenate the filtered batches (synchronises on the filters).
+    let mut all = Vec::new();
+    for f in &filtered_refs {
+        all.extend(from_bytes(&rt.wait_on(f)?));
+    }
+    let all_ref = rt.register_object(to_bytes(&all));
+
+    // Nested big computation: BANDS partial tasks + combine.
+    let mut bands = Vec::new();
+    for b in 0..BANDS {
+        let out = rt.new_object();
+        rt.submit(
+            TaskSpec::new("uc4.compute_band")
+                .arg(Arg::In(all_ref.id()))
+                .arg(Arg::Out(out.id()))
+                .arg(Arg::scalar(&(b as u64))),
+        )?;
+        bands.push(out);
+    }
+    let combined = rt.new_object();
+    let mut spec = TaskSpec::new("uc4.combine").arg(Arg::Out(combined.id()));
+    for b in &bands {
+        spec = spec.arg(Arg::In(b.id()));
+    }
+    rt.submit(spec)?;
+
+    let out = from_bytes(&rt.wait_on(&combined)?);
+    Ok(Uc4Result {
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        batches: filtered_refs.len(),
+        output_norm: out[0].abs() as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timeutil::TimeScale;
+
+    fn rt() -> CometRuntime {
+        crate::apps::register_all();
+        CometRuntime::builder().workers(&[8]).scale(TimeScale::new(0.001)).build().unwrap()
+    }
+
+    #[test]
+    fn batches_scale_with_elements() {
+        let rt = rt();
+        let r = run(&rt, &Uc4Config { elements: 10, batch_size: 4, emit_ms: 10, filter_ms: 20 })
+            .unwrap();
+        // 10 elements in batches of 4 → 2 full + 1 tail.
+        assert_eq!(r.batches, 3);
+        assert!(r.output_norm.is_finite());
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn exact_batch_multiple_has_no_tail() {
+        let rt = rt();
+        let r = run(&rt, &Uc4Config { elements: 8, batch_size: 4, emit_ms: 5, filter_ms: 10 })
+            .unwrap();
+        assert_eq!(r.batches, 2);
+        rt.shutdown().unwrap();
+    }
+}

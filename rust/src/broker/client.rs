@@ -1,0 +1,291 @@
+//! `BrokerClient`: one API over two transports — embedded (`Arc<BrokerCore>`
+//! call-through) or remote (framed TCP). The DistroStream layer only ever
+//! sees this type, so streams are backend-location agnostic, exactly like
+//! the paper's ODSPublisher/ODSConsumer hide Kafka.
+
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+
+use super::embedded::{BrokerCore, BrokerError, Result, TopicStats};
+use super::group::AssignmentMode;
+use super::protocol::{error_from_code, Request, Response};
+use super::record::{ProducerRecord, Record};
+use crate::util::wire::{recv_msg, send_msg};
+
+enum Transport {
+    /// Zero-copy call-through: polls return `Arc`-shared records.
+    Embedded(Arc<BrokerCore>),
+    /// Mutex: the request/response protocol is strictly serial per
+    /// connection; concurrent users each hold their own client.
+    Remote(Mutex<TcpStream>),
+}
+
+/// Handle to a broker, embedded or remote.
+pub struct BrokerClient {
+    transport: Transport,
+}
+
+impl BrokerClient {
+    /// In-process client sharing `core`.
+    pub fn embedded(core: Arc<BrokerCore>) -> Self {
+        Self { transport: Transport::Embedded(core) }
+    }
+
+    /// Connect to a TCP broker server.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let sock = TcpStream::connect(addr)
+            .map_err(|e| BrokerError::Transport(format!("connect {addr}: {e}")))?;
+        sock.set_nodelay(true).ok();
+        Ok(Self { transport: Transport::Remote(Mutex::new(sock)) })
+    }
+
+    /// Clone an embedded client (remote clients own a socket; open another).
+    pub fn try_clone(&self) -> Option<Self> {
+        match &self.transport {
+            Transport::Embedded(core) => Some(Self::embedded(Arc::clone(core))),
+            Transport::Remote(_) => None,
+        }
+    }
+
+    fn rpc(&self, req: Request) -> Result<Response> {
+        match &self.transport {
+            Transport::Embedded(core) => Ok(super::server::dispatch(core, req)),
+            Transport::Remote(sock) => {
+                let mut sock = sock.lock().unwrap();
+                send_msg(&mut *sock, &req)
+                    .map_err(|e| BrokerError::Transport(format!("send: {e}")))?;
+                match recv_msg(&mut *sock) {
+                    Ok(Some(resp)) => Ok(resp),
+                    Ok(None) => Err(BrokerError::Transport("broker closed connection".into())),
+                    Err(e) => Err(BrokerError::Transport(format!("recv: {e}"))),
+                }
+            }
+        }
+    }
+
+    fn expect_ok(&self, req: Request) -> Result<()> {
+        match self.rpc(req)? {
+            Response::Ok => Ok(()),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    // ---- public API (mirrors BrokerCore) --------------------------------
+
+    pub fn ping(&self) -> Result<()> {
+        match self.rpc(Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        self.expect_ok(Request::CreateTopic { name: name.into(), partitions })
+    }
+
+    pub fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        self.expect_ok(Request::EnsureTopic { name: name.into(), partitions })
+    }
+
+    pub fn delete_topic(&self, name: &str) -> Result<()> {
+        self.expect_ok(Request::DeleteTopic { name: name.into() })
+    }
+
+    pub fn topic_names(&self) -> Result<Vec<String>> {
+        match self.rpc(Request::TopicNames)? {
+            Response::Names(ns) => Ok(ns),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn topic_stats(&self, name: &str) -> Result<TopicStats> {
+        match self.rpc(Request::TopicStats { name: name.into() })? {
+            Response::Stats(s) => Ok(TopicStats {
+                partitions: s.partitions,
+                records: s.records,
+                bytes: s.bytes,
+                high_watermarks: s.high_watermarks,
+                start_offsets: s.start_offsets,
+            }),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)> {
+        match self.rpc(Request::Publish { topic: topic.into(), rec })? {
+            Response::PubAck { partition, offset } => Ok((partition, offset)),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn publish_batch(
+        &self,
+        topic: &str,
+        recs: Vec<ProducerRecord>,
+    ) -> Result<Vec<(usize, u64)>> {
+        match self.rpc(Request::PublishBatch { topic: topic.into(), recs })? {
+            Response::PubBatchAck { acks } => Ok(acks),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn join_group(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        mode: AssignmentMode,
+    ) -> Result<u64> {
+        match self.rpc(Request::JoinGroup {
+            group: group.into(),
+            topic: topic.into(),
+            member: member.into(),
+            mode,
+        })? {
+            Response::Generation(g) => Ok(g),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
+        match self.rpc(Request::LeaveGroup {
+            group: group.into(),
+            topic: topic.into(),
+            member: member.into(),
+        })? {
+            Response::Bool(b) => Ok(b),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn poll(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+    ) -> Result<Vec<Arc<Record>>> {
+        // Embedded transport: bypass the dispatch layer so records stay
+        // Arc-shared (no payload copy).
+        if let Transport::Embedded(core) = &self.transport {
+            return core.poll(group, topic, member, max);
+        }
+        match self.rpc(Request::Poll {
+            group: group.into(),
+            topic: topic.into(),
+            member: member.into(),
+            max,
+        })? {
+            Response::Records(rs) => Ok(rs.into_iter().map(Arc::new).collect()),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
+        self.expect_ok(Request::Commit {
+            group: group.into(),
+            topic: topic.into(),
+            commits: commits.to_vec(),
+        })
+    }
+
+    pub fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
+        match self.rpc(Request::DeleteRecords { topic: topic.into(), partition, up_to })? {
+            Response::Count(n) => Ok(n),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>> {
+        match self.rpc(Request::Offsets { topic: topic.into() })? {
+            Response::OffsetList(os) => Ok(os),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// (claim position, committed) per partition for a group.
+    pub fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
+        match self.rpc(Request::Positions { group: group.into(), topic: topic.into() })? {
+            Response::OffsetList(os) => Ok(os),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn crash_member(&self, group: &str, topic: &str, member: &str) -> Result<()> {
+        self.expect_ok(Request::CrashMember {
+            group: group.into(),
+            topic: topic.into(),
+            member: member.into(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::server::BrokerServer;
+
+    fn exercise(client: &BrokerClient) {
+        client.create_topic("t", 2).unwrap();
+        assert!(client.create_topic("t", 2).is_err());
+        client.publish("t", ProducerRecord::new(vec![1])).unwrap();
+        client
+            .publish_batch("t", vec![ProducerRecord::new(vec![2]), ProducerRecord::new(vec![3])])
+            .unwrap();
+        client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let recs = client.poll("g", "t", "m", usize::MAX).unwrap();
+        assert_eq!(recs.len(), 3);
+        client.commit("g", "t", &[(0, 2)]).unwrap();
+        let stats = client.topic_stats("t").unwrap();
+        assert_eq!(stats.partitions, 2);
+        assert_eq!(stats.records, 3);
+        for (p, (_s, hw)) in client.offsets("t").unwrap().into_iter().enumerate() {
+            client.delete_records("t", p, hw).unwrap();
+        }
+        assert_eq!(client.topic_stats("t").unwrap().records, 0);
+        assert!(client.leave_group("g", "t", "m").unwrap());
+        client.delete_topic("t").unwrap();
+    }
+
+    #[test]
+    fn embedded_end_to_end() {
+        let client = BrokerClient::embedded(BrokerCore::new());
+        exercise(&client);
+    }
+
+    #[test]
+    fn remote_end_to_end() {
+        let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+        let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.ping().unwrap();
+        exercise(&client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn two_remote_clients_share_state() {
+        let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let producer = BrokerClient::connect(&addr).unwrap();
+        let consumer = BrokerClient::connect(&addr).unwrap();
+        producer.create_topic("t", 1).unwrap();
+        producer.publish("t", ProducerRecord::new(vec![42])).unwrap();
+        consumer.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let recs = consumer.poll("g", "t", "m", usize::MAX).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].value.0, vec![42]);
+        server.shutdown();
+    }
+}

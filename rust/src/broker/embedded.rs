@@ -1,0 +1,423 @@
+//! `BrokerCore`: the broker's state machine, shared by the embedded client
+//! and the TCP server (which is just `BrokerCore` behind sockets).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use thiserror::Error;
+
+use super::group::{AssignmentMode, GroupState};
+use super::record::{ProducerRecord, Record};
+use super::topic::Topic;
+
+/// Broker-level errors (mirrored over the wire by `protocol::ErrorCode`).
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+pub enum BrokerError {
+    #[error("unknown topic {0:?}")]
+    UnknownTopic(String),
+    #[error("topic {0:?} already exists")]
+    TopicExists(String),
+    #[error("partition {partition} out of range for topic {topic:?} ({count} partitions)")]
+    BadPartition { topic: String, partition: usize, count: usize },
+    #[error("unknown group {0:?}")]
+    UnknownGroup(String),
+    #[error("member {member:?} not in group {group:?}")]
+    UnknownMember { group: String, member: String },
+    #[error("transport: {0}")]
+    Transport(String),
+}
+
+pub type Result<T> = std::result::Result<T, BrokerError>;
+
+/// Snapshot of a topic's per-partition state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopicStats {
+    pub partitions: usize,
+    pub records: usize,
+    pub bytes: usize,
+    pub high_watermarks: Vec<u64>,
+    pub start_offsets: Vec<u64>,
+}
+
+/// The broker state machine: topics + consumer groups.
+///
+/// Locking: the topic map is an `RwLock` (reads dominate); each partition
+/// log has its own `Mutex` inside [`Topic`]; group state is a `Mutex` per
+/// (group, topic) entry.
+#[derive(Default)]
+pub struct BrokerCore {
+    topics: RwLock<HashMap<String, Arc<Topic>>>,
+    groups: Mutex<HashMap<(String, String), Arc<Mutex<GroupState>>>>,
+}
+
+impl BrokerCore {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    // ---- admin ---------------------------------------------------------
+
+    /// Create a topic with `partitions` partitions.
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        let mut topics = self.topics.write().unwrap();
+        if topics.contains_key(name) {
+            return Err(BrokerError::TopicExists(name.into()));
+        }
+        topics.insert(name.to_string(), Arc::new(Topic::new(name, partitions)));
+        Ok(())
+    }
+
+    /// Create if absent (used by ODS lazy publisher/consumer init).
+    pub fn ensure_topic(&self, name: &str, partitions: usize) {
+        let mut topics = self.topics.write().unwrap();
+        topics
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Topic::new(name, partitions)));
+    }
+
+    /// Drop a topic and all group state referring to it.
+    pub fn delete_topic(&self, name: &str) -> Result<()> {
+        let removed = self.topics.write().unwrap().remove(name);
+        if removed.is_none() {
+            return Err(BrokerError::UnknownTopic(name.into()));
+        }
+        self.groups.lock().unwrap().retain(|(_, t), _| t != name);
+        Ok(())
+    }
+
+    pub fn topic_names(&self) -> Vec<String> {
+        let mut names: Vec<_> = self.topics.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn topic(&self, name: &str) -> Result<Arc<Topic>> {
+        self.topics
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| BrokerError::UnknownTopic(name.into()))
+    }
+
+    /// Per-topic stats snapshot.
+    pub fn topic_stats(&self, name: &str) -> Result<TopicStats> {
+        let t = self.topic(name)?;
+        let n = t.partition_count();
+        Ok(TopicStats {
+            partitions: n,
+            records: t.total_records(),
+            bytes: t.total_bytes(),
+            high_watermarks: (0..n).map(|p| t.high_watermark(p)).collect(),
+            start_offsets: (0..n).map(|p| t.start_offset(p)).collect(),
+        })
+    }
+
+    // ---- produce -------------------------------------------------------
+
+    /// Publish one record; returns (partition, offset).
+    pub fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)> {
+        Ok(self.topic(topic)?.publish(rec))
+    }
+
+    /// Publish a batch (one partitioner decision per record, like Kafka's
+    /// per-record send the paper describes for list publishes).
+    pub fn publish_batch(&self, topic: &str, recs: Vec<ProducerRecord>) -> Result<Vec<(usize, u64)>> {
+        let t = self.topic(topic)?;
+        Ok(recs.into_iter().map(|r| t.publish(r)).collect())
+    }
+
+    // ---- consume -------------------------------------------------------
+
+    fn group_entry(&self, group: &str, topic: &str, mode: AssignmentMode) -> Arc<Mutex<GroupState>> {
+        let mut groups = self.groups.lock().unwrap();
+        groups
+            .entry((group.to_string(), topic.to_string()))
+            .or_insert_with(|| Arc::new(Mutex::new(GroupState::new(mode))))
+            .clone()
+    }
+
+    /// Join `member` to `group` for `topic`; returns the generation.
+    pub fn join_group(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        mode: AssignmentMode,
+    ) -> Result<u64> {
+        self.topic(topic)?; // must exist
+        let entry = self.group_entry(group, topic, mode);
+        let mut st = entry.lock().unwrap();
+        Ok(st.join(member))
+    }
+
+    /// Remove `member`; triggers rebalance (Partitioned) and rewinds the
+    /// member's uncommitted claims to the commit point (Shared) so another
+    /// member redelivers them — at-least-once on crash.
+    pub fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
+        let entry = {
+            let groups = self.groups.lock().unwrap();
+            groups
+                .get(&(group.to_string(), topic.to_string()))
+                .cloned()
+                .ok_or_else(|| BrokerError::UnknownGroup(group.into()))?
+        };
+        let mut st = entry.lock().unwrap();
+        Ok(st.leave(member))
+    }
+
+    /// Poll up to `max` records for `member` of `group` on `topic`.
+    ///
+    /// Shared mode: claims from every partition's shared cursor (greedy).
+    /// Partitioned mode: claims only from the member's assigned partitions.
+    pub fn poll(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+    ) -> Result<Vec<Arc<Record>>> {
+        let t = self.topic(topic)?;
+        let entry = {
+            let groups = self.groups.lock().unwrap();
+            groups
+                .get(&(group.to_string(), topic.to_string()))
+                .cloned()
+                .ok_or_else(|| BrokerError::UnknownGroup(group.into()))?
+        };
+        let mut st = entry.lock().unwrap();
+        if !st.members().iter().any(|m| m == member) {
+            return Err(BrokerError::UnknownMember { group: group.into(), member: member.into() });
+        }
+        let parts = st.assignment(member, t.partition_count());
+        let mut out = Vec::new();
+        let mut budget = max;
+        for p in parts {
+            if budget == 0 {
+                break;
+            }
+            let (from, to) = st.claim(p, t.start_offset(p), t.high_watermark(p), budget);
+            if to > from {
+                let recs = t.fetch(p, from, (to - from) as usize);
+                budget -= recs.len().min(budget);
+                out.extend(recs);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Commit processed offsets: `up_to` per partition.
+    pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
+        let entry = {
+            let groups = self.groups.lock().unwrap();
+            groups
+                .get(&(group.to_string(), topic.to_string()))
+                .cloned()
+                .ok_or_else(|| BrokerError::UnknownGroup(group.into()))?
+        };
+        let mut st = entry.lock().unwrap();
+        for &(p, up_to) in commits {
+            st.commit(p, up_to);
+        }
+        Ok(())
+    }
+
+    /// Delete records below `up_to` in one partition (exactly-once: the ODS
+    /// consumer deletes what it processed, as the paper does via Kafka's
+    /// AdminClient).
+    pub fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
+        let t = self.topic(topic)?;
+        if partition >= t.partition_count() {
+            return Err(BrokerError::BadPartition {
+                topic: topic.into(),
+                partition,
+                count: t.partition_count(),
+            });
+        }
+        Ok(t.delete_records(partition, up_to))
+    }
+
+    /// (claim position, committed offset) per partition for a group —
+    /// the safe bounds for commit/delete after a poll (deleting up to the
+    /// high watermark instead would destroy records published after the
+    /// claim).
+    pub fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
+        let t = self.topic(topic)?;
+        let entry = {
+            let groups = self.groups.lock().unwrap();
+            groups
+                .get(&(group.to_string(), topic.to_string()))
+                .cloned()
+                .ok_or_else(|| BrokerError::UnknownGroup(group.into()))?
+        };
+        let st = entry.lock().unwrap();
+        Ok((0..t.partition_count()).map(|p| (st.position(p), st.committed(p))).collect())
+    }
+
+    /// (start_offset, high_watermark) per partition.
+    pub fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>> {
+        let t = self.topic(topic)?;
+        Ok((0..t.partition_count()).map(|p| (t.start_offset(p), t.high_watermark(p))).collect())
+    }
+
+    /// Simulate a consumer crash: rewind the group's claims to the last
+    /// commit so records get redelivered (failure-injection tests).
+    pub fn crash_member(&self, group: &str, topic: &str, member: &str) -> Result<()> {
+        let t = self.topic(topic)?;
+        let entry = {
+            let groups = self.groups.lock().unwrap();
+            groups
+                .get(&(group.to_string(), topic.to_string()))
+                .cloned()
+                .ok_or_else(|| BrokerError::UnknownGroup(group.into()))?
+        };
+        let mut st = entry.lock().unwrap();
+        for p in 0..t.partition_count() {
+            st.rewind_to_committed(p);
+        }
+        st.leave(member);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(v: u8) -> ProducerRecord {
+        ProducerRecord::new(vec![v])
+    }
+
+    #[test]
+    fn create_publish_poll_roundtrip() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 2).unwrap();
+        for i in 0..6 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        b.join_group("g", "t", "m1", AssignmentMode::Shared).unwrap();
+        let got = b.poll("g", "t", "m1", usize::MAX).unwrap();
+        assert_eq!(got.len(), 6);
+        // Second poll: nothing new.
+        assert!(b.poll("g", "t", "m1", usize::MAX).unwrap().is_empty());
+    }
+
+    #[test]
+    fn duplicate_topic_rejected() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        assert_eq!(b.create_topic("t", 1), Err(BrokerError::TopicExists("t".into())));
+        b.ensure_topic("t", 1); // idempotent, no error
+    }
+
+    #[test]
+    fn two_groups_both_see_all_records() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        for i in 0..4 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        b.join_group("g1", "t", "a", AssignmentMode::Shared).unwrap();
+        b.join_group("g2", "t", "b", AssignmentMode::Shared).unwrap();
+        assert_eq!(b.poll("g1", "t", "a", usize::MAX).unwrap().len(), 4);
+        assert_eq!(b.poll("g2", "t", "b", usize::MAX).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn same_group_shares_records_without_duplication() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.join_group("g", "t", "m1", AssignmentMode::Shared).unwrap();
+        b.join_group("g", "t", "m2", AssignmentMode::Shared).unwrap();
+        for i in 0..10 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        let a = b.poll("g", "t", "m1", usize::MAX).unwrap();
+        let c = b.poll("g", "t", "m2", usize::MAX).unwrap();
+        assert_eq!(a.len() + c.len(), 10);
+        // Greedy: the first poller takes everything available.
+        assert_eq!(a.len(), 10);
+    }
+
+    #[test]
+    fn partitioned_mode_respects_assignment() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 4).unwrap();
+        b.join_group("g", "t", "m1", AssignmentMode::Partitioned).unwrap();
+        b.join_group("g", "t", "m2", AssignmentMode::Partitioned).unwrap();
+        for i in 0..40 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        let a = b.poll("g", "t", "m1", usize::MAX).unwrap();
+        let c = b.poll("g", "t", "m2", usize::MAX).unwrap();
+        assert_eq!(a.len() + c.len(), 40);
+        assert_eq!(a.len(), 20);
+        assert_eq!(c.len(), 20);
+    }
+
+    #[test]
+    fn delete_records_supports_exactly_once() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        for i in 0..5 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let got = b.poll("g", "t", "m", usize::MAX).unwrap();
+        let max_off = got.iter().map(|r| r.offset).max().unwrap();
+        b.delete_records("t", 0, max_off + 1).unwrap();
+        let stats = b.topic_stats("t").unwrap();
+        assert_eq!(stats.records, 0);
+        // A late-joining group cannot see deleted records.
+        b.join_group("g2", "t", "x", AssignmentMode::Shared).unwrap();
+        assert!(b.poll("g2", "t", "x", usize::MAX).unwrap().is_empty());
+    }
+
+    #[test]
+    fn crash_member_triggers_redelivery_of_uncommitted() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.join_group("g", "t", "m1", AssignmentMode::Shared).unwrap();
+        b.join_group("g", "t", "m2", AssignmentMode::Shared).unwrap();
+        for i in 0..8 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        let got = b.poll("g", "t", "m1", usize::MAX).unwrap();
+        assert_eq!(got.len(), 8);
+        // m1 processed+committed only the first 3, then crashed.
+        b.commit("g", "t", &[(0, 3)]).unwrap();
+        b.crash_member("g", "t", "m1").unwrap();
+        let redelivered = b.poll("g", "t", "m2", usize::MAX).unwrap();
+        assert_eq!(redelivered.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn unknown_entities_error() {
+        let b = BrokerCore::new();
+        assert!(matches!(b.publish("nope", rec(0)), Err(BrokerError::UnknownTopic(_))));
+        b.create_topic("t", 1).unwrap();
+        assert!(matches!(
+            b.poll("g", "t", "m", 1),
+            Err(BrokerError::UnknownGroup(_))
+        ));
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        assert!(matches!(
+            b.poll("g", "t", "other", 1),
+            Err(BrokerError::UnknownMember { .. })
+        ));
+        assert!(matches!(
+            b.delete_records("t", 9, 1),
+            Err(BrokerError::BadPartition { .. })
+        ));
+    }
+
+    #[test]
+    fn delete_topic_clears_group_state() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        b.delete_topic("t").unwrap();
+        assert!(b.topic_names().is_empty());
+        assert!(matches!(b.poll("g", "t", "m", 1), Err(BrokerError::UnknownTopic(_))));
+    }
+}

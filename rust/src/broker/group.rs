@@ -1,0 +1,227 @@
+//! Consumer groups: shared consumption of a topic's records.
+//!
+//! Kafka ensures each record published to a topic is delivered to at least
+//! one member of every subscribing group (§3.2). Two disciplines:
+//!
+//! - [`AssignmentMode::Shared`]: one cursor per (group, partition); a poll
+//!   atomically claims everything available past the cursor (optionally
+//!   capped). This matches the behaviour the paper measures — "elements are
+//!   assigned to the first process that requests them" (§6.4) — and
+//!   reproduces the Fig 20 imbalance. A finite `max_poll_records` is the
+//!   paper's proposed balanced-poll policy (future work).
+//! - [`AssignmentMode::Partitioned`]: classic Kafka — partitions are
+//!   range-assigned to members; a rebalance redistributes on join/leave.
+
+use std::collections::BTreeMap;
+
+/// How a group's members share partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignmentMode {
+    /// Greedy shared cursors (paper behaviour).
+    Shared,
+    /// Kafka-style partition-per-member assignment.
+    Partitioned,
+}
+
+/// Per-(topic, partition) consumption cursor.
+#[derive(Debug, Default, Clone)]
+pub struct Cursor {
+    /// Next offset this group will claim.
+    pub position: u64,
+    /// Highest offset + 1 acknowledged as *processed* (commit point).
+    pub committed: u64,
+}
+
+/// Consumer-group state for one topic.
+#[derive(Debug)]
+pub struct GroupState {
+    pub mode: AssignmentMode,
+    /// Sorted member ids (deterministic assignment).
+    members: Vec<String>,
+    /// partition -> cursor.
+    cursors: BTreeMap<usize, Cursor>,
+    /// Bumped on every membership change (detects stale members).
+    pub generation: u64,
+}
+
+impl GroupState {
+    pub fn new(mode: AssignmentMode) -> Self {
+        Self { mode, members: Vec::new(), cursors: BTreeMap::new(), generation: 0 }
+    }
+
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    /// Add a member (idempotent); returns the new generation.
+    pub fn join(&mut self, member: &str) -> u64 {
+        if !self.members.iter().any(|m| m == member) {
+            self.members.push(member.to_string());
+            self.members.sort();
+            self.generation += 1;
+        }
+        self.generation
+    }
+
+    /// Remove a member; returns true if it was present.
+    pub fn leave(&mut self, member: &str) -> bool {
+        let before = self.members.len();
+        self.members.retain(|m| m != member);
+        if self.members.len() != before {
+            self.generation += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Partitions assigned to `member` under `Partitioned` mode
+    /// (range assignment over sorted members). Under `Shared` mode every
+    /// member may claim from every partition.
+    pub fn assignment(&self, member: &str, partitions: usize) -> Vec<usize> {
+        match self.mode {
+            AssignmentMode::Shared => (0..partitions).collect(),
+            AssignmentMode::Partitioned => {
+                let Some(rank) = self.members.iter().position(|m| m == member) else {
+                    return Vec::new();
+                };
+                (0..partitions).filter(|p| p % self.members.len().max(1) == rank).collect()
+            }
+        }
+    }
+
+    /// Cursor for a partition (created on first touch).
+    pub fn cursor_mut(&mut self, partition: usize) -> &mut Cursor {
+        self.cursors.entry(partition).or_default()
+    }
+
+    pub fn cursor(&self, partition: usize) -> Cursor {
+        self.cursors.get(&partition).cloned().unwrap_or_default()
+    }
+
+    /// Claim up to `max` records past the cursor given the partition's
+    /// `high_watermark` and `start_offset`; advances the position and
+    /// returns the claimed half-open range `[from, to)`.
+    pub fn claim(
+        &mut self,
+        partition: usize,
+        start_offset: u64,
+        high_watermark: u64,
+        max: usize,
+    ) -> (u64, u64) {
+        let cur = self.cursors.entry(partition).or_default();
+        // Never re-claim deleted records.
+        let from = cur.position.max(start_offset);
+        let available = high_watermark.saturating_sub(from);
+        let take = available.min(max as u64);
+        let to = from + take;
+        cur.position = to;
+        (from, to)
+    }
+
+    /// Mark records below `up_to` as processed.
+    pub fn commit(&mut self, partition: usize, up_to: u64) {
+        let cur = self.cursors.entry(partition).or_default();
+        cur.committed = cur.committed.max(up_to);
+    }
+
+    /// Rewind the claim position to the commit point (redelivery after a
+    /// member crash — at-least-once).
+    pub fn rewind_to_committed(&mut self, partition: usize) {
+        let cur = self.cursors.entry(partition).or_default();
+        cur.position = cur.committed;
+    }
+
+    /// Smallest committed offset across partitions (safe deletion bound
+    /// helpers for admins).
+    pub fn committed(&self, partition: usize) -> u64 {
+        self.cursors.get(&partition).map(|c| c.committed).unwrap_or(0)
+    }
+
+    /// Current claim position of a partition (next offset to be claimed).
+    pub fn position(&self, partition: usize) -> u64 {
+        self.cursors.get(&partition).map(|c| c.position).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_is_idempotent_and_sorted() {
+        let mut g = GroupState::new(AssignmentMode::Partitioned);
+        g.join("b");
+        g.join("a");
+        g.join("b");
+        assert_eq!(g.members(), &["a".to_string(), "b".to_string()]);
+        assert_eq!(g.generation, 2);
+    }
+
+    #[test]
+    fn partitioned_assignment_covers_all_disjointly() {
+        let mut g = GroupState::new(AssignmentMode::Partitioned);
+        for m in ["m1", "m2", "m3"] {
+            g.join(m);
+        }
+        let parts = 8;
+        let mut seen = vec![0u32; parts];
+        for m in ["m1", "m2", "m3"] {
+            for p in g.assignment(m, parts) {
+                seen[p] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "partitions not covered exactly once: {seen:?}");
+    }
+
+    #[test]
+    fn rebalance_on_leave() {
+        let mut g = GroupState::new(AssignmentMode::Partitioned);
+        g.join("m1");
+        g.join("m2");
+        let before = g.assignment("m1", 4);
+        assert_eq!(before.len(), 2);
+        g.leave("m2");
+        assert_eq!(g.assignment("m1", 4).len(), 4);
+        assert!(g.assignment("m2", 4).is_empty());
+    }
+
+    #[test]
+    fn shared_claim_is_greedy_and_non_overlapping() {
+        let mut g = GroupState::new(AssignmentMode::Shared);
+        g.join("r1");
+        g.join("r2");
+        // 10 records available in partition 0.
+        let (a0, a1) = g.claim(0, 0, 10, usize::MAX);
+        assert_eq!((a0, a1), (0, 10)); // first poller takes everything
+        let (b0, b1) = g.claim(0, 0, 10, usize::MAX);
+        assert_eq!((b0, b1), (10, 10)); // second gets nothing
+    }
+
+    #[test]
+    fn capped_claim_limits_take() {
+        let mut g = GroupState::new(AssignmentMode::Shared);
+        let (f, t) = g.claim(0, 0, 100, 10);
+        assert_eq!((f, t), (0, 10));
+        let (f2, t2) = g.claim(0, 0, 100, 10);
+        assert_eq!((f2, t2), (10, 20));
+    }
+
+    #[test]
+    fn claim_skips_deleted_prefix() {
+        let mut g = GroupState::new(AssignmentMode::Shared);
+        // Records below offset 5 were deleted.
+        let (f, t) = g.claim(0, 5, 8, usize::MAX);
+        assert_eq!((f, t), (5, 8));
+    }
+
+    #[test]
+    fn commit_and_rewind_for_redelivery() {
+        let mut g = GroupState::new(AssignmentMode::Shared);
+        g.claim(0, 0, 10, usize::MAX);
+        g.commit(0, 4);
+        g.rewind_to_committed(0);
+        let (f, t) = g.claim(0, 0, 10, usize::MAX);
+        assert_eq!((f, t), (4, 10)); // offsets 4..10 redelivered
+    }
+}

@@ -1,0 +1,197 @@
+//! A single partition: an append-only log with front truncation.
+//!
+//! Offsets are dense and never reused; deleting processed records
+//! (exactly-once support) advances `start_offset` without renumbering.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::util::wire::Blob;
+
+use super::record::{now_ms, ProducerRecord, Record};
+
+/// Append-only record log with O(1) front truncation. Records are stored
+/// behind `Arc` so fetches are O(1) per record regardless of payload size
+/// (consumers share the payload; no copy on the embedded hot path).
+#[derive(Debug, Default)]
+pub struct PartitionLog {
+    records: VecDeque<Arc<Record>>,
+    /// Offset of the first retained record.
+    start: u64,
+    /// Next offset to assign (== high watermark).
+    next: u64,
+    /// Total bytes retained (metrics/backpressure).
+    bytes: usize,
+}
+
+impl PartitionLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offset that the next appended record will get.
+    pub fn high_watermark(&self) -> u64 {
+        self.next
+    }
+
+    /// Offset of the earliest retained record.
+    pub fn start_offset(&self) -> u64 {
+        self.start
+    }
+
+    /// Number of retained records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Retained payload bytes.
+    pub fn retained_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Append one producer record; returns its assigned offset.
+    pub fn append(&mut self, rec: ProducerRecord) -> u64 {
+        let offset = self.next;
+        self.next += 1;
+        let stored = Record { offset, timestamp_ms: now_ms(), key: rec.key, value: rec.value };
+        self.bytes += stored.payload_len();
+        self.records.push_back(Arc::new(stored));
+        offset
+    }
+
+    /// Fetch up to `max` records with offset >= `from` (Arc clones — O(1)
+    /// per record; the log is shared by many consumer groups).
+    pub fn fetch(&self, from: u64, max: usize) -> Vec<Arc<Record>> {
+        if self.records.is_empty() || max == 0 {
+            return Vec::new();
+        }
+        let from = from.max(self.start);
+        if from >= self.next {
+            return Vec::new();
+        }
+        let idx = (from - self.start) as usize;
+        self.records.iter().skip(idx).take(max).cloned().collect()
+    }
+
+    /// Drop records with offset < `up_to`. Returns how many were deleted.
+    pub fn delete_up_to(&mut self, up_to: u64) -> usize {
+        let mut deleted = 0;
+        while let Some(front) = self.records.front() {
+            if front.offset >= up_to {
+                break;
+            }
+            self.bytes -= front.payload_len();
+            self.records.pop_front();
+            deleted += 1;
+        }
+        self.start = self.start.max(up_to.min(self.next));
+        deleted
+    }
+
+    /// First record payload (tests/debugging).
+    pub fn front_value(&self) -> Option<&Blob> {
+        self.records.front().map(|r| &r.value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn rec(v: u8) -> ProducerRecord {
+        ProducerRecord::new(vec![v])
+    }
+
+    #[test]
+    fn offsets_are_dense_from_zero() {
+        let mut log = PartitionLog::new();
+        assert_eq!(log.append(rec(0)), 0);
+        assert_eq!(log.append(rec(1)), 1);
+        assert_eq!(log.high_watermark(), 2);
+        assert_eq!(log.start_offset(), 0);
+    }
+
+    #[test]
+    fn fetch_respects_from_and_max() {
+        let mut log = PartitionLog::new();
+        for i in 0..10 {
+            log.append(rec(i));
+        }
+        let got = log.fetch(3, 4);
+        assert_eq!(got.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+        assert!(log.fetch(10, 5).is_empty());
+        assert!(log.fetch(0, 0).is_empty());
+    }
+
+    #[test]
+    fn delete_advances_start_without_renumbering() {
+        let mut log = PartitionLog::new();
+        for i in 0..5 {
+            log.append(rec(i));
+        }
+        assert_eq!(log.delete_up_to(3), 3);
+        assert_eq!(log.start_offset(), 3);
+        assert_eq!(log.len(), 2);
+        // New appends continue the sequence.
+        assert_eq!(log.append(rec(9)), 5);
+        // Fetching below start clamps to start.
+        let got = log.fetch(0, 10);
+        assert_eq!(got.first().unwrap().offset, 3);
+    }
+
+    #[test]
+    fn delete_beyond_watermark_clamps() {
+        let mut log = PartitionLog::new();
+        log.append(rec(0));
+        assert_eq!(log.delete_up_to(100), 1);
+        assert_eq!(log.start_offset(), 1);
+        assert_eq!(log.append(rec(1)), 1);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_retained() {
+        let mut log = PartitionLog::new();
+        log.append(ProducerRecord::new(vec![0; 10]));
+        log.append(ProducerRecord::new(vec![0; 20]));
+        assert_eq!(log.retained_bytes(), 30);
+        log.delete_up_to(1);
+        assert_eq!(log.retained_bytes(), 20);
+    }
+
+    #[test]
+    fn prop_fetch_after_random_ops_is_ordered_and_dense() {
+        check("partition log invariants", |r: &mut Rng| {
+            // Ops: 0..n appends interleaved with deletes.
+            let n = r.range(1, 40);
+            (0..n).map(|_| r.below(3)).collect::<Vec<u64>>()
+        }, |ops| {
+            let mut log = PartitionLog::new();
+            for (i, op) in ops.iter().enumerate() {
+                match op {
+                    0 | 1 => {
+                        log.append(ProducerRecord::new(vec![i as u8]));
+                    }
+                    _ => {
+                        let mid = (log.start_offset() + log.high_watermark()) / 2;
+                        log.delete_up_to(mid);
+                    }
+                }
+            }
+            let recs = log.fetch(0, usize::MAX);
+            // Offsets strictly increasing by one, starting at start_offset.
+            for (i, r) in recs.iter().enumerate() {
+                ensure(r.offset == log.start_offset() + i as u64, "offset not dense")?;
+            }
+            ensure(
+                log.start_offset() + recs.len() as u64 == log.high_watermark(),
+                "watermark mismatch",
+            )
+        });
+    }
+}

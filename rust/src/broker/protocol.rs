@@ -1,0 +1,416 @@
+//! Wire protocol between [`super::client::BrokerClient`] and the TCP server.
+//!
+//! One request frame → one response frame. Tag bytes keep the codec
+//! hand-rolled but explicit; unknown tags surface as `DecodeError::BadTag`.
+
+use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
+use crate::util::wire::Wire;
+
+use super::embedded::{BrokerError, TopicStats};
+use super::group::AssignmentMode;
+use super::record::{ProducerRecord, Record};
+
+impl Wire for AssignmentMode {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            AssignmentMode::Shared => 0,
+            AssignmentMode::Partitioned => 1,
+        });
+    }
+    fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
+        let at = r.position();
+        match r.get_u8()? {
+            0 => Ok(AssignmentMode::Shared),
+            1 => Ok(AssignmentMode::Partitioned),
+            tag => Err(DecodeError::BadTag { at, tag: tag as u32, ty: "AssignmentMode" }),
+        }
+    }
+}
+
+/// Client → broker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    CreateTopic { name: String, partitions: usize },
+    EnsureTopic { name: String, partitions: usize },
+    DeleteTopic { name: String },
+    TopicNames,
+    TopicStats { name: String },
+    Publish { topic: String, rec: ProducerRecord },
+    PublishBatch { topic: String, recs: Vec<ProducerRecord> },
+    JoinGroup { group: String, topic: String, member: String, mode: AssignmentMode },
+    LeaveGroup { group: String, topic: String, member: String },
+    Poll { group: String, topic: String, member: String, max: usize },
+    Commit { group: String, topic: String, commits: Vec<(usize, u64)> },
+    DeleteRecords { topic: String, partition: usize, up_to: u64 },
+    Offsets { topic: String },
+    Positions { group: String, topic: String },
+    CrashMember { group: String, topic: String, member: String },
+    Shutdown,
+}
+
+impl Wire for Request {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Request::Ping => w.put_u8(0),
+            Request::CreateTopic { name, partitions } => {
+                w.put_u8(1);
+                name.encode(w);
+                partitions.encode(w);
+            }
+            Request::EnsureTopic { name, partitions } => {
+                w.put_u8(2);
+                name.encode(w);
+                partitions.encode(w);
+            }
+            Request::DeleteTopic { name } => {
+                w.put_u8(3);
+                name.encode(w);
+            }
+            Request::TopicNames => w.put_u8(4),
+            Request::TopicStats { name } => {
+                w.put_u8(5);
+                name.encode(w);
+            }
+            Request::Publish { topic, rec } => {
+                w.put_u8(6);
+                topic.encode(w);
+                rec.encode(w);
+            }
+            Request::PublishBatch { topic, recs } => {
+                w.put_u8(7);
+                topic.encode(w);
+                recs.encode(w);
+            }
+            Request::JoinGroup { group, topic, member, mode } => {
+                w.put_u8(8);
+                group.encode(w);
+                topic.encode(w);
+                member.encode(w);
+                mode.encode(w);
+            }
+            Request::LeaveGroup { group, topic, member } => {
+                w.put_u8(9);
+                group.encode(w);
+                topic.encode(w);
+                member.encode(w);
+            }
+            Request::Poll { group, topic, member, max } => {
+                w.put_u8(10);
+                group.encode(w);
+                topic.encode(w);
+                member.encode(w);
+                max.encode(w);
+            }
+            Request::Commit { group, topic, commits } => {
+                w.put_u8(11);
+                group.encode(w);
+                topic.encode(w);
+                commits.encode(w);
+            }
+            Request::DeleteRecords { topic, partition, up_to } => {
+                w.put_u8(12);
+                topic.encode(w);
+                partition.encode(w);
+                up_to.encode(w);
+            }
+            Request::Offsets { topic } => {
+                w.put_u8(13);
+                topic.encode(w);
+            }
+            Request::Positions { group, topic } => {
+                w.put_u8(16);
+                group.encode(w);
+                topic.encode(w);
+            }
+            Request::CrashMember { group, topic, member } => {
+                w.put_u8(14);
+                group.encode(w);
+                topic.encode(w);
+                member.encode(w);
+            }
+            Request::Shutdown => w.put_u8(15),
+        }
+    }
+
+    fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => Request::Ping,
+            1 => Request::CreateTopic { name: Wire::decode(r)?, partitions: Wire::decode(r)? },
+            2 => Request::EnsureTopic { name: Wire::decode(r)?, partitions: Wire::decode(r)? },
+            3 => Request::DeleteTopic { name: Wire::decode(r)? },
+            4 => Request::TopicNames,
+            5 => Request::TopicStats { name: Wire::decode(r)? },
+            6 => Request::Publish { topic: Wire::decode(r)?, rec: Wire::decode(r)? },
+            7 => Request::PublishBatch { topic: Wire::decode(r)?, recs: Wire::decode(r)? },
+            8 => Request::JoinGroup {
+                group: Wire::decode(r)?,
+                topic: Wire::decode(r)?,
+                member: Wire::decode(r)?,
+                mode: Wire::decode(r)?,
+            },
+            9 => Request::LeaveGroup {
+                group: Wire::decode(r)?,
+                topic: Wire::decode(r)?,
+                member: Wire::decode(r)?,
+            },
+            10 => Request::Poll {
+                group: Wire::decode(r)?,
+                topic: Wire::decode(r)?,
+                member: Wire::decode(r)?,
+                max: Wire::decode(r)?,
+            },
+            11 => Request::Commit {
+                group: Wire::decode(r)?,
+                topic: Wire::decode(r)?,
+                commits: Wire::decode(r)?,
+            },
+            12 => Request::DeleteRecords {
+                topic: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+                up_to: Wire::decode(r)?,
+            },
+            13 => Request::Offsets { topic: Wire::decode(r)? },
+            14 => Request::CrashMember {
+                group: Wire::decode(r)?,
+                topic: Wire::decode(r)?,
+                member: Wire::decode(r)?,
+            },
+            15 => Request::Shutdown,
+            16 => Request::Positions { group: Wire::decode(r)?, topic: Wire::decode(r)? },
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
+        })
+    }
+}
+
+/// Broker → client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    Pong,
+    PubAck { partition: usize, offset: u64 },
+    PubBatchAck { acks: Vec<(usize, u64)> },
+    Generation(u64),
+    Records(Vec<Record>),
+    OffsetList(Vec<(u64, u64)>),
+    Stats(TopicStatsWire),
+    Names(Vec<String>),
+    Bool(bool),
+    Count(usize),
+    Err { code: u8, msg: String },
+}
+
+/// `TopicStats` mirror with Wire support.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopicStatsWire {
+    pub partitions: usize,
+    pub records: usize,
+    pub bytes: usize,
+    pub high_watermarks: Vec<u64>,
+    pub start_offsets: Vec<u64>,
+}
+
+crate::wire_struct!(TopicStatsWire {
+    partitions: usize,
+    records: usize,
+    bytes: usize,
+    high_watermarks: Vec<u64>,
+    start_offsets: Vec<u64>,
+});
+
+impl From<TopicStats> for TopicStatsWire {
+    fn from(s: TopicStats) -> Self {
+        Self {
+            partitions: s.partitions,
+            records: s.records,
+            bytes: s.bytes,
+            high_watermarks: s.high_watermarks,
+            start_offsets: s.start_offsets,
+        }
+    }
+}
+
+impl Wire for Response {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Response::Ok => w.put_u8(0),
+            Response::Pong => w.put_u8(1),
+            Response::PubAck { partition, offset } => {
+                w.put_u8(2);
+                partition.encode(w);
+                offset.encode(w);
+            }
+            Response::PubBatchAck { acks } => {
+                w.put_u8(3);
+                acks.encode(w);
+            }
+            Response::Generation(g) => {
+                w.put_u8(4);
+                g.encode(w);
+            }
+            Response::Records(rs) => {
+                w.put_u8(5);
+                rs.encode(w);
+            }
+            Response::OffsetList(os) => {
+                w.put_u8(6);
+                os.encode(w);
+            }
+            Response::Stats(s) => {
+                w.put_u8(7);
+                s.encode(w);
+            }
+            Response::Names(ns) => {
+                w.put_u8(8);
+                ns.encode(w);
+            }
+            Response::Bool(b) => {
+                w.put_u8(9);
+                b.encode(w);
+            }
+            Response::Count(c) => {
+                w.put_u8(10);
+                c.encode(w);
+            }
+            Response::Err { code, msg } => {
+                w.put_u8(255);
+                w.put_u8(*code);
+                msg.encode(w);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => Response::Ok,
+            1 => Response::Pong,
+            2 => Response::PubAck { partition: Wire::decode(r)?, offset: Wire::decode(r)? },
+            3 => Response::PubBatchAck { acks: Wire::decode(r)? },
+            4 => Response::Generation(Wire::decode(r)?),
+            5 => Response::Records(Wire::decode(r)?),
+            6 => Response::OffsetList(Wire::decode(r)?),
+            7 => Response::Stats(Wire::decode(r)?),
+            8 => Response::Names(Wire::decode(r)?),
+            9 => Response::Bool(Wire::decode(r)?),
+            10 => Response::Count(Wire::decode(r)?),
+            255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
+        })
+    }
+}
+
+/// Stable error codes for the wire (superset-safe mapping of `BrokerError`).
+pub fn error_code(e: &BrokerError) -> u8 {
+    match e {
+        BrokerError::UnknownTopic(_) => 1,
+        BrokerError::TopicExists(_) => 2,
+        BrokerError::BadPartition { .. } => 3,
+        BrokerError::UnknownGroup(_) => 4,
+        BrokerError::UnknownMember { .. } => 5,
+        BrokerError::Transport(_) => 6,
+    }
+}
+
+/// Rehydrate a `BrokerError` from a wire code + message.
+pub fn error_from_code(code: u8, msg: String) -> BrokerError {
+    match code {
+        1 => BrokerError::UnknownTopic(msg),
+        2 => BrokerError::TopicExists(msg),
+        4 => BrokerError::UnknownGroup(msg),
+        5 => BrokerError::UnknownMember { group: msg, member: String::new() },
+        3 => BrokerError::BadPartition { topic: msg, partition: 0, count: 0 },
+        _ => BrokerError::Transport(msg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Blob;
+
+    #[test]
+    fn request_roundtrip_all_variants() {
+        let reqs = vec![
+            Request::Ping,
+            Request::CreateTopic { name: "t".into(), partitions: 3 },
+            Request::EnsureTopic { name: "t".into(), partitions: 1 },
+            Request::DeleteTopic { name: "t".into() },
+            Request::TopicNames,
+            Request::TopicStats { name: "t".into() },
+            Request::Publish {
+                topic: "t".into(),
+                rec: ProducerRecord::with_key(vec![1], vec![2, 3]),
+            },
+            Request::PublishBatch {
+                topic: "t".into(),
+                recs: vec![ProducerRecord::new(vec![1]), ProducerRecord::new(vec![2])],
+            },
+            Request::JoinGroup {
+                group: "g".into(),
+                topic: "t".into(),
+                member: "m".into(),
+                mode: AssignmentMode::Partitioned,
+            },
+            Request::LeaveGroup { group: "g".into(), topic: "t".into(), member: "m".into() },
+            Request::Poll { group: "g".into(), topic: "t".into(), member: "m".into(), max: 7 },
+            Request::Commit { group: "g".into(), topic: "t".into(), commits: vec![(0, 5)] },
+            Request::DeleteRecords { topic: "t".into(), partition: 1, up_to: 9 },
+            Request::Offsets { topic: "t".into() },
+            Request::Positions { group: "g".into(), topic: "t".into() },
+            Request::CrashMember { group: "g".into(), topic: "t".into(), member: "m".into() },
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let back = Request::decode_exact(&req.encode_vec()).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_all_variants() {
+        let resps = vec![
+            Response::Ok,
+            Response::Pong,
+            Response::PubAck { partition: 1, offset: 2 },
+            Response::PubBatchAck { acks: vec![(0, 1), (1, 0)] },
+            Response::Generation(3),
+            Response::Records(vec![Record {
+                offset: 0,
+                timestamp_ms: 1,
+                key: None,
+                value: Blob(vec![1, 2]),
+            }]),
+            Response::OffsetList(vec![(0, 5)]),
+            Response::Stats(TopicStatsWire {
+                partitions: 2,
+                records: 3,
+                bytes: 4,
+                high_watermarks: vec![2, 1],
+                start_offsets: vec![0, 0],
+            }),
+            Response::Names(vec!["a".into()]),
+            Response::Bool(true),
+            Response::Count(9),
+            Response::Err { code: 1, msg: "t".into() },
+        ];
+        for resp in resps {
+            let back = Response::decode_exact(&resp.encode_vec()).unwrap();
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn error_codes_roundtrip_variant_kind() {
+        let e = BrokerError::UnknownTopic("x".into());
+        let back = error_from_code(error_code(&e), "x".into());
+        assert!(matches!(back, BrokerError::UnknownTopic(_)));
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(Request::decode_exact(&[200]).is_err());
+        assert!(Response::decode_exact(&[123]).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Records: the key-value payloads stored in partition logs.
+
+use crate::util::wire::Blob;
+use crate::wire_struct;
+
+/// A record as stored in (and fetched from) a partition log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Record {
+    /// Dense per-partition sequence number, assigned at append time.
+    pub offset: u64,
+    /// Publication time (ms since epoch), assigned at append time.
+    pub timestamp_ms: u64,
+    /// Optional partitioning key.
+    pub key: Option<Blob>,
+    /// Application payload.
+    pub value: Blob,
+}
+
+wire_struct!(Record {
+    offset: u64,
+    timestamp_ms: u64,
+    key: Option<Blob>,
+    value: Blob,
+});
+
+impl Record {
+    /// Total payload footprint in bytes (for metrics/backpressure).
+    pub fn payload_len(&self) -> usize {
+        self.value.0.len() + self.key.as_ref().map_or(0, |k| k.0.len())
+    }
+}
+
+/// A record as submitted by a producer (no offset/timestamp yet).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProducerRecord {
+    pub key: Option<Blob>,
+    pub value: Blob,
+}
+
+wire_struct!(ProducerRecord { key: Option<Blob>, value: Blob });
+
+impl ProducerRecord {
+    pub fn new(value: Vec<u8>) -> Self {
+        Self { key: None, value: Blob(value) }
+    }
+
+    pub fn with_key(key: Vec<u8>, value: Vec<u8>) -> Self {
+        Self { key: Some(Blob(key)), value: Blob(value) }
+    }
+}
+
+/// Wall-clock ms since the UNIX epoch (record timestamps).
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Wire;
+
+    #[test]
+    fn record_roundtrip() {
+        let r = Record {
+            offset: 9,
+            timestamp_ms: 123,
+            key: Some(Blob(vec![1])),
+            value: Blob(vec![2, 3]),
+        };
+        assert_eq!(Record::decode_exact(&r.encode_vec()).unwrap(), r);
+    }
+
+    #[test]
+    fn payload_len_counts_key_and_value() {
+        let r = Record {
+            offset: 0,
+            timestamp_ms: 0,
+            key: Some(Blob(vec![0; 3])),
+            value: Blob(vec![0; 5]),
+        };
+        assert_eq!(r.payload_len(), 8);
+        let r2 = Record { key: None, ..r };
+        assert_eq!(r2.payload_len(), 5);
+    }
+
+    #[test]
+    fn producer_record_constructors() {
+        assert!(ProducerRecord::new(vec![1]).key.is_none());
+        assert!(ProducerRecord::with_key(vec![0], vec![1]).key.is_some());
+    }
+}

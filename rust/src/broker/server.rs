@@ -1,0 +1,246 @@
+//! TCP front-end for [`BrokerCore`]: one thread per connection, framed
+//! request/response (see [`super::protocol`]).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use log::{debug, warn};
+
+use crate::util::wire::{recv_msg, send_msg};
+
+use super::embedded::BrokerCore;
+use super::protocol::{error_code, Request, Response};
+
+/// Handle to a running broker server.
+pub struct BrokerServer {
+    pub addr: SocketAddr,
+    core: Arc<BrokerCore>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl BrokerServer {
+    /// Bind `addr` (use `127.0.0.1:0` for an ephemeral port) and serve.
+    pub fn start(core: Arc<BrokerCore>, addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_core = Arc::clone(&core);
+        let accept_stop = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("broker-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(sock) => {
+                            let core = Arc::clone(&accept_core);
+                            let stop = Arc::clone(&accept_stop);
+                            std::thread::Builder::new()
+                                .name("broker-conn".into())
+                                .spawn(move || handle_conn(core, stop, sock))
+                                .expect("spawn conn thread");
+                        }
+                        Err(e) => {
+                            warn!("broker accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+            })?;
+        Ok(Self { addr: local, core, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The served core (embedded-side inspection in tests).
+    pub fn core(&self) -> Arc<BrokerCore> {
+        Arc::clone(&self.core)
+    }
+
+    /// Stop accepting and join the accept thread. Existing connection
+    /// threads exit when their peers close.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept with a no-op connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BrokerServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(core: Arc<BrokerCore>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
+    let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    debug!("broker conn from {peer}");
+    loop {
+        let req: Request = match recv_msg(&mut sock) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean close
+            Err(e) => {
+                debug!("broker conn {peer} read error: {e}");
+                break;
+            }
+        };
+        if matches!(req, Request::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            let _ = send_msg(&mut sock, &Response::Ok);
+            break;
+        }
+        let resp = dispatch(&core, req);
+        if let Err(e) = send_msg(&mut sock, &resp) {
+            debug!("broker conn {peer} write error: {e}");
+            break;
+        }
+    }
+}
+
+/// Map one request onto the core.
+pub fn dispatch(core: &BrokerCore, req: Request) -> Response {
+    use Request as Q;
+    use Response as A;
+    let to_err = |e: &super::embedded::BrokerError| A::Err { code: error_code(e), msg: e.to_string() };
+    match req {
+        Q::Ping => A::Pong,
+        Q::Shutdown => A::Ok,
+        Q::CreateTopic { name, partitions } => match core.create_topic(&name, partitions) {
+            Ok(()) => A::Ok,
+            Err(e) => to_err(&e),
+        },
+        Q::EnsureTopic { name, partitions } => {
+            core.ensure_topic(&name, partitions);
+            A::Ok
+        }
+        Q::DeleteTopic { name } => match core.delete_topic(&name) {
+            Ok(()) => A::Ok,
+            Err(e) => to_err(&e),
+        },
+        Q::TopicNames => A::Names(core.topic_names()),
+        Q::TopicStats { name } => match core.topic_stats(&name) {
+            Ok(s) => A::Stats(s.into()),
+            Err(e) => to_err(&e),
+        },
+        Q::Publish { topic, rec } => match core.publish(&topic, rec) {
+            Ok((partition, offset)) => A::PubAck { partition, offset },
+            Err(e) => to_err(&e),
+        },
+        Q::PublishBatch { topic, recs } => match core.publish_batch(&topic, recs) {
+            Ok(acks) => A::PubBatchAck { acks },
+            Err(e) => to_err(&e),
+        },
+        Q::JoinGroup { group, topic, member, mode } => {
+            match core.join_group(&group, &topic, &member, mode) {
+                Ok(g) => A::Generation(g),
+                Err(e) => to_err(&e),
+            }
+        }
+        Q::LeaveGroup { group, topic, member } => {
+            match core.leave_group(&group, &topic, &member) {
+                Ok(b) => A::Bool(b),
+                Err(e) => to_err(&e),
+            }
+        }
+        Q::Poll { group, topic, member, max } => match core.poll(&group, &topic, &member, max) {
+            // Wire responses must own their payloads (one copy at the TCP
+            // boundary; the embedded path stays zero-copy).
+            Ok(rs) => A::Records(rs.iter().map(|r| (**r).clone()).collect()),
+            Err(e) => to_err(&e),
+        },
+        Q::Commit { group, topic, commits } => match core.commit(&group, &topic, &commits) {
+            Ok(()) => A::Ok,
+            Err(e) => to_err(&e),
+        },
+        Q::DeleteRecords { topic, partition, up_to } => {
+            match core.delete_records(&topic, partition, up_to) {
+                Ok(n) => A::Count(n),
+                Err(e) => to_err(&e),
+            }
+        }
+        Q::Offsets { topic } => match core.offsets(&topic) {
+            Ok(os) => A::OffsetList(os),
+            Err(e) => to_err(&e),
+        },
+        Q::Positions { group, topic } => match core.positions(&group, &topic) {
+            Ok(os) => A::OffsetList(os),
+            Err(e) => to_err(&e),
+        },
+        Q::CrashMember { group, topic, member } => {
+            match core.crash_member(&group, &topic, &member) {
+                Ok(()) => A::Ok,
+                Err(e) => to_err(&e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::group::AssignmentMode;
+    use crate::broker::record::ProducerRecord;
+
+    #[test]
+    fn dispatch_covers_success_and_error() {
+        let core = BrokerCore::new();
+        assert_eq!(
+            dispatch(&core, Request::CreateTopic { name: "t".into(), partitions: 1 }),
+            Response::Ok
+        );
+        assert!(matches!(
+            dispatch(&core, Request::CreateTopic { name: "t".into(), partitions: 1 }),
+            Response::Err { code: 2, .. }
+        ));
+        assert!(matches!(
+            dispatch(
+                &core,
+                Request::Publish { topic: "t".into(), rec: ProducerRecord::new(vec![1]) }
+            ),
+            Response::PubAck { .. }
+        ));
+        assert!(matches!(
+            dispatch(
+                &core,
+                Request::JoinGroup {
+                    group: "g".into(),
+                    topic: "t".into(),
+                    member: "m".into(),
+                    mode: AssignmentMode::Shared,
+                }
+            ),
+            Response::Generation(_)
+        ));
+        match dispatch(
+            &core,
+            Request::Poll { group: "g".into(), topic: "t".into(), member: "m".into(), max: 10 },
+        ) {
+            Response::Records(rs) => assert_eq!(rs.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn server_starts_and_shuts_down() {
+        let core = BrokerCore::new();
+        let server = BrokerServer::start(core, "127.0.0.1:0").unwrap();
+        let addr = server.addr;
+        // Raw socket request.
+        let mut sock = TcpStream::connect(addr).unwrap();
+        send_msg(&mut sock, &Request::Ping).unwrap();
+        let resp: Option<Response> = recv_msg(&mut sock).unwrap();
+        assert_eq!(resp, Some(Response::Pong));
+        drop(sock);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,151 @@
+//! Topics: named sets of partitions plus the producer-side partitioner.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::partition::PartitionLog;
+use super::record::{ProducerRecord, Record};
+
+/// A topic with `n` independently-locked partitions.
+#[derive(Debug)]
+pub struct Topic {
+    pub name: String,
+    partitions: Vec<Mutex<PartitionLog>>,
+    /// Round-robin cursor for key-less records.
+    rr: AtomicU64,
+}
+
+impl Topic {
+    pub fn new(name: &str, partitions: usize) -> Self {
+        assert!(partitions > 0, "topic needs >= 1 partition");
+        Self {
+            name: name.to_string(),
+            partitions: (0..partitions).map(|_| Mutex::new(PartitionLog::new())).collect(),
+            rr: AtomicU64::new(0),
+        }
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// FNV-1a key hash → partition (stable across processes).
+    fn hash_key(key: &[u8]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in key {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    /// Partition selection: key hash when present, else round-robin.
+    pub fn pick_partition(&self, rec: &ProducerRecord) -> usize {
+        match &rec.key {
+            Some(k) => (Self::hash_key(&k.0) % self.partitions.len() as u64) as usize,
+            None => (self.rr.fetch_add(1, Ordering::Relaxed) % self.partitions.len() as u64) as usize,
+        }
+    }
+
+    /// Append to the chosen partition; returns (partition, offset).
+    pub fn publish(&self, rec: ProducerRecord) -> (usize, u64) {
+        let p = self.pick_partition(&rec);
+        let offset = self.partitions[p].lock().unwrap().append(rec);
+        (p, offset)
+    }
+
+    /// Append to an explicit partition; returns the offset.
+    pub fn publish_to(&self, partition: usize, rec: ProducerRecord) -> u64 {
+        self.partitions[partition].lock().unwrap().append(rec)
+    }
+
+    /// Fetch up to `max` records from a partition starting at `from`.
+    pub fn fetch(&self, partition: usize, from: u64, max: usize) -> Vec<Arc<Record>> {
+        self.partitions[partition].lock().unwrap().fetch(from, max)
+    }
+
+    /// High watermark of a partition.
+    pub fn high_watermark(&self, partition: usize) -> u64 {
+        self.partitions[partition].lock().unwrap().high_watermark()
+    }
+
+    /// Earliest retained offset of a partition.
+    pub fn start_offset(&self, partition: usize) -> u64 {
+        self.partitions[partition].lock().unwrap().start_offset()
+    }
+
+    /// Delete records below `up_to` in a partition (exactly-once support).
+    pub fn delete_records(&self, partition: usize, up_to: u64) -> usize {
+        self.partitions[partition].lock().unwrap().delete_up_to(up_to)
+    }
+
+    /// Total records retained across partitions.
+    pub fn total_records(&self) -> usize {
+        self.partitions.iter().map(|p| p.lock().unwrap().len()).sum()
+    }
+
+    /// Total payload bytes retained across partitions.
+    pub fn total_bytes(&self) -> usize {
+        self.partitions.iter().map(|p| p.lock().unwrap().retained_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Blob;
+
+    #[test]
+    fn round_robin_spreads_keyless_records() {
+        let t = Topic::new("t", 3);
+        for i in 0..9 {
+            t.publish(ProducerRecord::new(vec![i]));
+        }
+        for p in 0..3 {
+            assert_eq!(t.fetch(p, 0, 100).len(), 3, "partition {p}");
+        }
+    }
+
+    #[test]
+    fn keyed_records_stick_to_one_partition() {
+        let t = Topic::new("t", 4);
+        let mut first = None;
+        for i in 0..8 {
+            let (p, _) = t.publish(ProducerRecord::with_key(b"same-key".to_vec(), vec![i]));
+            match first {
+                None => first = Some(p),
+                Some(fp) => assert_eq!(p, fp),
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_keys_use_multiple_partitions() {
+        let t = Topic::new("t", 4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64u32 {
+            let rec = ProducerRecord {
+                key: Some(Blob(i.to_le_bytes().to_vec())),
+                value: Blob(vec![]),
+            };
+            seen.insert(t.pick_partition(&rec));
+        }
+        assert!(seen.len() > 1, "all keys hashed to one partition");
+    }
+
+    #[test]
+    fn per_partition_offsets_independent() {
+        let t = Topic::new("t", 2);
+        assert_eq!(t.publish_to(0, ProducerRecord::new(vec![0])), 0);
+        assert_eq!(t.publish_to(0, ProducerRecord::new(vec![1])), 1);
+        assert_eq!(t.publish_to(1, ProducerRecord::new(vec![2])), 0);
+        assert_eq!(t.high_watermark(0), 2);
+        assert_eq!(t.high_watermark(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1 partition")]
+    fn zero_partitions_rejected() {
+        Topic::new("t", 0);
+    }
+}

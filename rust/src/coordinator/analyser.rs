@@ -1,0 +1,332 @@
+//! The **Task Analyser**: registers tasks and derives data dependencies
+//! from parameter annotations (paper §4.5).
+//!
+//! Object accesses use COMPSs-style renaming: every write allocates a new
+//! version, so only true RAW dependencies create edges. File accesses
+//! serialise on the last writer of the path. **Stream accesses create no
+//! dependency edges** — the producer/consumer relation is recorded instead
+//! and handed to the scheduler for producer-priority and stream locality.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::dstream::api::StreamId;
+use crate::dstream::StreamHandle;
+
+use super::annotations::{Arg, TaskSpec};
+use super::data::{DataRegistry, Key};
+
+/// Task identifier (dense, assigned at submit order).
+pub type TaskId = u64;
+
+/// An argument with data versions resolved (what executors consume).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResolvedArg {
+    ObjIn(Key),
+    ObjOut(Key),
+    ObjInOut { read: Key, write: Key },
+    FileIn(String),
+    FileOut(String),
+    FileInOut(String),
+    StreamIn(StreamHandle),
+    StreamOut(StreamHandle),
+    Scalar(Vec<u8>),
+}
+
+/// A fully analysed task, ready for the graph/scheduler.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub id: TaskId,
+    pub name: String,
+    pub cores: usize,
+    pub explicit_priority: bool,
+    pub args: Vec<ResolvedArg>,
+    /// Streams this task publishes to.
+    pub produces: Vec<StreamId>,
+    /// Streams this task consumes from.
+    pub consumes: Vec<StreamId>,
+    /// Remaining execution attempts (fault tolerance).
+    pub attempts_left: u32,
+}
+
+impl TaskRecord {
+    /// Keys this task must read (inputs to localise before execution).
+    pub fn input_keys(&self) -> Vec<Key> {
+        let mut keys = Vec::new();
+        for a in &self.args {
+            match a {
+                ResolvedArg::ObjIn(k) => keys.push(*k),
+                ResolvedArg::ObjInOut { read, .. } => keys.push(*read),
+                _ => {}
+            }
+        }
+        keys
+    }
+
+    /// Keys this task will produce.
+    pub fn output_keys(&self) -> Vec<Key> {
+        let mut keys = Vec::new();
+        for a in &self.args {
+            match a {
+                ResolvedArg::ObjOut(k) => keys.push(*k),
+                ResolvedArg::ObjInOut { write, .. } => keys.push(*write),
+                _ => {}
+            }
+        }
+        keys
+    }
+
+    pub fn is_stream_producer(&self) -> bool {
+        !self.produces.is_empty()
+    }
+
+    pub fn is_stream_consumer(&self) -> bool {
+        !self.consumes.is_empty()
+    }
+}
+
+/// Producer/consumer relations per stream (scheduler input).
+#[derive(Debug, Default)]
+pub struct StreamRelations {
+    pub producers: HashMap<StreamId, HashSet<TaskId>>,
+    pub consumers: HashMap<StreamId, HashSet<TaskId>>,
+}
+
+/// The analyser: owns the data registry and stream relations.
+#[derive(Debug, Default)]
+pub struct TaskAnalyser {
+    pub data: DataRegistry,
+    pub streams: StreamRelations,
+    next_task: TaskId,
+}
+
+impl TaskAnalyser {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Next task id without consuming it (diagnostics).
+    pub fn peek_next_id(&self) -> TaskId {
+        self.next_task
+    }
+
+    /// Analyse a submission: resolve argument versions, derive the
+    /// dependency set, record stream relations.
+    pub fn analyse(&mut self, spec: TaskSpec, max_retries: u32) -> (TaskRecord, HashSet<TaskId>) {
+        let id = self.next_task;
+        self.analyse_with_id(id, spec, max_retries)
+    }
+
+    /// [`TaskAnalyser::analyse`] with a caller-assigned id (the runtime
+    /// pre-allocates ids so `submit` needs no dispatcher round-trip).
+    /// Ids must arrive in submission order.
+    pub fn analyse_with_id(
+        &mut self,
+        id: TaskId,
+        spec: TaskSpec,
+        max_retries: u32,
+    ) -> (TaskRecord, HashSet<TaskId>) {
+        debug_assert!(id >= self.next_task, "task ids must be monotonic");
+        self.next_task = id + 1;
+
+        let mut deps: HashSet<TaskId> = HashSet::new();
+        let mut args = Vec::with_capacity(spec.args.len());
+        let mut produces = Vec::new();
+        let mut consumes = Vec::new();
+
+        for arg in spec.args {
+            match arg {
+                Arg::In(d) => {
+                    let key = (d, self.data.latest(d));
+                    if let Some(w) = self.data.writer(key) {
+                        deps.insert(w);
+                    }
+                    args.push(ResolvedArg::ObjIn(key));
+                }
+                Arg::Out(d) => {
+                    let v = self.data.new_version(d, id);
+                    args.push(ResolvedArg::ObjOut((d, v)));
+                }
+                Arg::InOut(d) => {
+                    let read = (d, self.data.latest(d));
+                    if let Some(w) = self.data.writer(read) {
+                        deps.insert(w);
+                    }
+                    let v = self.data.new_version(d, id);
+                    args.push(ResolvedArg::ObjInOut { read, write: (d, v) });
+                }
+                Arg::FileIn(p) => {
+                    if let Some(w) = self.data.file_writer(&p) {
+                        deps.insert(w);
+                    }
+                    args.push(ResolvedArg::FileIn(p));
+                }
+                Arg::FileOut(p) => {
+                    // Serialise WAW on the same path.
+                    if let Some(prev) = self.data.file_write(&p, id) {
+                        deps.insert(prev);
+                    }
+                    args.push(ResolvedArg::FileOut(p));
+                }
+                Arg::FileInOut(p) => {
+                    if let Some(prev) = self.data.file_write(&p, id) {
+                        deps.insert(prev);
+                    }
+                    args.push(ResolvedArg::FileInOut(p));
+                }
+                Arg::StreamIn(h) => {
+                    // No dependency edge — record the relation only.
+                    self.streams.consumers.entry(h.id).or_default().insert(id);
+                    consumes.push(h.id);
+                    args.push(ResolvedArg::StreamIn(h));
+                }
+                Arg::StreamOut(h) => {
+                    self.streams.producers.entry(h.id).or_default().insert(id);
+                    produces.push(h.id);
+                    args.push(ResolvedArg::StreamOut(h));
+                }
+                Arg::Scalar(v) => args.push(ResolvedArg::Scalar(v)),
+            }
+        }
+        // A task never depends on itself (InOut after Out of same datum).
+        deps.remove(&id);
+
+        let record = TaskRecord {
+            id,
+            name: spec.name,
+            cores: spec.cores,
+            explicit_priority: spec.priority,
+            args,
+            produces,
+            consumes,
+            attempts_left: max_retries + 1,
+        };
+        (record, deps)
+    }
+
+    /// Forget a finished task from the stream relations (the scheduler no
+    /// longer needs it once completed).
+    pub fn retire_task(&mut self, task: TaskId) {
+        for set in self.streams.producers.values_mut() {
+            set.remove(&task);
+        }
+        for set in self.streams.consumers.values_mut() {
+            set.remove(&task);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dstream::{ConsumerMode, StreamType};
+
+    fn handle(id: StreamId) -> StreamHandle {
+        StreamHandle {
+            id,
+            alias: None,
+            stype: StreamType::Object,
+            partitions: 1,
+            base_dir: None,
+            mode: ConsumerMode::ExactlyOnce,
+        }
+    }
+
+    fn analyse(a: &mut TaskAnalyser, spec: TaskSpec) -> (TaskRecord, HashSet<TaskId>) {
+        a.analyse(spec, 0)
+    }
+
+    #[test]
+    fn raw_dependency_via_object() {
+        let mut a = TaskAnalyser::new();
+        let d = a.data.new_data();
+        let (producer, deps0) = analyse(&mut a, TaskSpec::new("w").arg(Arg::Out(d)));
+        assert!(deps0.is_empty());
+        let (_reader, deps1) = analyse(&mut a, TaskSpec::new("r").arg(Arg::In(d)));
+        assert_eq!(deps1.into_iter().collect::<Vec<_>>(), vec![producer.id]);
+    }
+
+    #[test]
+    fn renaming_breaks_waw_for_objects() {
+        let mut a = TaskAnalyser::new();
+        let d = a.data.new_data();
+        let (_w1, _) = analyse(&mut a, TaskSpec::new("w1").arg(Arg::Out(d)));
+        let (w2, deps) = analyse(&mut a, TaskSpec::new("w2").arg(Arg::Out(d)));
+        assert!(deps.is_empty(), "second writer gets a fresh version, no WAW edge");
+        // But a reader now depends on the *latest* writer only.
+        let (_r, deps) = analyse(&mut a, TaskSpec::new("r").arg(Arg::In(d)));
+        assert_eq!(deps.into_iter().collect::<Vec<_>>(), vec![w2.id]);
+    }
+
+    #[test]
+    fn inout_chains_serialise() {
+        let mut a = TaskAnalyser::new();
+        let d = a.data.new_data();
+        let (t1, _) = analyse(&mut a, TaskSpec::new("t1").arg(Arg::InOut(d)));
+        let (t2, deps2) = analyse(&mut a, TaskSpec::new("t2").arg(Arg::InOut(d)));
+        assert_eq!(deps2, HashSet::from([t1.id]));
+        let (_t3, deps3) = analyse(&mut a, TaskSpec::new("t3").arg(Arg::InOut(d)));
+        assert_eq!(deps3, HashSet::from([t2.id]));
+    }
+
+    #[test]
+    fn file_dependencies_serialise_on_path() {
+        let mut a = TaskAnalyser::new();
+        let (w, _) = analyse(&mut a, TaskSpec::new("w").arg(Arg::FileOut("/f".into())));
+        let (r, deps) = analyse(&mut a, TaskSpec::new("r").arg(Arg::FileIn("/f".into())));
+        assert_eq!(deps, HashSet::from([w.id]));
+        // Writer after reader serialises on previous writer (WAW).
+        let (_w2, deps) = analyse(&mut a, TaskSpec::new("w2").arg(Arg::FileOut("/f".into())));
+        assert_eq!(deps, HashSet::from([w.id]));
+        let _ = r;
+    }
+
+    #[test]
+    fn streams_create_no_edges_but_record_relations() {
+        let mut a = TaskAnalyser::new();
+        let h = handle(9);
+        let (p, deps_p) = analyse(&mut a, TaskSpec::new("prod").arg(Arg::StreamOut(h.clone())));
+        let (c, deps_c) = analyse(&mut a, TaskSpec::new("cons").arg(Arg::StreamIn(h)));
+        assert!(deps_p.is_empty());
+        assert!(deps_c.is_empty(), "stream params must not create dependencies");
+        assert!(a.streams.producers[&9].contains(&p.id));
+        assert!(a.streams.consumers[&9].contains(&c.id));
+        assert!(p.is_stream_producer());
+        assert!(c.is_stream_consumer());
+    }
+
+    #[test]
+    fn mixed_stream_and_file_params() {
+        // Paper Listing 7: one task with a stream and a file parameter.
+        let mut a = TaskAnalyser::new();
+        let (w, _) = analyse(&mut a, TaskSpec::new("w").arg(Arg::FileOut("/data".into())));
+        let (t, deps) = analyse(
+            &mut a,
+            TaskSpec::new("hybrid")
+                .arg(Arg::StreamOut(handle(1)))
+                .arg(Arg::FileIn("/data".into())),
+        );
+        assert_eq!(deps, HashSet::from([w.id]));
+        assert!(t.is_stream_producer());
+    }
+
+    #[test]
+    fn input_output_keys() {
+        let mut a = TaskAnalyser::new();
+        let d1 = a.data.new_data();
+        let d2 = a.data.new_data();
+        let (t, _) = analyse(
+            &mut a,
+            TaskSpec::new("t").arg(Arg::In(d1)).arg(Arg::Out(d2)).arg(Arg::InOut(d1)),
+        );
+        assert_eq!(t.input_keys(), vec![(d1, 0), (d1, 0)]);
+        assert_eq!(t.output_keys(), vec![(d2, 1), (d1, 1)]);
+    }
+
+    #[test]
+    fn retire_cleans_relations() {
+        let mut a = TaskAnalyser::new();
+        let (p, _) = analyse(&mut a, TaskSpec::new("p").arg(Arg::StreamOut(handle(1))));
+        a.retire_task(p.id);
+        assert!(!a.streams.producers[&1].contains(&p.id));
+    }
+}

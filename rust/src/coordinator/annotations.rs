@@ -1,0 +1,269 @@
+//! The task & parameter model — the programming-model surface.
+//!
+//! COMPSs declares tasks via Method/Parameter annotations (§3.1); here a
+//! [`TaskSpec`] plays that role: it names a registered task function and
+//! lists [`Arg`]s whose kind+direction drive dependency analysis, exactly
+//! like the paper's `Type.OBJECT/FILE/STREAM` × `Direction.IN/OUT/INOUT`
+//! (§4.4, Listing 6-7).
+
+use crate::dstream::StreamHandle;
+use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
+use crate::util::wire::Wire;
+
+/// Data access direction (paper §3.1 Parameter Annotations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    In,
+    Out,
+    InOut,
+}
+
+impl Wire for Direction {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            Direction::In => 0,
+            Direction::Out => 1,
+            Direction::InOut => 2,
+        });
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        let at = r.position();
+        match r.get_u8()? {
+            0 => Ok(Direction::In),
+            1 => Ok(Direction::Out),
+            2 => Ok(Direction::InOut),
+            tag => Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Direction" }),
+        }
+    }
+}
+
+/// Identifier of a runtime-managed datum (object). Allocated by
+/// [`super::api::CometRuntime::new_object`].
+pub type DataId = u64;
+
+/// One task argument. Objects/files carry dependency semantics; streams do
+/// not (the Hybrid-Workflow extension); scalars are immediate values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    /// Read an object produced earlier (or registered from the main code).
+    In(DataId),
+    /// Produce a new object.
+    Out(DataId),
+    /// Read-modify-write an object (new version).
+    InOut(DataId),
+    /// Read a file path (dependency on its last writer task, if any).
+    FileIn(String),
+    /// Write a file path.
+    FileOut(String),
+    /// Read-modify-write a file.
+    FileInOut(String),
+    /// Consume from a stream — **no dependency edge** (paper §4.5).
+    StreamIn(StreamHandle),
+    /// Produce into a stream — **no dependency edge**.
+    StreamOut(StreamHandle),
+    /// Immediate value (wire-encoded), copied into the task.
+    Scalar(Vec<u8>),
+}
+
+impl Arg {
+    /// Scalar helper: encode any `Wire` value.
+    pub fn scalar<T: Wire>(v: &T) -> Arg {
+        Arg::Scalar(v.encode_vec())
+    }
+
+    /// Is this a stream parameter?
+    pub fn is_stream(&self) -> bool {
+        matches!(self, Arg::StreamIn(_) | Arg::StreamOut(_))
+    }
+
+    /// Direction of the argument.
+    pub fn direction(&self) -> Direction {
+        match self {
+            Arg::In(_) | Arg::FileIn(_) | Arg::StreamIn(_) | Arg::Scalar(_) => Direction::In,
+            Arg::Out(_) | Arg::FileOut(_) | Arg::StreamOut(_) => Direction::Out,
+            Arg::InOut(_) | Arg::FileInOut(_) => Direction::InOut,
+        }
+    }
+}
+
+impl Wire for Arg {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Arg::In(d) => {
+                w.put_u8(0);
+                d.encode(w);
+            }
+            Arg::Out(d) => {
+                w.put_u8(1);
+                d.encode(w);
+            }
+            Arg::InOut(d) => {
+                w.put_u8(2);
+                d.encode(w);
+            }
+            Arg::FileIn(p) => {
+                w.put_u8(3);
+                p.encode(w);
+            }
+            Arg::FileOut(p) => {
+                w.put_u8(4);
+                p.encode(w);
+            }
+            Arg::FileInOut(p) => {
+                w.put_u8(5);
+                p.encode(w);
+            }
+            Arg::StreamIn(h) => {
+                w.put_u8(6);
+                h.encode(w);
+            }
+            Arg::StreamOut(h) => {
+                w.put_u8(7);
+                h.encode(w);
+            }
+            Arg::Scalar(v) => {
+                w.put_u8(8);
+                v.encode(w);
+            }
+        }
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => Arg::In(Wire::decode(r)?),
+            1 => Arg::Out(Wire::decode(r)?),
+            2 => Arg::InOut(Wire::decode(r)?),
+            3 => Arg::FileIn(Wire::decode(r)?),
+            4 => Arg::FileOut(Wire::decode(r)?),
+            5 => Arg::FileInOut(Wire::decode(r)?),
+            6 => Arg::StreamIn(Wire::decode(r)?),
+            7 => Arg::StreamOut(Wire::decode(r)?),
+            8 => Arg::Scalar(Wire::decode(r)?),
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Arg" }),
+        })
+    }
+}
+
+/// A task invocation: registered function name + arguments + constraints.
+///
+/// The `cores` constraint mirrors the paper's
+/// `@constraint(computing_units=...)` (Listing 8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub name: String,
+    pub args: Vec<Arg>,
+    /// Core slots the task occupies on its worker.
+    pub cores: usize,
+    /// Optional explicit priority bump (producer priority is automatic).
+    pub priority: bool,
+}
+
+impl TaskSpec {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), args: Vec::new(), cores: 1, priority: false }
+    }
+
+    pub fn arg(mut self, a: Arg) -> Self {
+        self.args.push(a);
+        self
+    }
+
+    pub fn args(mut self, args: impl IntoIterator<Item = Arg>) -> Self {
+        self.args.extend(args);
+        self
+    }
+
+    pub fn cores(mut self, n: usize) -> Self {
+        assert!(n > 0, "a task needs at least one core");
+        self.cores = n;
+        self
+    }
+
+    pub fn priority(mut self) -> Self {
+        self.priority = true;
+        self
+    }
+
+    /// Does this task produce into any stream? (⇒ producer priority)
+    pub fn is_stream_producer(&self) -> bool {
+        self.args.iter().any(|a| matches!(a, Arg::StreamOut(_)))
+    }
+
+    /// Does this task consume from any stream?
+    pub fn is_stream_consumer(&self) -> bool {
+        self.args.iter().any(|a| matches!(a, Arg::StreamIn(_)))
+    }
+}
+
+impl Wire for TaskSpec {
+    fn encode(&self, w: &mut ByteWriter) {
+        self.name.encode(w);
+        self.args.encode(w);
+        self.cores.encode(w);
+        self.priority.encode(w);
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        Ok(TaskSpec {
+            name: Wire::decode(r)?,
+            args: Wire::decode(r)?,
+            cores: Wire::decode(r)?,
+            priority: Wire::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dstream::{ConsumerMode, StreamType};
+
+    fn handle() -> StreamHandle {
+        StreamHandle {
+            id: 3,
+            alias: None,
+            stype: StreamType::Object,
+            partitions: 2,
+            base_dir: None,
+            mode: ConsumerMode::ExactlyOnce,
+        }
+    }
+
+    #[test]
+    fn spec_builder_and_flags() {
+        let spec = TaskSpec::new("simulation")
+            .arg(Arg::StreamOut(handle()))
+            .arg(Arg::scalar(&5u64))
+            .cores(48);
+        assert!(spec.is_stream_producer());
+        assert!(!spec.is_stream_consumer());
+        assert_eq!(spec.cores, 48);
+        assert_eq!(spec.args.len(), 2);
+    }
+
+    #[test]
+    fn arg_directions() {
+        assert_eq!(Arg::In(1).direction(), Direction::In);
+        assert_eq!(Arg::Out(1).direction(), Direction::Out);
+        assert_eq!(Arg::InOut(1).direction(), Direction::InOut);
+        assert_eq!(Arg::StreamOut(handle()).direction(), Direction::Out);
+        assert_eq!(Arg::Scalar(vec![]).direction(), Direction::In);
+        assert!(Arg::StreamIn(handle()).is_stream());
+        assert!(!Arg::FileIn("x".into()).is_stream());
+    }
+
+    #[test]
+    fn spec_wire_roundtrip() {
+        let spec = TaskSpec::new("t")
+            .arg(Arg::In(1))
+            .arg(Arg::FileOut("/tmp/f".into()))
+            .arg(Arg::StreamIn(handle()))
+            .cores(2);
+        assert_eq!(TaskSpec::decode_exact(&spec.encode_vec()).unwrap(), spec);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one core")]
+    fn zero_cores_rejected() {
+        TaskSpec::new("t").cores(0);
+    }
+}

@@ -1,0 +1,588 @@
+//! `CometRuntime`: the public facade of the task-based runtime — the role
+//! COMPSs's master process plays in the paper.
+//!
+//! Building a runtime spawns the dispatcher thread, the in-process workers
+//! (each with its own DistroStream identity), the embedded DistroStream
+//! Server + broker (Fig 8's deployment, collapsed into one process) and —
+//! optionally — the PJRT model zoo shared by all workers.
+//!
+//! ```no_run
+//! use hybridws::coordinator::prelude::*;
+//!
+//! register_task_fn("hello", |ctx| {
+//!     ctx.set_output(0, b"hi".to_vec());
+//!     Ok(())
+//! });
+//! let rt = CometRuntime::builder().workers(&[4]).build().unwrap();
+//! let out = rt.new_object();
+//! rt.submit(TaskSpec::new("hello").arg(Arg::Out(out.id()))).unwrap();
+//! assert_eq!(rt.wait_on(&out).unwrap().as_slice(), b"hi");
+//! rt.shutdown().unwrap();
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::broker::BrokerCore;
+use crate::dstream::{
+    ConsumerMode, DistroStreamHub, FileDistroStream, ObjectDistroStream, StreamItem,
+    StreamRegistry,
+};
+use crate::runtime::{find_artifacts_dir, ModelZoo};
+use crate::util::timeutil::TimeScale;
+
+use super::analyser::TaskId;
+use super::annotations::{DataId, TaskSpec};
+use super::data::WorkerId;
+use super::dispatcher::{self, DispatcherConfig, Event, RuntimeStats};
+use super::metrics::MetricsRegistry;
+use super::scheduler::SchedulerConfig;
+use super::tracing::TraceLog;
+use super::remote::RemoteWorker;
+use super::worker::{FailPlan, LocalWorker, TransferModel, WorkerHandle};
+use crate::broker::server::BrokerServer;
+use crate::dstream::server::DistroStreamServer;
+
+/// Handle to a runtime-managed object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DataRef(DataId);
+
+impl DataRef {
+    pub fn id(&self) -> DataId {
+        self.0
+    }
+}
+
+/// Builder for [`CometRuntime`].
+pub struct CometBuilder {
+    worker_slots: Vec<usize>,
+    scheduler: SchedulerConfig,
+    max_retries: u32,
+    scale: TimeScale,
+    transfer: TransferModel,
+    load_models: bool,
+    name: String,
+    /// Remote worker endpoints: (addr, slots).
+    remote_workers: Vec<(String, usize)>,
+}
+
+impl Default for CometBuilder {
+    fn default() -> Self {
+        Self {
+            worker_slots: vec![4],
+            scheduler: SchedulerConfig::default(),
+            max_retries: 2,
+            scale: TimeScale::from_env(),
+            transfer: TransferModel::default(),
+            load_models: false,
+            name: "comet".into(),
+            remote_workers: Vec::new(),
+        }
+    }
+}
+
+impl CometBuilder {
+    /// Core slots per worker, e.g. `&[36, 48]` for the paper's §6.2 layout.
+    pub fn workers(mut self, slots: &[usize]) -> Self {
+        assert!(!slots.is_empty(), "need at least one worker");
+        self.worker_slots = slots.to_vec();
+        self
+    }
+
+    pub fn scheduler(mut self, cfg: SchedulerConfig) -> Self {
+        self.scheduler = cfg;
+        self
+    }
+
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.max_retries = n;
+        self
+    }
+
+    /// Paper-time scaling for `sleep_paper_ms` task bodies.
+    pub fn scale(mut self, scale: TimeScale) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Simulated network bandwidth for input transfers.
+    pub fn bandwidth_mbps(mut self, mbps: f64) -> Self {
+        self.transfer = TransferModel { bandwidth_mbps: Some(mbps) };
+        self
+    }
+
+    /// Load the AOT artifacts (PJRT) so tasks can call `ctx.models()`.
+    pub fn with_models(mut self) -> Self {
+        self.load_models = true;
+        self
+    }
+
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Attach a remote worker process (started with `hybridws worker`)
+    /// listening at `addr` with `slots` core slots. When any remote worker
+    /// is attached the builder also exposes the DistroStream Server and the
+    /// broker over TCP so the remote side can reach them.
+    pub fn remote_worker(mut self, addr: &str, slots: usize) -> Self {
+        self.remote_workers.push((addr.to_string(), slots));
+        self
+    }
+
+    pub fn build(self) -> Result<CometRuntime> {
+        crate::util::logging::init();
+        // Deployment (paper Fig 8): master spawns the DistroStream Server
+        // and the backend; every worker gets a client with its own identity.
+        let (master_hub, registry, broker) =
+            DistroStreamHub::embedded(&format!("{}-master", self.name));
+
+        let zoo = if self.load_models {
+            let dir = find_artifacts_dir()
+                .ok_or_else(|| anyhow!("artifacts not found — run `make artifacts`"))?;
+            Some(Arc::new(ModelZoo::load(&dir)?))
+        } else {
+            None
+        };
+
+        let metrics = Arc::new(MetricsRegistry::new());
+        let trace = Arc::new(TraceLog::new());
+        let fail_plan = Arc::new(FailPlan::default());
+        let (tx, rx) = mpsc::channel::<Event>();
+
+        let mut hubs: Vec<Arc<DistroStreamHub>> = vec![Arc::clone(&master_hub)];
+        let workers: Vec<Arc<LocalWorker>> = self
+            .worker_slots
+            .iter()
+            .enumerate()
+            .map(|(i, &slots)| {
+                let hub = DistroStreamHub::attach_embedded(
+                    &format!("{}-worker{i}", self.name),
+                    &registry,
+                    &broker,
+                );
+                hubs.push(Arc::clone(&hub));
+                LocalWorker::new(
+                    i,
+                    slots,
+                    hub,
+                    zoo.clone(),
+                    Arc::clone(&trace),
+                    Arc::clone(&metrics),
+                    tx.clone(),
+                    self.scale,
+                    self.transfer,
+                    Arc::clone(&fail_plan),
+                )
+            })
+            .collect();
+
+        // Remote workers: expose the control planes over TCP, then connect.
+        let mut servers = Vec::new();
+        let mut handles: Vec<Arc<dyn WorkerHandle>> =
+            workers.iter().map(|w| Arc::clone(w) as Arc<dyn WorkerHandle>).collect();
+        if !self.remote_workers.is_empty() {
+            let broker_srv = BrokerServer::start(Arc::clone(&broker), "127.0.0.1:0")?;
+            let ds_srv = DistroStreamServer::start_with(Arc::clone(&registry), "127.0.0.1:0")?;
+            let broker_addr = broker_srv.addr.to_string();
+            let ds_addr = ds_srv.addr.to_string();
+            for (addr, slots) in &self.remote_workers {
+                let id = handles.len();
+                let rw = RemoteWorker::connect(
+                    id,
+                    *slots,
+                    addr,
+                    &ds_addr,
+                    &broker_addr,
+                    self.scale,
+                    self.load_models,
+                    tx.clone(),
+                )?;
+                handles.push(rw as Arc<dyn WorkerHandle>);
+            }
+            servers.push(Servers { _broker: broker_srv, _ds: ds_srv });
+        }
+
+        let max_task_cores =
+            handles.iter().map(|h| h.slot_count()).max().unwrap_or(0);
+        let cfg = DispatcherConfig { scheduler: self.scheduler, max_retries: self.max_retries };
+        let d_workers = handles;
+        let d_metrics = Arc::clone(&metrics);
+        let dispatcher = std::thread::Builder::new()
+            .name("dispatcher".into())
+            .spawn(move || dispatcher::run(rx, d_workers, d_metrics, cfg))?;
+
+        Ok(CometRuntime {
+            tx,
+            next_task: AtomicU64::new(0),
+            max_task_cores,
+            dispatcher: Mutex::new(Some(dispatcher)),
+            hub: master_hub,
+            registry,
+            broker,
+            zoo,
+            metrics,
+            trace,
+            fail_plan,
+            workers,
+            hubs,
+            _servers: servers,
+            scale: self.scale,
+        })
+    }
+}
+
+/// Keeps the TCP control planes alive for remote-worker deployments.
+struct Servers {
+    _broker: BrokerServer,
+    _ds: DistroStreamServer,
+}
+
+/// The runtime handle used by application main code.
+pub struct CometRuntime {
+    tx: mpsc::Sender<Event>,
+    /// Pre-allocated task ids (submit is fire-and-forget; the dispatcher's
+    /// analyser consumes ids in submission order).
+    next_task: AtomicU64,
+    /// Largest worker slot count (local submit validation).
+    max_task_cores: usize,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+    hub: Arc<DistroStreamHub>,
+    registry: Arc<Mutex<StreamRegistry>>,
+    broker: Arc<BrokerCore>,
+    zoo: Option<Arc<ModelZoo>>,
+    metrics: Arc<MetricsRegistry>,
+    trace: Arc<TraceLog>,
+    fail_plan: Arc<FailPlan>,
+    workers: Vec<Arc<LocalWorker>>,
+    /// Every hub in this process (master + workers) — deployment-wide knobs.
+    hubs: Vec<Arc<DistroStreamHub>>,
+    _servers: Vec<Servers>,
+    scale: TimeScale,
+}
+
+impl CometRuntime {
+    pub fn builder() -> CometBuilder {
+        CometBuilder::default()
+    }
+
+    fn rpc<T>(&self, make: impl FnOnce(mpsc::Sender<T>) -> Event) -> Result<T> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(make(tx)).map_err(|_| anyhow!("runtime is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("dispatcher dropped the reply"))
+    }
+
+    // ---- data ------------------------------------------------------------
+
+    /// Allocate an object that a task will produce.
+    pub fn new_object(&self) -> DataRef {
+        DataRef(self.rpc(|reply| Event::NewData { reply }).expect("runtime alive"))
+    }
+
+    /// Register a main-code value as an object.
+    pub fn register_object(&self, value: Vec<u8>) -> DataRef {
+        DataRef(self.rpc(|reply| Event::RegisterData { value, reply }).expect("runtime alive"))
+    }
+
+    /// Typed variant of [`CometRuntime::register_object`].
+    pub fn register_object_as<T: crate::util::wire::Wire>(&self, v: &T) -> DataRef {
+        self.register_object(v.encode_vec())
+    }
+
+    // ---- tasks -------------------------------------------------------------
+
+    /// Submit a task; returns its id immediately (execution is async,
+    /// submission is fire-and-forget — no dispatcher round-trip).
+    pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        if spec.cores > self.max_task_cores {
+            anyhow::bail!(
+                "task {:?} needs {} cores but the largest worker has {}",
+                spec.name,
+                spec.cores,
+                self.max_task_cores
+            );
+        }
+        let id = self.next_task.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Event::Submit { id, spec }).map_err(|_| anyhow!("runtime is shut down"))?;
+        Ok(id)
+    }
+
+    /// Wait for (and fetch) the latest version of an object — the paper's
+    /// `compss_wait_on`.
+    pub fn wait_on(&self, d: &DataRef) -> Result<Arc<Vec<u8>>> {
+        self.rpc(|reply| Event::WaitData { data: d.0, reply })?.map_err(|e| anyhow!(e))
+    }
+
+    /// Typed variant of [`CometRuntime::wait_on`].
+    pub fn wait_on_as<T: crate::util::wire::Wire>(&self, d: &DataRef) -> Result<T> {
+        let bytes = self.wait_on(d)?;
+        T::decode_exact(&bytes).map_err(|e| anyhow!("decode: {e}"))
+    }
+
+    /// Wait until the last writer task of `path` completed — the paper's
+    /// `compss_wait_on_file` / `compss_open`.
+    pub fn wait_on_file(&self, path: &str) -> Result<()> {
+        self.rpc(|reply| Event::WaitFile { path: path.to_string(), reply })?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Wait for every submitted task — the paper's `compss_barrier`.
+    pub fn barrier(&self) -> Result<()> {
+        self.rpc(|reply| Event::Barrier { reply })
+    }
+
+    // ---- streams --------------------------------------------------------------
+
+    /// The master's DistroStream hub.
+    pub fn hub(&self) -> &Arc<DistroStreamHub> {
+        &self.hub
+    }
+
+    /// Deployment-wide per-poll record cap (the §6.4 balanced-poll policy);
+    /// applies to the master and every in-process worker hub.
+    pub fn set_max_poll_records(&self, n: usize) {
+        for h in &self.hubs {
+            h.set_max_poll_records(n);
+        }
+    }
+
+    /// Create an object stream from the main code.
+    pub fn object_stream<T: StreamItem>(&self, alias: Option<&str>) -> Result<ObjectDistroStream<T>> {
+        self.hub.object_stream(alias).map_err(|e| anyhow!(e.to_string()))
+    }
+
+    /// Create an object stream with explicit partitions and consumer mode.
+    pub fn object_stream_with<T: StreamItem>(
+        &self,
+        alias: Option<&str>,
+        partitions: usize,
+        mode: ConsumerMode,
+    ) -> Result<ObjectDistroStream<T>> {
+        self.hub.object_stream_with(alias, partitions, mode).map_err(|e| anyhow!(e.to_string()))
+    }
+
+    /// Create a file stream over `base_dir` from the main code.
+    pub fn file_stream(&self, alias: Option<&str>, base_dir: &str) -> Result<FileDistroStream> {
+        self.hub.file_stream(alias, base_dir).map_err(|e| anyhow!(e.to_string()))
+    }
+
+    // ---- introspection -----------------------------------------------------------
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.rpc(|reply| Event::Stats { reply }).unwrap_or_default()
+    }
+
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    pub fn trace(&self) -> &Arc<TraceLog> {
+        &self.trace
+    }
+
+    pub fn models(&self) -> Option<&Arc<ModelZoo>> {
+        self.zoo.as_ref()
+    }
+
+    pub fn scale(&self) -> TimeScale {
+        self.scale
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Shared broker core (diagnostics in tests/benches).
+    pub fn broker(&self) -> &Arc<BrokerCore> {
+        &self.broker
+    }
+
+    /// Shared stream registry (diagnostics in tests/benches).
+    pub fn stream_registry(&self) -> &Arc<Mutex<StreamRegistry>> {
+        &self.registry
+    }
+
+    // ---- fault injection -------------------------------------------------------
+
+    /// Force the next `n` attempts of task `name` to fail.
+    pub fn inject_failure(&self, name: &str, n: u32) {
+        self.fail_plan.fail_next(name, n);
+    }
+
+    /// Simulate the death of worker `w` (its running tasks resubmit).
+    pub fn kill_worker(&self, w: WorkerId) -> Result<()> {
+        self.tx.send(Event::KillWorker { worker: w }).map_err(|_| anyhow!("runtime shut down"))
+    }
+
+    // ---- lifecycle ------------------------------------------------------------------
+
+    /// Drain outstanding work and stop the dispatcher.
+    pub fn shutdown(&self) -> Result<()> {
+        self.barrier().ok();
+        self.tx.send(Event::Shutdown).ok();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            h.join().map_err(|_| anyhow!("dispatcher panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for CometRuntime {
+    fn drop(&mut self) {
+        self.tx.send(Event::Shutdown).ok();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::annotations::Arg;
+    use crate::coordinator::executor::register_task_fn;
+
+    fn rt() -> CometRuntime {
+        CometRuntime::builder().workers(&[2, 2]).scale(TimeScale::IDENTITY).build().unwrap()
+    }
+
+    #[test]
+    fn object_task_roundtrip() {
+        register_task_fn("api-add", |ctx| {
+            let a: u64 = ctx.obj_in_as(0)?;
+            let b: u64 = ctx.scalar(1)?;
+            ctx.set_output_as(2, &(a + b));
+            Ok(())
+        });
+        let rt = rt();
+        let a = rt.register_object_as(&40u64);
+        let out = rt.new_object();
+        rt.submit(
+            TaskSpec::new("api-add").arg(Arg::In(a.id())).arg(Arg::scalar(&2u64)).arg(Arg::Out(out.id())),
+        )
+        .unwrap();
+        let v: u64 = rt.wait_on_as(&out).unwrap();
+        assert_eq!(v, 42);
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn chain_of_tasks_respects_dependencies() {
+        register_task_fn("api-inc", |ctx| {
+            let v: u64 = ctx.obj_in_as(0)?;
+            ctx.set_output_as(0, &(v + 1));
+            Ok(())
+        });
+        let rt = rt();
+        let d = rt.register_object_as(&0u64);
+        for _ in 0..10 {
+            rt.submit(TaskSpec::new("api-inc").arg(Arg::InOut(d.id()))).unwrap();
+        }
+        let v: u64 = rt.wait_on_as(&d).unwrap();
+        assert_eq!(v, 10, "InOut chain must serialise");
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn fan_out_runs_in_parallel() {
+        register_task_fn("api-sleepy", |ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            ctx.set_output_as(0, &1u64);
+            Ok(())
+        });
+        let rt = rt();
+        let outs: Vec<DataRef> = (0..4).map(|_| rt.new_object()).collect();
+        let t0 = std::time::Instant::now();
+        for o in &outs {
+            rt.submit(TaskSpec::new("api-sleepy").arg(Arg::Out(o.id()))).unwrap();
+        }
+        rt.barrier().unwrap();
+        let elapsed = t0.elapsed();
+        // 4 tasks × 30 ms on 4 total slots → ~30 ms, far below serial 120 ms.
+        assert!(elapsed < std::time::Duration::from_millis(100), "took {elapsed:?}");
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn retry_recovers_from_injected_failures() {
+        register_task_fn("api-flaky", |ctx| {
+            ctx.set_output_as(0, &7u64);
+            Ok(())
+        });
+        let rt = CometRuntime::builder().workers(&[2]).max_retries(2).build().unwrap();
+        rt.inject_failure("api-flaky", 2);
+        let out = rt.new_object();
+        rt.submit(TaskSpec::new("api-flaky").arg(Arg::Out(out.id()))).unwrap();
+        let v: u64 = rt.wait_on_as(&out).unwrap();
+        assert_eq!(v, 7);
+        let m = rt.metrics().task(0).unwrap();
+        assert_eq!(m.attempts, 3, "two failures + one success");
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn permanent_failure_propagates_to_wait_on() {
+        register_task_fn("api-doomed", |ctx| {
+            ctx.set_output_as(0, &0u64);
+            Ok(())
+        });
+        let rt = CometRuntime::builder().workers(&[2]).max_retries(0).build().unwrap();
+        rt.inject_failure("api-doomed", 1);
+        let out = rt.new_object();
+        rt.submit(TaskSpec::new("api-doomed").arg(Arg::Out(out.id()))).unwrap();
+        assert!(rt.wait_on(&out).is_err());
+        let stats = rt.stats();
+        assert_eq!(stats.failed, 1);
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn oversized_task_is_rejected_cleanly() {
+        let rt = rt();
+        let err = rt.submit(TaskSpec::new("whatever").cores(99)).unwrap_err();
+        assert!(err.to_string().contains("99"));
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn worker_death_resubmits_tasks() {
+        register_task_fn("api-slow", |ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            ctx.set_output_as(0, &ctx.worker_id.try_into().unwrap_or(0u64));
+            Ok(())
+        });
+        let rt = rt();
+        let outs: Vec<DataRef> = (0..4).map(|_| rt.new_object()).collect();
+        for o in &outs {
+            rt.submit(TaskSpec::new("api-slow").arg(Arg::Out(o.id()))).unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        rt.kill_worker(0).unwrap();
+        for o in &outs {
+            let v: u64 = rt.wait_on_as(o).unwrap();
+            assert_eq!(v, 1, "all tasks must end on the surviving worker");
+        }
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_reflect_lifecycle() {
+        register_task_fn("api-quick", |ctx| {
+            ctx.set_output_as(0, &1u64);
+            Ok(())
+        });
+        let rt = rt();
+        let o = rt.new_object();
+        rt.submit(TaskSpec::new("api-quick").arg(Arg::Out(o.id()))).unwrap();
+        rt.barrier().unwrap();
+        let s = rt.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.active, 0);
+        rt.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,221 @@
+//! The data registry: versioned objects/files, values and locations.
+//!
+//! COMPSs renames every written datum so independent versions coexist
+//! (write-after-write never blocks readers of older versions). A datum is
+//! identified by `(DataId, Version)`; the registry tracks, per version:
+//! the producing task, the concrete value (once available) and the set of
+//! workers holding a replica (the locality information the scheduler uses).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::annotations::DataId;
+
+/// Monotonic version of a datum (bumped by every Out/InOut access).
+pub type Version = u32;
+
+/// Worker identifier (index into the runtime's worker table; the master is
+/// [`MASTER`]).
+pub type WorkerId = usize;
+
+/// Location id of the master process.
+pub const MASTER: WorkerId = usize::MAX;
+
+/// A concrete datum version key.
+pub type Key = (DataId, Version);
+
+#[derive(Debug, Default)]
+struct Datum {
+    /// Latest version number allocated.
+    latest: Version,
+    /// Task that produces each version (None = registered by main code).
+    writer: HashMap<Version, Option<u64>>,
+    /// Values by version, once produced.
+    values: HashMap<Version, Arc<Vec<u8>>>,
+    /// Replica locations by version.
+    locations: HashMap<Version, Vec<WorkerId>>,
+}
+
+/// Registry of all runtime-managed data.
+#[derive(Debug, Default)]
+pub struct DataRegistry {
+    next_id: DataId,
+    data: HashMap<DataId, Datum>,
+    /// Last writer task per file path (file dependency analysis).
+    file_writers: HashMap<String, u64>,
+}
+
+impl DataRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a fresh datum id (version 0, no value yet).
+    pub fn new_data(&mut self) -> DataId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.data.insert(id, Datum::default());
+        id
+    }
+
+    /// Register a main-code value for a fresh datum (version 0 at master).
+    pub fn register_value(&mut self, value: Vec<u8>) -> DataId {
+        let id = self.new_data();
+        let d = self.data.get_mut(&id).unwrap();
+        d.writer.insert(0, None);
+        d.values.insert(0, Arc::new(value));
+        d.locations.insert(0, vec![MASTER]);
+        id
+    }
+
+    /// Latest version of `id` (0 if untouched).
+    pub fn latest(&self, id: DataId) -> Version {
+        self.data.get(&id).map(|d| d.latest).unwrap_or(0)
+    }
+
+    /// Bump the version for a write by `task`; returns the new version.
+    pub fn new_version(&mut self, id: DataId, task: u64) -> Version {
+        let d = self.data.entry(id).or_default();
+        d.latest += 1;
+        let v = d.latest;
+        d.writer.insert(v, Some(task));
+        v
+    }
+
+    /// The task writing `key` (None for main-code data or unknown keys).
+    pub fn writer(&self, key: Key) -> Option<u64> {
+        self.data.get(&key.0).and_then(|d| d.writer.get(&key.1)).copied().flatten()
+    }
+
+    /// Store a produced value (at `location`).
+    pub fn put_value(&mut self, key: Key, value: Arc<Vec<u8>>, location: WorkerId) {
+        let d = self.data.entry(key.0).or_default();
+        d.values.insert(key.1, value);
+        d.locations.entry(key.1).or_default().push(location);
+    }
+
+    /// Add a replica location (a worker received the value for a task).
+    pub fn add_location(&mut self, key: Key, location: WorkerId) {
+        let d = self.data.entry(key.0).or_default();
+        let locs = d.locations.entry(key.1).or_default();
+        if !locs.contains(&location) {
+            locs.push(location);
+        }
+    }
+
+    /// Forget every replica hosted by `worker` (worker death).
+    pub fn drop_worker(&mut self, worker: WorkerId) {
+        for d in self.data.values_mut() {
+            for locs in d.locations.values_mut() {
+                locs.retain(|&w| w != worker);
+            }
+        }
+    }
+
+    /// Value of `key`, if produced.
+    pub fn value(&self, key: Key) -> Option<Arc<Vec<u8>>> {
+        self.data.get(&key.0).and_then(|d| d.values.get(&key.1)).cloned()
+    }
+
+    /// Replica locations of `key`.
+    pub fn locations(&self, key: Key) -> &[WorkerId] {
+        self.data
+            .get(&key.0)
+            .and_then(|d| d.locations.get(&key.1))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Is `key` available somewhere?
+    pub fn is_available(&self, key: Key) -> bool {
+        self.data.get(&key.0).map(|d| d.values.contains_key(&key.1)).unwrap_or(false)
+    }
+
+    /// Drop all versions of `id` except the latest (garbage collection after
+    /// task completion, mirroring COMPSs's data clean-up).
+    pub fn gc_old_versions(&mut self, id: DataId) -> usize {
+        let Some(d) = self.data.get_mut(&id) else { return 0 };
+        let latest = d.latest;
+        let before = d.values.len();
+        d.values.retain(|&v, _| v == latest);
+        d.locations.retain(|&v, _| v == latest);
+        d.writer.retain(|&v, _| v == latest);
+        before.saturating_sub(d.values.len())
+    }
+
+    // ---- files -----------------------------------------------------------
+
+    /// Record `task` as the last writer of `path`; returns the previous
+    /// writer (the dependency for readers/writers of the same path).
+    pub fn file_write(&mut self, path: &str, task: u64) -> Option<u64> {
+        self.file_writers.insert(path.to_string(), task)
+    }
+
+    /// Current last writer of `path`.
+    pub fn file_writer(&self, path: &str) -> Option<u64> {
+        self.file_writers.get(path).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_are_monotonic_per_datum() {
+        let mut r = DataRegistry::new();
+        let id = r.new_data();
+        assert_eq!(r.latest(id), 0);
+        assert_eq!(r.new_version(id, 1), 1);
+        assert_eq!(r.new_version(id, 2), 2);
+        assert_eq!(r.latest(id), 2);
+        assert_eq!(r.writer((id, 1)), Some(1));
+        assert_eq!(r.writer((id, 2)), Some(2));
+    }
+
+    #[test]
+    fn register_value_is_at_master() {
+        let mut r = DataRegistry::new();
+        let id = r.register_value(vec![1, 2, 3]);
+        assert!(r.is_available((id, 0)));
+        assert_eq!(r.locations((id, 0)), &[MASTER]);
+        assert_eq!(r.writer((id, 0)), None);
+        assert_eq!(*r.value((id, 0)).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn locations_dedupe_and_drop() {
+        let mut r = DataRegistry::new();
+        let id = r.register_value(vec![0]);
+        r.add_location((id, 0), 1);
+        r.add_location((id, 0), 1);
+        r.add_location((id, 0), 2);
+        assert_eq!(r.locations((id, 0)), &[MASTER, 1, 2]);
+        r.drop_worker(1);
+        assert_eq!(r.locations((id, 0)), &[MASTER, 2]);
+    }
+
+    #[test]
+    fn gc_keeps_only_latest() {
+        let mut r = DataRegistry::new();
+        let id = r.register_value(vec![0]);
+        let v1 = r.new_version(id, 7);
+        r.put_value((id, v1), Arc::new(vec![1]), 0);
+        let v2 = r.new_version(id, 8);
+        r.put_value((id, v2), Arc::new(vec![2]), 0);
+        let dropped = r.gc_old_versions(id);
+        assert_eq!(dropped, 2);
+        assert!(!r.is_available((id, 0)));
+        assert!(!r.is_available((id, v1)));
+        assert!(r.is_available((id, v2)));
+    }
+
+    #[test]
+    fn file_writer_chain() {
+        let mut r = DataRegistry::new();
+        assert_eq!(r.file_write("/f", 1), None);
+        assert_eq!(r.file_write("/f", 2), Some(1));
+        assert_eq!(r.file_writer("/f"), Some(2));
+        assert_eq!(r.file_writer("/other"), None);
+    }
+}

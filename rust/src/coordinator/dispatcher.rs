@@ -1,0 +1,435 @@
+//! The **Task Dispatcher**: the single-threaded event loop that owns the
+//! analyser, graph and scheduler, drives executions and implements fault
+//! tolerance (paper §4.5 / Fig 7).
+//!
+//! Everything mutates inside one thread, so the per-phase timings recorded
+//! here (analysis / scheduling) measure exactly the code the paper's Fig
+//! 21-22 measures, with no lock noise.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use log::{debug, warn};
+
+use super::analyser::{TaskAnalyser, TaskId, TaskRecord};
+use super::annotations::{DataId, TaskSpec};
+use super::data::{Key, WorkerId, MASTER};
+use super::graph::TaskGraph;
+use super::metrics::MetricsRegistry;
+use super::scheduler::{SchedulerConfig, TaskScheduler};
+use super::worker::{Job, WorkerHandle};
+
+/// Events processed by the dispatcher loop.
+pub enum Event {
+    /// Main code submits a task (id pre-allocated by the runtime).
+    Submit { id: TaskId, spec: TaskSpec },
+    /// Allocate a fresh datum id.
+    NewData { reply: mpsc::Sender<DataId> },
+    /// Register a main-code value.
+    RegisterData { value: Vec<u8>, reply: mpsc::Sender<DataId> },
+    /// A worker finished (or failed) a task.
+    Finished {
+        task: TaskId,
+        worker: WorkerId,
+        outputs: Vec<(Key, Arc<Vec<u8>>)>,
+        error: Option<String>,
+    },
+    /// Main code waits for the latest version of a datum.
+    WaitData { data: DataId, reply: mpsc::Sender<Result<Arc<Vec<u8>>, String>> },
+    /// Main code waits for the last writer of a file path.
+    WaitFile { path: String, reply: mpsc::Sender<Result<(), String>> },
+    /// Main code waits for all submitted tasks.
+    Barrier { reply: mpsc::Sender<()> },
+    /// Simulate a node death.
+    KillWorker { worker: WorkerId },
+    /// Runtime statistics snapshot.
+    Stats { reply: mpsc::Sender<RuntimeStats> },
+    Shutdown,
+}
+
+impl std::fmt::Debug for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            Event::Submit { .. } => "Submit",
+            Event::NewData { .. } => "NewData",
+            Event::RegisterData { .. } => "RegisterData",
+            Event::Finished { .. } => "Finished",
+            Event::WaitData { .. } => "WaitData",
+            Event::WaitFile { .. } => "WaitFile",
+            Event::Barrier { .. } => "Barrier",
+            Event::KillWorker { .. } => "KillWorker",
+            Event::Stats { .. } => "Stats",
+            Event::Shutdown => "Shutdown",
+        };
+        write!(f, "Event::{name}")
+    }
+}
+
+/// Live runtime counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RuntimeStats {
+    pub submitted: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub active: usize,
+    pub ready: usize,
+    pub running: usize,
+    pub free_slots: usize,
+}
+
+/// Dispatcher configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatcherConfig {
+    pub scheduler: SchedulerConfig,
+    /// Extra attempts after the first failure.
+    pub max_retries: u32,
+}
+
+impl Default for DispatcherConfig {
+    fn default() -> Self {
+        Self { scheduler: SchedulerConfig::default(), max_retries: 2 }
+    }
+}
+
+struct State {
+    analyser: TaskAnalyser,
+    graph: TaskGraph,
+    scheduler: TaskScheduler,
+    records: HashMap<TaskId, TaskRecord>,
+    enqueue_time: HashMap<TaskId, Instant>,
+    workers: Vec<Arc<dyn WorkerHandle>>,
+    dead_workers: Vec<bool>,
+    metrics: Arc<MetricsRegistry>,
+    cfg: DispatcherConfig,
+    // Waiters.
+    data_waiters: HashMap<Key, Vec<mpsc::Sender<Result<Arc<Vec<u8>>, String>>>>,
+    file_waiters: HashMap<TaskId, Vec<mpsc::Sender<Result<(), String>>>>,
+    barrier_waiters: Vec<mpsc::Sender<()>>,
+    // Counters.
+    submitted: usize,
+    completed: usize,
+    failed: usize,
+    active: usize,
+    submit_time: HashMap<TaskId, Instant>,
+}
+
+/// Run the dispatcher loop until `Shutdown`. Spawned by the runtime on a
+/// dedicated thread.
+pub fn run(
+    rx: mpsc::Receiver<Event>,
+    workers: Vec<Arc<dyn WorkerHandle>>,
+    metrics: Arc<MetricsRegistry>,
+    cfg: DispatcherConfig,
+) {
+    let slots: Vec<usize> = workers.iter().map(|w| w.slot_count()).collect();
+    let mut st = State {
+        analyser: TaskAnalyser::new(),
+        graph: TaskGraph::new(),
+        scheduler: TaskScheduler::new(&slots, cfg.scheduler),
+        records: HashMap::new(),
+        enqueue_time: HashMap::new(),
+        dead_workers: vec![false; workers.len()],
+        workers,
+        metrics,
+        cfg,
+        data_waiters: HashMap::new(),
+        file_waiters: HashMap::new(),
+        barrier_waiters: Vec::new(),
+        submitted: 0,
+        completed: 0,
+        failed: 0,
+        active: 0,
+        submit_time: HashMap::new(),
+    };
+
+    while let Ok(event) = rx.recv() {
+        match event {
+            Event::Shutdown => break,
+            e => handle(&mut st, e),
+        }
+    }
+    // Orderly disconnect (remote workers end their sessions).
+    for w in &st.workers {
+        w.disconnect();
+    }
+}
+
+fn handle(st: &mut State, event: Event) {
+    match event {
+        Event::Submit { id, spec } => on_submit(st, id, spec),
+        Event::NewData { reply } => {
+            let _ = reply.send(st.analyser.data.new_data());
+        }
+        Event::RegisterData { value, reply } => {
+            let _ = reply.send(st.analyser.data.register_value(value));
+        }
+        Event::Finished { task, worker, outputs, error } => {
+            on_finished(st, task, worker, outputs, error)
+        }
+        Event::WaitData { data, reply } => on_wait_data(st, data, reply),
+        Event::WaitFile { path, reply } => on_wait_file(st, &path, reply),
+        Event::Barrier { reply } => {
+            if st.active == 0 {
+                let _ = reply.send(());
+            } else {
+                st.barrier_waiters.push(reply);
+            }
+        }
+        Event::KillWorker { worker } => on_kill_worker(st, worker),
+        Event::Stats { reply } => {
+            let _ = reply.send(RuntimeStats {
+                submitted: st.submitted,
+                completed: st.completed,
+                failed: st.failed,
+                active: st.active,
+                ready: st.scheduler.ready_count(),
+                running: st.scheduler.running_count(),
+                free_slots: st.scheduler.free_slots(),
+            });
+        }
+        Event::Shutdown => unreachable!("handled by caller"),
+    }
+}
+
+fn on_submit(st: &mut State, id: TaskId, spec: TaskSpec) {
+    // ---- Task Analyser (Fig 21 timing) ----------------------------------
+    let name = spec.name.clone();
+    let t0 = Instant::now();
+    let (record, deps) = st.analyser.analyse_with_id(id, spec, st.cfg.max_retries);
+    let analysis = t0.elapsed();
+    st.metrics.on_analysis(record.id, &name, analysis);
+
+    st.submitted += 1;
+    st.active += 1;
+    st.submit_time.insert(id, Instant::now());
+    let ready = st.graph.add_task(id, &deps);
+    st.records.insert(id, record);
+
+    if ready {
+        enqueue(st, id);
+        run_schedule(st);
+    }
+}
+
+fn enqueue(st: &mut State, id: TaskId) {
+    let rec = st.records.get(&id).expect("record for ready task");
+    st.scheduler.enqueue(rec);
+    st.enqueue_time.insert(id, Instant::now());
+}
+
+/// One scheduling pass (Fig 22 timing): place ready tasks, dispatch jobs.
+fn run_schedule(st: &mut State) {
+    let t0 = Instant::now();
+    let assignments = st.scheduler.schedule(&st.analyser.data);
+    let pass = t0.elapsed();
+    if assignments.is_empty() {
+        return;
+    }
+    // Attribute the pass cost evenly — a pass usually places one task
+    // (submit-triggered) so this matches per-task scheduling time.
+    let per_task = pass / assignments.len() as u32;
+
+    for a in &assignments {
+        st.metrics.on_schedule(a.task, per_task);
+        if let Some(t) = st.enqueue_time.remove(&a.task) {
+            st.metrics.on_queue(a.task, t.elapsed());
+        }
+        let rec = st.records.get(&a.task).expect("record for scheduled task").clone();
+        // Producer workers become stream data locations (§4.5).
+        if !rec.produces.is_empty() {
+            st.scheduler.note_producer_location(&rec.produces, a.worker);
+        }
+        // Collect inputs that are not local to the chosen worker.
+        let mut inputs = Vec::new();
+        for key in rec.input_keys() {
+            if !st.analyser.data.locations(key).contains(&a.worker) {
+                match st.analyser.data.value(key) {
+                    Some(v) => {
+                        inputs.push((key, v));
+                        st.analyser.data.add_location(key, a.worker);
+                    }
+                    None => warn!("task {} input {key:?} has no value yet", a.task),
+                }
+            }
+        }
+        st.graph.set_running(a.task);
+        let attempt = {
+            let r = st.records.get(&a.task).unwrap();
+            st.cfg.max_retries + 2 - r.attempts_left
+        };
+        debug!("dispatch task {} ({}) -> worker {}", a.task, rec.name, a.worker);
+        st.workers[a.worker].submit_job(Job { record: rec, inputs, attempt });
+    }
+}
+
+fn on_finished(
+    st: &mut State,
+    task: TaskId,
+    worker: WorkerId,
+    outputs: Vec<(Key, Arc<Vec<u8>>)>,
+    error: Option<String>,
+) {
+    // Ignore ghosts from killed workers (their tasks were resubmitted).
+    if st.dead_workers.get(worker).copied().unwrap_or(false) {
+        debug!("ignoring completion of task {task} from dead worker {worker}");
+        return;
+    }
+    // Ignore duplicate completions (e.g. task finished while being failed).
+    if !st.records.contains_key(&task) {
+        return;
+    }
+
+    st.scheduler.release(task);
+
+    match error {
+        None => {
+            // Record total time BEFORE waking any waiter: observers must see
+            // complete metrics the moment wait_on returns.
+            if let Some(t) = st.submit_time.remove(&task) {
+                st.metrics.on_total(task, t.elapsed());
+            }
+            // Store outputs: value lives at the worker and (by Arc) master.
+            for (key, value) in outputs {
+                st.analyser.data.put_value(key, Arc::clone(&value), worker);
+                st.analyser.data.add_location(key, MASTER);
+                if let Some(waiters) = st.data_waiters.remove(&key) {
+                    for w in waiters {
+                        let _ = w.send(Ok(Arc::clone(&value)));
+                    }
+                }
+            }
+            if let Some(waiters) = st.file_waiters.remove(&task) {
+                for w in waiters {
+                    let _ = w.send(Ok(()));
+                }
+            }
+            st.completed += 1;
+            st.active -= 1;
+            let released = st.graph.complete(task);
+            st.analyser.retire_task(task);
+            st.records.remove(&task);
+            for r in released {
+                enqueue(st, r);
+            }
+            run_schedule(st);
+            check_barrier(st);
+        }
+        Some(err) => {
+            let rec = st.records.get_mut(&task).expect("record for failed task");
+            rec.attempts_left = rec.attempts_left.saturating_sub(1);
+            if rec.attempts_left > 0 {
+                warn!(
+                    "task {task} ({}) failed ({err}); resubmitting ({} attempts left)",
+                    rec.name, rec.attempts_left
+                );
+                st.graph.set_ready(task);
+                enqueue(st, task);
+                run_schedule(st);
+            } else {
+                warn!("task {task} ({}) failed permanently: {err}", rec.name);
+                fail_task(st, task, &err);
+                run_schedule(st);
+                check_barrier(st);
+            }
+        }
+    }
+}
+
+/// Permanently fail `task` and cascade to dependents.
+fn fail_task(st: &mut State, task: TaskId, err: &str) {
+    let doomed = st.graph.fail(task);
+    st.failed += 1;
+    st.active -= 1;
+    notify_task_failure(st, task, err);
+    for d in doomed {
+        st.failed += 1;
+        st.active -= 1;
+        notify_task_failure(st, d, &format!("dependency failed: {err}"));
+        st.analyser.retire_task(d);
+        st.records.remove(&d);
+    }
+    st.analyser.retire_task(task);
+    st.records.remove(&task);
+}
+
+/// Wake every waiter that can never be satisfied now.
+fn notify_task_failure(st: &mut State, task: TaskId, err: &str) {
+    if let Some(rec) = st.records.get(&task) {
+        for key in rec.output_keys() {
+            if let Some(waiters) = st.data_waiters.remove(&key) {
+                for w in waiters {
+                    let _ = w.send(Err(err.to_string()));
+                }
+            }
+        }
+    }
+    if let Some(waiters) = st.file_waiters.remove(&task) {
+        for w in waiters {
+            let _ = w.send(Err(err.to_string()));
+        }
+    }
+    st.submit_time.remove(&task);
+    st.enqueue_time.remove(&task);
+}
+
+fn on_wait_data(st: &mut State, data: DataId, reply: mpsc::Sender<Result<Arc<Vec<u8>>, String>>) {
+    let key = (data, st.analyser.data.latest(data));
+    if let Some(v) = st.analyser.data.value(key) {
+        let _ = reply.send(Ok(v));
+        return;
+    }
+    // Is the writer permanently failed already?
+    if let Some(writer) = st.analyser.data.writer(key) {
+        if matches!(st.graph.state(writer), Some(super::graph::TaskState::Failed)) {
+            let _ = reply.send(Err(format!("producer task {writer} failed")));
+            return;
+        }
+    } else {
+        let _ = reply.send(Err(format!("datum {data} has no value and no producer")));
+        return;
+    }
+    st.data_waiters.entry(key).or_default().push(reply);
+}
+
+fn on_wait_file(st: &mut State, path: &str, reply: mpsc::Sender<Result<(), String>>) {
+    match st.analyser.data.file_writer(path) {
+        None => {
+            let _ = reply.send(Ok(())); // nobody writes it — nothing to wait for
+        }
+        Some(writer) => match st.graph.state(writer) {
+            Some(super::graph::TaskState::Completed) | None => {
+                let _ = reply.send(Ok(()));
+            }
+            Some(super::graph::TaskState::Failed) => {
+                let _ = reply.send(Err(format!("writer task {writer} failed")));
+            }
+            _ => st.file_waiters.entry(writer).or_default().push(reply),
+        },
+    }
+}
+
+fn on_kill_worker(st: &mut State, worker: WorkerId) {
+    if worker >= st.workers.len() {
+        return;
+    }
+    warn!("worker {worker} marked down");
+    st.dead_workers[worker] = true;
+    st.workers[worker].mark_killed();
+    st.analyser.data.drop_worker(worker);
+    let lost = st.scheduler.worker_down(worker);
+    for task in lost {
+        // Worker death does not consume a retry (paper: re-submission).
+        st.graph.set_ready(task);
+        enqueue(st, task);
+    }
+    run_schedule(st);
+}
+
+fn check_barrier(st: &mut State) {
+    if st.active == 0 {
+        for w in st.barrier_waiters.drain(..) {
+            let _ = w.send(());
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! Task execution: the task-function registry and the `TaskCtx` handed to
+//! task bodies.
+//!
+//! COMPSs invokes annotated methods; here applications register named
+//! functions once per process ([`register_task_fn`]) and submit
+//! [`super::annotations::TaskSpec`]s referring to them. The same registry
+//! is used by in-process workers and by remote worker processes (same
+//! binary ⇒ same registrations), so specs are location-transparent.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use once_cell::sync::Lazy;
+
+use crate::dstream::{DistroStreamHub, FileDistroStream, ObjectDistroStream, StreamHandle, StreamItem};
+use crate::runtime::ModelZoo;
+use crate::util::timeutil::TimeScale;
+use crate::util::wire::Wire;
+
+/// A task body. Returns `Err` to trigger fault tolerance (resubmission).
+pub type TaskFn = Arc<dyn Fn(&mut TaskCtx) -> anyhow::Result<()> + Send + Sync>;
+
+static REGISTRY: Lazy<RwLock<HashMap<String, TaskFn>>> = Lazy::new(Default::default);
+
+/// Register a task function under `name` (overwrites earlier entries, so
+/// tests can stub app tasks).
+pub fn register_task_fn<F>(name: &str, f: F)
+where
+    F: Fn(&mut TaskCtx) -> anyhow::Result<()> + Send + Sync + 'static,
+{
+    REGISTRY.write().unwrap().insert(name.to_string(), Arc::new(f));
+}
+
+/// Look up a registered task function.
+pub fn lookup_task_fn(name: &str) -> Option<TaskFn> {
+    REGISTRY.read().unwrap().get(name).cloned()
+}
+
+/// Registered names (diagnostics).
+pub fn registered_names() -> Vec<String> {
+    let mut v: Vec<String> = REGISTRY.read().unwrap().keys().cloned().collect();
+    v.sort();
+    v
+}
+
+/// One materialised argument inside a running task.
+#[derive(Debug)]
+pub enum CtxArg {
+    ObjIn(Arc<Vec<u8>>),
+    ObjOut(Option<Vec<u8>>),
+    ObjInOut { input: Arc<Vec<u8>>, output: Option<Vec<u8>> },
+    File(String),
+    Stream(StreamHandle),
+    Scalar(Vec<u8>),
+}
+
+/// Execution context of one task attempt.
+pub struct TaskCtx {
+    pub task_id: u64,
+    pub worker_id: usize,
+    pub cores: usize,
+    pub attempt: u32,
+    pub args: Vec<CtxArg>,
+    /// Stream access for this process.
+    pub hub: Arc<DistroStreamHub>,
+    /// AOT-compiled models (PJRT), when the runtime was built with them.
+    pub zoo: Option<Arc<ModelZoo>>,
+    /// Paper-time scaling for simulated compute.
+    pub scale: TimeScale,
+}
+
+impl TaskCtx {
+    // ---- objects ---------------------------------------------------------
+
+    /// Bytes of the `idx`-th argument (In or InOut).
+    pub fn obj_in(&self, idx: usize) -> &[u8] {
+        match &self.args[idx] {
+            CtxArg::ObjIn(v) => v,
+            CtxArg::ObjInOut { input, .. } => input,
+            other => panic!("arg {idx} is not an object input: {other:?}"),
+        }
+    }
+
+    /// Decode the `idx`-th input object as a `Wire` value.
+    pub fn obj_in_as<T: Wire>(&self, idx: usize) -> anyhow::Result<T> {
+        T::decode_exact(self.obj_in(idx)).map_err(|e| anyhow::anyhow!("arg {idx}: {e}"))
+    }
+
+    /// Set the output bytes of the `idx`-th argument (Out or InOut).
+    pub fn set_output(&mut self, idx: usize, bytes: Vec<u8>) {
+        match &mut self.args[idx] {
+            CtxArg::ObjOut(slot) => *slot = Some(bytes),
+            CtxArg::ObjInOut { output, .. } => *output = Some(bytes),
+            other => panic!("arg {idx} is not an object output: {other:?}"),
+        }
+    }
+
+    /// Encode + set an output object.
+    pub fn set_output_as<T: Wire>(&mut self, idx: usize, v: &T) {
+        self.set_output(idx, v.encode_vec());
+    }
+
+    // ---- scalars / files ---------------------------------------------------
+
+    /// Decode the `idx`-th scalar argument.
+    pub fn scalar<T: Wire>(&self, idx: usize) -> anyhow::Result<T> {
+        match &self.args[idx] {
+            CtxArg::Scalar(v) => {
+                T::decode_exact(v).map_err(|e| anyhow::anyhow!("scalar {idx}: {e}"))
+            }
+            other => Err(anyhow::anyhow!("arg {idx} is not a scalar: {other:?}")),
+        }
+    }
+
+    /// Path of the `idx`-th file argument.
+    pub fn file_path(&self, idx: usize) -> &str {
+        match &self.args[idx] {
+            CtxArg::File(p) => p,
+            other => panic!("arg {idx} is not a file: {other:?}"),
+        }
+    }
+
+    // ---- streams -----------------------------------------------------------
+
+    /// Raw handle of the `idx`-th stream argument.
+    pub fn stream_handle(&self, idx: usize) -> &StreamHandle {
+        match &self.args[idx] {
+            CtxArg::Stream(h) => h,
+            other => panic!("arg {idx} is not a stream: {other:?}"),
+        }
+    }
+
+    /// Materialise the `idx`-th argument as a typed object stream. The
+    /// stream identity is per-task, so concurrent tasks on one worker are
+    /// distinct producers/consumers (close semantics, group membership).
+    pub fn object_stream<T: StreamItem>(&self, idx: usize) -> ObjectDistroStream<T> {
+        let identity = format!("{}#t{}", self.hub.process(), self.task_id);
+        ObjectDistroStream::attach_as(self.stream_handle(idx).clone(), Arc::clone(&self.hub), identity)
+    }
+
+    /// Materialise the `idx`-th argument as a file stream (per-task
+    /// identity, see [`TaskCtx::object_stream`]).
+    pub fn file_stream(&self, idx: usize) -> FileDistroStream {
+        let identity = format!("{}#t{}", self.hub.process(), self.task_id);
+        FileDistroStream::attach_as(self.stream_handle(idx).clone(), Arc::clone(&self.hub), identity)
+    }
+
+    // ---- compute helpers ------------------------------------------------------
+
+    /// Sleep for `ms` *paper milliseconds* (scaled) — how workload benches
+    /// model the paper's fixed-duration task bodies.
+    pub fn sleep_paper_ms(&self, ms: u64) {
+        std::thread::sleep(self.scale.paper_ms(ms));
+    }
+
+    /// The PJRT model zoo; errors if the runtime was built without one.
+    pub fn models(&self) -> anyhow::Result<&Arc<ModelZoo>> {
+        self.zoo.as_ref().ok_or_else(|| anyhow::anyhow!("runtime built without PJRT models"))
+    }
+
+    /// Collect produced outputs by arg index (runtime-internal).
+    pub(crate) fn take_outputs(&mut self) -> anyhow::Result<Vec<(usize, Vec<u8>)>> {
+        let mut out = Vec::new();
+        for (i, a) in self.args.iter_mut().enumerate() {
+            match a {
+                CtxArg::ObjOut(slot) | CtxArg::ObjInOut { output: slot, .. } => match slot.take() {
+                    Some(v) => out.push((i, v)),
+                    None => anyhow::bail!("task did not set output argument {i}"),
+                },
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dstream::DistroStreamHub;
+
+    fn ctx(args: Vec<CtxArg>) -> TaskCtx {
+        let (hub, _, _) = DistroStreamHub::embedded("test");
+        TaskCtx {
+            task_id: 0,
+            worker_id: 0,
+            cores: 1,
+            attempt: 1,
+            args,
+            hub,
+            zoo: None,
+            scale: TimeScale::IDENTITY,
+        }
+    }
+
+    #[test]
+    fn registry_register_lookup() {
+        register_task_fn("unit-test-task", |_ctx| Ok(()));
+        assert!(lookup_task_fn("unit-test-task").is_some());
+        assert!(lookup_task_fn("missing-task").is_none());
+        assert!(registered_names().contains(&"unit-test-task".to_string()));
+    }
+
+    #[test]
+    fn object_in_out_roundtrip() {
+        let mut c = ctx(vec![
+            CtxArg::ObjIn(Arc::new(7u64.encode_vec())),
+            CtxArg::ObjOut(None),
+        ]);
+        let v: u64 = c.obj_in_as(0).unwrap();
+        c.set_output_as(1, &(v * 2));
+        let outs = c.take_outputs().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(u64::decode_exact(&outs[0].1).unwrap(), 14);
+    }
+
+    #[test]
+    fn missing_output_is_error() {
+        let mut c = ctx(vec![CtxArg::ObjOut(None)]);
+        assert!(c.take_outputs().is_err());
+    }
+
+    #[test]
+    fn inout_exposes_input_and_takes_output() {
+        let mut c = ctx(vec![CtxArg::ObjInOut { input: Arc::new(vec![1, 2]), output: None }]);
+        assert_eq!(c.obj_in(0), &[1, 2]);
+        c.set_output(0, vec![3]);
+        assert_eq!(c.take_outputs().unwrap(), vec![(0, vec![3])]);
+    }
+
+    #[test]
+    fn scalar_decoding() {
+        let c = ctx(vec![CtxArg::Scalar(42u64.encode_vec())]);
+        assert_eq!(c.scalar::<u64>(0).unwrap(), 42);
+        assert!(c.scalar::<String>(0).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "not an object input")]
+    fn wrong_arg_kind_panics() {
+        let c = ctx(vec![CtxArg::Scalar(vec![])]);
+        let _ = c.obj_in(0);
+    }
+}

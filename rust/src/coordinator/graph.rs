@@ -1,0 +1,268 @@
+//! The task dependency graph (DAG): pending counts, successor lists,
+//! readiness tracking and completion release.
+
+use std::collections::{HashMap, HashSet};
+
+use super::analyser::TaskId;
+
+/// Lifecycle state of a task in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting for dependencies.
+    Blocked,
+    /// Dependencies satisfied; queued for scheduling.
+    Ready,
+    /// Dispatched to a worker.
+    Running,
+    /// Finished successfully.
+    Completed,
+    /// Failed permanently (out of retries).
+    Failed,
+}
+
+#[derive(Debug)]
+struct Node {
+    state: TaskState,
+    pending: usize,
+    successors: Vec<TaskId>,
+}
+
+/// The DAG. Nodes are added on analysis and removed only when completed
+/// (COMPSs deletes tasks after completion; we keep terminal states for
+/// diagnostics until [`TaskGraph::prune`]).
+#[derive(Debug, Default)]
+pub struct TaskGraph {
+    nodes: HashMap<TaskId, Node>,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a task with its dependency set; returns true if immediately
+    /// ready. Dependencies on already-terminal (or unknown, i.e. pruned)
+    /// tasks are ignored.
+    pub fn add_task(&mut self, id: TaskId, deps: &HashSet<TaskId>) -> bool {
+        let mut pending = 0;
+        for &d in deps {
+            let live = match self.nodes.get(&d) {
+                Some(n) => !matches!(n.state, TaskState::Completed | TaskState::Failed),
+                None => false,
+            };
+            if live {
+                self.nodes.get_mut(&d).unwrap().successors.push(id);
+                pending += 1;
+            }
+        }
+        let ready = pending == 0;
+        self.nodes.insert(
+            id,
+            Node {
+                state: if ready { TaskState::Ready } else { TaskState::Blocked },
+                pending,
+                successors: Vec::new(),
+            },
+        );
+        ready
+    }
+
+    pub fn state(&self, id: TaskId) -> Option<TaskState> {
+        self.nodes.get(&id).map(|n| n.state)
+    }
+
+    pub fn set_running(&mut self, id: TaskId) {
+        if let Some(n) = self.nodes.get_mut(&id) {
+            debug_assert_eq!(n.state, TaskState::Ready, "task {id} not ready");
+            n.state = TaskState::Running;
+        }
+    }
+
+    /// Put a running task back to ready (resubmission after failure).
+    pub fn set_ready(&mut self, id: TaskId) {
+        if let Some(n) = self.nodes.get_mut(&id) {
+            n.state = TaskState::Ready;
+        }
+    }
+
+    /// Complete a task; returns the successors that became ready.
+    pub fn complete(&mut self, id: TaskId) -> Vec<TaskId> {
+        let successors = match self.nodes.get_mut(&id) {
+            Some(n) => {
+                n.state = TaskState::Completed;
+                std::mem::take(&mut n.successors)
+            }
+            None => return Vec::new(),
+        };
+        let mut released = Vec::new();
+        for s in successors {
+            if let Some(n) = self.nodes.get_mut(&s) {
+                n.pending -= 1;
+                if n.pending == 0 && n.state == TaskState::Blocked {
+                    n.state = TaskState::Ready;
+                    released.push(s);
+                }
+            }
+        }
+        released
+    }
+
+    /// Mark a task permanently failed; returns the transitive closure of
+    /// tasks that can now never run (cascaded failure).
+    pub fn fail(&mut self, id: TaskId) -> Vec<TaskId> {
+        let mut doomed = Vec::new();
+        let mut stack = vec![id];
+        while let Some(t) = stack.pop() {
+            let successors = match self.nodes.get_mut(&t) {
+                Some(n) if n.state != TaskState::Failed => {
+                    n.state = TaskState::Failed;
+                    if t != id {
+                        doomed.push(t);
+                    }
+                    n.successors.clone()
+                }
+                _ => continue,
+            };
+            stack.extend(successors);
+        }
+        doomed
+    }
+
+    /// Count of tasks not yet terminal.
+    pub fn active_count(&self) -> usize {
+        self.nodes
+            .values()
+            .filter(|n| !matches!(n.state, TaskState::Completed | TaskState::Failed))
+            .count()
+    }
+
+    /// Total nodes retained.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Drop terminal nodes (bounded memory for long-running apps).
+    pub fn prune(&mut self) -> usize {
+        let before = self.nodes.len();
+        self.nodes.retain(|_, n| !matches!(n.state, TaskState::Completed | TaskState::Failed));
+        before - self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn deps(ids: &[TaskId]) -> HashSet<TaskId> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn fan_out_release() {
+        let mut g = TaskGraph::new();
+        assert!(g.add_task(0, &deps(&[])));
+        for i in 1..=5 {
+            assert!(!g.add_task(i, &deps(&[0])));
+        }
+        g.set_running(0);
+        let released = g.complete(0);
+        assert_eq!(released.len(), 5);
+        assert!(released.iter().all(|&t| g.state(t) == Some(TaskState::Ready)));
+    }
+
+    #[test]
+    fn diamond_releases_only_when_all_deps_done() {
+        let mut g = TaskGraph::new();
+        g.add_task(0, &deps(&[]));
+        g.add_task(1, &deps(&[0]));
+        g.add_task(2, &deps(&[0]));
+        g.add_task(3, &deps(&[1, 2]));
+        g.complete(0);
+        assert!(g.complete(1).is_empty(), "3 still waits on 2");
+        assert_eq!(g.complete(2), vec![3]);
+    }
+
+    #[test]
+    fn dep_on_completed_task_is_ignored() {
+        let mut g = TaskGraph::new();
+        g.add_task(0, &deps(&[]));
+        g.complete(0);
+        assert!(g.add_task(1, &deps(&[0])), "dep already completed → ready now");
+    }
+
+    #[test]
+    fn dep_on_pruned_task_is_ignored() {
+        let mut g = TaskGraph::new();
+        g.add_task(0, &deps(&[]));
+        g.complete(0);
+        assert_eq!(g.prune(), 1);
+        assert!(g.add_task(1, &deps(&[0])));
+    }
+
+    #[test]
+    fn failure_cascades() {
+        let mut g = TaskGraph::new();
+        g.add_task(0, &deps(&[]));
+        g.add_task(1, &deps(&[0]));
+        g.add_task(2, &deps(&[1]));
+        g.add_task(3, &deps(&[]));
+        let doomed = g.fail(0);
+        assert_eq!(doomed.len(), 2);
+        assert_eq!(g.state(3), Some(TaskState::Ready), "independent task unaffected");
+        assert_eq!(g.active_count(), 1);
+    }
+
+    #[test]
+    fn resubmission_roundtrip() {
+        let mut g = TaskGraph::new();
+        g.add_task(0, &deps(&[]));
+        g.set_running(0);
+        g.set_ready(0); // retry
+        assert_eq!(g.state(0), Some(TaskState::Ready));
+        g.set_running(0);
+        g.complete(0);
+        assert_eq!(g.state(0), Some(TaskState::Completed));
+    }
+
+    #[test]
+    fn prop_random_dag_executes_fully() {
+        // Random DAGs (edges only to lower ids) always drain completely.
+        check("random dag drains", |r: &mut Rng| {
+            let n = r.range(1, 30);
+            let mut edges: Vec<(u64, u64)> = Vec::new();
+            for t in 1..n as u64 {
+                for d in 0..t {
+                    if r.chance(0.3) {
+                        edges.push((t, d));
+                    }
+                }
+            }
+            edges
+        }, |edges| {
+            let n = edges.iter().map(|&(t, _)| t + 1).max().unwrap_or(1).max(1);
+            let mut g = TaskGraph::new();
+            let mut ready: Vec<TaskId> = Vec::new();
+            for t in 0..n {
+                let d: HashSet<TaskId> =
+                    edges.iter().filter(|&&(x, _)| x == t).map(|&(_, y)| y).collect();
+                if g.add_task(t, &d) {
+                    ready.push(t);
+                }
+            }
+            let mut done = 0;
+            while let Some(t) = ready.pop() {
+                g.set_running(t);
+                ready.extend(g.complete(t));
+                done += 1;
+            }
+            ensure(done == n as usize, "dag did not drain")?;
+            ensure(g.active_count() == 0, "active tasks remain")
+        });
+    }
+}

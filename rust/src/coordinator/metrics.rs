@@ -1,0 +1,178 @@
+//! Per-task lifecycle metrics — the instrumentation behind Fig 21–24.
+//!
+//! For every task we record the time spent in each runtime phase:
+//! **analysis** (Task Analyser registration), **scheduling** (placement
+//! decision), **transfer** (localising input parameters on the worker) and
+//! **execution** (running the task body). Aggregations feed the overhead
+//! benches and the live `runtime_stats` report.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::analyser::TaskId;
+
+/// One task's phase timings (microseconds).
+#[derive(Debug, Default, Clone)]
+pub struct TaskMetrics {
+    pub name: String,
+    pub analysis_us: f64,
+    pub schedule_us: f64,
+    pub queue_us: f64,
+    pub transfer_us: f64,
+    pub exec_us: f64,
+    pub total_us: f64,
+    pub attempts: u32,
+    pub worker: Option<usize>,
+}
+
+/// Thread-safe metrics store.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    tasks: Mutex<HashMap<TaskId, TaskMetrics>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_analysis(&self, id: TaskId, name: &str, d: Duration) {
+        let mut t = self.tasks.lock().unwrap();
+        let m = t.entry(id).or_default();
+        m.name = name.to_string();
+        m.analysis_us = d.as_secs_f64() * 1e6;
+    }
+
+    pub fn on_schedule(&self, id: TaskId, d: Duration) {
+        let mut t = self.tasks.lock().unwrap();
+        t.entry(id).or_default().schedule_us += d.as_secs_f64() * 1e6;
+    }
+
+    pub fn on_queue(&self, id: TaskId, d: Duration) {
+        let mut t = self.tasks.lock().unwrap();
+        t.entry(id).or_default().queue_us = d.as_secs_f64() * 1e6;
+    }
+
+    pub fn on_transfer(&self, id: TaskId, d: Duration) {
+        let mut t = self.tasks.lock().unwrap();
+        t.entry(id).or_default().transfer_us += d.as_secs_f64() * 1e6;
+    }
+
+    pub fn on_exec(&self, id: TaskId, worker: usize, d: Duration) {
+        let mut t = self.tasks.lock().unwrap();
+        let m = t.entry(id).or_default();
+        m.exec_us += d.as_secs_f64() * 1e6;
+        m.worker = Some(worker);
+        m.attempts += 1;
+    }
+
+    pub fn on_total(&self, id: TaskId, d: Duration) {
+        let mut t = self.tasks.lock().unwrap();
+        t.entry(id).or_default().total_us = d.as_secs_f64() * 1e6;
+    }
+
+    /// Snapshot one task.
+    pub fn task(&self, id: TaskId) -> Option<TaskMetrics> {
+        self.tasks.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Snapshot all tasks (sorted by id).
+    pub fn all(&self) -> Vec<(TaskId, TaskMetrics)> {
+        let t = self.tasks.lock().unwrap();
+        let mut v: Vec<_> = t.iter().map(|(&k, m)| (k, m.clone())).collect();
+        v.sort_by_key(|&(k, _)| k);
+        v
+    }
+
+    /// Mean of one phase over tasks whose name matches `filter` (all when
+    /// empty). Used directly by the Fig 21-23 benches.
+    pub fn mean_phase(&self, phase: Phase, filter: &str) -> f64 {
+        let t = self.tasks.lock().unwrap();
+        let xs: Vec<f64> = t
+            .values()
+            .filter(|m| filter.is_empty() || m.name == filter)
+            .map(|m| phase.get(m))
+            .collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    pub fn clear(&self) {
+        self.tasks.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Runtime phase selector for aggregation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Analysis,
+    Schedule,
+    Queue,
+    Transfer,
+    Exec,
+    Total,
+}
+
+impl Phase {
+    pub fn get(&self, m: &TaskMetrics) -> f64 {
+        match self {
+            Phase::Analysis => m.analysis_us,
+            Phase::Schedule => m.schedule_us,
+            Phase::Queue => m.queue_us,
+            Phase::Transfer => m.transfer_us,
+            Phase::Exec => m.exec_us,
+            Phase::Total => m.total_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let m = MetricsRegistry::new();
+        m.on_analysis(1, "t", Duration::from_micros(10));
+        m.on_schedule(1, Duration::from_micros(20));
+        m.on_schedule(1, Duration::from_micros(5)); // resubmission adds
+        m.on_exec(1, 0, Duration::from_micros(100));
+        let t = m.task(1).unwrap();
+        assert_eq!(t.name, "t");
+        assert!((t.analysis_us - 10.0).abs() < 1.0);
+        assert!((t.schedule_us - 25.0).abs() < 1.0);
+        assert_eq!(t.attempts, 1);
+        assert_eq!(t.worker, Some(0));
+    }
+
+    #[test]
+    fn mean_phase_filters_by_name() {
+        let m = MetricsRegistry::new();
+        m.on_analysis(1, "a", Duration::from_micros(10));
+        m.on_analysis(2, "b", Duration::from_micros(30));
+        assert!((m.mean_phase(Phase::Analysis, "a") - 10.0).abs() < 1.0);
+        assert!((m.mean_phase(Phase::Analysis, "") - 20.0).abs() < 1.0);
+        assert_eq!(m.mean_phase(Phase::Exec, "zzz"), 0.0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let m = MetricsRegistry::new();
+        m.on_analysis(1, "a", Duration::from_micros(1));
+        assert_eq!(m.len(), 1);
+        m.clear();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,53 @@
+//! The task-based runtime (COMPSs-like) with Hybrid-Workflow extensions.
+//!
+//! Architecture mirrors the paper's Fig 7 pipeline:
+//!
+//! ```text
+//!  app (main code) ──submit──▶ Task Analyser ──▶ Task Graph ──▶ Task
+//!        ▲                       (deps from        (DAG)       Scheduler
+//!        │ wait_on/barrier        param annots)                  │
+//!        └────────────── Task Dispatcher ◀──────────────────────┘
+//!                              │  ▲
+//!                     execute  ▼  │ finished
+//!                           Workers (core slots, object store, hub, PJRT)
+//! ```
+//!
+//! The Hybrid-Workflow extensions (paper §4.4–4.5) are:
+//!
+//! - the `Stream` parameter kind ([`annotations::Arg::StreamIn`] /
+//!   [`annotations::Arg::StreamOut`]) which creates **no** dependency edge —
+//!   producer and consumer run concurrently;
+//! - **producer priority**: ready producer tasks are scheduled before
+//!   consumer tasks of the same stream, so consumers never hold cores
+//!   waiting for data no one is producing;
+//! - **stream locality**: workers that run (or ran) producer tasks count as
+//!   data locations of the stream when scoring consumer placements.
+//!
+//! Module map: [`annotations`] (task/parameter model), [`data`] (registry +
+//! versions + locations), [`analyser`], [`graph`], [`scheduler`],
+//! [`dispatcher`] (event loop + fault tolerance), [`executor`] (task fn
+//! registry + `TaskCtx`), [`worker`] (in-process core-slot workers),
+//! [`remote`] (TCP worker processes), [`metrics`] (per-task lifecycle
+//! times — the Fig 21-24 instrumentation), [`tracing`] (Paraver-like task
+//! traces — Fig 14), [`api`] (the `CometRuntime` facade).
+
+pub mod annotations;
+pub mod analyser;
+pub mod api;
+pub mod data;
+pub mod dispatcher;
+pub mod executor;
+pub mod graph;
+pub mod metrics;
+pub mod remote;
+pub mod scheduler;
+pub mod tracing;
+pub mod worker;
+
+/// One-stop imports for applications.
+pub mod prelude {
+    pub use super::annotations::{Arg, Direction, TaskSpec};
+    pub use super::api::{CometBuilder, CometRuntime, DataRef};
+    pub use super::executor::{register_task_fn, TaskCtx};
+    pub use crate::dstream::{ConsumerMode, StreamHandle, StreamType};
+}

@@ -1,0 +1,498 @@
+//! Remote worker processes over TCP — the distributed face of the runtime.
+//!
+//! The paper's COMPSs master talks NIO to workers on other nodes; here the
+//! master serialises [`Job`]s over framed TCP to `hybridws worker`
+//! processes (same binary ⇒ same task-function registry). Remote workers
+//! reach the DistroStream Server and the broker through their TCP
+//! endpoints, which the master exposes via [`super::api`]'s networked mode.
+//!
+//! Protocol: master sends [`MasterMsg::Hello`] once, then `Run` frames;
+//! the worker replies with [`WorkerMsg::Done`] frames (any order).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use log::{debug, info, warn};
+
+use crate::dstream::DistroStreamHub;
+use crate::runtime::ModelZoo;
+use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
+use crate::util::threadpool::ThreadPool;
+use crate::util::timeutil::TimeScale;
+use crate::util::wire::{recv_msg, send_msg, Blob, Wire};
+
+use super::analyser::{ResolvedArg, TaskRecord};
+use super::data::Key;
+use super::dispatcher::Event;
+use super::executor::{lookup_task_fn, CtxArg, TaskCtx};
+use super::worker::Job;
+
+// ---- wire impls for the task model -----------------------------------------
+
+impl Wire for ResolvedArg {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            ResolvedArg::ObjIn(k) => {
+                w.put_u8(0);
+                k.encode(w);
+            }
+            ResolvedArg::ObjOut(k) => {
+                w.put_u8(1);
+                k.encode(w);
+            }
+            ResolvedArg::ObjInOut { read, write } => {
+                w.put_u8(2);
+                read.encode(w);
+                write.encode(w);
+            }
+            ResolvedArg::FileIn(p) => {
+                w.put_u8(3);
+                p.encode(w);
+            }
+            ResolvedArg::FileOut(p) => {
+                w.put_u8(4);
+                p.encode(w);
+            }
+            ResolvedArg::FileInOut(p) => {
+                w.put_u8(5);
+                p.encode(w);
+            }
+            ResolvedArg::StreamIn(h) => {
+                w.put_u8(6);
+                h.encode(w);
+            }
+            ResolvedArg::StreamOut(h) => {
+                w.put_u8(7);
+                h.encode(w);
+            }
+            ResolvedArg::Scalar(v) => {
+                w.put_u8(8);
+                v.encode(w);
+            }
+        }
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => ResolvedArg::ObjIn(Wire::decode(r)?),
+            1 => ResolvedArg::ObjOut(Wire::decode(r)?),
+            2 => ResolvedArg::ObjInOut { read: Wire::decode(r)?, write: Wire::decode(r)? },
+            3 => ResolvedArg::FileIn(Wire::decode(r)?),
+            4 => ResolvedArg::FileOut(Wire::decode(r)?),
+            5 => ResolvedArg::FileInOut(Wire::decode(r)?),
+            6 => ResolvedArg::StreamIn(Wire::decode(r)?),
+            7 => ResolvedArg::StreamOut(Wire::decode(r)?),
+            8 => ResolvedArg::Scalar(Wire::decode(r)?),
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "ResolvedArg" }),
+        })
+    }
+}
+
+impl Wire for TaskRecord {
+    fn encode(&self, w: &mut ByteWriter) {
+        self.id.encode(w);
+        self.name.encode(w);
+        self.cores.encode(w);
+        self.explicit_priority.encode(w);
+        self.args.encode(w);
+        self.produces.encode(w);
+        self.consumes.encode(w);
+        self.attempts_left.encode(w);
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        Ok(TaskRecord {
+            id: Wire::decode(r)?,
+            name: Wire::decode(r)?,
+            cores: Wire::decode(r)?,
+            explicit_priority: Wire::decode(r)?,
+            args: Wire::decode(r)?,
+            produces: Wire::decode(r)?,
+            consumes: Wire::decode(r)?,
+            attempts_left: Wire::decode(r)?,
+        })
+    }
+}
+
+// ---- protocol -----------------------------------------------------------------
+
+/// Master → remote worker.
+#[derive(Debug, Clone)]
+pub enum MasterMsg {
+    /// Connection setup: service endpoints + identity + time scale.
+    Hello {
+        worker_name: String,
+        ds_addr: String,
+        broker_addr: String,
+        scale_factor: f64,
+        load_models: bool,
+    },
+    Run { record: TaskRecord, inputs: Vec<(Key, Blob)>, attempt: u32 },
+    Bye,
+}
+
+impl Wire for MasterMsg {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            MasterMsg::Hello { worker_name, ds_addr, broker_addr, scale_factor, load_models } => {
+                w.put_u8(0);
+                worker_name.encode(w);
+                ds_addr.encode(w);
+                broker_addr.encode(w);
+                scale_factor.encode(w);
+                load_models.encode(w);
+            }
+            MasterMsg::Run { record, inputs, attempt } => {
+                w.put_u8(1);
+                record.encode(w);
+                inputs.encode(w);
+                attempt.encode(w);
+            }
+            MasterMsg::Bye => w.put_u8(2),
+        }
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => MasterMsg::Hello {
+                worker_name: Wire::decode(r)?,
+                ds_addr: Wire::decode(r)?,
+                broker_addr: Wire::decode(r)?,
+                scale_factor: Wire::decode(r)?,
+                load_models: Wire::decode(r)?,
+            },
+            1 => MasterMsg::Run {
+                record: Wire::decode(r)?,
+                inputs: Wire::decode(r)?,
+                attempt: Wire::decode(r)?,
+            },
+            2 => MasterMsg::Bye,
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "MasterMsg" }),
+        })
+    }
+}
+
+/// Remote worker → master.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerMsg {
+    Ready,
+    Done { task: u64, outputs: Vec<(Key, Blob)>, error: Option<String> },
+}
+
+impl Wire for WorkerMsg {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            WorkerMsg::Ready => w.put_u8(0),
+            WorkerMsg::Done { task, outputs, error } => {
+                w.put_u8(1);
+                task.encode(w);
+                outputs.encode(w);
+                error.encode(w);
+            }
+        }
+    }
+    fn decode(r: &mut ByteReader) -> std::result::Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => WorkerMsg::Ready,
+            1 => WorkerMsg::Done {
+                task: Wire::decode(r)?,
+                outputs: Wire::decode(r)?,
+                error: Wire::decode(r)?,
+            },
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "WorkerMsg" }),
+        })
+    }
+}
+
+// ---- master-side handle ----------------------------------------------------------
+
+/// Master-side proxy for one remote worker.
+pub struct RemoteWorker {
+    pub id: usize,
+    pub slots: usize,
+    writer: Mutex<TcpStream>,
+    killed: Arc<AtomicBool>,
+}
+
+impl RemoteWorker {
+    /// Connect to a remote worker and hand its completions to `events`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect(
+        id: usize,
+        slots: usize,
+        addr: &str,
+        ds_addr: &str,
+        broker_addr: &str,
+        scale: TimeScale,
+        load_models: bool,
+        events: mpsc::Sender<Event>,
+    ) -> anyhow::Result<Arc<Self>> {
+        let mut sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        send_msg(
+            &mut sock,
+            &MasterMsg::Hello {
+                worker_name: format!("remote-worker{id}"),
+                ds_addr: ds_addr.to_string(),
+                broker_addr: broker_addr.to_string(),
+                scale_factor: scale.factor,
+                load_models,
+            },
+        )?;
+        let ready: Option<WorkerMsg> = recv_msg(&mut sock)?;
+        anyhow::ensure!(matches!(ready, Some(WorkerMsg::Ready)), "worker did not report ready");
+
+        let killed = Arc::new(AtomicBool::new(false));
+        let reader = sock.try_clone()?;
+        let reader_killed = Arc::clone(&killed);
+        std::thread::Builder::new().name(format!("remote{id}-rx")).spawn(move || {
+            let mut reader = reader;
+            loop {
+                match recv_msg::<_, WorkerMsg>(&mut reader) {
+                    Ok(Some(WorkerMsg::Done { task, outputs, error })) => {
+                        if reader_killed.load(Ordering::SeqCst) {
+                            continue;
+                        }
+                        let outputs = outputs
+                            .into_iter()
+                            .map(|(k, b)| (k, Arc::new(b.0)))
+                            .collect();
+                        if events.send(Event::Finished { task, worker: id, outputs, error }).is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Ok(Some(WorkerMsg::Ready)) => {}
+                    Ok(None) => break,
+                    Err(e) => {
+                        debug!("remote worker {id} reader: {e}");
+                        break;
+                    }
+                }
+            }
+        })?;
+        Ok(Arc::new(Self { id, slots, writer: Mutex::new(sock), killed }))
+    }
+
+    pub fn send_job(&self, job: &Job) {
+        let inputs: Vec<(Key, Blob)> =
+            job.inputs.iter().map(|(k, v)| (*k, Blob(v.as_ref().clone()))).collect();
+        let msg = MasterMsg::Run { record: job.record.clone(), inputs, attempt: job.attempt };
+        if let Err(e) = send_msg(&mut *self.writer.lock().unwrap(), &msg) {
+            warn!("remote worker {} send failed: {e}", self.id);
+        }
+    }
+
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+        let _ = send_msg(&mut *self.writer.lock().unwrap(), &MasterMsg::Bye);
+    }
+}
+
+impl super::worker::WorkerHandle for RemoteWorker {
+    fn wid(&self) -> usize {
+        self.id
+    }
+    fn slot_count(&self) -> usize {
+        self.slots
+    }
+    fn submit_job(&self, job: Job) {
+        self.send_job(&job);
+    }
+    fn mark_killed(&self) {
+        self.kill();
+    }
+    fn disconnect(&self) {
+        let _ = send_msg(&mut *self.writer.lock().unwrap(), &MasterMsg::Bye);
+    }
+}
+
+// ---- worker-process side -------------------------------------------------------------
+
+/// Serve one master connection on `listener` (the `hybridws worker`
+/// entrypoint). Returns when the master says `Bye` or disconnects.
+pub fn serve_worker(listener: TcpListener, slots: usize) -> anyhow::Result<()> {
+    info!("remote worker listening on {} ({slots} slots)", listener.local_addr()?);
+    let (mut sock, peer) = listener.accept()?;
+    sock.set_nodelay(true).ok();
+    info!("master connected from {peer}");
+
+    let hello: MasterMsg = recv_msg(&mut sock)?.ok_or_else(|| anyhow::anyhow!("no hello"))?;
+    let MasterMsg::Hello { worker_name, ds_addr, broker_addr, scale_factor, load_models } = hello
+    else {
+        anyhow::bail!("expected Hello, got {hello:?}");
+    };
+
+    let hub = DistroStreamHub::connect(&worker_name, &ds_addr, &broker_addr)
+        .map_err(|e| anyhow::anyhow!("hub connect: {e}"))?;
+    let zoo = if load_models {
+        let dir = crate::runtime::find_artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not found on worker"))?;
+        Some(Arc::new(ModelZoo::load(&dir)?))
+    } else {
+        None
+    };
+    let scale = TimeScale::new(scale_factor);
+
+    let writer = Arc::new(Mutex::new(sock.try_clone()?));
+    send_msg(&mut *writer.lock().unwrap(), &WorkerMsg::Ready)?;
+
+    let pool = ThreadPool::new("remote-exec", slots.max(1));
+    let store: Arc<Mutex<std::collections::HashMap<Key, Arc<Vec<u8>>>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+
+    loop {
+        let msg: MasterMsg = match recv_msg(&mut sock) {
+            Ok(Some(m)) => m,
+            Ok(None) => break,
+            Err(e) => {
+                warn!("worker read error: {e}");
+                break;
+            }
+        };
+        match msg {
+            MasterMsg::Bye => break,
+            MasterMsg::Hello { .. } => warn!("unexpected second Hello"),
+            MasterMsg::Run { record, inputs, attempt } => {
+                let writer = Arc::clone(&writer);
+                let store = Arc::clone(&store);
+                let hub = Arc::clone(&hub);
+                let zoo = zoo.clone();
+                pool.execute(move || {
+                    let result = run_remote_job(&record, inputs, attempt, &store, hub, zoo, scale);
+                    let msg = match result {
+                        Ok(outputs) => WorkerMsg::Done { task: record.id, outputs, error: None },
+                        Err(e) => WorkerMsg::Done {
+                            task: record.id,
+                            outputs: Vec::new(),
+                            error: Some(e.to_string()),
+                        },
+                    };
+                    let _ = send_msg(&mut *writer.lock().unwrap(), &msg);
+                });
+            }
+        }
+    }
+    pool.shutdown();
+    info!("remote worker exiting");
+    Ok(())
+}
+
+fn run_remote_job(
+    record: &TaskRecord,
+    inputs: Vec<(Key, Blob)>,
+    attempt: u32,
+    store: &Arc<Mutex<std::collections::HashMap<Key, Arc<Vec<u8>>>>>,
+    hub: Arc<DistroStreamHub>,
+    zoo: Option<Arc<ModelZoo>>,
+    scale: TimeScale,
+) -> anyhow::Result<Vec<(Key, Blob)>> {
+    for (k, b) in inputs {
+        store.lock().unwrap().entry(k).or_insert_with(|| Arc::new(b.0));
+    }
+    let mut out_keys: Vec<(usize, Key)> = Vec::new();
+    let mut args = Vec::with_capacity(record.args.len());
+    for (i, arg) in record.args.iter().enumerate() {
+        match arg {
+            ResolvedArg::ObjIn(k) => {
+                let v = store
+                    .lock()
+                    .unwrap()
+                    .get(k)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("input {k:?} missing"))?;
+                args.push(CtxArg::ObjIn(v));
+            }
+            ResolvedArg::ObjOut(k) => {
+                out_keys.push((i, *k));
+                args.push(CtxArg::ObjOut(None));
+            }
+            ResolvedArg::ObjInOut { read, write } => {
+                let v = store
+                    .lock()
+                    .unwrap()
+                    .get(read)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("input {read:?} missing"))?;
+                out_keys.push((i, *write));
+                args.push(CtxArg::ObjInOut { input: v, output: None });
+            }
+            ResolvedArg::FileIn(p) | ResolvedArg::FileOut(p) | ResolvedArg::FileInOut(p) => {
+                args.push(CtxArg::File(p.clone()));
+            }
+            ResolvedArg::StreamIn(h) | ResolvedArg::StreamOut(h) => {
+                args.push(CtxArg::Stream(h.clone()));
+            }
+            ResolvedArg::Scalar(v) => args.push(CtxArg::Scalar(v.clone())),
+        }
+    }
+    let f = lookup_task_fn(&record.name)
+        .ok_or_else(|| anyhow::anyhow!("no task function registered: {}", record.name))?;
+    let mut ctx = TaskCtx {
+        task_id: record.id,
+        worker_id: usize::MAX, // remote workers have no master-side index here
+        cores: record.cores,
+        attempt,
+        args,
+        hub,
+        zoo,
+        scale,
+    };
+    f(&mut ctx)?;
+    let outs = ctx.take_outputs()?;
+    let mut keyed = Vec::with_capacity(outs.len());
+    for (idx, bytes) in outs {
+        let key = out_keys
+            .iter()
+            .find(|&&(i, _)| i == idx)
+            .map(|&(_, k)| k)
+            .ok_or_else(|| anyhow::anyhow!("output index mismatch"))?;
+        store.lock().unwrap().insert(key, Arc::new(bytes.clone()));
+        keyed.push((key, Blob(bytes)));
+    }
+    Ok(keyed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Wire;
+
+    #[test]
+    fn protocol_roundtrip() {
+        let rec = TaskRecord {
+            id: 1,
+            name: "t".into(),
+            cores: 2,
+            explicit_priority: false,
+            args: vec![ResolvedArg::ObjIn((0, 0)), ResolvedArg::Scalar(vec![1])],
+            produces: vec![3],
+            consumes: vec![],
+            attempts_left: 2,
+        };
+        let msgs = vec![
+            MasterMsg::Hello {
+                worker_name: "w".into(),
+                ds_addr: "a:1".into(),
+                broker_addr: "b:2".into(),
+                scale_factor: 0.01,
+                load_models: false,
+            },
+            MasterMsg::Run { record: rec, inputs: vec![((0, 0), Blob(vec![9]))], attempt: 1 },
+            MasterMsg::Bye,
+        ];
+        for m in msgs {
+            let back = MasterMsg::decode_exact(&m.encode_vec()).unwrap();
+            assert_eq!(back.encode_vec(), m.encode_vec(), "roundtrip changed bytes");
+        }
+        let replies = vec![
+            WorkerMsg::Ready,
+            WorkerMsg::Done { task: 1, outputs: vec![((1, 1), Blob(vec![2]))], error: None },
+            WorkerMsg::Done { task: 2, outputs: vec![], error: Some("x".into()) },
+        ];
+        for m in replies {
+            assert_eq!(WorkerMsg::decode_exact(&m.encode_vec()).unwrap(), m);
+        }
+    }
+}

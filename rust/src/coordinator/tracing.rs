@@ -1,0 +1,189 @@
+//! Paraver-like execution traces (the Fig 14 instrumentation).
+//!
+//! Workers record one [`Span`] per task execution (worker, task name,
+//! start/end). The log renders an ASCII gantt (one line per core-slot
+//! group), computes the producer/consumer **overlap fraction** — the
+//! quantity Fig 14 visualises — and dumps CSV for offline plotting.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One executed task span.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub worker: usize,
+    pub task: u64,
+    pub name: String,
+    /// Seconds since trace start.
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Thread-safe trace collector.
+#[derive(Debug)]
+pub struct TraceLog {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Default for TraceLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceLog {
+    pub fn new() -> Self {
+        Self { origin: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    /// Timestamp (seconds since trace start).
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    pub fn record(&self, worker: usize, task: u64, name: &str, start_s: f64, end_s: f64) {
+        self.spans.lock().unwrap().push(Span {
+            worker,
+            task,
+            name: name.to_string(),
+            start_s,
+            end_s,
+        });
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    pub fn clear(&self) {
+        self.spans.lock().unwrap().clear();
+    }
+
+    /// Makespan: last end minus first start (0 when empty).
+    pub fn makespan(&self) -> f64 {
+        let spans = self.spans.lock().unwrap();
+        let start = spans.iter().map(|s| s.start_s).fold(f64::INFINITY, f64::min);
+        let end = spans.iter().map(|s| s.end_s).fold(0.0, f64::max);
+        if spans.is_empty() {
+            0.0
+        } else {
+            end - start
+        }
+    }
+
+    /// Fraction of `consumer_name` task time that overlaps any
+    /// `producer_name` span — Fig 14's "processing while simulating".
+    pub fn overlap_fraction(&self, producer_name: &str, consumer_name: &str) -> f64 {
+        let spans = self.spans.lock().unwrap();
+        let producers: Vec<(f64, f64)> = spans
+            .iter()
+            .filter(|s| s.name == producer_name)
+            .map(|s| (s.start_s, s.end_s))
+            .collect();
+        let mut total = 0.0;
+        let mut overlapped = 0.0;
+        for s in spans.iter().filter(|s| s.name == consumer_name) {
+            total += s.end_s - s.start_s;
+            for &(ps, pe) in &producers {
+                let lo = s.start_s.max(ps);
+                let hi = s.end_s.min(pe);
+                if hi > lo {
+                    overlapped += hi - lo;
+                }
+            }
+        }
+        if total > 0.0 {
+            (overlapped / total).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// CSV dump: `worker,task,name,start_s,end_s`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("worker,task,name,start_s,end_s\n");
+        for s in self.spans.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6}\n",
+                s.worker, s.task, s.name, s.start_s, s.end_s
+            ));
+        }
+        out
+    }
+
+    /// ASCII gantt, one row per worker, `width` character columns.
+    /// Task names map to letters (first letter, uppercased by worker row).
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let spans = self.spans.lock().unwrap();
+        if spans.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let t0 = spans.iter().map(|s| s.start_s).fold(f64::INFINITY, f64::min);
+        let t1 = spans.iter().map(|s| s.end_s).fold(0.0, f64::max);
+        let dur = (t1 - t0).max(1e-9);
+        let n_workers = spans.iter().map(|s| s.worker).max().unwrap_or(0) + 1;
+        let mut rows = vec![vec![b'.'; width]; n_workers];
+        // Later spans overwrite earlier ones — visually fine for a summary.
+        for s in spans.iter() {
+            let a = (((s.start_s - t0) / dur) * width as f64) as usize;
+            let b = ((((s.end_s - t0) / dur) * width as f64).ceil() as usize).min(width);
+            let ch = s.name.bytes().next().unwrap_or(b'?');
+            for c in &mut rows[s.worker][a.min(width.saturating_sub(1))..b] {
+                *c = ch;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("gantt {:.3}s .. {:.3}s ({} spans)\n", t0, t1, spans.len()));
+        for (w, row) in rows.iter().enumerate() {
+            out.push_str(&format!("w{w:<2} |{}|\n", String::from_utf8_lossy(row)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_fraction_computes() {
+        let t = TraceLog::new();
+        // producer 0..10, consumers 5..7 (inside) and 12..14 (outside).
+        t.record(0, 0, "sim", 0.0, 10.0);
+        t.record(1, 1, "proc", 5.0, 7.0);
+        t.record(1, 2, "proc", 12.0, 14.0);
+        let f = t.overlap_fraction("sim", "proc");
+        assert!((f - 0.5).abs() < 1e-9, "2 of 4 consumer seconds overlap, got {f}");
+    }
+
+    #[test]
+    fn makespan_spans_everything() {
+        let t = TraceLog::new();
+        t.record(0, 0, "a", 1.0, 2.0);
+        t.record(1, 1, "b", 0.5, 3.0);
+        assert!((t.makespan() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_and_gantt_render() {
+        let t = TraceLog::new();
+        t.record(0, 0, "sim", 0.0, 1.0);
+        t.record(1, 1, "proc", 0.5, 1.0);
+        let csv = t.to_csv();
+        assert!(csv.contains("sim"));
+        assert_eq!(csv.lines().count(), 3);
+        let g = t.ascii_gantt(40);
+        assert!(g.contains("w0"));
+        assert!(g.contains('s'));
+        assert!(g.contains('p'));
+    }
+
+    #[test]
+    fn empty_trace_is_benign() {
+        let t = TraceLog::new();
+        assert_eq!(t.makespan(), 0.0);
+        assert_eq!(t.overlap_fraction("a", "b"), 0.0);
+        assert!(t.ascii_gantt(10).contains("empty"));
+    }
+}

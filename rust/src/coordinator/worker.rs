@@ -1,0 +1,441 @@
+//! In-process workers: a core-slot thread pool + local object store + the
+//! task execution path (transfer → run → report).
+//!
+//! Each worker models one node of the paper's testbed: `slots` core slots
+//! (the scheduler never over-commits them), a local replica store (data
+//! locality), its own DistroStream hub identity (consumer-group member) and
+//! a shared PJRT model zoo. Input objects not present locally are
+//! *transferred* — a real byte copy, plus an optional bandwidth-model delay
+//! — so Fig 23/24's size-dependent costs are physical, not simulated.
+//!
+//! The [`WorkerHandle`] trait abstracts placement targets: the dispatcher
+//! drives [`LocalWorker`]s (threads in this process) and
+//! [`super::remote::RemoteWorker`]s (TCP processes) identically.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use log::debug;
+
+use crate::dstream::DistroStreamHub;
+use crate::runtime::ModelZoo;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timeutil::TimeScale;
+
+use super::analyser::{ResolvedArg, TaskRecord};
+use super::data::{Key, WorkerId};
+use super::dispatcher::Event;
+use super::executor::{lookup_task_fn, CtxArg, TaskCtx};
+use super::metrics::MetricsRegistry;
+use super::tracing::TraceLog;
+
+/// A placement target the dispatcher can run jobs on.
+pub trait WorkerHandle: Send + Sync {
+    fn wid(&self) -> WorkerId;
+    fn slot_count(&self) -> usize;
+    /// Enqueue a job (must return promptly; execution is asynchronous).
+    fn submit_job(&self, job: Job);
+    /// Node-death simulation: silently drop all current and future jobs.
+    fn mark_killed(&self);
+    /// Orderly shutdown notification (remote workers close their session).
+    fn disconnect(&self) {}
+}
+
+/// Network model for input transfers (on top of the physical byte copy).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferModel {
+    /// Simulated link bandwidth; `None` = only the memcpy cost.
+    pub bandwidth_mbps: Option<f64>,
+}
+
+impl TransferModel {
+    fn delay(&self, bytes: usize) -> Option<std::time::Duration> {
+        self.bandwidth_mbps
+            .map(|mbps| std::time::Duration::from_secs_f64(bytes as f64 / (mbps * 1e6)))
+    }
+}
+
+/// Scheduled failure injection: task name → remaining forced failures.
+#[derive(Debug, Default)]
+pub struct FailPlan {
+    counts: Mutex<HashMap<String, u32>>,
+}
+
+impl FailPlan {
+    /// Force the next `n` attempts of `name` to fail.
+    pub fn fail_next(&self, name: &str, n: u32) {
+        *self.counts.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Consume one scheduled failure for `name`.
+    pub fn should_fail(&self, name: &str) -> bool {
+        let mut counts = self.counts.lock().unwrap();
+        match counts.get_mut(name) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// A dispatched task: the record plus the input values to transfer.
+pub struct Job {
+    pub record: TaskRecord,
+    /// Values for inputs not already local to the worker.
+    pub inputs: Vec<(Key, Arc<Vec<u8>>)>,
+    pub attempt: u32,
+}
+
+/// Cheaply-cloneable execution context shared by a worker's pool threads.
+#[derive(Clone)]
+struct WorkerCore {
+    id: WorkerId,
+    store: Arc<Mutex<HashMap<Key, Arc<Vec<u8>>>>>,
+    hub: Arc<DistroStreamHub>,
+    zoo: Option<Arc<ModelZoo>>,
+    trace: Arc<TraceLog>,
+    metrics: Arc<MetricsRegistry>,
+    events: mpsc::Sender<Event>,
+    scale: TimeScale,
+    transfer: TransferModel,
+    fail_plan: Arc<FailPlan>,
+    killed: Arc<AtomicBool>,
+}
+
+/// One in-process worker node.
+pub struct LocalWorker {
+    pub id: WorkerId,
+    pub slots: usize,
+    core: WorkerCore,
+    pool: ThreadPool,
+}
+
+impl LocalWorker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: WorkerId,
+        slots: usize,
+        hub: Arc<DistroStreamHub>,
+        zoo: Option<Arc<ModelZoo>>,
+        trace: Arc<TraceLog>,
+        metrics: Arc<MetricsRegistry>,
+        events: mpsc::Sender<Event>,
+        scale: TimeScale,
+        transfer: TransferModel,
+        fail_plan: Arc<FailPlan>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            id,
+            slots,
+            core: WorkerCore {
+                id,
+                store: Arc::new(Mutex::new(HashMap::new())),
+                hub,
+                zoo,
+                trace,
+                metrics,
+                events,
+                scale,
+                transfer,
+                fail_plan,
+                killed: Arc::new(AtomicBool::new(false)),
+            },
+            pool: ThreadPool::new(&format!("worker{id}"), slots.max(1)),
+        })
+    }
+
+    /// Simulate node death: running/queued jobs produce no events.
+    pub fn kill(&self) {
+        self.core.killed.store(true, Ordering::SeqCst);
+        self.core.store.lock().unwrap().clear();
+    }
+
+    pub fn revive(&self) {
+        self.core.killed.store(false, Ordering::SeqCst);
+    }
+
+    pub fn fail_plan(&self) -> &Arc<FailPlan> {
+        &self.core.fail_plan
+    }
+
+    /// Replicas currently held (diagnostics).
+    pub fn store_len(&self) -> usize {
+        self.core.store.lock().unwrap().len()
+    }
+
+    /// Enqueue a job on the worker's pool (returns immediately).
+    pub fn execute(&self, job: Job) {
+        let core = self.core.clone();
+        self.pool.execute(move || core.run_job(job));
+    }
+
+    /// Block until all queued jobs drained (tests).
+    pub fn wait_idle(&self) {
+        self.pool.wait_idle();
+    }
+}
+
+impl WorkerHandle for LocalWorker {
+    fn wid(&self) -> WorkerId {
+        self.id
+    }
+    fn slot_count(&self) -> usize {
+        self.slots
+    }
+    fn submit_job(&self, job: Job) {
+        self.execute(job);
+    }
+    fn mark_killed(&self) {
+        self.kill();
+    }
+}
+
+impl WorkerCore {
+    fn run_job(&self, job: Job) {
+        let task_id = job.record.id;
+        let name = job.record.name.clone();
+
+        // ---- transfer phase: localise inputs --------------------------------
+        let t_transfer = Instant::now();
+        for (key, value) in &job.inputs {
+            let mut store = self.store.lock().unwrap();
+            if !store.contains_key(key) {
+                // The physical "transfer": one byte copy (serialisation) +
+                // the optional bandwidth-model delay.
+                let copied = value.as_ref().clone();
+                if let Some(d) = self.transfer.delay(copied.len()) {
+                    drop(store);
+                    std::thread::sleep(d);
+                    store = self.store.lock().unwrap();
+                }
+                store.insert(*key, Arc::new(copied));
+            }
+        }
+        self.metrics.on_transfer(task_id, t_transfer.elapsed());
+
+        // ---- failure injection ------------------------------------------------
+        if self.fail_plan.should_fail(&name) {
+            debug!("worker{} task {task_id} ({name}): injected failure", self.id);
+            // Count the attempt even though the body never ran.
+            self.metrics.on_exec(task_id, self.id, std::time::Duration::ZERO);
+            self.finish(task_id, Vec::new(), Some(format!("injected failure in {name}")));
+            return;
+        }
+
+        // ---- build the context -------------------------------------------------
+        let mut out_keys: Vec<(usize, Key)> = Vec::new();
+        let mut args = Vec::with_capacity(job.record.args.len());
+        for (i, arg) in job.record.args.iter().enumerate() {
+            match arg {
+                ResolvedArg::ObjIn(k) => {
+                    let Some(v) = self.store.lock().unwrap().get(k).cloned() else {
+                        self.finish(task_id, Vec::new(), Some(format!("input {k:?} missing")));
+                        return;
+                    };
+                    args.push(CtxArg::ObjIn(v));
+                }
+                ResolvedArg::ObjOut(k) => {
+                    out_keys.push((i, *k));
+                    args.push(CtxArg::ObjOut(None));
+                }
+                ResolvedArg::ObjInOut { read, write } => {
+                    let Some(v) = self.store.lock().unwrap().get(read).cloned() else {
+                        self.finish(task_id, Vec::new(), Some(format!("input {read:?} missing")));
+                        return;
+                    };
+                    out_keys.push((i, *write));
+                    args.push(CtxArg::ObjInOut { input: v, output: None });
+                }
+                ResolvedArg::FileIn(p) | ResolvedArg::FileOut(p) | ResolvedArg::FileInOut(p) => {
+                    args.push(CtxArg::File(p.clone()));
+                }
+                ResolvedArg::StreamIn(h) | ResolvedArg::StreamOut(h) => {
+                    args.push(CtxArg::Stream(h.clone()));
+                }
+                ResolvedArg::Scalar(v) => args.push(CtxArg::Scalar(v.clone())),
+            }
+        }
+
+        let Some(f) = lookup_task_fn(&name) else {
+            self.finish(task_id, Vec::new(), Some(format!("no task function registered: {name}")));
+            return;
+        };
+
+        let mut ctx = TaskCtx {
+            task_id,
+            worker_id: self.id,
+            cores: job.record.cores,
+            attempt: job.attempt,
+            args,
+            hub: Arc::clone(&self.hub),
+            zoo: self.zoo.clone(),
+            scale: self.scale,
+        };
+
+        // ---- run ------------------------------------------------------------------
+        let start_s = self.trace.now();
+        let t_exec = Instant::now();
+        let result = f(&mut ctx);
+        let exec_dur = t_exec.elapsed();
+        let end_s = self.trace.now();
+        self.trace.record(self.id, task_id, &name, start_s, end_s);
+        self.metrics.on_exec(task_id, self.id, exec_dur);
+
+        match result {
+            Ok(()) => match ctx.take_outputs() {
+                Ok(outs) => {
+                    let mut keyed = Vec::with_capacity(outs.len());
+                    for (idx, bytes) in outs {
+                        let key = out_keys
+                            .iter()
+                            .find(|&&(i, _)| i == idx)
+                            .map(|&(_, k)| k)
+                            .expect("output index mismatch");
+                        let value = Arc::new(bytes);
+                        self.store.lock().unwrap().insert(key, Arc::clone(&value));
+                        keyed.push((key, value));
+                    }
+                    self.finish(task_id, keyed, None);
+                }
+                Err(e) => self.finish(task_id, Vec::new(), Some(e.to_string())),
+            },
+            Err(e) => {
+                debug!("worker{} task {task_id} ({name}) failed: {e}", self.id);
+                self.finish(task_id, Vec::new(), Some(e.to_string()));
+            }
+        }
+    }
+
+    fn finish(&self, task: u64, outputs: Vec<(Key, Arc<Vec<u8>>)>, error: Option<String>) {
+        if self.killed.load(Ordering::SeqCst) {
+            return; // dead workers don't talk
+        }
+        let _ = self.events.send(Event::Finished { task, worker: self.id, outputs, error });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::analyser::TaskRecord;
+    use crate::coordinator::executor::register_task_fn;
+    use crate::util::wire::Wire;
+
+    fn record(id: u64, name: &str, args: Vec<ResolvedArg>) -> TaskRecord {
+        TaskRecord {
+            id,
+            name: name.into(),
+            cores: 1,
+            explicit_priority: false,
+            args,
+            produces: vec![],
+            consumes: vec![],
+            attempts_left: 1,
+        }
+    }
+
+    fn worker(events: mpsc::Sender<Event>) -> Arc<LocalWorker> {
+        let (hub, _, _) = DistroStreamHub::embedded("w0");
+        LocalWorker::new(
+            0,
+            2,
+            hub,
+            None,
+            Arc::new(TraceLog::new()),
+            Arc::new(MetricsRegistry::new()),
+            events,
+            TimeScale::IDENTITY,
+            TransferModel::default(),
+            Arc::new(FailPlan::default()),
+        )
+    }
+
+    #[test]
+    fn executes_and_reports_outputs() {
+        register_task_fn("double", |ctx| {
+            let v: u64 = ctx.obj_in_as(0)?;
+            ctx.set_output_as(1, &(v * 2));
+            Ok(())
+        });
+        let (tx, rx) = mpsc::channel();
+        let w = worker(tx);
+        w.execute(Job {
+            record: record(
+                1,
+                "double",
+                vec![ResolvedArg::ObjIn((0, 0)), ResolvedArg::ObjOut((1, 1))],
+            ),
+            inputs: vec![((0, 0), Arc::new(21u64.encode_vec()))],
+            attempt: 1,
+        });
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Event::Finished { task, outputs, error, .. } => {
+                assert_eq!(task, 1);
+                assert!(error.is_none(), "{error:?}");
+                assert_eq!(outputs.len(), 1);
+                assert_eq!(u64::decode_exact(&outputs[0].1).unwrap(), 42);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        assert_eq!(w.store_len(), 2, "input + output replicas retained");
+    }
+
+    #[test]
+    fn missing_function_reports_error() {
+        let (tx, rx) = mpsc::channel();
+        let w = worker(tx);
+        w.execute(Job { record: record(2, "not-registered", vec![]), inputs: vec![], attempt: 1 });
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Event::Finished { error: Some(e), .. } => assert!(e.contains("not-registered")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn injected_failure_consumed_once() {
+        register_task_fn("flaky", |_| Ok(()));
+        let (tx, rx) = mpsc::channel();
+        let w = worker(tx);
+        w.fail_plan().fail_next("flaky", 1);
+        for attempt in 1..=2 {
+            w.execute(Job { record: record(attempt, "flaky", vec![]), inputs: vec![], attempt: 1 });
+        }
+        let mut errors = 0;
+        for _ in 0..2 {
+            if let Event::Finished { error, .. } =
+                rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap()
+            {
+                errors += error.is_some() as u32;
+            }
+        }
+        assert_eq!(errors, 1, "exactly one injected failure");
+    }
+
+    #[test]
+    fn killed_worker_is_silent() {
+        register_task_fn("noop", |_| Ok(()));
+        let (tx, rx) = mpsc::channel();
+        let w = worker(tx);
+        w.kill();
+        w.execute(Job { record: record(3, "noop", vec![]), inputs: vec![], attempt: 1 });
+        w.wait_idle();
+        assert!(rx.try_recv().is_err(), "killed worker must not emit events");
+        assert_eq!(w.store_len(), 0, "kill clears the replica store");
+    }
+
+    #[test]
+    fn task_error_propagates_message() {
+        register_task_fn("boom", |_| anyhow::bail!("kaboom"));
+        let (tx, rx) = mpsc::channel();
+        let w = worker(tx);
+        w.execute(Job { record: record(4, "boom", vec![]), inputs: vec![], attempt: 1 });
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Event::Finished { error: Some(e), .. } => assert!(e.contains("kaboom")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! The **DistroStream Client** (paper §4.3): the per-process broker of all
+//! stream metadata requests.
+//!
+//! "The client is used to forward any stream metadata request to the
+//! DistroStream Server [...] To avoid repeated queries to the server, the
+//! client stores the retrieved metadata in a cache-like fashion."
+//!
+//! Our cache keeps *terminal* answers only — a stream that reports closed
+//! stays closed forever, so `is_closed == true` is cached and every later
+//! query is served locally; `false` answers always go to the server (they
+//! can be invalidated at any time by a producer closing).
+
+use std::collections::HashSet;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use super::api::{ConsumerMode, DStreamError, Result, StreamId, StreamType};
+use super::protocol::{DsRequest, DsResponse, StreamInfoWire};
+use super::server::{dispatch, StreamRegistry};
+use crate::util::wire::{recv_msg, send_msg};
+
+enum Transport {
+    /// Shared in-process registry (single-node deployments, tests).
+    Embedded(Arc<Mutex<StreamRegistry>>),
+    /// Framed TCP to a remote [`super::server::DistroStreamServer`].
+    Remote(Mutex<TcpStream>),
+}
+
+/// Per-process client with a terminal-answer metadata cache.
+pub struct DistroStreamClient {
+    transport: Transport,
+    /// Streams known to be completely closed (terminal).
+    closed_cache: Mutex<HashSet<StreamId>>,
+}
+
+impl DistroStreamClient {
+    pub fn embedded(registry: Arc<Mutex<StreamRegistry>>) -> Self {
+        Self { transport: Transport::Embedded(registry), closed_cache: Mutex::new(HashSet::new()) }
+    }
+
+    pub fn connect(addr: &str) -> Result<Self> {
+        let sock = TcpStream::connect(addr)
+            .map_err(|e| DStreamError::Transport(format!("connect {addr}: {e}")))?;
+        sock.set_nodelay(true).ok();
+        Ok(Self {
+            transport: Transport::Remote(Mutex::new(sock)),
+            closed_cache: Mutex::new(HashSet::new()),
+        })
+    }
+
+    fn rpc(&self, req: DsRequest) -> Result<DsResponse> {
+        match &self.transport {
+            Transport::Embedded(reg) => Ok(dispatch(reg, req)),
+            Transport::Remote(sock) => {
+                let mut sock = sock.lock().unwrap();
+                send_msg(&mut *sock, &req)
+                    .map_err(|e| DStreamError::Transport(format!("send: {e}")))?;
+                match recv_msg(&mut *sock) {
+                    Ok(Some(resp)) => Ok(resp),
+                    Ok(None) => Err(DStreamError::Transport("server closed connection".into())),
+                    Err(e) => Err(DStreamError::Transport(format!("recv: {e}"))),
+                }
+            }
+        }
+    }
+
+    fn expect_ok(&self, req: DsRequest) -> Result<()> {
+        match self.rpc(req)? {
+            DsResponse::Ok => Ok(()),
+            DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
+            other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Register (or look up by alias) a stream; returns its id.
+    pub fn register(
+        &self,
+        alias: Option<String>,
+        stype: StreamType,
+        partitions: usize,
+        base_dir: Option<String>,
+        mode: ConsumerMode,
+    ) -> Result<StreamId> {
+        match self.rpc(DsRequest::Register { alias, stype, partitions, base_dir, mode })? {
+            DsResponse::Registered(id) => Ok(id),
+            other => Err(DStreamError::Registration(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn add_producer(&self, id: StreamId, name: &str) -> Result<()> {
+        self.expect_ok(DsRequest::AddProducer { id, name: name.into() })
+    }
+
+    pub fn add_consumer(&self, id: StreamId, name: &str) -> Result<()> {
+        self.expect_ok(DsRequest::AddConsumer { id, name: name.into() })
+    }
+
+    pub fn close_producer(&self, id: StreamId, name: &str) -> Result<()> {
+        self.expect_ok(DsRequest::CloseProducer { id, name: name.into() })
+    }
+
+    pub fn close_stream(&self, id: StreamId) -> Result<()> {
+        self.expect_ok(DsRequest::CloseStream { id })
+    }
+
+    /// Completely closed? Cached once true.
+    pub fn is_closed(&self, id: StreamId) -> Result<bool> {
+        if self.closed_cache.lock().unwrap().contains(&id) {
+            return Ok(true);
+        }
+        match self.rpc(DsRequest::IsClosed { id })? {
+            DsResponse::Bool(true) => {
+                self.closed_cache.lock().unwrap().insert(id);
+                Ok(true)
+            }
+            DsResponse::Bool(false) => Ok(false),
+            DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
+            other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// FDS dedup poll (see server docs).
+    pub fn poll_files(&self, id: StreamId, candidates: Vec<String>) -> Result<Vec<String>> {
+        match self.rpc(DsRequest::PollFiles { id, candidates })? {
+            DsResponse::Files(fs) => Ok(fs),
+            DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
+            other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn info(&self, id: StreamId) -> Result<StreamInfoWire> {
+        match self.rpc(DsRequest::Info { id })? {
+            DsResponse::Info(i) => Ok(i),
+            DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
+            other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn unregister(&self, id: StreamId) -> Result<()> {
+        self.closed_cache.lock().unwrap().remove(&id);
+        self.expect_ok(DsRequest::Unregister { id })
+    }
+
+    pub fn ping(&self) -> Result<()> {
+        match self.rpc(DsRequest::Ping)? {
+            DsResponse::Pong => Ok(()),
+            other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dstream::server::DistroStreamServer;
+
+    fn exercise(c: &DistroStreamClient) {
+        let id = c
+            .register(Some("s".into()), StreamType::Object, 2, None, ConsumerMode::ExactlyOnce)
+            .unwrap();
+        // Alias dedupe.
+        let id2 = c
+            .register(Some("s".into()), StreamType::Object, 2, None, ConsumerMode::ExactlyOnce)
+            .unwrap();
+        assert_eq!(id, id2);
+        c.add_producer(id, "p").unwrap();
+        c.add_consumer(id, "c").unwrap();
+        assert!(!c.is_closed(id).unwrap());
+        c.close_producer(id, "p").unwrap();
+        assert!(c.is_closed(id).unwrap());
+        // Cached terminal answer (works even if we unregister the stream
+        // behind the cache's back).
+        assert!(c.is_closed(id).unwrap());
+        let info = c.info(id).unwrap();
+        assert_eq!(info.producers, 1);
+        assert_eq!(info.consumers, 1);
+        assert!(info.closed);
+        c.unregister(id).unwrap();
+        assert!(matches!(c.is_closed(id), Err(DStreamError::UnknownStream(_))));
+    }
+
+    #[test]
+    fn embedded_flow() {
+        let reg = Arc::new(Mutex::new(StreamRegistry::new()));
+        exercise(&DistroStreamClient::embedded(reg));
+    }
+
+    #[test]
+    fn remote_flow() {
+        let server = DistroStreamServer::start("127.0.0.1:0").unwrap();
+        let client = DistroStreamClient::connect(&server.addr.to_string()).unwrap();
+        client.ping().unwrap();
+        exercise(&client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn two_clients_share_server_state() {
+        let server = DistroStreamServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let a = DistroStreamClient::connect(&addr).unwrap();
+        let b = DistroStreamClient::connect(&addr).unwrap();
+        let id =
+            a.register(Some("x".into()), StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce)
+                .unwrap();
+        // b sees the same stream through the alias.
+        let id_b = b
+            .register(Some("x".into()), StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce)
+            .unwrap();
+        assert_eq!(id, id_b);
+        // File dedup is global across clients.
+        assert_eq!(a.poll_files(id, vec!["f1".into()]).unwrap(), vec!["f1".to_string()]);
+        assert!(b.poll_files(id, vec!["f1".into()]).unwrap().is_empty());
+        server.shutdown();
+    }
+}

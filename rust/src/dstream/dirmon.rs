@@ -1,0 +1,99 @@
+//! Directory monitor — the FDS backend (paper §4.2.2).
+//!
+//! "A custom implementation that monitors the creation of files inside a
+//! given directory. The Directory Monitor backend sends the file locations
+//! through the stream and relies on a distributed file system to share the
+//! file content."
+//!
+//! We scan on demand (each `poll`) instead of inotify: std-only, portable,
+//! and the dedup lives in the DistroStream Server so that *all* clients
+//! (processes) share one delivered-set, like a shared GPFS directory.
+
+use std::path::{Path, PathBuf};
+
+/// Scan `dir` for regular files, sorted by (mtime, name) so delivery order
+/// approximates creation order. Non-recursive, mirrors the paper's backend.
+///
+/// Files whose name starts with `.` or ends with [`TMP_SUFFIX`] are skipped:
+/// producers write `name.tmp` then rename, so consumers never observe
+/// partially-written files.
+pub fn scan_dir(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut entries: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let meta = match entry.metadata() {
+            Ok(m) => m,
+            Err(_) => continue, // raced with deletion
+        };
+        if !meta.is_file() {
+            continue;
+        }
+        if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+            if name.starts_with('.') || name.ends_with(TMP_SUFFIX) {
+                continue;
+            }
+        }
+        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        entries.push((mtime, path));
+    }
+    entries.sort();
+    Ok(entries.into_iter().map(|(_, p)| p).collect())
+}
+
+/// Suffix used for in-progress writes (see [`publish_file`]).
+pub const TMP_SUFFIX: &str = ".inprogress";
+
+/// Atomically create a file in a monitored directory: write to a hidden
+/// temp name, then rename. Consumers polling concurrently either see the
+/// complete file or nothing.
+pub fn publish_file(dir: &Path, name: &str, contents: &[u8]) -> std::io::Result<PathBuf> {
+    let tmp = dir.join(format!("{name}{TMP_SUFFIX}"));
+    let fin = dir.join(name);
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, &fin)?;
+    Ok(fin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hybridws-dirmon-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn scan_lists_only_complete_regular_files() {
+        let d = tmpdir("scan");
+        publish_file(&d, "a.dat", b"1").unwrap();
+        publish_file(&d, "b.dat", b"2").unwrap();
+        std::fs::write(d.join(format!("c.dat{TMP_SUFFIX}")), b"partial").unwrap();
+        std::fs::write(d.join(".hidden"), b"x").unwrap();
+        std::fs::create_dir(d.join("subdir")).unwrap();
+        let got = scan_dir(&d).unwrap();
+        let names: Vec<_> =
+            got.iter().map(|p| p.file_name().unwrap().to_str().unwrap().to_string()).collect();
+        assert_eq!(names.len(), 2);
+        assert!(names.contains(&"a.dat".to_string()));
+        assert!(names.contains(&"b.dat".to_string()));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn publish_is_atomic_rename() {
+        let d = tmpdir("atomic");
+        let p = publish_file(&d, "x.bin", &[1, 2, 3]).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), vec![1, 2, 3]);
+        assert!(!d.join(format!("x.bin{TMP_SUFFIX}")).exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn scan_missing_dir_errors() {
+        assert!(scan_dir(Path::new("/definitely/not/here")).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! `FileDistroStream` (FDS) — file streams over a shared directory
+//! (paper §4.2.2).
+//!
+//! Publishing is *implicit*: producers simply write files into the
+//! monitored base directory (use [`FileDistroStream::write_file`] for an
+//! atomic create). `poll()` scans the directory and asks the DistroStream
+//! Server which of the present paths have not yet been delivered to this
+//! stream's consumers — the server-side dedup makes the set global across
+//! processes, mirroring the shared-filesystem Directory Monitor.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::api::{Result, StreamHandle, StreamId, StreamType};
+use super::dirmon;
+use super::hub::DistroStreamHub;
+
+/// A file stream bound to this process's hub.
+pub struct FileDistroStream {
+    handle: StreamHandle,
+    hub: Arc<DistroStreamHub>,
+    /// Producer/consumer identity at the server (per-task for task args).
+    identity: String,
+}
+
+impl FileDistroStream {
+    pub fn attach(handle: StreamHandle, hub: Arc<DistroStreamHub>) -> Self {
+        let identity = hub.process().to_string();
+        Self::attach_as(handle, hub, identity)
+    }
+
+    /// Bind with an explicit producer/consumer identity.
+    pub fn attach_as(handle: StreamHandle, hub: Arc<DistroStreamHub>, identity: String) -> Self {
+        debug_assert_eq!(handle.stype, StreamType::File);
+        Self { handle, hub, identity }
+    }
+
+    /// This stream object's identity.
+    pub fn identity(&self) -> &str {
+        &self.identity
+    }
+
+    // ---- metadata ---------------------------------------------------------
+
+    pub fn id(&self) -> StreamId {
+        self.handle.id
+    }
+
+    pub fn alias(&self) -> Option<&str> {
+        self.handle.alias.as_deref()
+    }
+
+    pub fn stream_type(&self) -> StreamType {
+        StreamType::File
+    }
+
+    pub fn handle(&self) -> &StreamHandle {
+        &self.handle
+    }
+
+    /// The monitored directory, resolved through this process's mount
+    /// table (handles carry canonical paths; see `DistroStreamHub::add_mount`).
+    pub fn base_dir(&self) -> PathBuf {
+        let canonical = self.handle.base_dir.as_deref().expect("FDS handle without base_dir");
+        PathBuf::from(self.hub.to_local(canonical))
+    }
+
+    // ---- produce ------------------------------------------------------------
+
+    /// Atomically create `name` with `contents` in the base dir. This is a
+    /// convenience — any regular file write into the directory publishes
+    /// too (possibly observed mid-write unless written via temp+rename).
+    pub fn write_file(&self, name: &str, contents: &[u8]) -> Result<PathBuf> {
+        // First write registers this process as a producer (lazy, like ODS).
+        self.hub.client().add_producer(self.handle.id, &self.identity)?;
+        Ok(dirmon::publish_file(&self.base_dir(), name, contents)?)
+    }
+
+    // ---- consume -------------------------------------------------------------
+
+    /// Newly available file paths (each path delivered exactly once across
+    /// all consumers).
+    pub fn poll(&self) -> Result<Vec<PathBuf>> {
+        self.hub.client().add_consumer(self.handle.id, &self.identity)?;
+        let present = dirmon::scan_dir(&self.base_dir())?;
+        if present.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Dedup at the server is on *canonical* paths so that consumers on
+        // hosts with different mount points share one delivered-set.
+        let candidates: Vec<String> = present
+            .iter()
+            .map(|p| self.hub.to_canonical(&p.to_string_lossy()))
+            .collect();
+        let fresh = self.hub.client().poll_files(self.handle.id, candidates)?;
+        Ok(fresh.into_iter().map(|c| PathBuf::from(self.hub.to_local(&c))).collect())
+    }
+
+    /// Poll, waiting up to `timeout` for at least one new file.
+    pub fn poll_timeout(&self, timeout: Duration) -> Result<Vec<PathBuf>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let files = self.poll()?;
+            if !files.is_empty() || Instant::now() >= deadline {
+                return Ok(files);
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    // ---- status / close --------------------------------------------------------
+
+    pub fn is_closed(&self) -> bool {
+        self.hub.client().is_closed(self.handle.id).unwrap_or(false)
+    }
+
+    pub fn close(&self) -> Result<()> {
+        self.hub.client().close_producer(self.handle.id, &self.identity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dstream::hub::DistroStreamHub;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hybridws-fds-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_then_poll_delivers_once() {
+        let d = tmpdir("once");
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.file_stream(None, d.to_str().unwrap()).unwrap();
+        s.write_file("f1.dat", b"hello").unwrap();
+        s.write_file("f2.dat", b"world").unwrap();
+        let got = s.poll().unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(s.poll().unwrap().is_empty(), "paths must deliver exactly once");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn delivery_shared_across_consumers() {
+        let d = tmpdir("shared");
+        let (hub1, reg, core) = DistroStreamHub::embedded("c1");
+        let hub2 = DistroStreamHub::attach_embedded("c2", &reg, &core);
+        let s1 = hub1.file_stream(Some("fs"), d.to_str().unwrap()).unwrap();
+        let s2 = hub2.file_stream(Some("fs"), d.to_str().unwrap()).unwrap();
+        for i in 0..6 {
+            s1.write_file(&format!("f{i}.dat"), b"x").unwrap();
+        }
+        let a = s1.poll().unwrap();
+        let b = s2.poll().unwrap();
+        assert_eq!(a.len() + b.len(), 6);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn poll_timeout_sees_late_file() {
+        let d = tmpdir("late");
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.file_stream(None, d.to_str().unwrap()).unwrap();
+        let dir = d.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            dirmon::publish_file(&dir, "late.dat", b"z").unwrap();
+        });
+        let got = s.poll_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(got.len(), 1);
+        t.join().unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn close_marks_stream_closed_and_drains() {
+        let d = tmpdir("close");
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.file_stream(None, d.to_str().unwrap()).unwrap();
+        s.write_file("f.dat", b"x").unwrap();
+        s.close().unwrap();
+        assert!(s.is_closed());
+        assert_eq!(s.poll().unwrap().len(), 1, "drain after close");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn mount_points_resolve_canonical_paths() {
+        // Paper §7 future work: the same share mounted at different local
+        // paths on different "hosts". Host A sees the real dir; host B sees
+        // it through a symlinked mount point.
+        let share = tmpdir("mount-share");
+        let host_b_view = std::env::temp_dir()
+            .join(format!("hybridws-fds-mount-b-{}", std::process::id()));
+        let _ = std::fs::remove_file(&host_b_view);
+        std::os::unix::fs::symlink(&share, &host_b_view).unwrap();
+
+        let (hub_a, reg, core) = DistroStreamHub::embedded("hostA");
+        let hub_b = DistroStreamHub::attach_embedded("hostB", &reg, &core);
+        // Canonical path: "/gpfs/exp1"; each host mounts it differently.
+        hub_a.add_mount("/gpfs/exp1", share.to_str().unwrap());
+        hub_b.add_mount("/gpfs/exp1", host_b_view.to_str().unwrap());
+
+        let sa = hub_a.file_stream(Some("shared-fs"), "/gpfs/exp1").unwrap();
+        let sb = hub_b.file_stream(Some("shared-fs"), "/gpfs/exp1").unwrap();
+        sa.write_file("x.dat", b"payload").unwrap();
+
+        // Host B polls through its own mount point and must receive the
+        // file exactly once, as a locally-valid path.
+        let got = sb.poll().unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(got[0].starts_with(&host_b_view));
+        assert_eq!(std::fs::read(&got[0]).unwrap(), b"payload");
+        // Dedup is canonical: host A must not receive the same file again.
+        assert!(sa.poll().unwrap().is_empty());
+
+        std::fs::remove_file(&host_b_view).unwrap();
+        std::fs::remove_dir_all(&share).unwrap();
+    }
+
+    #[test]
+    fn unmounted_paths_pass_through_identity() {
+        let (hub, _, _) = DistroStreamHub::embedded("h");
+        assert_eq!(hub.to_local("/plain/path"), "/plain/path");
+        assert_eq!(hub.to_canonical("/plain/path"), "/plain/path");
+        hub.add_mount("/gpfs", "/mnt/share");
+        assert_eq!(hub.to_local("/gpfs/a/b"), "/mnt/share/a/b");
+        assert_eq!(hub.to_canonical("/mnt/share/a/b"), "/gpfs/a/b");
+    }
+
+    #[test]
+    fn in_progress_files_are_invisible() {
+        let d = tmpdir("inprog");
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.file_stream(None, d.to_str().unwrap()).unwrap();
+        std::fs::write(d.join(format!("half.dat{}", dirmon::TMP_SUFFIX)), b"partial").unwrap();
+        assert!(s.poll().unwrap().is_empty());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

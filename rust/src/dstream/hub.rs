@@ -1,0 +1,244 @@
+//! `DistroStreamHub`: per-process wiring of the DistroStream components.
+//!
+//! The paper's deployment (Fig 8): the master spawns the DistroStream
+//! Server and the backend (Kafka / Directory Monitor) and owns a client;
+//! every worker owns a client. A hub bundles the client + a broker handle +
+//! this process's identity, and is the factory for stream objects — either
+//! fresh ones or re-materialised from a [`StreamHandle`] received as a task
+//! parameter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::broker::{BrokerClient, BrokerCore};
+
+use super::api::{ConsumerMode, Result, StreamHandle, StreamItem, StreamType};
+use super::client::DistroStreamClient;
+use super::file_stream::FileDistroStream;
+use super::object_stream::ObjectDistroStream;
+use super::server::StreamRegistry;
+
+/// Default number of broker partitions per object stream.
+pub const DEFAULT_PARTITIONS: usize = 4;
+
+/// Per-process access point to the DistroStream library.
+pub struct DistroStreamHub {
+    client: Arc<DistroStreamClient>,
+    broker: Arc<BrokerClient>,
+    /// Unique name of this process (consumer-group member identity).
+    process: String,
+    /// Consumer group shared by all consumers of this application
+    /// ("registered to a consumer group shared by all the consumers of the
+    /// same application to avoid replicated messages", §4.2.1).
+    group: String,
+    /// Per-poll record cap (usize::MAX = paper's greedy behaviour; finite
+    /// values implement the balanced-poll policy of §6.4's future work).
+    max_poll_records: AtomicU64,
+    /// Mount table for FDS over shared disks with different mount points
+    /// (the paper's §7 future work): canonical prefix → local prefix.
+    mounts: RwLock<Vec<(String, String)>>,
+}
+
+impl DistroStreamHub {
+    /// Single-process deployment: embedded registry + embedded broker.
+    /// Returns the hub and the shared state so more hubs (one per simulated
+    /// process) can attach via [`DistroStreamHub::attach_embedded`].
+    pub fn embedded(process: &str) -> (Arc<Self>, Arc<Mutex<StreamRegistry>>, Arc<BrokerCore>) {
+        let registry = Arc::new(Mutex::new(StreamRegistry::new()));
+        let core = BrokerCore::new();
+        let hub = Self::attach_embedded(process, &registry, &core);
+        (hub, registry, core)
+    }
+
+    /// Attach another in-process hub (a simulated worker process) to shared
+    /// embedded state.
+    pub fn attach_embedded(
+        process: &str,
+        registry: &Arc<Mutex<StreamRegistry>>,
+        core: &Arc<BrokerCore>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            client: Arc::new(DistroStreamClient::embedded(Arc::clone(registry))),
+            broker: Arc::new(BrokerClient::embedded(Arc::clone(core))),
+            process: process.to_string(),
+            group: "app".to_string(),
+            max_poll_records: AtomicU64::new(u64::MAX),
+            mounts: RwLock::new(Vec::new()),
+        })
+    }
+
+    /// Distributed deployment: connect to a DistroStream Server and broker
+    /// over TCP.
+    pub fn connect(process: &str, ds_addr: &str, broker_addr: &str) -> Result<Arc<Self>> {
+        let client = DistroStreamClient::connect(ds_addr)?;
+        let broker = BrokerClient::connect(broker_addr)?;
+        Ok(Arc::new(Self {
+            client: Arc::new(client),
+            broker: Arc::new(broker),
+            process: process.to_string(),
+            group: "app".to_string(),
+            max_poll_records: AtomicU64::new(u64::MAX),
+            mounts: RwLock::new(Vec::new()),
+        }))
+    }
+
+    pub fn process(&self) -> &str {
+        &self.process
+    }
+
+    pub fn group(&self) -> &str {
+        &self.group
+    }
+
+    pub fn client(&self) -> &Arc<DistroStreamClient> {
+        &self.client
+    }
+
+    pub fn broker(&self) -> &Arc<BrokerClient> {
+        &self.broker
+    }
+
+    /// Per-poll cap (balanced-poll policy; `usize::MAX` = unlimited).
+    pub fn set_max_poll_records(&self, n: usize) {
+        self.max_poll_records.store(n as u64, Ordering::SeqCst);
+    }
+
+    pub fn max_poll_records(&self) -> usize {
+        let v = self.max_poll_records.load(Ordering::SeqCst);
+        usize::try_from(v).unwrap_or(usize::MAX)
+    }
+
+    /// Map a canonical FDS path prefix to this process's local mount point
+    /// (paper §7 future work: "extend the FileDistroStream to support
+    /// shared disks with different mount-points"). Stream handles carry
+    /// *canonical* paths; each hub resolves them locally.
+    pub fn add_mount(&self, canonical_prefix: &str, local_prefix: &str) {
+        self.mounts
+            .write()
+            .unwrap()
+            .push((canonical_prefix.to_string(), local_prefix.to_string()));
+    }
+
+    /// Canonical → local path (identity without a matching mount).
+    pub fn to_local(&self, canonical: &str) -> String {
+        for (c, l) in self.mounts.read().unwrap().iter() {
+            if let Some(rest) = canonical.strip_prefix(c.as_str()) {
+                return format!("{l}{rest}");
+            }
+        }
+        canonical.to_string()
+    }
+
+    /// Local → canonical path (identity without a matching mount).
+    pub fn to_canonical(&self, local: &str) -> String {
+        for (c, l) in self.mounts.read().unwrap().iter() {
+            if let Some(rest) = local.strip_prefix(l.as_str()) {
+                return format!("{c}{rest}");
+            }
+        }
+        local.to_string()
+    }
+
+    /// Create (or look up by alias) a typed object stream.
+    pub fn object_stream<T: StreamItem>(
+        self: &Arc<Self>,
+        alias: Option<&str>,
+    ) -> Result<ObjectDistroStream<T>> {
+        self.object_stream_with(alias, DEFAULT_PARTITIONS, ConsumerMode::ExactlyOnce)
+    }
+
+    /// Object stream with explicit partitions and consumer mode.
+    pub fn object_stream_with<T: StreamItem>(
+        self: &Arc<Self>,
+        alias: Option<&str>,
+        partitions: usize,
+        mode: ConsumerMode,
+    ) -> Result<ObjectDistroStream<T>> {
+        let id = self.client.register(
+            alias.map(str::to_string),
+            StreamType::Object,
+            partitions,
+            None,
+            mode,
+        )?;
+        let handle = StreamHandle {
+            id,
+            alias: alias.map(str::to_string),
+            stype: StreamType::Object,
+            partitions,
+            base_dir: None,
+            mode,
+        };
+        Ok(ObjectDistroStream::attach(handle, Arc::clone(self)))
+    }
+
+    /// Create (or look up by alias) a file stream over `base_dir`.
+    pub fn file_stream(
+        self: &Arc<Self>,
+        alias: Option<&str>,
+        base_dir: &str,
+    ) -> Result<FileDistroStream> {
+        let id = self.client.register(
+            alias.map(str::to_string),
+            StreamType::File,
+            1,
+            Some(base_dir.to_string()),
+            ConsumerMode::ExactlyOnce,
+        )?;
+        let handle = StreamHandle {
+            id,
+            alias: alias.map(str::to_string),
+            stype: StreamType::File,
+            partitions: 1,
+            base_dir: Some(base_dir.to_string()),
+            mode: ConsumerMode::ExactlyOnce,
+        };
+        Ok(FileDistroStream::attach(handle, Arc::clone(self)))
+    }
+
+    /// Materialise a typed object stream from a received handle
+    /// (task-parameter path).
+    pub fn open_object<T: StreamItem>(self: &Arc<Self>, handle: &StreamHandle) -> ObjectDistroStream<T> {
+        debug_assert_eq!(handle.stype, StreamType::Object);
+        ObjectDistroStream::attach(handle.clone(), Arc::clone(self))
+    }
+
+    /// Materialise a file stream from a received handle.
+    pub fn open_file(self: &Arc<Self>, handle: &StreamHandle) -> FileDistroStream {
+        debug_assert_eq!(handle.stype, StreamType::File);
+        FileDistroStream::attach(handle.clone(), Arc::clone(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedded_hub_creates_streams() {
+        let (hub, _reg, _core) = DistroStreamHub::embedded("main");
+        let ods = hub.object_stream::<u64>(Some("numbers")).unwrap();
+        assert_eq!(ods.alias(), Some("numbers"));
+        let handle = ods.handle().clone();
+        // Second process attaches to the same stream via the handle.
+        let ods2 = hub.open_object::<u64>(&handle);
+        assert_eq!(ods2.id(), ods.id());
+    }
+
+    #[test]
+    fn alias_lookup_shares_stream() {
+        let (hub, reg, core) = DistroStreamHub::embedded("p1");
+        let hub2 = DistroStreamHub::attach_embedded("p2", &reg, &core);
+        let a = hub.object_stream::<u64>(Some("shared")).unwrap();
+        let b = hub2.object_stream::<u64>(Some("shared")).unwrap();
+        assert_eq!(a.id(), b.id());
+    }
+
+    #[test]
+    fn max_poll_records_roundtrip() {
+        let (hub, _, _) = DistroStreamHub::embedded("p");
+        assert_eq!(hub.max_poll_records(), usize::MAX);
+        hub.set_max_poll_records(5);
+        assert_eq!(hub.max_poll_records(), 5);
+    }
+}

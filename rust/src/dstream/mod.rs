@@ -1,0 +1,39 @@
+//! The **Distributed Stream Library** (DistroStreamLib) — the paper's §4.
+//!
+//! Components, mirroring Fig 4–6 of the paper:
+//!
+//! - [`api`] — the `DistroStream` representation: stream types, consumer
+//!   modes, the serialisable [`api::StreamHandle`] that travels through
+//!   task parameters, and the [`api::StreamItem`] codec trait.
+//! - [`object_stream`] — `ObjectDistroStream<T>` (ODS): typed object
+//!   streams backed by the broker (Kafka in the paper). Publisher and
+//!   consumer are instantiated lazily on first publish/poll, exactly as
+//!   §4.2.1 describes.
+//! - [`file_stream`] — `FileDistroStream` (FDS): file streams backed by a
+//!   directory monitor over a shared filesystem (§4.2.2). Publishing is
+//!   implicit (write a file into the base dir); `poll` returns newly
+//!   created paths.
+//! - [`dirmon`] — the directory-scanning backend used by FDS.
+//! - [`server`] — the **DistroStream Server**: the per-deployment registry
+//!   of streams, producers and consumers; assigns stream ids, checks
+//!   access, tracks close state and deduplicates FDS deliveries (§4.3).
+//! - [`client`] — the **DistroStream Client**: per-process broker of
+//!   metadata requests with a cache of terminal answers (§4.3).
+//! - [`hub`] — process-level wiring: one `DistroStreamHub` per process
+//!   bundles the client + stream backend and opens streams from handles.
+
+pub mod api;
+pub mod client;
+pub mod dirmon;
+pub mod file_stream;
+pub mod hub;
+pub mod object_stream;
+pub mod protocol;
+pub mod server;
+
+pub use api::{ConsumerMode, DStreamError, StreamHandle, StreamItem, StreamType};
+pub use client::DistroStreamClient;
+pub use file_stream::FileDistroStream;
+pub use hub::DistroStreamHub;
+pub use object_stream::ObjectDistroStream;
+pub use server::{DistroStreamServer, StreamRegistry};

@@ -1,0 +1,347 @@
+//! `ObjectDistroStream<T>` (ODS) — typed object streams over the broker
+//! (paper §4.2.1).
+//!
+//! Each ODS maps to one broker topic named after the stream id. The
+//! publisher and consumer are instantiated lazily on the first `publish` /
+//! `poll` ("the producer and consumer instances are only registered when
+//! required, avoiding unneeded registrations on the streaming backend").
+//! Items are serialised through [`StreamItem`]; a list publish sends one
+//! record per element so the backend registers them separately, exactly as
+//! the paper describes for `KafkaProducer.send`.
+
+use std::collections::HashMap;
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::broker::record::ProducerRecord;
+use crate::broker::AssignmentMode;
+
+use super::api::{ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType};
+use super::hub::DistroStreamHub;
+
+/// Lazily-created publisher side (mirrors the paper's `ODSPublisher`).
+struct OdsPublisher {
+    topic: String,
+}
+
+/// Lazily-created consumer side (mirrors the paper's `ODSConsumer`).
+struct OdsConsumer {
+    topic: String,
+    /// Highest claimed offset + 1 per partition (for at-least-once `ack`).
+    claimed: Mutex<HashMap<usize, u64>>,
+}
+
+/// A typed object stream.
+pub struct ObjectDistroStream<T: StreamItem> {
+    handle: StreamHandle,
+    hub: Arc<DistroStreamHub>,
+    /// Producer/consumer identity at the server and in the consumer group.
+    /// Defaults to the hub's process name; tasks get a per-task identity so
+    /// two tasks on one worker are distinct producers/consumers.
+    identity: String,
+    publisher: OnceLock<OdsPublisher>,
+    consumer: OnceLock<OdsConsumer>,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T: StreamItem> ObjectDistroStream<T> {
+    /// Bind a stream object to this process's hub (used by the hub factory
+    /// and by tasks re-materialising a received [`StreamHandle`]).
+    pub fn attach(handle: StreamHandle, hub: Arc<DistroStreamHub>) -> Self {
+        let identity = hub.process().to_string();
+        Self::attach_as(handle, hub, identity)
+    }
+
+    /// Bind with an explicit producer/consumer identity.
+    pub fn attach_as(handle: StreamHandle, hub: Arc<DistroStreamHub>, identity: String) -> Self {
+        debug_assert_eq!(handle.stype, StreamType::Object);
+        Self {
+            handle,
+            hub,
+            identity,
+            publisher: OnceLock::new(),
+            consumer: OnceLock::new(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// This stream object's identity.
+    pub fn identity(&self) -> &str {
+        &self.identity
+    }
+
+    // ---- metadata (paper Listing 3) -------------------------------------
+
+    pub fn id(&self) -> StreamId {
+        self.handle.id
+    }
+
+    pub fn alias(&self) -> Option<&str> {
+        self.handle.alias.as_deref()
+    }
+
+    pub fn stream_type(&self) -> StreamType {
+        StreamType::Object
+    }
+
+    pub fn handle(&self) -> &StreamHandle {
+        &self.handle
+    }
+
+    pub fn mode(&self) -> ConsumerMode {
+        self.handle.mode
+    }
+
+    // ---- publish side ----------------------------------------------------
+
+    fn publisher(&self) -> Result<&OdsPublisher> {
+        if let Some(p) = self.publisher.get() {
+            return Ok(p);
+        }
+        // First publish: ensure the backend topic exists and register as a
+        // producer with the DistroStream Server.
+        let topic = self.handle.topic();
+        self.hub.broker().ensure_topic(&topic, self.handle.partitions)?;
+        self.hub.client().add_producer(self.handle.id, &self.identity)?;
+        let _ = self.publisher.set(OdsPublisher { topic });
+        Ok(self.publisher.get().unwrap())
+    }
+
+    /// Publish a single message.
+    pub fn publish(&self, item: &T) -> Result<()> {
+        let p = self.publisher()?;
+        self.hub.broker().publish(&p.topic, ProducerRecord::new(item.to_stream_bytes()))?;
+        Ok(())
+    }
+
+    /// Publish a list of messages (one record per element).
+    pub fn publish_list(&self, items: &[T]) -> Result<()> {
+        let p = self.publisher()?;
+        for item in items {
+            self.hub.broker().publish(&p.topic, ProducerRecord::new(item.to_stream_bytes()))?;
+        }
+        Ok(())
+    }
+
+    // ---- poll side ---------------------------------------------------------
+
+    fn consumer(&self) -> Result<&OdsConsumer> {
+        if let Some(c) = self.consumer.get() {
+            return Ok(c);
+        }
+        let topic = self.handle.topic();
+        self.hub.broker().ensure_topic(&topic, self.handle.partitions)?;
+        self.hub.broker().join_group(
+            self.hub.group(),
+            &topic,
+            &self.identity,
+            AssignmentMode::Shared,
+        )?;
+        self.hub.client().add_consumer(self.handle.id, &self.identity)?;
+        let _ = self.consumer.set(OdsConsumer { topic, claimed: Mutex::new(HashMap::new()) });
+        Ok(self.consumer.get().unwrap())
+    }
+
+    /// Retrieve all currently-available unread messages (paper `poll()`).
+    pub fn poll(&self) -> Result<Vec<T>> {
+        let c = self.consumer()?;
+        let max = self.hub.max_poll_records();
+        let records = self.hub.broker().poll(self.hub.group(), &c.topic, &self.identity, max)?;
+        if records.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut items = Vec::with_capacity(records.len());
+        for r in &records {
+            items.push(T::from_stream_bytes(&r.value.0)?);
+        }
+        // Commit/delete bound: the group's *claim position* — never the high
+        // watermark, which may already include records published after our
+        // claim (deleting those would lose data).
+        let positions = self.hub.broker().positions(self.hub.group(), &c.topic)?;
+        match self.handle.mode {
+            ConsumerMode::ExactlyOnce => {
+                let commits: Vec<(usize, u64)> =
+                    positions.iter().enumerate().map(|(p, &(pos, _))| (p, pos)).collect();
+                self.hub.broker().commit(self.hub.group(), &c.topic, &commits)?;
+                for (p, &(pos, _)) in positions.iter().enumerate() {
+                    self.hub.broker().delete_records(&c.topic, p, pos)?;
+                }
+            }
+            ConsumerMode::AtMostOnce => {
+                let commits: Vec<(usize, u64)> =
+                    positions.iter().enumerate().map(|(p, &(pos, _))| (p, pos)).collect();
+                self.hub.broker().commit(self.hub.group(), &c.topic, &commits)?;
+            }
+            ConsumerMode::AtLeastOnce => {
+                let mut claimed = c.claimed.lock().unwrap();
+                for (p, &(pos, _)) in positions.iter().enumerate() {
+                    claimed.insert(p, pos);
+                }
+            }
+        }
+        Ok(items)
+    }
+
+    /// Poll, waiting up to `timeout` for at least one element (paper
+    /// `poll(timeout)`).
+    pub fn poll_timeout(&self, timeout: Duration) -> Result<Vec<T>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let items = self.poll()?;
+            if !items.is_empty() || Instant::now() >= deadline {
+                return Ok(items);
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    /// At-least-once: acknowledge everything polled so far as processed.
+    pub fn ack(&self) -> Result<()> {
+        let c = self.consumer()?;
+        let claimed = c.claimed.lock().unwrap();
+        let commits: Vec<(usize, u64)> = claimed.iter().map(|(&p, &o)| (p, o)).collect();
+        drop(claimed);
+        if !commits.is_empty() {
+            self.hub.broker().commit(self.hub.group(), &c.topic, &commits)?;
+        }
+        Ok(())
+    }
+
+    // ---- status / close ---------------------------------------------------
+
+    /// True once the stream is completely closed (all producers closed).
+    pub fn is_closed(&self) -> bool {
+        self.hub.client().is_closed(self.handle.id).unwrap_or(false)
+    }
+
+    /// Close this process's producer side. The stream reports closed once
+    /// every registered producer has closed.
+    pub fn close(&self) -> Result<()> {
+        self.hub.client().close_producer(self.handle.id, &self.identity)
+    }
+
+    /// Unprocessed records currently retained by the backend.
+    pub fn backlog(&self) -> Result<usize> {
+        Ok(self.hub.broker().topic_stats(&self.handle.topic()).map(|s| s.records).unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dstream::hub::DistroStreamHub;
+    use crate::util::wire::Blob;
+
+    #[test]
+    fn publish_poll_roundtrip_typed() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.object_stream::<u64>(None).unwrap();
+        s.publish(&7).unwrap();
+        s.publish_list(&[8, 9]).unwrap();
+        let mut got = s.poll().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![7, 8, 9]);
+        assert!(s.poll().unwrap().is_empty(), "exactly-once: nothing redelivered");
+    }
+
+    #[test]
+    fn exactly_once_deletes_backend_records() {
+        let (hub, _, core) = DistroStreamHub::embedded("main");
+        let s = hub.object_stream::<u64>(None).unwrap();
+        s.publish_list(&[1, 2, 3]).unwrap();
+        assert_eq!(s.poll().unwrap().len(), 3);
+        let stats = core.topic_stats(&s.handle().topic()).unwrap();
+        assert_eq!(stats.records, 0, "processed records must be deleted");
+    }
+
+    #[test]
+    fn two_processes_share_exactly_once() {
+        let (hub1, reg, core) = DistroStreamHub::embedded("p1");
+        let hub2 = DistroStreamHub::attach_embedded("p2", &reg, &core);
+        let a = hub1.object_stream::<u64>(Some("s")).unwrap();
+        let b = hub2.object_stream::<u64>(Some("s")).unwrap();
+        a.publish_list(&(0..20).collect::<Vec<u64>>()).unwrap();
+        let got_a = a.poll().unwrap();
+        let got_b = b.poll().unwrap();
+        assert_eq!(got_a.len() + got_b.len(), 20, "no loss, no duplication");
+    }
+
+    #[test]
+    fn close_semantics_through_stream() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.object_stream::<u64>(None).unwrap();
+        s.publish(&1).unwrap(); // registers the producer
+        assert!(!s.is_closed());
+        s.close().unwrap();
+        assert!(s.is_closed());
+        // Paper loop: drain after close.
+        assert_eq!(s.poll().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn poll_timeout_returns_when_data_arrives() {
+        let (hub, reg, core) = DistroStreamHub::embedded("consumer");
+        let hub_p = DistroStreamHub::attach_embedded("producer", &reg, &core);
+        let c = hub.object_stream::<u64>(Some("t")).unwrap();
+        let p = hub_p.object_stream::<u64>(Some("t")).unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            p.publish(&42).unwrap();
+        });
+        let got = c.poll_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(got, vec![42]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn poll_timeout_expires_empty() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.object_stream::<u64>(None).unwrap();
+        let got = s.poll_timeout(Duration::from_millis(5)).unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn at_least_once_redelivers_unacked() {
+        let (hub1, reg, core) = DistroStreamHub::embedded("c1");
+        let hub2 = DistroStreamHub::attach_embedded("c2", &reg, &core);
+        let s1 = hub1
+            .object_stream_with::<u64>(Some("alo"), 1, ConsumerMode::AtLeastOnce)
+            .unwrap();
+        let s2 = hub2
+            .object_stream_with::<u64>(Some("alo"), 1, ConsumerMode::AtLeastOnce)
+            .unwrap();
+        s1.publish_list(&[1, 2, 3]).unwrap();
+        assert_eq!(s1.poll().unwrap().len(), 3);
+        // c1 crashes without ack: rewind its claims and redeliver to c2.
+        core.crash_member(hub1.group(), &s1.handle().topic(), hub1.process()).unwrap();
+        assert_eq!(s2.poll().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn at_least_once_ack_stops_redelivery() {
+        let (hub1, reg, core) = DistroStreamHub::embedded("c1");
+        let hub2 = DistroStreamHub::attach_embedded("c2", &reg, &core);
+        let s1 = hub1
+            .object_stream_with::<u64>(Some("alo2"), 1, ConsumerMode::AtLeastOnce)
+            .unwrap();
+        let s2 = hub2
+            .object_stream_with::<u64>(Some("alo2"), 1, ConsumerMode::AtLeastOnce)
+            .unwrap();
+        s1.publish_list(&[1, 2]).unwrap();
+        assert_eq!(s1.poll().unwrap().len(), 2);
+        s1.ack().unwrap();
+        core.crash_member(hub1.group(), &s1.handle().topic(), hub1.process()).unwrap();
+        assert!(s2.poll().unwrap().is_empty(), "acked records must not redeliver");
+    }
+
+    #[test]
+    fn blob_payloads_roundtrip() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.object_stream::<Blob>(None).unwrap();
+        s.publish(&Blob(vec![0u8; 1024])).unwrap();
+        let got = s.poll().unwrap();
+        assert_eq!(got[0].0.len(), 1024);
+    }
+}

@@ -1,0 +1,245 @@
+//! Wire protocol between the DistroStream Client and Server (paper §4.3:
+//! "the DistroStream Server-Client communication is done through Sockets").
+
+use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
+use crate::util::wire::Wire;
+use crate::wire_struct;
+
+use super::api::{ConsumerMode, StreamId, StreamType};
+
+/// Client → server control-plane requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DsRequest {
+    Ping,
+    Register {
+        alias: Option<String>,
+        stype: StreamType,
+        partitions: usize,
+        base_dir: Option<String>,
+        mode: ConsumerMode,
+    },
+    AddProducer { id: StreamId, name: String },
+    AddConsumer { id: StreamId, name: String },
+    CloseProducer { id: StreamId, name: String },
+    CloseStream { id: StreamId },
+    IsClosed { id: StreamId },
+    PollFiles { id: StreamId, candidates: Vec<String> },
+    Info { id: StreamId },
+    Unregister { id: StreamId },
+    Shutdown,
+}
+
+impl Wire for DsRequest {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            DsRequest::Ping => w.put_u8(0),
+            DsRequest::Register { alias, stype, partitions, base_dir, mode } => {
+                w.put_u8(1);
+                alias.encode(w);
+                stype.encode(w);
+                partitions.encode(w);
+                base_dir.encode(w);
+                mode.encode(w);
+            }
+            DsRequest::AddProducer { id, name } => {
+                w.put_u8(2);
+                id.encode(w);
+                name.encode(w);
+            }
+            DsRequest::AddConsumer { id, name } => {
+                w.put_u8(3);
+                id.encode(w);
+                name.encode(w);
+            }
+            DsRequest::CloseProducer { id, name } => {
+                w.put_u8(4);
+                id.encode(w);
+                name.encode(w);
+            }
+            DsRequest::CloseStream { id } => {
+                w.put_u8(5);
+                id.encode(w);
+            }
+            DsRequest::IsClosed { id } => {
+                w.put_u8(6);
+                id.encode(w);
+            }
+            DsRequest::PollFiles { id, candidates } => {
+                w.put_u8(7);
+                id.encode(w);
+                candidates.encode(w);
+            }
+            DsRequest::Info { id } => {
+                w.put_u8(8);
+                id.encode(w);
+            }
+            DsRequest::Unregister { id } => {
+                w.put_u8(9);
+                id.encode(w);
+            }
+            DsRequest::Shutdown => w.put_u8(10),
+        }
+    }
+
+    fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => DsRequest::Ping,
+            1 => DsRequest::Register {
+                alias: Wire::decode(r)?,
+                stype: Wire::decode(r)?,
+                partitions: Wire::decode(r)?,
+                base_dir: Wire::decode(r)?,
+                mode: Wire::decode(r)?,
+            },
+            2 => DsRequest::AddProducer { id: Wire::decode(r)?, name: Wire::decode(r)? },
+            3 => DsRequest::AddConsumer { id: Wire::decode(r)?, name: Wire::decode(r)? },
+            4 => DsRequest::CloseProducer { id: Wire::decode(r)?, name: Wire::decode(r)? },
+            5 => DsRequest::CloseStream { id: Wire::decode(r)? },
+            6 => DsRequest::IsClosed { id: Wire::decode(r)? },
+            7 => DsRequest::PollFiles { id: Wire::decode(r)?, candidates: Wire::decode(r)? },
+            8 => DsRequest::Info { id: Wire::decode(r)? },
+            9 => DsRequest::Unregister { id: Wire::decode(r)? },
+            10 => DsRequest::Shutdown,
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "DsRequest" }),
+        })
+    }
+}
+
+/// Server-side view of a stream (diagnostics / monitoring).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamInfoWire {
+    pub id: StreamId,
+    pub alias: Option<String>,
+    pub stype: StreamType,
+    pub partitions: usize,
+    pub base_dir: Option<String>,
+    pub mode: ConsumerMode,
+    pub producers: usize,
+    pub consumers: usize,
+    pub closed: bool,
+}
+
+wire_struct!(StreamInfoWire {
+    id: StreamId,
+    alias: Option<String>,
+    stype: StreamType,
+    partitions: usize,
+    base_dir: Option<String>,
+    mode: ConsumerMode,
+    producers: usize,
+    consumers: usize,
+    closed: bool,
+});
+
+/// Server → client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DsResponse {
+    Ok,
+    Pong,
+    Registered(StreamId),
+    Bool(bool),
+    Files(Vec<String>),
+    Info(StreamInfoWire),
+    Unknown(StreamId),
+}
+
+impl Wire for DsResponse {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            DsResponse::Ok => w.put_u8(0),
+            DsResponse::Pong => w.put_u8(1),
+            DsResponse::Registered(id) => {
+                w.put_u8(2);
+                id.encode(w);
+            }
+            DsResponse::Bool(b) => {
+                w.put_u8(3);
+                b.encode(w);
+            }
+            DsResponse::Files(fs) => {
+                w.put_u8(4);
+                fs.encode(w);
+            }
+            DsResponse::Info(i) => {
+                w.put_u8(5);
+                i.encode(w);
+            }
+            DsResponse::Unknown(id) => {
+                w.put_u8(255);
+                id.encode(w);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
+        let at = r.position();
+        Ok(match r.get_u8()? {
+            0 => DsResponse::Ok,
+            1 => DsResponse::Pong,
+            2 => DsResponse::Registered(Wire::decode(r)?),
+            3 => DsResponse::Bool(Wire::decode(r)?),
+            4 => DsResponse::Files(Wire::decode(r)?),
+            5 => DsResponse::Info(Wire::decode(r)?),
+            255 => DsResponse::Unknown(Wire::decode(r)?),
+            tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "DsResponse" }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_all_variants() {
+        let reqs = vec![
+            DsRequest::Ping,
+            DsRequest::Register {
+                alias: Some("a".into()),
+                stype: StreamType::File,
+                partitions: 3,
+                base_dir: Some("/d".into()),
+                mode: ConsumerMode::AtMostOnce,
+            },
+            DsRequest::AddProducer { id: 1, name: "p".into() },
+            DsRequest::AddConsumer { id: 1, name: "c".into() },
+            DsRequest::CloseProducer { id: 1, name: "p".into() },
+            DsRequest::CloseStream { id: 1 },
+            DsRequest::IsClosed { id: 1 },
+            DsRequest::PollFiles { id: 1, candidates: vec!["x".into()] },
+            DsRequest::Info { id: 1 },
+            DsRequest::Unregister { id: 1 },
+            DsRequest::Shutdown,
+        ];
+        for req in reqs {
+            assert_eq!(DsRequest::decode_exact(&req.encode_vec()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_all_variants() {
+        let resps = vec![
+            DsResponse::Ok,
+            DsResponse::Pong,
+            DsResponse::Registered(4),
+            DsResponse::Bool(true),
+            DsResponse::Files(vec!["a".into(), "b".into()]),
+            DsResponse::Info(StreamInfoWire {
+                id: 1,
+                alias: None,
+                stype: StreamType::Object,
+                partitions: 1,
+                base_dir: None,
+                mode: ConsumerMode::ExactlyOnce,
+                producers: 2,
+                consumers: 3,
+                closed: false,
+            }),
+            DsResponse::Unknown(9),
+        ];
+        for resp in resps {
+            assert_eq!(DsResponse::decode_exact(&resp.encode_vec()).unwrap(), resp);
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! The **DistroStream Server** (paper §4.3): the unique, per-deployment
+//! registry coordinating stream metadata.
+//!
+//! Responsibilities (verbatim from the paper): assign unique ids to new
+//! streams, check the access permissions of producers and consumers,
+//! and notify all registered consumers when the stream has been completely
+//! closed and there are no producers remaining. For file streams it also
+//! deduplicates deliveries (which file paths have already been handed out).
+//!
+//! [`StreamRegistry`] is the pure state machine; [`DistroStreamServer`]
+//! serves it over TCP with the same framed protocol style as the broker.
+
+use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use log::{debug, warn};
+
+use crate::util::wire::{recv_msg, send_msg};
+
+use super::api::{ConsumerMode, StreamId, StreamType};
+use super::protocol::{DsRequest, DsResponse, StreamInfoWire};
+
+/// Registered state of one stream.
+#[derive(Debug, Clone)]
+pub struct StreamEntry {
+    pub id: StreamId,
+    pub alias: Option<String>,
+    pub stype: StreamType,
+    pub partitions: usize,
+    pub base_dir: Option<String>,
+    pub mode: ConsumerMode,
+    /// Registered producer names (process/task instances).
+    pub producers: HashSet<String>,
+    /// Registered consumer names.
+    pub consumers: HashSet<String>,
+    /// Producers that called `close()`.
+    pub closed_producers: HashSet<String>,
+    /// Set once the stream is completely closed.
+    pub closed: bool,
+    /// FDS: file paths already delivered to some consumer.
+    pub delivered_files: HashSet<String>,
+}
+
+impl StreamEntry {
+    fn closed_check(&mut self) {
+        // Completely closed: someone closed, and no still-open producer
+        // remains. A stream with no registered producers closes on the
+        // first explicit close().
+        if !self.closed_producers.is_empty()
+            && self.producers.iter().all(|p| self.closed_producers.contains(p))
+        {
+            self.closed = true;
+        }
+    }
+}
+
+/// Pure in-memory registry — the server's state machine.
+#[derive(Debug, Default)]
+pub struct StreamRegistry {
+    streams: HashMap<StreamId, StreamEntry>,
+    by_alias: HashMap<String, StreamId>,
+    next_id: StreamId,
+}
+
+impl StreamRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a stream. With an alias, re-registration returns the
+    /// existing id (aliases let different applications share streams, §4.1).
+    pub fn register(
+        &mut self,
+        alias: Option<String>,
+        stype: StreamType,
+        partitions: usize,
+        base_dir: Option<String>,
+        mode: ConsumerMode,
+    ) -> StreamId {
+        if let Some(a) = &alias {
+            if let Some(&id) = self.by_alias.get(a) {
+                return id;
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Some(a) = &alias {
+            self.by_alias.insert(a.clone(), id);
+        }
+        self.streams.insert(
+            id,
+            StreamEntry {
+                id,
+                alias,
+                stype,
+                partitions,
+                base_dir,
+                mode,
+                producers: HashSet::new(),
+                consumers: HashSet::new(),
+                closed_producers: HashSet::new(),
+                closed: false,
+                delivered_files: HashSet::new(),
+            },
+        );
+        id
+    }
+
+    fn entry_mut(&mut self, id: StreamId) -> Option<&mut StreamEntry> {
+        self.streams.get_mut(&id)
+    }
+
+    pub fn entry(&self, id: StreamId) -> Option<&StreamEntry> {
+        self.streams.get(&id)
+    }
+
+    /// Register a producer instance (idempotent). Returns false for
+    /// unknown streams.
+    pub fn add_producer(&mut self, id: StreamId, name: &str) -> bool {
+        match self.entry_mut(id) {
+            Some(e) => {
+                e.producers.insert(name.to_string());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Register a consumer instance (idempotent).
+    pub fn add_consumer(&mut self, id: StreamId, name: &str) -> bool {
+        match self.entry_mut(id) {
+            Some(e) => {
+                e.consumers.insert(name.to_string());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// A producer announces it will publish no more.
+    pub fn close_producer(&mut self, id: StreamId, name: &str) -> bool {
+        match self.entry_mut(id) {
+            Some(e) => {
+                e.producers.insert(name.to_string());
+                e.closed_producers.insert(name.to_string());
+                e.closed_check();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Force-close the whole stream regardless of producers.
+    pub fn close_stream(&mut self, id: StreamId) -> bool {
+        match self.entry_mut(id) {
+            Some(e) => {
+                e.closed = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Completely closed? (`None` for unknown streams.)
+    pub fn is_closed(&self, id: StreamId) -> Option<bool> {
+        self.streams.get(&id).map(|e| e.closed)
+    }
+
+    /// FDS dedup: of `candidates`, return (and mark) the not-yet-delivered
+    /// paths. Greedy first-poller-wins, mirroring ODS shared consumption.
+    pub fn poll_files(&mut self, id: StreamId, candidates: Vec<String>) -> Option<Vec<String>> {
+        let e = self.entry_mut(id)?;
+        let mut fresh = Vec::new();
+        for c in candidates {
+            if e.delivered_files.insert(c.clone()) {
+                fresh.push(c);
+            }
+        }
+        Some(fresh)
+    }
+
+    /// Remove a stream entirely.
+    pub fn unregister(&mut self, id: StreamId) -> bool {
+        if let Some(e) = self.streams.remove(&id) {
+            if let Some(a) = e.alias {
+                self.by_alias.remove(&a);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn ids(&self) -> Vec<StreamId> {
+        let mut ids: Vec<_> = self.streams.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+}
+
+/// Apply one protocol request to the registry.
+pub fn dispatch(reg: &Mutex<StreamRegistry>, req: DsRequest) -> DsResponse {
+    use DsRequest as Q;
+    use DsResponse as A;
+    match req {
+        Q::Ping => A::Pong,
+        Q::Register { alias, stype, partitions, base_dir, mode } => {
+            let id = reg.lock().unwrap().register(alias, stype, partitions, base_dir, mode);
+            A::Registered(id)
+        }
+        Q::AddProducer { id, name } => bool_resp(reg.lock().unwrap().add_producer(id, &name), id),
+        Q::AddConsumer { id, name } => bool_resp(reg.lock().unwrap().add_consumer(id, &name), id),
+        Q::CloseProducer { id, name } => {
+            bool_resp(reg.lock().unwrap().close_producer(id, &name), id)
+        }
+        Q::CloseStream { id } => bool_resp(reg.lock().unwrap().close_stream(id), id),
+        Q::IsClosed { id } => match reg.lock().unwrap().is_closed(id) {
+            Some(b) => A::Bool(b),
+            None => A::Unknown(id),
+        },
+        Q::PollFiles { id, candidates } => match reg.lock().unwrap().poll_files(id, candidates) {
+            Some(fresh) => A::Files(fresh),
+            None => A::Unknown(id),
+        },
+        Q::Info { id } => {
+            let reg = reg.lock().unwrap();
+            match reg.entry(id) {
+                Some(e) => A::Info(StreamInfoWire {
+                    id: e.id,
+                    alias: e.alias.clone(),
+                    stype: e.stype,
+                    partitions: e.partitions,
+                    base_dir: e.base_dir.clone(),
+                    mode: e.mode,
+                    producers: e.producers.len(),
+                    consumers: e.consumers.len(),
+                    closed: e.closed,
+                }),
+                None => A::Unknown(id),
+            }
+        }
+        Q::Unregister { id } => bool_resp(reg.lock().unwrap().unregister(id), id),
+        Q::Shutdown => A::Ok,
+    }
+}
+
+fn bool_resp(ok: bool, id: StreamId) -> DsResponse {
+    if ok {
+        DsResponse::Ok
+    } else {
+        DsResponse::Unknown(id)
+    }
+}
+
+/// TCP front-end for the registry.
+pub struct DistroStreamServer {
+    pub addr: SocketAddr,
+    registry: Arc<Mutex<StreamRegistry>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl DistroStreamServer {
+    pub fn start(addr: &str) -> std::io::Result<Self> {
+        Self::start_with(Arc::new(Mutex::new(StreamRegistry::new())), addr)
+    }
+
+    pub fn start_with(
+        registry: Arc<Mutex<StreamRegistry>>,
+        addr: &str,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let reg = Arc::clone(&registry);
+        let st = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("dstream-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if st.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(sock) => {
+                            let reg = Arc::clone(&reg);
+                            let st = Arc::clone(&st);
+                            std::thread::Builder::new()
+                                .name("dstream-conn".into())
+                                .spawn(move || handle_conn(reg, st, sock))
+                                .expect("spawn dstream conn");
+                        }
+                        Err(e) => {
+                            warn!("dstream accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+            })?;
+        Ok(Self { addr: local, registry, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn registry(&self) -> Arc<Mutex<StreamRegistry>> {
+        Arc::clone(&self.registry)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DistroStreamServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
+    loop {
+        let req: DsRequest = match recv_msg(&mut sock) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(e) => {
+                debug!("dstream conn read error: {e}");
+                break;
+            }
+        };
+        if matches!(req, DsRequest::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            let _ = send_msg(&mut sock, &DsResponse::Ok);
+            break;
+        }
+        let resp = dispatch(&reg, req);
+        if send_msg(&mut sock, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> StreamRegistry {
+        StreamRegistry::new()
+    }
+
+    #[test]
+    fn ids_are_unique_and_aliases_dedupe() {
+        let mut r = reg();
+        let a = r.register(Some("s".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        let b = r.register(None, StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        let c = r.register(Some("s".into()), StreamType::Object, 4, None, ConsumerMode::ExactlyOnce);
+        assert_ne!(a, b);
+        assert_eq!(a, c, "same alias must return the same stream");
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn close_requires_all_producers() {
+        let mut r = reg();
+        let id = r.register(None, StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        r.add_producer(id, "p1");
+        r.add_producer(id, "p2");
+        r.close_producer(id, "p1");
+        assert_eq!(r.is_closed(id), Some(false), "p2 still open");
+        r.close_producer(id, "p2");
+        assert_eq!(r.is_closed(id), Some(true));
+    }
+
+    #[test]
+    fn close_with_no_registered_producers_is_immediate() {
+        let mut r = reg();
+        let id = r.register(None, StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        // A close from a producer that never explicitly registered.
+        r.close_producer(id, "main");
+        assert_eq!(r.is_closed(id), Some(true));
+    }
+
+    #[test]
+    fn force_close_overrides() {
+        let mut r = reg();
+        let id = r.register(None, StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        r.add_producer(id, "p1");
+        r.close_stream(id);
+        assert_eq!(r.is_closed(id), Some(true));
+    }
+
+    #[test]
+    fn poll_files_delivers_each_path_once() {
+        let mut r = reg();
+        let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
+        let first = r.poll_files(id, vec!["a".into(), "b".into()]).unwrap();
+        assert_eq!(first, vec!["a".to_string(), "b".to_string()]);
+        let second = r.poll_files(id, vec!["a".into(), "b".into(), "c".into()]).unwrap();
+        assert_eq!(second, vec!["c".to_string()]);
+    }
+
+    #[test]
+    fn unknown_stream_operations_return_false_or_none() {
+        let mut r = reg();
+        assert!(!r.add_producer(99, "p"));
+        assert!(!r.close_stream(99));
+        assert_eq!(r.is_closed(99), None);
+        assert!(r.poll_files(99, vec![]).is_none());
+        assert!(!r.unregister(99));
+    }
+
+    #[test]
+    fn unregister_frees_alias() {
+        let mut r = reg();
+        let id = r.register(Some("x".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        assert!(r.unregister(id));
+        let id2 = r.register(Some("x".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        assert_ne!(id, id2);
+    }
+
+    #[test]
+    fn tcp_server_roundtrip() {
+        let server = DistroStreamServer::start("127.0.0.1:0").unwrap();
+        let mut sock = TcpStream::connect(server.addr).unwrap();
+        send_msg(
+            &mut sock,
+            &DsRequest::Register {
+                alias: Some("s".into()),
+                stype: StreamType::Object,
+                partitions: 2,
+                base_dir: None,
+                mode: ConsumerMode::ExactlyOnce,
+            },
+        )
+        .unwrap();
+        let resp: Option<DsResponse> = recv_msg(&mut sock).unwrap();
+        assert_eq!(resp, Some(DsResponse::Registered(0)));
+        send_msg(&mut sock, &DsRequest::IsClosed { id: 0 }).unwrap();
+        let resp: Option<DsResponse> = recv_msg(&mut sock).unwrap();
+        assert_eq!(resp, Some(DsResponse::Bool(false)));
+        drop(sock);
+        server.shutdown();
+    }
+}

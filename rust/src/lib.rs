@@ -1,0 +1,41 @@
+//! # hybridws — Hybrid Workflows: task-based workflows + dataflows all-in-one
+//!
+//! A production-quality reproduction of *"A Programming Model for Hybrid
+//! Workflows: combining Task-based Workflows and Dataflows all-in-one"*
+//! (Ramon-Cortes, Lordan, Ejarque, Badia — FGCS 2020,
+//! DOI 10.1016/j.future.2020.07.007).
+//!
+//! The crate provides, from the bottom up:
+//!
+//! - [`util`] — std-only infrastructure: binary wire codec, framing, RNG,
+//!   logging, thread pool, CLI parsing and a mini property-testing framework
+//!   (the build environment has no serde/tokio/clap/proptest).
+//! - [`broker`] — a partitioned-log message broker (the Kafka substitute):
+//!   topics, partitions, offsets, consumer groups, record deletion for
+//!   exactly-once; embedded in-process and over TCP.
+//! - [`dstream`] — the **Distributed Stream Library** (the paper's §4):
+//!   the `DistroStream` API, `ObjectDistroStream` (broker-backed),
+//!   `FileDistroStream` (directory-monitor-backed), and the
+//!   DistroStream Client/Server control plane.
+//! - [`coordinator`] — the **task-based runtime** (COMPSs-like): parameter
+//!   annotations including the new `STREAM` type, task analyser, dependency
+//!   graph, locality- and stream-aware scheduler, dispatcher, multi-core
+//!   workers, data registry and fault tolerance.
+//! - [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU PJRT
+//!   client from task bodies (Python is never on the request path).
+//! - [`apps`] — the paper's four use-case workloads built on the public API.
+//!
+//! See `examples/quickstart.rs` for a complete hybrid workflow.
+
+pub mod apps;
+pub mod broker;
+pub mod coordinator;
+pub mod dstream;
+pub mod runtime;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

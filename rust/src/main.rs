@@ -1,0 +1,219 @@
+//! `hybridws` — the launcher binary.
+//!
+//! Subcommands:
+//!
+//! - `run <uc1|uc2|uc3|uc4>` — run a use-case workload on a local runtime.
+//! - `worker --listen <addr> --slots N` — serve as a remote worker process.
+//! - `broker --listen <addr>` — run a standalone stream-broker server.
+//! - `dstream-server --listen <addr>` — run a standalone DistroStream Server.
+//! - `info` — registered task functions + AOT model inventory.
+
+use std::net::TcpListener;
+
+use hybridws::apps;
+use hybridws::broker::{BrokerCore, BrokerServer};
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::coordinator::remote::serve_worker;
+use hybridws::dstream::DistroStreamServer;
+use hybridws::util::cli::ArgSpec;
+use hybridws::util::timeutil::TimeScale;
+
+fn main() {
+    hybridws::util::logging::init();
+    apps::register_all();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "run" => cmd_run(&rest),
+        "worker" => cmd_worker(&rest),
+        "broker" => cmd_broker(&rest),
+        "dstream-server" => cmd_dstream(&rest),
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    format!(
+        "hybridws {} — Hybrid Workflows (task-based + dataflows)\n\n\
+         USAGE: hybridws <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n  \
+           run <uc1|uc2|uc3|uc4>   run a use-case workload locally\n  \
+           worker                  serve as a remote worker (--listen, --slots)\n  \
+           broker                  standalone broker server (--listen)\n  \
+           dstream-server          standalone DistroStream Server (--listen)\n  \
+           info                    registered tasks + AOT models",
+        hybridws::version()
+    )
+}
+
+fn parse_or_exit(spec: ArgSpec, raw: &[String]) -> hybridws::util::cli::Args {
+    match spec.parse(raw) {
+        Ok(a) => a,
+        Err(help) => {
+            eprintln!("{help}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("run a use-case workload")
+        .positional("usecase", "one of uc1, uc2, uc3, uc4")
+        .opt("workers", Some("8,8"), "core slots per worker (comma list)")
+        .opt("scale", Some("0.02"), "paper-time scale factor")
+        .flag("models", "load AOT artifacts (requires `make artifacts`)");
+    let a = parse_or_exit(spec, raw);
+    let workers = a.usize_list("workers");
+    let scale = TimeScale::new(a.f64("scale"));
+    let mut builder = CometRuntime::builder().workers(&workers).scale(scale);
+    if a.flag("models") {
+        builder = builder.with_models();
+    }
+    let rt = match builder.build() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to build runtime: {e}");
+            return 1;
+        }
+    };
+    let result = match a.positional(0).unwrap_or("uc1") {
+        "uc1" => {
+            let cfg = apps::uc1_simulation::Uc1Config::default();
+            apps::uc1_simulation::run_task_based(&rt, &cfg).and_then(|tb| {
+                let hy = apps::uc1_simulation::run_hybrid(&rt, &cfg)?;
+                println!(
+                    "uc1: task-based {:.2}s, hybrid {:.2}s, gain {:.1}%",
+                    tb.elapsed_s,
+                    hy.elapsed_s,
+                    apps::uc1_simulation::gain(tb.elapsed_s, hy.elapsed_s) * 100.0
+                );
+                Ok(())
+            })
+        }
+        "uc2" => {
+            let cfg = apps::uc2_sweep::Uc2Config::default();
+            apps::uc2_sweep::run_task_based(&rt, &cfg).and_then(|tb| {
+                let hy = apps::uc2_sweep::run_hybrid(&rt, &cfg)?;
+                println!(
+                    "uc2: task-based {:.2}s, hybrid {:.2}s, gain {:.1}%",
+                    tb.elapsed_s,
+                    hy.elapsed_s,
+                    (tb.elapsed_s - hy.elapsed_s) / tb.elapsed_s * 100.0
+                );
+                Ok(())
+            })
+        }
+        "uc3" => apps::uc3_sensor::run(&rt, &apps::uc3_sensor::Uc3Config::default()).map(|r| {
+            println!("uc3: {:.2}s, per-filter {:?}", r.elapsed_s, r.per_filter);
+        }),
+        "uc4" => apps::uc4_nested::run(&rt, &apps::uc4_nested::Uc4Config::default()).map(|r| {
+            println!("uc4: {:.2}s, {} batches", r.elapsed_s, r.batches);
+        }),
+        other => {
+            eprintln!("unknown use case {other:?}");
+            return 2;
+        }
+    };
+    let code = match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            1
+        }
+    };
+    rt.shutdown().ok();
+    code
+}
+
+fn cmd_worker(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("serve as a remote worker process")
+        .opt("listen", Some("127.0.0.1:7070"), "address to listen on")
+        .opt("slots", Some("4"), "core slots");
+    let a = parse_or_exit(spec, raw);
+    let listener = match TcpListener::bind(a.str("listen")) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("bind {}: {e}", a.str("listen"));
+            return 1;
+        }
+    };
+    match serve_worker(listener, a.usize("slots")) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_broker(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("standalone stream-broker server")
+        .opt("listen", Some("127.0.0.1:9092"), "address to listen on");
+    let a = parse_or_exit(spec, raw);
+    match BrokerServer::start(BrokerCore::new(), a.str("listen")) {
+        Ok(server) => {
+            println!("broker listening on {}", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("broker failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_dstream(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("standalone DistroStream Server")
+        .opt("listen", Some("127.0.0.1:9990"), "address to listen on");
+    let a = parse_or_exit(spec, raw);
+    match DistroStreamServer::start(a.str("listen")) {
+        Ok(server) => {
+            println!("DistroStream Server listening on {}", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("dstream-server failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("hybridws {}", hybridws::version());
+    println!("\nregistered task functions:");
+    for name in hybridws::coordinator::executor::registered_names() {
+        println!("  {name}");
+    }
+    match hybridws::runtime::find_artifacts_dir() {
+        Some(dir) => match hybridws::runtime::ModelZoo::load(&dir) {
+            Ok(zoo) => {
+                println!("\nAOT models ({dir:?}):");
+                for s in zoo.specs() {
+                    println!("  {:<14} {:?} -> {:?}", s.name, s.inputs, s.output);
+                }
+            }
+            Err(e) => println!("\nartifacts at {dir:?} failed to load: {e}"),
+        },
+        None => println!("\nno artifacts found (run `make artifacts`)"),
+    }
+    0
+}

@@ -1,0 +1,35 @@
+//! The PJRT bridge: load AOT-compiled HLO artifacts and execute them from
+//! task bodies. Python never runs on this path.
+//!
+//! `python/compile/aot.py` lowers every L2 entry point to HLO *text*
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos — see
+//! DESIGN.md §2) plus `manifest.json` describing shapes. [`ModelZoo`]
+//! compiles each artifact once on the CPU PJRT client and serves typed
+//! `execute` calls.
+
+pub mod zoo;
+
+pub use zoo::{ModelSpec, ModelZoo};
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `HYBRIDWS_ARTIFACTS` env var, else
+/// `artifacts/` relative to the current dir, else relative to the
+/// executable's ancestors (so `cargo test`/`cargo bench` binaries find it).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("HYBRIDWS_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let cwd = std::env::current_dir().ok()?;
+    for base in cwd.ancestors() {
+        let p = base.join(DEFAULT_ARTIFACTS_DIR);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}

@@ -1,0 +1,292 @@
+//! `ModelZoo`: compile-once, execute-many PJRT executables.
+//!
+//! Loading mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile`. All inputs and
+//! outputs are f32 buffers whose shapes come from `manifest.json`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json;
+
+/// Shape/dtype contract of one model (from the manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Input shapes (all f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape (f32).
+    pub output: Vec<usize>,
+    pub file: String,
+}
+
+impl ModelSpec {
+    /// Number of f32 elements of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output.iter().product()
+    }
+}
+
+struct Inner {
+    /// Kept alive for the executables' lifetime (PJRT requires the client
+    /// to outlive everything it compiled).
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the PJRT CPU client is internally thread-safe, but the `xla`
+// crate's wrappers hold raw pointers without Send/Sync markers. All access
+// goes through the `Mutex` in `ModelZoo::execute`, serialising FFI calls.
+unsafe impl Send for Inner {}
+
+/// Compiled executables for every artifact in a directory.
+pub struct ModelZoo {
+    inner: Mutex<Inner>,
+    specs: HashMap<String, ModelSpec>,
+    /// Execution counter (diagnostics / perf reports).
+    executions: Mutex<u64>,
+}
+
+impl ModelZoo {
+    /// Load and compile every model listed in `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+        let mut specs = HashMap::new();
+        for m in doc.get("models").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let name = m
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("model without name"))?
+                .to_string();
+            let parse_shape = |v: &json::Json| -> Vec<usize> {
+                v.get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default()
+            };
+            let inputs = m
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().map(parse_shape).collect())
+                .unwrap_or_default();
+            let output =
+                m.get("output").map(parse_shape).ok_or_else(|| anyhow!("{name}: no output"))?;
+            let file = m
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("{name}: no file"))?
+                .to_string();
+            specs.insert(name.clone(), ModelSpec { name, inputs, output, file });
+        }
+        if specs.is_empty() {
+            bail!("manifest {manifest_path:?} lists no models");
+        }
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for spec in specs.values() {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+            exes.insert(spec.name.clone(), exe);
+        }
+        log::info!("model zoo: compiled {} artifacts from {dir:?}", exes.len());
+        Ok(Self { inner: Mutex::new(Inner { client, exes }), specs, executions: Mutex::new(0) })
+    }
+
+    /// Specs of all loaded models (sorted by name).
+    pub fn specs(&self) -> Vec<&ModelSpec> {
+        let mut v: Vec<_> = self.specs.values().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ModelSpec> {
+        self.specs.get(name)
+    }
+
+    /// Total `execute` calls served.
+    pub fn executions(&self) -> u64 {
+        *self.executions.lock().unwrap()
+    }
+
+    /// Execute `name` with f32 inputs; returns the flattened f32 output.
+    ///
+    /// Input lengths must match the manifest shapes exactly.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let spec = self.specs.get(name).ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (i, (got, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if got.len() != want {
+                bail!("{name}: input {i} has {} elements, shape {shape:?} wants {want}", got.len());
+            }
+        }
+
+        let inner = self.inner.lock().unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&spec.inputs) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("{name}: reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = inner.exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{name}: execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("{name}: untuple: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("{name}: to_vec: {e:?}"))?;
+        drop(inner);
+        *self.executions.lock().unwrap() += 1;
+        if values.len() != spec.output_len() {
+            bail!("{name}: output has {} elements, expected {}", values.len(), spec.output_len());
+        }
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+    use once_cell::sync::Lazy;
+
+    // One zoo for all tests (compilation is the slow part).
+    static ZOO: Lazy<Option<ModelZoo>> =
+        Lazy::new(|| find_artifacts_dir().and_then(|d| ModelZoo::load(&d).ok()));
+
+    fn zoo() -> &'static ModelZoo {
+        ZOO.as_ref().expect("artifacts missing — run `make artifacts` first")
+    }
+
+    #[test]
+    fn manifest_lists_expected_models() {
+        let names: Vec<_> = zoo().specs().iter().map(|s| s.name.clone()).collect();
+        for expected in
+            ["big_compute", "frame_stats", "heat_chunk", "heat_step", "iter_update", "sensor_filter"]
+        {
+            assert!(names.contains(&expected.to_string()), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn heat_step_diffuses() {
+        let spec = zoo().spec("heat_step").unwrap();
+        let n = spec.input_len(0);
+        let (h, w) = (spec.inputs[0][0], spec.inputs[0][1]);
+        // Hot spot in the middle.
+        let mut grid = vec![0f32; n];
+        grid[(h / 2) * w + w / 2] = 100.0;
+        let out = zoo().execute("heat_step", &[&grid]).unwrap();
+        let centre = out[(h / 2) * w + w / 2];
+        let neighbour = out[(h / 2) * w + w / 2 + 1];
+        assert!(centre < 100.0, "centre must cool ({centre})");
+        assert!(neighbour > 0.0, "heat must spread ({neighbour})");
+        // Explicit scheme conserves mass in the interior.
+        let total: f32 = out.iter().sum();
+        assert!((total - 100.0).abs() < 1e-3, "mass should be ~conserved, got {total}");
+    }
+
+    #[test]
+    fn frame_stats_matches_cpu_reference() {
+        let spec = zoo().spec("frame_stats").unwrap();
+        let n = spec.input_len(0);
+        let frame: Vec<f32> = (0..n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let out = zoo().execute("frame_stats", &[&frame]).unwrap();
+        let mean: f32 = frame.iter().sum::<f32>() / n as f32;
+        let var: f32 = frame.iter().map(|x| x * x).sum::<f32>() / n as f32 - mean * mean;
+        assert!((out[0] - mean).abs() < 1e-4, "mean {} vs {mean}", out[0]);
+        assert!((out[1] - var).abs() < 1e-3, "var {} vs {var}", out[1]);
+        assert_eq!(out[2], -3.0);
+        assert_eq!(out[3], 3.0);
+    }
+
+    #[test]
+    fn iter_update_contracts_states() {
+        let spec = zoo().spec("iter_update").unwrap();
+        let n = spec.input_len(0);
+        let a: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| -(i as f32) / n as f32).collect();
+        let a2 = zoo().execute("iter_update", &[&a, &b]).unwrap();
+        let b2 = zoo().execute("iter_update", &[&b, &a]).unwrap();
+        let gap0: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        let gap1: f32 = a2.iter().zip(&b2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(gap1 <= gap0 + 1e-6, "update must contract: {gap0} -> {gap1}");
+    }
+
+    #[test]
+    fn big_compute_is_relu_matmul() {
+        let spec = zoo().spec("big_compute").unwrap();
+        let n = spec.inputs[0][0];
+        // x = I, w = -I ⇒ relu(x@w) = 0.
+        let mut eye = vec![0f32; n * n];
+        let mut neg_eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+            neg_eye[i * n + i] = -1.0;
+        }
+        let out = zoo().execute("big_compute", &[&eye, &neg_eye]).unwrap();
+        assert!(out.iter().all(|&v| v == 0.0));
+        // x = I, w = I ⇒ relu(I) = I.
+        let out = zoo().execute("big_compute", &[&eye, &eye]).unwrap();
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[1], 0.0);
+    }
+
+    #[test]
+    fn sensor_filter_thresholds() {
+        let spec = zoo().spec("sensor_filter").unwrap();
+        let n = spec.input_len(0);
+        let readings: Vec<f32> = (0..n).map(|i| i as f32 - (n / 2) as f32).collect();
+        let out = zoo().execute("sensor_filter", &[&readings, &[0.0]]).unwrap();
+        for (i, (&r, &o)) in readings.iter().zip(&out).enumerate() {
+            if r < 0.0 {
+                assert_eq!(o, 0.0, "idx {i}");
+            }
+        }
+        let max = out.iter().cloned().fold(0.0f32, f32::max);
+        assert!((max - 1.0).abs() < 1e-5, "renormalised max should be 1, got {max}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_error_not_panic() {
+        assert!(zoo().execute("heat_step", &[&[0f32; 3]]).is_err());
+        assert!(zoo().execute("nonexistent", &[]).is_err());
+        let spec = zoo().spec("iter_update").unwrap();
+        let n = spec.input_len(0);
+        let buf = vec![0f32; n];
+        assert!(zoo().execute("iter_update", &[&buf]).is_err(), "missing input");
+    }
+
+    #[test]
+    fn execution_counter_increments() {
+        let before = zoo().executions();
+        let spec = zoo().spec("iter_update").unwrap();
+        let buf = vec![0f32; spec.input_len(0)];
+        zoo().execute("iter_update", &[&buf, &buf]).unwrap();
+        assert!(zoo().executions() > before);
+    }
+}

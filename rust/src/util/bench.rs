@@ -1,0 +1,127 @@
+//! Shared helpers for the paper-figure bench harnesses (`benches/*.rs`).
+//!
+//! Environment knobs:
+//! - `HYBRIDWS_TIME_SCALE` — paper-time scale factor (default 0.01).
+//! - `HYBRIDWS_BENCH_FULL=1` — run the paper's full parameter sweeps
+//!   (defaults are trimmed so `cargo bench` finishes in minutes).
+//! - `HYBRIDWS_BENCH_REPS` — repetitions per configuration (default 3;
+//!   the paper uses 5).
+
+use crate::util::timeutil::TimeScale;
+
+/// Paper-time scale for benches.
+pub fn bench_scale() -> TimeScale {
+    TimeScale::from_env()
+}
+
+/// Full paper sweep vs trimmed default.
+pub fn full_sweep() -> bool {
+    std::env::var("HYBRIDWS_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Repetitions per configuration.
+pub fn reps() -> usize {
+    std::env::var("HYBRIDWS_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3)
+}
+
+/// Aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        let headers: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+        let widths = headers.iter().map(|h| h.len().max(10)).collect();
+        let t = Self { headers, widths };
+        t.print_header();
+        t
+    }
+
+    fn print_header(&self) {
+        let cells: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("| {} |", cells.join(" | "));
+        let dashes: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", dashes.join("-|-"));
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let cells: Vec<String> =
+            cells.iter().zip(&self.widths).map(|(c, w)| format!("{c:>w$}")).collect();
+        println!("| {} |", cells.join(" | "));
+    }
+}
+
+/// Format helpers for table cells.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+/// Print a bench banner with the active knobs.
+pub fn banner(fig: &str, what: &str) {
+    println!("\n### {fig} — {what}");
+    println!(
+        "(scale x{}, reps {}, {} sweep; HYBRIDWS_BENCH_FULL=1 for the paper's full grid)\n",
+        bench_scale().factor,
+        reps(),
+        if full_sweep() { "full" } else { "trimmed" }
+    );
+}
+
+/// Task count for OP/SP overhead sweeps, capped so the live object set
+/// (master registry + worker replicas ≈ 2× payload) stays under ~4 GiB.
+pub fn tasks_for(bytes_per_task: usize, preferred: usize) -> usize {
+    let budget: usize = 4 << 30;
+    (budget / (bytes_per_task.max(1) * 2)).clamp(4, preferred)
+}
+
+/// Mean over `n` runs of `f` (seconds).
+pub fn mean_secs(n: usize, mut f: impl FnMut() -> f64) -> f64 {
+    let mut total = 0.0;
+    for _ in 0..n {
+        total += f();
+    }
+    total / n as usize as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(f1(1.26), "1.3");
+        assert_eq!(pct(0.231), "23.1%");
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn mean_secs_averages() {
+        let mut i = 0.0;
+        let m = mean_secs(4, || {
+            i += 1.0;
+            i
+        });
+        assert!((m - 2.5).abs() < 1e-12);
+    }
+}

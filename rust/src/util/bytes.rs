@@ -1,0 +1,279 @@
+//! Growable byte writer and cursor reader — primitives under the wire codec.
+//!
+//! All multi-byte integers are little-endian. Errors are reported through
+//! [`DecodeError`] so corrupt frames never panic the runtime.
+
+use std::fmt;
+
+/// Error produced when decoding runs past the buffer or finds bad data.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Needed `needed` more bytes at `at` but the buffer ended.
+    Eof { at: usize, needed: usize },
+    /// A tag/discriminant byte had no known mapping.
+    BadTag { at: usize, tag: u32, ty: &'static str },
+    /// A length prefix exceeded the sanity limit.
+    TooLong { at: usize, len: u64 },
+    /// String bytes were not valid UTF-8.
+    BadUtf8 { at: usize },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Eof { at, needed } => {
+                write!(f, "unexpected EOF at byte {at} (needed {needed} more)")
+            }
+            DecodeError::BadTag { at, tag, ty } => {
+                write!(f, "bad tag {tag} for {ty} at byte {at}")
+            }
+            DecodeError::TooLong { at, len } => {
+                write!(f, "length {len} at byte {at} exceeds sanity limit")
+            }
+            DecodeError::BadUtf8 { at } => write!(f, "invalid UTF-8 at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Sanity cap for decoded collection/string/byte lengths (1 GiB).
+pub const MAX_LEN: u64 = 1 << 30;
+
+/// Append-only byte buffer with fixed-width little-endian put methods.
+#[derive(Default, Debug, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    /// New writer with reserved capacity (hot-path friendliness).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Finish and take the underlying buffer.
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Borrow the bytes written so far.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix.
+    pub fn put_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed (u32) byte blob.
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        debug_assert!(bytes.len() as u64 <= MAX_LEN);
+        self.put_u32(bytes.len() as u32);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+/// Cursor over a byte slice with fixed-width little-endian take methods.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// New reader over the whole slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Current cursor position.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when the cursor consumed the whole buffer.
+    pub fn is_exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Eof { at: self.pos, needed: n - self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool, DecodeError> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64, DecodeError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed (u32) byte blob; borrows from the underlying slice.
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        let at = self.pos;
+        let len = self.get_u32()? as u64;
+        if len > MAX_LEN {
+            return Err(DecodeError::TooLong { at, len });
+        }
+        self.take(len as usize)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<String, DecodeError> {
+        let at = self.pos;
+        let bytes = self.get_bytes()?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError::BadUtf8 { at })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u16(0xBEEF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_i64(-42);
+        w.put_f32(1.5);
+        w.put_f64(-2.25);
+        w.put_str("héllo");
+        w.put_bytes(&[1, 2, 3]);
+
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u16().unwrap(), 0xBEEF);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert_eq!(r.get_str().unwrap(), "héllo");
+        assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn eof_reports_position() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert_eq!(r.get_u8().unwrap(), 1);
+        match r.get_u32() {
+            Err(DecodeError::Eof { at, needed }) => {
+                assert_eq!(at, 1);
+                assert_eq!(needed, 3);
+            }
+            other => panic!("expected Eof, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_utf8_is_error_not_panic() {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&[0xFF, 0xFE]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(r.get_str(), Err(DecodeError::BadUtf8 { at: 0 })));
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut w = ByteWriter::new();
+        w.put_u32(u32::MAX); // fake huge length prefix
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(r.get_bytes(), Err(DecodeError::TooLong { .. })));
+    }
+}

@@ -1,0 +1,237 @@
+//! Tiny declarative CLI argument parser (our `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary builds an [`ArgSpec`] listing its options; parsing produces
+//! an [`Args`] lookup with typed getters and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a (sub)command's arguments.
+#[derive(Debug, Default, Clone)]
+pub struct ArgSpec {
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl ArgSpec {
+    pub fn new(about: &'static str) -> Self {
+        Self { about, ..Default::default() }
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Declare `--key <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Declare a positional argument (order matters).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self, prog: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}\n", self.about);
+        let _ = write!(s, "USAGE: {prog} [OPTIONS]");
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s, "\n\nOPTIONS:");
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  --{}{val}\n        {}{def}", o.name, o.help);
+        }
+        for (p, h) in &self.positionals {
+            let _ = writeln!(s, "  <{p}>\n        {h}");
+        }
+        s
+    }
+
+    /// Parse a raw arg list (without the program name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+
+        let mut i = 0;
+        while i < raw.len() {
+            let arg = &raw[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help("hybridws"));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i).cloned().ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    flags.push(name);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(format!(
+                "too many positional arguments (expected at most {})",
+                self.positionals.len()
+            ));
+        }
+        // Apply defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Args { values, flags, positionals })
+    }
+}
+
+/// Parsed arguments with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("missing --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be a float"))
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number, got {:?}", self.str(name)))
+    }
+
+    /// Comma-separated usize list, e.g. `--workers 36,48`.
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number {s:?}")))
+            .collect()
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test tool")
+            .flag("verbose", "more output")
+            .opt("count", Some("10"), "how many")
+            .opt("name", None, "a name")
+            .positional("input", "input path")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        spec().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("count"), 10);
+        assert!(!a.flag("verbose"));
+        assert!(a.get("name").is_none());
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = parse(&["--count=42", "--name", "x", "--verbose", "in.txt"]).unwrap();
+        assert_eq!(a.usize("count"), 42);
+        assert_eq!(a.str("name"), "x");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("in.txt"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--name"]).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let s = ArgSpec::new("x").opt("workers", Some("36,48"), "core counts");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.usize_list("workers"), vec![36, 48]);
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().help("prog");
+        assert!(h.contains("--count"));
+        assert!(h.contains("<input>"));
+    }
+}

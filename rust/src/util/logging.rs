@@ -1,0 +1,88 @@
+//! Minimal `log` backend: level from `HYBRIDWS_LOG` (error|warn|info|debug|trace).
+//!
+//! Prints `HH:MM:SS.mmm LEVEL target: message` to stderr. Install once with
+//! [`init`]; repeated calls are no-ops (safe from tests and examples alike).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+        let secs = now.as_secs();
+        let millis = now.subsec_millis();
+        let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("{h:02}:{m:02}:{s:02}.{millis:03} {lvl} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; unknown names fall back to `Info`.
+fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the stderr logger (idempotent). Level from `HYBRIDWS_LOG`,
+/// default `warn` so benches stay quiet.
+pub fn init() {
+    init_with(std::env::var("HYBRIDWS_LOG").as_deref().unwrap_or("warn"));
+}
+
+/// Install with an explicit level name.
+pub fn init_with(level: &str) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        log::set_max_level(parse_level(level));
+        return;
+    }
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(parse_level(level));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with("debug");
+        init_with("info");
+        assert_eq!(log::max_level(), LevelFilter::Info);
+        log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn unknown_level_defaults_to_info() {
+        assert_eq!(parse_level("nonsense"), LevelFilter::Info);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+    }
+}

@@ -1,0 +1,22 @@
+//! std-only infrastructure substitutes for crates unavailable offline.
+//!
+//! - [`bytes`] — growable byte writer / cursor reader.
+//! - [`wire`] — the [`wire::Wire`] binary-codec trait + length-prefixed
+//!   framing over any `Read`/`Write` (our serde + message framing).
+//! - [`rng`] — SplitMix64 PRNG (deterministic, seedable; our `rand`).
+//! - [`logging`] — minimal `log` backend with env-driven level.
+//! - [`threadpool`] — fixed-size job pool used by workers and servers.
+//! - [`cli`] — tiny declarative argument parser (our `clap`).
+//! - [`quick`] — mini property-based testing framework (our `proptest`).
+//! - [`timeutil`] — scaled durations, stopwatches, human formatting.
+
+pub mod bench;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod quick;
+pub mod rng;
+pub mod threadpool;
+pub mod timeutil;
+pub mod wire;

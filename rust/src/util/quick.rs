@@ -1,0 +1,214 @@
+//! Mini property-based testing framework (our `proptest`).
+//!
+//! A [`Gen`] produces random values from an [`Rng`]; [`check`] runs a
+//! property over many generated cases and, on failure, greedily shrinks the
+//! input before reporting. Deliberately small: generators are closures, and
+//! shrinking works on a per-case "retry with simpler params" basis via
+//! [`Shrink`] implementations for common carriers.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `HYBRIDWS_QUICK_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("HYBRIDWS_QUICK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A value generator.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Types that know how to propose strictly-simpler variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate simpler values (empty when minimal).
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let mut out = vec![vec![]];
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        out
+    }
+}
+
+impl Shrink for String {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let half: String = self.chars().take(self.chars().count() / 2).collect();
+        vec![String::new(), half]
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: turn a bool into a `PropResult`.
+pub fn ensure(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the (shrunk)
+/// counterexample on failure. Seed is fixed per property name for
+/// reproducibility.
+pub fn check<G, T, P>(name: &str, gen: G, prop: P)
+where
+    G: Gen<Value = T>,
+    T: Shrink + Clone + std::fmt::Debug,
+    P: Fn(&T) -> PropResult,
+{
+    check_with(name, default_cases(), gen, prop)
+}
+
+/// [`check`] with an explicit case count.
+pub fn check_with<G, T, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    G: Gen<Value = T>,
+    T: Shrink + Clone + std::fmt::Debug,
+    P: Fn(&T) -> PropResult,
+{
+    // Stable seed derived from the property name: failures reproduce.
+    let seed = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property '{name}' failed (case {case}/{cases}):\n  \
+                 counterexample: {min_input:?}\n  reason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut msg: String, prop: &P) -> (T, String)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    P: Fn(&T) -> PropResult,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in input.shrink() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("vec reverse involutive", |r: &mut Rng| {
+            let n = r.range(0, 20);
+            (0..n).map(|_| r.next_u64() % 100).collect::<Vec<u64>>()
+        }, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            ensure(w == *v, "reverse twice != id")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        check("all vecs shorter than 3 (false)", |r: &mut Rng| {
+            let n = r.range(0, 10);
+            vec![0u64; n]
+        }, |v| ensure(v.len() < 3, "len >= 3"));
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "x < 50" fails for many x; shrinking should land at 50.
+        let mut found = None;
+        let prop = |x: &u64| ensure(*x < 50, "too big");
+        for x in [200u64, 999, 64] {
+            if prop(&x).is_err() {
+                let (min, _) = shrink_loop(x, "too big".into(), &prop);
+                found = Some(min);
+            }
+        }
+        assert_eq!(found, Some(50));
+    }
+}

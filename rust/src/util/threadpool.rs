@@ -1,0 +1,145 @@
+//! Fixed-size thread pool with graceful shutdown (std-only; our `tokio`).
+//!
+//! Used by the broker/DistroStream TCP servers (connection handlers) and by
+//! worker executors (one pool per worker, size = core slots — a pool slot
+//! *is* a core in the paper's resource model).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` threads named `{name}-{i}`.
+    pub fn new(name: &str, size: usize) -> Self {
+        assert!(size > 0, "pool needs at least one thread");
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let in_flight = Arc::clone(&in_flight);
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            job();
+                            in_flight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+                .expect("spawn pool thread");
+            handles.push(handle);
+        }
+        Self { tx, handles, size, in_flight }
+    }
+
+    /// Number of threads (== core slots for workers).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Jobs queued or running.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a job. Panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Message::Run(Box::new(job))).expect("pool shut down");
+    }
+
+    /// Busy-wait (with parking) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.in_flight() > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    /// Stop accepting work and join all threads (runs queued jobs first).
+    pub fn shutdown(mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new("t", 4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallelism_is_bounded_by_size() {
+        let pool = ThreadPool::new("t", 2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let live = Arc::clone(&live);
+            let peak = Arc::clone(&peak);
+            pool.execute(move || {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                live.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn drop_joins_threads() {
+        let pool = ThreadPool::new("t", 2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,167 @@
+//! Time helpers: scaled durations (paper-seconds → bench-milliseconds),
+//! stopwatches and human-readable formatting.
+//!
+//! The paper's experiments use minute-scale tasks on MareNostrum; the bench
+//! harness reproduces the *shape* of each figure with durations scaled by
+//! [`TimeScale`] (default 1/100), which leaves all reported gains — ratios
+//! of execution times — unchanged.
+
+use std::time::{Duration, Instant};
+
+/// Multiplicative scale applied to paper durations.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeScale {
+    /// e.g. 0.01 → paper 60 000 ms becomes 600 ms.
+    pub factor: f64,
+}
+
+impl TimeScale {
+    pub const IDENTITY: TimeScale = TimeScale { factor: 1.0 };
+
+    /// Default bench scale (1/100), overridable via `HYBRIDWS_TIME_SCALE`.
+    pub fn from_env() -> Self {
+        let factor = std::env::var("HYBRIDWS_TIME_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.01);
+        Self { factor }
+    }
+
+    pub fn new(factor: f64) -> Self {
+        assert!(factor > 0.0, "scale must be positive");
+        Self { factor }
+    }
+
+    /// Scale a duration given in *paper* milliseconds.
+    pub fn paper_ms(&self, ms: u64) -> Duration {
+        Duration::from_secs_f64(ms as f64 / 1000.0 * self.factor)
+    }
+}
+
+/// Simple monotonic stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1000.0
+    }
+}
+
+/// `1.23 s` / `45.6 ms` / `789 µs` style formatting.
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.0} µs", s * 1e6)
+    }
+}
+
+/// `12.3 MB/s` style throughput formatting.
+pub fn human_rate(bytes: u64, d: Duration) -> String {
+    let bps = bytes as f64 / d.as_secs_f64().max(1e-9);
+    if bps >= 1e9 {
+        format!("{:.2} GB/s", bps / 1e9)
+    } else if bps >= 1e6 {
+        format!("{:.2} MB/s", bps / 1e6)
+    } else if bps >= 1e3 {
+        format!("{:.2} kB/s", bps / 1e3)
+    } else {
+        format!("{bps:.0} B/s")
+    }
+}
+
+/// Mean of a sample of f64s.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile with linear interpolation, `p` in `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_applies_factor() {
+        let s = TimeScale::new(0.01);
+        assert_eq!(s.paper_ms(60_000), Duration::from_millis(600));
+        assert_eq!(TimeScale::IDENTITY.paper_ms(250), Duration::from_millis(250));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_scale_rejected() {
+        TimeScale::new(0.0);
+    }
+
+    #[test]
+    fn human_duration_bands() {
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.00 s");
+        assert_eq!(human_duration(Duration::from_millis(45)), "45.0 ms");
+        assert_eq!(human_duration(Duration::from_micros(789)), "789 µs");
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(stddev(&xs) > 0.0);
+    }
+
+    #[test]
+    fn stopwatch_measures_forward() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+}

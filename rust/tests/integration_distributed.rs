@@ -1,0 +1,165 @@
+//! Distributed-mode integration: remote workers over real TCP, standalone
+//! broker / DistroStream servers, and hub-over-TCP stream access.
+
+use std::net::TcpListener;
+
+use hybridws::broker::{BrokerClient, BrokerCore, BrokerServer};
+use hybridws::coordinator::prelude::*;
+use hybridws::coordinator::remote::serve_worker;
+use hybridws::dstream::{DistroStreamHub, DistroStreamServer};
+use hybridws::util::timeutil::TimeScale;
+
+#[test]
+fn remote_worker_executes_object_tasks() {
+    register_task_fn("dist.mul", |ctx| {
+        let a: u64 = ctx.obj_in_as(0)?;
+        let b: u64 = ctx.scalar(1)?;
+        ctx.set_output_as(2, &(a * b));
+        Ok(())
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || serve_worker(listener, 2));
+
+    let rt = CometRuntime::builder()
+        .workers(&[1])
+        .remote_worker(&addr, 2)
+        .scale(TimeScale::IDENTITY)
+        .build()
+        .unwrap();
+    // Saturate: slow local worker forces remote placement too.
+    let inputs: Vec<DataRef> = (0..8u64).map(|i| rt.register_object_as(&i)).collect();
+    let outs: Vec<DataRef> = (0..8).map(|_| rt.new_object()).collect();
+    for (i, o) in inputs.iter().zip(&outs) {
+        rt.submit(
+            TaskSpec::new("dist.mul")
+                .arg(Arg::In(i.id()))
+                .arg(Arg::scalar(&3u64))
+                .arg(Arg::Out(o.id())),
+        )
+        .unwrap();
+    }
+    for (i, o) in outs.iter().enumerate() {
+        let v: u64 = rt.wait_on_as(o).unwrap();
+        assert_eq!(v, i as u64 * 3);
+    }
+    rt.shutdown().unwrap();
+    drop(rt);
+    let _ = worker.join().unwrap();
+}
+
+#[test]
+fn remote_worker_streams_through_tcp_hub() {
+    // The remote task consumes an object stream whose broker lives in the
+    // master process — all access crosses TCP.
+    register_task_fn("dist.stream_sum", |ctx| {
+        let s = ctx.object_stream::<u64>(0);
+        let mut sum = 0u64;
+        loop {
+            let closed = s.is_closed();
+            let items = s.poll()?;
+            if items.is_empty() && closed {
+                break;
+            }
+            sum += items.iter().sum::<u64>();
+            if items.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        ctx.set_output_as(1, &sum);
+        Ok(())
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || serve_worker(listener, 1));
+
+    let rt = CometRuntime::builder()
+        .workers(&[1])
+        .remote_worker(&addr, 1)
+        .scale(TimeScale::IDENTITY)
+        .build()
+        .unwrap();
+    let s = rt.object_stream::<u64>(Some("dist-sum")).unwrap();
+    let out = rt.new_object();
+    // Occupy the local worker so the stream task lands remotely.
+    register_task_fn("dist.block", |_| {
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        Ok(())
+    });
+    rt.submit(TaskSpec::new("dist.block")).unwrap();
+    rt.submit(
+        TaskSpec::new("dist.stream_sum")
+            .arg(Arg::StreamIn(s.handle().clone()))
+            .arg(Arg::Out(out.id())),
+    )
+    .unwrap();
+    s.publish_list(&[10, 20, 30]).unwrap();
+    s.close().unwrap();
+    let sum: u64 = rt.wait_on_as(&out).unwrap();
+    assert_eq!(sum, 60);
+    rt.shutdown().unwrap();
+    drop(rt);
+    let _ = worker.join().unwrap();
+}
+
+#[test]
+fn standalone_servers_serve_multiple_hubs() {
+    let broker_srv = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let ds_srv = DistroStreamServer::start("127.0.0.1:0").unwrap();
+    let b_addr = broker_srv.addr.to_string();
+    let d_addr = ds_srv.addr.to_string();
+
+    let hub_a = DistroStreamHub::connect("proc-a", &d_addr, &b_addr).unwrap();
+    let hub_b = DistroStreamHub::connect("proc-b", &d_addr, &b_addr).unwrap();
+
+    let sa = hub_a.object_stream::<u64>(Some("xproc")).unwrap();
+    let sb = hub_b.object_stream::<u64>(Some("xproc")).unwrap();
+    assert_eq!(sa.id(), sb.id(), "alias must resolve to one stream across processes");
+
+    sa.publish_list(&[1, 2, 3]).unwrap();
+    sa.close().unwrap();
+    let got = sb.poll_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert_eq!(got.len(), 3);
+    assert!(sb.is_closed());
+
+    // Exactly-once across processes: nothing left.
+    assert!(sb.poll().unwrap().is_empty());
+    let client = BrokerClient::connect(&b_addr).unwrap();
+    assert_eq!(client.topic_stats(&sa.handle().topic()).unwrap().records, 0);
+
+    broker_srv.shutdown();
+    ds_srv.shutdown();
+}
+
+#[test]
+fn remote_worker_task_failure_retries_and_recovers() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    static ATTEMPTS: AtomicU32 = AtomicU32::new(0);
+    register_task_fn("dist.flaky", |ctx| {
+        if ATTEMPTS.fetch_add(1, Ordering::SeqCst) == 0 {
+            anyhow::bail!("first attempt dies");
+        }
+        ctx.set_output_as(0, &99u64);
+        Ok(())
+    });
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || serve_worker(listener, 1));
+
+    // No local slots beyond 1; the flaky task may run locally or remotely —
+    // the retry machinery must work regardless of where attempts land.
+    let rt = CometRuntime::builder()
+        .workers(&[1])
+        .remote_worker(&addr, 1)
+        .max_retries(2)
+        .scale(TimeScale::IDENTITY)
+        .build()
+        .unwrap();
+    let out = rt.new_object();
+    rt.submit(TaskSpec::new("dist.flaky").arg(Arg::Out(out.id()))).unwrap();
+    let v: u64 = rt.wait_on_as(&out).unwrap();
+    assert_eq!(v, 99);
+    rt.shutdown().unwrap();
+    drop(rt);
+    let _ = worker.join().unwrap();
+}

@@ -1,0 +1,124 @@
+//! Use-case integration: the four paper workloads end-to-end, including one
+//! run with the real PJRT artifacts (requires `make artifacts`).
+
+use hybridws::apps::{self, uc1_simulation, uc2_sweep, uc3_sensor, uc4_nested, workload};
+use hybridws::coordinator::api::CometRuntime;
+use hybridws::util::timeutil::TimeScale;
+
+fn fast_rt(slots: &[usize]) -> CometRuntime {
+    apps::register_all();
+    CometRuntime::builder().workers(slots).scale(TimeScale::new(0.001)).build().unwrap()
+}
+
+#[test]
+fn uc1_task_based_and_hybrid_agree_numerically() {
+    let rt = fast_rt(&[8, 8]);
+    let cfg = uc1_simulation::Uc1Config {
+        num_sims: 2,
+        files_per_sim: 4,
+        gen_ms: 30,
+        proc_ms: 60,
+        sim_cores: 2,
+        proc_cores: 1,
+        merge_cores: 1,
+        dir: std::env::temp_dir().join(format!("hybridws-ituc1-{}", std::process::id())),
+    };
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+    let tb = uc1_simulation::run_task_based(&rt, &cfg).unwrap();
+    let hy = uc1_simulation::run_hybrid(&rt, &cfg).unwrap();
+    assert_eq!(tb.frames, hy.frames);
+    assert!(
+        (tb.mean_of_means - hy.mean_of_means).abs() < 1e-5,
+        "tb {} vs hy {}",
+        tb.mean_of_means,
+        hy.mean_of_means
+    );
+    rt.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+}
+
+#[test]
+fn uc1_with_pjrt_models_end_to_end() {
+    apps::register_all();
+    let rt = CometRuntime::builder()
+        .workers(&[8])
+        .scale(TimeScale::new(0.001))
+        .with_models()
+        .build()
+        .expect("artifacts must exist — run `make artifacts`");
+    let cfg = uc1_simulation::Uc1Config {
+        num_sims: 1,
+        files_per_sim: 3,
+        gen_ms: 20,
+        proc_ms: 20,
+        sim_cores: 2,
+        proc_cores: 1,
+        merge_cores: 1,
+        dir: std::env::temp_dir().join(format!("hybridws-ituc1m-{}", std::process::id())),
+    };
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+    let before = rt.models().unwrap().executions();
+    let r = uc1_simulation::run_hybrid(&rt, &cfg).unwrap();
+    let after = rt.models().unwrap().executions();
+    assert_eq!(r.frames, 3);
+    // heat_chunk per frame + frame_stats per frame = 6 executions.
+    assert!(after - before >= 6, "expected >=6 PJRT executions, got {}", after - before);
+    // Heat diffusion of the synthetic field keeps means in (0, 1).
+    assert!(r.mean_of_means > 0.0 && r.mean_of_means < 1.0);
+    rt.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+}
+
+#[test]
+fn uc2_both_versions_converge_similarly() {
+    let rt = fast_rt(&[8]);
+    let cfg = uc2_sweep::Uc2Config { computations: 2, iterations: 6, iter_ms: 10 };
+    let tb = uc2_sweep::run_task_based(&rt, &cfg).unwrap();
+    let hy = uc2_sweep::run_hybrid(&rt, &cfg).unwrap();
+    // Both run the same contraction; states stay bounded and finite.
+    for f in tb.finals.iter().chain(hy.finals.iter()) {
+        assert!(f.iter().all(|v| v.is_finite() && v.abs() < 10.0));
+    }
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn uc3_filters_share_without_loss_under_many_workers() {
+    let rt = fast_rt(&[4, 4, 4]);
+    let cfg = uc3_sensor::Uc3Config { filters: 6, readings: 30, emit_ms: 5, threshold: -0.2 };
+    let r = uc3_sensor::run(&rt, &cfg).unwrap();
+    assert_eq!(r.per_filter.iter().sum::<usize>(), 30);
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn uc4_nested_workflows_complete() {
+    let rt = fast_rt(&[8]);
+    let r = uc4_nested::run(
+        &rt,
+        &uc4_nested::Uc4Config { elements: 12, batch_size: 5, emit_ms: 5, filter_ms: 10 },
+    )
+    .unwrap();
+    assert_eq!(r.batches, 3); // 5+5+2
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn writers_readers_scale_without_loss() {
+    let rt = fast_rt(&[4, 4, 4, 4]);
+    for (w, r) in [(1, 1), (2, 4), (4, 2), (8, 8)] {
+        let res = workload::run_writers_readers(&rt, w, r, 64, 24, 1).unwrap();
+        assert_eq!(res.per_reader.iter().sum::<usize>(), 64, "w={w} r={r}");
+    }
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn balanced_poll_policy_caps_claims() {
+    // The §6.4 future-work knob: finite max_poll_records splits load.
+    let rt = fast_rt(&[16]);
+    rt.set_max_poll_records(4);
+    let res = workload::run_writers_readers(&rt, 1, 4, 64, 24, 2).unwrap();
+    assert_eq!(res.per_reader.iter().sum::<usize>(), 64);
+    rt.shutdown().unwrap();
+}

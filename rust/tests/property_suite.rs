@@ -1,0 +1,291 @@
+//! Property-based and failure-injection suite over whole subsystems
+//! (uses the in-crate `util::quick` mini-framework; see DESIGN.md §8).
+
+use std::collections::HashSet;
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{AssignmentMode, BrokerCore};
+use hybridws::coordinator::analyser::TaskAnalyser;
+use hybridws::coordinator::annotations::{Arg, TaskSpec};
+use hybridws::coordinator::data::DataRegistry;
+use hybridws::coordinator::prelude::*;
+use hybridws::coordinator::scheduler::{SchedulerConfig, TaskScheduler};
+use hybridws::util::quick::{check_with, ensure};
+use hybridws::util::rng::Rng;
+use hybridws::util::timeutil::TimeScale;
+use hybridws::util::wire::Wire;
+
+// ---- broker properties ----------------------------------------------------
+
+#[test]
+fn prop_broker_no_loss_no_dup_under_interleaving() {
+    // Random interleavings of publishes and polls by several members of one
+    // group must deliver every record exactly once.
+    check_with("broker exactly-once interleaving", 40, |r: &mut Rng| {
+        let n_ops = r.range(5, 60);
+        // op: 0..3 = publish, 3..6 = poll by member op%3
+        (0..n_ops).map(|_| r.below(6)).collect::<Vec<u64>>()
+    }, |ops| {
+        let b = BrokerCore::new();
+        b.create_topic("t", 3).unwrap();
+        for m in ["m0", "m1", "m2"] {
+            b.join_group("g", "t", m, AssignmentMode::Shared).unwrap();
+        }
+        let mut published = 0u64;
+        let mut seen: Vec<u64> = Vec::new();
+        for op in ops {
+            if *op < 3 {
+                b.publish("t", ProducerRecord::new(published.encode_vec())).unwrap();
+                published += 1;
+            } else {
+                let member = format!("m{}", op % 3);
+                for rec in b.poll("g", "t", &member, usize::MAX).unwrap() {
+                    seen.push(u64::decode_exact(&rec.value.0).unwrap());
+                }
+            }
+        }
+        // Drain the rest.
+        for rec in b.poll("g", "t", "m0", usize::MAX).unwrap() {
+            seen.push(u64::decode_exact(&rec.value.0).unwrap());
+        }
+        ensure(seen.len() as u64 == published, "count mismatch")?;
+        let uniq: HashSet<u64> = seen.iter().copied().collect();
+        ensure(uniq.len() as u64 == published, "duplicates delivered")
+    });
+}
+
+#[test]
+fn prop_partitioned_groups_cover_all_records() {
+    check_with("partitioned coverage", 30, |r: &mut Rng| {
+        (r.range(1, 9), r.range(1, 6), r.range(0, 80)) // members, partitions, records
+    }, |&(members, partitions, records)| {
+        let b = BrokerCore::new();
+        b.create_topic("t", partitions).unwrap();
+        let names: Vec<String> = (0..members).map(|i| format!("m{i}")).collect();
+        for m in &names {
+            b.join_group("g", "t", m, AssignmentMode::Partitioned).unwrap();
+        }
+        for i in 0..records {
+            b.publish("t", ProducerRecord::new(vec![i as u8])).unwrap();
+        }
+        let mut total = 0;
+        for m in &names {
+            total += b.poll("g", "t", m, usize::MAX).unwrap().len();
+        }
+        ensure(total == records, "partitioned members must cover every record")
+    });
+}
+
+// ---- analyser properties ----------------------------------------------------
+
+#[test]
+fn prop_analyser_reader_depends_on_latest_writer_only() {
+    check_with("analyser RAW latest-writer", 50, |r: &mut Rng| {
+        let writers = r.range(1, 8);
+        writers
+    }, |&writers| {
+        let mut a = TaskAnalyser::new();
+        let d = a.data.new_data();
+        let mut last = None;
+        for _ in 0..writers {
+            let (rec, deps) = a.analyse(TaskSpec::new("w").arg(Arg::Out(d)), 0);
+            ensure(deps.is_empty(), "renamed writers must not depend on each other")?;
+            last = Some(rec.id);
+        }
+        let (_r, deps) = a.analyse(TaskSpec::new("r").arg(Arg::In(d)), 0);
+        ensure(deps.len() == 1, "exactly one dependency")?;
+        ensure(deps.contains(&last.unwrap()), "must be the latest writer")
+    });
+}
+
+#[test]
+fn prop_analyser_stream_args_never_create_edges() {
+    check_with("stream args edge-free", 40, |r: &mut Rng| {
+        r.range(1, 12) // number of stream tasks
+    }, |&n| {
+        let mut a = TaskAnalyser::new();
+        let h = StreamHandle {
+            id: 1,
+            alias: None,
+            stype: StreamType::Object,
+            partitions: 1,
+            base_dir: None,
+            mode: ConsumerMode::ExactlyOnce,
+        };
+        for i in 0..n {
+            let arg = if i % 2 == 0 {
+                Arg::StreamOut(h.clone())
+            } else {
+                Arg::StreamIn(h.clone())
+            };
+            let (_rec, deps) = a.analyse(TaskSpec::new("s").arg(arg), 0);
+            ensure(deps.is_empty(), "stream parameter created a dependency")?;
+        }
+        Ok(())
+    });
+}
+
+// ---- scheduler properties -----------------------------------------------------
+
+#[test]
+fn prop_scheduler_never_overcommits() {
+    check_with("scheduler slot safety", 40, |r: &mut Rng| {
+        let workers = r.range(1, 5);
+        let slots: Vec<usize> = (0..workers).map(|_| r.range(1, 6)).collect();
+        let tasks: Vec<usize> = (0..r.range(1, 30)).map(|_| r.range(1, 4)).collect();
+        (slots, tasks)
+    }, |(slots, tasks)| {
+        let mut analyser = TaskAnalyser::new();
+        let data = DataRegistry::new();
+        let mut sched = TaskScheduler::new(slots, SchedulerConfig::default());
+        for &cores in tasks {
+            let (rec, _) = analyser.analyse(TaskSpec::new("t").cores(cores), 0);
+            sched.enqueue(&rec);
+        }
+        let placed = sched.schedule(&data);
+        // Task ids are assigned sequentially, so tasks[id] is its core count.
+        let total: usize = slots.iter().sum();
+        let mut used_per_worker = vec![0usize; slots.len()];
+        for a in &placed {
+            used_per_worker[a.worker] += tasks[a.task as usize];
+        }
+        for (w, &u) in used_per_worker.iter().enumerate() {
+            ensure(u <= slots[w], "worker overcommitted")?;
+        }
+        let placed_cores: usize = placed.iter().map(|a| tasks[a.task as usize]).sum();
+        ensure(sched.free_slots() == total - placed_cores, "slot accounting broken")
+    });
+}
+
+// ---- runtime failure injection ----------------------------------------------------
+
+#[test]
+fn repeated_worker_deaths_never_lose_work() {
+    hybridws::apps::register_all();
+    register_task_fn("ps.robust", |ctx| {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        ctx.set_output_as(0, &1u64);
+        Ok(())
+    });
+    let rt = CometRuntime::builder()
+        .workers(&[2, 2, 2])
+        .scale(TimeScale::new(0.001))
+        .build()
+        .unwrap();
+    let outs: Vec<DataRef> = (0..12).map(|_| rt.new_object()).collect();
+    for o in &outs {
+        rt.submit(TaskSpec::new("ps.robust").arg(Arg::Out(o.id()))).unwrap();
+    }
+    // Kill two of the three workers while work is in flight.
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    rt.kill_worker(0).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    rt.kill_worker(2).unwrap();
+    for o in &outs {
+        let v: u64 = rt.wait_on_as(o).unwrap();
+        assert_eq!(v, 1);
+    }
+    assert_eq!(rt.stats().failed, 0);
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn flaky_tasks_with_mixed_failures_converge() {
+    hybridws::apps::register_all();
+    register_task_fn("ps.flaky2", |ctx| {
+        ctx.set_output_as(0, &(ctx.attempt as u64));
+        Ok(())
+    });
+    let rt =
+        CometRuntime::builder().workers(&[4]).max_retries(3).scale(TimeScale::new(0.001)).build().unwrap();
+    // 8 tasks; ~half get 1-2 injected failures.
+    rt.inject_failure("ps.flaky2", 6);
+    let outs: Vec<DataRef> = (0..8).map(|_| rt.new_object()).collect();
+    for o in &outs {
+        rt.submit(TaskSpec::new("ps.flaky2").arg(Arg::Out(o.id()))).unwrap();
+    }
+    let mut total_attempts = 0u64;
+    for o in &outs {
+        total_attempts += rt.wait_on_as::<u64>(o).unwrap();
+    }
+    // 8 successes; 6 injected failures consumed somewhere.
+    assert_eq!(total_attempts, 8 + 6);
+    assert_eq!(rt.stats().completed, 8);
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn stream_workflow_survives_task_retries() {
+    hybridws::apps::register_all();
+    register_task_fn("ps.retry_prod", |ctx| {
+        let s = ctx.object_stream::<u64>(0);
+        if ctx.attempt == 1 {
+            anyhow::bail!("die before publishing");
+        }
+        s.publish_list(&[1, 2, 3, 4, 5])?;
+        s.close()?;
+        Ok(())
+    });
+    let rt =
+        CometRuntime::builder().workers(&[4]).max_retries(2).scale(TimeScale::new(0.001)).build().unwrap();
+    let s = rt.object_stream::<u64>(Some("ps-retry")).unwrap();
+    rt.submit(TaskSpec::new("ps.retry_prod").arg(Arg::StreamOut(s.handle().clone()))).unwrap();
+    let got = s.poll_timeout(std::time::Duration::from_secs(10)).unwrap();
+    let mut total = got.len();
+    while !s.is_closed() || total < 5 {
+        total += s.poll().unwrap().len();
+        if total >= 5 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(total, 5, "retried producer must deliver everything exactly once");
+    rt.shutdown().unwrap();
+}
+
+// ---- wire codec property ------------------------------------------------------------
+
+#[test]
+fn prop_task_spec_wire_roundtrip() {
+    check_with("TaskSpec wire roundtrip", 60, |r: &mut Rng| {
+        let n_args = r.range(0, 10);
+        let mut args = Vec::new();
+        for _ in 0..n_args {
+            args.push(match r.below(5) {
+                0 => Arg::In(r.below(100)),
+                1 => Arg::Out(r.below(100)),
+                2 => Arg::FileIn(r.alnum(8)),
+                3 => Arg::Scalar(vec![0u8; r.range(0, 64)]),
+                _ => Arg::StreamIn(StreamHandle {
+                    id: r.below(50),
+                    alias: if r.chance(0.5) { Some(r.alnum(5)) } else { None },
+                    stype: StreamType::Object,
+                    partitions: r.range(1, 8),
+                    base_dir: None,
+                    mode: ConsumerMode::ExactlyOnce,
+                }),
+            });
+        }
+        TaskSpecCarrier(TaskSpec::new(&r.alnum(6)).args(args).cores(r.range(1, 16)))
+    }, |carrier| {
+        let spec = &carrier.0;
+        let back = TaskSpec::decode_exact(&spec.encode_vec())
+            .map_err(|e| format!("decode failed: {e}"))?;
+        ensure(&back == spec, "roundtrip mismatch")
+    });
+}
+
+/// Shrink carrier for TaskSpec (drop args).
+#[derive(Debug, Clone)]
+struct TaskSpecCarrier(TaskSpec);
+
+impl hybridws::util::quick::Shrink for TaskSpecCarrier {
+    fn shrink(&self) -> Vec<Self> {
+        if self.0.args.is_empty() {
+            return vec![];
+        }
+        let mut smaller = self.0.clone();
+        smaller.args.pop();
+        vec![TaskSpecCarrier(smaller)]
+    }
+}
