@@ -254,12 +254,16 @@ pub fn run_task_based(rt: &CometRuntime, cfg: &Uc1Config) -> Result<Uc1Result> {
 /// simulations through a `FileDistroStream` per simulation.
 pub fn run_hybrid(rt: &CometRuntime, cfg: &Uc1Config) -> Result<Uc1Result> {
     let t0 = Instant::now();
-    // Initialise streams (one monitored dir per simulation).
+    // Initialise streams (one monitored dir per simulation). Cap each FDS
+    // poll so one driver iteration spawns a bounded burst of processing
+    // tasks per simulation even when many frames landed at once.
     let mut streams = Vec::new();
     for s in 0..cfg.num_sims {
         let dir = cfg.dir.join(format!("stream{s}"));
         std::fs::create_dir_all(&dir)?;
-        streams.push(rt.file_stream(None, &dir.to_string_lossy())?);
+        let mut fds = rt.file_stream(None, &dir.to_string_lossy())?;
+        fds.set_batch_policy(crate::dstream::BatchPolicy::default().records(64));
+        streams.push(fds);
     }
     // Launch simulations.
     for (s, stream) in streams.iter().enumerate() {

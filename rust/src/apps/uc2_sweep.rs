@@ -196,8 +196,14 @@ pub fn run_task_based(rt: &CometRuntime, cfg: &Uc2Config) -> Result<Uc2Result> {
 pub fn run_hybrid(rt: &CometRuntime, cfg: &Uc2Config) -> Result<Uc2Result> {
     let t0 = Instant::now();
     // One stream per computation; each computation consumes its ring peer's.
+    // A byte budget bounds each exchange poll: a computation that lags
+    // several iterations drains its peer's backlog in bounded batches
+    // instead of one unbounded burst.
+    let policy = crate::dstream::BatchPolicy::default().bytes(256 * 1024);
     let streams: Vec<_> = (0..cfg.computations)
-        .map(|i| rt.object_stream::<Vec<u8>>(Some(&format!("uc2-{i}"))).unwrap())
+        .map(|i| {
+            rt.object_stream_batched::<Vec<u8>>(Some(&format!("uc2-{i}")), policy).unwrap()
+        })
         .collect();
     let finals_refs: Vec<DataRef> = (0..cfg.computations).map(|_| rt.new_object()).collect();
     for i in 0..cfg.computations {

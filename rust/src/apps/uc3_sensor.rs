@@ -64,7 +64,9 @@ pub fn register() {
         let threshold = f32::from_bits(thr_bits);
         let zoo = ctx.zoo.clone();
         let mut count: u64 = 0;
-        // Consume until the sensor closes, then drain.
+        // Consume until the sensor closes, then drain. Each poll arrives
+        // as one batched fetch; the filtered results of the whole batch
+        // are re-published downstream as one batched request too.
         loop {
             let closed = sensor.is_closed();
             let msgs = sensor.poll()?;
@@ -75,6 +77,7 @@ pub fn register() {
                 std::thread::sleep(Duration::from_micros(300));
                 continue;
             }
+            let mut outgoing = Vec::with_capacity(msgs.len());
             for m in msgs {
                 let readings = from_bytes(&m);
                 let filtered = match zoo.as_ref() {
@@ -93,9 +96,10 @@ pub fn register() {
                         kept.iter().map(|v| v / norm).collect()
                     }
                 };
-                relevant.publish(&to_bytes(&filtered))?;
+                outgoing.push(to_bytes(&filtered));
                 count += 1;
             }
+            relevant.publish_list(&outgoing)?;
         }
         relevant.close()?;
         ctx.set_output_as(2, &count);

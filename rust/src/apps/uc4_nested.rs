@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::coordinator::api::{CometRuntime, DataRef};
 use crate::coordinator::executor::register_task_fn;
-use crate::coordinator::prelude::{Arg, TaskSpec};
+use crate::coordinator::prelude::{Arg, BatchPolicy, TaskSpec};
 
 /// Vector length per produced element.
 pub const ELEM_N: usize = 256;
@@ -118,7 +118,13 @@ pub fn register() {
 /// Run the UC4 pipeline: producer → batched filters → nested big compute.
 pub fn run(rt: &CometRuntime, cfg: &Uc4Config) -> Result<Uc4Result> {
     let t0 = Instant::now();
-    let data = rt.object_stream::<Vec<u8>>(Some("uc4-data"))?;
+    // Cap each poll at one batch's worth of elements: the nested-workflow
+    // batcher then spawns at most ~one filter task per poll instead of an
+    // unbounded burst after a slow scheduling round.
+    let data = rt.object_stream_batched::<Vec<u8>>(
+        Some("uc4-data"),
+        BatchPolicy::default().records(cfg.batch_size),
+    )?;
     rt.submit(
         TaskSpec::new("uc4.producer")
             .arg(Arg::StreamOut(data.handle().clone()))

@@ -13,7 +13,8 @@ use anyhow::Result;
 
 use crate::coordinator::api::{CometRuntime, DataRef};
 use crate::coordinator::executor::register_task_fn;
-use crate::coordinator::prelude::{Arg, TaskSpec};
+use crate::coordinator::prelude::{Arg, BatchPolicy, TaskSpec};
+use crate::dstream::api::StreamId;
 use crate::util::wire::Blob;
 
 pub fn register() {
@@ -99,6 +100,9 @@ pub struct WrResult {
     pub elapsed_s: f64,
     /// Elements processed per reader (Fig 20's distribution).
     pub per_reader: Vec<usize>,
+    /// The stream's id — key into `CometRuntime::stream_metrics` for the
+    /// batch-efficiency counters of the run.
+    pub stream_id: StreamId,
 }
 
 /// N writers, M readers over one stream. `total_elements` are split evenly
@@ -129,8 +133,35 @@ pub fn run_writers_readers_gap(
     process_ms: u64,
     gen_gap_ms: u64,
 ) -> Result<WrResult> {
+    run_writers_readers_tuned(
+        rt,
+        writers,
+        readers,
+        total_elements,
+        payload_bytes,
+        process_ms,
+        gen_gap_ms,
+        BatchPolicy::default(),
+    )
+}
+
+/// [`run_writers_readers_gap`] over a stream tuned with `batch` — the
+/// knob the Fig 19/20 benches turn to exercise the batched data plane
+/// (`max_records` caps each reader's poll, spreading load; `max_bytes`
+/// bounds per-poll payload).
+#[allow(clippy::too_many_arguments)]
+pub fn run_writers_readers_tuned(
+    rt: &CometRuntime,
+    writers: usize,
+    readers: usize,
+    total_elements: usize,
+    payload_bytes: usize,
+    process_ms: u64,
+    gen_gap_ms: u64,
+    batch: BatchPolicy,
+) -> Result<WrResult> {
     let t0 = Instant::now();
-    let stream = rt.object_stream::<Blob>(None)?;
+    let stream = rt.object_stream_batched::<Blob>(None, batch)?;
     // Readers first (they wait for data), writers next — the scheduler's
     // producer priority reorders placement anyway.
     let counts: Vec<DataRef> = (0..readers).map(|_| rt.new_object()).collect();
@@ -159,7 +190,7 @@ pub fn run_writers_readers_gap(
     }
     let per_reader: Vec<usize> =
         counts.iter().map(|c| rt.wait_on_as::<u64>(c).map(|v| v as usize)).collect::<Result<_>>()?;
-    Ok(WrResult { elapsed_s: t0.elapsed().as_secs_f64(), per_reader })
+    Ok(WrResult { elapsed_s: t0.elapsed().as_secs_f64(), per_reader, stream_id: stream.id() })
 }
 
 /// OP batch (Figs 21-24): `tasks` tasks, each receiving `objs_per_task`
@@ -245,6 +276,34 @@ mod tests {
         let r = run_writers_readers(&rt, 1, 4, 60, 24, 2).unwrap();
         assert_eq!(r.per_reader.iter().sum::<usize>(), 60);
         assert_eq!(r.per_reader.len(), 4);
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tuned_policy_conserves_and_bounds_batches() {
+        let rt = rt(&[16]);
+        let r = run_writers_readers_tuned(
+            &rt,
+            1,
+            4,
+            60,
+            24,
+            1,
+            2,
+            BatchPolicy::default().records(2),
+        )
+        .unwrap();
+        assert_eq!(r.per_reader.iter().sum::<usize>(), 60);
+        let metrics = rt.stream_metrics();
+        let (_, stats) =
+            metrics.iter().find(|&&(id, _)| id == r.stream_id).expect("stream metrics");
+        assert_eq!(stats.records_in, 60, "every element polled exactly once");
+        assert_eq!(stats.records_out, 60);
+        assert!(
+            stats.batches_in >= 30,
+            "max_records=2 forces ≥30 delivering polls, got {}",
+            stats.batches_in
+        );
         rt.shutdown().unwrap();
     }
 

@@ -7,7 +7,7 @@ use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
 
 
-use super::embedded::{BrokerCore, BrokerError, Result, TopicStats};
+use super::embedded::{BrokerCore, BrokerError, MultiFetch, Result, TopicStats};
 use super::group::AssignmentMode;
 use super::protocol::{error_from_code, Request, Response};
 use super::record::{ProducerRecord, Record};
@@ -190,6 +190,41 @@ impl BrokerClient {
         }
     }
 
+    /// Multi-partition drain: up to `max` records / `max_bytes` payload
+    /// bytes for `member`, plus the group's post-claim cursor positions —
+    /// one call (one wire frame, remotely) instead of poll + positions.
+    pub fn fetch_many(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+    ) -> Result<MultiFetch> {
+        // Embedded transport: bypass the dispatch layer so records stay
+        // Arc-shared (no payload copy).
+        if let Transport::Embedded(core) = &self.transport {
+            return core.fetch_many(group, topic, member, max, max_bytes);
+        }
+        match self.rpc(Request::FetchMany {
+            group: group.into(),
+            topic: topic.into(),
+            member: member.into(),
+            max,
+            max_bytes,
+        })? {
+            Response::Batches { batches, positions } => Ok(MultiFetch {
+                batches: batches
+                    .into_iter()
+                    .map(|(p, rs)| (p, rs.into_iter().map(Arc::new).collect()))
+                    .collect(),
+                positions,
+            }),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
     pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
         self.expect_ok(Request::Commit {
             group: group.into(),
@@ -247,10 +282,17 @@ mod tests {
         client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
         let recs = client.poll("g", "t", "m", usize::MAX).unwrap();
         assert_eq!(recs.len(), 3);
+        // Batched drain: publish another batch, take it in one fetch_many.
+        client
+            .publish_batch("t", vec![ProducerRecord::new(vec![4]), ProducerRecord::new(vec![5])])
+            .unwrap();
+        let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(mf.record_count(), 2);
+        assert_eq!(mf.positions.len(), 2);
         client.commit("g", "t", &[(0, 2)]).unwrap();
         let stats = client.topic_stats("t").unwrap();
         assert_eq!(stats.partitions, 2);
-        assert_eq!(stats.records, 3);
+        assert_eq!(stats.records, 5);
         for (p, (_s, hw)) in client.offsets("t").unwrap().into_iter().enumerate() {
             client.delete_records("t", p, hw).unwrap();
         }
@@ -271,6 +313,22 @@ mod tests {
         let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
         client.ping().unwrap();
         exercise(&client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn remote_fetch_many_respects_budgets() {
+        let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+        let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.create_topic("t", 2).unwrap();
+        for _ in 0..8 {
+            client.publish("t", ProducerRecord::new(vec![0; 10])).unwrap();
+        }
+        client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let mf = client.fetch_many("g", "t", "m", usize::MAX, 45).unwrap();
+        assert_eq!(mf.record_count(), 4, "45-byte budget → 4 × 10-byte records");
+        let rest = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(rest.record_count(), 4, "budget cut must not lose records");
         server.shutdown();
     }
 

@@ -39,6 +39,31 @@ pub struct TopicStats {
     pub start_offsets: Vec<u64>,
 }
 
+/// Result of one multi-partition fetch ([`BrokerCore::fetch_many`]): the
+/// per-partition record batches plus the group's cursor positions, taken
+/// under the same group lock so callers get a consistent commit bound
+/// without a second round trip.
+#[derive(Debug, Clone, Default)]
+pub struct MultiFetch {
+    /// `(partition, records)` — only partitions that yielded records.
+    pub batches: Vec<(usize, Vec<Arc<Record>>)>,
+    /// `(claim position, committed offset)` for **every** partition,
+    /// observed after the claims above (the safe commit/delete bounds).
+    pub positions: Vec<(u64, u64)>,
+}
+
+impl MultiFetch {
+    /// Total records across all batches.
+    pub fn record_count(&self) -> usize {
+        self.batches.iter().map(|(_, rs)| rs.len()).sum()
+    }
+
+    /// Total payload bytes across all batches.
+    pub fn byte_count(&self) -> usize {
+        self.batches.iter().flat_map(|(_, rs)| rs.iter()).map(|r| r.payload_len()).sum()
+    }
+}
+
 /// The broker state machine: topics + consumer groups.
 ///
 /// Locking: the topic map is an `RwLock` (reads dominate); each partition
@@ -120,11 +145,11 @@ impl BrokerCore {
         Ok(self.topic(topic)?.publish(rec))
     }
 
-    /// Publish a batch (one partitioner decision per record, like Kafka's
-    /// per-record send the paper describes for list publishes).
+    /// Publish a batch: one partitioner decision per record (like Kafka's
+    /// per-record send the paper describes for list publishes) but records
+    /// are grouped so each partition lock is taken once per batch.
     pub fn publish_batch(&self, topic: &str, recs: Vec<ProducerRecord>) -> Result<Vec<(usize, u64)>> {
-        let t = self.topic(topic)?;
-        Ok(recs.into_iter().map(|r| t.publish(r)).collect())
+        Ok(self.topic(topic)?.publish_many(recs))
     }
 
     // ---- consume -------------------------------------------------------
@@ -170,6 +195,8 @@ impl BrokerCore {
     ///
     /// Shared mode: claims from every partition's shared cursor (greedy).
     /// Partitioned mode: claims only from the member's assigned partitions.
+    /// Thin wrapper over [`BrokerCore::fetch_many`] with an unlimited byte
+    /// budget, flattened — one claim/fetch code path to maintain.
     pub fn poll(
         &self,
         group: &str,
@@ -177,6 +204,23 @@ impl BrokerCore {
         member: &str,
         max: usize,
     ) -> Result<Vec<Arc<Record>>> {
+        let mf = self.fetch_many(group, topic, member, max, usize::MAX)?;
+        Ok(mf.batches.into_iter().flat_map(|(_, recs)| recs).collect())
+    }
+
+    /// Drain every partition assigned to `member` in **one call**: up to
+    /// `max` records totalling at most `max_bytes` of payload, plus the
+    /// group's post-claim cursor positions. One group-lock acquisition (and
+    /// one wire frame, over TCP) replaces the per-partition poll +
+    /// positions round trips of the record-at-a-time path.
+    pub fn fetch_many(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+    ) -> Result<MultiFetch> {
         let t = self.topic(topic)?;
         let entry = {
             let groups = self.groups.lock().unwrap();
@@ -190,20 +234,46 @@ impl BrokerCore {
             return Err(BrokerError::UnknownMember { group: group.into(), member: member.into() });
         }
         let parts = st.assignment(member, t.partition_count());
-        let mut out = Vec::new();
-        let mut budget = max;
+        let mut batches: Vec<(usize, Vec<Arc<Record>>)> = Vec::new();
+        let mut rec_budget = max;
+        let mut byte_budget = max_bytes;
         for p in parts {
-            if budget == 0 {
+            if rec_budget == 0 || (byte_budget == 0 && !batches.is_empty()) {
                 break;
             }
-            let (from, to) = st.claim(p, t.start_offset(p), t.high_watermark(p), budget);
-            if to > from {
-                let recs = t.fetch(p, from, (to - from) as usize);
-                budget -= recs.len().min(budget);
-                out.extend(recs);
+            let (start, hw) = t.offsets_of(p);
+            let (from, to) = st.claim(p, start, hw, rec_budget);
+            if to <= from {
+                continue;
             }
+            // Deliberately keep scanning later partitions even when this
+            // one yields nothing under the remaining byte budget: another
+            // partition may hold smaller records that still fit. The cost
+            // is a bounded O(partitions) claim+rewind, not lost records.
+            let mut recs = t.fetch_budgeted(p, from, (to - from) as usize, byte_budget);
+            if recs.is_empty() && batches.is_empty() {
+                // Progress guarantee: a fetch that would otherwise return
+                // nothing delivers one record even if it overflows the
+                // byte budget — a single oversized record must not wedge
+                // its consumers.
+                recs = t.fetch(p, from, 1);
+            }
+            // The byte budget may cut the batch short of the claim: give
+            // the unfetched suffix back so other members can take it.
+            if (recs.len() as u64) < to - from {
+                st.cursor_mut(p).position = from + recs.len() as u64;
+            }
+            if recs.is_empty() {
+                continue;
+            }
+            rec_budget -= recs.len().min(rec_budget);
+            let bytes: usize = recs.iter().map(|r| r.payload_len()).sum();
+            byte_budget = byte_budget.saturating_sub(bytes);
+            batches.push((p, recs));
         }
-        Ok(out)
+        let positions =
+            (0..t.partition_count()).map(|p| (st.position(p), st.committed(p))).collect();
+        Ok(MultiFetch { batches, positions })
     }
 
     /// Commit processed offsets: `up_to` per partition.
@@ -389,6 +459,100 @@ mod tests {
         b.crash_member("g", "t", "m1").unwrap();
         let redelivered = b.poll("g", "t", "m2", usize::MAX).unwrap();
         assert_eq!(redelivered.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn fetch_many_drains_all_partitions_in_one_call() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 4).unwrap();
+        for i in 0..20 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let mf = b.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(mf.batches.len(), 4, "every partition yields a batch");
+        assert_eq!(mf.record_count(), 20);
+        assert_eq!(mf.byte_count(), 20, "one byte per record");
+        // Positions agree with the standalone positions() call.
+        assert_eq!(mf.positions, b.positions("g", "t").unwrap());
+        // Nothing left afterwards.
+        assert_eq!(b.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap().record_count(), 0);
+    }
+
+    #[test]
+    fn fetch_many_respects_byte_budget_and_rewinds() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        for _ in 0..10 {
+            b.publish("t", ProducerRecord::new(vec![0; 10])).unwrap();
+        }
+        b.join_group("g", "t", "m1", AssignmentMode::Shared).unwrap();
+        b.join_group("g", "t", "m2", AssignmentMode::Shared).unwrap();
+        // 35-byte budget → 3 whole records; the claimed-but-unfetched
+        // suffix must be re-claimable by another member.
+        let a = b.fetch_many("g", "t", "m1", usize::MAX, 35).unwrap();
+        assert_eq!(a.record_count(), 3);
+        let c = b.fetch_many("g", "t", "m2", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(c.record_count(), 7, "budget cut must not lose records");
+        let offsets: Vec<u64> =
+            c.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.offset)).collect();
+        assert_eq!(offsets, (3..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn fetch_many_delivers_one_oversized_record() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.publish("t", ProducerRecord::new(vec![0; 1000])).unwrap();
+        b.publish("t", ProducerRecord::new(vec![0; 1000])).unwrap();
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        // A 10-byte budget cannot hold either record, but the consumer
+        // must still make progress — exactly one record per call.
+        let a = b.fetch_many("g", "t", "m", usize::MAX, 10).unwrap();
+        assert_eq!(a.record_count(), 1);
+        let c = b.fetch_many("g", "t", "m", usize::MAX, 10).unwrap();
+        assert_eq!(c.record_count(), 1);
+        assert_eq!(b.fetch_many("g", "t", "m", usize::MAX, 10).unwrap().record_count(), 0);
+    }
+
+    #[test]
+    fn fetch_many_respects_record_cap_and_partitioned_assignment() {
+        let b = BrokerCore::new();
+        b.create_topic("t", 4).unwrap();
+        b.join_group("g", "t", "m1", AssignmentMode::Partitioned).unwrap();
+        b.join_group("g", "t", "m2", AssignmentMode::Partitioned).unwrap();
+        for i in 0..40 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        let a = b.fetch_many("g", "t", "m1", 5, usize::MAX).unwrap();
+        assert_eq!(a.record_count(), 5, "record cap applies across partitions");
+        let a2 = b.fetch_many("g", "t", "m1", usize::MAX, usize::MAX).unwrap();
+        let c = b.fetch_many("g", "t", "m2", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(a.record_count() + a2.record_count(), 20);
+        assert_eq!(c.record_count(), 20);
+    }
+
+    #[test]
+    fn fetch_many_matches_poll_results() {
+        let setup = || {
+            let b = BrokerCore::new();
+            b.create_topic("t", 3).unwrap();
+            for i in 0..17 {
+                b.publish("t", rec(i)).unwrap();
+            }
+            b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+            b
+        };
+        let via_poll: Vec<u8> = {
+            let b = setup();
+            b.poll("g", "t", "m", usize::MAX).unwrap().iter().map(|r| r.value.0[0]).collect()
+        };
+        let via_fetch_many: Vec<u8> = {
+            let b = setup();
+            let mf = b.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+            mf.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.value.0[0])).collect()
+        };
+        assert_eq!(via_poll, via_fetch_many, "batched and per-record paths must agree");
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod server;
 pub mod topic;
 
 pub use client::BrokerClient;
-pub use embedded::BrokerCore;
+pub use embedded::{BrokerCore, MultiFetch};
 pub use group::AssignmentMode;
 pub use record::Record;
 pub use server::BrokerServer;

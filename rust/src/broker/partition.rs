@@ -66,6 +66,17 @@ impl PartitionLog {
     /// Fetch up to `max` records with offset >= `from` (Arc clones — O(1)
     /// per record; the log is shared by many consumer groups).
     pub fn fetch(&self, from: u64, max: usize) -> Vec<Arc<Record>> {
+        self.fetch_budgeted(from, max, usize::MAX)
+    }
+
+    /// Fetch up to `max` records totalling at most `max_bytes` of payload,
+    /// starting at offset `from`. The budget is strict: the batch stops
+    /// *before* any record that would overflow it, so the result may be
+    /// empty even when records are available (a caller draining several
+    /// partitions under one shared budget must be able to rely on that —
+    /// [`super::embedded::BrokerCore::fetch_many`] layers the one-record
+    /// progress guarantee on top).
+    pub fn fetch_budgeted(&self, from: u64, max: usize, max_bytes: usize) -> Vec<Arc<Record>> {
         if self.records.is_empty() || max == 0 {
             return Vec::new();
         }
@@ -74,7 +85,17 @@ impl PartitionLog {
             return Vec::new();
         }
         let idx = (from - self.start) as usize;
-        self.records.iter().skip(idx).take(max).cloned().collect()
+        let mut out = Vec::new();
+        let mut bytes = 0usize;
+        for rec in self.records.iter().skip(idx).take(max) {
+            let len = rec.payload_len();
+            if bytes.saturating_add(len) > max_bytes {
+                break;
+            }
+            bytes += len;
+            out.push(Arc::clone(rec));
+        }
+        out
     }
 
     /// Drop records with offset < `up_to`. Returns how many were deleted.
@@ -162,6 +183,42 @@ mod tests {
         assert_eq!(log.retained_bytes(), 30);
         log.delete_up_to(1);
         assert_eq!(log.retained_bytes(), 20);
+    }
+
+    #[test]
+    fn byte_budget_truncates_fetch() {
+        let mut log = PartitionLog::new();
+        for _ in 0..5 {
+            log.append(ProducerRecord::new(vec![0; 10]));
+        }
+        // 25 bytes of budget → 2 whole records (the 3rd would overflow).
+        let got = log.fetch_budgeted(0, usize::MAX, 25);
+        assert_eq!(got.len(), 2);
+        // Exact fit takes exactly 3.
+        assert_eq!(log.fetch_budgeted(0, usize::MAX, 30).len(), 3);
+        // Record cap still applies under a generous byte budget.
+        assert_eq!(log.fetch_budgeted(0, 1, usize::MAX).len(), 1);
+    }
+
+    #[test]
+    fn oversized_first_record_yields_empty_batch() {
+        // Strict budget: the progress guarantee lives in fetch_many, not
+        // here, so shared cross-partition budgets stay exact.
+        let mut log = PartitionLog::new();
+        log.append(ProducerRecord::new(vec![0; 100]));
+        log.append(ProducerRecord::new(vec![0; 100]));
+        assert!(log.fetch_budgeted(0, usize::MAX, 10).is_empty());
+        assert_eq!(log.fetch_budgeted(0, usize::MAX, 100).len(), 1);
+    }
+
+    #[test]
+    fn budget_counts_keys_too() {
+        let mut log = PartitionLog::new();
+        log.append(ProducerRecord::with_key(vec![0; 8], vec![0; 8]));
+        log.append(ProducerRecord::with_key(vec![0; 8], vec![0; 8]));
+        // Each record is 16 payload bytes (key + value).
+        assert_eq!(log.fetch_budgeted(0, usize::MAX, 16).len(), 1);
+        assert_eq!(log.fetch_budgeted(0, usize::MAX, 32).len(), 2);
     }
 
     #[test]

@@ -41,6 +41,9 @@ pub enum Request {
     JoinGroup { group: String, topic: String, member: String, mode: AssignmentMode },
     LeaveGroup { group: String, topic: String, member: String },
     Poll { group: String, topic: String, member: String, max: usize },
+    /// One-frame multi-partition drain with record + byte budgets
+    /// (the batched data plane; replies with [`Response::Batches`]).
+    FetchMany { group: String, topic: String, member: String, max: usize, max_bytes: usize },
     Commit { group: String, topic: String, commits: Vec<(usize, u64)> },
     DeleteRecords { topic: String, partition: usize, up_to: u64 },
     Offsets { topic: String },
@@ -130,6 +133,14 @@ impl Wire for Request {
                 member.encode(w);
             }
             Request::Shutdown => w.put_u8(15),
+            Request::FetchMany { group, topic, member, max, max_bytes } => {
+                w.put_u8(17);
+                group.encode(w);
+                topic.encode(w);
+                member.encode(w);
+                max.encode(w);
+                max_bytes.encode(w);
+            }
         }
     }
 
@@ -179,6 +190,13 @@ impl Wire for Request {
             },
             15 => Request::Shutdown,
             16 => Request::Positions { group: Wire::decode(r)?, topic: Wire::decode(r)? },
+            17 => Request::FetchMany {
+                group: Wire::decode(r)?,
+                topic: Wire::decode(r)?,
+                member: Wire::decode(r)?,
+                max: Wire::decode(r)?,
+                max_bytes: Wire::decode(r)?,
+            },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
     }
@@ -198,6 +216,10 @@ pub enum Response {
     Names(Vec<String>),
     Bool(bool),
     Count(usize),
+    /// Multi-partition fetch reply: per-partition record batches plus the
+    /// group's post-claim `(position, committed)` cursors (one frame
+    /// carries everything a batched poll needs).
+    Batches { batches: Vec<(usize, Vec<Record>)>, positions: Vec<(u64, u64)> },
     Err { code: u8, msg: String },
 }
 
@@ -273,6 +295,11 @@ impl Wire for Response {
                 w.put_u8(10);
                 c.encode(w);
             }
+            Response::Batches { batches, positions } => {
+                w.put_u8(11);
+                batches.encode(w);
+                positions.encode(w);
+            }
             Response::Err { code, msg } => {
                 w.put_u8(255);
                 w.put_u8(*code);
@@ -295,6 +322,7 @@ impl Wire for Response {
             8 => Response::Names(Wire::decode(r)?),
             9 => Response::Bool(Wire::decode(r)?),
             10 => Response::Count(Wire::decode(r)?),
+            11 => Response::Batches { batches: Wire::decode(r)?, positions: Wire::decode(r)? },
             255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
         })
@@ -355,6 +383,13 @@ mod tests {
             },
             Request::LeaveGroup { group: "g".into(), topic: "t".into(), member: "m".into() },
             Request::Poll { group: "g".into(), topic: "t".into(), member: "m".into(), max: 7 },
+            Request::FetchMany {
+                group: "g".into(),
+                topic: "t".into(),
+                member: "m".into(),
+                max: 7,
+                max_bytes: 1 << 20,
+            },
             Request::Commit { group: "g".into(), topic: "t".into(), commits: vec![(0, 5)] },
             Request::DeleteRecords { topic: "t".into(), partition: 1, up_to: 9 },
             Request::Offsets { topic: "t".into() },
@@ -393,6 +428,13 @@ mod tests {
             Response::Names(vec!["a".into()]),
             Response::Bool(true),
             Response::Count(9),
+            Response::Batches {
+                batches: vec![(
+                    1,
+                    vec![Record { offset: 3, timestamp_ms: 4, key: None, value: Blob(vec![9]) }],
+                )],
+                positions: vec![(4, 2), (0, 0)],
+            },
             Response::Err { code: 1, msg: "t".into() },
         ];
         for resp in resps {

@@ -47,6 +47,12 @@ impl ProducerRecord {
     pub fn with_key(key: Vec<u8>, value: Vec<u8>) -> Self {
         Self { key: Some(Blob(key)), value: Blob(value) }
     }
+
+    /// Total payload footprint in bytes (key + value) — the same unit the
+    /// stored [`Record::payload_len`] and the broker byte budgets use.
+    pub fn payload_len(&self) -> usize {
+        self.value.0.len() + self.key.as_ref().map_or(0, |k| k.0.len())
+    }
 }
 
 /// Wall-clock ms since the UNIX epoch (record timestamps).

@@ -158,6 +158,19 @@ pub fn dispatch(core: &BrokerCore, req: Request) -> Response {
             Ok(rs) => A::Records(rs.iter().map(|r| (**r).clone()).collect()),
             Err(e) => to_err(&e),
         },
+        Q::FetchMany { group, topic, member, max, max_bytes } => {
+            match core.fetch_many(&group, &topic, &member, max, max_bytes) {
+                Ok(mf) => A::Batches {
+                    batches: mf
+                        .batches
+                        .into_iter()
+                        .map(|(p, rs)| (p, rs.iter().map(|r| (**r).clone()).collect()))
+                        .collect(),
+                    positions: mf.positions,
+                },
+                Err(e) => to_err(&e),
+            }
+        }
         Q::Commit { group, topic, commits } => match core.commit(&group, &topic, &commits) {
             Ok(()) => A::Ok,
             Err(e) => to_err(&e),
@@ -226,6 +239,43 @@ mod tests {
             Request::Poll { group: "g".into(), topic: "t".into(), member: "m".into(), max: 10 },
         ) {
             Response::Records(rs) => assert_eq!(rs.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dispatch_fetch_many_returns_batches_and_positions() {
+        let core = BrokerCore::new();
+        dispatch(&core, Request::CreateTopic { name: "t".into(), partitions: 2 });
+        for i in 0..6u8 {
+            dispatch(
+                &core,
+                Request::Publish { topic: "t".into(), rec: ProducerRecord::new(vec![i]) },
+            );
+        }
+        dispatch(
+            &core,
+            Request::JoinGroup {
+                group: "g".into(),
+                topic: "t".into(),
+                member: "m".into(),
+                mode: AssignmentMode::Shared,
+            },
+        );
+        match dispatch(
+            &core,
+            Request::FetchMany {
+                group: "g".into(),
+                topic: "t".into(),
+                member: "m".into(),
+                max: usize::MAX,
+                max_bytes: usize::MAX,
+            },
+        ) {
+            Response::Batches { batches, positions } => {
+                assert_eq!(batches.iter().map(|(_, rs)| rs.len()).sum::<usize>(), 6);
+                assert_eq!(positions.len(), 2);
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

@@ -59,9 +59,53 @@ impl Topic {
         self.partitions[partition].lock().unwrap().append(rec)
     }
 
+    /// Append a whole batch, grouping records by partition so each
+    /// partition lock is taken **once** per batch instead of once per
+    /// record. Acks are returned in submission order. O(records +
+    /// partitions): one partitioner pass builds per-partition index
+    /// buckets, then each non-empty bucket appends under one lock.
+    pub fn publish_many(&self, recs: Vec<ProducerRecord>) -> Vec<(usize, u64)> {
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.partitions.len()];
+        for (i, rec) in recs.iter().enumerate() {
+            buckets[self.pick_partition(rec)].push(i);
+        }
+        let mut slots: Vec<Option<ProducerRecord>> = recs.into_iter().map(Some).collect();
+        let mut acks: Vec<(usize, u64)> = vec![(0, 0); slots.len()];
+        for (p, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let mut log = self.partitions[p].lock().unwrap();
+            for &i in bucket {
+                let rec = slots[i].take().expect("record consumed twice");
+                acks[i] = (p, log.append(rec));
+            }
+        }
+        acks
+    }
+
     /// Fetch up to `max` records from a partition starting at `from`.
     pub fn fetch(&self, partition: usize, from: u64, max: usize) -> Vec<Arc<Record>> {
         self.partitions[partition].lock().unwrap().fetch(from, max)
+    }
+
+    /// Fetch with both a record cap and a payload byte budget (see
+    /// [`PartitionLog::fetch_budgeted`]).
+    pub fn fetch_budgeted(
+        &self,
+        partition: usize,
+        from: u64,
+        max: usize,
+        max_bytes: usize,
+    ) -> Vec<Arc<Record>> {
+        self.partitions[partition].lock().unwrap().fetch_budgeted(from, max, max_bytes)
+    }
+
+    /// `(start_offset, high_watermark)` of one partition under a single
+    /// lock acquisition (the multi-partition fetch hot path).
+    pub fn offsets_of(&self, partition: usize) -> (u64, u64) {
+        let log = self.partitions[partition].lock().unwrap();
+        (log.start_offset(), log.high_watermark())
     }
 
     /// High watermark of a partition.
@@ -147,5 +191,38 @@ mod tests {
     #[should_panic(expected = ">= 1 partition")]
     fn zero_partitions_rejected() {
         Topic::new("t", 0);
+    }
+
+    #[test]
+    fn publish_many_matches_per_record_semantics() {
+        let a = Topic::new("a", 3);
+        let b = Topic::new("b", 3);
+        let recs: Vec<ProducerRecord> = (0..9).map(|i| ProducerRecord::new(vec![i])).collect();
+        let singles: Vec<(usize, u64)> = recs.iter().cloned().map(|r| a.publish(r)).collect();
+        let batched = b.publish_many(recs);
+        assert_eq!(singles, batched, "grouped append must keep ack order");
+        for p in 0..3 {
+            assert_eq!(a.fetch(p, 0, 100).len(), b.fetch(p, 0, 100).len());
+        }
+    }
+
+    #[test]
+    fn publish_many_keeps_keyed_records_on_their_partition() {
+        let t = Topic::new("t", 4);
+        let recs: Vec<ProducerRecord> =
+            (0..8).map(|i| ProducerRecord::with_key(b"k".to_vec(), vec![i])).collect();
+        let acks = t.publish_many(recs);
+        let p0 = acks[0].0;
+        assert!(acks.iter().all(|&(p, _)| p == p0), "same key → same partition");
+        // Offsets are dense in submission order within the partition.
+        assert_eq!(acks.iter().map(|&(_, o)| o).collect::<Vec<_>>(), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn offsets_of_snapshots_one_partition() {
+        let t = Topic::new("t", 2);
+        t.publish_to(1, ProducerRecord::new(vec![0]));
+        assert_eq!(t.offsets_of(0), (0, 0));
+        assert_eq!(t.offsets_of(1), (0, 1));
     }
 }

@@ -218,7 +218,7 @@ impl TaskAnalyser {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dstream::{ConsumerMode, StreamType};
+    use crate::dstream::{BatchPolicy, ConsumerMode, StreamType};
 
     fn handle(id: StreamId) -> StreamHandle {
         StreamHandle {
@@ -228,6 +228,7 @@ mod tests {
             partitions: 1,
             base_dir: None,
             mode: ConsumerMode::ExactlyOnce,
+            batch: BatchPolicy::default(),
         }
     }
 

@@ -215,7 +215,7 @@ impl Wire for TaskSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dstream::{ConsumerMode, StreamType};
+    use crate::dstream::{BatchPolicy, ConsumerMode, StreamType};
 
     fn handle() -> StreamHandle {
         StreamHandle {
@@ -225,6 +225,7 @@ mod tests {
             partitions: 2,
             base_dir: None,
             mode: ConsumerMode::ExactlyOnce,
+            batch: BatchPolicy::default(),
         }
     }
 

@@ -27,9 +27,10 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::broker::BrokerCore;
+use crate::dstream::api::StreamId;
 use crate::dstream::{
-    ConsumerMode, DistroStreamHub, FileDistroStream, ObjectDistroStream, StreamItem,
-    StreamRegistry,
+    BatchPolicy, ConsumerMode, DistroStreamHub, FileDistroStream, ObjectDistroStream,
+    StreamCounters, StreamItem, StreamRegistry,
 };
 use crate::runtime::{find_artifacts_dir, ModelZoo};
 use crate::util::timeutil::TimeScale;
@@ -38,7 +39,7 @@ use super::analyser::TaskId;
 use super::annotations::{DataId, TaskSpec};
 use super::data::WorkerId;
 use super::dispatcher::{self, DispatcherConfig, Event, RuntimeStats};
-use super::metrics::MetricsRegistry;
+use super::metrics::{MetricsRegistry, StreamStats};
 use super::scheduler::SchedulerConfig;
 use super::tracing::TraceLog;
 use super::remote::RemoteWorker;
@@ -297,6 +298,48 @@ impl CometRuntime {
 
     /// Submit a task; returns its id immediately (execution is async,
     /// submission is fire-and-forget — no dispatcher round-trip).
+    ///
+    /// # Examples
+    ///
+    /// A hybrid submission: the task consumes a `STREAM` parameter while
+    /// the main code keeps publishing (the batched `publish_list` ships
+    /// the whole list as one broker request):
+    ///
+    /// ```
+    /// # fn main() -> anyhow::Result<()> {
+    /// use hybridws::coordinator::prelude::*;
+    ///
+    /// register_task_fn("doc.sum-stream", |ctx| {
+    ///     let s = ctx.object_stream::<u64>(0); // STREAM_IN
+    ///     let mut sum = 0u64;
+    ///     loop {
+    ///         let closed = s.is_closed();
+    ///         let items = s.poll()?; // one batched fetch_many call
+    ///         sum += items.iter().sum::<u64>();
+    ///         if items.is_empty() && closed {
+    ///             break;
+    ///         }
+    ///         std::thread::sleep(std::time::Duration::from_micros(200));
+    ///     }
+    ///     ctx.set_output_as(1, &sum);
+    ///     Ok(())
+    /// });
+    ///
+    /// let rt = CometRuntime::builder().workers(&[2]).build()?;
+    /// let numbers = rt.object_stream::<u64>(Some("doc-numbers"))?;
+    /// let out = rt.new_object();
+    /// rt.submit(
+    ///     TaskSpec::new("doc.sum-stream")
+    ///         .arg(Arg::StreamIn(numbers.handle().clone()))
+    ///         .arg(Arg::Out(out.id())),
+    /// )?;
+    /// numbers.publish_list(&[1, 2, 3, 4])?;
+    /// numbers.close()?;
+    /// assert_eq!(rt.wait_on_as::<u64>(&out)?, 10);
+    /// rt.shutdown()?;
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
         if spec.cores > self.max_task_cores {
             anyhow::bail!(
@@ -365,6 +408,32 @@ impl CometRuntime {
         self.hub.object_stream_with(alias, partitions, mode).map_err(|e| anyhow!(e.to_string()))
     }
 
+    /// Create an object stream with default partitions/mode and an
+    /// explicit [`BatchPolicy`] — the policy travels inside the handle,
+    /// so tasks receiving the stream as a `STREAM` parameter inherit the
+    /// tuning.
+    pub fn object_stream_batched<T: StreamItem>(
+        &self,
+        alias: Option<&str>,
+        batch: BatchPolicy,
+    ) -> Result<ObjectDistroStream<T>> {
+        self.hub.object_stream_batched(alias, batch).map_err(|e| anyhow!(e.to_string()))
+    }
+
+    /// Create an object stream with explicit partitions, consumer mode
+    /// and [`BatchPolicy`].
+    pub fn object_stream_tuned<T: StreamItem>(
+        &self,
+        alias: Option<&str>,
+        partitions: usize,
+        mode: ConsumerMode,
+        batch: BatchPolicy,
+    ) -> Result<ObjectDistroStream<T>> {
+        self.hub
+            .object_stream_tuned(alias, partitions, mode, batch)
+            .map_err(|e| anyhow!(e.to_string()))
+    }
+
     /// Create a file stream over `base_dir` from the main code.
     pub fn file_stream(&self, alias: Option<&str>, base_dir: &str) -> Result<FileDistroStream> {
         self.hub.file_stream(alias, base_dir).map_err(|e| anyhow!(e.to_string()))
@@ -378,6 +447,32 @@ impl CometRuntime {
 
     pub fn metrics(&self) -> &Arc<MetricsRegistry> {
         &self.metrics
+    }
+
+    /// Per-stream data-plane counters (records / batches / bytes in-out),
+    /// aggregated over the master and every in-process worker hub. Remote
+    /// worker processes keep their own counters.
+    ///
+    /// This is a *snapshot*: each call re-aggregates the live hub
+    /// counters and refreshes the mirror in [`CometRuntime::metrics`] —
+    /// `metrics().stream(..)` / `metrics().streams()` return the state as
+    /// of the most recent `stream_metrics()` call (and nothing before the
+    /// first one).
+    pub fn stream_metrics(&self) -> Vec<(StreamId, StreamStats)> {
+        let mut agg: std::collections::BTreeMap<StreamId, StreamCounters> =
+            std::collections::BTreeMap::new();
+        for hub in &self.hubs {
+            for (id, c) in hub.all_stream_counters() {
+                agg.entry(id).or_default().merge(&c);
+            }
+        }
+        // `StreamStats` is an alias of the hub-side `StreamCounters`, so
+        // the aggregate passes through unchanged.
+        let out: Vec<(StreamId, StreamStats)> = agg.into_iter().collect();
+        for &(id, stats) in &out {
+            self.metrics.set_stream(id, stats);
+        }
+        out
     }
 
     pub fn trace(&self) -> &Arc<TraceLog> {
@@ -566,6 +661,51 @@ mod tests {
             let v: u64 = rt.wait_on_as(o).unwrap();
             assert_eq!(v, 1, "all tasks must end on the surviving worker");
         }
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stream_metrics_aggregate_worker_hubs() {
+        register_task_fn("api-stream-consume", |ctx| {
+            let s = ctx.object_stream::<u64>(0);
+            let mut n = 0u64;
+            loop {
+                let closed = s.is_closed();
+                let items = s.poll()?;
+                n += items.len() as u64;
+                if items.is_empty() && closed {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+            ctx.set_output_as(1, &n);
+            Ok(())
+        });
+        let rt = rt();
+        let s = rt.object_stream::<u64>(Some("api-metrics")).unwrap();
+        let out = rt.new_object();
+        rt.submit(
+            TaskSpec::new("api-stream-consume")
+                .arg(Arg::StreamIn(s.handle().clone()))
+                .arg(Arg::Out(out.id())),
+        )
+        .unwrap();
+        s.publish_list(&[1, 2, 3, 4, 5]).unwrap();
+        s.close().unwrap();
+        assert_eq!(rt.wait_on_as::<u64>(&out).unwrap(), 5);
+        let metrics = rt.stream_metrics();
+        let (_, stats) = metrics
+            .iter()
+            .find(|&&(id, _)| id == s.id())
+            .expect("stream must appear in metrics");
+        // Publishing happened on the master hub, polling on a worker hub —
+        // both must be visible in the aggregate.
+        assert_eq!(stats.records_out, 5);
+        assert_eq!(stats.batches_out, 1, "publish_list is one batch");
+        assert_eq!(stats.records_in, 5);
+        assert!(stats.records_per_publish() >= 5.0);
+        // Mirrored into the metrics registry for later inspection.
+        assert_eq!(rt.metrics().stream(s.id()).unwrap().records_in, 5);
         rt.shutdown().unwrap();
     }
 

@@ -12,6 +12,8 @@ use std::time::Instant;
 
 use log::{debug, warn};
 
+use crate::dstream::api::StreamId;
+
 use super::analyser::{TaskAnalyser, TaskId, TaskRecord};
 use super::annotations::{DataId, TaskSpec};
 use super::data::{Key, WorkerId, MASTER};
@@ -230,15 +232,17 @@ fn run_schedule(st: &mut State) {
     // (submit-triggered) so this matches per-task scheduling time.
     let per_task = pass / assignments.len() as u32;
 
+    // Producer workers become stream data locations (§4.5); collected
+    // across the pass and applied in one batched scheduler update.
+    let mut stream_updates: Vec<(StreamId, WorkerId)> = Vec::new();
     for a in &assignments {
         st.metrics.on_schedule(a.task, per_task);
         if let Some(t) = st.enqueue_time.remove(&a.task) {
             st.metrics.on_queue(a.task, t.elapsed());
         }
         let rec = st.records.get(&a.task).expect("record for scheduled task").clone();
-        // Producer workers become stream data locations (§4.5).
         if !rec.produces.is_empty() {
-            st.scheduler.note_producer_location(&rec.produces, a.worker);
+            stream_updates.extend(rec.produces.iter().map(|&s| (s, a.worker)));
         }
         // Collect inputs that are not local to the chosen worker.
         let mut inputs = Vec::new();
@@ -260,6 +264,9 @@ fn run_schedule(st: &mut State) {
         };
         debug!("dispatch task {} ({}) -> worker {}", a.task, rec.name, a.worker);
         st.workers[a.worker].submit_job(Job { record: rec, inputs, attempt });
+    }
+    if !stream_updates.is_empty() {
+        st.scheduler.note_producer_locations(stream_updates);
     }
 }
 

@@ -12,7 +12,9 @@ use std::sync::{Arc, RwLock};
 
 use once_cell::sync::Lazy;
 
-use crate::dstream::{DistroStreamHub, FileDistroStream, ObjectDistroStream, StreamHandle, StreamItem};
+use crate::dstream::{
+    BatchPolicy, DistroStreamHub, FileDistroStream, ObjectDistroStream, StreamHandle, StreamItem,
+};
 use crate::runtime::ModelZoo;
 use crate::util::timeutil::TimeScale;
 use crate::util::wire::Wire;
@@ -133,9 +135,24 @@ impl TaskCtx {
     /// Materialise the `idx`-th argument as a typed object stream. The
     /// stream identity is per-task, so concurrent tasks on one worker are
     /// distinct producers/consumers (close semantics, group membership).
+    /// The stream inherits the [`BatchPolicy`] carried by the handle, so
+    /// batching tuned at creation time follows the stream into tasks.
     pub fn object_stream<T: StreamItem>(&self, idx: usize) -> ObjectDistroStream<T> {
         let identity = format!("{}#t{}", self.hub.process(), self.task_id);
         ObjectDistroStream::attach_as(self.stream_handle(idx).clone(), Arc::clone(&self.hub), identity)
+    }
+
+    /// [`TaskCtx::object_stream`] with a task-local [`BatchPolicy`]
+    /// override (e.g. a consumer task that wants smaller, fairer polls
+    /// than the stream-wide default).
+    pub fn object_stream_batched<T: StreamItem>(
+        &self,
+        idx: usize,
+        batch: BatchPolicy,
+    ) -> ObjectDistroStream<T> {
+        let identity = format!("{}#t{}", self.hub.process(), self.task_id);
+        let handle = self.stream_handle(idx).clone().with_batch(batch);
+        ObjectDistroStream::attach_as(handle, Arc::clone(&self.hub), identity)
     }
 
     /// Materialise the `idx`-th argument as a file stream (per-task

@@ -1,14 +1,23 @@
-//! Per-task lifecycle metrics — the instrumentation behind Fig 21–24.
+//! Per-task lifecycle metrics — the instrumentation behind Fig 21–24 —
+//! plus per-stream data-plane counters behind the Fig 19–20 batch-
+//! efficiency reports.
 //!
 //! For every task we record the time spent in each runtime phase:
 //! **analysis** (Task Analyser registration), **scheduling** (placement
 //! decision), **transfer** (localising input parameters on the worker) and
 //! **execution** (running the task body). Aggregations feed the overhead
 //! benches and the live `runtime_stats` report.
+//!
+//! For every stream we record records / batches / bytes in each direction
+//! (fed from the hubs' [`crate::dstream::StreamCounters`] via
+//! `CometRuntime::stream_metrics`), so benches can report how many records
+//! the batched data plane moves per broker round trip.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::dstream::api::StreamId;
 
 use super::analyser::TaskId;
 
@@ -26,10 +35,18 @@ pub struct TaskMetrics {
     pub worker: Option<usize>,
 }
 
+/// One stream's data-plane counters (records / batches / bytes, both
+/// directions), aggregated across every hub of the deployment. The same
+/// shape each hub collects — see [`crate::dstream::StreamCounters`] for
+/// the fields and the `records_per_poll` / `records_per_publish`
+/// batch-efficiency helpers.
+pub type StreamStats = crate::dstream::StreamCounters;
+
 /// Thread-safe metrics store.
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     tasks: Mutex<HashMap<TaskId, TaskMetrics>>,
+    streams: Mutex<HashMap<StreamId, StreamStats>>,
 }
 
 impl MetricsRegistry {
@@ -101,8 +118,30 @@ impl MetricsRegistry {
         }
     }
 
+    // ---- streams ---------------------------------------------------------
+
+    /// Replace the recorded stats of one stream (callers aggregate across
+    /// hubs first; see `CometRuntime::stream_metrics`).
+    pub fn set_stream(&self, id: StreamId, stats: StreamStats) {
+        self.streams.lock().unwrap().insert(id, stats);
+    }
+
+    /// Snapshot one stream's stats.
+    pub fn stream(&self, id: StreamId) -> Option<StreamStats> {
+        self.streams.lock().unwrap().get(&id).copied()
+    }
+
+    /// Snapshot all stream stats (sorted by stream id).
+    pub fn streams(&self) -> Vec<(StreamId, StreamStats)> {
+        let s = self.streams.lock().unwrap();
+        let mut v: Vec<_> = s.iter().map(|(&k, &st)| (k, st)).collect();
+        v.sort_by_key(|&(k, _)| k);
+        v
+    }
+
     pub fn clear(&self) {
         self.tasks.lock().unwrap().clear();
+        self.streams.lock().unwrap().clear();
     }
 
     pub fn len(&self) -> usize {
@@ -174,5 +213,28 @@ mod tests {
         assert_eq!(m.len(), 1);
         m.clear();
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn stream_stats_roundtrip_and_efficiency() {
+        let m = MetricsRegistry::new();
+        assert!(m.stream(7).is_none());
+        let s = StreamStats {
+            records_out: 100,
+            batches_out: 10,
+            bytes_out: 2400,
+            records_in: 100,
+            batches_in: 4,
+            bytes_in: 2400,
+        };
+        m.set_stream(7, s);
+        let got = m.stream(7).unwrap();
+        assert_eq!(got, s);
+        assert!((got.records_per_poll() - 25.0).abs() < 1e-9);
+        assert!((got.records_per_publish() - 10.0).abs() < 1e-9);
+        assert_eq!(m.streams(), vec![(7, s)]);
+        assert_eq!(StreamStats::default().records_per_poll(), 0.0);
+        m.clear();
+        assert!(m.stream(7).is_none());
     }
 }

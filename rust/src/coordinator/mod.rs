@@ -49,5 +49,5 @@ pub mod prelude {
     pub use super::annotations::{Arg, Direction, TaskSpec};
     pub use super::api::{CometBuilder, CometRuntime, DataRef};
     pub use super::executor::{register_task_fn, TaskCtx};
-    pub use crate::dstream::{ConsumerMode, StreamHandle, StreamType};
+    pub use crate::dstream::{BatchPolicy, ConsumerMode, StreamHandle, StreamType};
 }

@@ -234,8 +234,17 @@ impl TaskScheduler {
     /// Record that a scheduled producer task started on `worker` — its
     /// worker becomes a data location for its streams.
     pub fn note_producer_location(&mut self, streams: &[StreamId], worker: WorkerId) {
-        for &s in streams {
-            self.stream_locations.entry(s).or_default().insert(worker);
+        self.note_producer_locations(streams.iter().map(|&s| (s, worker)));
+    }
+
+    /// Batched variant: apply a whole scheduling pass's stream-location
+    /// updates in one call (the dispatcher collects them per pass).
+    pub fn note_producer_locations(
+        &mut self,
+        updates: impl IntoIterator<Item = (StreamId, WorkerId)>,
+    ) {
+        for (s, w) in updates {
+            self.stream_locations.entry(s).or_default().insert(w);
         }
     }
 
@@ -292,7 +301,7 @@ impl TaskScheduler {
 mod tests {
     use super::*;
     use crate::coordinator::analyser::{ResolvedArg, TaskRecord};
-    use crate::dstream::{ConsumerMode, StreamHandle, StreamType};
+    use crate::dstream::{BatchPolicy, ConsumerMode, StreamHandle, StreamType};
 
     fn rec(id: TaskId, cores: usize) -> TaskRecord {
         TaskRecord {
@@ -315,6 +324,7 @@ mod tests {
             partitions: 1,
             base_dir: None,
             mode: ConsumerMode::ExactlyOnce,
+            batch: BatchPolicy::default(),
         }
     }
 

@@ -69,6 +69,59 @@ impl Wire for ConsumerMode {
 /// Globally unique stream identifier (assigned by the DistroStream Server).
 pub type StreamId = u64;
 
+/// Tuning of the batched data plane, carried inside [`StreamHandle`] so a
+/// stream keeps its configuration when the handle travels through task
+/// parameters to another process.
+///
+/// - `max_records` — per-poll record cap (combined with the deployment-wide
+///   `max_poll_records` knob; the smaller wins).
+/// - `max_bytes` — per-poll payload byte budget; a poll stops before the
+///   record that would overflow it (one oversized record still delivers).
+/// - `linger_ms` — publish-side buffering: `publish` appends to a local
+///   batch that is flushed as one broker request when `max_records` /
+///   `max_bytes` fills up, when a `publish` arrives after the linger has
+///   expired, or on `flush()` / `close()`. There is no background timer:
+///   a producer that stops publishing without closing must call `flush()`
+///   itself, or its tail batch stays local. `0` (the default) publishes
+///   every record immediately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    pub max_records: usize,
+    pub max_bytes: usize,
+    pub linger_ms: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_records: usize::MAX, max_bytes: usize::MAX, linger_ms: 0 }
+    }
+}
+
+wire_struct!(BatchPolicy { max_records: usize, max_bytes: usize, linger_ms: u64 });
+
+impl BatchPolicy {
+    /// Cap the number of records per poll/flush. A computed `0` clamps
+    /// to one-at-a-time delivery on the poll side (polls never wedge).
+    pub fn records(mut self, n: usize) -> Self {
+        self.max_records = n;
+        self
+    }
+
+    /// Cap the payload bytes per poll/flush.
+    pub fn bytes(mut self, n: usize) -> Self {
+        self.max_bytes = n;
+        self
+    }
+
+    /// Buffer publishes for up to `ms` milliseconds before flushing (the
+    /// expiry is checked on each subsequent `publish`; see the field docs
+    /// for the no-background-timer caveat).
+    pub fn linger_ms(mut self, ms: u64) -> Self {
+        self.linger_ms = ms;
+        self
+    }
+}
+
 /// The serialisable face of a stream: what travels inside task parameters
 /// annotated `STREAM` and across processes. Any process holding a handle
 /// can materialise the stream via its local [`super::hub::DistroStreamHub`].
@@ -82,6 +135,8 @@ pub struct StreamHandle {
     /// Monitored directory (FDS only).
     pub base_dir: Option<String>,
     pub mode: ConsumerMode,
+    /// Batched data-plane tuning (travels with the handle).
+    pub batch: BatchPolicy,
 }
 
 wire_struct!(StreamHandle {
@@ -91,12 +146,19 @@ wire_struct!(StreamHandle {
     partitions: usize,
     base_dir: Option<String>,
     mode: ConsumerMode,
+    batch: BatchPolicy,
 });
 
 impl StreamHandle {
     /// Broker topic name for this stream.
     pub fn topic(&self) -> String {
         format!("dstream-{}", self.id)
+    }
+
+    /// Replace the batch policy (builder style).
+    pub fn with_batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
+        self
     }
 }
 
@@ -129,6 +191,13 @@ pub type Result<T> = std::result::Result<T, DStreamError>;
 pub trait StreamItem: Sized {
     fn to_stream_bytes(&self) -> Vec<u8>;
     fn from_stream_bytes(buf: &[u8]) -> Result<Self>;
+
+    /// Encode into a caller-provided writer (batched publishes reuse one
+    /// buffer across records instead of allocating per item). The default
+    /// delegates to [`StreamItem::to_stream_bytes`].
+    fn to_stream_bytes_into(&self, w: &mut ByteWriter) {
+        w.put_raw(&self.to_stream_bytes());
+    }
 }
 
 impl<T: Wire> StreamItem for T {
@@ -137,6 +206,9 @@ impl<T: Wire> StreamItem for T {
     }
     fn from_stream_bytes(buf: &[u8]) -> Result<Self> {
         Ok(T::decode_exact(buf)?)
+    }
+    fn to_stream_bytes_into(&self, w: &mut ByteWriter) {
+        self.encode(w);
     }
 }
 
@@ -153,9 +225,20 @@ mod tests {
             partitions: 1,
             base_dir: Some("/tmp/x".into()),
             mode: ConsumerMode::AtLeastOnce,
+            batch: BatchPolicy::default().records(128).bytes(1 << 20).linger_ms(5),
         };
         assert_eq!(StreamHandle::decode_exact(&h.encode_vec()).unwrap(), h);
         assert_eq!(h.topic(), "dstream-7");
+        assert_eq!(h.batch.max_records, 128);
+    }
+
+    #[test]
+    fn batch_policy_default_is_unbatched() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.max_records, usize::MAX);
+        assert_eq!(p.max_bytes, usize::MAX);
+        assert_eq!(p.linger_ms, 0);
+        assert_eq!(BatchPolicy::decode_exact(&p.encode_vec()).unwrap(), p);
     }
 
     #[test]

@@ -119,9 +119,15 @@ impl DistroStreamClient {
         }
     }
 
-    /// FDS dedup poll (see server docs).
-    pub fn poll_files(&self, id: StreamId, candidates: Vec<String>) -> Result<Vec<String>> {
-        match self.rpc(DsRequest::PollFiles { id, candidates })? {
+    /// FDS dedup poll: claim up to `max` undelivered candidates (see
+    /// server docs).
+    pub fn poll_files(
+        &self,
+        id: StreamId,
+        candidates: Vec<String>,
+        max: usize,
+    ) -> Result<Vec<String>> {
+        match self.rpc(DsRequest::PollFiles { id, candidates, max })? {
             DsResponse::Files(fs) => Ok(fs),
             DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
             other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
@@ -209,8 +215,11 @@ mod tests {
             .unwrap();
         assert_eq!(id, id_b);
         // File dedup is global across clients.
-        assert_eq!(a.poll_files(id, vec!["f1".into()]).unwrap(), vec!["f1".to_string()]);
-        assert!(b.poll_files(id, vec!["f1".into()]).unwrap().is_empty());
+        assert_eq!(
+            a.poll_files(id, vec!["f1".into()], usize::MAX).unwrap(),
+            vec!["f1".to_string()]
+        );
+        assert!(b.poll_files(id, vec!["f1".into()], usize::MAX).unwrap().is_empty());
         server.shutdown();
     }
 }

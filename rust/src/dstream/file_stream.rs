@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::api::{Result, StreamHandle, StreamId, StreamType};
+use super::api::{BatchPolicy, Result, StreamHandle, StreamId, StreamType};
 use super::dirmon;
 use super::hub::DistroStreamHub;
 
@@ -59,6 +59,19 @@ impl FileDistroStream {
         &self.handle
     }
 
+    /// Batch tuning carried by this stream's handle. Only `max_records`
+    /// applies to file streams: it caps the paths one `poll` returns, so
+    /// a driver spawning one task per polled file emits bounded bursts.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.handle.batch
+    }
+
+    /// Override the batch policy on this stream object (and on every
+    /// handle cloned from it afterwards).
+    pub fn set_batch_policy(&mut self, batch: BatchPolicy) {
+        self.handle.batch = batch;
+    }
+
     /// The monitored directory, resolved through this process's mount
     /// table (handles carry canonical paths; see `DistroStreamHub::add_mount`).
     pub fn base_dir(&self) -> PathBuf {
@@ -80,7 +93,7 @@ impl FileDistroStream {
     // ---- consume -------------------------------------------------------------
 
     /// Newly available file paths (each path delivered exactly once across
-    /// all consumers).
+    /// all consumers), capped at the handle's `batch.max_records`.
     pub fn poll(&self) -> Result<Vec<PathBuf>> {
         self.hub.client().add_consumer(self.handle.id, &self.identity)?;
         let present = dirmon::scan_dir(&self.base_dir())?;
@@ -88,12 +101,20 @@ impl FileDistroStream {
             return Ok(Vec::new());
         }
         // Dedup at the server is on *canonical* paths so that consumers on
-        // hosts with different mount points share one delivered-set.
+        // hosts with different mount points share one delivered-set. The
+        // server claims at most `max_records` *fresh* paths per poll, so
+        // the remainder stays claimable (by us or by other consumers).
         let candidates: Vec<String> = present
             .iter()
             .map(|p| self.hub.to_canonical(&p.to_string_lossy()))
             .collect();
-        let fresh = self.hub.client().poll_files(self.handle.id, candidates)?;
+        // Clamped to ≥1 so a zero cap degrades to one-at-a-time delivery
+        // instead of wedging the consumer.
+        let fresh = self.hub.client().poll_files(
+            self.handle.id,
+            candidates,
+            self.handle.batch.max_records.max(1),
+        )?;
         Ok(fresh.into_iter().map(|c| PathBuf::from(self.hub.to_local(&c))).collect())
     }
 
@@ -158,6 +179,26 @@ mod tests {
         let a = s1.poll().unwrap();
         let b = s2.poll().unwrap();
         assert_eq!(a.len() + b.len(), 6);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn capped_poll_delivers_in_bounded_batches() {
+        let d = tmpdir("capped");
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let mut s = hub.file_stream(None, d.to_str().unwrap()).unwrap();
+        s.set_batch_policy(crate::dstream::BatchPolicy::default().records(2));
+        for i in 0..5 {
+            s.write_file(&format!("f{i}.dat"), b"x").unwrap();
+        }
+        let mut total = 0;
+        while total < 5 {
+            let got = s.poll().unwrap();
+            assert!(got.len() <= 2, "poll exceeded max_records");
+            assert!(!got.is_empty(), "capped poll starved");
+            total += got.len();
+        }
+        assert!(s.poll().unwrap().is_empty());
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -7,12 +7,13 @@
 //! fresh ones or re-materialised from a [`StreamHandle`] received as a task
 //! parameter.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::broker::{BrokerClient, BrokerCore};
 
-use super::api::{ConsumerMode, Result, StreamHandle, StreamItem, StreamType};
+use super::api::{BatchPolicy, ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType};
 use super::client::DistroStreamClient;
 use super::file_stream::FileDistroStream;
 use super::object_stream::ObjectDistroStream;
@@ -20,6 +21,50 @@ use super::server::StreamRegistry;
 
 /// Default number of broker partitions per object stream.
 pub const DEFAULT_PARTITIONS: usize = 4;
+
+/// Per-stream data-plane counters kept by each hub (batch-efficiency
+/// instrumentation: records / batches / bytes, in and out). The runtime
+/// aggregates these across its hubs into the coordinator metrics.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StreamCounters {
+    pub records_out: u64,
+    pub batches_out: u64,
+    pub bytes_out: u64,
+    pub records_in: u64,
+    pub batches_in: u64,
+    pub bytes_in: u64,
+}
+
+impl StreamCounters {
+    /// Fold another sample into this one.
+    pub fn merge(&mut self, other: &StreamCounters) {
+        self.records_out += other.records_out;
+        self.batches_out += other.batches_out;
+        self.bytes_out += other.bytes_out;
+        self.records_in += other.records_in;
+        self.batches_in += other.batches_in;
+        self.bytes_in += other.bytes_in;
+    }
+
+    /// Mean records per delivering poll batch — the batch-efficiency
+    /// figure of the data plane (`0.0` before the first poll).
+    pub fn records_per_poll(&self) -> f64 {
+        if self.batches_in == 0 {
+            0.0
+        } else {
+            self.records_in as f64 / self.batches_in as f64
+        }
+    }
+
+    /// Mean records per publish request.
+    pub fn records_per_publish(&self) -> f64 {
+        if self.batches_out == 0 {
+            0.0
+        } else {
+            self.records_out as f64 / self.batches_out as f64
+        }
+    }
+}
 
 /// Per-process access point to the DistroStream library.
 pub struct DistroStreamHub {
@@ -37,6 +82,8 @@ pub struct DistroStreamHub {
     /// Mount table for FDS over shared disks with different mount points
     /// (the paper's §7 future work): canonical prefix → local prefix.
     mounts: RwLock<Vec<(String, String)>>,
+    /// Per-stream publish/poll counters (batched data-plane metrics).
+    counters: Mutex<HashMap<StreamId, StreamCounters>>,
 }
 
 impl DistroStreamHub {
@@ -64,6 +111,7 @@ impl DistroStreamHub {
             group: "app".to_string(),
             max_poll_records: AtomicU64::new(u64::MAX),
             mounts: RwLock::new(Vec::new()),
+            counters: Mutex::new(HashMap::new()),
         })
     }
 
@@ -79,7 +127,40 @@ impl DistroStreamHub {
             group: "app".to_string(),
             max_poll_records: AtomicU64::new(u64::MAX),
             mounts: RwLock::new(Vec::new()),
+            counters: Mutex::new(HashMap::new()),
         }))
+    }
+
+    /// Record one publish batch against a stream's counters.
+    pub(crate) fn note_publish(&self, id: StreamId, records: u64, bytes: u64) {
+        let mut c = self.counters.lock().unwrap();
+        let e = c.entry(id).or_default();
+        e.records_out += records;
+        e.batches_out += 1;
+        e.bytes_out += bytes;
+    }
+
+    /// Record one poll batch against a stream's counters (empty polls are
+    /// not counted — batch efficiency is records per *delivering* batch).
+    pub(crate) fn note_poll(&self, id: StreamId, records: u64, bytes: u64) {
+        let mut c = self.counters.lock().unwrap();
+        let e = c.entry(id).or_default();
+        e.records_in += records;
+        e.batches_in += 1;
+        e.bytes_in += bytes;
+    }
+
+    /// This hub's counters for one stream.
+    pub fn stream_counters(&self, id: StreamId) -> StreamCounters {
+        self.counters.lock().unwrap().get(&id).copied().unwrap_or_default()
+    }
+
+    /// Snapshot of every stream this hub touched.
+    pub fn all_stream_counters(&self) -> Vec<(StreamId, StreamCounters)> {
+        let mut v: Vec<_> =
+            self.counters.lock().unwrap().iter().map(|(&k, &c)| (k, c)).collect();
+        v.sort_by_key(|&(k, _)| k);
+        v
     }
 
     pub fn process(&self) -> &str {
@@ -147,12 +228,35 @@ impl DistroStreamHub {
         self.object_stream_with(alias, DEFAULT_PARTITIONS, ConsumerMode::ExactlyOnce)
     }
 
+    /// Object stream with default partitions/mode and an explicit batch
+    /// policy — the common way to tune the batched data plane.
+    pub fn object_stream_batched<T: StreamItem>(
+        self: &Arc<Self>,
+        alias: Option<&str>,
+        batch: BatchPolicy,
+    ) -> Result<ObjectDistroStream<T>> {
+        self.object_stream_tuned(alias, DEFAULT_PARTITIONS, ConsumerMode::ExactlyOnce, batch)
+    }
+
     /// Object stream with explicit partitions and consumer mode.
     pub fn object_stream_with<T: StreamItem>(
         self: &Arc<Self>,
         alias: Option<&str>,
         partitions: usize,
         mode: ConsumerMode,
+    ) -> Result<ObjectDistroStream<T>> {
+        self.object_stream_tuned(alias, partitions, mode, BatchPolicy::default())
+    }
+
+    /// Object stream with explicit partitions, consumer mode and batch
+    /// policy. The policy travels inside the [`StreamHandle`], so tasks
+    /// receiving the handle as a `STREAM` parameter inherit the tuning.
+    pub fn object_stream_tuned<T: StreamItem>(
+        self: &Arc<Self>,
+        alias: Option<&str>,
+        partitions: usize,
+        mode: ConsumerMode,
+        batch: BatchPolicy,
     ) -> Result<ObjectDistroStream<T>> {
         let id = self.client.register(
             alias.map(str::to_string),
@@ -168,6 +272,7 @@ impl DistroStreamHub {
             partitions,
             base_dir: None,
             mode,
+            batch,
         };
         Ok(ObjectDistroStream::attach(handle, Arc::clone(self)))
     }
@@ -192,6 +297,7 @@ impl DistroStreamHub {
             partitions: 1,
             base_dir: Some(base_dir.to_string()),
             mode: ConsumerMode::ExactlyOnce,
+            batch: BatchPolicy::default(),
         };
         Ok(FileDistroStream::attach(handle, Arc::clone(self)))
     }
@@ -240,5 +346,34 @@ mod tests {
         assert_eq!(hub.max_poll_records(), usize::MAX);
         hub.set_max_poll_records(5);
         assert_eq!(hub.max_poll_records(), 5);
+    }
+
+    #[test]
+    fn tuned_policy_travels_with_the_handle() {
+        let (hub, _, _) = DistroStreamHub::embedded("p");
+        let policy = BatchPolicy::default().records(16).bytes(4096);
+        let s = hub
+            .object_stream_tuned::<u64>(Some("tuned"), 2, ConsumerMode::ExactlyOnce, policy)
+            .unwrap();
+        assert_eq!(s.handle().batch, policy);
+        // A re-materialised stream inherits the tuning from the handle.
+        let s2 = hub.open_object::<u64>(s.handle());
+        assert_eq!(s2.handle().batch, policy);
+    }
+
+    #[test]
+    fn stream_counters_track_publish_and_poll() {
+        let (hub, _, _) = DistroStreamHub::embedded("p");
+        let s = hub.object_stream::<u64>(None).unwrap();
+        s.publish(&1).unwrap();
+        s.publish_list(&[2, 3, 4]).unwrap();
+        assert_eq!(s.poll().unwrap().len(), 4);
+        let c = hub.stream_counters(s.id());
+        assert_eq!(c.records_out, 4);
+        assert_eq!(c.batches_out, 2, "one single publish + one list publish");
+        assert_eq!(c.records_in, 4);
+        assert_eq!(c.batches_in, 1, "one batched poll drained everything");
+        assert!(c.bytes_out > 0 && c.bytes_in == c.bytes_out);
+        assert_eq!(hub.all_stream_counters().len(), 1);
     }
 }

@@ -31,9 +31,9 @@ pub mod object_stream;
 pub mod protocol;
 pub mod server;
 
-pub use api::{ConsumerMode, DStreamError, StreamHandle, StreamItem, StreamType};
+pub use api::{BatchPolicy, ConsumerMode, DStreamError, StreamHandle, StreamItem, StreamType};
 pub use client::DistroStreamClient;
 pub use file_stream::FileDistroStream;
-pub use hub::DistroStreamHub;
+pub use hub::{DistroStreamHub, StreamCounters};
 pub use object_stream::ObjectDistroStream;
 pub use server::{DistroStreamServer, StreamRegistry};

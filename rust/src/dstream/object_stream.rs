@@ -5,9 +5,30 @@
 //! publisher and consumer are instantiated lazily on the first `publish` /
 //! `poll` ("the producer and consumer instances are only registered when
 //! required, avoiding unneeded registrations on the streaming backend").
-//! Items are serialised through [`StreamItem`]; a list publish sends one
-//! record per element so the backend registers them separately, exactly as
-//! the paper describes for `KafkaProducer.send`.
+//! Items are serialised through [`StreamItem`]; a list publish still sends
+//! one record per element — so the backend registers them separately,
+//! exactly as the paper describes for `KafkaProducer.send` — but the whole
+//! list travels as **one** broker request (one lock acquisition embedded,
+//! one wire frame over TCP), and `poll` drains every partition through one
+//! [`crate::broker::BrokerClient::fetch_many`] call bounded by the
+//! stream's [`super::api::BatchPolicy`].
+//!
+//! # Examples
+//!
+//! Publish → poll roundtrip on an embedded deployment:
+//!
+//! ```
+//! use hybridws::dstream::DistroStreamHub;
+//!
+//! let (hub, _registry, _broker) = DistroStreamHub::embedded("doc");
+//! let s = hub.object_stream::<u64>(Some("doc-numbers")).unwrap();
+//! s.publish(&1).unwrap();
+//! s.publish_list(&[2, 3]).unwrap(); // one broker request for the batch
+//! let mut got = s.poll().unwrap(); // one fetch_many drains all partitions
+//! got.sort_unstable();
+//! assert_eq!(got, vec![1, 2, 3]);
+//! assert!(s.poll().unwrap().is_empty(), "exactly-once by default");
+//! ```
 
 use std::collections::HashMap;
 use std::marker::PhantomData;
@@ -16,13 +37,25 @@ use std::time::{Duration, Instant};
 
 use crate::broker::record::ProducerRecord;
 use crate::broker::AssignmentMode;
+use crate::util::bytes::ByteWriter;
 
-use super::api::{ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType};
+use super::api::{
+    BatchPolicy, ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType,
+};
 use super::hub::DistroStreamHub;
+
+/// Publish-side batch buffer (the `linger_ms` path of [`BatchPolicy`]).
+#[derive(Default)]
+struct PendingBatch {
+    recs: Vec<ProducerRecord>,
+    bytes: usize,
+    since: Option<Instant>,
+}
 
 /// Lazily-created publisher side (mirrors the paper's `ODSPublisher`).
 struct OdsPublisher {
     topic: String,
+    pending: Mutex<PendingBatch>,
 }
 
 /// Lazily-created consumer side (mirrors the paper's `ODSConsumer`).
@@ -93,6 +126,17 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         self.handle.mode
     }
 
+    /// Batched data-plane tuning carried by this stream's handle.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.handle.batch
+    }
+
+    /// Override the batch policy on this stream object (and on every
+    /// handle cloned from it afterwards).
+    pub fn set_batch_policy(&mut self, batch: BatchPolicy) {
+        self.handle.batch = batch;
+    }
+
     // ---- publish side ----------------------------------------------------
 
     fn publisher(&self) -> Result<&OdsPublisher> {
@@ -104,22 +148,92 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         let topic = self.handle.topic();
         self.hub.broker().ensure_topic(&topic, self.handle.partitions)?;
         self.hub.client().add_producer(self.handle.id, &self.identity)?;
-        let _ = self.publisher.set(OdsPublisher { topic });
+        let _ = self.publisher.set(OdsPublisher { topic, pending: Mutex::new(PendingBatch::default()) });
         Ok(self.publisher.get().unwrap())
     }
 
-    /// Publish a single message.
-    pub fn publish(&self, item: &T) -> Result<()> {
-        let p = self.publisher()?;
-        self.hub.broker().publish(&p.topic, ProducerRecord::new(item.to_stream_bytes()))?;
+    /// Send everything buffered by `linger_ms` publishes as one batch.
+    fn flush_publisher(&self, p: &OdsPublisher) -> Result<()> {
+        let batch = {
+            let mut pend = p.pending.lock().unwrap();
+            if pend.recs.is_empty() {
+                return Ok(());
+            }
+            pend.bytes = 0;
+            pend.since = None;
+            std::mem::take(&mut pend.recs)
+        };
+        let n = batch.len() as u64;
+        let bytes: u64 = batch.iter().map(|r| r.payload_len() as u64).sum();
+        self.hub.broker().publish_batch(&p.topic, batch)?;
+        self.hub.note_publish(self.handle.id, n, bytes);
         Ok(())
     }
 
-    /// Publish a list of messages (one record per element).
-    pub fn publish_list(&self, items: &[T]) -> Result<()> {
+    /// Publish a single message. With `BatchPolicy::linger_ms == 0` (the
+    /// default) the record goes straight to the broker; with a linger the
+    /// record is buffered locally and flushed as one batch when the policy
+    /// fills up, when a later `publish` finds the linger expired, or on
+    /// [`ObjectDistroStream::flush`] / [`ObjectDistroStream::close`].
+    /// There is no background timer — a lingering producer that stops
+    /// publishing must flush or close to make its tail batch visible.
+    pub fn publish(&self, item: &T) -> Result<()> {
         let p = self.publisher()?;
+        let rec = ProducerRecord::new(item.to_stream_bytes());
+        let policy = self.handle.batch;
+        if policy.linger_ms == 0 {
+            let bytes = rec.payload_len() as u64;
+            self.hub.broker().publish(&p.topic, rec)?;
+            self.hub.note_publish(self.handle.id, 1, bytes);
+            return Ok(());
+        }
+        let full = {
+            let mut pend = p.pending.lock().unwrap();
+            pend.bytes += rec.payload_len();
+            pend.recs.push(rec);
+            if pend.since.is_none() {
+                pend.since = Some(Instant::now());
+            }
+            pend.recs.len() >= policy.max_records
+                || pend.bytes >= policy.max_bytes
+                || pend
+                    .since
+                    .is_some_and(|t| t.elapsed() >= Duration::from_millis(policy.linger_ms))
+        };
+        if full {
+            self.flush_publisher(p)?;
+        }
+        Ok(())
+    }
+
+    /// Publish a list of messages: one record per element (so consumers
+    /// still see individual items), but encoded through one reused buffer
+    /// and shipped as a **single** broker batch request.
+    pub fn publish_list(&self, items: &[T]) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let p = self.publisher()?;
+        // Preserve publication order with any lingering records.
+        self.flush_publisher(p)?;
+        let mut w = ByteWriter::new();
+        let mut recs = Vec::with_capacity(items.len());
+        let mut bytes = 0u64;
         for item in items {
-            self.hub.broker().publish(&p.topic, ProducerRecord::new(item.to_stream_bytes()))?;
+            w.clear();
+            item.to_stream_bytes_into(&mut w);
+            bytes += w.len() as u64;
+            recs.push(ProducerRecord::new(w.as_slice().to_vec()));
+        }
+        self.hub.broker().publish_batch(&p.topic, recs)?;
+        self.hub.note_publish(self.handle.id, items.len() as u64, bytes);
+        Ok(())
+    }
+
+    /// Flush any records buffered by a `linger_ms` policy.
+    pub fn flush(&self) -> Result<()> {
+        if let Some(p) = self.publisher.get() {
+            self.flush_publisher(p)?;
         }
         Ok(())
     }
@@ -143,22 +257,45 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         Ok(self.consumer.get().unwrap())
     }
 
-    /// Retrieve all currently-available unread messages (paper `poll()`).
+    /// Retrieve currently-available unread messages (paper `poll()`),
+    /// bounded by the stream's [`BatchPolicy`] (`max_records` combines
+    /// with the hub's `max_poll_records`; `max_bytes` caps the payload).
+    ///
+    /// One [`crate::broker::BrokerClient::fetch_many`] call drains every
+    /// partition *and* returns the group's claim positions, so the whole
+    /// poll — including the exactly-once commit bound — costs a single
+    /// broker round trip on the fetch side.
     pub fn poll(&self) -> Result<Vec<T>> {
         let c = self.consumer()?;
-        let max = self.hub.max_poll_records();
-        let records = self.hub.broker().poll(self.hub.group(), &c.topic, &self.identity, max)?;
-        if records.is_empty() {
+        let policy = self.handle.batch;
+        // Clamp to ≥1: a zero record cap (e.g. a computed `records(n)`
+        // with n == 0) must degrade to one-at-a-time delivery, not wedge
+        // the consumer on eternally-empty polls.
+        let max = self.hub.max_poll_records().min(policy.max_records).max(1);
+        let mf = self.hub.broker().fetch_many(
+            self.hub.group(),
+            &c.topic,
+            &self.identity,
+            max,
+            policy.max_bytes,
+        )?;
+        if mf.batches.is_empty() {
             return Ok(Vec::new());
         }
-        let mut items = Vec::with_capacity(records.len());
-        for r in &records {
-            items.push(T::from_stream_bytes(&r.value.0)?);
+        let mut items = Vec::with_capacity(mf.record_count());
+        let mut bytes = 0u64;
+        for (_p, records) in &mf.batches {
+            for r in records {
+                bytes += r.payload_len() as u64;
+                items.push(T::from_stream_bytes(&r.value.0)?);
+            }
         }
+        self.hub.note_poll(self.handle.id, items.len() as u64, bytes);
         // Commit/delete bound: the group's *claim position* — never the high
         // watermark, which may already include records published after our
-        // claim (deleting those would lose data).
-        let positions = self.hub.broker().positions(self.hub.group(), &c.topic)?;
+        // claim (deleting those would lose data). fetch_many snapshots the
+        // positions under the same group lock as the claims.
+        let positions = mf.positions;
         match self.handle.mode {
             ConsumerMode::ExactlyOnce => {
                 let commits: Vec<(usize, u64)> =
@@ -215,9 +352,11 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         self.hub.client().is_closed(self.handle.id).unwrap_or(false)
     }
 
-    /// Close this process's producer side. The stream reports closed once
-    /// every registered producer has closed.
+    /// Close this process's producer side (flushing any lingered batch
+    /// first). The stream reports closed once every registered producer
+    /// has closed.
     pub fn close(&self) -> Result<()> {
+        self.flush()?;
         self.hub.client().close_producer(self.handle.id, &self.identity)
     }
 
@@ -343,5 +482,140 @@ mod tests {
         s.publish(&Blob(vec![0u8; 1024])).unwrap();
         let got = s.poll().unwrap();
         assert_eq!(got[0].0.len(), 1024);
+    }
+
+    #[test]
+    fn batched_publish_equals_record_at_a_time() {
+        // The batched list publish and N single publishes must deliver the
+        // exact same multiset of items through poll.
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let items: Vec<u64> = (0..100).collect();
+        let singles = hub.object_stream::<u64>(Some("one-by-one")).unwrap();
+        for i in &items {
+            singles.publish(i).unwrap();
+        }
+        let batched = hub.object_stream::<u64>(Some("batched")).unwrap();
+        batched.publish_list(&items).unwrap();
+        let mut a = singles.poll().unwrap();
+        let mut b = batched.poll().unwrap();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(b, items);
+    }
+
+    #[test]
+    fn batch_policy_caps_poll_records() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub
+            .object_stream_tuned::<u64>(
+                Some("capped"),
+                1,
+                ConsumerMode::ExactlyOnce,
+                crate::dstream::BatchPolicy::default().records(3),
+            )
+            .unwrap();
+        s.publish_list(&(0..10).collect::<Vec<u64>>()).unwrap();
+        let mut total = Vec::new();
+        let mut polls = 0;
+        while total.len() < 10 {
+            let got = s.poll().unwrap();
+            assert!(got.len() <= 3, "poll exceeded max_records: {}", got.len());
+            total.extend(got);
+            polls += 1;
+            assert!(polls < 50, "stuck: {total:?}");
+        }
+        assert_eq!(total, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn batch_policy_caps_poll_bytes() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub
+            .object_stream_tuned::<Blob>(
+                Some("byte-capped"),
+                1,
+                ConsumerMode::ExactlyOnce,
+                crate::dstream::BatchPolicy::default().bytes(64),
+            )
+            .unwrap();
+        // Each item encodes to 4 + 30 = 34 bytes → 64-byte budget fits one.
+        s.publish_list(&vec![Blob(vec![7u8; 30]); 4]).unwrap();
+        let mut seen = 0;
+        while seen < 4 {
+            let got = s.poll().unwrap();
+            assert!(got.len() <= 1, "byte budget allows at most one item");
+            seen += got.len();
+        }
+        assert!(s.poll().unwrap().is_empty());
+    }
+
+    #[test]
+    fn zero_record_cap_degrades_to_one_at_a_time() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub
+            .object_stream_tuned::<u64>(
+                Some("zero-cap"),
+                1,
+                ConsumerMode::ExactlyOnce,
+                crate::dstream::BatchPolicy::default().records(0),
+            )
+            .unwrap();
+        s.publish_list(&[1, 2, 3]).unwrap();
+        let mut total = Vec::new();
+        for _ in 0..3 {
+            let got = s.poll().unwrap();
+            assert_eq!(got.len(), 1, "zero cap must clamp to one record, not wedge");
+            total.extend(got);
+        }
+        assert_eq!(total, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn linger_buffers_until_flush_or_close() {
+        let (hub, reg, core) = DistroStreamHub::embedded("producer");
+        let hub_c = DistroStreamHub::attach_embedded("consumer", &reg, &core);
+        let p = hub
+            .object_stream_tuned::<u64>(
+                Some("lingered"),
+                1,
+                ConsumerMode::ExactlyOnce,
+                crate::dstream::BatchPolicy::default().linger_ms(60_000),
+            )
+            .unwrap();
+        let c = hub_c.object_stream::<u64>(Some("lingered")).unwrap();
+        p.publish(&1).unwrap();
+        p.publish(&2).unwrap();
+        assert!(c.poll().unwrap().is_empty(), "lingered records stay local");
+        p.flush().unwrap();
+        let mut got = c.poll().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        // close() flushes the tail.
+        p.publish(&3).unwrap();
+        p.close().unwrap();
+        assert_eq!(c.poll().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn linger_flushes_when_batch_fills() {
+        let (hub, reg, core) = DistroStreamHub::embedded("producer");
+        let hub_c = DistroStreamHub::attach_embedded("consumer", &reg, &core);
+        let p = hub
+            .object_stream_tuned::<u64>(
+                Some("fill"),
+                1,
+                ConsumerMode::ExactlyOnce,
+                crate::dstream::BatchPolicy::default().linger_ms(60_000).records(3),
+            )
+            .unwrap();
+        let c = hub_c.object_stream::<u64>(Some("fill")).unwrap();
+        p.publish(&1).unwrap();
+        p.publish(&2).unwrap();
+        assert!(c.poll().unwrap().is_empty());
+        p.publish(&3).unwrap(); // 3rd record fills the batch → auto-flush
+        let mut got = c.poll().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3]);
     }
 }

@@ -23,7 +23,7 @@ pub enum DsRequest {
     CloseProducer { id: StreamId, name: String },
     CloseStream { id: StreamId },
     IsClosed { id: StreamId },
-    PollFiles { id: StreamId, candidates: Vec<String> },
+    PollFiles { id: StreamId, candidates: Vec<String>, max: usize },
     Info { id: StreamId },
     Unregister { id: StreamId },
     Shutdown,
@@ -64,10 +64,11 @@ impl Wire for DsRequest {
                 w.put_u8(6);
                 id.encode(w);
             }
-            DsRequest::PollFiles { id, candidates } => {
+            DsRequest::PollFiles { id, candidates, max } => {
                 w.put_u8(7);
                 id.encode(w);
                 candidates.encode(w);
+                max.encode(w);
             }
             DsRequest::Info { id } => {
                 w.put_u8(8);
@@ -97,7 +98,11 @@ impl Wire for DsRequest {
             4 => DsRequest::CloseProducer { id: Wire::decode(r)?, name: Wire::decode(r)? },
             5 => DsRequest::CloseStream { id: Wire::decode(r)? },
             6 => DsRequest::IsClosed { id: Wire::decode(r)? },
-            7 => DsRequest::PollFiles { id: Wire::decode(r)?, candidates: Wire::decode(r)? },
+            7 => DsRequest::PollFiles {
+                id: Wire::decode(r)?,
+                candidates: Wire::decode(r)?,
+                max: Wire::decode(r)?,
+            },
             8 => DsRequest::Info { id: Wire::decode(r)? },
             9 => DsRequest::Unregister { id: Wire::decode(r)? },
             10 => DsRequest::Shutdown,
@@ -207,7 +212,7 @@ mod tests {
             DsRequest::CloseProducer { id: 1, name: "p".into() },
             DsRequest::CloseStream { id: 1 },
             DsRequest::IsClosed { id: 1 },
-            DsRequest::PollFiles { id: 1, candidates: vec!["x".into()] },
+            DsRequest::PollFiles { id: 1, candidates: vec!["x".into()], max: 64 },
             DsRequest::Info { id: 1 },
             DsRequest::Unregister { id: 1 },
             DsRequest::Shutdown,

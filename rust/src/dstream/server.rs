@@ -169,12 +169,23 @@ impl StreamRegistry {
         self.streams.get(&id).map(|e| e.closed)
     }
 
-    /// FDS dedup: of `candidates`, return (and mark) the not-yet-delivered
-    /// paths. Greedy first-poller-wins, mirroring ODS shared consumption.
-    pub fn poll_files(&mut self, id: StreamId, candidates: Vec<String>) -> Option<Vec<String>> {
+    /// FDS dedup: of `candidates`, return (and mark) up to `max` of the
+    /// not-yet-delivered paths. Greedy first-poller-wins, mirroring ODS
+    /// shared consumption; candidates beyond the cap stay undelivered so a
+    /// later (or another consumer's) poll can claim them — the FDS face of
+    /// the batched data plane's `max_records` budget.
+    pub fn poll_files(
+        &mut self,
+        id: StreamId,
+        candidates: Vec<String>,
+        max: usize,
+    ) -> Option<Vec<String>> {
         let e = self.entry_mut(id)?;
         let mut fresh = Vec::new();
         for c in candidates {
+            if fresh.len() >= max {
+                break;
+            }
             if e.delivered_files.insert(c.clone()) {
                 fresh.push(c);
             }
@@ -229,10 +240,12 @@ pub fn dispatch(reg: &Mutex<StreamRegistry>, req: DsRequest) -> DsResponse {
             Some(b) => A::Bool(b),
             None => A::Unknown(id),
         },
-        Q::PollFiles { id, candidates } => match reg.lock().unwrap().poll_files(id, candidates) {
-            Some(fresh) => A::Files(fresh),
-            None => A::Unknown(id),
-        },
+        Q::PollFiles { id, candidates, max } => {
+            match reg.lock().unwrap().poll_files(id, candidates, max) {
+                Some(fresh) => A::Files(fresh),
+                None => A::Unknown(id),
+            }
+        }
         Q::Info { id } => {
             let reg = reg.lock().unwrap();
             match reg.entry(id) {
@@ -409,10 +422,24 @@ mod tests {
     fn poll_files_delivers_each_path_once() {
         let mut r = reg();
         let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
-        let first = r.poll_files(id, vec!["a".into(), "b".into()]).unwrap();
+        let first = r.poll_files(id, vec!["a".into(), "b".into()], usize::MAX).unwrap();
         assert_eq!(first, vec!["a".to_string(), "b".to_string()]);
-        let second = r.poll_files(id, vec!["a".into(), "b".into(), "c".into()]).unwrap();
+        let second =
+            r.poll_files(id, vec!["a".into(), "b".into(), "c".into()], usize::MAX).unwrap();
         assert_eq!(second, vec!["c".to_string()]);
+    }
+
+    #[test]
+    fn poll_files_cap_leaves_remainder_claimable() {
+        let mut r = reg();
+        let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
+        let all: Vec<String> = (0..5).map(|i| format!("f{i}")).collect();
+        // A capped poll takes 2 fresh paths; delivered ones don't count
+        // against the cap on later polls.
+        assert_eq!(r.poll_files(id, all.clone(), 2).unwrap().len(), 2);
+        assert_eq!(r.poll_files(id, all.clone(), 2).unwrap(), vec!["f2", "f3"]);
+        assert_eq!(r.poll_files(id, all.clone(), 2).unwrap(), vec!["f4"]);
+        assert!(r.poll_files(id, all, 2).unwrap().is_empty());
     }
 
     #[test]
@@ -421,7 +448,7 @@ mod tests {
         assert!(!r.add_producer(99, "p"));
         assert!(!r.close_stream(99));
         assert_eq!(r.is_closed(99), None);
-        assert!(r.poll_files(99, vec![]).is_none());
+        assert!(r.poll_files(99, vec![], usize::MAX).is_none());
         assert!(!r.unregister(99));
     }
 

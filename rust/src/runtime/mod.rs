@@ -7,6 +7,15 @@
 //! compiles each artifact once on the CPU PJRT client and serves typed
 //! `execute` calls.
 
+// The real zoo binds to the `xla` PJRT crate; without the `pjrt` feature a
+// stub with the same API keeps the rest of the runtime building (tasks fall
+// back to their CPU reference paths when no zoo is loaded). NOTE: `xla` is
+// not on crates.io — enabling `pjrt` without first adding the dependency
+// fails with an unresolved-crate error here by design (see Cargo.toml).
+#[cfg(feature = "pjrt")]
+pub mod zoo;
+#[cfg(not(feature = "pjrt"))]
+#[path = "zoo_stub.rs"]
 pub mod zoo;
 
 pub use zoo::{ModelSpec, ModelZoo};

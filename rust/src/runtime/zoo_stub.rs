@@ -1,0 +1,90 @@
+//! Stub `ModelZoo` used when the crate is built **without** the `pjrt`
+//! feature (the default — the `xla` crate the real zoo binds to is not on
+//! crates.io). Task bodies are written to fall back to CPU reference
+//! implementations when no zoo is available, so the stub only has to
+//! present the same API surface and fail loading cleanly.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Shape/dtype contract of one model (from the manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Input shapes (all f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape (f32).
+    pub output: Vec<usize>,
+    pub file: String,
+}
+
+impl ModelSpec {
+    /// Number of f32 elements of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output.iter().product()
+    }
+}
+
+/// Feature-gated stand-in for the PJRT zoo: loading always fails with a
+/// pointer at the `pjrt` feature, so `--with-models` deployments surface a
+/// clear error instead of a missing-symbol crash.
+pub struct ModelZoo {
+    _private: (),
+}
+
+impl ModelZoo {
+    /// Always errors: artifacts can only execute with the `pjrt` feature.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        Err(anyhow!(
+            "hybridws was built without the `pjrt` feature — rebuild with \
+             `--features pjrt` (requires the `xla` PJRT bindings) to load AOT artifacts"
+        ))
+    }
+
+    /// Specs of all loaded models (always empty on the stub).
+    pub fn specs(&self) -> Vec<&ModelSpec> {
+        Vec::new()
+    }
+
+    pub fn spec(&self, _name: &str) -> Option<&ModelSpec> {
+        None
+    }
+
+    /// Total `execute` calls served.
+    pub fn executions(&self) -> u64 {
+        0
+    }
+
+    /// Always errors on the stub.
+    pub fn execute(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!("model {name:?}: hybridws built without the `pjrt` feature")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_feature_hint() {
+        let err = ModelZoo::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn spec_lengths_multiply() {
+        let s = ModelSpec {
+            name: "m".into(),
+            inputs: vec![vec![2, 3]],
+            output: vec![4, 5],
+            file: "m.hlo".into(),
+        };
+        assert_eq!(s.input_len(0), 6);
+        assert_eq!(s.output_len(), 20);
+    }
+}

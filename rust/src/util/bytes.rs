@@ -62,6 +62,12 @@ impl ByteWriter {
         self.buf
     }
 
+    /// Drop everything written so far but keep the allocation — lets hot
+    /// paths (batched stream encodes) reuse one writer across records.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
     /// Bytes written so far.
     pub fn len(&self) -> usize {
         self.buf.len()

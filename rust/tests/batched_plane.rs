@@ -1,0 +1,257 @@
+//! Integration tests for the batched streaming data plane: multi-partition
+//! `fetch_many` over both broker backends (embedded call-through and TCP),
+//! batched publish/poll equivalence with the record-at-a-time path, and
+//! `BatchPolicy` handles travelling through task parameters.
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{AssignmentMode, BrokerClient, BrokerCore, BrokerServer};
+use hybridws::coordinator::prelude::*;
+use hybridws::dstream::DistroStreamHub;
+use hybridws::util::timeutil::TimeScale;
+use hybridws::util::wire::Blob;
+
+/// Publish a deterministic record set and drain it with `fetch_many`,
+/// returning the payload bytes in delivery order.
+fn drain_via_fetch_many(client: &BrokerClient, budget_bytes: usize) -> Vec<u8> {
+    client.create_topic("bp", 3).unwrap();
+    for i in 0..30u8 {
+        client.publish("bp", ProducerRecord::new(vec![i])).unwrap();
+    }
+    client.join_group("g", "bp", "m", AssignmentMode::Shared).unwrap();
+    let mut out = Vec::new();
+    let mut rounds = 0;
+    while out.len() < 30 {
+        let mf = client.fetch_many("g", "bp", "m", usize::MAX, budget_bytes).unwrap();
+        for (_, recs) in &mf.batches {
+            out.extend(recs.iter().map(|r| r.value.0[0]));
+        }
+        rounds += 1;
+        assert!(rounds < 100, "fetch_many made no progress: {out:?}");
+    }
+    out
+}
+
+#[test]
+fn fetch_many_equivalent_over_embedded_and_tcp() {
+    // Embedded backend.
+    let embedded = BrokerClient::embedded(BrokerCore::new());
+    let via_embedded = drain_via_fetch_many(&embedded, usize::MAX);
+
+    // TCP backend, same sequence of operations over the wire.
+    let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let remote = BrokerClient::connect(&server.addr.to_string()).unwrap();
+    let via_tcp = drain_via_fetch_many(&remote, usize::MAX);
+    server.shutdown();
+
+    assert_eq!(via_embedded.len(), 30);
+    assert_eq!(via_embedded, via_tcp, "both transports must deliver identically");
+}
+
+#[test]
+fn byte_budgeted_fetch_many_equivalent_over_both_backends() {
+    let embedded = BrokerClient::embedded(BrokerCore::new());
+    // Each record is 1 payload byte → a 4-byte budget forces many rounds.
+    let via_embedded = drain_via_fetch_many(&embedded, 4);
+
+    let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let remote = BrokerClient::connect(&server.addr.to_string()).unwrap();
+    let via_tcp = drain_via_fetch_many(&remote, 4);
+    server.shutdown();
+
+    let mut sorted_e = via_embedded.clone();
+    sorted_e.sort_unstable();
+    assert_eq!(sorted_e, (0..30).collect::<Vec<u8>>(), "no loss, no duplication");
+    assert_eq!(via_embedded, via_tcp);
+}
+
+#[test]
+fn ods_batched_and_single_paths_deliver_the_same_items() {
+    let (hub, _, _) = DistroStreamHub::embedded("equiv");
+    let items: Vec<Blob> = (0..64u8).map(|i| Blob(vec![i; 3])).collect();
+
+    let singles = hub.object_stream::<Blob>(Some("singles")).unwrap();
+    for i in &items {
+        singles.publish(i).unwrap();
+    }
+    let batched = hub.object_stream::<Blob>(Some("batched")).unwrap();
+    batched.publish_list(&items).unwrap();
+
+    let sort = |mut v: Vec<Blob>| {
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    };
+    let a = sort(singles.poll().unwrap());
+    let b = sort(batched.poll().unwrap());
+    assert_eq!(a, b);
+    assert_eq!(a, sort(items));
+}
+
+#[test]
+fn batch_policy_rides_stream_parameters_into_tasks() {
+    register_task_fn("bp.capped-consumer", |ctx| {
+        let s = ctx.object_stream::<u64>(0);
+        // The handle arrived through the STREAM parameter: the policy set
+        // by the main code must still be attached.
+        if s.batch_policy().max_records != 3 {
+            anyhow::bail!("policy lost in transit: {:?}", s.batch_policy());
+        }
+        let mut total = 0u64;
+        loop {
+            let closed = s.is_closed();
+            let items = s.poll()?;
+            if items.len() > 3 {
+                anyhow::bail!("poll exceeded the handle's max_records: {}", items.len());
+            }
+            total += items.len() as u64;
+            if items.is_empty() && closed {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        ctx.set_output_as(1, &total);
+        Ok(())
+    });
+
+    hybridws::apps::register_all();
+    let rt = CometRuntime::builder()
+        .workers(&[4])
+        .scale(TimeScale::IDENTITY)
+        .name("bp")
+        .build()
+        .unwrap();
+    let s = rt
+        .object_stream_tuned::<u64>(
+            Some("bp-capped"),
+            2,
+            ConsumerMode::ExactlyOnce,
+            BatchPolicy::default().records(3),
+        )
+        .unwrap();
+    let out = rt.new_object();
+    rt.submit(
+        TaskSpec::new("bp.capped-consumer")
+            .arg(Arg::StreamIn(s.handle().clone()))
+            .arg(Arg::Out(out.id())),
+    )
+    .unwrap();
+    s.publish_list(&(0..20).collect::<Vec<u64>>()).unwrap();
+    s.close().unwrap();
+    assert_eq!(rt.wait_on_as::<u64>(&out).unwrap(), 20);
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn lingered_producer_task_flushes_on_close() {
+    register_task_fn("bp.linger-producer", |ctx| {
+        let s = ctx.object_stream::<u64>(0);
+        for i in 0..10u64 {
+            s.publish(&i)?; // buffered: linger_ms is huge
+        }
+        s.close()?; // close() must flush the lingered batch
+        Ok(())
+    });
+    register_task_fn("bp.linger-consumer", |ctx| {
+        let s = ctx.object_stream::<u64>(0);
+        let mut sum = 0u64;
+        loop {
+            let closed = s.is_closed();
+            let items = s.poll()?;
+            sum += items.iter().sum::<u64>();
+            if items.is_empty() && closed {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        ctx.set_output_as(1, &sum);
+        Ok(())
+    });
+
+    hybridws::apps::register_all();
+    let rt = CometRuntime::builder()
+        .workers(&[4])
+        .scale(TimeScale::IDENTITY)
+        .name("bp-linger")
+        .build()
+        .unwrap();
+    let s = rt
+        .object_stream_tuned::<u64>(
+            Some("bp-linger"),
+            1,
+            ConsumerMode::ExactlyOnce,
+            BatchPolicy::default().linger_ms(60_000),
+        )
+        .unwrap();
+    let out = rt.new_object();
+    rt.submit(
+        TaskSpec::new("bp.linger-producer").arg(Arg::StreamOut(s.handle().clone())),
+    )
+    .unwrap();
+    rt.submit(
+        TaskSpec::new("bp.linger-consumer")
+            .arg(Arg::StreamIn(s.handle().clone()))
+            .arg(Arg::Out(out.id())),
+    )
+    .unwrap();
+    assert_eq!(rt.wait_on_as::<u64>(&out).unwrap(), 45);
+    rt.shutdown().unwrap();
+
+    // The producing hub recorded one batch for the whole lingered run.
+    let metrics = rt.stream_metrics();
+    let (_, stats) = metrics.iter().find(|&&(id, _)| id == s.id()).expect("stream stats");
+    assert_eq!(stats.records_out, 10);
+    assert_eq!(stats.batches_out, 1, "linger must coalesce 10 publishes into 1 batch");
+}
+
+#[test]
+fn remote_worker_polls_through_the_batched_wire_path() {
+    // A remote worker process reaches the broker over TCP; its ODS polls
+    // travel as FetchMany frames. Reuses the repo's in-process remote
+    // worker harness.
+    use hybridws::coordinator::remote::serve_worker;
+    use std::net::TcpListener;
+
+    register_task_fn("bp.remote-sum", |ctx| {
+        let s = ctx.object_stream::<u64>(0);
+        let mut sum = 0u64;
+        loop {
+            let closed = s.is_closed();
+            let items = s.poll()?;
+            sum += items.iter().sum::<u64>();
+            if items.is_empty() && closed {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        }
+        ctx.set_output_as(1, &sum);
+        Ok(())
+    });
+    hybridws::apps::register_all();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::thread::spawn(move || serve_worker(listener, 2));
+
+    let rt = CometRuntime::builder()
+        .workers(&[1])
+        .remote_worker(&addr, 2)
+        .scale(TimeScale::IDENTITY)
+        .name("bp-remote")
+        .build()
+        .unwrap();
+    let s = rt.object_stream::<u64>(Some("bp-remote")).unwrap();
+    let out = rt.new_object();
+    // Two cores are only on the remote worker → the task runs there.
+    rt.submit(
+        TaskSpec::new("bp.remote-sum")
+            .arg(Arg::StreamIn(s.handle().clone()))
+            .arg(Arg::Out(out.id()))
+            .cores(2),
+    )
+    .unwrap();
+    s.publish_list(&[1, 2, 3, 4, 5]).unwrap();
+    s.close().unwrap();
+    assert_eq!(rt.wait_on_as::<u64>(&out).unwrap(), 15);
+    rt.shutdown().unwrap();
+    drop(rt);
+    let _ = worker.join().unwrap();
+}

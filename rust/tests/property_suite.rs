@@ -111,6 +111,7 @@ fn prop_analyser_stream_args_never_create_edges() {
             partitions: 1,
             base_dir: None,
             mode: ConsumerMode::ExactlyOnce,
+            batch: BatchPolicy::default(),
         };
         for i in 0..n {
             let arg = if i % 2 == 0 {
@@ -263,6 +264,9 @@ fn prop_task_spec_wire_roundtrip() {
                     partitions: r.range(1, 8),
                     base_dir: None,
                     mode: ConsumerMode::ExactlyOnce,
+                    batch: BatchPolicy::default()
+                        .records(r.range(1, 1 << 20))
+                        .bytes(r.range(1, 1 << 30)),
                 }),
             });
         }
