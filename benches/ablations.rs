@@ -40,12 +40,12 @@ fn producer_priority_ablation() {
         let mut got = 0u64;
         loop {
             let closed = s.is_closed();
-            let items = s.poll()?;
+            // Wakeup-driven wait (no spin); bounded to honour the deadline.
+            let items = s.poll_timeout(std::time::Duration::from_millis(10))?;
             got += items.len() as u64;
             if (items.is_empty() && closed) || std::time::Instant::now() > deadline {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(200));
         }
         ctx.set_output_as(1, &got);
         Ok(())

@@ -1,8 +1,11 @@
 //! Microbenchmarks of the L3 hot paths (the §Perf instrumentation):
 //! broker publish/poll, wire codec, task analysis, scheduling throughput,
-//! FDS directory scan and PJRT execution latency.
+//! FDS directory scan and PJRT execution latency — plus the wakeup-driven
+//! stream plane, which also emits machine-readable
+//! `BENCH_stream_plane.json` (run with `--smoke` for the CI-sized version
+//! that runs only the stream-plane bench).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use hybridws::broker::record::ProducerRecord;
 use hybridws::broker::{AssignmentMode, BrokerCore};
@@ -104,7 +107,7 @@ fn bench_broker_batched() {
 fn bench_wire() {
     banner("micro", "wire codec encode/decode");
     let t = Table::new(&["payload", "encode", "decode"]);
-    let blob = Blob(vec![7u8; 1 << 20]);
+    let blob = Blob::new(vec![7u8; 1 << 20]);
     let n = 200;
     let t0 = Instant::now();
     let mut encoded = Vec::new();
@@ -236,7 +239,7 @@ fn bench_ods_roundtrip() {
     let t = Table::new(&["payload_B", "us_per_roundtrip"]);
     for payload in [24usize, 4096] {
         let s = hub.object_stream::<Blob>(None).unwrap();
-        let msg = Blob(vec![0xCD; payload]);
+        let msg = Blob::new(vec![0xCD; payload]);
         // Warm-up registers producer+consumer.
         s.publish(&msg).unwrap();
         while s.poll().unwrap().is_empty() {}
@@ -257,7 +260,7 @@ fn bench_ods_batched() {
     use hybridws::dstream::DistroStreamHub;
     let t = Table::new(&["path", "total_ms", "records_per_s"]);
     let n = 10_000usize;
-    let items: Vec<Blob> = (0..n).map(|_| Blob(vec![0xCD; 24])).collect();
+    let items: Vec<Blob> = (0..n).map(|_| Blob::new(vec![0xCD; 24])).collect();
 
     // Record-at-a-time: n publish calls, then polls capped at one record
     // (the pre-batching per-record handoff the paper worries about).
@@ -312,8 +315,106 @@ fn bench_ods_batched() {
     println!();
 }
 
+/// The wakeup-driven stream plane, measured: throughput, publish→wakeup
+/// latency percentiles, fetch round trips per wakeup and the idle-CPU
+/// proxy (fetches issued by a blocked 1 s poll — 1-2 under the
+/// notification plane vs ~2000 under the old 500 µs spin loop). Emits
+/// `BENCH_stream_plane.json` so CI accumulates the perf trajectory.
+fn bench_stream_plane(smoke: bool) {
+    use hybridws::dstream::DistroStreamHub;
+    use hybridws::util::timeutil::percentile;
+    banner("micro", "wakeup-driven stream plane (embedded)");
+
+    // --- throughput: batched publish → poll drain -----------------------
+    let n = if smoke { 2_000 } else { 20_000 };
+    let (hub, _, _) = DistroStreamHub::embedded("plane-tp");
+    let s = hub.object_stream::<Blob>(None).unwrap();
+    let items: Vec<Blob> = (0..n).map(|_| Blob::new(vec![0xCD; 24])).collect();
+    let t0 = Instant::now();
+    for chunk in items.chunks(256) {
+        s.publish_list(chunk).unwrap();
+    }
+    let mut got = 0;
+    while got < n {
+        got += s.poll().unwrap().len();
+    }
+    let records_per_s = n as f64 / t0.elapsed().as_secs_f64();
+
+    // --- publish→wakeup latency -----------------------------------------
+    // The consumer parks in poll_timeout; the producer stamps t0 right
+    // before each publish and sends it over a channel the consumer reads
+    // *after* receiving the item (same process, same clock).
+    let rounds = if smoke { 100 } else { 1_000 };
+    let (hub_p, reg, core) = DistroStreamHub::embedded("plane-prod");
+    let hub_c = DistroStreamHub::attach_embedded("plane-cons", &reg, &core);
+    let p = hub_p.object_stream::<u64>(Some("plane-lat")).unwrap();
+    let c = hub_c.object_stream::<u64>(Some("plane-lat")).unwrap();
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<Instant>();
+    let consumer = std::thread::spawn(move || {
+        let mut lat_us = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            ready_tx.send(()).unwrap();
+            let items = c.poll_timeout(Duration::from_secs(5)).unwrap();
+            let t1 = Instant::now();
+            assert_eq!(items.len(), 1, "one wakeup per publish");
+            let t0 = stamp_rx.recv().unwrap();
+            lat_us.push(t1.duration_since(t0).as_secs_f64() * 1e6);
+        }
+        (lat_us, hub_c.stream_counters(c.id()))
+    });
+    for i in 0..rounds {
+        ready_rx.recv().unwrap();
+        // Give the consumer a moment to actually park (biases the
+        // measurement towards the wakeup path, which is the one we claim).
+        let park = Instant::now();
+        while park.elapsed() < Duration::from_micros(200) {
+            std::hint::spin_loop();
+        }
+        let t0 = Instant::now();
+        p.publish(&(i as u64)).unwrap();
+        stamp_tx.send(t0).unwrap();
+    }
+    let (lat_us, counters) = consumer.join().unwrap();
+    let p50 = percentile(&lat_us, 50.0);
+    let p99 = percentile(&lat_us, 99.0);
+    let fetches_per_wakeup = counters.fetches as f64 / rounds as f64;
+
+    // --- idle-CPU proxy: fetches issued by a blocked empty poll ---------
+    let idle_wait = if smoke { Duration::from_millis(300) } else { Duration::from_secs(1) };
+    let (hub_i, _, _) = DistroStreamHub::embedded("plane-idle");
+    let si = hub_i.object_stream::<u64>(None).unwrap();
+    let _ = si.poll().unwrap(); // register consumer
+    let before = hub_i.stream_counters(si.id()).fetches;
+    assert!(si.poll_timeout(idle_wait).unwrap().is_empty());
+    let fetches_idle = hub_i.stream_counters(si.id()).fetches - before;
+
+    let t = Table::new(&["metric", "value"]);
+    t.row(&["records_per_s".into(), format!("{records_per_s:.0}")]);
+    t.row(&["wakeup_p50_us".into(), format!("{p50:.1}")]);
+    t.row(&["wakeup_p99_us".into(), format!("{p99:.1}")]);
+    t.row(&["fetches_per_wakeup".into(), format!("{fetches_per_wakeup:.2}")]);
+    t.row(&[format!("fetches_idle_{}ms", idle_wait.as_millis()), fetches_idle.to_string()]);
+
+    let json = format!(
+        "{{\"bench\":\"stream_plane\",\"smoke\":{smoke},\"records_per_s\":{records_per_s:.0},\
+         \"wakeup_p50_us\":{p50:.2},\"wakeup_p99_us\":{p99:.2},\
+         \"fetches_per_wakeup\":{fetches_per_wakeup:.3},\
+         \"idle_wait_ms\":{},\"fetches_idle\":{fetches_idle}}}",
+        idle_wait.as_millis()
+    );
+    std::fs::write("BENCH_stream_plane.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_stream_plane.json: {json}\n");
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     hybridws::apps::register_all();
+    if smoke {
+        // CI-sized: only the stream-plane bench, but still JSON-emitting.
+        bench_stream_plane(true);
+        return;
+    }
     bench_broker();
     bench_broker_batched();
     bench_wire();
@@ -322,5 +423,6 @@ fn main() {
     bench_runtime_throughput();
     bench_ods_roundtrip();
     bench_ods_batched();
+    bench_stream_plane(false);
     bench_pjrt();
 }

@@ -30,15 +30,17 @@ fn main() -> anyhow::Result<()> {
         let mut sum = 0u64;
         let mut polls = 0u32;
         // The paper's canonical loop: poll until the stream closes, drain.
+        // `poll_timeout` parks inside the broker until the producer
+        // publishes (wakeup-driven — no sleep-spin); the bounded timeout
+        // only exists to re-check the close flag.
         loop {
             let closed = stream.is_closed();
-            let items = stream.poll()?;
+            let items = stream.poll_timeout(std::time::Duration::from_millis(20))?;
             if items.is_empty() && closed {
                 break;
             }
             sum += items.iter().sum::<u64>();
             polls += 1;
-            std::thread::sleep(std::time::Duration::from_millis(1));
         }
         println!("  consume: reduced the stream in {polls} polls, sum = {sum}");
         ctx.set_output_as(1, &sum); // OUT object

@@ -279,14 +279,25 @@ pub fn run_hybrid(rt: &CometRuntime, cfg: &Uc1Config) -> Result<Uc1Result> {
     // Process files as they are generated (Listing 9's poll loop).
     let mut stats_files: Vec<Vec<PathBuf>> = vec![Vec::new(); cfg.num_sims];
     let mut open: Vec<bool> = vec![true; cfg.num_sims];
+    let mut idle = false;
     while open.iter().any(|&o| o) {
+        // Busy rounds drain every stream without waiting. After a fully
+        // empty round the driver parks briefly on the first still-open
+        // stream — any producer's `write_file` announce wakes the park
+        // (the registry notifier is shared), so the idle driver blocks
+        // instead of spinning.
         let mut progress = false;
+        let mut park = idle;
         for (s, stream) in streams.iter().enumerate() {
             if !open[s] {
                 continue;
             }
             let closed = stream.is_closed();
-            let new_files = stream.poll()?;
+            let new_files = if std::mem::take(&mut park) {
+                stream.poll_timeout(std::time::Duration::from_millis(5))?
+            } else {
+                stream.poll()?
+            };
             progress |= !new_files.is_empty();
             for f in new_files {
                 let stats = cfg.dir.join(format!(
@@ -306,9 +317,7 @@ pub fn run_hybrid(rt: &CometRuntime, cfg: &Uc1Config) -> Result<Uc1Result> {
                 open[s] = false;
             }
         }
-        if !progress {
-            std::thread::sleep(std::time::Duration::from_micros(500));
-        }
+        idle = !progress;
     }
     // Merge phase.
     let mut summaries = Vec::new();

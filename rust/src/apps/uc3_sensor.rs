@@ -69,12 +69,13 @@ pub fn register() {
         // are re-published downstream as one batched request too.
         loop {
             let closed = sensor.is_closed();
-            let msgs = sensor.poll()?;
+            // Wakeup-driven: parks until the sensor publishes (the bounded
+            // timeout only exists to re-check the close flag).
+            let msgs = sensor.poll_timeout(Duration::from_millis(10))?;
             if msgs.is_empty() {
                 if closed {
                     break;
                 }
-                std::thread::sleep(Duration::from_micros(300));
                 continue;
             }
             let mut outgoing = Vec::with_capacity(msgs.len());
@@ -112,7 +113,7 @@ pub fn register() {
         let mut acc = vec![0f32; SENSOR_N];
         loop {
             let closed = relevant.is_closed();
-            let msgs = relevant.poll()?;
+            let msgs = relevant.poll_timeout(Duration::from_millis(10))?;
             if msgs.is_empty() && closed {
                 break;
             }
@@ -120,9 +121,6 @@ pub fn register() {
                 for (a, v) in acc.iter_mut().zip(from_bytes(m)) {
                     *a += v;
                 }
-            }
-            if msgs.is_empty() {
-                std::thread::sleep(Duration::from_micros(300));
             }
         }
         ctx.set_output(1, to_bytes(&acc));

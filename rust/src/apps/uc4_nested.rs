@@ -140,7 +140,9 @@ pub fn run(rt: &CometRuntime, cfg: &Uc4Config) -> Result<Uc4Result> {
     let mut received = 0usize;
     loop {
         let closed = data.is_closed();
-        let msgs = data.poll()?;
+        // Parks in the broker until the producer publishes; the bounded
+        // timeout re-checks the close flag.
+        let msgs = data.poll_timeout(std::time::Duration::from_millis(5))?;
         for m in &msgs {
             buffer.extend(from_bytes(m));
             received += 1;
@@ -159,9 +161,6 @@ pub fn run(rt: &CometRuntime, cfg: &Uc4Config) -> Result<Uc4Result> {
         }
         if closed && received >= cfg.elements {
             break;
-        }
-        if msgs.is_empty() {
-            std::thread::sleep(std::time::Duration::from_micros(300));
         }
     }
     // Flush the tail batch.

@@ -26,7 +26,7 @@ pub fn register() {
         let n: u64 = ctx.scalar(1)?;
         let payload: u64 = ctx.scalar(2)?;
         let gap_ms: u64 = ctx.scalar(3)?;
-        let msg = Blob(vec![0xAB; payload as usize]);
+        let msg = Blob::new(vec![0xAB; payload as usize]);
         for _ in 0..n {
             if gap_ms > 0 {
                 ctx.sleep_paper_ms(gap_ms);
@@ -44,12 +44,13 @@ pub fn register() {
         let mut count: u64 = 0;
         loop {
             let closed = s.is_closed();
-            let msgs = s.poll()?;
+            // Wakeup-driven wait: parks in the broker until a writer
+            // publishes (or the bounded timeout lets us re-check close).
+            let msgs = s.poll_timeout(std::time::Duration::from_millis(10))?;
             if msgs.is_empty() {
                 if closed {
                     break;
                 }
-                std::thread::sleep(std::time::Duration::from_micros(200));
                 continue;
             }
             for _ in &msgs {
@@ -79,11 +80,8 @@ pub fn register() {
         let mut got = 0u64;
         let mut sum = 0u64;
         while got < expected {
-            let msgs = s.poll()?;
-            if msgs.is_empty() {
-                std::thread::sleep(std::time::Duration::from_micros(100));
-                continue;
-            }
+            // Blocks until the next publish instead of spinning.
+            let msgs = s.poll_timeout(std::time::Duration::from_millis(50))?;
             for m in &msgs {
                 sum = sum.wrapping_add(m.0.iter().map(|&b| b as u64).sum::<u64>());
                 got += 1;
@@ -233,7 +231,7 @@ pub fn run_sp_batch(
                 .arg(Arg::scalar(&(objs_per_task as u64))),
         )?;
         for _ in 0..objs_per_task {
-            stream.publish(&Blob(vec![0x5Au8; obj_bytes]))?;
+            stream.publish(&Blob::new(vec![0x5Au8; obj_bytes]))?;
         }
     }
     rt.barrier()?;
@@ -320,7 +318,7 @@ mod tests {
         rt.submit(spec).unwrap();
         // SP: payloads through a stream.
         let s = rt.object_stream::<Blob>(None).unwrap();
-        s.publish_list(&vec![Blob(vec![1u8; 1024]); 3]).unwrap();
+        s.publish_list(&vec![Blob::new(vec![1u8; 1024]); 3]).unwrap();
         rt.submit(
             TaskSpec::new("wl.sp_task")
                 .arg(Arg::StreamIn(s.handle().clone()))

@@ -64,6 +64,11 @@ impl MultiFetch {
     }
 }
 
+/// Upper bound on one blocking-wait horizon (~1 year in ms): callers may
+/// pass `u64::MAX` as "wait forever", and `Instant + Duration` must not
+/// overflow-panic computing the deadline.
+pub const MAX_WAIT_HORIZON_MS: u64 = 1000 * 60 * 60 * 24 * 365;
+
 /// The broker state machine: topics + consumer groups.
 ///
 /// Locking: the topic map is an `RwLock` (reads dominate); each partition
@@ -103,10 +108,13 @@ impl BrokerCore {
     /// Drop a topic and all group state referring to it.
     pub fn delete_topic(&self, name: &str) -> Result<()> {
         let removed = self.topics.write().unwrap().remove(name);
-        if removed.is_none() {
+        let Some(topic) = removed else {
             return Err(BrokerError::UnknownTopic(name.into()));
-        }
+        };
         self.groups.lock().unwrap().retain(|(_, t), _| t != name);
+        // Wake parked long-poll fetches so they re-check and surface
+        // `UnknownTopic` instead of sleeping out their deadline.
+        topic.notify_publish();
         Ok(())
     }
 
@@ -187,8 +195,16 @@ impl BrokerCore {
                 .cloned()
                 .ok_or_else(|| BrokerError::UnknownGroup(group.into()))?
         };
-        let mut st = entry.lock().unwrap();
-        Ok(st.leave(member))
+        let left = entry.lock().unwrap().leave(member);
+        if left {
+            // A rebalance can make records claimable by surviving members:
+            // wake parked fetches so redelivery starts now, not at their
+            // deadline.
+            if let Ok(t) = self.topic(topic) {
+                t.notify_publish();
+            }
+        }
+        Ok(left)
     }
 
     /// Poll up to `max` records for `member` of `group` on `topic`.
@@ -276,6 +292,42 @@ impl BrokerCore {
         Ok(MultiFetch { batches, positions })
     }
 
+    /// [`BrokerCore::fetch_many`] that **blocks** until at least one record
+    /// is available or `wait_ms` elapses — the long-poll face of the
+    /// notification plane. `wait_ms == 0` degenerates to a plain fetch.
+    ///
+    /// The wait parks on the topic's publish `Condvar`; the publish
+    /// sequence is snapshotted *before* each fetch so a record that lands
+    /// between the fetch and the park wakes the caller immediately (no
+    /// lost-wakeup window). Errors (unknown topic/group/member) surface on
+    /// every recheck, including topics deleted mid-wait.
+    pub fn fetch_many_wait(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    ) -> Result<MultiFetch> {
+        use std::time::{Duration, Instant};
+        // Clamp the horizon so `u64::MAX` ("wait forever") cannot overflow
+        // the Instant addition.
+        let deadline = Instant::now() + Duration::from_millis(wait_ms.min(MAX_WAIT_HORIZON_MS));
+        loop {
+            let t = self.topic(topic)?; // re-resolve: deletion must surface
+            let seen = t.publish_seq();
+            let mf = self.fetch_many(group, topic, member, max, max_bytes)?;
+            if !mf.batches.is_empty() || wait_ms == 0 {
+                return Ok(mf);
+            }
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                return Ok(mf); // deadline passed: empty fetch, no spin
+            };
+            t.wait_publish(seen, remaining);
+        }
+    }
+
     /// Commit processed offsets: `up_to` per partition.
     pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
         let entry = {
@@ -346,6 +398,11 @@ impl BrokerCore {
             st.rewind_to_committed(p);
         }
         st.leave(member);
+        drop(st);
+        // The rewound records are claimable again: wake parked fetches so
+        // surviving members redeliver immediately instead of waiting out
+        // their long-poll deadline.
+        t.notify_publish();
         Ok(())
     }
 }
@@ -553,6 +610,99 @@ mod tests {
             mf.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.value.0[0])).collect()
         };
         assert_eq!(via_poll, via_fetch_many, "batched and per-record paths must agree");
+    }
+
+    #[test]
+    fn fetch_many_wait_wakes_on_publish() {
+        use std::time::{Duration, Instant};
+        let b = BrokerCore::new();
+        b.create_topic("t", 2).unwrap();
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let b2 = Arc::clone(&b);
+        let publisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            b2.publish("t", rec(7)).unwrap();
+        });
+        let t0 = Instant::now();
+        let mf = b.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 5_000).unwrap();
+        assert_eq!(mf.record_count(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(4), "woken by notify, not deadline");
+        publisher.join().unwrap();
+    }
+
+    #[test]
+    fn fetch_many_wait_expires_empty() {
+        use std::time::{Duration, Instant};
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let t0 = Instant::now();
+        let mf = b.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 30).unwrap();
+        assert_eq!(mf.record_count(), 0);
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        // Data already present: returns immediately, wait or not.
+        b.publish("t", rec(1)).unwrap();
+        let t0 = Instant::now();
+        let mf = b.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 5_000).unwrap();
+        assert_eq!(mf.record_count(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn fetch_many_wait_surfaces_mid_wait_topic_deletion() {
+        use std::time::Duration;
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let b2 = Arc::clone(&b);
+        let deleter = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            b2.delete_topic("t").unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        let err = b.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 5_000).unwrap_err();
+        assert!(matches!(err, BrokerError::UnknownTopic(_)));
+        assert!(t0.elapsed() < Duration::from_secs(4), "deletion must wake the waiter");
+        deleter.join().unwrap();
+    }
+
+    #[test]
+    fn crash_rewind_wakes_parked_fetch_for_redelivery() {
+        use std::time::{Duration, Instant};
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        b.join_group("g", "t", "a", AssignmentMode::Shared).unwrap();
+        b.join_group("g", "t", "b", AssignmentMode::Shared).unwrap();
+        for i in 0..4 {
+            b.publish("t", rec(i)).unwrap();
+        }
+        // Member a claims everything but commits nothing.
+        assert_eq!(b.poll("g", "t", "a", usize::MAX).unwrap().len(), 4);
+        // Member b parks; a's crash rewinds the claims and must wake b.
+        let b2 = Arc::clone(&b);
+        let crasher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            b2.crash_member("g", "t", "a").unwrap();
+        });
+        let t0 = Instant::now();
+        let mf = b.fetch_many_wait("g", "t", "b", usize::MAX, usize::MAX, 5_000).unwrap();
+        assert_eq!(mf.record_count(), 4, "rewound records must redeliver");
+        assert!(t0.elapsed() < Duration::from_secs(4), "crash must wake the waiter");
+        crasher.join().unwrap();
+    }
+
+    #[test]
+    fn embedded_fetch_shares_the_published_allocation() {
+        // The zero-copy contract: publish → PartitionLog → fetch_many
+        // hands consumers the producer's own allocation.
+        let b = BrokerCore::new();
+        b.create_topic("t", 1).unwrap();
+        let payload = crate::util::wire::Blob::new(vec![0xEE; 1 << 20]);
+        b.publish("t", ProducerRecord { key: None, value: payload.clone() }).unwrap();
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let mf = b.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        let rec = &mf.batches[0].1[0];
+        assert!(rec.value.ptr_eq(&payload), "embedded fetch must not copy payload bytes");
     }
 
     #[test]

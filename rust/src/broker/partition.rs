@@ -85,7 +85,14 @@ impl PartitionLog {
             return Vec::new();
         }
         let idx = (from - self.start) as usize;
-        let mut out = Vec::new();
+        // Pre-size to the exact worst case (`max` capped by what is
+        // retained past `from`) so large drains never reallocate mid-copy.
+        // Under a finite byte budget the record count is unknowable up
+        // front, so cap the guess — a tiny budget over a huge backlog must
+        // not allocate pointer space for the whole backlog per fetch.
+        let avail = max.min(self.records.len() - idx);
+        let cap = if max_bytes == usize::MAX { avail } else { avail.min(64) };
+        let mut out = Vec::with_capacity(cap);
         let mut bytes = 0usize;
         for rec in self.records.iter().skip(idx).take(max) {
             let len = rec.payload_len();
@@ -219,6 +226,38 @@ mod tests {
         // Each record is 16 payload bytes (key + value).
         assert_eq!(log.fetch_budgeted(0, usize::MAX, 16).len(), 1);
         assert_eq!(log.fetch_budgeted(0, usize::MAX, 32).len(), 2);
+    }
+
+    #[test]
+    fn fetch_presizes_without_overallocating() {
+        let mut log = PartitionLog::new();
+        for i in 0..8 {
+            log.append(rec(i));
+        }
+        log.delete_up_to(2);
+        // `max` far beyond what is retained must cap the allocation.
+        // (`with_capacity` guarantees *at least* the request, so assert an
+        // upper bound rather than exact equality.)
+        let got = log.fetch_budgeted(0, usize::MAX, usize::MAX);
+        assert_eq!(got.len(), 6);
+        assert!(got.capacity() <= 8, "capacity ≈ min(max, retained past from)");
+        let got = log.fetch_budgeted(4, 100, usize::MAX);
+        assert!(got.capacity() <= 8, "got {}", got.capacity());
+        // A tiny byte budget over a large backlog must not pre-allocate
+        // pointer space for the whole backlog.
+        let got = log.fetch_budgeted(0, usize::MAX, 1);
+        assert!(got.capacity() <= 64, "byte-budgeted fetch over-allocated: {}", got.capacity());
+    }
+
+    #[test]
+    fn fetch_shares_payload_allocations() {
+        let mut log = PartitionLog::new();
+        let payload = crate::util::wire::Blob::new(vec![7u8; 1 << 16]);
+        log.append(ProducerRecord { key: None, value: payload.clone() });
+        let a = log.fetch(0, 1);
+        let b = log.fetch(0, 1);
+        assert!(a[0].value.ptr_eq(&payload), "append must not copy the payload");
+        assert!(a[0].value.ptr_eq(&b[0].value), "every fetch shares one allocation");
     }
 
     #[test]

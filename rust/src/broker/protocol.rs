@@ -43,7 +43,18 @@ pub enum Request {
     Poll { group: String, topic: String, member: String, max: usize },
     /// One-frame multi-partition drain with record + byte budgets
     /// (the batched data plane; replies with [`Response::Batches`]).
-    FetchMany { group: String, topic: String, member: String, max: usize, max_bytes: usize },
+    /// `wait_ms > 0` long-polls: the server parks the connection until
+    /// data arrives or the deadline passes (clamped server-side to
+    /// [`super::server::MAX_SERVER_WAIT_MS`]) instead of the client
+    /// spinning empty fetches.
+    FetchMany {
+        group: String,
+        topic: String,
+        member: String,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    },
     Commit { group: String, topic: String, commits: Vec<(usize, u64)> },
     DeleteRecords { topic: String, partition: usize, up_to: u64 },
     Offsets { topic: String },
@@ -133,13 +144,14 @@ impl Wire for Request {
                 member.encode(w);
             }
             Request::Shutdown => w.put_u8(15),
-            Request::FetchMany { group, topic, member, max, max_bytes } => {
+            Request::FetchMany { group, topic, member, max, max_bytes, wait_ms } => {
                 w.put_u8(17);
                 group.encode(w);
                 topic.encode(w);
                 member.encode(w);
                 max.encode(w);
                 max_bytes.encode(w);
+                wait_ms.encode(w);
             }
         }
     }
@@ -196,6 +208,7 @@ impl Wire for Request {
                 member: Wire::decode(r)?,
                 max: Wire::decode(r)?,
                 max_bytes: Wire::decode(r)?,
+                wait_ms: Wire::decode(r)?,
             },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
@@ -389,6 +402,7 @@ mod tests {
                 member: "m".into(),
                 max: 7,
                 max_bytes: 1 << 20,
+                wait_ms: 250,
             },
             Request::Commit { group: "g".into(), topic: "t".into(), commits: vec![(0, 5)] },
             Request::DeleteRecords { topic: "t".into(), partition: 1, up_to: 9 },
@@ -415,7 +429,7 @@ mod tests {
                 offset: 0,
                 timestamp_ms: 1,
                 key: None,
-                value: Blob(vec![1, 2]),
+                value: Blob::new(vec![1, 2]),
             }]),
             Response::OffsetList(vec![(0, 5)]),
             Response::Stats(TopicStatsWire {
@@ -431,7 +445,7 @@ mod tests {
             Response::Batches {
                 batches: vec![(
                     1,
-                    vec![Record { offset: 3, timestamp_ms: 4, key: None, value: Blob(vec![9]) }],
+                    vec![Record { offset: 3, timestamp_ms: 4, key: None, value: Blob::new(vec![9]) }],
                 )],
                 positions: vec![(4, 2), (0, 0)],
             },

@@ -40,12 +40,14 @@ pub struct ProducerRecord {
 wire_struct!(ProducerRecord { key: Option<Blob>, value: Blob });
 
 impl ProducerRecord {
-    pub fn new(value: Vec<u8>) -> Self {
-        Self { key: None, value: Blob(value) }
+    /// Wrap a payload without copying it (`Blob` is `Arc`-backed, so the
+    /// producer's buffer is the same allocation every consumer reads).
+    pub fn new(value: impl Into<Blob>) -> Self {
+        Self { key: None, value: value.into() }
     }
 
-    pub fn with_key(key: Vec<u8>, value: Vec<u8>) -> Self {
-        Self { key: Some(Blob(key)), value: Blob(value) }
+    pub fn with_key(key: impl Into<Blob>, value: impl Into<Blob>) -> Self {
+        Self { key: Some(key.into()), value: value.into() }
     }
 
     /// Total payload footprint in bytes (key + value) — the same unit the
@@ -73,8 +75,8 @@ mod tests {
         let r = Record {
             offset: 9,
             timestamp_ms: 123,
-            key: Some(Blob(vec![1])),
-            value: Blob(vec![2, 3]),
+            key: Some(Blob::new(vec![1])),
+            value: Blob::new(vec![2, 3]),
         };
         assert_eq!(Record::decode_exact(&r.encode_vec()).unwrap(), r);
     }
@@ -84,8 +86,8 @@ mod tests {
         let r = Record {
             offset: 0,
             timestamp_ms: 0,
-            key: Some(Blob(vec![0; 3])),
-            value: Blob(vec![0; 5]),
+            key: Some(Blob::new(vec![0; 3])),
+            value: Blob::new(vec![0; 5]),
         };
         assert_eq!(r.payload_len(), 8);
         let r2 = Record { key: None, ..r };

@@ -1,17 +1,34 @@
 //! TCP front-end for [`BrokerCore`]: one thread per connection, framed
 //! request/response (see [`super::protocol`]).
+//!
+//! Long-poll fetches ([`Request::FetchMany`] with `wait_ms > 0`) park the
+//! connection thread inside [`BrokerCore::fetch_many_wait`] — the client
+//! holds one outstanding request instead of spinning empty fetches.
+//! Connection threads honour [`BrokerServer::shutdown`] through a socket
+//! read timeout: between frames they poll the stop flag, so shutdown no
+//! longer leaks live threads waiting on peers that never close.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use log::{debug, warn};
 
-use crate::util::wire::{recv_msg, send_msg};
+use crate::util::wire::{recv_msg_patient, send_msg};
 
 use super::embedded::BrokerCore;
 use super::protocol::{error_code, Request, Response};
+
+/// Server-side clamp on one long-poll park. Remote clients with longer
+/// timeouts simply re-issue the fetch; the clamp bounds how long a parked
+/// connection can delay server shutdown.
+pub const MAX_SERVER_WAIT_MS: u64 = 5_000;
+
+/// Read timeout on connection sockets — the granularity at which idle
+/// connection threads notice the stop flag.
+pub const CONN_READ_TIMEOUT: Duration = Duration::from_millis(100);
 
 /// Handle to a running broker server.
 pub struct BrokerServer {
@@ -85,10 +102,13 @@ impl Drop for BrokerServer {
 fn handle_conn(core: Arc<BrokerCore>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
     let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     debug!("broker conn from {peer}");
+    // The read timeout lets the loop poll the stop flag between frames;
+    // `recv_msg_patient` keeps partial frames intact across timeout ticks.
+    let _ = sock.set_read_timeout(Some(CONN_READ_TIMEOUT));
     loop {
-        let req: Request = match recv_msg(&mut sock) {
+        let req: Request = match recv_msg_patient(&mut sock, || !stop.load(Ordering::SeqCst)) {
             Ok(Some(r)) => r,
-            Ok(None) => break, // clean close
+            Ok(None) => break, // clean close, or stop requested while idle
             Err(e) => {
                 debug!("broker conn {peer} read error: {e}");
                 break;
@@ -158,8 +178,13 @@ pub fn dispatch(core: &BrokerCore, req: Request) -> Response {
             Ok(rs) => A::Records(rs.iter().map(|r| (**r).clone()).collect()),
             Err(e) => to_err(&e),
         },
-        Q::FetchMany { group, topic, member, max, max_bytes } => {
-            match core.fetch_many(&group, &topic, &member, max, max_bytes) {
+        Q::FetchMany { group, topic, member, max, max_bytes, wait_ms } => {
+            // Long-poll: park this connection (its thread — dispatch is
+            // also the embedded call path, where blocking is equally
+            // correct) until data or deadline. Clamped so a parked fetch
+            // cannot delay shutdown indefinitely; clients loop as needed.
+            let wait = wait_ms.min(MAX_SERVER_WAIT_MS);
+            match core.fetch_many_wait(&group, &topic, &member, max, max_bytes, wait) {
                 Ok(mf) => A::Batches {
                     batches: mf
                         .batches
@@ -203,6 +228,7 @@ mod tests {
     use super::*;
     use crate::broker::group::AssignmentMode;
     use crate::broker::record::ProducerRecord;
+    use crate::util::wire::recv_msg;
 
     #[test]
     fn dispatch_covers_success_and_error() {
@@ -270,6 +296,7 @@ mod tests {
                 member: "m".into(),
                 max: usize::MAX,
                 max_bytes: usize::MAX,
+                wait_ms: 0,
             },
         ) {
             Response::Batches { batches, positions } => {
@@ -292,5 +319,31 @@ mod tests {
         assert_eq!(resp, Some(Response::Pong));
         drop(sock);
         server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_terminates_connection_threads() {
+        // Regression: `handle_conn` used to block in `recv_msg` until the
+        // peer closed, leaking one live thread per still-open client after
+        // shutdown. Connection threads hold an `Arc<BrokerCore>`, so the
+        // strong count observes their exit.
+        let core = BrokerCore::new();
+        let server = BrokerServer::start(Arc::clone(&core), "127.0.0.1:0").unwrap();
+        let mut sock = TcpStream::connect(server.addr).unwrap();
+        send_msg(&mut sock, &Request::Ping).unwrap();
+        let resp: Option<Response> = recv_msg(&mut sock).unwrap();
+        assert_eq!(resp, Some(Response::Pong));
+        // Keep `sock` open across shutdown: the old code would hang here.
+        server.shutdown();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while Arc::strong_count(&core) > 1 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "connection thread still alive {} refs after shutdown",
+                Arc::strong_count(&core)
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(sock);
     }
 }

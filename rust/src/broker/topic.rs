@@ -1,7 +1,10 @@
-//! Topics: named sets of partitions plus the producer-side partitioner.
+//! Topics: named sets of partitions plus the producer-side partitioner
+//! and the **publish notifier** — the wait-list that turns consumer polls
+//! from sleep-spin loops into event-driven wakeups.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::partition::PartitionLog;
 use super::record::{ProducerRecord, Record};
@@ -13,6 +16,18 @@ pub struct Topic {
     partitions: Vec<Mutex<PartitionLog>>,
     /// Round-robin cursor for key-less records.
     rr: AtomicU64,
+    /// Publish notifier: a lock-free sequence number bumped on every
+    /// append batch, plus a wait-list that long-polling fetches park on.
+    /// One notifier per topic (not per partition): consumers drain all
+    /// their partitions per fetch anyway. The fast path (no parked
+    /// waiters — the common case for busy producers) costs two atomic ops
+    /// per publish; the `Mutex`/`Condvar` pair is touched only when a
+    /// waiter is actually parked, so producers keep PR 1's
+    /// one-lock-per-partition scaling.
+    publish_seq: AtomicU64,
+    waiters: AtomicU64,
+    wait_lock: Mutex<()>,
+    wait_cv: Condvar,
 }
 
 impl Topic {
@@ -22,7 +37,56 @@ impl Topic {
             name: name.to_string(),
             partitions: (0..partitions).map(|_| Mutex::new(PartitionLog::new())).collect(),
             rr: AtomicU64::new(0),
+            publish_seq: AtomicU64::new(0),
+            waiters: AtomicU64::new(0),
+            wait_lock: Mutex::new(()),
+            wait_cv: Condvar::new(),
         }
+    }
+
+    // ---- publish notifier ----------------------------------------------
+
+    /// Snapshot the publish sequence number. Take it **before** checking
+    /// for data: a publish that lands between the check and
+    /// [`Topic::wait_publish`] bumps the sequence, so the wait returns
+    /// immediately instead of losing the wakeup.
+    pub fn publish_seq(&self) -> u64 {
+        self.publish_seq.load(Ordering::SeqCst)
+    }
+
+    /// Wake every parked waiter (called after each append; also used by
+    /// topic deletion and group rewinds so blocked fetches re-check).
+    pub fn notify_publish(&self) {
+        self.publish_seq.fetch_add(1, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // Taking the lock orders this notify after a waiter's in-lock
+            // sequence check: the waiter either saw the new sequence or is
+            // parked and receives the notification. Skipped entirely when
+            // nobody waits.
+            let _guard = self.wait_lock.lock().unwrap();
+            self.wait_cv.notify_all();
+        }
+    }
+
+    /// Park until the publish sequence moves past `seen` or `timeout`
+    /// elapses. Returns `true` when woken by a publish.
+    pub fn wait_publish(&self, seen: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let mut guard = self.wait_lock.lock().unwrap();
+        let woken = loop {
+            if self.publish_seq.load(Ordering::SeqCst) != seen {
+                break true;
+            }
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                break false;
+            };
+            let (g, _) = self.wait_cv.wait_timeout(guard, remaining).unwrap();
+            guard = g;
+        };
+        drop(guard);
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        woken
     }
 
     pub fn partition_count(&self) -> usize {
@@ -51,12 +115,15 @@ impl Topic {
     pub fn publish(&self, rec: ProducerRecord) -> (usize, u64) {
         let p = self.pick_partition(&rec);
         let offset = self.partitions[p].lock().unwrap().append(rec);
+        self.notify_publish();
         (p, offset)
     }
 
     /// Append to an explicit partition; returns the offset.
     pub fn publish_to(&self, partition: usize, rec: ProducerRecord) -> u64 {
-        self.partitions[partition].lock().unwrap().append(rec)
+        let offset = self.partitions[partition].lock().unwrap().append(rec);
+        self.notify_publish();
+        offset
     }
 
     /// Append a whole batch, grouping records by partition so each
@@ -80,6 +147,10 @@ impl Topic {
                 let rec = slots[i].take().expect("record consumed twice");
                 acks[i] = (p, log.append(rec));
             }
+        }
+        if !acks.is_empty() {
+            // One wakeup per batch — waiters drain everything they can see.
+            self.notify_publish();
         }
         acks
     }
@@ -169,8 +240,8 @@ mod tests {
         let mut seen = std::collections::HashSet::new();
         for i in 0..64u32 {
             let rec = ProducerRecord {
-                key: Some(Blob(i.to_le_bytes().to_vec())),
-                value: Blob(vec![]),
+                key: Some(Blob::new(i.to_le_bytes().to_vec())),
+                value: Blob::default(),
             };
             seen.insert(t.pick_partition(&rec));
         }
@@ -224,5 +295,43 @@ mod tests {
         t.publish_to(1, ProducerRecord::new(vec![0]));
         assert_eq!(t.offsets_of(0), (0, 0));
         assert_eq!(t.offsets_of(1), (0, 1));
+    }
+
+    #[test]
+    fn publishes_bump_the_notifier_sequence() {
+        let t = Topic::new("t", 2);
+        let s0 = t.publish_seq();
+        t.publish(ProducerRecord::new(vec![0]));
+        assert!(t.publish_seq() > s0);
+        let s1 = t.publish_seq();
+        t.publish_many(vec![ProducerRecord::new(vec![1]), ProducerRecord::new(vec![2])]);
+        assert_eq!(t.publish_seq(), s1 + 1, "one wakeup per batch, not per record");
+        // An empty batch must not wake anyone.
+        t.publish_many(Vec::new());
+        assert_eq!(t.publish_seq(), s1 + 1);
+    }
+
+    #[test]
+    fn wait_publish_wakes_on_publish_and_expires_otherwise() {
+        use std::time::{Duration, Instant};
+        let t = Arc::new(Topic::new("t", 1));
+        // Expiry: nothing published.
+        let seen = t.publish_seq();
+        let t0 = Instant::now();
+        assert!(!t.wait_publish(seen, Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        // Wakeup: a publish from another thread releases the wait early.
+        let seen = t.publish_seq();
+        let t2 = Arc::clone(&t);
+        let publisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            t2.publish(ProducerRecord::new(vec![1]));
+        });
+        let t0 = Instant::now();
+        assert!(t.wait_publish(seen, Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(4), "woke by notify, not timeout");
+        publisher.join().unwrap();
+        // A stale snapshot returns immediately (lost-wakeup guard).
+        assert!(t.wait_publish(seen, Duration::from_secs(5)));
     }
 }

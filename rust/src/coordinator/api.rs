@@ -314,12 +314,14 @@ impl CometRuntime {
     ///     let mut sum = 0u64;
     ///     loop {
     ///         let closed = s.is_closed();
-    ///         let items = s.poll()?; // one batched fetch_many call
+    ///         // One blocking batched fetch: parks until data arrives
+    ///         // (wakeup-driven — no sleep-spin), bounded so the close
+    ///         // flag is re-checked.
+    ///         let items = s.poll_timeout(std::time::Duration::from_millis(10))?;
     ///         sum += items.iter().sum::<u64>();
     ///         if items.is_empty() && closed {
     ///             break;
     ///         }
-    ///         std::thread::sleep(std::time::Duration::from_micros(200));
     ///     }
     ///     ctx.set_output_as(1, &sum);
     ///     Ok(())
@@ -671,12 +673,11 @@ mod tests {
             let mut n = 0u64;
             loop {
                 let closed = s.is_closed();
-                let items = s.poll()?;
+                let items = s.poll_timeout(std::time::Duration::from_millis(5))?;
                 n += items.len() as u64;
                 if items.is_empty() && closed {
                     break;
                 }
-                std::thread::sleep(std::time::Duration::from_micros(100));
             }
             ctx.set_output_as(1, &n);
             Ok(())

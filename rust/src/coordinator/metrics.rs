@@ -226,6 +226,7 @@ mod tests {
             records_in: 100,
             batches_in: 4,
             bytes_in: 2400,
+            fetches: 4,
         };
         m.set_stream(7, s);
         let got = m.stream(7).unwrap();

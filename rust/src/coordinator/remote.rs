@@ -256,7 +256,7 @@ impl RemoteWorker {
                         }
                         let outputs = outputs
                             .into_iter()
-                            .map(|(k, b)| (k, Arc::new(b.0)))
+                            .map(|(k, b)| (k, Arc::clone(b.0.as_arc())))
                             .collect();
                         if events.send(Event::Finished { task, worker: id, outputs, error }).is_err()
                         {
@@ -276,8 +276,10 @@ impl RemoteWorker {
     }
 
     pub fn send_job(&self, job: &Job) {
+        // The worker store keeps `Arc<Vec<u8>>`: hand the same allocation
+        // to the wire encoder (the encode into the frame is the one copy).
         let inputs: Vec<(Key, Blob)> =
-            job.inputs.iter().map(|(k, v)| (*k, Blob(v.as_ref().clone()))).collect();
+            job.inputs.iter().map(|(k, v)| (*k, Blob::from_arc(Arc::clone(v)))).collect();
         let msg = MasterMsg::Run { record: job.record.clone(), inputs, attempt: job.attempt };
         if let Err(e) = send_msg(&mut *self.writer.lock().unwrap(), &msg) {
             warn!("remote worker {} send failed: {e}", self.id);
@@ -389,7 +391,7 @@ fn run_remote_job(
     scale: TimeScale,
 ) -> anyhow::Result<Vec<(Key, Blob)>> {
     for (k, b) in inputs {
-        store.lock().unwrap().entry(k).or_insert_with(|| Arc::new(b.0));
+        store.lock().unwrap().entry(k).or_insert_with(|| Arc::clone(b.0.as_arc()));
     }
     let mut out_keys: Vec<(usize, Key)> = Vec::new();
     let mut args = Vec::with_capacity(record.args.len());
@@ -448,8 +450,10 @@ fn run_remote_job(
             .find(|&&(i, _)| i == idx)
             .map(|&(_, k)| k)
             .ok_or_else(|| anyhow::anyhow!("output index mismatch"))?;
-        store.lock().unwrap().insert(key, Arc::new(bytes.clone()));
-        keyed.push((key, Blob(bytes)));
+        // One allocation serves both the local store and the reply frame.
+        let blob = Blob::new(bytes);
+        store.lock().unwrap().insert(key, Arc::clone(blob.0.as_arc()));
+        keyed.push((key, blob));
     }
     Ok(keyed)
 }
@@ -479,7 +483,7 @@ mod tests {
                 scale_factor: 0.01,
                 load_models: false,
             },
-            MasterMsg::Run { record: rec, inputs: vec![((0, 0), Blob(vec![9]))], attempt: 1 },
+            MasterMsg::Run { record: rec, inputs: vec![((0, 0), Blob::new(vec![9]))], attempt: 1 },
             MasterMsg::Bye,
         ];
         for m in msgs {
@@ -488,7 +492,7 @@ mod tests {
         }
         let replies = vec![
             WorkerMsg::Ready,
-            WorkerMsg::Done { task: 1, outputs: vec![((1, 1), Blob(vec![2]))], error: None },
+            WorkerMsg::Done { task: 1, outputs: vec![((1, 1), Blob::new(vec![2]))], error: None },
             WorkerMsg::Done { task: 2, outputs: vec![], error: Some("x".into()) },
         ];
         for m in replies {

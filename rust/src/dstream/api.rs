@@ -4,7 +4,7 @@ use thiserror::Error;
 
 use crate::broker::embedded::BrokerError;
 use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
-use crate::util::wire::Wire;
+use crate::util::wire::{Blob, Wire};
 use crate::wire_struct;
 
 /// Kind of stream (paper §4.2: object vs file implementations).
@@ -198,9 +198,23 @@ pub trait StreamItem: Sized {
     fn to_stream_bytes_into(&self, w: &mut ByteWriter) {
         w.put_raw(&self.to_stream_bytes());
     }
+
+    /// Wrap this item into the broker payload. The default encodes into a
+    /// fresh buffer; [`Blob`] overrides it (via the blanket impl) to share
+    /// its allocation, making the embedded publish path copy-free.
+    fn to_stream_blob(&self) -> Blob {
+        Blob::new(self.to_stream_bytes())
+    }
+
+    /// Decode an item out of a broker payload. The default copies through
+    /// [`StreamItem::from_stream_bytes`]; [`Blob`] shares the record's
+    /// allocation instead (zero-copy embedded poll).
+    fn from_stream_blob(blob: &Blob) -> Result<Self> {
+        Self::from_stream_bytes(blob.as_slice())
+    }
 }
 
-impl<T: Wire> StreamItem for T {
+impl<T: Wire + std::any::Any> StreamItem for T {
     fn to_stream_bytes(&self) -> Vec<u8> {
         self.encode_vec()
     }
@@ -209,6 +223,23 @@ impl<T: Wire> StreamItem for T {
     }
     fn to_stream_bytes_into(&self, w: &mut ByteWriter) {
         self.encode(w);
+    }
+    fn to_stream_blob(&self) -> Blob {
+        // `Blob` payloads ride the stream as-is: the record's value IS the
+        // producer's buffer (an `Arc` clone, no bytes moved, no length
+        // prefix). Poor man's specialisation via `Any` — a `TypeId`
+        // compare, not a real downcast cost, on non-Blob items.
+        if let Some(blob) = (self as &dyn std::any::Any).downcast_ref::<Blob>() {
+            return blob.clone();
+        }
+        Blob::new(self.to_stream_bytes())
+    }
+    fn from_stream_blob(blob: &Blob) -> Result<Self> {
+        if std::any::TypeId::of::<Self>() == std::any::TypeId::of::<Blob>() {
+            let boxed: Box<dyn std::any::Any> = Box::new(blob.clone());
+            return Ok(*boxed.downcast::<Self>().expect("TypeId just checked"));
+        }
+        Self::from_stream_bytes(blob.as_slice())
     }
 }
 
@@ -256,5 +287,18 @@ mod tests {
         let v: Vec<u64> = vec![1, 2, 3];
         let bytes = v.to_stream_bytes();
         assert_eq!(Vec::<u64>::from_stream_bytes(&bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn blob_items_ride_streams_without_copying() {
+        let b = Blob::new(vec![42u8; 4096]);
+        let payload = b.to_stream_blob();
+        assert!(payload.ptr_eq(&b), "Blob → stream payload must share the allocation");
+        let back = Blob::from_stream_blob(&payload).unwrap();
+        assert!(back.ptr_eq(&b), "stream payload → Blob must share the allocation");
+        // Non-Blob items still roundtrip through the encoded form.
+        let n = 7u64;
+        let payload = n.to_stream_blob();
+        assert_eq!(u64::from_stream_blob(&payload).unwrap(), 7);
     }
 }

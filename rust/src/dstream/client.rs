@@ -23,7 +23,12 @@ enum Transport {
     /// Shared in-process registry (single-node deployments, tests).
     Embedded(Arc<Mutex<StreamRegistry>>),
     /// Framed TCP to a remote [`super::server::DistroStreamServer`].
-    Remote(Mutex<TcpStream>),
+    ///
+    /// Long-poll `PollFiles` requests travel over a **separate**
+    /// lazily-opened socket (`poll_sock`): a consumer parked server-side
+    /// must not block `announce_file` (the very frame that would wake it)
+    /// or other metadata calls from threads sharing the client.
+    Remote { sock: Mutex<TcpStream>, addr: String, poll_sock: Mutex<Option<TcpStream>> },
 }
 
 /// Per-process client with a terminal-answer metadata cache.
@@ -43,25 +48,54 @@ impl DistroStreamClient {
             .map_err(|e| DStreamError::Transport(format!("connect {addr}: {e}")))?;
         sock.set_nodelay(true).ok();
         Ok(Self {
-            transport: Transport::Remote(Mutex::new(sock)),
+            transport: Transport::Remote {
+                sock: Mutex::new(sock),
+                addr: addr.to_string(),
+                poll_sock: Mutex::new(None),
+            },
             closed_cache: Mutex::new(HashSet::new()),
         })
+    }
+
+    fn roundtrip(sock: &mut TcpStream, req: &DsRequest) -> Result<DsResponse> {
+        send_msg(sock, req).map_err(|e| DStreamError::Transport(format!("send: {e}")))?;
+        match recv_msg(sock) {
+            Ok(Some(resp)) => Ok(resp),
+            Ok(None) => Err(DStreamError::Transport("server closed connection".into())),
+            Err(e) => Err(DStreamError::Transport(format!("recv: {e}"))),
+        }
     }
 
     fn rpc(&self, req: DsRequest) -> Result<DsResponse> {
         match &self.transport {
             Transport::Embedded(reg) => Ok(dispatch(reg, req)),
-            Transport::Remote(sock) => {
+            Transport::Remote { sock, .. } => {
                 let mut sock = sock.lock().unwrap();
-                send_msg(&mut *sock, &req)
-                    .map_err(|e| DStreamError::Transport(format!("send: {e}")))?;
-                match recv_msg(&mut *sock) {
-                    Ok(Some(resp)) => Ok(resp),
-                    Ok(None) => Err(DStreamError::Transport("server closed connection".into())),
-                    Err(e) => Err(DStreamError::Transport(format!("recv: {e}"))),
-                }
+                Self::roundtrip(&mut sock, &req)
             }
         }
+    }
+
+    /// One request over the dedicated long-poll socket (remote only;
+    /// opened on first use).
+    fn poll_rpc(&self, req: DsRequest) -> Result<DsResponse> {
+        let Transport::Remote { addr, poll_sock, .. } = &self.transport else {
+            unreachable!("poll_rpc is remote-only");
+        };
+        let mut slot = poll_sock.lock().unwrap();
+        if slot.is_none() {
+            let sock = TcpStream::connect(addr)
+                .map_err(|e| DStreamError::Transport(format!("connect {addr}: {e}")))?;
+            sock.set_nodelay(true).ok();
+            *slot = Some(sock);
+        }
+        let sock = slot.as_mut().expect("poll socket just ensured");
+        let resp = Self::roundtrip(sock, &req);
+        if resp.is_err() {
+            // Drop a broken socket so the next long-poll reconnects.
+            *slot = None;
+        }
+        resp
     }
 
     fn expect_ok(&self, req: DsRequest) -> Result<()> {
@@ -120,18 +154,35 @@ impl DistroStreamClient {
     }
 
     /// FDS dedup poll: claim up to `max` undelivered candidates (see
-    /// server docs).
+    /// server docs). `wait_ms > 0` parks at the server until a producer
+    /// announces a new file or the deadline passes — no client-side
+    /// sleeping. The server clamps one park (callers with longer budgets
+    /// re-issue, rescanning their directory in between).
     pub fn poll_files(
         &self,
         id: StreamId,
         candidates: Vec<String>,
         max: usize,
+        wait_ms: u64,
     ) -> Result<Vec<String>> {
-        match self.rpc(DsRequest::PollFiles { id, candidates, max })? {
+        let req = DsRequest::PollFiles { id, candidates, max, wait_ms };
+        // Waiting polls park server-side: keep them off the shared
+        // metadata socket so they can't block the announce that wakes them.
+        let resp = match (&self.transport, wait_ms) {
+            (Transport::Remote { .. }, w) if w > 0 => self.poll_rpc(req)?,
+            _ => self.rpc(req)?,
+        };
+        match resp {
             DsResponse::Files(fs) => Ok(fs),
             DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
             other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),
         }
+    }
+
+    /// FDS: announce a freshly published file (canonical path) so parked
+    /// consumers wake immediately instead of on their next rescan tick.
+    pub fn announce_file(&self, id: StreamId, path: &str) -> Result<()> {
+        self.expect_ok(DsRequest::AnnounceFile { id, path: path.into() })
     }
 
     pub fn info(&self, id: StreamId) -> Result<StreamInfoWire> {
@@ -216,10 +267,13 @@ mod tests {
         assert_eq!(id, id_b);
         // File dedup is global across clients.
         assert_eq!(
-            a.poll_files(id, vec!["f1".into()], usize::MAX).unwrap(),
+            a.poll_files(id, vec!["f1".into()], usize::MAX, 0).unwrap(),
             vec!["f1".to_string()]
         );
-        assert!(b.poll_files(id, vec!["f1".into()], usize::MAX).unwrap().is_empty());
+        assert!(b.poll_files(id, vec!["f1".into()], usize::MAX, 0).unwrap().is_empty());
+        // Announce → the other client's poll sees the path with no scan.
+        a.announce_file(id, "f2").unwrap();
+        assert_eq!(b.poll_files(id, vec![], usize::MAX, 0).unwrap(), vec!["f2".to_string()]);
         server.shutdown();
     }
 }

@@ -84,10 +84,22 @@ impl FileDistroStream {
     /// Atomically create `name` with `contents` in the base dir. This is a
     /// convenience — any regular file write into the directory publishes
     /// too (possibly observed mid-write unless written via temp+rename).
+    ///
+    /// The new path is **announced** to the DistroStream Server, waking
+    /// consumers parked in [`FileDistroStream::poll_timeout`] immediately;
+    /// out-of-band writes are instead found by those consumers' rescans.
     pub fn write_file(&self, name: &str, contents: &[u8]) -> Result<PathBuf> {
         // First write registers this process as a producer (lazy, like ODS).
         self.hub.client().add_producer(self.handle.id, &self.identity)?;
-        Ok(dirmon::publish_file(&self.base_dir(), name, contents)?)
+        let path = dirmon::publish_file(&self.base_dir(), name, contents)?;
+        // Best-effort: the file is already durably published above — a
+        // failed announce must not report the write as failed (consumers
+        // still find the file on their next rescan tick).
+        let canonical = self.hub.to_canonical(&path.to_string_lossy());
+        if let Err(e) = self.hub.client().announce_file(self.handle.id, &canonical) {
+            log::debug!("announce_file({canonical}) failed (rescan will deliver): {e}");
+        }
+        Ok(path)
     }
 
     // ---- consume -------------------------------------------------------------
@@ -95,15 +107,20 @@ impl FileDistroStream {
     /// Newly available file paths (each path delivered exactly once across
     /// all consumers), capped at the handle's `batch.max_records`.
     pub fn poll(&self) -> Result<Vec<PathBuf>> {
+        self.poll_wait(Duration::ZERO)
+    }
+
+    /// One scan + dedup round trip, parking at the server for up to `wait`
+    /// when nothing is fresh (woken early by producer announcements).
+    fn poll_wait(&self, wait: Duration) -> Result<Vec<PathBuf>> {
         self.hub.client().add_consumer(self.handle.id, &self.identity)?;
         let present = dirmon::scan_dir(&self.base_dir())?;
-        if present.is_empty() {
-            return Ok(Vec::new());
-        }
         // Dedup at the server is on *canonical* paths so that consumers on
         // hosts with different mount points share one delivered-set. The
         // server claims at most `max_records` *fresh* paths per poll, so
         // the remainder stays claimable (by us or by other consumers).
+        // An empty scan still goes to the server: producer-announced paths
+        // deliver even before the shared filesystem shows the entry here.
         let candidates: Vec<String> = present
             .iter()
             .map(|p| self.hub.to_canonical(&p.to_string_lossy()))
@@ -114,20 +131,42 @@ impl FileDistroStream {
             self.handle.id,
             candidates,
             self.handle.batch.max_records.max(1),
+            // Ceiling: a sub-ms tail must stay a blocking park, not a
+            // scan+RPC busy-spin (see `timeutil::ceil_ms`).
+            crate::util::timeutil::ceil_ms(wait),
         )?;
         Ok(fresh.into_iter().map(|c| PathBuf::from(self.hub.to_local(&c))).collect())
     }
 
     /// Poll, waiting up to `timeout` for at least one new file.
+    ///
+    /// Wakeup-driven: each round parks at the DistroStream Server, which
+    /// wakes the wait the moment a producer announces a file through
+    /// [`FileDistroStream::write_file`]. Files written out-of-band (no
+    /// announce) are picked up by the rescan when the park ticks over —
+    /// the tick backs off exponentially (1 → 64 ms), so an idle consumer
+    /// performs a handful of directory scans per second instead of ~2000
+    /// sleep-spin iterations.
     pub fn poll_timeout(&self, timeout: Duration) -> Result<Vec<PathBuf>> {
-        let deadline = Instant::now() + timeout;
+        // A ~1 year horizon doubles as "forever" without overflowing the
+        // Instant addition on e.g. Duration::MAX.
+        let deadline = Instant::now() + timeout.min(Duration::from_secs(31_536_000));
+        let mut tick = Duration::from_millis(1);
         loop {
-            let files = self.poll()?;
-            if !files.is_empty() || Instant::now() >= deadline {
+            let now = Instant::now();
+            let remaining = deadline.saturating_duration_since(now);
+            let files = self.poll_wait(tick.min(remaining))?;
+            if !files.is_empty() || remaining.is_zero() {
                 return Ok(files);
             }
-            std::thread::sleep(Duration::from_micros(500));
+            tick = (tick * 2).min(Duration::from_millis(64));
         }
+    }
+
+    /// Alias for [`FileDistroStream::poll_timeout`] (the file-flavoured
+    /// name used by drivers that also hold object streams).
+    pub fn poll_files_timeout(&self, timeout: Duration) -> Result<Vec<PathBuf>> {
+        self.poll_timeout(timeout)
     }
 
     // ---- status / close --------------------------------------------------------
@@ -215,6 +254,29 @@ mod tests {
         let got = s.poll_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(got.len(), 1);
         t.join().unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn write_file_announce_wakes_parked_consumer() {
+        let d = tmpdir("announce");
+        let (hub_p, reg, core) = DistroStreamHub::embedded("producer");
+        let hub_c = DistroStreamHub::attach_embedded("consumer", &reg, &core);
+        let p = hub_p.file_stream(Some("afs"), d.to_str().unwrap()).unwrap();
+        let c = hub_c.file_stream(Some("afs"), d.to_str().unwrap()).unwrap();
+        let waiter = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let files = c.poll_files_timeout(Duration::from_secs(10)).unwrap();
+            (files, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        p.write_file("wake.dat", b"payload").unwrap();
+        let (files, waited) = waiter.join().unwrap();
+        assert_eq!(files.len(), 1);
+        assert!(
+            waited < Duration::from_secs(5),
+            "announce must wake the parked poll, waited {waited:?}"
+        );
         std::fs::remove_dir_all(&d).unwrap();
     }
 

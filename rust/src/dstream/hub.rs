@@ -33,6 +33,13 @@ pub struct StreamCounters {
     pub records_in: u64,
     pub batches_in: u64,
     pub bytes_in: u64,
+    /// Blocking fetch calls issued on behalf of this stream, **including
+    /// ones that returned empty** — the wakeup plane's efficiency witness:
+    /// a blocked `poll_timeout` costs O(1) fetches per wakeup where the
+    /// old spin loop cost one per 500 µs. Counts client `fetch_many_wait`
+    /// invocations; a remote wait may slice one invocation into several
+    /// bounded wire frames internally.
+    pub fetches: u64,
 }
 
 impl StreamCounters {
@@ -44,6 +51,7 @@ impl StreamCounters {
         self.records_in += other.records_in;
         self.batches_in += other.batches_in;
         self.bytes_in += other.bytes_in;
+        self.fetches += other.fetches;
     }
 
     /// Mean records per delivering poll batch — the batch-efficiency
@@ -148,6 +156,12 @@ impl DistroStreamHub {
         e.records_in += records;
         e.batches_in += 1;
         e.bytes_in += bytes;
+    }
+
+    /// Record one broker fetch round trip (delivering or empty) — the
+    /// wakeup plane's spin detector.
+    pub(crate) fn note_fetch(&self, id: StreamId) {
+        self.counters.lock().unwrap().entry(id).or_default().fetches += 1;
     }
 
     /// This hub's counters for one stream.

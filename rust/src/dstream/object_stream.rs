@@ -37,7 +37,6 @@ use std::time::{Duration, Instant};
 
 use crate::broker::record::ProducerRecord;
 use crate::broker::AssignmentMode;
-use crate::util::bytes::ByteWriter;
 
 use super::api::{
     BatchPolicy, ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType,
@@ -179,7 +178,9 @@ impl<T: StreamItem> ObjectDistroStream<T> {
     /// publishing must flush or close to make its tail batch visible.
     pub fn publish(&self, item: &T) -> Result<()> {
         let p = self.publisher()?;
-        let rec = ProducerRecord::new(item.to_stream_bytes());
+        // `to_stream_blob` shares the item's allocation when it already is
+        // a `Blob` — the zero-copy embedded publish path.
+        let rec = ProducerRecord { key: None, value: item.to_stream_blob() };
         let policy = self.handle.batch;
         if policy.linger_ms == 0 {
             let bytes = rec.payload_len() as u64;
@@ -207,8 +208,8 @@ impl<T: StreamItem> ObjectDistroStream<T> {
     }
 
     /// Publish a list of messages: one record per element (so consumers
-    /// still see individual items), but encoded through one reused buffer
-    /// and shipped as a **single** broker batch request.
+    /// still see individual items), shipped as a **single** broker batch
+    /// request. `Blob` elements travel by `Arc` clone (no bytes copied).
     pub fn publish_list(&self, items: &[T]) -> Result<()> {
         if items.is_empty() {
             return Ok(());
@@ -216,14 +217,12 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         let p = self.publisher()?;
         // Preserve publication order with any lingering records.
         self.flush_publisher(p)?;
-        let mut w = ByteWriter::new();
         let mut recs = Vec::with_capacity(items.len());
         let mut bytes = 0u64;
         for item in items {
-            w.clear();
-            item.to_stream_bytes_into(&mut w);
-            bytes += w.len() as u64;
-            recs.push(ProducerRecord::new(w.as_slice().to_vec()));
+            let rec = ProducerRecord { key: None, value: item.to_stream_blob() };
+            bytes += rec.payload_len() as u64;
+            recs.push(rec);
         }
         self.hub.broker().publish_batch(&p.topic, recs)?;
         self.hub.note_publish(self.handle.id, items.len() as u64, bytes);
@@ -266,18 +265,31 @@ impl<T: StreamItem> ObjectDistroStream<T> {
     /// poll — including the exactly-once commit bound — costs a single
     /// broker round trip on the fetch side.
     pub fn poll(&self) -> Result<Vec<T>> {
+        self.poll_wait(Duration::ZERO)
+    }
+
+    /// [`ObjectDistroStream::poll`] that blocks inside the broker until at
+    /// least one record is available or `wait` elapses — **one** fetch
+    /// round trip parks on the topic's publish notifier instead of the
+    /// caller spinning empty polls.
+    fn poll_wait(&self, wait: Duration) -> Result<Vec<T>> {
         let c = self.consumer()?;
         let policy = self.handle.batch;
         // Clamp to ≥1: a zero record cap (e.g. a computed `records(n)`
         // with n == 0) must degrade to one-at-a-time delivery, not wedge
         // the consumer on eternally-empty polls.
         let max = self.hub.max_poll_records().min(policy.max_records).max(1);
-        let mf = self.hub.broker().fetch_many(
+        self.hub.note_fetch(self.handle.id);
+        let mf = self.hub.broker().fetch_many_wait(
             self.hub.group(),
             &c.topic,
             &self.identity,
             max,
             policy.max_bytes,
+            // Ceiling, not truncation: a sub-ms tail must stay a blocking
+            // wait, or the last slice of every poll_timeout degenerates
+            // into a burst of non-blocking fetches.
+            crate::util::timeutil::ceil_ms(wait),
         )?;
         if mf.batches.is_empty() {
             return Ok(Vec::new());
@@ -287,7 +299,10 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         for (_p, records) in &mf.batches {
             for r in records {
                 bytes += r.payload_len() as u64;
-                items.push(T::from_stream_bytes(&r.value.0)?);
+                // Zero-copy for `Blob` items on the embedded backend: the
+                // decoded item shares the record's (= the producer's)
+                // allocation.
+                items.push(T::from_stream_blob(&r.value)?);
             }
         }
         self.hub.note_poll(self.handle.id, items.len() as u64, bytes);
@@ -322,14 +337,24 @@ impl<T: StreamItem> ObjectDistroStream<T> {
 
     /// Poll, waiting up to `timeout` for at least one element (paper
     /// `poll(timeout)`).
+    ///
+    /// Wakeup-driven: the wait parks inside the broker (embedded: on the
+    /// topic's publish `Condvar`; TCP: the server holds the `FetchMany`
+    /// frame), so an idle consumer issues O(1) fetch round trips per
+    /// timeout instead of one per 500 µs. A publish — including a
+    /// `linger_ms` batch flushing via `flush()`/`close()` or filling up —
+    /// wakes the consumer immediately. The loop exists only because remote
+    /// waits are sliced server-side; each iteration is one blocking fetch.
     pub fn poll_timeout(&self, timeout: Duration) -> Result<Vec<T>> {
-        let deadline = Instant::now() + timeout;
+        // A ~1 year horizon doubles as "forever" without overflowing the
+        // Instant addition on e.g. Duration::MAX.
+        let deadline = Instant::now() + timeout.min(Duration::from_secs(31_536_000));
         loop {
-            let items = self.poll()?;
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let items = self.poll_wait(remaining)?;
             if !items.is_empty() || Instant::now() >= deadline {
                 return Ok(items);
             }
-            std::thread::sleep(Duration::from_micros(500));
         }
     }
 
@@ -479,9 +504,81 @@ mod tests {
     fn blob_payloads_roundtrip() {
         let (hub, _, _) = DistroStreamHub::embedded("main");
         let s = hub.object_stream::<Blob>(None).unwrap();
-        s.publish(&Blob(vec![0u8; 1024])).unwrap();
+        s.publish(&Blob::new(vec![0u8; 1024])).unwrap();
         let got = s.poll().unwrap();
         assert_eq!(got[0].0.len(), 1024);
+    }
+
+    #[test]
+    fn embedded_blob_path_is_zero_copy_end_to_end() {
+        // The full chain — publish → PartitionLog → fetch_many → poll →
+        // decode — must hand the consumer the producer's own allocation.
+        let (hub, reg, core) = DistroStreamHub::embedded("producer");
+        let hub_c = DistroStreamHub::attach_embedded("consumer", &reg, &core);
+        let p = hub.object_stream::<Blob>(Some("zc")).unwrap();
+        let c = hub_c.object_stream::<Blob>(Some("zc")).unwrap();
+        let payload = Blob::new(vec![0xAB; 1 << 20]);
+        p.publish(&payload).unwrap();
+        let got = c.poll().unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(
+            got[0].ptr_eq(&payload),
+            "embedded publish→poll must move zero payload bytes (Arc identity)"
+        );
+        // publish_list shares allocations the same way.
+        let more = vec![Blob::new(vec![1u8; 4096]), Blob::new(vec![2u8; 4096])];
+        p.publish_list(&more).unwrap();
+        let got = c.poll().unwrap();
+        for item in &got {
+            assert!(
+                more.iter().any(|m| m.ptr_eq(item)),
+                "batched publish must share allocations too"
+            );
+        }
+    }
+
+    #[test]
+    fn poll_timeout_blocks_instead_of_spinning() {
+        let (hub, _, _) = DistroStreamHub::embedded("main");
+        let s = hub.object_stream::<u64>(Some("idle")).unwrap();
+        let _ = s.poll().unwrap(); // register the consumer
+        let before = hub.stream_counters(s.id()).fetches;
+        let t0 = Instant::now();
+        assert!(s.poll_timeout(Duration::from_millis(300)).unwrap().is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(300));
+        let spent = hub.stream_counters(s.id()).fetches - before;
+        assert!(
+            spent <= 2,
+            "an idle embedded poll_timeout must park, not spin: {spent} fetches"
+        );
+    }
+
+    #[test]
+    fn lingered_flush_wakes_a_blocked_consumer() {
+        let (hub, reg, core) = DistroStreamHub::embedded("producer");
+        let hub_c = DistroStreamHub::attach_embedded("consumer", &reg, &core);
+        let p = hub
+            .object_stream_tuned::<u64>(
+                Some("linger-wake"),
+                1,
+                ConsumerMode::ExactlyOnce,
+                crate::dstream::BatchPolicy::default().linger_ms(60_000),
+            )
+            .unwrap();
+        let c = hub_c.object_stream::<u64>(Some("linger-wake")).unwrap();
+        let waiter = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let got = c.poll_timeout(Duration::from_secs(10)).unwrap();
+            (got, t0.elapsed())
+        });
+        p.publish(&1).unwrap();
+        p.publish(&2).unwrap(); // both buffered by the linger
+        std::thread::sleep(Duration::from_millis(20));
+        p.flush().unwrap(); // the flush is a publish batch → wakes the waiter
+        let (mut got, waited) = waiter.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        assert!(waited < Duration::from_secs(5), "flush must wake the blocked poll");
     }
 
     #[test]
@@ -539,12 +636,14 @@ mod tests {
                 crate::dstream::BatchPolicy::default().bytes(64),
             )
             .unwrap();
-        // Each item encodes to 4 + 30 = 34 bytes → 64-byte budget fits one.
-        s.publish_list(&vec![Blob(vec![7u8; 30]); 4]).unwrap();
+        // Blob items ride the stream raw (no length prefix): each record
+        // is exactly 30 payload bytes → a 64-byte budget fits two.
+        s.publish_list(&vec![Blob::new(vec![7u8; 30]); 4]).unwrap();
         let mut seen = 0;
         while seen < 4 {
             let got = s.poll().unwrap();
-            assert!(got.len() <= 1, "byte budget allows at most one item");
+            assert!(got.len() <= 2, "64-byte budget allows at most two 30-byte items");
+            assert!(!got.is_empty(), "byte-capped poll starved");
             seen += got.len();
         }
         assert!(s.poll().unwrap().is_empty());

@@ -23,7 +23,17 @@ pub enum DsRequest {
     CloseProducer { id: StreamId, name: String },
     CloseStream { id: StreamId },
     IsClosed { id: StreamId },
-    PollFiles { id: StreamId, candidates: Vec<String>, max: usize },
+    /// FDS dedup poll. `wait_ms > 0` long-polls: the server parks the
+    /// request until a producer announces a new file (see
+    /// [`DsRequest::AnnounceFile`]) or the deadline passes, instead of the
+    /// client sleeping between rescans.
+    PollFiles { id: StreamId, candidates: Vec<String>, max: usize, wait_ms: u64 },
+    /// A producer announces a freshly published file (canonical path).
+    /// Wakes every consumer parked in a long-poll `PollFiles` — the FDS
+    /// face of the notification plane. Out-of-band writes (files dropped
+    /// into the directory without this frame) are still found by the
+    /// consumers' rescans when their wait ticks over.
+    AnnounceFile { id: StreamId, path: String },
     Info { id: StreamId },
     Unregister { id: StreamId },
     Shutdown,
@@ -64,11 +74,17 @@ impl Wire for DsRequest {
                 w.put_u8(6);
                 id.encode(w);
             }
-            DsRequest::PollFiles { id, candidates, max } => {
+            DsRequest::PollFiles { id, candidates, max, wait_ms } => {
                 w.put_u8(7);
                 id.encode(w);
                 candidates.encode(w);
                 max.encode(w);
+                wait_ms.encode(w);
+            }
+            DsRequest::AnnounceFile { id, path } => {
+                w.put_u8(11);
+                id.encode(w);
+                path.encode(w);
             }
             DsRequest::Info { id } => {
                 w.put_u8(8);
@@ -102,10 +118,12 @@ impl Wire for DsRequest {
                 id: Wire::decode(r)?,
                 candidates: Wire::decode(r)?,
                 max: Wire::decode(r)?,
+                wait_ms: Wire::decode(r)?,
             },
             8 => DsRequest::Info { id: Wire::decode(r)? },
             9 => DsRequest::Unregister { id: Wire::decode(r)? },
             10 => DsRequest::Shutdown,
+            11 => DsRequest::AnnounceFile { id: Wire::decode(r)?, path: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "DsRequest" }),
         })
     }
@@ -212,7 +230,8 @@ mod tests {
             DsRequest::CloseProducer { id: 1, name: "p".into() },
             DsRequest::CloseStream { id: 1 },
             DsRequest::IsClosed { id: 1 },
-            DsRequest::PollFiles { id: 1, candidates: vec!["x".into()], max: 64 },
+            DsRequest::PollFiles { id: 1, candidates: vec!["x".into()], max: 64, wait_ms: 100 },
+            DsRequest::AnnounceFile { id: 1, path: "/gpfs/exp1/x.dat".into() },
             DsRequest::Info { id: 1 },
             DsRequest::Unregister { id: 1 },
             DsRequest::Shutdown,

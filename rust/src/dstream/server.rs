@@ -10,18 +10,26 @@
 //! [`StreamRegistry`] is the pure state machine; [`DistroStreamServer`]
 //! serves it over TCP with the same framed protocol style as the broker.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use log::{debug, warn};
 
-use crate::util::wire::{recv_msg, send_msg};
+use crate::util::wire::{recv_msg_patient, send_msg};
 
 use super::api::{ConsumerMode, StreamId, StreamType};
 use super::protocol::{DsRequest, DsResponse, StreamInfoWire};
+
+/// Server-side clamp on one `PollFiles` long-poll park (see the broker's
+/// `MAX_SERVER_WAIT_MS` — same rationale: bound shutdown latency).
+pub const MAX_FILES_WAIT_MS: u64 = 5_000;
+
+/// Read timeout on connection sockets (stop-flag granularity).
+const CONN_READ_TIMEOUT: Duration = Duration::from_millis(100);
 
 /// Registered state of one stream.
 #[derive(Debug, Clone)]
@@ -42,6 +50,12 @@ pub struct StreamEntry {
     pub closed: bool,
     /// FDS: file paths already delivered to some consumer.
     pub delivered_files: HashSet<String>,
+    /// FDS: paths announced by producers ([`DsRequest::AnnounceFile`]) but
+    /// not yet delivered. Merged into every poll's candidate set so a
+    /// parked consumer can be handed a file the moment it is announced,
+    /// before its own directory rescan would find it. Sorted for
+    /// deterministic delivery order.
+    pub announced_files: BTreeSet<String>,
 }
 
 impl StreamEntry {
@@ -63,6 +77,10 @@ pub struct StreamRegistry {
     streams: HashMap<StreamId, StreamEntry>,
     by_alias: HashMap<String, StreamId>,
     next_id: StreamId,
+    /// Wakes consumers parked in a long-poll `PollFiles` when a producer
+    /// announces a file (or a stream closes). Lives behind an `Arc` so
+    /// [`dispatch`] can wait on it with the registry's own `Mutex` guard.
+    files_cv: Arc<Condvar>,
 }
 
 impl StreamRegistry {
@@ -104,9 +122,16 @@ impl StreamRegistry {
                 closed_producers: HashSet::new(),
                 closed: false,
                 delivered_files: HashSet::new(),
+                announced_files: BTreeSet::new(),
             },
         );
         id
+    }
+
+    /// The condvar long-poll `PollFiles` parks on (cloned out so the
+    /// registry guard can be handed back to `Condvar::wait_timeout`).
+    pub fn files_condvar(&self) -> Arc<Condvar> {
+        Arc::clone(&self.files_cv)
     }
 
     fn entry_mut(&mut self, id: StreamId) -> Option<&mut StreamEntry> {
@@ -147,6 +172,9 @@ impl StreamRegistry {
                 e.producers.insert(name.to_string());
                 e.closed_producers.insert(name.to_string());
                 e.closed_check();
+                // Close may end a consumer's wait-for-more loop: wake any
+                // parked file polls so they re-check promptly.
+                self.files_cv.notify_all();
                 true
             }
             None => false,
@@ -158,6 +186,22 @@ impl StreamRegistry {
         match self.entry_mut(id) {
             Some(e) => {
                 e.closed = true;
+                self.files_cv.notify_all();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// FDS: a producer announces a freshly published (canonical) path.
+    /// Paths already delivered are ignored. Wakes parked file polls.
+    pub fn announce_file(&mut self, id: StreamId, path: &str) -> bool {
+        match self.entry_mut(id) {
+            Some(e) => {
+                if !e.delivered_files.contains(path) {
+                    e.announced_files.insert(path.to_string());
+                }
+                self.files_cv.notify_all();
                 true
             }
             None => false,
@@ -169,7 +213,8 @@ impl StreamRegistry {
         self.streams.get(&id).map(|e| e.closed)
     }
 
-    /// FDS dedup: of `candidates`, return (and mark) up to `max` of the
+    /// FDS dedup: of `candidates` (the caller's directory scan) plus any
+    /// producer-announced paths, return (and mark) up to `max` of the
     /// not-yet-delivered paths. Greedy first-poller-wins, mirroring ODS
     /// shared consumption; candidates beyond the cap stay undelivered so a
     /// later (or another consumer's) poll can claim them — the FDS face of
@@ -187,7 +232,17 @@ impl StreamRegistry {
                 break;
             }
             if e.delivered_files.insert(c.clone()) {
+                e.announced_files.remove(&c);
                 fresh.push(c);
+            }
+        }
+        // Announced-but-unscanned paths fill the remaining budget: this is
+        // what hands a parked consumer a file the instant a producer
+        // announces it.
+        while fresh.len() < max {
+            let Some(a) = e.announced_files.pop_first() else { break };
+            if e.delivered_files.insert(a.clone()) {
+                fresh.push(a);
             }
         }
         Some(fresh)
@@ -240,12 +295,35 @@ pub fn dispatch(reg: &Mutex<StreamRegistry>, req: DsRequest) -> DsResponse {
             Some(b) => A::Bool(b),
             None => A::Unknown(id),
         },
-        Q::PollFiles { id, candidates, max } => {
-            match reg.lock().unwrap().poll_files(id, candidates, max) {
-                Some(fresh) => A::Files(fresh),
-                None => A::Unknown(id),
+        Q::PollFiles { id, candidates, max, wait_ms } => {
+            // Long-poll: hold the registry guard from check through park
+            // (the condvar releases it while waiting), so an announce can
+            // never slip between "nothing fresh" and the wait — no lost
+            // wakeups. Clamped like the broker's fetch wait.
+            let deadline = Instant::now() + Duration::from_millis(wait_ms.min(MAX_FILES_WAIT_MS));
+            // The candidate scan is consumed by the first check: delivered
+            // paths never become fresh again, so wakeup rechecks only need
+            // the announced set — don't re-probe thousands of scanned
+            // paths under the registry lock on every announce.
+            let mut candidates = candidates;
+            let mut guard = reg.lock().unwrap();
+            loop {
+                match guard.poll_files(id, std::mem::take(&mut candidates), max) {
+                    None => return A::Unknown(id),
+                    Some(fresh) if !fresh.is_empty() => return A::Files(fresh),
+                    Some(fresh) => {
+                        let Some(remaining) = deadline.checked_duration_since(Instant::now())
+                        else {
+                            return A::Files(fresh); // expired: empty, no spin
+                        };
+                        let cv = guard.files_condvar();
+                        let (g, _) = cv.wait_timeout(guard, remaining).unwrap();
+                        guard = g;
+                    }
+                }
             }
         }
+        Q::AnnounceFile { id, path } => bool_resp(reg.lock().unwrap().announce_file(id, &path), id),
         Q::Info { id } => {
             let reg = reg.lock().unwrap();
             match reg.entry(id) {
@@ -348,10 +426,13 @@ impl Drop for DistroStreamServer {
 }
 
 fn handle_conn(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
+    // Read timeout + patient recv: the loop polls the stop flag between
+    // frames, so shutdown no longer leaks threads blocked on idle peers.
+    let _ = sock.set_read_timeout(Some(CONN_READ_TIMEOUT));
     loop {
-        let req: DsRequest = match recv_msg(&mut sock) {
+        let req: DsRequest = match recv_msg_patient(&mut sock, || !stop.load(Ordering::SeqCst)) {
             Ok(Some(r)) => r,
-            Ok(None) => break,
+            Ok(None) => break, // clean close, or stop requested while idle
             Err(e) => {
                 debug!("dstream conn read error: {e}");
                 break;
@@ -372,6 +453,7 @@ fn handle_conn(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, mut sock:
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::wire::recv_msg;
 
     fn reg() -> StreamRegistry {
         StreamRegistry::new()
@@ -440,6 +522,57 @@ mod tests {
         assert_eq!(r.poll_files(id, all.clone(), 2).unwrap(), vec!["f2", "f3"]);
         assert_eq!(r.poll_files(id, all.clone(), 2).unwrap(), vec!["f4"]);
         assert!(r.poll_files(id, all, 2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn announced_files_deliver_once_through_either_path() {
+        let mut r = reg();
+        let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
+        assert!(r.announce_file(id, "/d/a"));
+        // Announced path delivers even without appearing in the scan.
+        assert_eq!(r.poll_files(id, vec![], usize::MAX).unwrap(), vec!["/d/a".to_string()]);
+        // ... and never again, from announce or scan.
+        assert!(r.announce_file(id, "/d/a"));
+        assert!(r.poll_files(id, vec!["/d/a".into()], usize::MAX).unwrap().is_empty());
+        // Scan-delivered paths clear a pending announce too.
+        assert!(r.announce_file(id, "/d/b"));
+        assert_eq!(r.poll_files(id, vec!["/d/b".into()], usize::MAX).unwrap().len(), 1);
+        assert!(r.poll_files(id, vec![], usize::MAX).unwrap().is_empty());
+        assert!(!r.announce_file(99, "/d/x"), "unknown stream");
+    }
+
+    #[test]
+    fn long_poll_files_parks_until_announce() {
+        let registry = Arc::new(Mutex::new(StreamRegistry::new()));
+        let id = registry.lock().unwrap().register(
+            None,
+            StreamType::File,
+            1,
+            Some("/d".into()),
+            ConsumerMode::ExactlyOnce,
+        );
+        // Expiry: empty answer after ~the wait, not an instant empty.
+        let t0 = Instant::now();
+        let resp = dispatch(
+            &registry,
+            DsRequest::PollFiles { id, candidates: vec![], max: usize::MAX, wait_ms: 30 },
+        );
+        assert_eq!(resp, DsResponse::Files(vec![]));
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        // Announce from another thread wakes the parked poll early.
+        let reg2 = Arc::clone(&registry);
+        let announcer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            dispatch(&reg2, DsRequest::AnnounceFile { id, path: "/d/late".into() });
+        });
+        let t0 = Instant::now();
+        let resp = dispatch(
+            &registry,
+            DsRequest::PollFiles { id, candidates: vec![], max: usize::MAX, wait_ms: 5_000 },
+        );
+        assert_eq!(resp, DsResponse::Files(vec!["/d/late".into()]));
+        assert!(t0.elapsed() < Duration::from_secs(4), "woken by announce, not deadline");
+        announcer.join().unwrap();
     }
 
     #[test]

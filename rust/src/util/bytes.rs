@@ -4,6 +4,8 @@
 //! [`DecodeError`] so corrupt frames never panic the runtime.
 
 use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
 
 /// Error produced when decoding runs past the buffer or finds bad data.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -39,6 +41,105 @@ impl std::error::Error for DecodeError {}
 
 /// Sanity cap for decoded collection/string/byte lengths (1 GiB).
 pub const MAX_LEN: u64 = 1 << 30;
+
+/// Immutable byte buffer that is **O(1) to clone** (`Arc`-backed).
+///
+/// The streaming hot path stores every payload exactly once: a producer's
+/// `Vec<u8>` is wrapped (not copied) at construction, the partition log,
+/// every consumer-group fetch and the typed decode on the embedded backend
+/// all share the same allocation. Dereferences to `[u8]`, so slice methods
+/// and indexing work directly.
+#[derive(Clone, Default)]
+pub struct SharedBytes(Arc<Vec<u8>>);
+
+impl SharedBytes {
+    /// Wrap a buffer without copying it.
+    pub fn new(bytes: Vec<u8>) -> Self {
+        Self(Arc::new(bytes))
+    }
+
+    /// Share an existing `Arc` allocation (zero-copy hand-off from stores
+    /// that already keep `Arc<Vec<u8>>`, e.g. the worker data registry).
+    pub fn from_arc(bytes: Arc<Vec<u8>>) -> Self {
+        Self(bytes)
+    }
+
+    /// Borrow the underlying `Arc` (for stores that keep `Arc<Vec<u8>>`).
+    pub fn as_arc(&self) -> &Arc<Vec<u8>> {
+        &self.0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// True when both handles share one allocation — the zero-copy
+    /// property the embedded data plane is tested against.
+    pub fn ptr_eq(&self, other: &SharedBytes) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+impl Deref for SharedBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl From<Vec<u8>> for SharedBytes {
+    fn from(v: Vec<u8>) -> Self {
+        Self::new(v)
+    }
+}
+
+impl From<&[u8]> for SharedBytes {
+    fn from(v: &[u8]) -> Self {
+        Self::new(v.to_vec())
+    }
+}
+
+impl PartialEq for SharedBytes {
+    fn eq(&self, other: &Self) -> bool {
+        // Content equality (identity is `ptr_eq`); skip the compare when
+        // both handles share one allocation.
+        self.ptr_eq(other) || self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SharedBytes {}
+
+impl PartialOrd for SharedBytes {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SharedBytes {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.as_slice().cmp(other.as_slice())
+    }
+}
+
+impl std::hash::Hash for SharedBytes {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state);
+    }
+}
+
+impl fmt::Debug for SharedBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
 
 /// Append-only byte buffer with fixed-width little-endian put methods.
 #[derive(Default, Debug, Clone)]
@@ -281,5 +382,36 @@ mod tests {
         let buf = w.into_vec();
         let mut r = ByteReader::new(&buf);
         assert!(matches!(r.get_bytes(), Err(DecodeError::TooLong { .. })));
+    }
+
+    #[test]
+    fn shared_bytes_clone_is_zero_copy() {
+        let a = SharedBytes::new(vec![1, 2, 3]);
+        let b = a.clone();
+        assert!(a.ptr_eq(&b), "clone must share the allocation");
+        assert_eq!(a, b);
+        // A content-equal but separately-allocated buffer is == but not
+        // pointer-identical.
+        let c = SharedBytes::new(vec![1, 2, 3]);
+        assert_eq!(a, c);
+        assert!(!a.ptr_eq(&c));
+    }
+
+    #[test]
+    fn shared_bytes_derefs_to_slice() {
+        let a = SharedBytes::new(vec![9, 8, 7]);
+        assert_eq!(a[0], 9);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.iter().copied().max(), Some(9));
+        assert_eq!(&a[1..], &[8, 7]);
+        assert!(SharedBytes::default().is_empty());
+    }
+
+    #[test]
+    fn shared_bytes_orders_by_content() {
+        let a = SharedBytes::new(vec![1]);
+        let b = SharedBytes::new(vec![2]);
+        assert!(a < b);
+        assert_eq!(a.cmp(&a.clone()), std::cmp::Ordering::Equal);
     }
 }

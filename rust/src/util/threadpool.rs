@@ -4,8 +4,7 @@
 //! worker executors (one pool per worker, size = core slots — a pool slot
 //! *is* a core in the paper's resource model).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -20,7 +19,9 @@ pub struct ThreadPool {
     tx: mpsc::Sender<Message>,
     handles: Vec<JoinHandle<()>>,
     size: usize,
-    in_flight: Arc<AtomicUsize>,
+    /// Jobs queued or running, paired with the idle `Condvar` that
+    /// [`ThreadPool::wait_idle`] parks on (no sleep-spin).
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
 }
 
 impl ThreadPool {
@@ -29,7 +30,7 @@ impl ThreadPool {
         assert!(size > 0, "pool needs at least one thread");
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
         let mut handles = Vec::with_capacity(size);
         for i in 0..size {
             let rx = Arc::clone(&rx);
@@ -41,7 +42,12 @@ impl ThreadPool {
                     match msg {
                         Ok(Message::Run(job)) => {
                             job();
-                            in_flight.fetch_sub(1, Ordering::SeqCst);
+                            let (count, idle) = &*in_flight;
+                            let mut n = count.lock().unwrap();
+                            *n -= 1;
+                            if *n == 0 {
+                                idle.notify_all();
+                            }
                         }
                         Ok(Message::Shutdown) | Err(_) => break,
                     }
@@ -59,19 +65,22 @@ impl ThreadPool {
 
     /// Jobs queued or running.
     pub fn in_flight(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+        *self.in_flight.0.lock().unwrap()
     }
 
     /// Enqueue a job. Panics if the pool is shut down.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        *self.in_flight.0.lock().unwrap() += 1;
         self.tx.send(Message::Run(Box::new(job))).expect("pool shut down");
     }
 
-    /// Busy-wait (with parking) until all submitted jobs completed.
+    /// Block until all submitted jobs completed — parked on the idle
+    /// `Condvar`, woken by the worker that finishes the last job.
     pub fn wait_idle(&self) {
-        while self.in_flight() > 0 {
-            std::thread::sleep(std::time::Duration::from_micros(100));
+        let (count, idle) = &*self.in_flight;
+        let mut n = count.lock().unwrap();
+        while *n > 0 {
+            n = idle.wait(n).unwrap();
         }
     }
 
@@ -100,7 +109,7 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -134,6 +143,20 @@ mod tests {
         }
         pool.wait_idle();
         assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn wait_idle_parks_and_wakes_promptly() {
+        let pool = ThreadPool::new("t", 2);
+        // Idle pool: returns immediately.
+        let t0 = std::time::Instant::now();
+        pool.wait_idle();
+        assert!(t0.elapsed() < std::time::Duration::from_millis(50));
+        // Busy pool: wakes when the last job finishes, not on a poll tick.
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(20)));
+        pool.wait_idle();
+        assert_eq!(pool.in_flight(), 0);
+        pool.shutdown();
     }
 
     #[test]

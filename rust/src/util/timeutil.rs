@@ -76,6 +76,19 @@ pub fn human_duration(d: Duration) -> String {
     }
 }
 
+/// Milliseconds of `d`, rounded **up**. Long-poll waits must use this
+/// instead of `as_millis()` truncation: a sub-millisecond remainder that
+/// truncates to 0 turns the final slice of a blocking wait into a
+/// non-blocking busy-spin.
+pub fn ceil_ms(d: Duration) -> u64 {
+    let ms = d.as_millis() as u64;
+    if Duration::from_millis(ms) < d {
+        ms + 1
+    } else {
+        ms
+    }
+}
+
 /// `12.3 MB/s` style throughput formatting.
 pub fn human_rate(bytes: u64, d: Duration) -> String {
     let bps = bytes as f64 / d.as_secs_f64().max(1e-9);
@@ -163,5 +176,13 @@ mod tests {
         let sw = Stopwatch::start();
         std::thread::sleep(Duration::from_millis(2));
         assert!(sw.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn ceil_ms_rounds_up_subms_remainders() {
+        assert_eq!(ceil_ms(Duration::ZERO), 0);
+        assert_eq!(ceil_ms(Duration::from_millis(5)), 5);
+        assert_eq!(ceil_ms(Duration::from_micros(1)), 1, "sub-ms must not truncate to 0");
+        assert_eq!(ceil_ms(Duration::from_micros(5_200)), 6);
     }
 }

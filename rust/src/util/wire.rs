@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
-use crate::util::bytes::{ByteReader, ByteWriter, DecodeError, MAX_LEN};
+use crate::util::bytes::{ByteReader, ByteWriter, DecodeError, SharedBytes, MAX_LEN};
 
 /// Binary encode/decode. Implementations must round-trip:
 /// `T::decode(&T::encode_vec(v)) == v`.
@@ -158,15 +158,63 @@ impl Wire for () {
 
 /// Raw byte payloads: encoded length-prefixed (distinct from `Vec<u8>` which
 /// would also work but costs per-element dispatch in debug builds).
+///
+/// `Arc`-backed ([`SharedBytes`]): cloning a `Blob` shares the allocation,
+/// so the embedded broker hot path (`publish → PartitionLog → fetch_many →
+/// poll`) moves **zero** payload bytes. The wire codec is where the single
+/// unavoidable copy of the TCP path happens (encode into the frame, decode
+/// out of it). Dereferences to `[u8]`.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
-pub struct Blob(pub Vec<u8>);
+pub struct Blob(pub SharedBytes);
+
+impl Blob {
+    /// Wrap a buffer without copying it.
+    pub fn new(bytes: Vec<u8>) -> Self {
+        Blob(SharedBytes::new(bytes))
+    }
+
+    /// Share an existing `Arc<Vec<u8>>` allocation (zero-copy).
+    pub fn from_arc(bytes: std::sync::Arc<Vec<u8>>) -> Self {
+        Blob(SharedBytes::from_arc(bytes))
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        self.0.as_slice()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// True when both blobs share one allocation (the zero-copy witness).
+    pub fn ptr_eq(&self, other: &Blob) -> bool {
+        self.0.ptr_eq(&other.0)
+    }
+}
+
+impl std::ops::Deref for Blob {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl From<Vec<u8>> for Blob {
+    fn from(v: Vec<u8>) -> Self {
+        Blob::new(v)
+    }
+}
 
 impl Wire for Blob {
     fn encode(&self, w: &mut ByteWriter) {
         w.put_bytes(&self.0);
     }
     fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
-        Ok(Blob(r.get_bytes()?.to_vec()))
+        Ok(Blob::new(r.get_bytes()?.to_vec()))
     }
 }
 
@@ -203,13 +251,55 @@ pub fn write_frame<W: Write>(sock: &mut W, payload: &[u8]) -> std::io::Result<()
 }
 
 /// Read one length-prefixed frame. Returns `None` on clean EOF at a frame
-/// boundary (peer closed).
+/// boundary (peer closed). One framing implementation exists — this is
+/// [`read_frame_patient`] with an always-keep-going policy (blocking
+/// sockets never surface `WouldBlock`).
 pub fn read_frame<R: Read>(sock: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    read_frame_patient(sock, || true)
+}
+
+/// Read one length-prefixed frame over a socket with a read timeout,
+/// preserving partial-read state across timeouts so a slow peer never
+/// desynchronises the framing. `keep_going()` is consulted on every
+/// timeout tick: returning `false` between frames yields `Ok(None)` (treat
+/// like a clean close — this is how server connection threads honour a
+/// stop flag); returning `false` mid-frame is a `TimedOut` error.
+pub fn read_frame_patient<R: Read>(
+    sock: &mut R,
+    mut keep_going: impl FnMut() -> bool,
+) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::ErrorKind;
     let mut len_buf = [0u8; 4];
-    match sock.read_exact(&mut len_buf) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e),
+    let mut got = 0usize;
+    while got < 4 {
+        match sock.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None) // clean EOF at a frame boundary
+                } else {
+                    Err(std::io::Error::new(
+                        ErrorKind::UnexpectedEof,
+                        "peer closed mid frame header",
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if !keep_going() {
+                    return if got == 0 {
+                        Ok(None) // stop requested between frames
+                    } else {
+                        Err(std::io::Error::new(ErrorKind::TimedOut, "stopped mid frame"))
+                    };
+                }
+            }
+            Err(e) => return Err(e),
+        }
     }
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
@@ -219,8 +309,44 @@ pub fn read_frame<R: Read>(sock: &mut R) -> std::io::Result<Option<Vec<u8>>> {
         ));
     }
     let mut payload = vec![0u8; len];
-    sock.read_exact(&mut payload)?;
+    let mut got = 0usize;
+    while got < len {
+        match sock.read(&mut payload[got..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "peer closed mid frame body",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if !keep_going() {
+                    return Err(std::io::Error::new(ErrorKind::TimedOut, "stopped mid frame"));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
     Ok(Some(payload))
+}
+
+/// [`recv_msg`] over [`read_frame_patient`]: survives read timeouts and
+/// lets the caller bail out between frames via `keep_going`.
+pub fn recv_msg_patient<R: Read, T: Wire>(
+    sock: &mut R,
+    keep_going: impl FnMut() -> bool,
+) -> std::io::Result<Option<T>> {
+    match read_frame_patient(sock, keep_going)? {
+        None => Ok(None),
+        Some(buf) => T::decode_exact(&buf)
+            .map(Some)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
+    }
 }
 
 /// Send a `Wire` message as one frame.
@@ -308,7 +434,82 @@ mod tests {
 
     #[test]
     fn blob_roundtrip() {
-        let b = Blob(vec![0u8; 1024]);
+        let b = Blob::new(vec![0u8; 1024]);
         assert_eq!(Blob::decode_exact(&b.encode_vec()).unwrap(), b);
+    }
+
+    #[test]
+    fn blob_clone_shares_the_allocation() {
+        let b = Blob::new(vec![1, 2, 3]);
+        let c = b.clone();
+        assert!(b.ptr_eq(&c), "Blob clone must be an Arc clone, not a copy");
+        assert_eq!(b[0], 1);
+        assert_eq!(b.len(), 3);
+        // The wire roundtrip is where the one copy happens.
+        let d = Blob::decode_exact(&b.encode_vec()).unwrap();
+        assert_eq!(b, d);
+        assert!(!b.ptr_eq(&d));
+    }
+
+    /// A reader that delivers one byte per call and reports a read timeout
+    /// (`WouldBlock`) on every other call — a socket with a short
+    /// `set_read_timeout` and a slow peer.
+    struct Choppy {
+        data: Vec<u8>,
+        pos: usize,
+        starve: bool,
+        /// Past the data: `true` reports clean EOF, `false` keeps timing
+        /// out (a silent but alive peer).
+        eof: bool,
+    }
+
+    impl std::io::Read for Choppy {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.starve = !self.starve;
+            if self.starve {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "tick"));
+            }
+            if self.pos >= self.data.len() {
+                return if self.eof {
+                    Ok(0)
+                } else {
+                    Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "silent"))
+                };
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn patient_read_survives_timeouts() {
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"hello").unwrap();
+        let mut sock = Choppy { data: framed, pos: 0, starve: false, eof: true };
+        let got = read_frame_patient(&mut sock, || true).unwrap();
+        assert_eq!(got.unwrap(), b"hello", "partial reads must not desync the framing");
+        // Clean EOF after the frame.
+        assert!(read_frame_patient(&mut sock, || true).unwrap().is_none());
+    }
+
+    #[test]
+    fn patient_read_honours_stop_between_frames() {
+        // Stop requested while no frame is in flight: treated as a close.
+        let mut idle = Choppy { data: Vec::new(), pos: 0, starve: false, eof: false };
+        assert!(read_frame_patient(&mut idle, || false).unwrap().is_none());
+
+        // Stop requested mid-frame: an error, never a silent truncation.
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"hello").unwrap();
+        framed.truncate(6); // header + one body byte, then starvation
+        let mut sock = Choppy { data: framed, pos: 0, starve: false, eof: false };
+        let mut ticks = 0;
+        let err = read_frame_patient(&mut sock, || {
+            ticks += 1;
+            ticks < 8 // give up after a few timeout ticks
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
     }
 }

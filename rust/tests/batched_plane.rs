@@ -67,7 +67,7 @@ fn byte_budgeted_fetch_many_equivalent_over_both_backends() {
 #[test]
 fn ods_batched_and_single_paths_deliver_the_same_items() {
     let (hub, _, _) = DistroStreamHub::embedded("equiv");
-    let items: Vec<Blob> = (0..64u8).map(|i| Blob(vec![i; 3])).collect();
+    let items: Vec<Blob> = (0..64u8).map(|i| Blob::new(vec![i; 3])).collect();
 
     let singles = hub.object_stream::<Blob>(Some("singles")).unwrap();
     for i in &items {
@@ -98,7 +98,7 @@ fn batch_policy_rides_stream_parameters_into_tasks() {
         let mut total = 0u64;
         loop {
             let closed = s.is_closed();
-            let items = s.poll()?;
+            let items = s.poll_timeout(std::time::Duration::from_millis(5))?;
             if items.len() > 3 {
                 anyhow::bail!("poll exceeded the handle's max_records: {}", items.len());
             }
@@ -106,7 +106,6 @@ fn batch_policy_rides_stream_parameters_into_tasks() {
             if items.is_empty() && closed {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(200));
         }
         ctx.set_output_as(1, &total);
         Ok(())
@@ -155,12 +154,11 @@ fn lingered_producer_task_flushes_on_close() {
         let mut sum = 0u64;
         loop {
             let closed = s.is_closed();
-            let items = s.poll()?;
+            let items = s.poll_timeout(std::time::Duration::from_millis(5))?;
             sum += items.iter().sum::<u64>();
             if items.is_empty() && closed {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(200));
         }
         ctx.set_output_as(1, &sum);
         Ok(())
@@ -215,12 +213,11 @@ fn remote_worker_polls_through_the_batched_wire_path() {
         let mut sum = 0u64;
         loop {
             let closed = s.is_closed();
-            let items = s.poll()?;
+            let items = s.poll_timeout(std::time::Duration::from_millis(5))?;
             sum += items.iter().sum::<u64>();
             if items.is_empty() && closed {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(300));
         }
         ctx.set_output_as(1, &sum);
         Ok(())
@@ -254,4 +251,85 @@ fn remote_worker_polls_through_the_batched_wire_path() {
     rt.shutdown().unwrap();
     drop(rt);
     let _ = worker.join().unwrap();
+}
+
+// ---- wakeup plane ----------------------------------------------------------
+
+/// Consumer parked in `poll_timeout` must wake promptly when a producer
+/// publishes — on the embedded backend (Condvar) and over TCP (the server
+/// parks the `FetchMany` frame).
+fn assert_prompt_wakeup(
+    consumer: hybridws::dstream::ObjectDistroStream<u64>,
+    producer: hybridws::dstream::ObjectDistroStream<u64>,
+) {
+    use std::time::{Duration, Instant};
+    let waiter = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let items = consumer.poll_timeout(Duration::from_secs(10)).unwrap();
+        (items, t0.elapsed())
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    producer.publish(&42).unwrap();
+    let (items, waited) = waiter.join().unwrap();
+    assert_eq!(items, vec![42]);
+    assert!(
+        waited < Duration::from_secs(5),
+        "poll_timeout must wake on publish, not at the deadline (waited {waited:?})"
+    );
+}
+
+#[test]
+fn poll_timeout_wakes_promptly_embedded() {
+    let (hub_c, reg, core) = DistroStreamHub::embedded("consumer");
+    let hub_p = DistroStreamHub::attach_embedded("producer", &reg, &core);
+    let c = hub_c.object_stream::<u64>(Some("wake")).unwrap();
+    let p = hub_p.object_stream::<u64>(Some("wake")).unwrap();
+    assert_prompt_wakeup(c, p);
+}
+
+#[test]
+fn poll_timeout_wakes_promptly_over_tcp() {
+    use hybridws::dstream::DistroStreamServer;
+    let ds = DistroStreamServer::start("127.0.0.1:0").unwrap();
+    let broker = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let ds_addr = ds.addr.to_string();
+    let b_addr = broker.addr.to_string();
+    let hub_c = DistroStreamHub::connect("consumer", &ds_addr, &b_addr).unwrap();
+    let hub_p = DistroStreamHub::connect("producer", &ds_addr, &b_addr).unwrap();
+    let c = hub_c.object_stream::<u64>(Some("wake-tcp")).unwrap();
+    let p = hub_p.object_stream::<u64>(Some("wake-tcp")).unwrap();
+    assert_prompt_wakeup(c, p);
+    broker.shutdown();
+    ds.shutdown();
+}
+
+#[test]
+fn poll_timeout_expires_empty_without_redelivery() {
+    use std::time::{Duration, Instant};
+    let (hub, _, _) = DistroStreamHub::embedded("main");
+    let s = hub.object_stream::<u64>(Some("expire")).unwrap();
+    let t0 = Instant::now();
+    assert!(s.poll_timeout(Duration::from_millis(80)).unwrap().is_empty());
+    assert!(t0.elapsed() >= Duration::from_millis(80), "must wait out the timeout");
+    // The expired wait must not have consumed anything: a publish after it
+    // delivers exactly once.
+    s.publish(&9).unwrap();
+    assert_eq!(s.poll_timeout(Duration::from_secs(2)).unwrap(), vec![9]);
+    assert!(s.poll().unwrap().is_empty(), "no redelivery after the wakeup");
+}
+
+#[test]
+fn poll_timeout_blocks_instead_of_spinning() {
+    use std::time::Duration;
+    let (hub, _, _) = DistroStreamHub::embedded("main");
+    let s = hub.object_stream::<u64>(Some("no-spin")).unwrap();
+    let _ = s.poll().unwrap(); // register consumer (1 fetch)
+    let before = hub.stream_counters(s.id()).fetches;
+    assert!(s.poll_timeout(Duration::from_secs(1)).unwrap().is_empty());
+    let spent = hub.stream_counters(s.id()).fetches - before;
+    assert!(
+        spent <= 2,
+        "an idle 1 s poll_timeout must cost ≤2 fetch round trips (parked, \
+         not spinning); old spin loop cost ~2000. got {spent}"
+    );
 }
