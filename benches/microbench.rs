@@ -341,41 +341,10 @@ fn bench_stream_plane(smoke: bool) {
     let records_per_s = n as f64 / t0.elapsed().as_secs_f64();
 
     // --- publish→wakeup latency -----------------------------------------
-    // The consumer parks in poll_timeout; the producer stamps t0 right
-    // before each publish and sends it over a channel the consumer reads
-    // *after* receiving the item (same process, same clock).
     let rounds = if smoke { 100 } else { 1_000 };
     let (hub_p, reg, core) = DistroStreamHub::embedded("plane-prod");
     let hub_c = DistroStreamHub::attach_embedded("plane-cons", &reg, &core);
-    let p = hub_p.object_stream::<u64>(Some("plane-lat")).unwrap();
-    let c = hub_c.object_stream::<u64>(Some("plane-lat")).unwrap();
-    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
-    let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<Instant>();
-    let consumer = std::thread::spawn(move || {
-        let mut lat_us = Vec::with_capacity(rounds);
-        for _ in 0..rounds {
-            ready_tx.send(()).unwrap();
-            let items = c.poll_timeout(Duration::from_secs(5)).unwrap();
-            let t1 = Instant::now();
-            assert_eq!(items.len(), 1, "one wakeup per publish");
-            let t0 = stamp_rx.recv().unwrap();
-            lat_us.push(t1.duration_since(t0).as_secs_f64() * 1e6);
-        }
-        (lat_us, hub_c.stream_counters(c.id()))
-    });
-    for i in 0..rounds {
-        ready_rx.recv().unwrap();
-        // Give the consumer a moment to actually park (biases the
-        // measurement towards the wakeup path, which is the one we claim).
-        let park = Instant::now();
-        while park.elapsed() < Duration::from_micros(200) {
-            std::hint::spin_loop();
-        }
-        let t0 = Instant::now();
-        p.publish(&(i as u64)).unwrap();
-        stamp_tx.send(t0).unwrap();
-    }
-    let (lat_us, counters) = consumer.join().unwrap();
+    let (lat_us, counters) = publish_wakeup_latencies(hub_p, hub_c, "plane-lat", rounds);
     let p50 = percentile(&lat_us, 50.0);
     let p99 = percentile(&lat_us, 99.0);
     let fetches_per_wakeup = counters.fetches as f64 / rounds as f64;
@@ -407,12 +376,133 @@ fn bench_stream_plane(smoke: bool) {
     println!("\nwrote BENCH_stream_plane.json: {json}\n");
 }
 
+/// Measure embedded publish→wakeup latency: the consumer parks in
+/// `poll_timeout`; the producer stamps t0 right before each publish and
+/// sends it over a channel the consumer reads *after* receiving the item
+/// (same process, same clock). Shared by the stream-plane and persistence
+/// benches (the latter runs it against a disk-mode broker).
+fn publish_wakeup_latencies(
+    hub_p: std::sync::Arc<hybridws::dstream::DistroStreamHub>,
+    hub_c: std::sync::Arc<hybridws::dstream::DistroStreamHub>,
+    alias: &str,
+    rounds: usize,
+) -> (Vec<f64>, hybridws::dstream::StreamCounters) {
+    let p = hub_p.object_stream::<u64>(Some(alias)).unwrap();
+    let c = hub_c.object_stream::<u64>(Some(alias)).unwrap();
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<Instant>();
+    let consumer = std::thread::spawn(move || {
+        let mut lat_us = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            ready_tx.send(()).unwrap();
+            let items = c.poll_timeout(Duration::from_secs(5)).unwrap();
+            let t1 = Instant::now();
+            assert_eq!(items.len(), 1, "one wakeup per publish");
+            let t0 = stamp_rx.recv().unwrap();
+            lat_us.push(t1.duration_since(t0).as_secs_f64() * 1e6);
+        }
+        (lat_us, hub_c.stream_counters(c.id()))
+    });
+    for i in 0..rounds {
+        ready_rx.recv().unwrap();
+        // Give the consumer a moment to actually park (biases the
+        // measurement towards the wakeup path, which is the one we claim).
+        let park = Instant::now();
+        while park.elapsed() < Duration::from_micros(200) {
+            std::hint::spin_loop();
+        }
+        let t0 = Instant::now();
+        p.publish(&(i as u64)).unwrap();
+        stamp_tx.send(t0).unwrap();
+    }
+    consumer.join().unwrap()
+}
+
+/// Durable storage, measured: publish→wakeup latency on a disk-mode broker
+/// next to the memory baseline, batched disk publish throughput, and full
+/// crash-recovery time for `n` records. Emits `BENCH_persistence.json` so
+/// CI accumulates the durability perf trajectory alongside the stream
+/// plane's.
+fn bench_persistence(smoke: bool) {
+    use hybridws::broker::record::ProducerRecord;
+    use hybridws::broker::{AssignmentMode, BrokerConfig, BrokerCore};
+    use hybridws::dstream::DistroStreamHub;
+    use hybridws::util::timeutil::percentile;
+    banner("micro", "durable broker storage: disk vs memory (embedded)");
+
+    let base =
+        std::env::temp_dir().join(format!("hybridws-bench-persist-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let rounds = if smoke { 100 } else { 1_000 };
+
+    // --- publish→wakeup latency, both storage modes ---------------------
+    let (hub_p, reg, core) = DistroStreamHub::embedded("persist-mem-p");
+    let hub_c = DistroStreamHub::attach_embedded("persist-mem-c", &reg, &core);
+    let (mem_lat, _) = publish_wakeup_latencies(hub_p, hub_c, "persist-mem", rounds);
+    let (hub_p, reg, core) = DistroStreamHub::embedded_with(
+        "persist-disk-p",
+        BrokerConfig::disk(base.join("wakeup")),
+    )
+    .unwrap();
+    let hub_c = DistroStreamHub::attach_embedded("persist-disk-c", &reg, &core);
+    let (disk_lat, _) = publish_wakeup_latencies(hub_p, hub_c, "persist-disk", rounds);
+    let (mem_p50, mem_p99) = (percentile(&mem_lat, 50.0), percentile(&mem_lat, 99.0));
+    let (disk_p50, disk_p99) = (percentile(&disk_lat, 50.0), percentile(&disk_lat, 99.0));
+
+    // --- batched publish throughput + crash recovery --------------------
+    let n = if smoke { 10_000 } else { 100_000 };
+    let payload = 100usize;
+    let cfg = BrokerConfig::disk(base.join("recovery"));
+    let t0 = Instant::now();
+    {
+        let b = BrokerCore::with_config(cfg.clone()).unwrap();
+        b.create_topic("r", 4).unwrap();
+        let mut left = n;
+        while left > 0 {
+            let chunk = left.min(512);
+            let recs: Vec<ProducerRecord> =
+                (0..chunk).map(|_| ProducerRecord::new(vec![0xAB; payload])).collect();
+            b.publish_batch("r", recs).unwrap();
+            left -= chunk;
+        }
+        b.join_group("g", "r", "m", AssignmentMode::Shared).unwrap();
+        b.commit("g", "r", &[(0, 1)]).unwrap();
+    } // drop = crash
+    let publish_per_s = n as f64 / t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let b = BrokerCore::with_config(cfg).unwrap();
+    let recovery_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let stats = b.topic_stats("r").unwrap();
+    assert_eq!(stats.recovered_records as usize, n, "recovery must replay every record");
+    assert_eq!(b.positions("g", "r").unwrap()[0].1, 1, "committed offset must survive");
+
+    let t = Table::new(&["metric", "memory", "disk"]);
+    t.row(&["wakeup_p50_us".into(), format!("{mem_p50:.1}"), format!("{disk_p50:.1}")]);
+    t.row(&["wakeup_p99_us".into(), format!("{mem_p99:.1}"), format!("{disk_p99:.1}")]);
+    t.row(&["publish_per_s".into(), "-".into(), format!("{publish_per_s:.0}")]);
+    t.row(&[format!("recovery_ms_{n}rec"), "-".into(), format!("{recovery_ms:.1}")]);
+
+    let json = format!(
+        "{{\"bench\":\"persistence\",\"smoke\":{smoke},\
+         \"mem_wakeup_p50_us\":{mem_p50:.2},\"mem_wakeup_p99_us\":{mem_p99:.2},\
+         \"disk_wakeup_p50_us\":{disk_p50:.2},\"disk_wakeup_p99_us\":{disk_p99:.2},\
+         \"disk_publish_per_s\":{publish_per_s:.0},\
+         \"recovery_records\":{n},\"recovery_ms\":{recovery_ms:.2},\
+         \"bytes_on_disk\":{},\"segments\":{}}}",
+        stats.bytes_on_disk, stats.segments
+    );
+    std::fs::write("BENCH_persistence.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_persistence.json: {json}\n");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     hybridws::apps::register_all();
     if smoke {
-        // CI-sized: only the stream-plane bench, but still JSON-emitting.
+        // CI-sized: the stream-plane + persistence benches, JSON-emitting.
         bench_stream_plane(true);
+        bench_persistence(true);
         return;
     }
     bench_broker();
@@ -424,5 +514,6 @@ fn main() {
     bench_ods_roundtrip();
     bench_ods_batched();
     bench_stream_plane(false);
+    bench_persistence(false);
     bench_pjrt();
 }

@@ -150,6 +150,9 @@ impl BrokerClient {
                 bytes: s.bytes,
                 high_watermarks: s.high_watermarks,
                 start_offsets: s.start_offsets,
+                bytes_on_disk: s.bytes_on_disk,
+                segments: s.segments,
+                recovered_records: s.recovered_records,
             }),
             Response::Err { code, msg } => Err(error_from_code(code, msg)),
             other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),

@@ -1,5 +1,11 @@
 //! `BrokerCore`: the broker's state machine, shared by the embedded client
 //! and the TCP server (which is just `BrokerCore` behind sockets).
+//!
+//! Storage: a [`BrokerConfig`] selects [`StorageMode::Memory`] (default,
+//! the unchanged zero-copy broker) or [`StorageMode::Disk`] per topic.
+//! [`BrokerCore::with_config`] recovers every durable topic found under
+//! the configured data dirs at boot — records, watermarks and consumer-
+//! group commit points all survive a restart.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
@@ -8,6 +14,10 @@ use thiserror::Error;
 
 use super::group::{AssignmentMode, GroupState};
 use super::record::{ProducerRecord, Record};
+use super::storage::{
+    is_session_scoped_topic, looks_like_topic_dir, topic_dir_name, topic_from_dir_name,
+    BrokerConfig, OffsetEntry, OffsetStore, StorageMode,
+};
 use super::topic::Topic;
 
 /// Broker-level errors (mirrored over the wire by `protocol::ErrorCode`).
@@ -23,6 +33,8 @@ pub enum BrokerError {
     UnknownGroup(String),
     #[error("member {member:?} not in group {group:?}")]
     UnknownMember { group: String, member: String },
+    #[error("storage: {0}")]
+    Storage(String),
     #[error("transport: {0}")]
     Transport(String),
 }
@@ -37,6 +49,12 @@ pub struct TopicStats {
     pub bytes: usize,
     pub high_watermarks: Vec<u64>,
     pub start_offsets: Vec<u64>,
+    /// Segment-file bytes across partitions (0 for memory topics).
+    pub bytes_on_disk: u64,
+    /// Segment count across partitions (0 for memory topics).
+    pub segments: usize,
+    /// Records replayed from disk when the topic was opened.
+    pub recovered_records: u64,
 }
 
 /// Result of one multi-partition fetch ([`BrokerCore::fetch_many`]): the
@@ -78,6 +96,15 @@ pub const MAX_WAIT_HORIZON_MS: u64 = 1000 * 60 * 60 * 24 * 365;
 pub struct BrokerCore {
     topics: RwLock<HashMap<String, Arc<Topic>>>,
     groups: Mutex<HashMap<(String, String), Arc<Mutex<GroupState>>>>,
+    /// Per-topic storage selection (default: everything in memory).
+    config: BrokerConfig,
+    /// Consumer-offset journals, one per durable topic.
+    offsets: Mutex<HashMap<String, Arc<Mutex<OffsetStore>>>>,
+    /// Serialises topic creation/recovery: `Topic::open` scans and may
+    /// truncate segment files, so two racing `ensure_topic` calls must
+    /// never both run disk recovery for the same topic (the loser could
+    /// truncate a file the winner is already appending to).
+    open_lock: Mutex<()>,
 }
 
 impl BrokerCore {
@@ -85,33 +112,200 @@ impl BrokerCore {
         Arc::new(Self::default())
     }
 
-    // ---- admin ---------------------------------------------------------
+    /// Broker with explicit storage configuration. Scans the configured
+    /// data dirs and recovers every durable topic found there: records
+    /// (torn tails truncated), watermarks, deletion points, and consumer-
+    /// group cursors (groups resume from their committed offsets; claims
+    /// made by consumers that died with the old process are redelivered).
+    pub fn with_config(config: BrokerConfig) -> Result<Arc<Self>> {
+        let core = Arc::new(Self { config, ..Self::default() });
+        core.recover()?;
+        Ok(core)
+    }
 
-    /// Create a topic with `partitions` partitions.
-    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
-        let mut topics = self.topics.write().unwrap();
-        if topics.contains_key(name) {
-            return Err(BrokerError::TopicExists(name.into()));
+    /// The active storage configuration.
+    pub fn config(&self) -> &BrokerConfig {
+        &self.config
+    }
+
+    /// Boot-time recovery: re-open every durable topic already on disk.
+    fn recover(&self) -> Result<()> {
+        let mut dirs: Vec<&std::path::PathBuf> = Vec::new();
+        let mut modes: Vec<&StorageMode> = vec![&self.config.default_mode];
+        modes.extend(self.config.topic_modes.iter().map(|(_, m)| m));
+        for mode in modes {
+            if let StorageMode::Disk { data_dir, .. } = mode {
+                if !dirs.contains(&data_dir) {
+                    dirs.push(data_dir);
+                }
+            }
         }
-        topics.insert(name.to_string(), Arc::new(Topic::new(name, partitions)));
+        for dir in dirs {
+            let Ok(entries) = std::fs::read_dir(dir) else {
+                continue; // nothing persisted yet
+            };
+            for entry in entries.flatten() {
+                if !entry.path().is_dir() {
+                    continue;
+                }
+                let Some(topic) =
+                    entry.file_name().to_str().and_then(topic_from_dir_name)
+                else {
+                    continue; // undecodable name: foreign directory
+                };
+                // Only dirs with broker structure (a p<N> partition dir or
+                // an offsets journal) are topics — a foreign directory that
+                // happens to live in the data dir must be left alone, not
+                // registered as a phantom topic.
+                if !looks_like_topic_dir(&entry.path()) {
+                    log::warn!("ignoring non-topic directory {:?} in data dir", entry.path());
+                    continue;
+                }
+                match self.config.mode_for(&topic) {
+                    StorageMode::Disk { data_dir, .. } if data_dir == dir => {}
+                    _ => continue, // configured elsewhere (or memory): skip
+                }
+                if self.config.reap_session_scoped && is_session_scoped_topic(&topic) {
+                    // Anonymous-stream topics are meaningless across
+                    // registry sessions (ids restart at 0): reap them so a
+                    // new session's stream cannot bind a previous
+                    // session's records. Aliased streams (`dstream-a-…`)
+                    // are the durable-across-restarts namespace. Gated by
+                    // config: only deployments that own the dstream
+                    // namespace opt in.
+                    log::info!("reaping stale session-scoped topic dir {:?}", entry.path());
+                    if let Err(e) = std::fs::remove_dir_all(entry.path()) {
+                        log::warn!("could not reap {:?}: {e}", entry.path());
+                    }
+                    continue;
+                }
+                self.open_topic(&topic, 1)?;
+            }
+        }
         Ok(())
     }
 
-    /// Create if absent (used by ODS lazy publisher/consumer init).
-    pub fn ensure_topic(&self, name: &str, partitions: usize) {
-        let mut topics = self.topics.write().unwrap();
-        topics
-            .entry(name.to_string())
-            .or_insert_with(|| Arc::new(Topic::new(name, partitions)));
+    /// Open (or create) `name` under its configured storage mode and
+    /// register it, replaying the consumer-offset journal for durable
+    /// topics. Caller must hold no topic lock. Returns `(topic, created)`
+    /// — `created == false` when the topic already existed (including
+    /// losing a creation race), so `create_topic` can keep its exactly-one-
+    /// winner `TopicExists` guarantee.
+    fn open_topic(&self, name: &str, partitions: usize) -> Result<(Arc<Topic>, bool)> {
+        if let Some(t) = self.topics.read().unwrap().get(name) {
+            return Ok((Arc::clone(t), false));
+        }
+        // Creation lock: disk recovery (`Topic::open`) scans and may
+        // truncate segment files in place — exactly one thread may run it
+        // per topic, and never concurrently with a winner already
+        // appending.
+        let _creating = self.open_lock.lock().unwrap();
+        if let Some(t) = self.topics.read().unwrap().get(name) {
+            return Ok((Arc::clone(t), false)); // created while we waited
+        }
+        let mode = self.config.mode_for(name);
+        let topic = Arc::new(Topic::open(name, partitions, mode).map_err(|e| {
+            BrokerError::Storage(format!("open topic {name:?}: {e}"))
+        })?);
+        self.topics.write().unwrap().insert(name.to_string(), Arc::clone(&topic));
+        if let StorageMode::Disk { data_dir, .. } = mode {
+            let path = data_dir.join(topic_dir_name(name)).join("offsets.log");
+            let (store, entries) = OffsetStore::open(&path)
+                .map_err(|e| BrokerError::Storage(format!("open offsets for {name:?}: {e}")))?;
+            self.offsets.lock().unwrap().insert(name.to_string(), Arc::new(Mutex::new(store)));
+            // Replay cursors: resume from the commit point (claims made by
+            // the dead process's consumers are redelivered). Clamped to the
+            // recovered high watermark — a journal ahead of the record log
+            // (degraded disk, torn segment tail behind an intact journal)
+            // must not make the group skip records published after the
+            // restart. Entries for partitions beyond the recovered layout
+            // are ignored.
+            let mut groups = self.groups.lock().unwrap();
+            for e in entries {
+                let p = e.partition as usize;
+                if p >= topic.partition_count() {
+                    continue;
+                }
+                let hw = topic.high_watermark(p);
+                let entry = groups
+                    .entry((e.group.clone(), name.to_string()))
+                    .or_insert_with(|| Arc::new(Mutex::new(GroupState::new(e.mode))));
+                let mut st = entry.lock().unwrap();
+                let cur = st.cursor_mut(p);
+                cur.committed = e.committed.min(hw);
+                cur.position = cur.committed;
+            }
+        }
+        Ok((topic, true))
     }
 
-    /// Drop a topic and all group state referring to it.
+    /// Offset journal for a durable topic (`None` for memory topics).
+    fn offset_store(&self, topic: &str) -> Option<Arc<Mutex<OffsetStore>>> {
+        self.offsets.lock().unwrap().get(topic).cloned()
+    }
+
+    /// Journal the cursors of `partitions` for one (group, topic).
+    fn persist_cursors(&self, group: &str, topic: &str, st: &GroupState, partitions: &[usize]) {
+        if partitions.is_empty() {
+            return;
+        }
+        let Some(store) = self.offset_store(topic) else {
+            return;
+        };
+        let mut store = store.lock().unwrap();
+        for &p in partitions {
+            store.note(&OffsetEntry {
+                group: group.to_string(),
+                mode: st.mode,
+                partition: p as u64,
+                position: st.position(p),
+                committed: st.committed(p),
+            });
+        }
+    }
+
+    // ---- admin ---------------------------------------------------------
+
+    /// Create a topic with `partitions` partitions (durable when the
+    /// broker config says so — see [`BrokerConfig::mode_for`]). Exactly
+    /// one concurrent creator wins; the rest get [`BrokerError::TopicExists`].
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        let (_, created) = self.open_topic(name, partitions)?;
+        if created {
+            Ok(())
+        } else {
+            Err(BrokerError::TopicExists(name.into()))
+        }
+    }
+
+    /// Create if absent (used by ODS lazy publisher/consumer init).
+    pub fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        self.open_topic(name, partitions)?;
+        Ok(())
+    }
+
+    /// Drop a topic and all group state referring to it. Durable topics
+    /// also lose their on-disk segments and offset journal.
     pub fn delete_topic(&self, name: &str) -> Result<()> {
+        // Serialise against lazy `ensure_topic`: without this, a racing
+        // creator could re-open the topic from disk between our map remove
+        // and the dir removal, leaving a registered topic whose segment
+        // files we just deleted.
+        let _creating = self.open_lock.lock().unwrap();
         let removed = self.topics.write().unwrap().remove(name);
         let Some(topic) = removed else {
             return Err(BrokerError::UnknownTopic(name.into()));
         };
         self.groups.lock().unwrap().retain(|(_, t), _| t != name);
+        self.offsets.lock().unwrap().remove(name);
+        if let StorageMode::Disk { data_dir, .. } = self.config.mode_for(name) {
+            let dir = data_dir.join(topic_dir_name(name));
+            if let Err(e) = std::fs::remove_dir_all(&dir) {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    log::warn!("delete_topic {name:?}: could not remove {dir:?}: {e}");
+                }
+            }
+        }
         // Wake parked long-poll fetches so they re-check and surface
         // `UnknownTopic` instead of sleeping out their deadline.
         topic.notify_publish();
@@ -143,6 +337,9 @@ impl BrokerCore {
             bytes: t.total_bytes(),
             high_watermarks: (0..n).map(|p| t.high_watermark(p)).collect(),
             start_offsets: (0..n).map(|p| t.start_offset(p)).collect(),
+            bytes_on_disk: t.total_bytes_on_disk(),
+            segments: t.total_segments(),
+            recovered_records: t.total_recovered(),
         })
     }
 
@@ -289,6 +486,11 @@ impl BrokerCore {
         }
         let positions =
             (0..t.partition_count()).map(|p| (st.position(p), st.committed(p))).collect();
+        // Durable topics journal the claim ("committed on claim"): after a
+        // restart the group resumes from its commit point, and the claim
+        // positions are on record for forensics.
+        let claimed: Vec<usize> = batches.iter().map(|&(p, _)| p).collect();
+        self.persist_cursors(group, topic, &st, &claimed);
         Ok(MultiFetch { batches, positions })
     }
 
@@ -328,7 +530,8 @@ impl BrokerCore {
         }
     }
 
-    /// Commit processed offsets: `up_to` per partition.
+    /// Commit processed offsets: `up_to` per partition. Durable topics
+    /// journal the new commit points (the restart resume points).
     pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
         let entry = {
             let groups = self.groups.lock().unwrap();
@@ -341,6 +544,8 @@ impl BrokerCore {
         for &(p, up_to) in commits {
             st.commit(p, up_to);
         }
+        let committed: Vec<usize> = commits.iter().map(|&(p, _)| p).collect();
+        self.persist_cursors(group, topic, &st, &committed);
         Ok(())
     }
 
@@ -398,6 +603,8 @@ impl BrokerCore {
             st.rewind_to_committed(p);
         }
         st.leave(member);
+        let all: Vec<usize> = (0..t.partition_count()).collect();
+        self.persist_cursors(group, topic, &st, &all);
         drop(st);
         // The rewound records are claimable again: wake parked fetches so
         // surviving members redeliver immediately instead of waiting out
@@ -434,7 +641,7 @@ mod tests {
         let b = BrokerCore::new();
         b.create_topic("t", 1).unwrap();
         assert_eq!(b.create_topic("t", 1), Err(BrokerError::TopicExists("t".into())));
-        b.ensure_topic("t", 1); // idempotent, no error
+        b.ensure_topic("t", 1).unwrap(); // idempotent, no error
     }
 
     #[test]
@@ -723,6 +930,61 @@ mod tests {
             b.delete_records("t", 9, 1),
             Err(BrokerError::BadPartition { .. })
         ));
+    }
+
+    #[test]
+    fn disk_broker_restart_preserves_records_and_commits() {
+        let dir =
+            std::env::temp_dir().join(format!("hybridws-core-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = super::BrokerConfig::disk(&dir);
+        {
+            let b = BrokerCore::with_config(cfg.clone()).unwrap();
+            b.create_topic("t", 2).unwrap();
+            for i in 0..10 {
+                b.publish("t", rec(i)).unwrap();
+            }
+            b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+            // Claim everything, commit only up to offset 2 on partition 0.
+            assert_eq!(b.poll("g", "t", "m", usize::MAX).unwrap().len(), 10);
+            b.commit("g", "t", &[(0, 2)]).unwrap();
+        } // "crash"
+        let b = BrokerCore::with_config(cfg).unwrap();
+        assert_eq!(b.topic_names(), vec!["t".to_string()]);
+        let stats = b.topic_stats("t").unwrap();
+        assert_eq!(stats.partitions, 2);
+        assert_eq!(stats.records, 10, "all acked records recovered");
+        assert_eq!(stats.recovered_records, 10);
+        assert!(stats.bytes_on_disk > 0);
+        assert!(stats.segments >= 2);
+        // The group's commit point survived; uncommitted claims rewound.
+        assert_eq!(b.positions("g", "t").unwrap()[0], (2, 2));
+        let m = b.poll("g", "t", "m2-after-restart", usize::MAX);
+        assert!(m.is_err(), "members do not survive the restart, only cursors");
+        b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let redelivered = b.poll("g", "t", "m", usize::MAX).unwrap();
+        assert_eq!(redelivered.len(), 8, "10 records minus 2 committed on partition 0");
+        assert!(redelivered.iter().all(|r| r.offset >= 2 || r.value.0[0] % 2 == 1));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn delete_topic_reclaims_disk_state() {
+        let dir =
+            std::env::temp_dir().join(format!("hybridws-core-del-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = super::BrokerConfig::disk(&dir);
+        {
+            let b = BrokerCore::with_config(cfg.clone()).unwrap();
+            b.create_topic("gone", 1).unwrap();
+            b.publish("gone", rec(1)).unwrap();
+            assert!(dir.join("gone").exists());
+            b.delete_topic("gone").unwrap();
+            assert!(!dir.join("gone").exists(), "segments deleted with the topic");
+        }
+        let b = BrokerCore::with_config(cfg).unwrap();
+        assert!(b.topic_names().is_empty(), "deleted topic must not resurrect");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

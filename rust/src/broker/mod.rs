@@ -22,6 +22,11 @@
 //!
 //! The broker runs [`embedded`] (in-process, lock-per-topic) or remote over
 //! TCP ([`server`]/[`client`]) with the same [`client::BrokerClient`] API.
+//!
+//! Durability ([`storage`]): topics configured [`storage::StorageMode::Disk`]
+//! keep a segmented CRC-framed log per partition and a consumer-offset
+//! journal per topic, so acked records and committed group offsets survive
+//! broker restarts (`BrokerCore::with_config` recovers them at boot).
 
 pub mod client;
 pub mod embedded;
@@ -30,6 +35,7 @@ pub mod partition;
 pub mod protocol;
 pub mod record;
 pub mod server;
+pub mod storage;
 pub mod topic;
 
 pub use client::BrokerClient;
@@ -37,3 +43,4 @@ pub use embedded::{BrokerCore, MultiFetch};
 pub use group::AssignmentMode;
 pub use record::Record;
 pub use server::BrokerServer;
+pub use storage::{BrokerConfig, Retention, StorageMode};

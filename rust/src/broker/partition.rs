@@ -2,13 +2,22 @@
 //!
 //! Offsets are dense and never reused; deleting processed records
 //! (exactly-once support) advances `start_offset` without renumbering.
+//!
+//! A partition is either memory-only (the default — the zero-copy hot
+//! path, unchanged) or durable: opened with [`PartitionLog::open_disk`] it
+//! keeps a write-through [`DiskLog`] twin. Memory stays the serving side
+//! in both modes — fetches always hand out the same `Arc` records — while
+//! the disk side makes acked records survive a process restart: `open_disk`
+//! replays every valid on-disk record back into the in-memory deque.
 
 use std::collections::VecDeque;
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::util::wire::Blob;
 
 use super::record::{now_ms, ProducerRecord, Record};
+use super::storage::{DiskLog, Retention};
 
 /// Append-only record log with O(1) front truncation. Records are stored
 /// behind `Arc` so fetches are O(1) per record regardless of payload size
@@ -22,11 +31,30 @@ pub struct PartitionLog {
     next: u64,
     /// Total bytes retained (metrics/backpressure).
     bytes: usize,
+    /// Durable write-through twin (`None` = memory-only).
+    disk: Option<DiskLog>,
 }
 
 impl PartitionLog {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Open a durable partition under `dir`, replaying every live on-disk
+    /// record into memory (crash recovery). The in-memory invariants are
+    /// re-derived from the recovered log: `records[0].offset == start` and
+    /// `start + records.len() == next`.
+    pub fn open_disk(
+        dir: &Path,
+        segment_bytes: u64,
+        retention: Retention,
+    ) -> std::io::Result<Self> {
+        let (disk, recovered) = DiskLog::open(dir, segment_bytes, retention)?;
+        let next = disk.next_offset();
+        let start = next - recovered.len() as u64;
+        debug_assert!(recovered.first().map_or(true, |r| r.offset == start));
+        let bytes = recovered.iter().map(|r| r.payload_len()).sum();
+        Ok(Self { records: recovered.into(), start, next, bytes, disk: Some(disk) })
     }
 
     /// Offset that the next appended record will get.
@@ -53,13 +81,22 @@ impl PartitionLog {
         self.bytes
     }
 
-    /// Append one producer record; returns its assigned offset.
+    /// Append one producer record; returns its assigned offset. In disk
+    /// mode the record is written through to the segmented log (same `Arc`
+    /// bytes) before the in-memory append; retention triggered by a
+    /// segment roll trims the memory mirror to the new disk start.
     pub fn append(&mut self, rec: ProducerRecord) -> u64 {
         let offset = self.next;
         self.next += 1;
-        let stored = Record { offset, timestamp_ms: now_ms(), key: rec.key, value: rec.value };
+        let stored =
+            Arc::new(Record { offset, timestamp_ms: now_ms(), key: rec.key, value: rec.value });
+        if let Some(disk) = &mut self.disk {
+            if let Some(new_start) = disk.append(&stored) {
+                self.trim_to(new_start);
+            }
+        }
         self.bytes += stored.payload_len();
-        self.records.push_back(Arc::new(stored));
+        self.records.push_back(stored);
         offset
     }
 
@@ -106,7 +143,18 @@ impl PartitionLog {
     }
 
     /// Drop records with offset < `up_to`. Returns how many were deleted.
+    /// In disk mode the advanced start is persisted and sealed segments
+    /// fully below it are reclaimed.
     pub fn delete_up_to(&mut self, up_to: u64) -> usize {
+        let deleted = self.trim_to(up_to);
+        if let Some(disk) = &mut self.disk {
+            disk.set_start(up_to);
+        }
+        deleted
+    }
+
+    /// Memory-side front truncation (shared by deletion and retention).
+    fn trim_to(&mut self, up_to: u64) -> usize {
         let mut deleted = 0;
         while let Some(front) = self.records.front() {
             if front.offset >= up_to {
@@ -123,6 +171,33 @@ impl PartitionLog {
     /// First record payload (tests/debugging).
     pub fn front_value(&self) -> Option<&Blob> {
         self.records.front().map(|r| &r.value)
+    }
+
+    // ---- durability introspection --------------------------------------
+
+    /// True when this partition has a disk backing.
+    pub fn is_durable(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// Bytes in this partition's segment files (0 in memory mode).
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.disk.as_ref().map_or(0, DiskLog::bytes_on_disk)
+    }
+
+    /// Segment count (0 in memory mode).
+    pub fn segment_count(&self) -> usize {
+        self.disk.as_ref().map_or(0, DiskLog::segment_count)
+    }
+
+    /// Records replayed from disk when this partition was opened.
+    pub fn recovered_records(&self) -> u64 {
+        self.disk.as_ref().map_or(0, DiskLog::recovered)
+    }
+
+    /// Durable twin (tests / recovery verification).
+    pub fn disk(&self) -> Option<&DiskLog> {
+        self.disk.as_ref()
     }
 }
 
@@ -258,6 +333,71 @@ mod tests {
         let b = log.fetch(0, 1);
         assert!(a[0].value.ptr_eq(&payload), "append must not copy the payload");
         assert!(a[0].value.ptr_eq(&b[0].value), "every fetch shares one allocation");
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("hybridws-part-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn disk_partition_recovers_records_and_watermarks() {
+        let dir = tmp_dir("recover");
+        {
+            let mut log = PartitionLog::open_disk(&dir, 1 << 20, Retention::default()).unwrap();
+            assert!(log.is_durable());
+            assert_eq!(log.recovered_records(), 0);
+            for i in 0..8 {
+                assert_eq!(log.append(rec(i)), i as u64);
+            }
+            assert_eq!(log.delete_up_to(3), 3);
+        }
+        let log = PartitionLog::open_disk(&dir, 1 << 20, Retention::default()).unwrap();
+        assert_eq!(log.recovered_records(), 5);
+        assert_eq!(log.start_offset(), 3);
+        assert_eq!(log.high_watermark(), 8);
+        let got = log.fetch(0, usize::MAX);
+        assert_eq!(got.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![3, 4, 5, 6, 7]);
+        assert_eq!(got.iter().map(|r| r.value.0[0]).collect::<Vec<_>>(), vec![3, 4, 5, 6, 7]);
+        assert!(log.bytes_on_disk() > 0);
+        assert!(log.segment_count() >= 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_partition_serves_the_published_allocation() {
+        // Durability must not break the memory-path zero-copy contract:
+        // within one process lifetime, fetches still share the producer's
+        // own allocation.
+        let dir = tmp_dir("zerocopy");
+        let mut log = PartitionLog::open_disk(&dir, 1 << 20, Retention::default()).unwrap();
+        let payload = crate::util::wire::Blob::new(vec![7u8; 1 << 16]);
+        log.append(ProducerRecord { key: None, value: payload.clone() });
+        let got = log.fetch(0, 1);
+        assert!(got[0].value.ptr_eq(&payload), "disk-mode append must not copy the payload");
+        // And the same bytes are durably framed on disk.
+        let on_disk = log.disk().unwrap().read(0).unwrap().unwrap();
+        assert_eq!(on_disk.value, payload);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_partition_retention_trims_memory_too() {
+        let dir = tmp_dir("ret");
+        let retention = Retention::default().max_bytes(400);
+        let mut log = PartitionLog::open_disk(&dir, 128, retention).unwrap();
+        for _ in 0..80 {
+            log.append(ProducerRecord::new(vec![0u8; 24]));
+        }
+        assert!(log.start_offset() > 0, "retention must advance the start");
+        assert_eq!(
+            log.fetch(0, usize::MAX).first().unwrap().offset,
+            log.start_offset(),
+            "memory mirror trimmed to the disk start"
+        );
+        assert_eq!(log.len() as u64, log.high_watermark() - log.start_offset());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -244,6 +244,9 @@ pub struct TopicStatsWire {
     pub bytes: usize,
     pub high_watermarks: Vec<u64>,
     pub start_offsets: Vec<u64>,
+    pub bytes_on_disk: u64,
+    pub segments: usize,
+    pub recovered_records: u64,
 }
 
 crate::wire_struct!(TopicStatsWire {
@@ -252,6 +255,9 @@ crate::wire_struct!(TopicStatsWire {
     bytes: usize,
     high_watermarks: Vec<u64>,
     start_offsets: Vec<u64>,
+    bytes_on_disk: u64,
+    segments: usize,
+    recovered_records: u64,
 });
 
 impl From<TopicStats> for TopicStatsWire {
@@ -262,6 +268,9 @@ impl From<TopicStats> for TopicStatsWire {
             bytes: s.bytes,
             high_watermarks: s.high_watermarks,
             start_offsets: s.start_offsets,
+            bytes_on_disk: s.bytes_on_disk,
+            segments: s.segments,
+            recovered_records: s.recovered_records,
         }
     }
 }
@@ -351,6 +360,7 @@ pub fn error_code(e: &BrokerError) -> u8 {
         BrokerError::UnknownGroup(_) => 4,
         BrokerError::UnknownMember { .. } => 5,
         BrokerError::Transport(_) => 6,
+        BrokerError::Storage(_) => 7,
     }
 }
 
@@ -362,6 +372,7 @@ pub fn error_from_code(code: u8, msg: String) -> BrokerError {
         4 => BrokerError::UnknownGroup(msg),
         5 => BrokerError::UnknownMember { group: msg, member: String::new() },
         3 => BrokerError::BadPartition { topic: msg, partition: 0, count: 0 },
+        7 => BrokerError::Storage(msg),
         _ => BrokerError::Transport(msg),
     }
 }
@@ -438,6 +449,9 @@ mod tests {
                 bytes: 4,
                 high_watermarks: vec![2, 1],
                 start_offsets: vec![0, 0],
+                bytes_on_disk: 512,
+                segments: 2,
+                recovered_records: 3,
             }),
             Response::Names(vec!["a".into()]),
             Response::Bool(true),

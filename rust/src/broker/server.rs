@@ -139,10 +139,10 @@ pub fn dispatch(core: &BrokerCore, req: Request) -> Response {
             Ok(()) => A::Ok,
             Err(e) => to_err(&e),
         },
-        Q::EnsureTopic { name, partitions } => {
-            core.ensure_topic(&name, partitions);
-            A::Ok
-        }
+        Q::EnsureTopic { name, partitions } => match core.ensure_topic(&name, partitions) {
+            Ok(()) => A::Ok,
+            Err(e) => to_err(&e),
+        },
         Q::DeleteTopic { name } => match core.delete_topic(&name) {
             Ok(()) => A::Ok,
             Err(e) => to_err(&e),

@@ -1,0 +1,429 @@
+//! `DiskLog`: the segmented on-disk log behind one partition.
+//!
+//! The in-memory [`crate::broker::partition::PartitionLog`] stays the
+//! serving path (fetches hand out the same `Arc` records, zero-copy); the
+//! disk log is its durable write-through twin. On open it replays every
+//! valid record back into memory, so a restarted broker serves exactly what
+//! it acked before the crash.
+//!
+//! - **Roll**: when the active segment reaches `segment_bytes` it is sealed
+//!   (fsync) and a fresh segment starting at the next offset becomes
+//!   active.
+//! - **Retention**: sealed segments are dropped whole while the partition
+//!   exceeds [`Retention::max_bytes`] or the segment's newest record is
+//!   older than [`Retention::max_age_ms`]. The advanced log start is
+//!   persisted and returned so the in-memory log trims to match.
+//! - **Record deletion** (the exactly-once consumer path) advances the
+//!   persisted log start; sealed segments entirely below it are deleted.
+//! - **Failure policy**: a disk I/O error flips the log into a degraded
+//!   memory-only mode (logged loudly) rather than poisoning the publish
+//!   path — the broker keeps serving, durability resumes on restart.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use log::{error, warn};
+
+use crate::broker::record::{now_ms, Record};
+
+use super::segment::{parse_segment_name, Segment};
+use super::{crc32, Retention};
+
+/// Per-partition metadata file holding the persisted log-start offset.
+const META_FILE: &str = "meta.bin";
+
+/// Segmented append-only log for one partition.
+#[derive(Debug)]
+pub struct DiskLog {
+    dir: PathBuf,
+    segment_bytes: u64,
+    retention: Retention,
+    /// Sealed segments, ascending by base offset.
+    sealed: Vec<Segment>,
+    active: Segment,
+    /// First live offset (survives restarts via `meta.bin`).
+    start: u64,
+    /// Records replayed into memory by the last `open`.
+    recovered: u64,
+    /// Disk write failed — serve memory-only from here on.
+    failed: bool,
+}
+
+impl DiskLog {
+    /// Open (or create) the log under `dir`, recovering all live records.
+    /// Returns the log plus the replayed records (dense offsets, ending at
+    /// the recovered high watermark).
+    pub fn open(
+        dir: &Path,
+        segment_bytes: u64,
+        retention: Retention,
+    ) -> io::Result<(Self, Vec<Arc<Record>>)> {
+        std::fs::create_dir_all(dir)?;
+        let start = read_meta(&dir.join(META_FILE));
+        let mut bases: Vec<u64> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| parse_segment_name(e.file_name().to_str()?))
+            .collect();
+        bases.sort_unstable();
+        let mut segments: Vec<Segment> = Vec::with_capacity(bases.len());
+        let mut records: Vec<Arc<Record>> = Vec::new();
+        for base in bases {
+            let path = dir.join(super::segment::segment_file_name(base));
+            let (seg, recs) = Segment::open(&path)?;
+            if let Some(prev) = segments.last() {
+                if seg.base() != prev.next_offset() {
+                    // A hole between segments (a truncated predecessor):
+                    // everything past it is unreachable — drop it rather
+                    // than serve a log with missing offsets.
+                    warn!(
+                        "disk log {dir:?}: segment {base} does not follow {} — discarding it \
+                         and later segments",
+                        prev.next_offset()
+                    );
+                    seg.delete()?;
+                    continue;
+                }
+            }
+            records.extend(recs.into_iter().filter(|r| r.offset >= start));
+            segments.push(seg);
+        }
+        let mut active = match segments.pop() {
+            Some(mut last) => {
+                last.reopen_append()?;
+                last
+            }
+            None => Segment::create(dir, start)?,
+        };
+        // All sealed segments already fully below the persisted start are
+        // dead weight from a pre-crash deletion — reap them now.
+        let mut sealed = Vec::new();
+        for seg in segments {
+            if seg.next_offset() <= start {
+                seg.delete()?;
+            } else {
+                sealed.push(seg);
+            }
+        }
+        if active.next_offset() <= start && active.record_count() > 0 && sealed.is_empty() {
+            // Every record in the active segment was deleted; start a fresh
+            // segment at the live watermark so recovery stays O(live data).
+            active.seal()?;
+            let empty = Segment::create(dir, start)?;
+            std::mem::replace(&mut active, empty).delete()?;
+        }
+        let mut log = Self {
+            dir: dir.to_path_buf(),
+            segment_bytes: segment_bytes.max(1),
+            retention,
+            sealed,
+            active,
+            start,
+            recovered: 0,
+            failed: false,
+        };
+        // Apply retention to what was recovered: a restart must not
+        // resurrect sealed segments that aged out (or overflowed the byte
+        // cap) while the broker was down or idle.
+        if let Some(new_start) = log.enforce_retention()? {
+            records.retain(|r| r.offset >= new_start);
+        }
+        log.recovered = records.len() as u64;
+        Ok((log, records))
+    }
+
+    /// Durably append one record (dense: `rec.offset` must be the next
+    /// offset). Rolls and applies retention at segment boundaries. Returns
+    /// the new log-start offset when retention advanced it (the caller
+    /// trims its in-memory mirror to match). I/O errors degrade the log to
+    /// memory-only instead of failing the publish.
+    pub fn append(&mut self, rec: &Record) -> Option<u64> {
+        if self.failed {
+            return None;
+        }
+        match self.try_append(rec) {
+            Ok(advanced) => advanced,
+            Err(e) => {
+                error!(
+                    "disk log {:?}: append failed ({e}) — degrading to memory-only",
+                    self.dir
+                );
+                self.failed = true;
+                None
+            }
+        }
+    }
+
+    fn try_append(&mut self, rec: &Record) -> io::Result<Option<u64>> {
+        let mut advanced = None;
+        if self.active.bytes() >= self.segment_bytes && self.active.record_count() > 0 {
+            self.active.seal()?;
+            let fresh = Segment::create(&self.dir, rec.offset)?;
+            self.sealed.push(std::mem::replace(&mut self.active, fresh));
+            advanced = self.enforce_retention()?;
+        }
+        self.active.append(rec)?;
+        Ok(advanced)
+    }
+
+    /// Drop sealed segments violating the retention policy; persist and
+    /// return the advanced start (if any).
+    fn enforce_retention(&mut self) -> io::Result<Option<u64>> {
+        let now = now_ms();
+        let mut advanced = None;
+        while let Some(oldest) = self.sealed.first() {
+            let over_bytes =
+                self.retention.max_bytes.is_some_and(|cap| self.bytes_on_disk() > cap);
+            let too_old = self
+                .retention
+                .max_age_ms
+                .is_some_and(|age| oldest.last_ts_ms().saturating_add(age) < now);
+            if !over_bytes && !too_old {
+                break;
+            }
+            let seg = self.sealed.remove(0);
+            self.start = self.start.max(seg.next_offset());
+            advanced = Some(self.start);
+            seg.delete()?;
+        }
+        if advanced.is_some() {
+            write_meta(&self.dir.join(META_FILE), self.start)?;
+        }
+        Ok(advanced)
+    }
+
+    /// Advance the log start (record deletion); drops whole sealed segments
+    /// below it and persists the new start. Degrades on I/O error like
+    /// [`DiskLog::append`].
+    pub fn set_start(&mut self, up_to: u64) {
+        let up_to = up_to.min(self.next_offset());
+        if self.failed || up_to <= self.start {
+            return;
+        }
+        self.start = up_to;
+        let res = (|| -> io::Result<()> {
+            while self.sealed.first().is_some_and(|s| s.next_offset() <= up_to) {
+                self.sealed.remove(0).delete()?;
+            }
+            write_meta(&self.dir.join(META_FILE), self.start)
+        })();
+        if let Err(e) = res {
+            error!(
+                "disk log {:?}: start persist failed ({e}) — degrading to memory-only",
+                self.dir
+            );
+            self.failed = true;
+        }
+    }
+
+    /// Read one record from disk (tests / recovery verification — the
+    /// serving path reads the in-memory mirror).
+    pub fn read(&self, offset: u64) -> io::Result<Option<Record>> {
+        if offset < self.start || offset >= self.next_offset() {
+            return Ok(None);
+        }
+        let seg = if offset >= self.active.base() {
+            &self.active
+        } else {
+            let i = self.sealed.partition_point(|s| s.base() <= offset);
+            if i == 0 {
+                return Ok(None); // below the oldest retained segment
+            }
+            &self.sealed[i - 1]
+        };
+        seg.read(offset)
+    }
+
+    /// Seal the active segment (flush + fsync; clean shutdown).
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.active.seal()?;
+        self.active.reopen_append()
+    }
+
+    /// First live offset.
+    pub fn start(&self) -> u64 {
+        self.start
+    }
+
+    /// Offset the next append must carry (recovered high watermark).
+    pub fn next_offset(&self) -> u64 {
+        self.active.next_offset()
+    }
+
+    /// Total bytes across sealed + active segment files.
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.sealed.iter().map(Segment::bytes).sum::<u64>() + self.active.bytes()
+    }
+
+    /// Segment count (sealed + active).
+    pub fn segment_count(&self) -> usize {
+        self.sealed.len() + 1
+    }
+
+    /// Records replayed into memory by `open`.
+    pub fn recovered(&self) -> u64 {
+        self.recovered
+    }
+
+    /// True after an I/O error degraded this log to memory-only.
+    pub fn failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Directory backing this log.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+// ---- meta file (persisted log start) -----------------------------------
+
+/// `meta.bin` = `crc32(start_le): u32 | start: u64`. Atomic tmp + rename;
+/// any corruption falls back to start 0 (recovery then serves everything
+/// still on disk — safe, merely conservative).
+fn read_meta(path: &Path) -> u64 {
+    let Ok(data) = std::fs::read(path) else {
+        return 0;
+    };
+    if data.len() != 12 {
+        return 0;
+    }
+    let crc = u32::from_le_bytes(data[0..4].try_into().unwrap());
+    let start_bytes: [u8; 8] = data[4..12].try_into().unwrap();
+    if crc32(&start_bytes) != crc {
+        warn!("disk log meta {path:?} corrupt — falling back to start 0");
+        return 0;
+    }
+    u64::from_le_bytes(start_bytes)
+}
+
+fn write_meta(path: &Path, start: u64) -> io::Result<()> {
+    let start_bytes = start.to_le_bytes();
+    let mut data = Vec::with_capacity(12);
+    data.extend_from_slice(&crc32(&start_bytes).to_le_bytes());
+    data.extend_from_slice(&start_bytes);
+    let tmp = path.with_extension("bin.tmp");
+    std::fs::write(&tmp, &data)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Blob;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hybridws-dlog-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn rec(offset: u64, payload: Vec<u8>) -> Record {
+        Record { offset, timestamp_ms: now_ms(), key: None, value: Blob::new(payload) }
+    }
+
+    #[test]
+    fn append_roll_and_recover_across_segments() {
+        let dir = tmp_dir("roll");
+        let (mut log, recs) = DiskLog::open(&dir, 256, Retention::default()).unwrap();
+        assert!(recs.is_empty());
+        for i in 0..40u64 {
+            assert!(log.append(&rec(i, vec![i as u8; 32])).is_none());
+        }
+        assert!(log.segment_count() > 1, "small segment_bytes must roll");
+        assert!(!log.failed());
+        let bytes = log.bytes_on_disk();
+        drop(log);
+        let (back, recs) = DiskLog::open(&dir, 256, Retention::default()).unwrap();
+        assert_eq!(recs.len(), 40);
+        assert_eq!(back.recovered(), 40);
+        assert_eq!(back.next_offset(), 40);
+        assert_eq!(back.bytes_on_disk(), bytes);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.offset, i as u64);
+            assert_eq!(r.value.as_slice(), &vec![i as u8; 32][..]);
+        }
+        // Point reads cross the segment boundary correctly.
+        assert_eq!(back.read(0).unwrap().unwrap().offset, 0);
+        assert_eq!(back.read(39).unwrap().unwrap().offset, 39);
+        assert!(back.read(40).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn byte_retention_drops_sealed_segments() {
+        let dir = tmp_dir("retention");
+        let retention = Retention::default().max_bytes(600);
+        let (mut log, _) = DiskLog::open(&dir, 128, retention).unwrap();
+        let mut advanced = 0u64;
+        for i in 0..60u64 {
+            if let Some(s) = log.append(&rec(i, vec![0u8; 24])) {
+                advanced = s;
+            }
+        }
+        assert!(advanced > 0, "retention must advance the start");
+        assert_eq!(log.start(), advanced);
+        assert!(log.bytes_on_disk() <= 600 + 256, "bounded by cap + one segment slack");
+        drop(log);
+        // The advanced start survives a restart (open-time enforcement may
+        // advance it further if the close left the log over the cap).
+        let (back, recs) = DiskLog::open(&dir, 128, retention).unwrap();
+        assert!(back.start() >= advanced, "{} < {advanced}", back.start());
+        assert!(back.bytes_on_disk() <= 600 + 256, "open must re-enforce the cap");
+        assert_eq!(recs.first().unwrap().offset, back.start());
+        assert_eq!(recs.last().unwrap().offset, 59);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn set_start_persists_and_reaps() {
+        let dir = tmp_dir("setstart");
+        let (mut log, _) = DiskLog::open(&dir, 128, Retention::default()).unwrap();
+        for i in 0..30u64 {
+            log.append(&rec(i, vec![7u8; 24]));
+        }
+        let segs_before = log.segment_count();
+        log.set_start(25);
+        assert_eq!(log.start(), 25);
+        assert!(log.segment_count() < segs_before, "fully-deleted segments reaped");
+        assert!(log.read(10).unwrap().is_none(), "deleted records unreadable");
+        drop(log);
+        let (back, recs) = DiskLog::open(&dir, 128, Retention::default()).unwrap();
+        assert_eq!(back.start(), 25);
+        assert_eq!(recs.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![25, 26, 27, 28, 29]);
+        // New appends continue the dense sequence.
+        let (mut back2, _) = DiskLog::open(&dir, 128, Retention::default()).unwrap();
+        back2.append(&rec(30, vec![1]));
+        assert_eq!(back2.next_offset(), 31);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fully_deleted_log_restarts_at_watermark() {
+        let dir = tmp_dir("alldel");
+        let (mut log, _) = DiskLog::open(&dir, 1 << 20, Retention::default()).unwrap();
+        for i in 0..5u64 {
+            log.append(&rec(i, vec![1, 2, 3]));
+        }
+        log.set_start(5);
+        drop(log);
+        let (back, recs) = DiskLog::open(&dir, 1 << 20, Retention::default()).unwrap();
+        assert!(recs.is_empty());
+        assert_eq!(back.start(), 5);
+        assert_eq!(back.next_offset(), 5, "watermark survives total deletion");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meta_roundtrip_and_corruption_fallback() {
+        let dir = tmp_dir("meta");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(META_FILE);
+        assert_eq!(read_meta(&path), 0, "missing meta reads as 0");
+        write_meta(&path, 12345).unwrap();
+        assert_eq!(read_meta(&path), 12345);
+        std::fs::write(&path, b"garbage not 12 b").unwrap();
+        assert_eq!(read_meta(&path), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

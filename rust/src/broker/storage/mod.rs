@@ -1,0 +1,447 @@
+//! Durable broker storage: a segmented on-disk log per partition plus a
+//! per-topic consumer-offset journal.
+//!
+//! The paper hides the streaming back-end behind the DistroStream API so it
+//! can ride on durable brokers like Kafka (§4). This subsystem gives our
+//! Kafka substitute the matching durability slice:
+//!
+//! - [`log::DiskLog`] — fixed-size segments ([`segment::Segment`]) holding
+//!   CRC-framed records, a sparse offset index rebuilt on startup, torn-tail
+//!   truncation, and time/size retention that drops whole sealed segments.
+//! - [`offsets::OffsetStore`] — an append-only journal of consumer-group
+//!   cursors, compacted on open, so groups resume from their committed
+//!   offsets after a broker restart.
+//! - [`StorageMode`] / [`BrokerConfig`] — per-topic storage selection; the
+//!   default stays [`StorageMode::Memory`], which is byte-for-byte the
+//!   pre-durability broker (same hot path, same Arc-identity zero-copy).
+//!
+//! Layout under a disk topic:
+//!
+//! ```text
+//! <data_dir>/<topic>/
+//!     p0/00000000000000000000.seg     segment files (base offset in name)
+//!     p0/meta.bin                     persisted log-start offset
+//!     p1/...
+//!     offsets.log                     consumer-group cursor journal
+//! ```
+//!
+//! Durability contract: every append is written to the OS before the
+//! publish acks (process-crash safe); files are fsynced when a segment
+//! seals. Recovery re-scans every frame, verifies CRCs and offset density,
+//! and truncates — never propagates — a torn tail.
+
+pub mod log;
+pub mod offsets;
+pub mod segment;
+
+use std::path::{Path, PathBuf};
+
+// `self::` disambiguates the local `log` module from the `log` crate.
+pub use self::log::DiskLog;
+pub use self::offsets::{OffsetEntry, OffsetStore};
+pub use self::segment::Segment;
+
+/// Default segment size (8 MiB) — small enough that retention has useful
+/// granularity, large enough that the sparse index stays tiny.
+pub const DEFAULT_SEGMENT_BYTES: u64 = 8 * 1024 * 1024;
+
+/// What to keep on disk. `None` fields mean "keep forever"; retention only
+/// ever drops whole **sealed** segments (the active segment is never
+/// reclaimed), so enforcement is O(segments), not O(records).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Retention {
+    /// Drop oldest sealed segments while the partition exceeds this many
+    /// bytes on disk.
+    pub max_bytes: Option<u64>,
+    /// Drop sealed segments whose newest record is older than this.
+    pub max_age_ms: Option<u64>,
+}
+
+impl Retention {
+    /// Keep everything (the default).
+    pub fn keep_forever() -> Self {
+        Self::default()
+    }
+
+    pub fn max_bytes(mut self, n: u64) -> Self {
+        self.max_bytes = Some(n);
+        self
+    }
+
+    pub fn max_age_ms(mut self, ms: u64) -> Self {
+        self.max_age_ms = Some(ms);
+        self
+    }
+}
+
+/// Per-topic storage backend selection.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum StorageMode {
+    /// In-memory only (the pre-durability broker; zero-copy hot path).
+    #[default]
+    Memory,
+    /// Segmented on-disk log under `data_dir/<topic>/p<partition>/`.
+    Disk { data_dir: PathBuf, segment_bytes: u64, retention: Retention },
+}
+
+impl StorageMode {
+    /// Disk mode with default segment size and keep-forever retention.
+    pub fn disk(data_dir: impl Into<PathBuf>) -> Self {
+        StorageMode::Disk {
+            data_dir: data_dir.into(),
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            retention: Retention::default(),
+        }
+    }
+
+    /// Override the segment size (no-op on `Memory`).
+    pub fn segment_bytes(self, n: u64) -> Self {
+        match self {
+            StorageMode::Disk { data_dir, retention, .. } => {
+                StorageMode::Disk { data_dir, segment_bytes: n.max(1), retention }
+            }
+            m => m,
+        }
+    }
+
+    /// Override the retention policy (no-op on `Memory`).
+    pub fn retention(self, retention: Retention) -> Self {
+        match self {
+            StorageMode::Disk { data_dir, segment_bytes, .. } => {
+                StorageMode::Disk { data_dir, segment_bytes, retention }
+            }
+            m => m,
+        }
+    }
+
+    pub fn is_disk(&self) -> bool {
+        matches!(self, StorageMode::Disk { .. })
+    }
+}
+
+/// Broker-wide storage configuration: a default mode plus per-topic
+/// overrides. [`super::embedded::BrokerCore::with_config`] recovers every
+/// durable topic found under the configured data dirs at boot.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BrokerConfig {
+    pub default_mode: StorageMode,
+    /// Exact-name overrides, checked before `default_mode`.
+    pub topic_modes: Vec<(String, StorageMode)>,
+    /// Boot recovery deletes stale [`is_session_scoped_topic`] dirs
+    /// (anonymous `dstream-<id>` topics) instead of re-opening them.
+    /// Enabled by deployments that own the dstream namespace
+    /// (`CometBuilder::data_dir`); off by default so a standalone broker
+    /// never deletes a user topic that merely matches the pattern.
+    pub reap_session_scoped: bool,
+}
+
+impl BrokerConfig {
+    /// Everything in memory (identical to `BrokerCore::new`).
+    pub fn memory() -> Self {
+        Self::default()
+    }
+
+    /// Every topic durable under `data_dir` (default segments/retention).
+    pub fn disk(data_dir: impl Into<PathBuf>) -> Self {
+        Self { default_mode: StorageMode::disk(data_dir), topic_modes: Vec::new() }
+    }
+
+    /// Replace the default mode (builder style).
+    pub fn default_mode(mut self, mode: StorageMode) -> Self {
+        self.default_mode = mode;
+        self
+    }
+
+    /// Per-topic override (builder style).
+    pub fn topic_mode(mut self, topic: &str, mode: StorageMode) -> Self {
+        self.topic_modes.push((topic.to_string(), mode));
+        self
+    }
+
+    /// Enable boot-time reaping of stale session-scoped (anonymous
+    /// `dstream-<id>`) topic dirs — see the field docs.
+    pub fn reap_session_scoped(mut self, on: bool) -> Self {
+        self.reap_session_scoped = on;
+        self
+    }
+
+    /// Storage mode for one topic.
+    pub fn mode_for(&self, topic: &str) -> &StorageMode {
+        self.topic_modes
+            .iter()
+            .find(|(t, _)| t == topic)
+            .map(|(_, m)| m)
+            .unwrap_or(&self.default_mode)
+    }
+
+    /// True when any topic could be durable.
+    pub fn any_disk(&self) -> bool {
+        self.default_mode.is_disk() || self.topic_modes.iter().any(|(_, m)| m.is_disk())
+    }
+}
+
+// ---- CRC32 (IEEE) ------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Incremental CRC32 (IEEE, the Kafka/zlib polynomial) — lets the segment
+/// writer checksum header + key + value slices without concatenating them.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32(u32);
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = CRC_TABLE[((self.0 ^ b as u32) & 0xFF) as usize] ^ (self.0 >> 8);
+        }
+    }
+
+    pub fn finish(self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC32 of a buffer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ---- frame scanning (shared by segments and the offsets journal) -------
+
+/// Byte overhead per frame: `body_len: u32` + `crc: u32`.
+pub(crate) const FRAME_HEADER: usize = 8;
+
+/// Scan `data` as a sequence of `[len][crc][body]` frames, calling
+/// `on_body(frame_start, body)` for each valid frame. Returns the length of
+/// the valid prefix — anything past it (a torn or corrupt tail) should be
+/// truncated by the caller. `on_body` returning `false` rejects the frame
+/// (semantic corruption, e.g. a non-dense offset), also ending the scan.
+pub(crate) fn scan_frames(data: &[u8], mut on_body: impl FnMut(usize, &[u8]) -> bool) -> usize {
+    let mut pos = 0usize;
+    loop {
+        let rest = data.len() - pos;
+        if rest < FRAME_HEADER {
+            return pos; // torn header (or clean end when rest == 0)
+        }
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+        if len > crate::util::bytes::MAX_LEN as usize || rest - FRAME_HEADER < len {
+            return pos; // insane length or torn body
+        }
+        let body = &data[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if crc32(body) != crc || !on_body(pos, body) {
+            return pos; // bit rot or semantic corruption
+        }
+        pos += FRAME_HEADER + len;
+    }
+}
+
+// ---- topic directory names ---------------------------------------------
+
+/// Escape a topic name into a filesystem-safe directory name. Reversible
+/// (`%XX` escapes), so boot-time recovery can list `<data_dir>/*` and
+/// reconstruct the topic names.
+pub fn topic_dir_name(topic: &str) -> String {
+    let mut out = String::with_capacity(topic.len());
+    for b in topic.bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'.' | b'_' | b'-' => out.push(b as char),
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// True for topic names of **anonymous** object streams (`dstream-<id>`,
+/// see `crate::dstream::api::topic_for`). Stream ids are dense per registry
+/// session, so these topics are only meaningful within one deployment
+/// lifetime: boot recovery deletes them instead of resurrecting them — a
+/// new session's stream id 0 must see an empty topic, not a previous
+/// session's leftovers. Aliased streams use the disjoint `dstream-a-…`
+/// namespace and do recover.
+pub fn is_session_scoped_topic(name: &str) -> bool {
+    name.strip_prefix("dstream-")
+        .is_some_and(|rest| !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()))
+}
+
+/// True when `dir` has the on-disk structure of a broker topic: at least
+/// one `p<N>` partition directory or an `offsets.log` journal. Boot
+/// recovery uses this to leave foreign directories in a shared data dir
+/// alone instead of registering them as phantom topics (and writing
+/// segment files into them).
+pub fn looks_like_topic_dir(dir: &Path) -> bool {
+    if dir.join("offsets.log").is_file() {
+        return true;
+    }
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return false;
+    };
+    entries.flatten().any(|e| {
+        e.path().is_dir()
+            && e.file_name()
+                .to_str()
+                .and_then(|n| n.strip_prefix('p'))
+                .is_some_and(|rest| !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()))
+    })
+}
+
+/// Invert [`topic_dir_name`]. `None` on malformed escapes (foreign dirs).
+pub fn topic_from_dir_name(dir: &str) -> Option<String> {
+    let bytes = dir.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = bytes.get(i + 1..i + 3)?;
+            let s = std::str::from_utf8(hex).ok()?;
+            out.push(u8::from_str_radix(s, 16).ok()?);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Incremental == one-shot.
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn scan_frames_accepts_valid_and_truncates_torn() {
+        let mut data = Vec::new();
+        for body in [&b"hello"[..], &b""[..], &b"world!"[..]] {
+            data.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            data.extend_from_slice(&crc32(body).to_le_bytes());
+            data.extend_from_slice(body);
+        }
+        let full = data.len();
+        let mut seen = Vec::new();
+        assert_eq!(scan_frames(&data, |_, b| {
+            seen.push(b.to_vec());
+            true
+        }), full);
+        assert_eq!(seen.len(), 3);
+        // Torn tail: every proper prefix of the final frame scans to the
+        // boundary after the second frame.
+        let second_end = full - (FRAME_HEADER + 6);
+        for cut in second_end..full {
+            assert_eq!(scan_frames(&data[..cut], |_, _| true), second_end, "cut {cut}");
+        }
+        // Bit rot in a body is caught by the CRC.
+        let mut rotten = data.clone();
+        rotten[FRAME_HEADER + 1] ^= 0x40;
+        assert_eq!(scan_frames(&rotten, |_, _| true), 0);
+    }
+
+    #[test]
+    fn topic_dir_name_roundtrips() {
+        for t in ["dstream-3", "plain", "has space", "slash/dots..", "pct%20", "uni-ü"] {
+            let dir = topic_dir_name(t);
+            assert!(dir.bytes().all(|b| b.is_ascii_alphanumeric() || b"._-%".contains(&b)));
+            assert_eq!(topic_from_dir_name(&dir).as_deref(), Some(t), "{t}");
+        }
+        assert_eq!(topic_from_dir_name("bad%zz"), None);
+        assert_eq!(topic_from_dir_name("bad%2"), None);
+    }
+
+    #[test]
+    fn session_scoped_topic_names_are_recognised() {
+        assert!(is_session_scoped_topic("dstream-0"));
+        assert!(is_session_scoped_topic("dstream-123"));
+        assert!(!is_session_scoped_topic("dstream-a-numbers"), "aliased streams recover");
+        assert!(!is_session_scoped_topic("dstream-a-7"), "alias \"7\" is not id 7");
+        assert!(!is_session_scoped_topic("dstream-"));
+        assert!(!is_session_scoped_topic("events"));
+    }
+
+    #[test]
+    fn topic_dir_structure_check() {
+        let base = std::env::temp_dir()
+            .join(format!("hybridws-topicdir-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let topic = base.join("t");
+        std::fs::create_dir_all(topic.join("p0")).unwrap();
+        assert!(looks_like_topic_dir(&topic), "p0/ marks a topic dir");
+        let journal_only = base.join("j");
+        std::fs::create_dir_all(&journal_only).unwrap();
+        std::fs::write(journal_only.join("offsets.log"), b"").unwrap();
+        assert!(looks_like_topic_dir(&journal_only), "offsets.log marks a topic dir");
+        let foreign = base.join("photos");
+        std::fs::create_dir_all(&foreign).unwrap();
+        std::fs::write(foreign.join("cat.jpg"), b"meow").unwrap();
+        assert!(!looks_like_topic_dir(&foreign), "foreign dirs are not topics");
+        assert!(!looks_like_topic_dir(&base.join("missing")));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn storage_mode_builders() {
+        let m = StorageMode::disk("/tmp/x").segment_bytes(1024).retention(
+            Retention::keep_forever().max_bytes(1 << 20).max_age_ms(60_000),
+        );
+        match &m {
+            StorageMode::Disk { data_dir, segment_bytes, retention } => {
+                assert_eq!(data_dir, &PathBuf::from("/tmp/x"));
+                assert_eq!(*segment_bytes, 1024);
+                assert_eq!(retention.max_bytes, Some(1 << 20));
+                assert_eq!(retention.max_age_ms, Some(60_000));
+            }
+            StorageMode::Memory => panic!("expected disk"),
+        }
+        assert!(m.is_disk());
+        assert!(!StorageMode::Memory.segment_bytes(9).is_disk());
+    }
+
+    #[test]
+    fn broker_config_mode_lookup() {
+        let cfg = BrokerConfig::memory().topic_mode("hot", StorageMode::disk("/tmp/d"));
+        assert!(!cfg.default_mode.is_disk());
+        assert!(cfg.mode_for("hot").is_disk());
+        assert!(!cfg.mode_for("other").is_disk());
+        assert!(cfg.any_disk());
+        assert!(!BrokerConfig::memory().any_disk());
+        assert!(BrokerConfig::disk("/tmp/d").mode_for("anything").is_disk());
+    }
+}

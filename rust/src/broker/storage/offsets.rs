@@ -1,0 +1,310 @@
+//! `OffsetStore`: the per-topic consumer-group cursor journal.
+//!
+//! An append-only file of CRC-framed entries, one per cursor change
+//! (claim, commit, crash rewind). Last entry per `(group, partition)` wins.
+//! The journal is replayed on open (torn tail truncated, like segments) and
+//! **compacted** — both at open and in place whenever the file outgrows a
+//! small multiple of its live size — so it stays O(groups × partitions) on
+//! disk no matter how many fetches run between restarts.
+//!
+//! Restart semantics: the broker replays `committed` as the resume point —
+//! claims made by consumers that died with the process are redelivered
+//! (at-least-once), exactly like [`GroupState::rewind_to_committed`] after
+//! a member crash. The claim `position` is journalled too, for
+//! introspection and forensics.
+//!
+//! [`GroupState::rewind_to_committed`]: crate::broker::group::GroupState::rewind_to_committed
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use log::{error, warn};
+
+// The `Wire` impl for `AssignmentMode` lives in `broker::protocol`.
+use crate::broker::group::AssignmentMode;
+use crate::util::bytes::ByteWriter;
+use crate::util::wire::Wire;
+
+use super::{crc32, scan_frames};
+
+/// Floor for the compaction trigger: journals smaller than this are never
+/// rewritten mid-flight.
+const COMPACT_MIN_BYTES: u64 = 64 * 1024;
+
+/// One journalled cursor state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OffsetEntry {
+    pub group: String,
+    pub mode: AssignmentMode,
+    pub partition: u64,
+    /// Claim position at journal time (forensics; not the resume point).
+    pub position: u64,
+    /// Commit point — where the group resumes after a restart.
+    pub committed: u64,
+}
+
+crate::wire_struct!(OffsetEntry {
+    group: String,
+    mode: AssignmentMode,
+    partition: u64,
+    position: u64,
+    committed: u64,
+});
+
+/// Append-only cursor journal for one topic, compacted when it outgrows
+/// its live entry set.
+#[derive(Debug)]
+pub struct OffsetStore {
+    path: PathBuf,
+    file: Option<File>,
+    /// Last entry per `(group, partition)` — what a compaction rewrites.
+    live: BTreeMap<(String, u64), OffsetEntry>,
+    /// Current file length.
+    bytes: u64,
+    /// Compact when `bytes` reaches this (re-derived after each compaction).
+    threshold: u64,
+    scratch: ByteWriter,
+    failed: bool,
+}
+
+/// Append one `[len|crc|body]` frame for `e` — the single frame writer
+/// shared by `note` and both compaction paths (the scanner side is
+/// [`scan_frames`]).
+fn put_frame(w: &mut ByteWriter, e: &OffsetEntry) {
+    let body = {
+        let mut b = ByteWriter::new();
+        e.encode(&mut b);
+        b.into_vec()
+    };
+    w.put_u32(body.len() as u32);
+    w.put_u32(crc32(&body));
+    w.put_raw(&body);
+}
+
+/// Serialise a whole live set as one compacted journal image.
+fn compacted_image(live: &BTreeMap<(String, u64), OffsetEntry>) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(live.len() * 64);
+    for e in live.values() {
+        put_frame(&mut w, e);
+    }
+    w.into_vec()
+}
+
+impl OffsetStore {
+    /// Open the journal at `path`, replay it (last entry per
+    /// `(group, partition)` wins, torn tail discarded), compact it on disk
+    /// and return the live entries sorted by `(group, partition)`.
+    pub fn open(path: &Path) -> io::Result<(Self, Vec<OffsetEntry>)> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let data = std::fs::read(path).unwrap_or_default();
+        let mut live: BTreeMap<(String, u64), OffsetEntry> = BTreeMap::new();
+        let valid = scan_frames(&data, |_, body| match OffsetEntry::decode_exact(body) {
+            Ok(e) => {
+                live.insert((e.group.clone(), e.partition), e);
+                true
+            }
+            Err(_) => false,
+        });
+        if valid < data.len() {
+            warn!(
+                "offset journal {path:?}: discarding {} torn tail bytes",
+                data.len() - valid
+            );
+        }
+        // Compact: rewrite only the live entries (atomic tmp + rename).
+        let image = compacted_image(&live);
+        let tmp = path.with_extension("log.tmp");
+        std::fs::write(&tmp, &image)?;
+        std::fs::rename(&tmp, path)?;
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        let bytes = image.len() as u64;
+        let entries: Vec<OffsetEntry> = live.values().cloned().collect();
+        Ok((
+            Self {
+                path: path.to_path_buf(),
+                file: Some(file),
+                live,
+                bytes,
+                threshold: COMPACT_MIN_BYTES.max(bytes * 4),
+                scratch: ByteWriter::new(),
+                failed: false,
+            },
+            entries,
+        ))
+    }
+
+    /// Journal one cursor change; compacts in place when the file has
+    /// outgrown its live set. I/O errors degrade the store (logged)
+    /// instead of failing the fetch/commit path.
+    pub fn note(&mut self, e: &OffsetEntry) {
+        if self.failed {
+            return;
+        }
+        self.live.insert((e.group.clone(), e.partition), e.clone());
+        self.scratch.clear();
+        put_frame(&mut self.scratch, e);
+        let res = match self.file.as_mut() {
+            Some(f) => f.write_all(self.scratch.as_slice()),
+            None => Err(io::Error::new(io::ErrorKind::Other, "journal not open")),
+        };
+        match res {
+            Ok(()) => {
+                self.bytes += self.scratch.len() as u64;
+                if self.bytes >= self.threshold {
+                    self.compact();
+                }
+            }
+            Err(err) => self.degrade("append", &err),
+        }
+    }
+
+    /// Rewrite the journal as just its live entries (atomic tmp + rename),
+    /// then re-derive the next compaction threshold.
+    fn compact(&mut self) {
+        let res = (|| -> io::Result<()> {
+            let image = compacted_image(&self.live);
+            let tmp = self.path.with_extension("log.tmp");
+            std::fs::write(&tmp, &image)?;
+            std::fs::rename(&tmp, &self.path)?;
+            self.file = Some(OpenOptions::new().create(true).append(true).open(&self.path)?);
+            self.bytes = image.len() as u64;
+            self.threshold = COMPACT_MIN_BYTES.max(self.bytes * 4);
+            Ok(())
+        })();
+        if let Err(err) = res {
+            self.degrade("compact", &err);
+        }
+    }
+
+    fn degrade(&mut self, what: &str, err: &io::Error) {
+        error!(
+            "offset journal {:?}: {what} failed ({err}) — cursor persistence degraded",
+            self.path
+        );
+        self.failed = true;
+    }
+
+    /// True after an I/O error degraded this journal.
+    pub fn failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Current journal length in bytes (tests).
+    pub fn len_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hybridws-offs-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.join("offsets.log")
+    }
+
+    fn entry(group: &str, partition: u64, position: u64, committed: u64) -> OffsetEntry {
+        OffsetEntry {
+            group: group.into(),
+            mode: AssignmentMode::Shared,
+            partition,
+            position,
+            committed,
+        }
+    }
+
+    #[test]
+    fn journal_replays_last_entry_per_cursor() {
+        let path = tmp_path("replay");
+        let (mut store, entries) = OffsetStore::open(&path).unwrap();
+        assert!(entries.is_empty());
+        store.note(&entry("g1", 0, 3, 0));
+        store.note(&entry("g1", 0, 7, 4)); // supersedes the first
+        store.note(&entry("g1", 1, 2, 2));
+        store.note(&entry("g2", 0, 9, 9));
+        assert!(!store.failed());
+        drop(store);
+        let (_, entries) = OffsetStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0], entry("g1", 0, 7, 4));
+        assert_eq!(entries[1], entry("g1", 1, 2, 2));
+        assert_eq!(entries[2], entry("g2", 0, 9, 9));
+        std::fs::remove_dir_all(path.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn open_compacts_the_journal() {
+        let path = tmp_path("compact");
+        let (mut store, _) = OffsetStore::open(&path).unwrap();
+        for i in 0..200u64 {
+            store.note(&entry("g", 0, i, i));
+        }
+        drop(store);
+        let grown = std::fs::metadata(&path).unwrap().len();
+        let (_, entries) = OffsetStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        let compacted = std::fs::metadata(&path).unwrap().len();
+        assert!(compacted < grown / 10, "{compacted} vs {grown}");
+        std::fs::remove_dir_all(path.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn journal_growth_is_bounded_between_restarts() {
+        // A hot consumer journalling one cursor forever must trigger the
+        // in-place compaction: the file stays near COMPACT_MIN_BYTES, not
+        // O(fetches).
+        let path = tmp_path("bounded");
+        let (mut store, _) = OffsetStore::open(&path).unwrap();
+        // ~40 B/frame → 100k notes ≈ 4 MB without compaction.
+        for i in 0..100_000u64 {
+            store.note(&entry("g", i % 4, i, i));
+        }
+        assert!(!store.failed());
+        assert!(
+            store.len_bytes() < 2 * COMPACT_MIN_BYTES,
+            "journal must compact in place, got {} bytes",
+            store.len_bytes()
+        );
+        drop(store);
+        let (_, entries) = OffsetStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 4, "one live entry per partition survives");
+        assert_eq!(entries[3], entry("g", 3, 99_999, 99_999));
+        std::fs::remove_dir_all(path.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_discarded() {
+        let path = tmp_path("torn");
+        let (mut store, _) = OffsetStore::open(&path).unwrap();
+        store.note(&entry("g", 0, 5, 5));
+        store.note(&entry("g", 1, 6, 6));
+        drop(store);
+        let len = std::fs::metadata(&path).unwrap().len();
+        OpenOptions::new().write(true).open(&path).unwrap().set_len(len - 3).unwrap();
+        let (_, entries) = OffsetStore::open(&path).unwrap();
+        assert_eq!(entries, vec![entry("g", 0, 5, 5)], "torn final entry dropped");
+        std::fs::remove_dir_all(path.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn entry_wire_roundtrip() {
+        let e = OffsetEntry {
+            group: "app".into(),
+            mode: AssignmentMode::Partitioned,
+            partition: 3,
+            position: 10,
+            committed: 8,
+        };
+        assert_eq!(OffsetEntry::decode_exact(&e.encode_vec()).unwrap(), e);
+    }
+}

@@ -1,0 +1,407 @@
+//! One segment file: a CRC-framed run of records starting at a fixed base
+//! offset, plus its sparse in-memory offset index.
+//!
+//! File format — a sequence of frames, no file header:
+//!
+//! ```text
+//! frame := body_len: u32 | crc32(body): u32 | body
+//! body  := offset: u64 | timestamp_ms: u64 | key: Option<Blob> | value: Blob
+//! ```
+//!
+//! `body` is byte-identical to the wire encoding of
+//! [`crate::broker::Record`], so recovery is `Record::decode_exact` behind a
+//! CRC check. The writer assembles the frame header + record header in a
+//! reused scratch buffer and then writes the value bytes **directly from
+//! the producer's `Arc` allocation** — the same `SharedBytes` the in-memory
+//! log serves to consumers — so a disk publish adds no payload copy.
+//!
+//! The sparse index (`offset → file position`, one entry per
+//! [`INDEX_STRIDE`] bytes) is not persisted: it is rebuilt by the recovery
+//! scan on open, which also verifies every CRC, enforces offset density and
+//! truncates a torn tail in place.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use log::warn;
+
+use crate::broker::record::Record;
+use crate::util::wire::Wire;
+
+use super::{crc32, scan_frames, Crc32, FRAME_HEADER};
+
+/// Sparse-index granularity: one entry per this many file bytes.
+pub const INDEX_STRIDE: u64 = 4096;
+
+/// Width of the zero-padded base offset in segment file names.
+const NAME_DIGITS: usize = 20;
+
+/// One segment file (`<base:020>.seg`).
+#[derive(Debug)]
+pub struct Segment {
+    path: PathBuf,
+    /// Offset of the first record this segment holds.
+    base: u64,
+    /// Offset the next appended record must have.
+    next: u64,
+    /// Valid file length in bytes.
+    bytes: u64,
+    /// Timestamp of the newest record (age-based retention).
+    last_ts_ms: u64,
+    /// Sparse `(offset, file position)` index, ascending in both fields.
+    index: Vec<(u64, u64)>,
+    /// Append handle — `Some` only while this is the active segment.
+    file: Option<File>,
+    /// Reused frame-assembly buffer (frame header + record header + key).
+    scratch: Vec<u8>,
+}
+
+/// `<base>.seg` file name for a base offset.
+pub fn segment_file_name(base: u64) -> String {
+    format!("{base:020}.seg")
+}
+
+/// Parse the base offset out of a segment file name.
+pub fn parse_segment_name(name: &str) -> Option<u64> {
+    let stem = name.strip_suffix(".seg")?;
+    if stem.len() != NAME_DIGITS {
+        return None;
+    }
+    stem.parse().ok()
+}
+
+impl Segment {
+    /// Create a fresh, empty segment starting at `base`.
+    pub fn create(dir: &Path, base: u64) -> io::Result<Self> {
+        let path = dir.join(segment_file_name(base));
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Self {
+            path,
+            base,
+            next: base,
+            bytes: 0,
+            last_ts_ms: 0,
+            index: Vec::new(),
+            file: Some(file),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Open an existing segment: scan every frame (verifying CRC, record
+    /// decode and offset density), rebuild the sparse index, truncate any
+    /// torn/corrupt tail in place, and return the recovered records.
+    /// The segment comes back sealed — call [`Segment::reopen_append`] on
+    /// the one that becomes active.
+    pub fn open(path: &Path) -> io::Result<(Self, Vec<Arc<Record>>)> {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or_default();
+        let base = parse_segment_name(name).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, format!("bad segment name {name:?}"))
+        })?;
+        let data = std::fs::read(path)?;
+        let mut records: Vec<Arc<Record>> = Vec::new();
+        let mut index: Vec<(u64, u64)> = Vec::new();
+        let mut last_indexed = 0u64;
+        let mut last_ts = 0u64;
+        let valid = scan_frames(&data, |pos, body| {
+            let Ok(rec) = Record::decode_exact(body) else {
+                return false;
+            };
+            if rec.offset != base + records.len() as u64 {
+                return false; // non-dense offset: treat as corruption
+            }
+            let pos = pos as u64;
+            if index.is_empty() || pos - last_indexed >= INDEX_STRIDE {
+                index.push((rec.offset, pos));
+                last_indexed = pos;
+            }
+            last_ts = rec.timestamp_ms;
+            records.push(Arc::new(rec));
+            true
+        });
+        if valid < data.len() {
+            warn!(
+                "segment {path:?}: truncating {} torn/corrupt tail bytes at {valid}",
+                data.len() - valid
+            );
+            OpenOptions::new().write(true).open(path)?.set_len(valid as u64)?;
+        }
+        let next = base + records.len() as u64;
+        Ok((
+            Self {
+                path: path.to_path_buf(),
+                base,
+                next,
+                bytes: valid as u64,
+                last_ts_ms: last_ts,
+                index,
+                file: None,
+                scratch: Vec::new(),
+            },
+            records,
+        ))
+    }
+
+    /// Re-open the append handle (recovery promotes the last segment back
+    /// to active).
+    pub fn reopen_append(&mut self) -> io::Result<()> {
+        self.file = Some(OpenOptions::new().create(true).append(true).open(&self.path)?);
+        Ok(())
+    }
+
+    /// Append one record. `rec.offset` must equal [`Segment::next_offset`].
+    /// The value bytes are written straight from the record's `Arc`
+    /// allocation (no intermediate copy).
+    pub fn append(&mut self, rec: &Record) -> io::Result<()> {
+        debug_assert_eq!(rec.offset, self.next, "segment appends must be dense");
+        let file = self
+            .file
+            .as_mut()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::Other, "segment is sealed"))?;
+        // Record header (everything before the value bytes), byte-identical
+        // to the wire encoding of `Record` minus the trailing value bytes.
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&[0u8; FRAME_HEADER]); // len + crc placeholders
+        self.scratch.extend_from_slice(&rec.offset.to_le_bytes());
+        self.scratch.extend_from_slice(&rec.timestamp_ms.to_le_bytes());
+        match &rec.key {
+            None => self.scratch.push(0),
+            Some(k) => {
+                self.scratch.push(1);
+                self.scratch.extend_from_slice(&(k.len() as u32).to_le_bytes());
+                self.scratch.extend_from_slice(k);
+            }
+        }
+        self.scratch.extend_from_slice(&(rec.value.len() as u32).to_le_bytes());
+        let head = &self.scratch[FRAME_HEADER..];
+        let body_len = head.len() + rec.value.len();
+        let mut crc = Crc32::new();
+        crc.update(head);
+        crc.update(&rec.value);
+        let crc = crc.finish();
+        // Patch the placeholders, then two writes: [len|crc|head] + value —
+        // the value bytes go out straight from the shared Arc allocation.
+        self.scratch[0..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+        self.scratch[4..8].copy_from_slice(&crc.to_le_bytes());
+        file.write_all(&self.scratch)?;
+        file.write_all(&rec.value)?;
+        let pos = self.bytes;
+        if self.index.is_empty() || pos - self.index.last().unwrap().1 >= INDEX_STRIDE {
+            self.index.push((rec.offset, pos));
+        }
+        self.bytes += (FRAME_HEADER + body_len) as u64;
+        self.last_ts_ms = rec.timestamp_ms;
+        self.next += 1;
+        Ok(())
+    }
+
+    /// Seal: fsync and drop the append handle. Idempotent.
+    pub fn seal(&mut self) -> io::Result<()> {
+        if let Some(file) = self.file.take() {
+            file.sync_all()?;
+        }
+        Ok(())
+    }
+
+    /// Delete the backing file (retention / topic deletion).
+    pub fn delete(mut self) -> io::Result<()> {
+        self.file = None;
+        std::fs::remove_file(&self.path)
+    }
+
+    /// Read one record from disk by offset, seeking via the sparse index
+    /// (recovery verification and tests; the serving path reads memory).
+    pub fn read(&self, offset: u64) -> io::Result<Option<Record>> {
+        if offset < self.base || offset >= self.next {
+            return Ok(None);
+        }
+        // Greatest index entry at or below the target.
+        let i = self.index.partition_point(|&(o, _)| o <= offset);
+        let (_, mut pos) = if i == 0 { (self.base, 0) } else { self.index[i - 1] };
+        let mut f = File::open(&self.path)?;
+        f.seek(SeekFrom::Start(pos))?;
+        let mut header = [0u8; FRAME_HEADER];
+        while pos < self.bytes {
+            f.read_exact(&mut header)?;
+            let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+            let mut body = vec![0u8; len];
+            f.read_exact(&mut body)?;
+            pos += (FRAME_HEADER + len) as u64;
+            // Body starts with the offset (little-endian u64).
+            if body.len() >= 8 && u64::from_le_bytes(body[0..8].try_into().unwrap()) == offset {
+                if crc32(&body) != crc {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("crc mismatch reading offset {offset}"),
+                    ));
+                }
+                return Record::decode_exact(&body)
+                    .map(Some)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()));
+            }
+        }
+        Ok(None)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Offset the next append gets (== base + record count).
+    pub fn next_offset(&self) -> u64 {
+        self.next
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn record_count(&self) -> u64 {
+        self.next - self.base
+    }
+
+    /// Newest record timestamp (0 when empty).
+    pub fn last_ts_ms(&self) -> u64 {
+        self.last_ts_ms
+    }
+
+    /// Sparse-index entry count (tests).
+    pub fn index_len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::record::now_ms;
+    use crate::util::wire::Blob;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hybridws-seg-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(offset: u64, payload: &[u8]) -> Record {
+        Record { offset, timestamp_ms: now_ms(), key: None, value: Blob::new(payload.to_vec()) }
+    }
+
+    #[test]
+    fn append_reopen_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let mut seg = Segment::create(&dir, 5).unwrap();
+        for i in 0..10u64 {
+            seg.append(&rec(5 + i, &[i as u8; 16])).unwrap();
+        }
+        seg.seal().unwrap();
+        let (back, records) = Segment::open(seg.path()).unwrap();
+        assert_eq!(back.base(), 5);
+        assert_eq!(back.next_offset(), 15);
+        assert_eq!(records.len(), 10);
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.offset, 5 + i as u64);
+            assert_eq!(r.value.as_slice(), &[i as u8; 16]);
+        }
+        // Point reads go through the sparse index.
+        assert_eq!(back.read(7).unwrap().unwrap().value.as_slice(), &[2u8; 16]);
+        assert!(back.read(4).unwrap().is_none());
+        assert!(back.read(15).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn keys_survive_the_disk_roundtrip() {
+        let dir = tmp_dir("keys");
+        let mut seg = Segment::create(&dir, 0).unwrap();
+        let r = Record {
+            offset: 0,
+            timestamp_ms: 42,
+            key: Some(Blob::new(b"k1".to_vec())),
+            value: Blob::new(b"v1".to_vec()),
+        };
+        seg.append(&r).unwrap();
+        seg.seal().unwrap();
+        let (_, records) = Segment::open(seg.path()).unwrap();
+        assert_eq!(*records[0], r);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_propagated() {
+        let dir = tmp_dir("torn");
+        let mut seg = Segment::create(&dir, 0).unwrap();
+        for i in 0..3u64 {
+            seg.append(&rec(i, &[7u8; 32])).unwrap();
+        }
+        seg.seal().unwrap();
+        let path = seg.path().to_path_buf();
+        let full = std::fs::metadata(&path).unwrap().len();
+        // Cut 10 bytes into the final frame.
+        OpenOptions::new().write(true).open(&path).unwrap().set_len(full - 10).unwrap();
+        let (back, records) = Segment::open(&path).unwrap();
+        assert_eq!(records.len(), 2, "torn final record discarded");
+        assert_eq!(back.next_offset(), 2);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), back.bytes());
+        // The truncated file appends cleanly from the recovered watermark.
+        let (mut back, _) = Segment::open(&path).unwrap();
+        back.reopen_append().unwrap();
+        back.append(&rec(2, b"replacement")).unwrap();
+        back.seal().unwrap();
+        let (_, records) = Segment::open(&path).unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[2].value.as_slice(), b"replacement");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_byte_is_caught_by_crc() {
+        let dir = tmp_dir("crc");
+        let mut seg = Segment::create(&dir, 0).unwrap();
+        for i in 0..2u64 {
+            seg.append(&rec(i, &[9u8; 24])).unwrap();
+        }
+        seg.seal().unwrap();
+        let path = seg.path().to_path_buf();
+        let mut data = std::fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 5] ^= 0xFF; // inside the last value
+        std::fs::write(&path, &data).unwrap();
+        let (_, records) = Segment::open(&path).unwrap();
+        assert_eq!(records.len(), 1, "corrupt record dropped, prefix kept");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sparse_index_stays_sparse() {
+        let dir = tmp_dir("sparse");
+        let mut seg = Segment::create(&dir, 0).unwrap();
+        for i in 0..256u64 {
+            seg.append(&rec(i, &[0u8; 100])).unwrap();
+        }
+        // ~130 B/frame → ~33 KiB file → ≈ 9 index entries, not 256.
+        assert!(seg.index_len() < 16, "index has {} entries", seg.index_len());
+        assert!(seg.index_len() >= 2);
+        seg.seal().unwrap();
+        let (back, _) = Segment::open(seg.path()).unwrap();
+        assert_eq!(back.index_len(), seg.index_len(), "rebuild matches append-time index");
+        for probe in [0u64, 1, 100, 255] {
+            assert_eq!(back.read(probe).unwrap().unwrap().offset, probe);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn segment_names_roundtrip() {
+        assert_eq!(segment_file_name(0), "00000000000000000000.seg");
+        assert_eq!(parse_segment_name(&segment_file_name(12345)), Some(12345));
+        assert_eq!(parse_segment_name("junk.seg"), None);
+        assert_eq!(parse_segment_name("meta.bin"), None);
+    }
+}

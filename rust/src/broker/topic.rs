@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 
 use super::partition::PartitionLog;
 use super::record::{ProducerRecord, Record};
+use super::storage::{topic_dir_name, StorageMode};
 
 /// A topic with `n` independently-locked partitions.
 #[derive(Debug)]
@@ -33,9 +34,46 @@ pub struct Topic {
 impl Topic {
     pub fn new(name: &str, partitions: usize) -> Self {
         assert!(partitions > 0, "topic needs >= 1 partition");
+        Self::from_logs(name, (0..partitions).map(|_| PartitionLog::new()).collect())
+    }
+
+    /// Open a topic under a storage mode. `Memory` is [`Topic::new`];
+    /// `Disk` opens (and crash-recovers) one [`PartitionLog`] per
+    /// `<data_dir>/<topic>/p<i>` directory. Existing partition directories
+    /// win over the requested count, so a recovered topic keeps its layout
+    /// even if the caller asks for fewer partitions.
+    pub fn open(name: &str, partitions: usize, mode: &StorageMode) -> std::io::Result<Self> {
+        assert!(partitions > 0, "topic needs >= 1 partition");
+        let StorageMode::Disk { data_dir, segment_bytes, retention } = mode else {
+            return Ok(Self::new(name, partitions));
+        };
+        let tdir = data_dir.join(topic_dir_name(name));
+        let mut count = partitions.max(1);
+        if let Ok(entries) = std::fs::read_dir(&tdir) {
+            for e in entries.flatten() {
+                if let Some(p) = e
+                    .file_name()
+                    .to_str()
+                    .and_then(|n| n.strip_prefix('p'))
+                    .and_then(|n| n.parse::<usize>().ok())
+                {
+                    count = count.max(p + 1);
+                }
+            }
+        }
+        let logs = (0..count)
+            .map(|p| {
+                PartitionLog::open_disk(&tdir.join(format!("p{p}")), *segment_bytes, *retention)
+            })
+            .collect::<std::io::Result<Vec<_>>>()?;
+        Ok(Self::from_logs(name, logs))
+    }
+
+    fn from_logs(name: &str, logs: Vec<PartitionLog>) -> Self {
+        assert!(!logs.is_empty(), "topic needs >= 1 partition");
         Self {
             name: name.to_string(),
-            partitions: (0..partitions).map(|_| Mutex::new(PartitionLog::new())).collect(),
+            partitions: logs.into_iter().map(Mutex::new).collect(),
             rr: AtomicU64::new(0),
             publish_seq: AtomicU64::new(0),
             waiters: AtomicU64::new(0),
@@ -203,6 +241,28 @@ impl Topic {
     pub fn total_bytes(&self) -> usize {
         self.partitions.iter().map(|p| p.lock().unwrap().retained_bytes()).sum()
     }
+
+    // ---- durability introspection --------------------------------------
+
+    /// True when this topic's partitions are disk-backed.
+    pub fn is_durable(&self) -> bool {
+        self.partitions.first().is_some_and(|p| p.lock().unwrap().is_durable())
+    }
+
+    /// Segment-file bytes across all partitions (0 in memory mode).
+    pub fn total_bytes_on_disk(&self) -> u64 {
+        self.partitions.iter().map(|p| p.lock().unwrap().bytes_on_disk()).sum()
+    }
+
+    /// Segment count across all partitions (0 in memory mode).
+    pub fn total_segments(&self) -> usize {
+        self.partitions.iter().map(|p| p.lock().unwrap().segment_count()).sum()
+    }
+
+    /// Records replayed from disk when this topic was opened.
+    pub fn total_recovered(&self) -> u64 {
+        self.partitions.iter().map(|p| p.lock().unwrap().recovered_records()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +355,36 @@ mod tests {
         t.publish_to(1, ProducerRecord::new(vec![0]));
         assert_eq!(t.offsets_of(0), (0, 0));
         assert_eq!(t.offsets_of(1), (0, 1));
+    }
+
+    #[test]
+    fn disk_topic_reopens_with_records_and_extra_partition_dirs() {
+        use crate::broker::storage::{Retention, StorageMode};
+        let data_dir =
+            std::env::temp_dir().join(format!("hybridws-topic-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&data_dir);
+        let mode = StorageMode::disk(&data_dir).retention(Retention::default());
+        {
+            let t = Topic::open("t", 3, &mode).unwrap();
+            assert!(t.is_durable());
+            for i in 0..9 {
+                t.publish(ProducerRecord::new(vec![i]));
+            }
+            assert_eq!(t.total_records(), 9);
+        }
+        // Reopen asking for FEWER partitions: the on-disk layout wins.
+        let t = Topic::open("t", 1, &mode).unwrap();
+        assert_eq!(t.partition_count(), 3);
+        assert_eq!(t.total_records(), 9);
+        assert_eq!(t.total_recovered(), 9);
+        assert!(t.total_bytes_on_disk() > 0);
+        assert!(t.total_segments() >= 3);
+        // Memory topics report zero durability stats.
+        let m = Topic::new("m", 2);
+        assert!(!m.is_durable());
+        assert_eq!(m.total_bytes_on_disk(), 0);
+        assert_eq!(m.total_segments(), 0);
+        std::fs::remove_dir_all(&data_dir).unwrap();
     }
 
     #[test]

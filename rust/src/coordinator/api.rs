@@ -68,6 +68,8 @@ pub struct CometBuilder {
     name: String,
     /// Remote worker endpoints: (addr, slots).
     remote_workers: Vec<(String, usize)>,
+    /// Broker storage configuration (default: everything in memory).
+    broker: crate::broker::BrokerConfig,
 }
 
 impl Default for CometBuilder {
@@ -81,6 +83,7 @@ impl Default for CometBuilder {
             load_models: false,
             name: "comet".into(),
             remote_workers: Vec::new(),
+            broker: crate::broker::BrokerConfig::memory(),
         }
     }
 }
@@ -135,12 +138,34 @@ impl CometBuilder {
         self
     }
 
+    /// Durable streams: flip the embedded broker to
+    /// [`crate::broker::StorageMode::Disk`] under `dir`. Acked stream
+    /// records and committed consumer-group offsets survive a broker
+    /// restart; topics already persisted under `dir` are recovered when
+    /// the runtime builds.
+    pub fn data_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        // The runtime owns the dstream topic namespace, so it also opts in
+        // to reaping stale anonymous-stream topics at boot (session-scoped
+        // ids restart at 0 — recovering them would hand a fresh stream a
+        // previous session's records).
+        self.broker = crate::broker::BrokerConfig::disk(dir).reap_session_scoped(true);
+        self
+    }
+
+    /// Full broker storage configuration (per-topic modes, segment sizes,
+    /// retention). [`CometBuilder::data_dir`] is the common shorthand.
+    pub fn broker_config(mut self, cfg: crate::broker::BrokerConfig) -> Self {
+        self.broker = cfg;
+        self
+    }
+
     pub fn build(self) -> Result<CometRuntime> {
         crate::util::logging::init();
         // Deployment (paper Fig 8): master spawns the DistroStream Server
         // and the backend; every worker gets a client with its own identity.
         let (master_hub, registry, broker) =
-            DistroStreamHub::embedded(&format!("{}-master", self.name));
+            DistroStreamHub::embedded_with(&format!("{}-master", self.name), self.broker.clone())
+                .map_err(|e| anyhow!("broker storage: {e}"))?;
 
         let zoo = if self.load_models {
             let dir = find_artifacts_dir()
@@ -468,6 +493,26 @@ impl CometRuntime {
                 agg.entry(id).or_default().merge(&c);
             }
         }
+        // Join in the broker-side storage gauges (durable object streams;
+        // file streams have no broker topic and keep zeros). Topic names
+        // are alias-keyed when the stream has one (the restart-stable
+        // durable name), id-keyed otherwise. One registry lock snapshots
+        // every alias before the per-topic stats calls.
+        let aliases: std::collections::BTreeMap<StreamId, Option<String>> = {
+            let reg = self.registry.lock().unwrap();
+            agg.keys().map(|&id| (id, reg.entry(id).and_then(|e| e.alias.clone()))).collect()
+        };
+        for (id, c) in agg.iter_mut() {
+            let topic = match aliases.get(id).and_then(|a| a.as_deref()) {
+                Some(a) => crate::dstream::api::topic_for_alias(a),
+                None => crate::dstream::api::topic_for(*id),
+            };
+            if let Ok(ts) = self.broker.topic_stats(&topic) {
+                c.bytes_on_disk = ts.bytes_on_disk;
+                c.segments = ts.segments as u64;
+                c.recovered_records = ts.recovered_records;
+            }
+        }
         // `StreamStats` is an alias of the hub-side `StreamCounters`, so
         // the aggregate passes through unchanged.
         let out: Vec<(StreamId, StreamStats)> = agg.into_iter().collect();
@@ -708,6 +753,30 @@ mod tests {
         // Mirrored into the metrics registry for later inspection.
         assert_eq!(rt.metrics().stream(s.id()).unwrap().records_in, 5);
         rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn data_dir_runtime_reports_storage_gauges() {
+        let dir =
+            std::env::temp_dir().join(format!("hybridws-api-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rt = CometRuntime::builder()
+            .workers(&[2])
+            .scale(TimeScale::IDENTITY)
+            .data_dir(&dir)
+            .build()
+            .unwrap();
+        let s = rt.object_stream::<u64>(Some("durable")).unwrap();
+        s.publish_list(&[1, 2, 3]).unwrap();
+        assert_eq!(s.poll().unwrap().len(), 3);
+        let metrics = rt.stream_metrics();
+        let (_, stats) =
+            metrics.iter().find(|&&(id, _)| id == s.id()).expect("stream in metrics");
+        assert!(stats.bytes_on_disk > 0, "disk-mode stream must report segment bytes");
+        assert!(stats.segments >= 1);
+        assert_eq!(stats.recovered_records, 0, "fresh dir: nothing to recover");
+        rt.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -227,6 +227,9 @@ mod tests {
             batches_in: 4,
             bytes_in: 2400,
             fetches: 4,
+            bytes_on_disk: 1024,
+            segments: 2,
+            recovered_records: 0,
         };
         m.set_stream(7, s);
         let got = m.stream(7).unwrap();

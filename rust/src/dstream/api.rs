@@ -149,10 +149,33 @@ wire_struct!(StreamHandle {
     batch: BatchPolicy,
 });
 
+/// Broker topic name for an **anonymous** stream id. Ids are assigned
+/// densely per registry session, so these names are only meaningful within
+/// one deployment lifetime — durable storage should not rely on them
+/// across restarts (see [`StreamHandle::topic`]).
+pub fn topic_for(id: StreamId) -> String {
+    format!("dstream-{id}")
+}
+
+/// Broker topic name for an **aliased** stream. Aliases are chosen by the
+/// application and stable across restarts, so this is the name durable
+/// (disk-mode) topics recover under: a restarted runtime that re-creates
+/// the stream by alias binds to the same on-disk topic, records and
+/// consumer cursors. (The `a-` infix keeps alias names disjoint from the
+/// numeric anonymous namespace — alias `"3"` cannot collide with id 3.)
+pub fn topic_for_alias(alias: &str) -> String {
+    format!("dstream-a-{alias}")
+}
+
 impl StreamHandle {
-    /// Broker topic name for this stream.
+    /// Broker topic name for this stream: alias-keyed when the stream has
+    /// an alias (stable across restarts — what durable topics recover
+    /// under), id-keyed otherwise (session-scoped).
     pub fn topic(&self) -> String {
-        format!("dstream-{}", self.id)
+        match &self.alias {
+            Some(a) => topic_for_alias(a),
+            None => topic_for(self.id),
+        }
     }
 
     /// Replace the batch policy (builder style).
@@ -259,7 +282,10 @@ mod tests {
             batch: BatchPolicy::default().records(128).bytes(1 << 20).linger_ms(5),
         };
         assert_eq!(StreamHandle::decode_exact(&h.encode_vec()).unwrap(), h);
-        assert_eq!(h.topic(), "dstream-7");
+        // Aliased streams get a restart-stable, alias-keyed topic name;
+        // anonymous streams fall back to the session-scoped id.
+        assert_eq!(h.topic(), "dstream-a-myStream");
+        assert_eq!(StreamHandle { alias: None, ..h.clone() }.topic(), "dstream-7");
         assert_eq!(h.batch.max_records, 128);
     }
 

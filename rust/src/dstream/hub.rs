@@ -40,10 +40,23 @@ pub struct StreamCounters {
     /// invocations; a remote wait may slice one invocation into several
     /// bounded wire frames internally.
     pub fetches: u64,
+    /// Segment-file bytes backing this stream's topic (0 for memory-mode
+    /// and file streams). Broker-side state: hubs leave it 0; the runtime
+    /// fills it from `BrokerCore::topic_stats` when aggregating (see
+    /// `CometRuntime::stream_metrics`).
+    pub bytes_on_disk: u64,
+    /// On-disk segment count for this stream's topic (broker-side, like
+    /// `bytes_on_disk`).
+    pub segments: u64,
+    /// Records replayed from disk when this stream's topic was recovered
+    /// (broker-side, like `bytes_on_disk`).
+    pub recovered_records: u64,
 }
 
 impl StreamCounters {
-    /// Fold another sample into this one.
+    /// Fold another sample into this one. The broker-side storage gauges
+    /// (`bytes_on_disk`, `segments`, `recovered_records`) are taken by max
+    /// — every hub observes the same broker, so summing would overcount.
     pub fn merge(&mut self, other: &StreamCounters) {
         self.records_out += other.records_out;
         self.batches_out += other.batches_out;
@@ -52,6 +65,9 @@ impl StreamCounters {
         self.batches_in += other.batches_in;
         self.bytes_in += other.bytes_in;
         self.fetches += other.fetches;
+        self.bytes_on_disk = self.bytes_on_disk.max(other.bytes_on_disk);
+        self.segments = self.segments.max(other.segments);
+        self.recovered_records = self.recovered_records.max(other.recovered_records);
     }
 
     /// Mean records per delivering poll batch — the batch-efficiency
@@ -99,10 +115,22 @@ impl DistroStreamHub {
     /// Returns the hub and the shared state so more hubs (one per simulated
     /// process) can attach via [`DistroStreamHub::attach_embedded`].
     pub fn embedded(process: &str) -> (Arc<Self>, Arc<Mutex<StreamRegistry>>, Arc<BrokerCore>) {
+        Self::embedded_with(process, crate::broker::BrokerConfig::memory())
+            .expect("memory-mode embedded hub cannot fail")
+    }
+
+    /// [`DistroStreamHub::embedded`] with explicit broker storage
+    /// configuration — durable object streams when the config says
+    /// [`crate::broker::StorageMode::Disk`]. Recovers any topics already
+    /// persisted under the configured data dirs.
+    pub fn embedded_with(
+        process: &str,
+        config: crate::broker::BrokerConfig,
+    ) -> Result<(Arc<Self>, Arc<Mutex<StreamRegistry>>, Arc<BrokerCore>)> {
         let registry = Arc::new(Mutex::new(StreamRegistry::new()));
-        let core = BrokerCore::new();
+        let core = BrokerCore::with_config(config)?;
         let hub = Self::attach_embedded(process, &registry, &core);
-        (hub, registry, core)
+        Ok((hub, registry, core))
     }
 
     /// Attach another in-process hub (a simulated worker process) to shared

@@ -12,7 +12,9 @@
 //!   (the build environment has no serde/tokio/clap/proptest).
 //! - [`broker`] — a partitioned-log message broker (the Kafka substitute):
 //!   topics, partitions, offsets, consumer groups, record deletion for
-//!   exactly-once; embedded in-process and over TCP.
+//!   exactly-once; embedded in-process and over TCP. Topics are in-memory
+//!   by default or durable (`broker::storage`): segmented CRC-framed logs
+//!   with crash recovery, retention and persisted consumer offsets.
 //! - [`dstream`] — the **Distributed Stream Library** (the paper's §4):
 //!   the `DistroStream` API, `ObjectDistroStream` (broker-backed),
 //!   `FileDistroStream` (directory-monitor-backed), and the

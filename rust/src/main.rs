@@ -11,7 +11,7 @@
 use std::net::TcpListener;
 
 use hybridws::apps;
-use hybridws::broker::{BrokerCore, BrokerServer};
+use hybridws::broker::{BrokerConfig, BrokerCore, BrokerServer, Retention, StorageMode};
 use hybridws::coordinator::api::CometRuntime;
 use hybridws::coordinator::remote::serve_worker;
 use hybridws::dstream::DistroStreamServer;
@@ -52,9 +52,9 @@ fn usage() -> String {
         "hybridws {} — Hybrid Workflows (task-based + dataflows)\n\n\
          USAGE: hybridws <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
-           run <uc1|uc2|uc3|uc4>   run a use-case workload locally\n  \
+           run <uc1|uc2|uc3|uc4>   run a use-case workload locally (--data-dir for durable streams)\n  \
            worker                  serve as a remote worker (--listen, --slots)\n  \
-           broker                  standalone broker server (--listen)\n  \
+           broker                  standalone broker server (--listen, --data-dir, --retention-*)\n  \
            dstream-server          standalone DistroStream Server (--listen)\n  \
            info                    registered tasks + AOT models",
         hybridws::version()
@@ -76,11 +76,17 @@ fn cmd_run(raw: &[String]) -> i32 {
         .positional("usecase", "one of uc1, uc2, uc3, uc4")
         .opt("workers", Some("8,8"), "core slots per worker (comma list)")
         .opt("scale", Some("0.02"), "paper-time scale factor")
+        .opt("data-dir", None, "durable streams: persist broker topics under this directory")
         .flag("models", "load AOT artifacts (requires `make artifacts`)");
     let a = parse_or_exit(spec, raw);
     let workers = a.usize_list("workers");
     let scale = TimeScale::new(a.f64("scale"));
     let mut builder = CometRuntime::builder().workers(&workers).scale(scale);
+    if let Some(dir) = a.get("data-dir") {
+        // Flip the embedded broker to StorageMode::Disk: stream records and
+        // consumer-group offsets survive a restart of this process.
+        builder = builder.data_dir(dir);
+    }
     if a.flag("models") {
         builder = builder.with_models();
     }
@@ -163,9 +169,51 @@ fn cmd_worker(raw: &[String]) -> i32 {
 
 fn cmd_broker(raw: &[String]) -> i32 {
     let spec = ArgSpec::new("standalone stream-broker server")
-        .opt("listen", Some("127.0.0.1:9092"), "address to listen on");
+        .opt("listen", Some("127.0.0.1:9092"), "address to listen on")
+        .opt("data-dir", None, "durable topics: segmented logs + offset journal under this dir")
+        .opt("segment-mb", Some("8"), "segment size in MiB (disk mode)")
+        .opt("retention-mb", Some("0"), "drop oldest sealed segments past this many MiB (0 = keep)")
+        .opt(
+            "retention-min",
+            Some("0"),
+            "drop sealed segments older than this many minutes (0 = keep)",
+        );
     let a = parse_or_exit(spec, raw);
-    match BrokerServer::start(BrokerCore::new(), a.str("listen")) {
+    let core = match a.get("data-dir") {
+        None => BrokerCore::new(),
+        Some(dir) => {
+            let mut retention = Retention::keep_forever();
+            if a.u64("retention-mb") > 0 {
+                retention = retention.max_bytes(a.u64("retention-mb") * 1024 * 1024);
+            }
+            if a.u64("retention-min") > 0 {
+                retention = retention.max_age_ms(a.u64("retention-min") * 60_000);
+            }
+            let mode = StorageMode::disk(dir)
+                .segment_bytes(a.u64("segment-mb").max(1) * 1024 * 1024)
+                .retention(retention);
+            match BrokerCore::with_config(BrokerConfig::memory().default_mode(mode)) {
+                Ok(core) => {
+                    let recovered: u64 = core
+                        .topic_names()
+                        .iter()
+                        .filter_map(|t| core.topic_stats(t).ok())
+                        .map(|s| s.recovered_records)
+                        .sum();
+                    println!(
+                        "durable broker: data-dir {dir}, {} topics recovered ({recovered} records)",
+                        core.topic_names().len()
+                    );
+                    core
+                }
+                Err(e) => {
+                    eprintln!("broker storage recovery failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    };
+    match BrokerServer::start(core, a.str("listen")) {
         Ok(server) => {
             println!("broker listening on {}", server.addr);
             loop {

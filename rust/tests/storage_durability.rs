@@ -1,0 +1,371 @@
+//! Durability suite: crash recovery, torn-tail truncation, retention and
+//! persisted consumer offsets across embedded-broker restarts.
+//!
+//! The central property (the acceptance bar for the storage subsystem):
+//! truncating the active segment at **every** byte boundary of the final
+//! frame and reopening yields exactly the untorn prefix of records — the
+//! torn tail is discarded, never propagated, and never takes the prefix
+//! with it.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use hybridws::broker::record::{now_ms, ProducerRecord, Record};
+use hybridws::broker::storage::{DiskLog, Retention};
+use hybridws::broker::{
+    AssignmentMode, BrokerClient, BrokerConfig, BrokerCore, StorageMode,
+};
+use hybridws::dstream::{ConsumerMode, DistroStreamHub};
+use hybridws::util::quick::{check_with, ensure};
+use hybridws::util::rng::Rng;
+use hybridws::util::wire::Blob;
+
+/// Self-cleaning temp dir.
+struct TmpDir(PathBuf);
+
+impl TmpDir {
+    fn new(tag: &str) -> Self {
+        let d = std::env::temp_dir().join(format!(
+            "hybridws-durab-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        Self(d)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn rec(offset: u64, payload: &[u8]) -> Record {
+    Record { offset, timestamp_ms: now_ms(), key: None, value: Blob::new(payload.to_vec()) }
+}
+
+/// The only file in a fresh single-segment disk log.
+fn segment_file(dir: &Path) -> PathBuf {
+    dir.join("00000000000000000000.seg")
+}
+
+#[test]
+fn prop_torn_tail_truncated_at_every_byte_boundary() {
+    // For random record shapes: write N records, note the file size before
+    // and after the final record, then for every cut point inside the
+    // final frame reopen a truncated copy and require prefix-exactness.
+    check_with(
+        "torn tail truncation is prefix-exact",
+        8,
+        |r: &mut Rng| {
+            let n = r.range(2, 6);
+            (0..n)
+                .map(|_| {
+                    let len = r.range(0, 48);
+                    let mut payload = vec![0u8; len];
+                    r.fill_bytes(&mut payload);
+                    payload
+                })
+                .collect::<Vec<Vec<u8>>>()
+        },
+        |payloads| {
+            if payloads.len() < 2 {
+                return Ok(()); // shrunk below the interesting shape
+            }
+            let tmp = TmpDir::new("prop");
+            let write_dir = tmp.path().join("w");
+            let (mut log, _) = DiskLog::open(&write_dir, 1 << 30, Retention::default()).unwrap();
+            let n = payloads.len();
+            for (i, p) in payloads[..n - 1].iter().enumerate() {
+                log.append(&rec(i as u64, p));
+            }
+            ensure(!log.failed(), "disk append failed")?;
+            let prefix_len = std::fs::metadata(segment_file(&write_dir)).unwrap().len();
+            log.append(&rec(n as u64 - 1, &payloads[n - 1]));
+            ensure(!log.failed(), "disk append failed")?;
+            drop(log);
+            let data = std::fs::read(segment_file(&write_dir)).unwrap();
+            ensure(prefix_len < data.len() as u64, "final frame must add bytes")?;
+
+            // Every byte boundary of the final frame: prefix_len (clean
+            // boundary) through data.len() (untorn).
+            for cut in prefix_len as usize..=data.len() {
+                let case_dir = tmp.path().join(format!("cut-{cut}"));
+                std::fs::create_dir_all(&case_dir).unwrap();
+                std::fs::write(segment_file(&case_dir), &data[..cut]).unwrap();
+                let (reopened, records) =
+                    DiskLog::open(&case_dir, 1 << 30, Retention::default()).unwrap();
+                let expect = if cut == data.len() { n } else { n - 1 };
+                ensure(
+                    records.len() == expect,
+                    &format!("cut {cut}: recovered {} records, want {expect}", records.len()),
+                )?;
+                for (i, rec) in records.iter().enumerate() {
+                    ensure(rec.offset == i as u64, "recovered offsets must be dense")?;
+                    ensure(
+                        rec.value.as_slice() == payloads[i].as_slice(),
+                        &format!("cut {cut}: record {i} payload differs"),
+                    )?;
+                }
+                ensure(
+                    reopened.next_offset() == expect as u64,
+                    "watermark must match the recovered prefix",
+                )?;
+                std::fs::remove_dir_all(&case_dir).unwrap();
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn restart_resumes_consumer_group_from_committed_offset() {
+    // The embedded broker restarts (same data dir); the consumer group
+    // resumes from its committed offset — committed records are not
+    // redelivered, uncommitted ones are.
+    let tmp = TmpDir::new("resume");
+    let cfg = BrokerConfig::disk(tmp.path());
+    {
+        let client = BrokerClient::embedded(BrokerCore::with_config(cfg.clone()).unwrap());
+        client.create_topic("t", 1).unwrap();
+        for i in 0..12u8 {
+            client.publish("t", ProducerRecord::new(vec![i])).unwrap();
+        }
+        client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(mf.record_count(), 12);
+        client.commit("g", "t", &[(0, 7)]).unwrap();
+    } // crash with 12 claimed, 7 committed
+    let client = BrokerClient::embedded(BrokerCore::with_config(cfg).unwrap());
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+    let offsets: Vec<u64> =
+        mf.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.offset)).collect();
+    assert_eq!(offsets, (7..12).collect::<Vec<u64>>(), "resume exactly at the commit point");
+    // The group's mode survived too (journalled with every entry).
+    assert_eq!(client.positions("g", "t").unwrap()[0], (12, 7));
+}
+
+#[test]
+fn restart_preserves_multi_partition_watermarks_and_deletions() {
+    let tmp = TmpDir::new("multi");
+    // Small segments force rolls; per-topic override exercises mode_for.
+    let mode = StorageMode::disk(tmp.path()).segment_bytes(256);
+    let cfg = BrokerConfig::memory().topic_mode("durable", mode);
+    let (watermarks, starts) = {
+        let b = BrokerCore::with_config(cfg.clone()).unwrap();
+        b.create_topic("durable", 3).unwrap();
+        b.create_topic("ephemeral", 1).unwrap();
+        for i in 0..60u8 {
+            b.publish("durable", ProducerRecord::new(vec![i; 16])).unwrap();
+            b.publish("ephemeral", ProducerRecord::new(vec![i])).unwrap();
+        }
+        // Exactly-once style deletion on partition 0.
+        b.delete_records("durable", 0, 5).unwrap();
+        let s = b.topic_stats("durable").unwrap();
+        assert!(s.segments > 3, "256-byte segments must roll");
+        assert!(s.bytes_on_disk > 0);
+        assert_eq!(b.topic_stats("ephemeral").unwrap().bytes_on_disk, 0);
+        (s.high_watermarks.clone(), s.start_offsets.clone())
+    };
+    let b = BrokerCore::with_config(cfg).unwrap();
+    assert_eq!(b.topic_names(), vec!["durable".to_string()], "memory topic dies, durable lives");
+    let s = b.topic_stats("durable").unwrap();
+    assert_eq!(s.partitions, 3);
+    assert_eq!(s.high_watermarks, watermarks, "watermarks survive");
+    assert_eq!(s.start_offsets, starts, "deletion points survive");
+    assert_eq!(s.start_offsets[0], 5);
+    assert_eq!(
+        s.recovered_records,
+        watermarks.iter().sum::<u64>() - starts.iter().sum::<u64>(),
+        "recovered = live records only"
+    );
+    // Appends continue the dense offset sequence after recovery.
+    let (_, off) = b.publish("durable", ProducerRecord::new(vec![0xFF])).unwrap();
+    assert!(watermarks.contains(&off), "next offset continues a recovered watermark");
+}
+
+#[test]
+fn retention_bounds_disk_and_survives_restart() {
+    let tmp = TmpDir::new("retention");
+    let mode = StorageMode::disk(tmp.path())
+        .segment_bytes(512)
+        .retention(Retention::keep_forever().max_bytes(2048));
+    let cfg = BrokerConfig::memory().default_mode(mode);
+    let start = {
+        let b = BrokerCore::with_config(cfg.clone()).unwrap();
+        b.create_topic("t", 1).unwrap();
+        for i in 0..300u32 {
+            b.publish("t", ProducerRecord::new(vec![(i % 251) as u8; 32])).unwrap();
+        }
+        let s = b.topic_stats("t").unwrap();
+        assert!(s.start_offsets[0] > 0, "retention must drop sealed segments");
+        assert!(s.bytes_on_disk <= 2048 + 1024, "disk bounded by cap + active slack");
+        // Memory mirror trimmed to the same start.
+        assert_eq!(s.records as u64, s.high_watermarks[0] - s.start_offsets[0]);
+        s.start_offsets[0]
+    };
+    let b = BrokerCore::with_config(cfg).unwrap();
+    let s = b.topic_stats("t").unwrap();
+    // Open-time enforcement may advance the start further, never rewind it.
+    assert!(s.start_offsets[0] >= start, "{} < {start}", s.start_offsets[0]);
+    assert!(s.bytes_on_disk <= 2048 + 1024, "restart must re-enforce the cap");
+    assert_eq!(s.high_watermarks[0], 300);
+    // A fresh consumer only sees retained records.
+    b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let got = b.poll("g", "t", "m", usize::MAX).unwrap();
+    assert_eq!(got.first().unwrap().offset, s.start_offsets[0]);
+    assert_eq!(got.last().unwrap().offset, 299);
+}
+
+#[test]
+fn durable_ods_stream_survives_broker_restart() {
+    // The hub/ODS layer rides the same storage: records published through
+    // an object stream land in the durable topic and are recovered.
+    let tmp = TmpDir::new("ods");
+    let cfg = BrokerConfig::disk(tmp.path());
+    let topic = {
+        let (hub, _reg, _core) =
+            DistroStreamHub::embedded_with("p1", cfg.clone()).unwrap();
+        // AtLeastOnce: polls do not delete records, so the backlog persists.
+        let s = hub
+            .object_stream_with::<u64>(Some("durable"), 2, ConsumerMode::AtLeastOnce)
+            .unwrap();
+        s.publish_list(&(0..20u64).collect::<Vec<_>>()).unwrap();
+        assert_eq!(s.poll().unwrap().len(), 20);
+        s.handle().topic()
+    }; // hub + broker dropped
+    let core = BrokerCore::with_config(cfg).unwrap();
+    let stats = core.topic_stats(&topic).unwrap();
+    assert_eq!(stats.recovered_records, 20, "ODS records survive the restart");
+    assert_eq!(stats.partitions, 2);
+    // The app consumer group's claim state was journalled under the hub's
+    // shared group name.
+    let positions = core.positions("app", &topic).unwrap();
+    assert_eq!(positions.iter().map(|&(p, _)| p).sum::<u64>(), 0, "unacked claims rewound");
+}
+
+#[test]
+fn boot_reaps_session_scoped_topics_but_recovers_aliased_ones() {
+    // Anonymous-stream topics (`dstream-<id>`) are keyed by session-scoped
+    // dense ids: a restarted deployment reassigns those ids, so recovery
+    // (when the deployment opts in, as `CometBuilder::data_dir` does) must
+    // delete the stale dirs — a new session's stream 0 sees an empty topic,
+    // never a previous session's records. Aliased topics (`dstream-a-…`)
+    // are the durable namespace and do recover.
+    let tmp = TmpDir::new("reap");
+    let cfg = BrokerConfig::disk(tmp.path()).reap_session_scoped(true);
+    {
+        let b = BrokerCore::with_config(cfg.clone()).unwrap();
+        b.create_topic("dstream-0", 1).unwrap(); // an anonymous stream's topic
+        b.create_topic("dstream-a-keep", 1).unwrap(); // an aliased stream's topic
+        b.publish("dstream-0", ProducerRecord::new(vec![1])).unwrap();
+        b.publish("dstream-a-keep", ProducerRecord::new(vec![2])).unwrap();
+    }
+    // A foreign directory in the data dir must be left untouched and must
+    // not become a phantom topic.
+    std::fs::create_dir_all(tmp.path().join("photos")).unwrap();
+    std::fs::write(tmp.path().join("photos").join("cat.jpg"), b"not a segment").unwrap();
+    let b = BrokerCore::with_config(cfg.clone()).unwrap();
+    assert_eq!(b.topic_names(), vec!["dstream-a-keep".to_string()]);
+    assert!(!tmp.path().join("dstream-0").exists(), "stale session topic dir reaped");
+    assert!(tmp.path().join("photos").join("cat.jpg").exists(), "foreign dir untouched");
+    assert_eq!(b.topic_stats("dstream-a-keep").unwrap().recovered_records, 1);
+    // A new session's anonymous stream starts clean.
+    b.create_topic("dstream-0", 1).unwrap();
+    assert_eq!(b.topic_stats("dstream-0").unwrap().records, 0);
+    drop(b);
+    // Without the opt-in (a standalone broker), a topic that merely looks
+    // session-scoped is preserved, not deleted.
+    let plain = BrokerCore::with_config(cfg.reap_session_scoped(false)).unwrap();
+    assert!(plain.topic_names().contains(&"dstream-0".to_string()));
+}
+
+#[test]
+fn replayed_cursors_clamp_to_recovered_watermark() {
+    // A journal that ran ahead of the record log (degraded disk, torn
+    // segment tail behind an intact offsets.log) must not make the group
+    // skip records published after the restart.
+    let tmp = TmpDir::new("clamp");
+    let cfg = BrokerConfig::disk(tmp.path());
+    {
+        let b = BrokerCore::with_config(cfg.clone()).unwrap();
+        b.create_topic("t", 1).unwrap();
+        for i in 0..5u8 {
+            b.publish("t", ProducerRecord::new(vec![i])).unwrap();
+        }
+    }
+    // Forge a journal claiming the group committed far past the log.
+    {
+        use hybridws::broker::storage::{OffsetEntry, OffsetStore};
+        let path = tmp.path().join("t").join("offsets.log");
+        let (mut store, _) = OffsetStore::open(&path).unwrap();
+        store.note(&OffsetEntry {
+            group: "g".into(),
+            mode: AssignmentMode::Shared,
+            partition: 0,
+            position: 100,
+            committed: 100,
+        });
+        assert!(!store.failed());
+    }
+    let b = BrokerCore::with_config(cfg).unwrap();
+    assert_eq!(b.positions("g", "t").unwrap()[0], (5, 5), "clamped to the recovered watermark");
+    b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    for i in 5..8u8 {
+        b.publish("t", ProducerRecord::new(vec![i])).unwrap();
+    }
+    let got = b.poll("g", "t", "m", usize::MAX).unwrap();
+    assert_eq!(
+        got.iter().map(|r| r.offset).collect::<Vec<_>>(),
+        vec![5, 6, 7],
+        "new records past the forged commit must still be delivered"
+    );
+}
+
+#[test]
+fn memory_mode_zero_copy_contract_is_untouched() {
+    // The PR-2 acceptance guard: with storage configured but this topic on
+    // the memory path, fetches still return the producer's allocation.
+    let b = BrokerCore::new();
+    b.create_topic("t", 1).unwrap();
+    let payload = Blob::new(vec![0xAA; 1 << 18]);
+    b.publish("t", ProducerRecord { key: None, value: payload.clone() }).unwrap();
+    b.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mf = b.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+    assert!(mf.batches[0].1[0].value.ptr_eq(&payload));
+}
+
+#[test]
+fn disk_mode_read_back_matches_served_records() {
+    // Cross-check the serving path against the raw on-disk frames via the
+    // sparse index: every served record is durably framed with the same
+    // offset, timestamp, key and value.
+    let tmp = TmpDir::new("readback");
+    let (mut log, _) = DiskLog::open(tmp.path(), 1 << 20, Retention::default()).unwrap();
+    let mut served: Vec<Arc<Record>> = Vec::new();
+    for i in 0..50u64 {
+        let r = Record {
+            offset: i,
+            timestamp_ms: now_ms(),
+            key: if i % 3 == 0 { Some(Blob::new(vec![i as u8])) } else { None },
+            value: Blob::new(vec![i as u8; (i % 40) as usize]),
+        };
+        log.append(&r);
+        served.push(Arc::new(r));
+    }
+    assert!(!log.failed());
+    for r in &served {
+        let on_disk = log.read(r.offset).unwrap().expect("record must be on disk");
+        assert_eq!(&on_disk, &**r);
+    }
+}
