@@ -45,7 +45,8 @@ fn main() {
 
     let table = Table::new(&["gen_ms", "task-based_s", "hybrid_s", "gain", "paper_gain"]);
     for &gen in gens {
-        let base = std::env::temp_dir().join(format!("hybridws-fig15-{gen}-{}", std::process::id()));
+        let base =
+            std::env::temp_dir().join(format!("hybridws-fig15-{gen}-{}", std::process::id()));
         let mut tb_total = 0.0;
         let mut hy_total = 0.0;
         for rep in 0..reps() {

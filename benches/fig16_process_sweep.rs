@@ -29,8 +29,11 @@ fn main() {
     banner("Fig 16", "UC1 gain with increasing process time");
 
     let elements = if full_sweep() { 500 } else { 100 };
-    let procs: &[u64] =
-        if full_sweep() { &[5_000, 15_000, 30_000, 45_000, 60_000] } else { &[5_000, 15_000, 60_000] };
+    let procs: &[u64] = if full_sweep() {
+        &[5_000, 15_000, 30_000, 45_000, 60_000]
+    } else {
+        &[5_000, 15_000, 60_000]
+    };
     let paper = |proc: u64| match proc {
         5_000 => 0.23,
         15_000 => 0.18,

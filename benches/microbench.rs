@@ -496,13 +496,184 @@ fn bench_persistence(smoke: bool) {
     let _ = std::fs::remove_dir_all(&base);
 }
 
+/// Start `n` in-process cluster members on ephemeral ports (real TCP, real
+/// owner-routing) and return the servers + the shared seed list.
+fn start_cluster(n: usize) -> (Vec<hybridws::broker::BrokerServer>, Vec<String>) {
+    use hybridws::broker::{BrokerServer, ClusterSpec, ClusterView};
+    let listeners: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("bind cluster member"))
+        .collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let spec = ClusterSpec::new(addrs.clone());
+    let servers = listeners
+        .into_iter()
+        .zip(&addrs)
+        .map(|(l, a)| {
+            BrokerServer::start_cluster(
+                hybridws::broker::BrokerCore::new(),
+                l,
+                ClusterView::new(spec.clone(), a.clone()),
+            )
+            .expect("start cluster member")
+        })
+        .collect();
+    (servers, addrs)
+}
+
+/// One cluster configuration measured: W writer threads + R reader threads,
+/// each with its own `ClusterClient`, pushing `n` records through a
+/// 16-partition topic. Returns aggregate publish→drain records/s.
+fn cluster_throughput(addrs: &[String], n: usize) -> f64 {
+    use hybridws::broker::{AssignmentMode, ClusterClient};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    const WRITERS: usize = 4;
+    const READERS: usize = 2;
+    let control = ClusterClient::connect(addrs).unwrap();
+    control.ensure_topic("bench", 16).unwrap();
+    let consumed = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..WRITERS {
+            let addrs = addrs.to_vec();
+            scope.spawn(move || {
+                let cc = ClusterClient::connect(&addrs).unwrap();
+                let mut left = n / WRITERS;
+                while left > 0 {
+                    let chunk = left.min(128);
+                    let recs: Vec<ProducerRecord> =
+                        (0..chunk).map(|_| ProducerRecord::new(vec![0xAB; 100])).collect();
+                    cc.publish_batch("bench", recs).unwrap();
+                    left -= chunk;
+                }
+            });
+        }
+        let total = (n / WRITERS) * WRITERS;
+        for r in 0..READERS {
+            let addrs = addrs.to_vec();
+            let consumed = Arc::clone(&consumed);
+            scope.spawn(move || {
+                let cc = ClusterClient::connect(&addrs).unwrap();
+                cc.join_group("bench-g", "bench", &format!("reader-{r}"), AssignmentMode::Shared)
+                    .unwrap();
+                while consumed.load(Ordering::SeqCst) < total {
+                    let mf = cc
+                        .fetch_many_wait(
+                            "bench-g",
+                            "bench",
+                            &format!("reader-{r}"),
+                            usize::MAX,
+                            usize::MAX,
+                            100,
+                        )
+                        .unwrap();
+                    consumed.fetch_add(mf.record_count(), Ordering::SeqCst);
+                }
+            });
+        }
+    });
+    let total = (n / WRITERS) * WRITERS;
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Publish→wakeup latency through the cluster client: a consumer parked in
+/// the fetch mux, one record published per round.
+fn cluster_wakeup_latencies(addrs: &[String], rounds: usize) -> Vec<f64> {
+    use hybridws::broker::{AssignmentMode, ClusterClient};
+    let producer = ClusterClient::connect(addrs).unwrap();
+    producer.ensure_topic("lat", 16).unwrap();
+    let consumer = ClusterClient::connect(addrs).unwrap();
+    consumer.join_group("lat-g", "lat", "m", AssignmentMode::Shared).unwrap();
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<Instant>();
+    let waiter = std::thread::spawn(move || {
+        let mut lat_us = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            ready_tx.send(()).unwrap();
+            let mut got = 0;
+            while got == 0 {
+                got = consumer
+                    .fetch_many_wait("lat-g", "lat", "m", usize::MAX, usize::MAX, 5_000)
+                    .unwrap()
+                    .record_count();
+            }
+            let t1 = Instant::now();
+            let t0 = stamp_rx.recv().unwrap();
+            lat_us.push(t1.duration_since(t0).as_secs_f64() * 1e6);
+        }
+        lat_us
+    });
+    for i in 0..rounds {
+        ready_rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(2)); // let the consumer park
+        let t0 = Instant::now();
+        producer.publish("lat", ProducerRecord::new(vec![i as u8])).unwrap();
+        stamp_tx.send(t0).unwrap();
+    }
+    waiter.join().unwrap()
+}
+
+/// The cluster plane, measured: aggregate publish→drain throughput and
+/// publish→wakeup latency for 1, 2 and 4 in-process brokers behind one
+/// owner-routed `ClusterClient` surface. Emits `BENCH_cluster.json` so CI
+/// accumulates the scale-out trajectory (the 2-broker config is the
+/// ISSUE 4 acceptance gate: ≥ 1.5× single-broker aggregate throughput).
+fn bench_cluster(smoke: bool) {
+    use hybridws::util::timeutil::percentile;
+    banner("micro", "sharded cluster plane: 1 vs 2 vs 4 brokers (TCP, owner-routed)");
+    let n = if smoke { 8_000 } else { 60_000 };
+    let rounds = if smoke { 50 } else { 300 };
+    let t = Table::new(&["brokers", "records_per_s", "wakeup_p50_us", "wakeup_p99_us"]);
+    let mut configs = Vec::new();
+    let mut rates = Vec::new();
+    for brokers in [1usize, 2, 4] {
+        let (servers, addrs) = start_cluster(brokers);
+        let records_per_s = cluster_throughput(&addrs, n);
+        let lat = cluster_wakeup_latencies(&addrs, rounds);
+        let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+        t.row(&[
+            brokers.to_string(),
+            format!("{records_per_s:.0}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+        configs.push(format!(
+            "{{\"brokers\":{brokers},\"records_per_s\":{records_per_s:.0},\
+             \"wakeup_p50_us\":{p50:.2},\"wakeup_p99_us\":{p99:.2}}}"
+        ));
+        rates.push(records_per_s);
+        for s in servers {
+            s.shutdown();
+        }
+    }
+    let speedup2 = if rates[0] > 0.0 { rates[1] / rates[0] } else { 0.0 };
+    let speedup4 = if rates[0] > 0.0 { rates[2] / rates[0] } else { 0.0 };
+    println!("\ncluster scaling: 2 brokers {speedup2:.2}x, 4 brokers {speedup4:.2}x vs one");
+    if speedup2 < 1.5 {
+        // Timing, not correctness: warn loudly but keep the run green on
+        // noisy machines.
+        println!("WARNING: 2-broker aggregate under 1.5x single-broker — rerun on an idle machine");
+    }
+    let json = format!(
+        "{{\"bench\":\"cluster\",\"smoke\":{smoke},\"records\":{n},\
+         \"configs\":[{}],\"speedup_2_brokers\":{speedup2:.3},\
+         \"speedup_4_brokers\":{speedup4:.3}}}",
+        configs.join(",")
+    );
+    std::fs::write("BENCH_cluster.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_cluster.json: {json}\n");
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     hybridws::apps::register_all();
     if smoke {
-        // CI-sized: the stream-plane + persistence benches, JSON-emitting.
+        // CI-sized: the stream-plane + persistence + cluster benches,
+        // JSON-emitting.
         bench_stream_plane(true);
         bench_persistence(true);
+        bench_cluster(true);
         return;
     }
     bench_broker();
@@ -515,5 +686,6 @@ fn main() {
     bench_ods_batched();
     bench_stream_plane(false);
     bench_persistence(false);
+    bench_cluster(false);
     bench_pjrt();
 }

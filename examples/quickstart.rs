@@ -10,10 +10,15 @@
 //! # Durable streams: persist broker state and demo a survive-a-restart
 //! # replay (records + committed consumer offsets recovered from disk):
 //! cargo run --release --example quickstart -- --data-dir /tmp/hybridws-data
+//! # Scale-out streams: run the same hybrid workflow over TWO in-process
+//! # broker shards (owner-routed cluster plane, PR 4):
+//! cargo run --release --example quickstart -- --cluster
 //! ```
 
-use hybridws::broker::{AssignmentMode, BrokerConfig, BrokerCore};
 use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{
+    AssignmentMode, BrokerConfig, BrokerCore, BrokerServer, ClusterSpec, ClusterView,
+};
 use hybridws::coordinator::prelude::*;
 use hybridws::util::timeutil::Stopwatch;
 
@@ -115,6 +120,68 @@ fn main() -> anyhow::Result<()> {
     // 6. Durable-streams demo: survive a broker restart.
     if let Some(dir) = &data_dir {
         demo_restart_replay(&dir.join("demo"))?;
+    }
+
+    // 7. Scale-out demo: the same workflow shape over a two-broker
+    //    cluster (`--cluster`).
+    if args.iter().any(|a| a == "--cluster") {
+        demo_two_broker_cluster()?;
+    }
+    Ok(())
+}
+
+/// Run the produce/consume/square workflow against a **two-broker
+/// cluster**: two `BrokerServer` shards in this process (stand-ins for two
+/// `hybridws broker --cluster-seed …` machines), topics owner-routed by
+/// the rendezvous placement function, application code unchanged.
+fn demo_two_broker_cluster() -> anyhow::Result<()> {
+    // Pre-bind both listeners so the shared ClusterSpec can name every
+    // member's final address before either server starts.
+    let listeners: Vec<std::net::TcpListener> = (0..2)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()?;
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().map(|a| a.to_string()))
+        .collect::<std::io::Result<_>>()?;
+    let spec = ClusterSpec::new(addrs.clone());
+    let servers: Vec<BrokerServer> = listeners
+        .into_iter()
+        .zip(&addrs)
+        .map(|(l, a)| {
+            BrokerServer::start_cluster(
+                BrokerCore::new(),
+                l,
+                ClusterView::new(spec.clone(), a.clone()),
+            )
+        })
+        .collect::<std::io::Result<_>>()?;
+    println!("\ncluster demo: two broker shards at {addrs:?}");
+
+    // Same builder, one extra call — every stream in the runtime now
+    // shards across both brokers.
+    let rt = CometRuntime::builder()
+        .workers(&[4])
+        .name("quickstart-cluster")
+        .cluster(&addrs)
+        .build()?;
+    let numbers = rt.object_stream::<u64>(Some("cluster-numbers"))?;
+    let sum_ref = rt.new_object();
+    rt.submit(
+        TaskSpec::new("consume")
+            .arg(Arg::StreamIn(numbers.handle().clone()))
+            .arg(Arg::Out(sum_ref.id())),
+    )?;
+    // Publish from main code: each batch is bucketed per partition and
+    // shipped straight to the owning shard.
+    numbers.publish_list(&(0..100).collect::<Vec<u64>>())?;
+    numbers.close()?;
+    let sum: u64 = rt.wait_on_as(&sum_ref)?;
+    assert_eq!(sum, 4950);
+    println!("cluster demo: consumed the sharded stream, sum = {sum}");
+    rt.shutdown().ok();
+    for s in servers {
+        s.shutdown();
     }
     Ok(())
 }

@@ -60,8 +60,9 @@ pub fn register() {
         let emit_ms: u64 = ctx.scalar(2)?;
         for i in 0..elements {
             ctx.sleep_paper_ms(emit_ms);
-            let v: Vec<f32> =
-                (0..ELEM_N).map(|j| (((i as usize * 17 + j * 3) % 23) as f32 / 23.0) - 0.3).collect();
+            let v: Vec<f32> = (0..ELEM_N)
+                .map(|j| (((i as usize * 17 + j * 3) % 23) as f32 / 23.0) - 0.3)
+                .collect();
             out.publish(&to_bytes(&v))?;
         }
         out.close()?;

@@ -1,15 +1,34 @@
 //! `BrokerClient`: one API over two transports — embedded (`Arc<BrokerCore>`
 //! call-through) or remote (framed TCP). The DistroStream layer only ever
-//! sees this type, so streams are backend-location agnostic, exactly like
-//! the paper's ODSPublisher/ODSConsumer hide Kafka.
+//! sees this type (through [`super::StreamBroker`]), so streams are
+//! backend-location agnostic, exactly like the paper's
+//! ODSPublisher/ODSConsumer hide Kafka.
+//!
+//! The remote transport is **self-healing**: a send/recv failure drops the
+//! socket and retries with exponential backoff for
+//! [`RECONNECT_WINDOW`], so a broker restart mid-workload surfaces as
+//! latency, not an error. Reconnect retries make remote requests
+//! at-least-once (a request whose response was lost may be re-applied);
+//! the broker's operations are either idempotent or append-semantic, so
+//! callers see duplicate-publish at worst, never loss. The same re-apply
+//! can make a non-idempotent control call report its own success as a
+//! conflict — a `create_topic` whose ack was lost in the restart may
+//! come back `TopicExists`, a `delete_topic` as `UnknownTopic` — so
+//! callers racing a broker restart should treat those as
+//! possibly-already-applied. The client also
+//! remembers its `join_group` registrations and transparently re-joins
+//! when a restarted broker answers `UnknownGroup`/`UnknownMember` — with
+//! durable storage (PR 3) the group resumes from its persisted committed
+//! offsets.
 
+use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
-
+use std::time::{Duration, Instant};
 
 use super::embedded::{BrokerCore, BrokerError, MultiFetch, Result, TopicStats};
 use super::group::AssignmentMode;
-use super::protocol::{error_from_code, Request, Response};
+use super::protocol::{error_from_code, ClusterMetaWire, Request, Response};
 use super::record::{ProducerRecord, Record};
 use crate::util::wire::{recv_msg, send_msg};
 
@@ -17,12 +36,17 @@ enum Transport {
     /// Zero-copy call-through: polls return `Arc`-shared records.
     Embedded(Arc<BrokerCore>),
     /// Mutex: the request/response protocol is strictly serial per
-    /// connection; concurrent users each hold their own client.
+    /// connection; concurrent users each hold their own client. `None`
+    /// means the socket broke and the next request reconnects.
     ///
     /// Long-poll fetches travel over a **separate** lazily-opened socket
     /// (`fetch_sock`): a consumer parked server-side must not serialise
     /// against publishes and control calls on the main socket.
-    Remote { sock: Mutex<TcpStream>, addr: String, fetch_sock: Mutex<Option<TcpStream>> },
+    Remote {
+        sock: Mutex<Option<TcpStream>>,
+        addr: String,
+        fetch_sock: Mutex<Option<TcpStream>>,
+    },
 }
 
 /// Client-side slice of one remote long-poll round trip. Shorter than the
@@ -31,29 +55,49 @@ enum Transport {
 /// ~1000× cheaper than the old 500 µs spin loop.
 const REMOTE_WAIT_SLICE_MS: u64 = 250;
 
+/// How long a remote request keeps retrying reconnects before the
+/// transport error surfaces — sized to ride out a broker restart.
+pub const RECONNECT_WINDOW: Duration = Duration::from_secs(10);
+
+/// First reconnect backoff (doubles up to [`RECONNECT_BACKOFF_CAP`]).
+const RECONNECT_BACKOFF_START: Duration = Duration::from_millis(20);
+const RECONNECT_BACKOFF_CAP: Duration = Duration::from_millis(1_000);
+
 /// Handle to a broker, embedded or remote.
 pub struct BrokerClient {
     transport: Transport,
+    /// `(group, topic, member) → mode` for every join issued through this
+    /// client — replayed when a restarted broker lost volatile group
+    /// membership (cursors are recovered broker-side from the offset
+    /// journal).
+    joined: Mutex<HashMap<(String, String, String), AssignmentMode>>,
 }
 
 impl BrokerClient {
     /// In-process client sharing `core`.
     pub fn embedded(core: Arc<BrokerCore>) -> Self {
-        Self { transport: Transport::Embedded(core) }
+        Self { transport: Transport::Embedded(core), joined: Mutex::new(HashMap::new()) }
     }
 
-    /// Connect to a TCP broker server.
+    /// Connect to a TCP broker server (eagerly — a dead address fails
+    /// here, not on first use).
     pub fn connect(addr: &str) -> Result<Self> {
-        let sock = TcpStream::connect(addr)
-            .map_err(|e| BrokerError::Transport(format!("connect {addr}: {e}")))?;
-        sock.set_nodelay(true).ok();
+        let sock = Self::open(addr)?;
         Ok(Self {
             transport: Transport::Remote {
-                sock: Mutex::new(sock),
+                sock: Mutex::new(Some(sock)),
                 addr: addr.to_string(),
                 fetch_sock: Mutex::new(None),
             },
+            joined: Mutex::new(HashMap::new()),
         })
+    }
+
+    fn open(addr: &str) -> Result<TcpStream> {
+        let sock = TcpStream::connect(addr)
+            .map_err(|e| BrokerError::Transport(format!("connect {addr}: {e}")))?;
+        sock.set_nodelay(true).ok();
+        Ok(sock)
     }
 
     /// Clone an embedded client (remote clients own a socket; open another).
@@ -73,28 +117,54 @@ impl BrokerClient {
         }
     }
 
+    /// One attempt on the (re)connected main socket.
+    fn try_main(slot: &Mutex<Option<TcpStream>>, addr: &str, req: &Request) -> Result<Response> {
+        let mut slot = slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(Self::open(addr)?);
+        }
+        let sock = slot.as_mut().expect("socket just ensured");
+        let resp = Self::roundtrip(sock, req);
+        if resp.is_err() {
+            *slot = None; // broken: the next attempt reconnects
+        }
+        resp
+    }
+
     fn rpc(&self, req: Request) -> Result<Response> {
         match &self.transport {
             Transport::Embedded(core) => Ok(super::server::dispatch(core, req)),
-            Transport::Remote { sock, .. } => {
-                let mut sock = sock.lock().unwrap();
-                Self::roundtrip(&mut sock, &req)
+            Transport::Remote { sock, addr, .. } => {
+                // Self-healing: reconnect-and-retry across a broker restart
+                // instead of surfacing the first broken-pipe error.
+                let deadline = Instant::now() + RECONNECT_WINDOW;
+                let mut backoff = RECONNECT_BACKOFF_START;
+                loop {
+                    match Self::try_main(sock, addr, &req) {
+                        Err(BrokerError::Transport(e)) => {
+                            if Instant::now() + backoff > deadline {
+                                return Err(BrokerError::Transport(e));
+                            }
+                            std::thread::sleep(backoff);
+                            backoff = (backoff * 2).min(RECONNECT_BACKOFF_CAP);
+                        }
+                        other => return other,
+                    }
+                }
             }
         }
     }
 
     /// One request over the dedicated long-poll socket (opened on first
     /// use so clients that never long-poll cost one connection, not two).
+    /// Single attempt — the long-poll loop owns the retry policy.
     fn fetch_rpc(&self, req: Request) -> Result<Response> {
         let Transport::Remote { addr, fetch_sock, .. } = &self.transport else {
             unreachable!("fetch_rpc is remote-only");
         };
         let mut slot = fetch_sock.lock().unwrap();
         if slot.is_none() {
-            let sock = TcpStream::connect(addr)
-                .map_err(|e| BrokerError::Transport(format!("connect {addr}: {e}")))?;
-            sock.set_nodelay(true).ok();
-            *slot = Some(sock);
+            *slot = Some(Self::open(addr)?);
         }
         let sock = slot.as_mut().expect("fetch socket just ensured");
         let resp = Self::roundtrip(sock, &req);
@@ -103,6 +173,25 @@ impl BrokerClient {
             *slot = None;
         }
         resp
+    }
+
+    /// Replay a remembered join after a broker restart dropped the group.
+    /// `true` when this client had joined `(group, topic, member)` and the
+    /// re-join landed.
+    fn rejoin(&self, group: &str, topic: &str, member: &str) -> bool {
+        let key = (group.to_string(), topic.to_string(), member.to_string());
+        let Some(mode) = self.joined.lock().unwrap().get(&key).copied() else {
+            return false;
+        };
+        matches!(
+            self.rpc(Request::JoinGroup {
+                group: group.into(),
+                topic: topic.into(),
+                member: member.into(),
+                mode,
+            }),
+            Ok(Response::Generation(_))
+        )
     }
 
     fn expect_ok(&self, req: Request) -> Result<()> {
@@ -192,13 +281,25 @@ impl BrokerClient {
             member: member.into(),
             mode,
         })? {
-            Response::Generation(g) => Ok(g),
+            Response::Generation(g) => {
+                // Remembered so a broker restart (which drops volatile
+                // membership) heals transparently on the next fetch.
+                self.joined
+                    .lock()
+                    .unwrap()
+                    .insert((group.into(), topic.into(), member.into()), mode);
+                Ok(g)
+            }
             Response::Err { code, msg } => Err(error_from_code(code, msg)),
             other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
         }
     }
 
     pub fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
+        self.joined
+            .lock()
+            .unwrap()
+            .remove(&(group.to_string(), topic.to_string(), member.to_string()));
         match self.rpc(Request::LeaveGroup {
             group: group.into(),
             topic: topic.into(),
@@ -211,6 +312,25 @@ impl BrokerClient {
     }
 
     pub fn poll(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+    ) -> Result<Vec<Arc<Record>>> {
+        match self.poll_raw(group, topic, member, max) {
+            Err(e @ (BrokerError::UnknownGroup(_) | BrokerError::UnknownMember { .. })) => {
+                if self.rejoin(group, topic, member) {
+                    self.poll_raw(group, topic, member, max)
+                } else {
+                    Err(e)
+                }
+            }
+            other => other,
+        }
+    }
+
+    fn poll_raw(
         &self,
         group: &str,
         topic: &str,
@@ -253,8 +373,31 @@ impl BrokerClient {
     /// `Condvar` — zero round trips while idle. Remote: holds one
     /// outstanding `FetchMany` frame per wait slice; the server parks the
     /// connection, so an idle consumer costs ~4 frames/s instead of the
-    /// ~2000 empty fetches/s of a 500 µs spin loop.
+    /// ~2000 empty fetches/s of a 500 µs spin loop. A broker restart
+    /// mid-poll reconnects (and re-joins the group when this client had
+    /// joined it) instead of erroring.
     pub fn fetch_many_wait(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    ) -> Result<MultiFetch> {
+        match self.fetch_many_wait_raw(group, topic, member, max, max_bytes, wait_ms) {
+            Err(e @ (BrokerError::UnknownGroup(_) | BrokerError::UnknownMember { .. })) => {
+                if self.rejoin(group, topic, member) {
+                    self.fetch_many_wait_raw(group, topic, member, max, max_bytes, wait_ms)
+                } else {
+                    Err(e)
+                }
+            }
+            other => other,
+        }
+    }
+
+    fn fetch_many_wait_raw(
         &self,
         group: &str,
         topic: &str,
@@ -270,11 +413,11 @@ impl BrokerClient {
         }
         // Clamped like the embedded path: no Instant overflow on "forever".
         let wait_ms = wait_ms.min(super::embedded::MAX_WAIT_HORIZON_MS);
-        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wait_ms);
+        let deadline = Instant::now() + Duration::from_millis(wait_ms);
+        let mut backoff = RECONNECT_BACKOFF_START;
         loop {
-            let remaining_ms = deadline
-                .saturating_duration_since(std::time::Instant::now())
-                .as_millis() as u64;
+            let remaining_ms =
+                deadline.saturating_duration_since(Instant::now()).as_millis() as u64;
             let slice = remaining_ms.min(REMOTE_WAIT_SLICE_MS);
             let req = Request::FetchMany {
                 group: group.into(),
@@ -284,10 +427,9 @@ impl BrokerClient {
                 max_bytes,
                 wait_ms: slice,
             };
-            let resp =
-                if slice == 0 { self.rpc(req)? } else { self.fetch_rpc(req)? };
+            let resp = if slice == 0 { self.rpc(req) } else { self.fetch_rpc(req) };
             match resp {
-                Response::Batches { batches, positions } => {
+                Ok(Response::Batches { batches, positions }) => {
                     let mf = MultiFetch {
                         batches: batches
                             .into_iter()
@@ -300,20 +442,58 @@ impl BrokerClient {
                     }
                     // Empty slice with time left: park again.
                 }
-                Response::Err { code, msg } => return Err(error_from_code(code, msg)),
-                other => {
+                Ok(Response::Err { code, msg }) => return Err(error_from_code(code, msg)),
+                Ok(other) => {
                     return Err(BrokerError::Transport(format!("unexpected response {other:?}")))
                 }
+                Err(BrokerError::Transport(e)) => {
+                    // Mid-poll broker restart: back off and re-poll while
+                    // the deadline allows instead of surfacing the break.
+                    if remaining_ms == 0 {
+                        return Err(BrokerError::Transport(e));
+                    }
+                    std::thread::sleep(
+                        backoff.min(Duration::from_millis(remaining_ms)),
+                    );
+                    backoff = (backoff * 2).min(RECONNECT_BACKOFF_CAP);
+                }
+                Err(e) => return Err(e),
             }
         }
     }
 
     pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
-        self.expect_ok(Request::Commit {
+        let req = || Request::Commit {
             group: group.into(),
             topic: topic.into(),
             commits: commits.to_vec(),
-        })
+        };
+        match self.expect_ok(req()) {
+            // A restarted broker dropped the (volatile) group: re-join and
+            // re-commit — the commit point is what makes resume correct.
+            Err(BrokerError::UnknownGroup(_)) if self.rejoin_any(group, topic) => {
+                self.expect_ok(req())
+            }
+            other => other,
+        }
+    }
+
+    /// Replay every remembered join of `(group, topic)` (commit has no
+    /// member argument). `true` when at least one re-join landed.
+    fn rejoin_any(&self, group: &str, topic: &str) -> bool {
+        let members: Vec<String> = self
+            .joined
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|(g, t, _)| g == group && t == topic)
+            .map(|(_, _, m)| m.clone())
+            .collect();
+        let mut any = false;
+        for m in members {
+            any |= self.rejoin(group, topic, &m);
+        }
+        any
     }
 
     pub fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
@@ -347,6 +527,104 @@ impl BrokerClient {
             topic: topic.into(),
             member: member.into(),
         })
+    }
+
+    /// Publish a batch to one **explicit** partition (the cluster data
+    /// plane — see [`super::cluster::ClusterClient`]); returns the
+    /// assigned offsets in order. A cluster member that does not own the
+    /// partition answers [`BrokerError::NotOwner`].
+    pub fn publish_to(
+        &self,
+        topic: &str,
+        partition: usize,
+        recs: Vec<ProducerRecord>,
+    ) -> Result<Vec<u64>> {
+        if let Transport::Embedded(core) = &self.transport {
+            return core.publish_to(topic, partition, recs);
+        }
+        match self.rpc(Request::PublishTo { topic: topic.into(), partition, recs })? {
+            Response::PubBatchAck { acks } => Ok(acks.into_iter().map(|(_, o)| o).collect()),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Cluster membership snapshot (empty member list from a standalone
+    /// broker).
+    pub fn cluster_meta(&self) -> Result<ClusterMetaWire> {
+        match self.rpc(Request::ClusterMeta)? {
+            Response::Cluster(meta) => Ok(meta),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+}
+
+impl super::StreamBroker for BrokerClient {
+    fn ping(&self) -> Result<()> {
+        BrokerClient::ping(self)
+    }
+    fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        BrokerClient::create_topic(self, name, partitions)
+    }
+    fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        BrokerClient::ensure_topic(self, name, partitions)
+    }
+    fn delete_topic(&self, name: &str) -> Result<()> {
+        BrokerClient::delete_topic(self, name)
+    }
+    fn topic_names(&self) -> Result<Vec<String>> {
+        BrokerClient::topic_names(self)
+    }
+    fn topic_stats(&self, name: &str) -> Result<TopicStats> {
+        BrokerClient::topic_stats(self, name)
+    }
+    fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)> {
+        BrokerClient::publish(self, topic, rec)
+    }
+    fn publish_batch(&self, topic: &str, recs: Vec<ProducerRecord>) -> Result<Vec<(usize, u64)>> {
+        BrokerClient::publish_batch(self, topic, recs)
+    }
+    fn join_group(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        mode: AssignmentMode,
+    ) -> Result<u64> {
+        BrokerClient::join_group(self, group, topic, member, mode)
+    }
+    fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
+        BrokerClient::leave_group(self, group, topic, member)
+    }
+    fn poll(&self, group: &str, topic: &str, member: &str, max: usize) -> Result<Vec<Arc<Record>>> {
+        BrokerClient::poll(self, group, topic, member, max)
+    }
+    fn fetch_many_wait(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    ) -> Result<MultiFetch> {
+        BrokerClient::fetch_many_wait(self, group, topic, member, max, max_bytes, wait_ms)
+    }
+    fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
+        BrokerClient::commit(self, group, topic, commits)
+    }
+    fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
+        BrokerClient::delete_records(self, topic, partition, up_to)
+    }
+    fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>> {
+        BrokerClient::offsets(self, topic)
+    }
+    fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
+        BrokerClient::positions(self, group, topic)
+    }
+    fn crash_member(&self, group: &str, topic: &str, member: &str) -> Result<()> {
+        BrokerClient::crash_member(self, group, topic, member)
     }
 }
 

@@ -1,0 +1,1231 @@
+//! `ClusterClient`: one [`crate::broker::StreamBroker`] handle over a
+//! sharded multi-broker cluster.
+//!
+//! The client computes ownership locally from the shared [`ClusterSpec`]
+//! (rendezvous hash — see [`super::placement`]) and routes every operation
+//! to the broker that owns its `(topic, partition)`:
+//!
+//! - **Publishes** are bucketed per partition client-side (same FNV key
+//!   hash as the broker's partitioner, round-robin for key-less records)
+//!   and shipped as one partition-targeted `PublishTo` frame per owner.
+//! - **Fetches** run one long-poll per owning broker, merged through a
+//!   small wakeup mux: the first shard with data wakes the caller, late
+//!   results are stashed and drained by the next poll (nothing claimed is
+//!   ever dropped).
+//! - **Consumer groups** are scoped per broker under the hood — each
+//!   member broker runs `GroupState` for the partitions it owns — while
+//!   this client presents the paper's single-group illusion, merging the
+//!   per-shard commit positions into one per-partition vector.
+//! - **Failures** heal instead of surfacing mid-poll: wire operations
+//!   retry with exponential backoff across broker restarts, `NotOwner`
+//!   replies trigger a `ClusterMeta` refresh and a reroute, and a
+//!   restarted broker that lost volatile state gets this client's topics
+//!   re-ensured and groups re-joined automatically (durable members
+//!   recover their shard from their own `--data-dir` and consumers resume
+//!   from the committed offsets persisted there).
+//!
+//! Budgets (`max`/`max_bytes`) apply **per shard**: concurrent long-polls
+//! cannot share one budget without a round of coordination, so a merged
+//! fetch may return up to `owners × budget` records. Callers that need a
+//! hard global cap re-slice locally (the ODS layer's caps are advisory).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::broker::client::BrokerClient;
+use crate::broker::embedded::{
+    BrokerError, MultiFetch, Result, TopicStats, MAX_WAIT_HORIZON_MS,
+};
+use crate::broker::group::AssignmentMode;
+use crate::broker::record::{ProducerRecord, Record};
+use crate::broker::topic::key_partition;
+
+use super::placement::ClusterSpec;
+
+/// First retry backoff after a transport failure.
+const RETRY_BACKOFF_START: Duration = Duration::from_millis(25);
+/// Backoff cap (doubling stops here).
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(1_600);
+/// How long one cluster operation keeps retrying a broker before the
+/// transport error surfaces — sized to ride out a broker restart.
+const RETRY_WINDOW: Duration = Duration::from_secs(15);
+
+/// One in-flight fetch identity: `(group, topic, member)`.
+type MuxKey = (String, String, String);
+
+/// Per-shard fetch results awaiting a caller, tagged with their broker.
+type ShardResults = Vec<(String, MultiFetch)>;
+
+/// The wakeup mux: per-key result mailbox shared by the per-broker
+/// long-poll threads and the caller blocked in
+/// [`ClusterClient::fetch_many_wait`]. Results that arrive after their
+/// caller returned stay in `ready` and are drained by the next poll, so a
+/// shard's claimed records are never dropped on the floor.
+#[derive(Default)]
+struct FetchMux {
+    inner: Mutex<MuxInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct MuxInner {
+    /// Delivering results, tagged with the shard they came from.
+    ready: HashMap<MuxKey, ShardResults>,
+    /// Terminal errors (unknown topic/group after self-heal failed).
+    errors: HashMap<MuxKey, BrokerError>,
+    /// Brokers with an outstanding long-poll per key (spawn guard).
+    inflight: HashMap<MuxKey, HashSet<String>>,
+}
+
+impl FetchMux {
+    /// Register an outstanding long-poll; `false` when one already runs.
+    fn mark_inflight(&self, key: &MuxKey, addr: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.inflight.entry(key.clone()).or_default().insert(addr.to_string())
+    }
+
+    fn deliver(&self, key: &MuxKey, addr: &str, mf: MultiFetch) {
+        if mf.batches.is_empty() {
+            return; // positions were cached by the caller; nothing to wake for
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.ready.entry(key.clone()).or_default().push((addr.to_string(), mf));
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, key: &MuxKey, err: BrokerError) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.errors.insert(key.clone(), err);
+        self.cv.notify_all();
+    }
+
+    /// Drop the inflight mark (always called when a fetcher exits) and
+    /// wake waiters so they can respawn or observe the expiry.
+    fn finish(&self, key: &MuxKey, addr: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(set) = inner.inflight.get_mut(key) {
+            set.remove(addr);
+            if set.is_empty() {
+                inner.inflight.remove(key);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn take_ready(&self, key: &MuxKey) -> (ShardResults, Option<BrokerError>) {
+        let mut inner = self.inner.lock().unwrap();
+        (inner.ready.remove(key).unwrap_or_default(), inner.errors.remove(key))
+    }
+
+    /// True while any fetcher still has an outstanding long-poll for `key`.
+    fn any_inflight(&self, key: &MuxKey) -> bool {
+        self.inner.lock().unwrap().inflight.get(key).is_some_and(|s| !s.is_empty())
+    }
+
+    /// Park until something happens for `key` (result, error, fetcher
+    /// exit) or `timeout` elapses.
+    fn wait(&self, key: &MuxKey, timeout: Duration) {
+        let inner = self.inner.lock().unwrap();
+        let has_news = inner.ready.get(key).is_some_and(|v| !v.is_empty())
+            || inner.errors.contains_key(key);
+        if !has_news {
+            let (_unused, _timed_out) = self.cv.wait_timeout(inner, timeout).unwrap();
+        }
+    }
+}
+
+/// State shared between the client facade and its fetcher threads.
+struct Shared {
+    spec: RwLock<ClusterSpec>,
+    /// One pooled [`BrokerClient`] per member — each pools one data + one
+    /// long-poll connection internally.
+    conns: Mutex<HashMap<String, Arc<BrokerClient>>>,
+    /// topic → partition count (learned from `ensure_topic`/first lookup;
+    /// the basis for client-side routing and self-healing re-ensures).
+    topics: Mutex<HashMap<String, usize>>,
+    /// Joins issued through this client, replayed onto brokers that lost
+    /// volatile group state in a restart.
+    registrations: Mutex<HashMap<MuxKey, AssignmentMode>>,
+    /// (group, topic) → merged per-partition `(position, committed)` —
+    /// each shard's owner is authoritative for its partitions.
+    positions: Mutex<HashMap<(String, String), Vec<(u64, u64)>>>,
+    mux: FetchMux,
+    /// Round-robin cursor for key-less publishes.
+    rr: AtomicU64,
+}
+
+impl Shared {
+    fn client(&self, addr: &str) -> Result<Arc<BrokerClient>> {
+        if let Some(c) = self.conns.lock().unwrap().get(addr) {
+            return Ok(Arc::clone(c));
+        }
+        let c = Arc::new(BrokerClient::connect(addr)?);
+        self.conns.lock().unwrap().insert(addr.to_string(), Arc::clone(&c));
+        Ok(c)
+    }
+
+    fn invalidate(&self, addr: &str) {
+        self.conns.lock().unwrap().remove(addr);
+    }
+
+    fn members(&self) -> Vec<String> {
+        self.spec.read().unwrap().members().to_vec()
+    }
+
+    fn owner(&self, topic: &str, partition: usize) -> String {
+        self.spec.read().unwrap().owner(topic, partition).to_string()
+    }
+
+    /// One operation against one broker, retried with exponential backoff
+    /// across transport failures (broker restarts) for [`RETRY_WINDOW`].
+    fn with_broker<T>(
+        &self,
+        addr: &str,
+        op: impl Fn(&BrokerClient) -> Result<T>,
+    ) -> Result<T> {
+        let deadline = Instant::now() + RETRY_WINDOW;
+        let mut backoff = RETRY_BACKOFF_START;
+        loop {
+            match self.client(addr).and_then(|c| op(&c)) {
+                Err(BrokerError::Transport(e)) => {
+                    self.invalidate(addr);
+                    if Instant::now() + backoff > deadline {
+                        return Err(BrokerError::Transport(format!("{addr}: {e}")));
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Adopt a fresher member list, asking `prefer` first (usually the
+    /// broker that just answered `NotOwner`).
+    fn refresh_meta(&self, prefer: &str) {
+        let mut candidates = vec![prefer.to_string()];
+        candidates.extend(self.members().into_iter().filter(|m| m != prefer));
+        for addr in candidates {
+            let Ok(client) = self.client(&addr) else { continue };
+            let Ok(wire) = client.cluster_meta() else {
+                self.invalidate(&addr);
+                continue;
+            };
+            if wire.members.is_empty() {
+                continue; // broker not running in cluster mode
+            }
+            let fresh = ClusterSpec::from_wire(&wire);
+            let mut spec = self.spec.write().unwrap();
+            if fresh.epoch > spec.epoch
+                || (fresh.epoch == spec.epoch && fresh.members() != spec.members())
+            {
+                log::info!(
+                    "cluster meta refresh from {addr}: {} members, epoch {}",
+                    fresh.len(),
+                    fresh.epoch
+                );
+                *spec = fresh;
+            }
+            return;
+        }
+    }
+
+    /// Replay this client's joins for `(group, topic)` on one broker (a
+    /// restart drops volatile group membership; cursors are recovered from
+    /// the shard's offset journal). `true` when at least one join landed.
+    fn rejoin_on(&self, addr: &str, group: &str, topic: &str) -> bool {
+        let ours: Vec<(String, AssignmentMode)> = self
+            .registrations
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((g, t, _), _)| g == group && t == topic)
+            .map(|((_, _, m), &mode)| (m.clone(), mode))
+            .collect();
+        let mut any = false;
+        for (member, mode) in ours {
+            if self
+                .client(addr)
+                .and_then(|c| c.join_group(group, topic, &member, mode))
+                .is_ok()
+            {
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Re-create a known topic on one broker (a restarted memory-mode
+    /// member lost it; durable members recover their own shard).
+    fn reensure_on(&self, addr: &str, topic: &str) -> bool {
+        let Some(parts) = self.topics.lock().unwrap().get(topic).copied() else {
+            return false;
+        };
+        self.client(addr).and_then(|c| c.ensure_topic(topic, parts)).is_ok()
+    }
+
+    /// Fold one shard's cursor positions into the merged view — the shard
+    /// owner is authoritative for exactly its partitions.
+    fn note_positions(&self, group: &str, topic: &str, addr: &str, mf: &MultiFetch) {
+        let spec = self.spec.read().unwrap();
+        let mut cache = self.positions.lock().unwrap();
+        let entry = cache.entry((group.to_string(), topic.to_string())).or_default();
+        if entry.len() < mf.positions.len() {
+            entry.resize(mf.positions.len(), (0, 0));
+        }
+        for (p, &pos) in mf.positions.iter().enumerate() {
+            if spec.owner(topic, p) == addr {
+                entry[p] = pos;
+            }
+        }
+    }
+
+    fn merged_positions(&self, group: &str, topic: &str, parts: usize) -> Vec<(u64, u64)> {
+        let cache = self.positions.lock().unwrap();
+        let mut out = cache
+            .get(&(group.to_string(), topic.to_string()))
+            .cloned()
+            .unwrap_or_default();
+        out.resize(parts.max(out.len()), (0, 0));
+        out
+    }
+}
+
+/// Client-side handle to a sharded broker cluster. Same surface as
+/// [`BrokerClient`] (both implement [`crate::broker::StreamBroker`]), so
+/// the DistroStream layer is backend-count agnostic.
+pub struct ClusterClient {
+    shared: Arc<Shared>,
+}
+
+impl ClusterClient {
+    /// Connect to a cluster described by a static seed list. At least one
+    /// seed must be reachable; the reachable seed's own member list is
+    /// adopted so a partial seed list self-corrects immediately.
+    pub fn connect<S: AsRef<str>>(seeds: &[S]) -> Result<Self> {
+        let spec = ClusterSpec::new(seeds.iter().map(|s| s.as_ref().to_string()));
+        if spec.is_empty() {
+            return Err(BrokerError::Transport("empty cluster seed list".into()));
+        }
+        let shared = Arc::new(Shared {
+            spec: RwLock::new(spec),
+            conns: Mutex::new(HashMap::new()),
+            topics: Mutex::new(HashMap::new()),
+            registrations: Mutex::new(HashMap::new()),
+            positions: Mutex::new(HashMap::new()),
+            mux: FetchMux::default(),
+            rr: AtomicU64::new(0),
+        });
+        let members = shared.members();
+        let mut reachable: Option<String> = None;
+        for addr in &members {
+            match shared.client(addr) {
+                Ok(c) if c.ping().is_ok() => {
+                    reachable = Some(addr.clone());
+                    break;
+                }
+                _ => shared.invalidate(addr),
+            }
+        }
+        let Some(first) = reachable else {
+            return Err(BrokerError::Transport(format!(
+                "no cluster seed reachable ({} tried)",
+                members.len()
+            )));
+        };
+        shared.refresh_meta(&first);
+        Ok(Self { shared })
+    }
+
+    /// The current (possibly refreshed) member list.
+    pub fn members(&self) -> Vec<String> {
+        self.shared.members()
+    }
+
+    /// Snapshot of the active cluster spec.
+    pub fn spec(&self) -> ClusterSpec {
+        self.shared.spec.read().unwrap().clone()
+    }
+
+    // ---- routing helpers -------------------------------------------------
+
+    /// Partition count used for routing `topic` (learned at ensure/create
+    /// time, or looked up from any member for pre-existing topics).
+    fn partitions_of(&self, topic: &str) -> Result<usize> {
+        if let Some(n) = self.shared.topics.lock().unwrap().get(topic).copied() {
+            return Ok(n);
+        }
+        let mut last_err = BrokerError::UnknownTopic(topic.into());
+        for addr in self.shared.members() {
+            match self.shared.with_broker(&addr, |c| c.offsets(topic)) {
+                Ok(os) => {
+                    let n = os.len().max(1);
+                    self.shared.topics.lock().unwrap().insert(topic.to_string(), n);
+                    return Ok(n);
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Pick a partition for one producer record: the broker partitioner's
+    /// FNV key hash for keyed records (so cluster and single-broker
+    /// deployments agree), round-robin otherwise.
+    fn route(&self, rec: &ProducerRecord, parts: usize) -> usize {
+        match &rec.key {
+            Some(k) => key_partition(&k.0, parts),
+            None => self.shared.rr.fetch_add(1, Ordering::Relaxed) as usize % parts.max(1),
+        }
+    }
+
+    /// Ship one partition's batch to its owner, rerouting on `NotOwner`
+    /// (stale spec → refresh + follow the redirect) and re-ensuring the
+    /// topic on members that lost it in a restart.
+    fn publish_partition(
+        &self,
+        topic: &str,
+        partition: usize,
+        recs: Vec<ProducerRecord>,
+    ) -> Result<Vec<u64>> {
+        let mut target = self.shared.owner(topic, partition);
+        let mut reroutes = 0;
+        loop {
+            let res = self
+                .shared
+                .with_broker(&target, |c| c.publish_to(topic, partition, recs.clone()));
+            match res {
+                Ok(offsets) => return Ok(offsets),
+                Err(BrokerError::NotOwner { owner }) if reroutes < 3 => {
+                    reroutes += 1;
+                    self.shared.refresh_meta(&target);
+                    target = if owner.is_empty() {
+                        self.shared.owner(topic, partition)
+                    } else {
+                        owner
+                    };
+                }
+                Err(BrokerError::UnknownTopic(t)) if reroutes < 3 => {
+                    reroutes += 1;
+                    if !self.shared.reensure_on(&target, topic) {
+                        return Err(BrokerError::UnknownTopic(t));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One group-scoped call against one broker, self-healing missing
+    /// topics (re-ensure) and dropped group membership (re-join) once.
+    fn call_healed<T>(
+        &self,
+        addr: &str,
+        group: &str,
+        topic: &str,
+        op: impl Fn(&BrokerClient) -> Result<T>,
+    ) -> Result<T> {
+        match self.shared.with_broker(addr, |c| op(c)) {
+            Err(BrokerError::UnknownTopic(t)) => {
+                if self.shared.reensure_on(addr, topic) {
+                    self.shared.with_broker(addr, |c| op(c))
+                } else {
+                    Err(BrokerError::UnknownTopic(t))
+                }
+            }
+            Err(BrokerError::UnknownGroup(g)) => {
+                if self.shared.rejoin_on(addr, group, topic) {
+                    self.shared.with_broker(addr, |c| op(c))
+                } else {
+                    Err(BrokerError::UnknownGroup(g))
+                }
+            }
+            Err(BrokerError::UnknownMember { group: g, member: m }) => {
+                if self.shared.rejoin_on(addr, group, topic) {
+                    self.shared.with_broker(addr, |c| op(c))
+                } else {
+                    Err(BrokerError::UnknownMember { group: g, member: m })
+                }
+            }
+            other => other,
+        }
+    }
+
+    // ---- public API (mirrors BrokerClient) -------------------------------
+
+    /// True when at least one member answers.
+    pub fn ping(&self) -> Result<()> {
+        let mut last = BrokerError::Transport("empty cluster".into());
+        for addr in self.shared.members() {
+            match self.shared.client(&addr).and_then(|c| c.ping()) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    self.shared.invalidate(&addr);
+                    last = e;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Create on every member. The owner of partition 0 is the
+    /// coordination point: it keeps the exactly-one-winner `TopicExists`
+    /// guarantee; the rest are ensured.
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        let coordinator = self.shared.owner(name, 0);
+        self.shared.with_broker(&coordinator, |c| c.create_topic(name, partitions))?;
+        for addr in self.shared.members() {
+            if addr != coordinator {
+                self.shared.with_broker(&addr, |c| c.ensure_topic(name, partitions))?;
+            }
+        }
+        self.shared.topics.lock().unwrap().insert(name.to_string(), partitions);
+        Ok(())
+    }
+
+    /// Ensure on every member (cluster topics exist everywhere; data only
+    /// lands on owned partitions).
+    pub fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        for addr in self.shared.members() {
+            self.shared.with_broker(&addr, |c| c.ensure_topic(name, partitions))?;
+        }
+        self.shared.topics.lock().unwrap().insert(name.to_string(), partitions);
+        Ok(())
+    }
+
+    pub fn delete_topic(&self, name: &str) -> Result<()> {
+        self.shared.topics.lock().unwrap().remove(name);
+        self.shared
+            .positions
+            .lock()
+            .unwrap()
+            .retain(|(_, t), _| t != name);
+        let mut found = false;
+        for addr in self.shared.members() {
+            match self.shared.with_broker(&addr, |c| c.delete_topic(name)) {
+                Ok(()) => found = true,
+                Err(BrokerError::UnknownTopic(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if found {
+            Ok(())
+        } else {
+            Err(BrokerError::UnknownTopic(name.into()))
+        }
+    }
+
+    /// Union of every reachable member's topics.
+    pub fn topic_names(&self) -> Result<Vec<String>> {
+        let mut all: Vec<String> = Vec::new();
+        let mut reached = false;
+        let mut last = BrokerError::Transport("empty cluster".into());
+        for addr in self.shared.members() {
+            match self.shared.with_broker(&addr, |c| c.topic_names()) {
+                Ok(names) => {
+                    reached = true;
+                    all.extend(names);
+                }
+                Err(e) => last = e,
+            }
+        }
+        if !reached {
+            return Err(last);
+        }
+        all.sort();
+        all.dedup();
+        Ok(all)
+    }
+
+    /// Cluster-wide stats: per-partition watermarks from each partition's
+    /// owner, totals summed across shards. (`segments` includes each
+    /// member's empty non-owned partition segments on durable topics.)
+    pub fn topic_stats(&self, name: &str) -> Result<TopicStats> {
+        let parts = self.partitions_of(name)?;
+        let owners = self.shared.spec.read().unwrap().owners(name, parts);
+        let mut out = TopicStats {
+            partitions: parts,
+            records: 0,
+            bytes: 0,
+            high_watermarks: vec![0; parts],
+            start_offsets: vec![0; parts],
+            bytes_on_disk: 0,
+            segments: 0,
+            recovered_records: 0,
+        };
+        for (addr, ps) in owners {
+            let s = self.shared.with_broker(&addr, |c| c.topic_stats(name))?;
+            out.records += s.records;
+            out.bytes += s.bytes;
+            out.bytes_on_disk += s.bytes_on_disk;
+            out.segments += s.segments;
+            out.recovered_records += s.recovered_records;
+            for p in ps {
+                if p < s.high_watermarks.len() {
+                    out.high_watermarks[p] = s.high_watermarks[p];
+                    out.start_offsets[p] = s.start_offsets[p];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)> {
+        let parts = self.partitions_of(topic)?;
+        let partition = self.route(&rec, parts);
+        let offsets = self.publish_partition(topic, partition, vec![rec])?;
+        let offset = offsets.first().copied().ok_or_else(|| {
+            BrokerError::Transport("publish ack missing offset".into())
+        })?;
+        Ok((partition, offset))
+    }
+
+    /// Bucket per partition, ship one `PublishTo` frame per bucket to its
+    /// owner; acks return in submission order.
+    pub fn publish_batch(
+        &self,
+        topic: &str,
+        recs: Vec<ProducerRecord>,
+    ) -> Result<Vec<(usize, u64)>> {
+        if recs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let parts = self.partitions_of(topic)?;
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); parts];
+        for (i, rec) in recs.iter().enumerate() {
+            buckets[self.route(rec, parts)].push(i);
+        }
+        let mut slots: Vec<Option<ProducerRecord>> = recs.into_iter().map(Some).collect();
+        let mut acks = vec![(0usize, 0u64); slots.len()];
+        for (p, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let batch: Vec<ProducerRecord> = bucket
+                .iter()
+                .map(|&i| slots[i].take().expect("record consumed twice"))
+                .collect();
+            let offsets = self.publish_partition(topic, p, batch)?;
+            for (&i, off) in bucket.iter().zip(offsets) {
+                acks[i] = (p, off);
+            }
+        }
+        Ok(acks)
+    }
+
+    /// Join on every member (the single-group illusion over per-broker
+    /// `GroupState`s); remembered for self-healing re-joins after member
+    /// restarts. Returns the highest per-shard generation.
+    pub fn join_group(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        mode: AssignmentMode,
+    ) -> Result<u64> {
+        self.shared
+            .registrations
+            .lock()
+            .unwrap()
+            .insert((group.into(), topic.into(), member.into()), mode);
+        let mut generation = 0;
+        for addr in self.shared.members() {
+            let g = self.call_healed(&addr, group, topic, |c| {
+                c.join_group(group, topic, member, mode)
+            })?;
+            generation = generation.max(g);
+        }
+        Ok(generation)
+    }
+
+    pub fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
+        self.shared
+            .registrations
+            .lock()
+            .unwrap()
+            .remove(&(group.to_string(), topic.to_string(), member.to_string()));
+        let mut left = false;
+        for addr in self.shared.members() {
+            match self.shared.with_broker(&addr, |c| c.leave_group(group, topic, member)) {
+                Ok(b) => left |= b,
+                Err(BrokerError::UnknownGroup(_)) | Err(BrokerError::UnknownMember { .. }) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(left)
+    }
+
+    pub fn poll(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+    ) -> Result<Vec<Arc<Record>>> {
+        let mf = self.fetch_many(group, topic, member, max, usize::MAX)?;
+        Ok(mf.batches.into_iter().flat_map(|(_, recs)| recs).collect())
+    }
+
+    pub fn fetch_many(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+    ) -> Result<MultiFetch> {
+        self.fetch_many_wait(group, topic, member, max, max_bytes, 0)
+    }
+
+    /// The scale-out long poll: one blocking fetch per owning broker,
+    /// merged through the wakeup mux — the first shard with data wakes the
+    /// caller; results from slower shards are stashed for the next poll.
+    pub fn fetch_many_wait(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    ) -> Result<MultiFetch> {
+        let parts = self.partitions_of(topic)?;
+        let key: MuxKey = (group.to_string(), topic.to_string(), member.to_string());
+        if wait_ms == 0 {
+            return self.sweep(&key, parts, max, max_bytes);
+        }
+        let wait_ms = wait_ms.min(MAX_WAIT_HORIZON_MS);
+        let deadline = Instant::now() + Duration::from_millis(wait_ms);
+        loop {
+            let (ready, err) = self.shared.mux.take_ready(&key);
+            if !ready.is_empty() {
+                return Ok(self.merge(&key, parts, ready));
+            }
+            if let Some(e) = err {
+                return Err(e);
+            }
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                // Deadline passed. A fetcher may have claimed records at
+                // the buzzer: wait (briefly, bounded) until either data
+                // lands or no fetcher is in flight any more, so records a
+                // shard already claimed are returned rather than stranded
+                // in the mux — the caller may never poll this key again
+                // (the canonical "empty + closed" consumer exit).
+                let grace = Instant::now() + Duration::from_millis(25);
+                loop {
+                    let (ready, err) = self.shared.mux.take_ready(&key);
+                    if !ready.is_empty() {
+                        return Ok(self.merge(&key, parts, ready));
+                    }
+                    if let Some(e) = err {
+                        return Err(e);
+                    }
+                    let Some(left) = grace.checked_duration_since(Instant::now()) else {
+                        break;
+                    };
+                    if !self.shared.mux.any_inflight(&key) {
+                        break;
+                    }
+                    self.shared.mux.wait(&key, left.min(Duration::from_millis(5)));
+                }
+                return Ok(MultiFetch {
+                    batches: Vec::new(),
+                    positions: self.shared.merged_positions(group, topic, parts),
+                });
+            };
+            self.spawn_fetchers(&key, parts, max, max_bytes, remaining);
+            self.shared.mux.wait(&key, remaining.min(Duration::from_millis(250)));
+        }
+    }
+
+    /// Like [`ClusterClient::call_healed`] but with a **single** transport
+    /// attempt per shard (plus the one-shot self-heal retries): the
+    /// non-blocking sweep must not stack the cluster-level retry window on
+    /// top of `BrokerClient`'s own reconnect window for an unreachable
+    /// member. A member that is fully down fails the TCP connect fast and
+    /// gets skipped; an in-place restart is still ridden out by the
+    /// established socket's reconnect loop.
+    fn call_once<T>(
+        &self,
+        addr: &str,
+        group: &str,
+        topic: &str,
+        op: impl Fn(&BrokerClient) -> Result<T>,
+    ) -> Result<T> {
+        match self.shared.client(addr).and_then(|c| op(&c)) {
+            Err(BrokerError::UnknownTopic(t)) => {
+                if self.shared.reensure_on(addr, topic) {
+                    self.shared.client(addr).and_then(|c| op(&c))
+                } else {
+                    Err(BrokerError::UnknownTopic(t))
+                }
+            }
+            Err(BrokerError::UnknownGroup(_)) | Err(BrokerError::UnknownMember { .. })
+                if self.shared.rejoin_on(addr, group, topic) =>
+            {
+                self.shared.client(addr).and_then(|c| op(&c))
+            }
+            other => other,
+        }
+    }
+
+    /// Non-blocking sweep (`wait_ms == 0`): drain any prefetched mux
+    /// results, else one fetch attempt per owning broker with the
+    /// remaining budgets; unreachable shards are skipped, not fatal.
+    fn sweep(
+        &self,
+        key: &MuxKey,
+        parts: usize,
+        max: usize,
+        max_bytes: usize,
+    ) -> Result<MultiFetch> {
+        let (group, topic, member) = (key.0.as_str(), key.1.as_str(), key.2.as_str());
+        let (mut results, err) = self.shared.mux.take_ready(key);
+        if results.is_empty() {
+            if let Some(e) = err {
+                return Err(e);
+            }
+            let owners: Vec<String> = {
+                let spec = self.shared.spec.read().unwrap();
+                spec.owners(topic, parts).into_iter().map(|(a, _)| a).collect()
+            };
+            let mut got = 0usize;
+            let mut got_bytes = 0usize;
+            for addr in owners {
+                if got >= max || got_bytes >= max_bytes {
+                    break;
+                }
+                let (rmax, rbytes) = (max - got, max_bytes - got_bytes);
+                match self.call_once(&addr, group, topic, |c| {
+                    c.fetch_many(group, topic, member, rmax, rbytes)
+                }) {
+                    Ok(mf) => {
+                        got += mf.record_count();
+                        got_bytes = got_bytes.saturating_add(mf.byte_count());
+                        results.push((addr, mf));
+                    }
+                    Err(BrokerError::Transport(e)) => {
+                        // Skip this shard for this sweep; the records stay
+                        // on the broker and the next poll retries.
+                        self.shared.invalidate(&addr);
+                        log::warn!("cluster sweep skipping {addr}: {e}");
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        Ok(self.merge(key, parts, results))
+    }
+
+    fn merge(&self, key: &MuxKey, parts: usize, results: ShardResults) -> MultiFetch {
+        let mut map: BTreeMap<usize, Vec<Arc<Record>>> = BTreeMap::new();
+        for (addr, mf) in results {
+            self.shared.note_positions(&key.0, &key.1, &addr, &mf);
+            for (p, recs) in mf.batches {
+                map.entry(p).or_default().extend(recs);
+            }
+        }
+        MultiFetch {
+            batches: map.into_iter().collect(),
+            positions: self.shared.merged_positions(&key.0, &key.1, parts),
+        }
+    }
+
+    /// Ensure one long-poll fetcher thread per owning broker is in flight
+    /// for this key (the spawn is skipped while one still runs).
+    fn spawn_fetchers(
+        &self,
+        key: &MuxKey,
+        parts: usize,
+        max: usize,
+        max_bytes: usize,
+        remaining: Duration,
+    ) {
+        let owners: Vec<String> = {
+            let spec = self.shared.spec.read().unwrap();
+            spec.owners(&key.1, parts).into_iter().map(|(a, _)| a).collect()
+        };
+        for addr in owners {
+            if !self.shared.mux.mark_inflight(key, &addr) {
+                continue;
+            }
+            let shared = Arc::clone(&self.shared);
+            let key = key.clone();
+            std::thread::Builder::new()
+                .name("cluster-fetch".into())
+                .spawn(move || run_fetcher(shared, key, addr, max, max_bytes, remaining))
+                .expect("spawn cluster fetcher thread");
+        }
+    }
+
+    pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
+        let mut per_owner: Vec<(String, Vec<(usize, u64)>)> = Vec::new();
+        {
+            let spec = self.shared.spec.read().unwrap();
+            for &(p, off) in commits {
+                let addr = spec.owner(topic, p);
+                match per_owner.iter_mut().find(|(a, _)| a.as_str() == addr) {
+                    Some((_, subset)) => subset.push((p, off)),
+                    None => per_owner.push((addr.to_string(), vec![(p, off)])),
+                }
+            }
+        }
+        for (addr, subset) in per_owner {
+            self.call_healed(&addr, group, topic, |c| c.commit(group, topic, &subset))?;
+        }
+        Ok(())
+    }
+
+    pub fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
+        let addr = self.shared.owner(topic, partition);
+        // delete_records is group-less; "" routes heal through re-ensure only.
+        self.call_healed(&addr, "", topic, |c| c.delete_records(topic, partition, up_to))
+    }
+
+    pub fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>> {
+        let parts = self.partitions_of(topic)?;
+        let owners = self.shared.spec.read().unwrap().owners(topic, parts);
+        let mut out = vec![(0u64, 0u64); parts];
+        for (addr, ps) in owners {
+            let os = self.call_healed(&addr, "", topic, |c| c.offsets(topic))?;
+            for p in ps {
+                if p < os.len() {
+                    out[p] = os[p];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Merged `(position, committed)` per partition — each shard owner
+    /// answers for its partitions.
+    pub fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
+        let parts = self.partitions_of(topic)?;
+        let owners = self.shared.spec.read().unwrap().owners(topic, parts);
+        let mut out = vec![(0u64, 0u64); parts];
+        for (addr, ps) in owners {
+            let pos = self.call_healed(&addr, group, topic, |c| c.positions(group, topic))?;
+            for p in ps {
+                if p < pos.len() {
+                    out[p] = pos[p];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn crash_member(&self, group: &str, topic: &str, member: &str) -> Result<()> {
+        for addr in self.shared.members() {
+            match self.shared.with_broker(&addr, |c| c.crash_member(group, topic, member)) {
+                Ok(()) | Err(BrokerError::UnknownGroup(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl crate::broker::StreamBroker for ClusterClient {
+    fn ping(&self) -> Result<()> {
+        ClusterClient::ping(self)
+    }
+    fn create_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        ClusterClient::create_topic(self, name, partitions)
+    }
+    fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        ClusterClient::ensure_topic(self, name, partitions)
+    }
+    fn delete_topic(&self, name: &str) -> Result<()> {
+        ClusterClient::delete_topic(self, name)
+    }
+    fn topic_names(&self) -> Result<Vec<String>> {
+        ClusterClient::topic_names(self)
+    }
+    fn topic_stats(&self, name: &str) -> Result<TopicStats> {
+        ClusterClient::topic_stats(self, name)
+    }
+    fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)> {
+        ClusterClient::publish(self, topic, rec)
+    }
+    fn publish_batch(&self, topic: &str, recs: Vec<ProducerRecord>) -> Result<Vec<(usize, u64)>> {
+        ClusterClient::publish_batch(self, topic, recs)
+    }
+    fn join_group(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        mode: AssignmentMode,
+    ) -> Result<u64> {
+        ClusterClient::join_group(self, group, topic, member, mode)
+    }
+    fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
+        ClusterClient::leave_group(self, group, topic, member)
+    }
+    fn poll(&self, group: &str, topic: &str, member: &str, max: usize) -> Result<Vec<Arc<Record>>> {
+        ClusterClient::poll(self, group, topic, member, max)
+    }
+    fn fetch_many_wait(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    ) -> Result<MultiFetch> {
+        ClusterClient::fetch_many_wait(self, group, topic, member, max, max_bytes, wait_ms)
+    }
+    fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
+        ClusterClient::commit(self, group, topic, commits)
+    }
+    fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
+        ClusterClient::delete_records(self, topic, partition, up_to)
+    }
+    fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>> {
+        ClusterClient::offsets(self, topic)
+    }
+    fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
+        ClusterClient::positions(self, group, topic)
+    }
+    fn crash_member(&self, group: &str, topic: &str, member: &str) -> Result<()> {
+        ClusterClient::crash_member(self, group, topic, member)
+    }
+}
+
+/// Body of one per-broker long-poll thread: fetch with the caller's
+/// remaining wait, retrying transport failures with backoff (broker
+/// restarts) and self-healing lost topics/groups; the result (or a
+/// terminal error) lands in the mux.
+fn run_fetcher(
+    shared: Arc<Shared>,
+    key: MuxKey,
+    addr: String,
+    max: usize,
+    max_bytes: usize,
+    wait: Duration,
+) {
+    let deadline = Instant::now() + wait;
+    let mut backoff = RETRY_BACKOFF_START;
+    let (group, topic, member) = (key.0.as_str(), key.1.as_str(), key.2.as_str());
+    loop {
+        let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+            break;
+        };
+        let client = match shared.client(&addr) {
+            Ok(c) => c,
+            Err(_) => {
+                std::thread::sleep(backoff.min(remaining));
+                backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
+                continue;
+            }
+        };
+        match client.fetch_many_wait(
+            group,
+            topic,
+            member,
+            max,
+            max_bytes,
+            remaining.as_millis() as u64,
+        ) {
+            Ok(mf) => {
+                shared.note_positions(group, topic, &addr, &mf);
+                shared.mux.deliver(&key, &addr, mf);
+                break;
+            }
+            Err(BrokerError::Transport(_)) => {
+                shared.invalidate(&addr);
+                std::thread::sleep(backoff.min(remaining));
+                backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
+            }
+            Err(BrokerError::UnknownTopic(t)) => {
+                if !shared.reensure_on(&addr, topic) {
+                    shared.mux.fail(&key, BrokerError::UnknownTopic(t));
+                    break;
+                }
+            }
+            Err(BrokerError::UnknownGroup(_)) | Err(BrokerError::UnknownMember { .. }) => {
+                if !shared.rejoin_on(&addr, group, topic) {
+                    shared.mux.fail(&key, BrokerError::UnknownGroup(group.to_string()));
+                    break;
+                }
+            }
+            Err(e) => {
+                shared.mux.fail(&key, e);
+                break;
+            }
+        }
+    }
+    shared.mux.finish(&key, &addr);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::cluster::ClusterView;
+    use crate::broker::embedded::BrokerCore;
+    use crate::broker::server::BrokerServer;
+    use std::net::TcpListener;
+
+    fn start_cluster(n: usize) -> (Vec<BrokerServer>, Vec<String>) {
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+        let spec = ClusterSpec::new(addrs.clone());
+        let servers = listeners
+            .into_iter()
+            .zip(&addrs)
+            .map(|(l, a)| {
+                BrokerServer::start_cluster(
+                    BrokerCore::new(),
+                    l,
+                    ClusterView::new(spec.clone(), a.clone()),
+                )
+                .unwrap()
+            })
+            .collect();
+        (servers, addrs)
+    }
+
+    #[test]
+    fn two_broker_publish_fetch_roundtrip() {
+        let (servers, addrs) = start_cluster(2);
+        let cc = ClusterClient::connect(&addrs).unwrap();
+        cc.ensure_topic("t", 16).unwrap();
+        let recs: Vec<ProducerRecord> =
+            (0..40u8).map(|i| ProducerRecord::new(vec![i])).collect();
+        let acks = cc.publish_batch("t", recs).unwrap();
+        assert_eq!(acks.len(), 40);
+        // Sharding proof: both broker cores hold a share of the records.
+        let counts: Vec<usize> =
+            servers.iter().map(|s| s.core().topic_stats("t").unwrap().records).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 40);
+        assert!(counts.iter().all(|&c| c > 0), "both shards must hold data: {counts:?}");
+        // One consumer drains the whole topic through the cluster client.
+        cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let mut got = Vec::new();
+        while got.len() < 40 {
+            let mf = cc.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+            if mf.batches.is_empty() {
+                break;
+            }
+            got.extend(mf.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.value.0[0])));
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..40u8).collect::<Vec<_>>());
+        // Merged stats agree with the shard sum.
+        assert_eq!(cc.topic_stats("t").unwrap().records, 40);
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn keyed_records_agree_with_broker_partitioner() {
+        let (servers, addrs) = start_cluster(2);
+        let cc = ClusterClient::connect(&addrs).unwrap();
+        cc.ensure_topic("t", 4).unwrap();
+        let (p1, _) = cc.publish("t", ProducerRecord::with_key(b"k".to_vec(), vec![1])).unwrap();
+        let (p2, _) = cc.publish("t", ProducerRecord::with_key(b"k".to_vec(), vec![2])).unwrap();
+        assert_eq!(p1, p2, "same key must stick to one partition");
+        assert_eq!(p1, key_partition(b"k", 4), "client routing must match the broker hash");
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn partial_seed_list_self_corrects_via_not_owner() {
+        let (servers, addrs) = start_cluster(2);
+        // A client that only knows one member: every publish it routes to
+        // that member for a partition owned by the other must bounce with
+        // NotOwner, refresh the member list and land on the right shard.
+        let cc = ClusterClient::connect(&addrs[..1]).unwrap();
+        // connect() already adopts the contacted broker's member list.
+        assert_eq!(cc.members().len(), 2, "meta refresh must widen the view");
+        cc.ensure_topic("t", 16).unwrap();
+        for i in 0..16u8 {
+            cc.publish("t", ProducerRecord::new(vec![i])).unwrap();
+        }
+        let counts: Vec<usize> =
+            servers.iter().map(|s| s.core().topic_stats("t").unwrap().records).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 16);
+        assert!(counts.iter().all(|&c| c > 0), "records must reach both shards: {counts:?}");
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn fetch_wait_wakes_on_any_shard() {
+        use std::time::Instant;
+        let (servers, addrs) = start_cluster(2);
+        let cc = Arc::new(ClusterClient::connect(&addrs).unwrap());
+        cc.ensure_topic("t", 8).unwrap();
+        cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let consumer = Arc::clone(&cc);
+        let waiter = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let mf = consumer
+                .fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 10_000)
+                .unwrap();
+            (mf.record_count(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        cc.publish("t", ProducerRecord::new(vec![9])).unwrap();
+        let (count, waited) = waiter.join().unwrap();
+        assert_eq!(count, 1);
+        assert!(waited < Duration::from_secs(5), "publish must wake the parked mux");
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn commit_and_positions_merge_across_shards() {
+        let (servers, addrs) = start_cluster(2);
+        let cc = ClusterClient::connect(&addrs).unwrap();
+        cc.ensure_topic("t", 4).unwrap();
+        for i in 0..12u8 {
+            cc.publish("t", ProducerRecord::new(vec![i])).unwrap();
+        }
+        cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        let mf = cc.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        assert_eq!(mf.record_count(), 12);
+        assert_eq!(mf.positions.len(), 4);
+        // Commit everything at the fetch's claim positions, then delete.
+        let commits: Vec<(usize, u64)> =
+            mf.positions.iter().enumerate().map(|(p, &(pos, _))| (p, pos)).collect();
+        cc.commit("g", "t", &commits).unwrap();
+        for (p, &(pos, _)) in mf.positions.iter().enumerate() {
+            cc.delete_records("t", p, pos).unwrap();
+        }
+        assert_eq!(cc.topic_stats("t").unwrap().records, 0);
+        let merged = cc.positions("g", "t").unwrap();
+        assert_eq!(merged.len(), 4);
+        assert_eq!(
+            merged.iter().map(|&(_, c)| c).sum::<u64>(),
+            12,
+            "committed offsets must merge across shards"
+        );
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn create_topic_keeps_one_winner() {
+        let (servers, addrs) = start_cluster(2);
+        let cc = ClusterClient::connect(&addrs).unwrap();
+        cc.create_topic("t", 2).unwrap();
+        assert!(matches!(cc.create_topic("t", 2), Err(BrokerError::TopicExists(_))));
+        cc.delete_topic("t").unwrap();
+        assert!(matches!(cc.delete_topic("t"), Err(BrokerError::UnknownTopic(_))));
+        for s in servers {
+            s.shutdown();
+        }
+    }
+}

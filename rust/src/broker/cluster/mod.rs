@@ -1,0 +1,114 @@
+//! The cluster plane: sharding topics across N broker processes with
+//! deterministic, client-side routing.
+//!
+//! PRs 1–3 gave the single-broker data plane batching, wakeup-driven
+//! delivery and durability; this subsystem removes the last scale cap —
+//! one `BrokerCore` per deployment — without touching application code,
+//! exactly the property the paper's homogeneous stream representation
+//! (§4.2) was designed to preserve:
+//!
+//! - [`placement`] — a [`ClusterSpec`] (static seed list) and a rendezvous
+//!   hash mapping `(topic, partition) → broker`. Pure and shared: every
+//!   client computes ownership locally and identically, no coordination
+//!   service.
+//! - [`ClusterView`] — the broker side of the spec: each member knows its
+//!   own address, answers `ClusterMeta`, serves only partitions it owns
+//!   and answers `NotOwner { owner_addr }` (wire code 8) for the rest, so
+//!   stale or misconfigured clients self-correct.
+//! - [`client::ClusterClient`] — a [`crate::broker::BrokerClient`]-shaped
+//!   handle over the whole cluster: publishes fan out per owner, fetches
+//!   run one long-poll per owning broker merged through a small wakeup
+//!   mux, consumer groups are scoped per broker under the hood while the
+//!   client presents the paper's single-group illusion (merged commit
+//!   positions), and every wire operation retries with exponential backoff
+//!   across broker restarts.
+//!
+//! Every broker runs [`crate::broker::group::GroupState`] only for the
+//! partitions it owns (the others stay empty, so their cursors never
+//! move); a restarted member recovers its shard from its own `--data-dir`
+//! via the PR 3 storage plane, and consumers resume from the committed
+//! offsets persisted in that shard's `offsets.log`.
+
+pub mod client;
+pub mod placement;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use client::ClusterClient;
+pub use placement::{ClusterSpec, PLACEMENT_VERSION};
+
+/// A broker's view of the cluster it belongs to: the shared spec plus its
+/// own advertised address. Handed to
+/// [`crate::broker::BrokerServer::start_cluster`]; the dispatch layer uses
+/// it to enforce ownership (`NotOwner`) and answer `ClusterMeta`.
+#[derive(Debug)]
+pub struct ClusterView {
+    pub spec: ClusterSpec,
+    /// The address clients reach *this* broker under (must be one of the
+    /// spec's members, spelled identically).
+    pub self_addr: String,
+    /// Round-robin cursor for key-less publishes arriving over the legacy
+    /// partition-less frames — rotated across the partitions this broker
+    /// owns.
+    rr: AtomicU64,
+}
+
+impl ClusterView {
+    pub fn new(spec: ClusterSpec, self_addr: impl Into<String>) -> Self {
+        let self_addr = self_addr.into();
+        debug_assert!(
+            spec.contains(&self_addr),
+            "self_addr {self_addr:?} is not a cluster member"
+        );
+        Self { spec, self_addr, rr: AtomicU64::new(0) }
+    }
+
+    /// True when this broker owns `(topic, partition)`.
+    pub fn owns(&self, topic: &str, partition: usize) -> bool {
+        self.spec.owner(topic, partition) == self.self_addr
+    }
+
+    /// The partitions of `topic` this broker owns under a
+    /// `partitions`-wide layout.
+    pub fn owned_partitions(&self, topic: &str, partitions: usize) -> Vec<usize> {
+        self.spec.owned_by(&self.self_addr, topic, partitions)
+    }
+
+    /// Rotate over `owned` for key-less legacy publishes.
+    pub fn next_owned(&self, owned: &[usize]) -> Option<usize> {
+        if owned.is_empty() {
+            return None;
+        }
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) as usize % owned.len();
+        Some(owned[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_ownership_matches_spec() {
+        let spec = ClusterSpec::new(["a:1", "b:1"]);
+        let va = ClusterView::new(spec.clone(), "a:1");
+        let vb = ClusterView::new(spec.clone(), "b:1");
+        for p in 0..16 {
+            assert_ne!(va.owns("t", p), vb.owns("t", p), "exactly one owner per partition");
+            assert_eq!(va.owns("t", p), spec.owner("t", p) == "a:1");
+        }
+        let owned_a = va.owned_partitions("t", 16);
+        let owned_b = vb.owned_partitions("t", 16);
+        assert_eq!(owned_a.len() + owned_b.len(), 16);
+    }
+
+    #[test]
+    fn next_owned_rotates() {
+        let spec = ClusterSpec::new(["a:1"]);
+        let v = ClusterView::new(spec, "a:1");
+        assert_eq!(v.next_owned(&[]), None);
+        let owned = vec![3usize, 5, 9];
+        let picks: Vec<usize> = (0..6).map(|_| v.next_owned(&owned).unwrap()).collect();
+        assert_eq!(picks, vec![3, 5, 9, 3, 5, 9]);
+    }
+}

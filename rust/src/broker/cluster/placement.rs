@@ -1,0 +1,232 @@
+//! Topic placement: the deterministic `(topic, partition) → broker` map
+//! every cluster participant computes locally.
+//!
+//! The paper's Distributed Stream Library hides the streaming back-end
+//! behind a homogeneous stream representation (§4.2) precisely so the
+//! back-end can grow from one broker to many without touching application
+//! code. Placement is the piece that makes "many" work without a
+//! coordination service: a **rendezvous hash** (highest-random-weight)
+//! over the member list. Every client and every broker evaluates the same
+//! pure function over the same [`ClusterSpec`], so they agree on ownership
+//! with zero messages — and a broker that receives traffic for a partition
+//! it does not own answers `NotOwner { owner_addr }` so stale clients
+//! self-correct (see [`super::client::ClusterClient`]).
+//!
+//! Rendezvous hashing keeps the map stable under membership change: when a
+//! member is added or removed, only the partitions whose argmax changes
+//! move — on average `1/N` of them — unlike modulo placement, which
+//! reshuffles almost everything.
+
+use crate::broker::protocol::ClusterMetaWire;
+
+/// Version of the placement function. Carried in [`ClusterMetaWire`] so a
+/// future algorithm change can be detected across mixed-version clusters
+/// instead of silently splitting ownership.
+pub const PLACEMENT_VERSION: u32 = 1;
+
+/// The shared cluster description: an epoch, the placement version and the
+/// sorted member address list. Built from a static seed list (CLI flags or
+/// env); every participant holding an equal `ClusterSpec` computes equal
+/// ownership.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterSpec {
+    /// Bumped when the member list changes (static clusters stay at 0).
+    pub epoch: u64,
+    /// Placement algorithm version (see [`PLACEMENT_VERSION`]).
+    pub version: u32,
+    /// Sorted, deduplicated broker addresses.
+    members: Vec<String>,
+}
+
+impl ClusterSpec {
+    /// Build a spec from a seed list. Members are sorted and deduplicated
+    /// so every participant normalises to the same list regardless of the
+    /// order its flags were given in.
+    pub fn new<I, S>(seeds: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut members: Vec<String> = seeds.into_iter().map(Into::into).collect();
+        members.sort();
+        members.dedup();
+        Self { epoch: 0, version: PLACEMENT_VERSION, members }
+    }
+
+    /// The sorted member addresses.
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn contains(&self, addr: &str) -> bool {
+        self.members.iter().any(|m| m == addr)
+    }
+
+    /// Index of the member owning `(topic, partition)` — the rendezvous
+    /// argmax. Ties break to the lower index; with a sorted member list
+    /// that is deterministic across processes.
+    pub fn owner_index(&self, topic: &str, partition: usize) -> usize {
+        assert!(!self.members.is_empty(), "placement over an empty cluster");
+        let mut best = 0usize;
+        let mut best_w = weight(&self.members[0], topic, partition);
+        for (i, m) in self.members.iter().enumerate().skip(1) {
+            let w = weight(m, topic, partition);
+            if w > best_w {
+                best = i;
+                best_w = w;
+            }
+        }
+        best
+    }
+
+    /// Address of the member owning `(topic, partition)`.
+    pub fn owner(&self, topic: &str, partition: usize) -> &str {
+        &self.members[self.owner_index(topic, partition)]
+    }
+
+    /// Partitions of `topic` owned by `addr` under a `partitions`-wide
+    /// layout.
+    pub fn owned_by(&self, addr: &str, topic: &str, partitions: usize) -> Vec<usize> {
+        (0..partitions).filter(|&p| self.owner(topic, p) == addr).collect()
+    }
+
+    /// Owner address → owned partitions for one topic (only owners with at
+    /// least one partition appear). Iteration order follows the member
+    /// list, so it is deterministic too.
+    pub fn owners(&self, topic: &str, partitions: usize) -> Vec<(String, Vec<usize>)> {
+        let mut out: Vec<(String, Vec<usize>)> = Vec::new();
+        for p in 0..partitions {
+            let addr = self.owner(topic, p);
+            match out.iter_mut().find(|(a, _)| a.as_str() == addr) {
+                Some((_, ps)) => ps.push(p),
+                None => out.push((addr.to_string(), vec![p])),
+            }
+        }
+        out
+    }
+
+    /// Wire form (the `ClusterMeta` response payload).
+    pub fn to_wire(&self) -> ClusterMetaWire {
+        ClusterMetaWire {
+            epoch: self.epoch,
+            version: self.version,
+            members: self.members.clone(),
+        }
+    }
+
+    /// Rehydrate from the wire form (re-normalising the member list).
+    pub fn from_wire(wire: &ClusterMetaWire) -> Self {
+        let mut spec = Self::new(wire.members.iter().cloned());
+        spec.epoch = wire.epoch;
+        spec.version = wire.version;
+        spec
+    }
+}
+
+/// Rendezvous weight of `(member, topic, partition)` — built on the same
+/// FNV-1a fold as the broker partitioner (`topic::fnv1a`), so there is
+/// exactly one hash implementation in the tree. `0xFF` separators keep
+/// `("ab", "c")` and `("a", "bc")` from colliding.
+fn weight(member: &str, topic: &str, partition: usize) -> u64 {
+    use crate::broker::topic::{fnv1a, FNV_OFFSET};
+    let mut h = fnv1a(FNV_OFFSET, member.as_bytes());
+    h = fnv1a(h, &[0xFF]);
+    h = fnv1a(h, topic.as_bytes());
+    h = fnv1a(h, &[0xFF]);
+    fnv1a(h, &(partition as u64).to_le_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize) -> ClusterSpec {
+        ClusterSpec::new((0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)))
+    }
+
+    #[test]
+    fn normalises_member_order_and_duplicates() {
+        let a = ClusterSpec::new(["b:1", "a:1", "b:1"]);
+        let b = ClusterSpec::new(["a:1", "b:1"]);
+        assert_eq!(a, b);
+        assert_eq!(a.members(), &["a:1".to_string(), "b:1".to_string()]);
+    }
+
+    #[test]
+    fn ownership_is_deterministic_across_instances() {
+        let a = spec(4);
+        let b = spec(4);
+        for p in 0..64 {
+            assert_eq!(a.owner("t", p), b.owner("t", p));
+            assert_eq!(a.owner_index("t", p), b.owner_index("t", p));
+        }
+    }
+
+    #[test]
+    fn ownership_spreads_across_members() {
+        let s = spec(4);
+        let owners = s.owners("events", 64);
+        assert!(owners.len() >= 3, "64 partitions over 4 members must spread: {owners:?}");
+        let total: usize = owners.iter().map(|(_, ps)| ps.len()).sum();
+        assert_eq!(total, 64, "every partition has exactly one owner");
+        // No member should own a wildly disproportionate share.
+        for (addr, ps) in &owners {
+            assert!(ps.len() <= 40, "{addr} owns {} of 64 partitions", ps.len());
+        }
+    }
+
+    #[test]
+    fn removing_a_member_only_moves_its_partitions() {
+        let four = spec(4);
+        let mut members = four.members().to_vec();
+        let removed = members.remove(3);
+        let three = ClusterSpec::new(members);
+        let mut moved = 0;
+        for p in 0..64 {
+            let before = four.owner("t", p);
+            let after = three.owner("t", p);
+            if before == removed {
+                moved += 1;
+                assert_ne!(after, removed);
+            } else {
+                assert_eq!(before, after, "partition {p} moved although its owner survived");
+            }
+        }
+        assert!(moved > 0, "the removed member owned nothing — degenerate test");
+    }
+
+    #[test]
+    fn single_member_owns_everything() {
+        let s = spec(1);
+        for p in 0..16 {
+            assert_eq!(s.owner_index("t", p), 0);
+        }
+        assert_eq!(s.owned_by(&s.members()[0].clone(), "t", 16).len(), 16);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_placement() {
+        let s = spec(3);
+        let back = ClusterSpec::from_wire(&s.to_wire());
+        assert_eq!(back, s);
+        for p in 0..32 {
+            assert_eq!(back.owner("x", p), s.owner("x", p));
+        }
+    }
+
+    #[test]
+    fn different_topics_place_independently() {
+        let s = spec(4);
+        let a: Vec<usize> = (0..16).map(|p| s.owner_index("topic-a", p)).collect();
+        let b: Vec<usize> = (0..16).map(|p| s.owner_index("topic-b", p)).collect();
+        assert_ne!(a, b, "two topics should not share a placement layout");
+    }
+}

@@ -37,6 +37,11 @@ pub enum BrokerError {
     Storage(String),
     #[error("transport: {0}")]
     Transport(String),
+    /// Cluster routing: this broker does not own the addressed partition;
+    /// retry at `owner` (wire code 8 — the message carries only the owner
+    /// address so clients can follow the redirect).
+    #[error("not the partition owner; retry at {owner}")]
+    NotOwner { owner: String },
 }
 
 pub type Result<T> = std::result::Result<T, BrokerError>;
@@ -353,13 +358,48 @@ impl BrokerCore {
     /// Publish a batch: one partitioner decision per record (like Kafka's
     /// per-record send the paper describes for list publishes) but records
     /// are grouped so each partition lock is taken once per batch.
-    pub fn publish_batch(&self, topic: &str, recs: Vec<ProducerRecord>) -> Result<Vec<(usize, u64)>> {
+    pub fn publish_batch(
+        &self,
+        topic: &str,
+        recs: Vec<ProducerRecord>,
+    ) -> Result<Vec<(usize, u64)>> {
         Ok(self.topic(topic)?.publish_many(recs))
+    }
+
+    /// Publish a batch to one **explicit** partition (the cluster data
+    /// plane: the client picked the partition from the shared placement
+    /// function; the owning broker just appends). One lock acquisition and
+    /// one wakeup per batch; returns the assigned offsets in order.
+    pub fn publish_to(
+        &self,
+        topic: &str,
+        partition: usize,
+        recs: Vec<ProducerRecord>,
+    ) -> Result<Vec<u64>> {
+        let t = self.topic(topic)?;
+        if partition >= t.partition_count() {
+            return Err(BrokerError::BadPartition {
+                topic: topic.into(),
+                partition,
+                count: t.partition_count(),
+            });
+        }
+        Ok(t.publish_many_to(partition, recs))
+    }
+
+    /// Partition count of a topic (cluster routing / dispatch).
+    pub fn partition_count(&self, topic: &str) -> Result<usize> {
+        Ok(self.topic(topic)?.partition_count())
     }
 
     // ---- consume -------------------------------------------------------
 
-    fn group_entry(&self, group: &str, topic: &str, mode: AssignmentMode) -> Arc<Mutex<GroupState>> {
+    fn group_entry(
+        &self,
+        group: &str,
+        topic: &str,
+        mode: AssignmentMode,
+    ) -> Arc<Mutex<GroupState>> {
         let mut groups = self.groups.lock().unwrap();
         groups
             .entry((group.to_string(), topic.to_string()))

@@ -27,8 +27,17 @@
 //! keep a segmented CRC-framed log per partition and a consumer-offset
 //! journal per topic, so acked records and committed group offsets survive
 //! broker restarts (`BrokerCore::with_config` recovers them at boot).
+//!
+//! Scale-out ([`cluster`]): topics shard across N broker processes with
+//! deterministic client-side routing (rendezvous placement, owner-routed
+//! frames, `NotOwner` self-correction). [`ClusterClient`] presents the
+//! same surface as [`BrokerClient`] — both implement [`StreamBroker`], the
+//! object-safe face the DistroStream layer programs against, so a stream
+//! is backend-count agnostic exactly like the paper's homogeneous stream
+//! representation (§4.2).
 
 pub mod client;
+pub mod cluster;
 pub mod embedded;
 pub mod group;
 pub mod partition;
@@ -38,9 +47,73 @@ pub mod server;
 pub mod storage;
 pub mod topic;
 
+use std::sync::Arc;
+
 pub use client::BrokerClient;
+pub use cluster::{ClusterClient, ClusterSpec, ClusterView};
 pub use embedded::{BrokerCore, MultiFetch};
 pub use group::AssignmentMode;
 pub use record::Record;
 pub use server::BrokerServer;
 pub use storage::{BrokerConfig, Retention, StorageMode};
+
+use embedded::{Result, TopicStats};
+use record::ProducerRecord;
+
+/// The broker surface the DistroStream layer programs against — one
+/// embedded or TCP broker ([`BrokerClient`]) or a whole sharded cluster
+/// ([`ClusterClient`]) behind a single object-safe trait. Streams stay
+/// backend-count agnostic: a `DistroStreamHub` holds an
+/// `Arc<dyn StreamBroker>` and never learns how many processes serve it.
+pub trait StreamBroker: Send + Sync {
+    fn ping(&self) -> Result<()>;
+    fn create_topic(&self, name: &str, partitions: usize) -> Result<()>;
+    fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()>;
+    fn delete_topic(&self, name: &str) -> Result<()>;
+    fn topic_names(&self) -> Result<Vec<String>>;
+    fn topic_stats(&self, name: &str) -> Result<TopicStats>;
+    fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)>;
+    fn publish_batch(&self, topic: &str, recs: Vec<ProducerRecord>) -> Result<Vec<(usize, u64)>>;
+    fn join_group(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        mode: AssignmentMode,
+    ) -> Result<u64>;
+    fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool>;
+    fn poll(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+    ) -> Result<Vec<Arc<Record>>>;
+    fn fetch_many_wait(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+        wait_ms: u64,
+    ) -> Result<MultiFetch>;
+    fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()>;
+    fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize>;
+    fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>>;
+    fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>>;
+    fn crash_member(&self, group: &str, topic: &str, member: &str) -> Result<()>;
+
+    /// Non-blocking multi-partition drain (default: a zero-wait
+    /// [`StreamBroker::fetch_many_wait`]).
+    fn fetch_many(
+        &self,
+        group: &str,
+        topic: &str,
+        member: &str,
+        max: usize,
+        max_bytes: usize,
+    ) -> Result<MultiFetch> {
+        self.fetch_many_wait(group, topic, member, max, max_bytes, 0)
+    }
+}

@@ -61,6 +61,15 @@ pub enum Request {
     Positions { group: String, topic: String },
     CrashMember { group: String, topic: String, member: String },
     Shutdown,
+    /// Partition-targeted batch publish (the cluster data plane): the
+    /// client computed the partition from the shared placement function; a
+    /// broker that does not own it answers `NotOwner { owner_addr }` (wire
+    /// code 8) so stale clients self-correct. Replies with
+    /// [`Response::PubBatchAck`].
+    PublishTo { topic: String, partition: usize, recs: Vec<ProducerRecord> },
+    /// Cluster membership snapshot; replies with [`Response::Cluster`]
+    /// (empty member list when the broker is not part of a cluster).
+    ClusterMeta,
 }
 
 impl Wire for Request {
@@ -153,6 +162,13 @@ impl Wire for Request {
                 max_bytes.encode(w);
                 wait_ms.encode(w);
             }
+            Request::PublishTo { topic, partition, recs } => {
+                w.put_u8(18);
+                topic.encode(w);
+                partition.encode(w);
+                recs.encode(w);
+            }
+            Request::ClusterMeta => w.put_u8(19),
         }
     }
 
@@ -210,6 +226,12 @@ impl Wire for Request {
                 max_bytes: Wire::decode(r)?,
                 wait_ms: Wire::decode(r)?,
             },
+            18 => Request::PublishTo {
+                topic: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+                recs: Wire::decode(r)?,
+            },
+            19 => Request::ClusterMeta,
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
     }
@@ -233,8 +255,21 @@ pub enum Response {
     /// group's post-claim `(position, committed)` cursors (one frame
     /// carries everything a batched poll needs).
     Batches { batches: Vec<(usize, Vec<Record>)>, positions: Vec<(u64, u64)> },
+    /// Cluster membership snapshot (reply to [`Request::ClusterMeta`]).
+    Cluster(ClusterMetaWire),
     Err { code: u8, msg: String },
 }
+
+/// Wire form of the cluster description: epoch + member list + placement
+/// version. An empty member list means "not a cluster member".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterMetaWire {
+    pub epoch: u64,
+    pub version: u32,
+    pub members: Vec<String>,
+}
+
+crate::wire_struct!(ClusterMetaWire { epoch: u64, version: u32, members: Vec<String> });
 
 /// `TopicStats` mirror with Wire support.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -322,6 +357,10 @@ impl Wire for Response {
                 batches.encode(w);
                 positions.encode(w);
             }
+            Response::Cluster(meta) => {
+                w.put_u8(12);
+                meta.encode(w);
+            }
             Response::Err { code, msg } => {
                 w.put_u8(255);
                 w.put_u8(*code);
@@ -345,6 +384,7 @@ impl Wire for Response {
             9 => Response::Bool(Wire::decode(r)?),
             10 => Response::Count(Wire::decode(r)?),
             11 => Response::Batches { batches: Wire::decode(r)?, positions: Wire::decode(r)? },
+            12 => Response::Cluster(Wire::decode(r)?),
             255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
         })
@@ -361,7 +401,19 @@ pub fn error_code(e: &BrokerError) -> u8 {
         BrokerError::UnknownMember { .. } => 5,
         BrokerError::Transport(_) => 6,
         BrokerError::Storage(_) => 7,
+        BrokerError::NotOwner { .. } => 8,
     }
+}
+
+/// `(code, msg)` for the wire. `NotOwner` ships **only** the owner address
+/// as its message so the receiving client can rehydrate the redirect
+/// target without parsing prose.
+pub fn error_payload(e: &BrokerError) -> (u8, String) {
+    let msg = match e {
+        BrokerError::NotOwner { owner } => owner.clone(),
+        other => other.to_string(),
+    };
+    (error_code(e), msg)
 }
 
 /// Rehydrate a `BrokerError` from a wire code + message.
@@ -373,6 +425,7 @@ pub fn error_from_code(code: u8, msg: String) -> BrokerError {
         5 => BrokerError::UnknownMember { group: msg, member: String::new() },
         3 => BrokerError::BadPartition { topic: msg, partition: 0, count: 0 },
         7 => BrokerError::Storage(msg),
+        8 => BrokerError::NotOwner { owner: msg },
         _ => BrokerError::Transport(msg),
     }
 }
@@ -421,6 +474,12 @@ mod tests {
             Request::Positions { group: "g".into(), topic: "t".into() },
             Request::CrashMember { group: "g".into(), topic: "t".into(), member: "m".into() },
             Request::Shutdown,
+            Request::PublishTo {
+                topic: "t".into(),
+                partition: 3,
+                recs: vec![ProducerRecord::new(vec![9])],
+            },
+            Request::ClusterMeta,
         ];
         for req in reqs {
             let back = Request::decode_exact(&req.encode_vec()).unwrap();
@@ -459,10 +518,20 @@ mod tests {
             Response::Batches {
                 batches: vec![(
                     1,
-                    vec![Record { offset: 3, timestamp_ms: 4, key: None, value: Blob::new(vec![9]) }],
+                    vec![Record {
+                        offset: 3,
+                        timestamp_ms: 4,
+                        key: None,
+                        value: Blob::new(vec![9]),
+                    }],
                 )],
                 positions: vec![(4, 2), (0, 0)],
             },
+            Response::Cluster(ClusterMetaWire {
+                epoch: 2,
+                version: 1,
+                members: vec!["127.0.0.1:9092".into(), "127.0.0.1:9093".into()],
+            }),
             Response::Err { code: 1, msg: "t".into() },
         ];
         for resp in resps {
@@ -476,6 +545,18 @@ mod tests {
         let e = BrokerError::UnknownTopic("x".into());
         let back = error_from_code(error_code(&e), "x".into());
         assert!(matches!(back, BrokerError::UnknownTopic(_)));
+    }
+
+    #[test]
+    fn not_owner_ships_the_owner_address() {
+        let e = BrokerError::NotOwner { owner: "10.0.0.2:9092".into() };
+        let (code, msg) = error_payload(&e);
+        assert_eq!(code, 8);
+        assert_eq!(msg, "10.0.0.2:9092", "message must be the bare redirect target");
+        match error_from_code(code, msg) {
+            BrokerError::NotOwner { owner } => assert_eq!(owner, "10.0.0.2:9092"),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! Connection threads honour [`BrokerServer::shutdown`] through a socket
 //! read timeout: between frames they poll the stop flag, so shutdown no
 //! longer leaks live threads waiting on peers that never close.
+//!
+//! A server started with [`BrokerServer::start_cluster`] carries a
+//! [`ClusterView`]: it answers [`Request::ClusterMeta`], serves
+//! partition-targeted publishes only for partitions it owns (stale clients
+//! get `NotOwner { owner_addr }`, wire code 8), and routes legacy
+//! partition-less publishes onto its own shard.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,8 +24,11 @@ use log::{debug, warn};
 
 use crate::util::wire::{recv_msg_patient, send_msg};
 
-use super::embedded::BrokerCore;
-use super::protocol::{error_code, Request, Response};
+use super::cluster::{ClusterView, PLACEMENT_VERSION};
+use super::embedded::{BrokerCore, BrokerError};
+use super::protocol::{error_payload, ClusterMetaWire, Request, Response};
+use super::record::ProducerRecord;
+use super::topic::key_partition;
 
 /// Server-side clamp on one long-poll park. Remote clients with longer
 /// timeouts simply re-issue the fetch; the clamp bounds how long a parked
@@ -42,8 +51,30 @@ impl BrokerServer {
     /// Bind `addr` (use `127.0.0.1:0` for an ephemeral port) and serve.
     pub fn start(core: Arc<BrokerCore>, addr: &str) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
+        Self::start_on(core, listener, None)
+    }
+
+    /// Serve on a pre-bound listener as a **cluster member**: the view
+    /// makes this broker answer `ClusterMeta`, enforce partition ownership
+    /// (`NotOwner` redirects) and keep legacy publishes on its own shard.
+    /// The listener is pre-bound because the cluster spec needs every
+    /// member's final address before any member starts.
+    pub fn start_cluster(
+        core: Arc<BrokerCore>,
+        listener: TcpListener,
+        view: ClusterView,
+    ) -> std::io::Result<Self> {
+        Self::start_on(core, listener, Some(view))
+    }
+
+    fn start_on(
+        core: Arc<BrokerCore>,
+        listener: TcpListener,
+        view: Option<ClusterView>,
+    ) -> std::io::Result<Self> {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let cluster: Arc<Option<ClusterView>> = Arc::new(view);
         let accept_core = Arc::clone(&core);
         let accept_stop = Arc::clone(&stop);
         let accept_thread = std::thread::Builder::new()
@@ -57,9 +88,10 @@ impl BrokerServer {
                         Ok(sock) => {
                             let core = Arc::clone(&accept_core);
                             let stop = Arc::clone(&accept_stop);
+                            let cluster = Arc::clone(&cluster);
                             std::thread::Builder::new()
                                 .name("broker-conn".into())
-                                .spawn(move || handle_conn(core, stop, sock))
+                                .spawn(move || handle_conn(core, cluster, stop, sock))
                                 .expect("spawn conn thread");
                         }
                         Err(e) => {
@@ -99,7 +131,12 @@ impl Drop for BrokerServer {
     }
 }
 
-fn handle_conn(core: Arc<BrokerCore>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
+fn handle_conn(
+    core: Arc<BrokerCore>,
+    cluster: Arc<Option<ClusterView>>,
+    stop: Arc<AtomicBool>,
+    mut sock: TcpStream,
+) {
     let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     debug!("broker conn from {peer}");
     // The read timeout lets the loop poll the stop flag between frames;
@@ -119,7 +156,7 @@ fn handle_conn(core: Arc<BrokerCore>, stop: Arc<AtomicBool>, mut sock: TcpStream
             let _ = send_msg(&mut sock, &Response::Ok);
             break;
         }
-        let resp = dispatch(&core, req);
+        let resp = dispatch_at(&core, (*cluster).as_ref(), req);
         if let Err(e) = send_msg(&mut sock, &resp) {
             debug!("broker conn {peer} write error: {e}");
             break;
@@ -127,14 +164,101 @@ fn handle_conn(core: Arc<BrokerCore>, stop: Arc<AtomicBool>, mut sock: TcpStream
     }
 }
 
-/// Map one request onto the core.
+/// Map one request onto the core (standalone broker: no cluster view).
 pub fn dispatch(core: &BrokerCore, req: Request) -> Response {
+    dispatch_at(core, None, req)
+}
+
+/// Route legacy partition-less publishes onto this member's own shard:
+/// keyed records must match the cluster-wide key hash (a key owned
+/// elsewhere redirects with `NotOwner`); key-less records rotate over the
+/// partitions this broker owns.
+fn cluster_publish(
+    core: &BrokerCore,
+    view: &ClusterView,
+    topic: &str,
+    recs: Vec<ProducerRecord>,
+) -> Result<Vec<(usize, u64)>, BrokerError> {
+    let parts = core.partition_count(topic)?;
+    let owned = view.owned_partitions(topic, parts);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); parts];
+    for (i, rec) in recs.iter().enumerate() {
+        let p = match &rec.key {
+            Some(k) => {
+                let p = key_partition(&k.0, parts);
+                if !view.owns(topic, p) {
+                    return Err(BrokerError::NotOwner {
+                        owner: view.spec.owner(topic, p).to_string(),
+                    });
+                }
+                p
+            }
+            None => view.next_owned(&owned).ok_or_else(|| BrokerError::NotOwner {
+                owner: view.spec.owner(topic, 0).to_string(),
+            })?,
+        };
+        buckets[p].push(i);
+    }
+    let mut slots: Vec<Option<ProducerRecord>> = recs.into_iter().map(Some).collect();
+    let mut acks = vec![(0usize, 0u64); slots.len()];
+    for (p, bucket) in buckets.iter().enumerate() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let batch: Vec<ProducerRecord> = bucket
+            .iter()
+            .map(|&i| slots[i].take().expect("record consumed twice"))
+            .collect();
+        let offsets = core.publish_to(topic, p, batch)?;
+        for (&i, off) in bucket.iter().zip(offsets) {
+            acks[i] = (p, off);
+        }
+    }
+    Ok(acks)
+}
+
+/// Map one request onto the core, enforcing cluster ownership when a
+/// [`ClusterView`] is present.
+pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Request) -> Response {
     use Request as Q;
     use Response as A;
-    let to_err = |e: &super::embedded::BrokerError| A::Err { code: error_code(e), msg: e.to_string() };
+    let to_err = |e: &BrokerError| {
+        let (code, msg) = error_payload(e);
+        A::Err { code, msg }
+    };
     match req {
         Q::Ping => A::Pong,
         Q::Shutdown => A::Ok,
+        Q::ClusterMeta => A::Cluster(match cluster {
+            Some(v) => v.spec.to_wire(),
+            None => ClusterMetaWire {
+                epoch: 0,
+                version: PLACEMENT_VERSION,
+                members: Vec::new(),
+            },
+        }),
+        Q::PublishTo { topic, partition, recs } => {
+            if let Some(v) = cluster {
+                // The existence check must come first: ownership of an
+                // unknown topic is still computable, but the client needs
+                // UnknownTopic to trigger its re-ensure self-heal.
+                match core.partition_count(&topic) {
+                    Ok(_) => {}
+                    Err(e) => return to_err(&e),
+                }
+                if !v.owns(&topic, partition) {
+                    return to_err(&BrokerError::NotOwner {
+                        owner: v.spec.owner(&topic, partition).to_string(),
+                    });
+                }
+            }
+            match core.publish_to(&topic, partition, recs) {
+                Ok(offsets) => A::PubBatchAck {
+                    acks: offsets.into_iter().map(|o| (partition, o)).collect(),
+                },
+                Err(e) => to_err(&e),
+            }
+        }
         Q::CreateTopic { name, partitions } => match core.create_topic(&name, partitions) {
             Ok(()) => A::Ok,
             Err(e) => to_err(&e),
@@ -152,14 +276,29 @@ pub fn dispatch(core: &BrokerCore, req: Request) -> Response {
             Ok(s) => A::Stats(s.into()),
             Err(e) => to_err(&e),
         },
-        Q::Publish { topic, rec } => match core.publish(&topic, rec) {
-            Ok((partition, offset)) => A::PubAck { partition, offset },
-            Err(e) => to_err(&e),
+        Q::Publish { topic, rec } => match cluster {
+            None => match core.publish(&topic, rec) {
+                Ok((partition, offset)) => A::PubAck { partition, offset },
+                Err(e) => to_err(&e),
+            },
+            Some(v) => match cluster_publish(core, v, &topic, vec![rec]) {
+                Ok(acks) => {
+                    let (partition, offset) = acks[0];
+                    A::PubAck { partition, offset }
+                }
+                Err(e) => to_err(&e),
+            },
         },
-        Q::PublishBatch { topic, recs } => match core.publish_batch(&topic, recs) {
-            Ok(acks) => A::PubBatchAck { acks },
-            Err(e) => to_err(&e),
-        },
+        Q::PublishBatch { topic, recs } => {
+            let res = match cluster {
+                None => core.publish_batch(&topic, recs),
+                Some(v) => cluster_publish(core, v, &topic, recs),
+            };
+            match res {
+                Ok(acks) => A::PubBatchAck { acks },
+                Err(e) => to_err(&e),
+            }
+        }
         Q::JoinGroup { group, topic, member, mode } => {
             match core.join_group(&group, &topic, &member, mode) {
                 Ok(g) => A::Generation(g),
@@ -304,6 +443,97 @@ mod tests {
                 assert_eq!(positions.len(), 2);
             }
             other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cluster_dispatch_enforces_ownership() {
+        use crate::broker::cluster::{ClusterSpec, ClusterView};
+        let spec = ClusterSpec::new(["10.0.0.1:9092", "10.0.0.2:9092"]);
+        let me = spec.members()[0].clone();
+        let other = spec.members()[1].clone();
+        let view = ClusterView::new(spec.clone(), me.clone());
+        let core = BrokerCore::new();
+        core.create_topic("t", 8).unwrap();
+        let owned = view.owned_partitions("t", 8);
+        let foreign: Vec<usize> = (0..8).filter(|p| !owned.contains(p)).collect();
+        assert!(!owned.is_empty() && !foreign.is_empty(), "degenerate placement");
+        // Owned partition: the publish lands.
+        match dispatch_at(
+            &core,
+            Some(&view),
+            Request::PublishTo {
+                topic: "t".into(),
+                partition: owned[0],
+                recs: vec![ProducerRecord::new(vec![1])],
+            },
+        ) {
+            Response::PubBatchAck { acks } => assert_eq!(acks, vec![(owned[0], 0)]),
+            otherwise => panic!("unexpected {otherwise:?}"),
+        }
+        // Foreign partition: NotOwner carrying the bare owner address.
+        match dispatch_at(
+            &core,
+            Some(&view),
+            Request::PublishTo {
+                topic: "t".into(),
+                partition: foreign[0],
+                recs: vec![ProducerRecord::new(vec![2])],
+            },
+        ) {
+            Response::Err { code: 8, msg } => assert_eq!(msg, other),
+            otherwise => panic!("unexpected {otherwise:?}"),
+        }
+        // ClusterMeta answers the member list; standalone brokers answer
+        // an empty one.
+        match dispatch_at(&core, Some(&view), Request::ClusterMeta) {
+            Response::Cluster(meta) => assert_eq!(meta.members, spec.members()),
+            otherwise => panic!("unexpected {otherwise:?}"),
+        }
+        match dispatch_at(&core, None, Request::ClusterMeta) {
+            Response::Cluster(meta) => assert!(meta.members.is_empty()),
+            otherwise => panic!("unexpected {otherwise:?}"),
+        }
+    }
+
+    #[test]
+    fn cluster_dispatch_keeps_legacy_publishes_on_own_shard() {
+        use crate::broker::cluster::{ClusterSpec, ClusterView};
+        let spec = ClusterSpec::new(["10.0.0.1:9092", "10.0.0.2:9092"]);
+        let me = spec.members()[0].clone();
+        let view = ClusterView::new(spec, me);
+        let core = BrokerCore::new();
+        core.create_topic("t", 8).unwrap();
+        let owned = view.owned_partitions("t", 8);
+        for i in 0..12u8 {
+            match dispatch_at(
+                &core,
+                Some(&view),
+                Request::Publish { topic: "t".into(), rec: ProducerRecord::new(vec![i]) },
+            ) {
+                Response::PubAck { partition, .. } => {
+                    assert!(owned.contains(&partition), "landed on foreign partition {partition}");
+                }
+                otherwise => panic!("unexpected {otherwise:?}"),
+            }
+        }
+        // A keyed record whose hash lands on a foreign partition redirects.
+        let key: Vec<u8> = (0u8..64)
+            .map(|i| vec![i])
+            .find(|k| {
+                !owned.contains(&crate::broker::topic::key_partition(k, 8))
+            })
+            .expect("some key must hash to a foreign partition");
+        match dispatch_at(
+            &core,
+            Some(&view),
+            Request::Publish {
+                topic: "t".into(),
+                rec: ProducerRecord::with_key(key, vec![0]),
+            },
+        ) {
+            Response::Err { code: 8, .. } => {}
+            otherwise => panic!("unexpected {otherwise:?}"),
         }
     }
 

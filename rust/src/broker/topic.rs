@@ -10,6 +10,29 @@ use super::partition::PartitionLog;
 use super::record::{ProducerRecord, Record};
 use super::storage::{topic_dir_name, StorageMode};
 
+/// FNV-1a offset basis — the one hash constant shared by the partitioner
+/// and the cluster placement function.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an FNV-1a state. The single implementation behind
+/// [`key_partition`] and the cluster rendezvous weight, so the two can
+/// never diverge.
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a key hash → partition, shared by the broker-side partitioner and
+/// cluster-aware clients routing keyed records locally: both MUST pick the
+/// same partition for the same key, or a key's records would split across
+/// shards.
+pub fn key_partition(key: &[u8], partitions: usize) -> usize {
+    (fnv1a(FNV_OFFSET, key) % partitions.max(1) as u64) as usize
+}
+
 /// A topic with `n` independently-locked partitions.
 #[derive(Debug)]
 pub struct Topic {
@@ -131,21 +154,13 @@ impl Topic {
         self.partitions.len()
     }
 
-    /// FNV-1a key hash → partition (stable across processes).
-    fn hash_key(key: &[u8]) -> u64 {
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for &b in key {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-        h
-    }
-
     /// Partition selection: key hash when present, else round-robin.
     pub fn pick_partition(&self, rec: &ProducerRecord) -> usize {
         match &rec.key {
-            Some(k) => (Self::hash_key(&k.0) % self.partitions.len() as u64) as usize,
-            None => (self.rr.fetch_add(1, Ordering::Relaxed) % self.partitions.len() as u64) as usize,
+            Some(k) => key_partition(&k.0, self.partitions.len()),
+            None => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) % self.partitions.len() as u64) as usize
+            }
         }
     }
 
@@ -162,6 +177,21 @@ impl Topic {
         let offset = self.partitions[partition].lock().unwrap().append(rec);
         self.notify_publish();
         offset
+    }
+
+    /// Append a whole batch to one explicit partition under a **single**
+    /// lock acquisition (the cluster `PublishTo` frame); returns the
+    /// assigned offsets in order, with one wakeup per batch.
+    pub fn publish_many_to(&self, partition: usize, recs: Vec<ProducerRecord>) -> Vec<u64> {
+        if recs.is_empty() {
+            return Vec::new();
+        }
+        let offsets = {
+            let mut log = self.partitions[partition].lock().unwrap();
+            recs.into_iter().map(|rec| log.append(rec)).collect()
+        };
+        self.notify_publish();
+        offsets
     }
 
     /// Append a whole batch, grouping records by partition so each
@@ -347,6 +377,28 @@ mod tests {
         assert!(acks.iter().all(|&(p, _)| p == p0), "same key → same partition");
         // Offsets are dense in submission order within the partition.
         assert_eq!(acks.iter().map(|&(_, o)| o).collect::<Vec<_>>(), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn publish_many_to_appends_densely_with_one_wakeup() {
+        let t = Topic::new("t", 2);
+        let s0 = t.publish_seq();
+        let offs = t.publish_many_to(1, (0..5).map(|i| ProducerRecord::new(vec![i])).collect());
+        assert_eq!(offs, (0..5).collect::<Vec<u64>>());
+        assert_eq!(t.publish_seq(), s0 + 1, "one wakeup per batch");
+        assert_eq!(t.high_watermark(1), 5);
+        assert_eq!(t.high_watermark(0), 0);
+        assert!(t.publish_many_to(0, Vec::new()).is_empty());
+        assert_eq!(t.publish_seq(), s0 + 1, "empty batch must not wake anyone");
+    }
+
+    #[test]
+    fn key_partition_matches_pick_partition() {
+        let t = Topic::new("t", 4);
+        for key in [&b"a"[..], b"same-key", b"another", b"\x00\xFF"] {
+            let rec = ProducerRecord::with_key(key.to_vec(), vec![1]);
+            assert_eq!(t.pick_partition(&rec), key_partition(key, 4), "{key:?}");
+        }
     }
 
     #[test]

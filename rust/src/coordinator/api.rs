@@ -26,7 +26,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::broker::BrokerCore;
+use crate::broker::{BrokerCore, ClusterClient, StreamBroker};
 use crate::dstream::api::StreamId;
 use crate::dstream::{
     BatchPolicy, ConsumerMode, DistroStreamHub, FileDistroStream, ObjectDistroStream,
@@ -70,6 +70,9 @@ pub struct CometBuilder {
     remote_workers: Vec<(String, usize)>,
     /// Broker storage configuration (default: everything in memory).
     broker: crate::broker::BrokerConfig,
+    /// Cluster seed addresses: non-empty switches the runtime's streaming
+    /// back-end from the embedded broker to a sharded cluster.
+    cluster_seeds: Vec<String>,
 }
 
 impl Default for CometBuilder {
@@ -84,6 +87,7 @@ impl Default for CometBuilder {
             name: "comet".into(),
             remote_workers: Vec::new(),
             broker: crate::broker::BrokerConfig::memory(),
+            cluster_seeds: Vec::new(),
         }
     }
 }
@@ -159,13 +163,52 @@ impl CometBuilder {
         self
     }
 
+    /// Scale-out streams: back every hub in this runtime with a **sharded
+    /// broker cluster** instead of the embedded broker. `seeds` is the
+    /// static member list of `hybridws broker --cluster-seed …` processes;
+    /// topics shard across them by the rendezvous placement function and
+    /// stream code is unchanged. Each member's durability is its own
+    /// (`--data-dir` per broker process); a member that restarts recovers
+    /// its shard and this runtime's consumers resume from their committed
+    /// offsets.
+    pub fn cluster<S: AsRef<str>>(mut self, seeds: &[S]) -> Self {
+        self.cluster_seeds = seeds.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
     pub fn build(self) -> Result<CometRuntime> {
         crate::util::logging::init();
         // Deployment (paper Fig 8): master spawns the DistroStream Server
-        // and the backend; every worker gets a client with its own identity.
-        let (master_hub, registry, broker) =
-            DistroStreamHub::embedded_with(&format!("{}-master", self.name), self.broker.clone())
-                .map_err(|e| anyhow!("broker storage: {e}"))?;
+        // and the backend; every worker gets a client with its own
+        // identity. The backend is the embedded broker by default, or a
+        // sharded cluster when seeds were given — one trait object either
+        // way, so everything downstream is identical.
+        let (master_hub, registry, broker, cluster) = if self.cluster_seeds.is_empty() {
+            let (hub, registry, core) = DistroStreamHub::embedded_with(
+                &format!("{}-master", self.name),
+                self.broker.clone(),
+            )
+            .map_err(|e| anyhow!("broker storage: {e}"))?;
+            (hub, registry, Some(core), None)
+        } else {
+            if !self.remote_workers.is_empty() {
+                // Remote workers receive one broker address today; routing
+                // them through a cluster needs seed-list plumbing in the
+                // worker handshake first.
+                anyhow::bail!("cluster mode and remote workers cannot be combined yet");
+            }
+            let registry = Arc::new(Mutex::new(StreamRegistry::new()));
+            let cc: Arc<ClusterClient> = Arc::new(
+                ClusterClient::connect(&self.cluster_seeds)
+                    .map_err(|e| anyhow!("cluster connect: {e}"))?,
+            );
+            let hub = DistroStreamHub::attach_with_broker(
+                &format!("{}-master", self.name),
+                &registry,
+                Arc::<ClusterClient>::clone(&cc) as Arc<dyn StreamBroker>,
+            );
+            (hub, registry, None, Some(cc))
+        };
 
         let zoo = if self.load_models {
             let dir = find_artifacts_dir()
@@ -186,11 +229,18 @@ impl CometBuilder {
             .iter()
             .enumerate()
             .map(|(i, &slots)| {
-                let hub = DistroStreamHub::attach_embedded(
-                    &format!("{}-worker{i}", self.name),
-                    &registry,
-                    &broker,
-                );
+                let worker_name = format!("{}-worker{i}", self.name);
+                let hub = match (&broker, &cluster) {
+                    (Some(core), _) => {
+                        DistroStreamHub::attach_embedded(&worker_name, &registry, core)
+                    }
+                    (None, Some(cc)) => DistroStreamHub::attach_with_broker(
+                        &worker_name,
+                        &registry,
+                        Arc::<ClusterClient>::clone(cc) as Arc<dyn StreamBroker>,
+                    ),
+                    (None, None) => unreachable!("a backend (embedded or cluster) always exists"),
+                };
                 hubs.push(Arc::clone(&hub));
                 LocalWorker::new(
                     i,
@@ -212,7 +262,10 @@ impl CometBuilder {
         let mut handles: Vec<Arc<dyn WorkerHandle>> =
             workers.iter().map(|w| Arc::clone(w) as Arc<dyn WorkerHandle>).collect();
         if !self.remote_workers.is_empty() {
-            let broker_srv = BrokerServer::start(Arc::clone(&broker), "127.0.0.1:0")?;
+            let core = broker
+                .as_ref()
+                .expect("cluster mode with remote workers is rejected above");
+            let broker_srv = BrokerServer::start(Arc::clone(core), "127.0.0.1:0")?;
             let ds_srv = DistroStreamServer::start_with(Arc::clone(&registry), "127.0.0.1:0")?;
             let broker_addr = broker_srv.addr.to_string();
             let ds_addr = ds_srv.addr.to_string();
@@ -279,7 +332,9 @@ pub struct CometRuntime {
     dispatcher: Mutex<Option<JoinHandle<()>>>,
     hub: Arc<DistroStreamHub>,
     registry: Arc<Mutex<StreamRegistry>>,
-    broker: Arc<BrokerCore>,
+    /// The embedded broker core (`None` when the runtime is backed by a
+    /// cluster — the shards live in other processes).
+    broker: Option<Arc<BrokerCore>>,
     zoo: Option<Arc<ModelZoo>>,
     metrics: Arc<MetricsRegistry>,
     trace: Arc<TraceLog>,
@@ -421,7 +476,10 @@ impl CometRuntime {
     }
 
     /// Create an object stream from the main code.
-    pub fn object_stream<T: StreamItem>(&self, alias: Option<&str>) -> Result<ObjectDistroStream<T>> {
+    pub fn object_stream<T: StreamItem>(
+        &self,
+        alias: Option<&str>,
+    ) -> Result<ObjectDistroStream<T>> {
         self.hub.object_stream(alias).map_err(|e| anyhow!(e.to_string()))
     }
 
@@ -507,7 +565,9 @@ impl CometRuntime {
                 Some(a) => crate::dstream::api::topic_for_alias(a),
                 None => crate::dstream::api::topic_for(*id),
             };
-            if let Ok(ts) = self.broker.topic_stats(&topic) {
+            // Through the hub's backend handle so cluster-backed runtimes
+            // report merged per-shard storage gauges too.
+            if let Ok(ts) = self.hub.broker().topic_stats(&topic) {
                 c.bytes_on_disk = ts.bytes_on_disk;
                 c.segments = ts.segments as u64;
                 c.recovered_records = ts.recovered_records;
@@ -538,9 +598,10 @@ impl CometRuntime {
         self.workers.len()
     }
 
-    /// Shared broker core (diagnostics in tests/benches).
-    pub fn broker(&self) -> &Arc<BrokerCore> {
-        &self.broker
+    /// Shared embedded broker core (diagnostics in tests/benches); `None`
+    /// when the runtime streams through a cluster.
+    pub fn broker(&self) -> Option<&Arc<BrokerCore>> {
+        self.broker.as_ref()
     }
 
     /// Shared stream registry (diagnostics in tests/benches).
@@ -604,7 +665,10 @@ mod tests {
         let a = rt.register_object_as(&40u64);
         let out = rt.new_object();
         rt.submit(
-            TaskSpec::new("api-add").arg(Arg::In(a.id())).arg(Arg::scalar(&2u64)).arg(Arg::Out(out.id())),
+            TaskSpec::new("api-add")
+                .arg(Arg::In(a.id()))
+                .arg(Arg::scalar(&2u64))
+                .arg(Arg::Out(out.id())),
         )
         .unwrap();
         let v: u64 = rt.wait_on_as(&out).unwrap();

@@ -139,7 +139,11 @@ impl TaskCtx {
     /// batching tuned at creation time follows the stream into tasks.
     pub fn object_stream<T: StreamItem>(&self, idx: usize) -> ObjectDistroStream<T> {
         let identity = format!("{}#t{}", self.hub.process(), self.task_id);
-        ObjectDistroStream::attach_as(self.stream_handle(idx).clone(), Arc::clone(&self.hub), identity)
+        ObjectDistroStream::attach_as(
+            self.stream_handle(idx).clone(),
+            Arc::clone(&self.hub),
+            identity,
+        )
     }
 
     /// [`TaskCtx::object_stream`] with a task-local [`BatchPolicy`]
@@ -159,7 +163,11 @@ impl TaskCtx {
     /// identity, see [`TaskCtx::object_stream`]).
     pub fn file_stream(&self, idx: usize) -> FileDistroStream {
         let identity = format!("{}#t{}", self.hub.process(), self.task_id);
-        FileDistroStream::attach_as(self.stream_handle(idx).clone(), Arc::clone(&self.hub), identity)
+        FileDistroStream::attach_as(
+            self.stream_handle(idx).clone(),
+            Arc::clone(&self.hub),
+            identity,
+        )
     }
 
     // ---- compute helpers ------------------------------------------------------

@@ -258,8 +258,8 @@ impl RemoteWorker {
                             .into_iter()
                             .map(|(k, b)| (k, Arc::clone(b.0.as_arc())))
                             .collect();
-                        if events.send(Event::Finished { task, worker: id, outputs, error }).is_err()
-                        {
+                        let finished = Event::Finished { task, worker: id, outputs, error };
+                        if events.send(finished).is_err() {
                             break;
                         }
                     }

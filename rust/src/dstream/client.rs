@@ -257,12 +257,24 @@ mod tests {
         let addr = server.addr.to_string();
         let a = DistroStreamClient::connect(&addr).unwrap();
         let b = DistroStreamClient::connect(&addr).unwrap();
-        let id =
-            a.register(Some("x".into()), StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce)
-                .unwrap();
+        let id = a
+            .register(
+                Some("x".into()),
+                StreamType::File,
+                1,
+                Some("/d".into()),
+                ConsumerMode::ExactlyOnce,
+            )
+            .unwrap();
         // b sees the same stream through the alias.
         let id_b = b
-            .register(Some("x".into()), StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce)
+            .register(
+                Some("x".into()),
+                StreamType::File,
+                1,
+                Some("/d".into()),
+                ConsumerMode::ExactlyOnce,
+            )
             .unwrap();
         assert_eq!(id, id_b);
         // File dedup is global across clients.

@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::broker::{BrokerClient, BrokerCore};
+use crate::broker::{BrokerClient, BrokerCore, ClusterClient, StreamBroker};
 
 use super::api::{BatchPolicy, ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType};
 use super::client::DistroStreamClient;
@@ -93,7 +93,10 @@ impl StreamCounters {
 /// Per-process access point to the DistroStream library.
 pub struct DistroStreamHub {
     client: Arc<DistroStreamClient>,
-    broker: Arc<BrokerClient>,
+    /// The streaming back-end behind one trait object: a single broker
+    /// ([`BrokerClient`], embedded or TCP) or a sharded cluster
+    /// ([`ClusterClient`]) — streams never learn which.
+    broker: Arc<dyn StreamBroker>,
     /// Unique name of this process (consumer-group member identity).
     process: String,
     /// Consumer group shared by all consumers of this application
@@ -140,9 +143,25 @@ impl DistroStreamHub {
         registry: &Arc<Mutex<StreamRegistry>>,
         core: &Arc<BrokerCore>,
     ) -> Arc<Self> {
+        Self::attach_with_broker(
+            process,
+            registry,
+            Arc::new(BrokerClient::embedded(Arc::clone(core))),
+        )
+    }
+
+    /// Attach a hub to a shared registry with an **explicit** streaming
+    /// back-end — the seam that makes hubs backend-count agnostic: pass a
+    /// [`BrokerClient`] for one broker or a [`ClusterClient`] for a
+    /// sharded cluster.
+    pub fn attach_with_broker(
+        process: &str,
+        registry: &Arc<Mutex<StreamRegistry>>,
+        broker: Arc<dyn StreamBroker>,
+    ) -> Arc<Self> {
         Arc::new(Self {
             client: Arc::new(DistroStreamClient::embedded(Arc::clone(registry))),
-            broker: Arc::new(BrokerClient::embedded(Arc::clone(core))),
+            broker,
             process: process.to_string(),
             group: "app".to_string(),
             max_poll_records: AtomicU64::new(u64::MAX),
@@ -154,11 +173,32 @@ impl DistroStreamHub {
     /// Distributed deployment: connect to a DistroStream Server and broker
     /// over TCP.
     pub fn connect(process: &str, ds_addr: &str, broker_addr: &str) -> Result<Arc<Self>> {
+        let broker: Arc<dyn StreamBroker> = Arc::new(BrokerClient::connect(broker_addr)?);
+        Self::connect_with(process, ds_addr, broker)
+    }
+
+    /// Distributed deployment over a **sharded broker cluster**: connect
+    /// to a DistroStream Server plus a [`ClusterClient`] over the seed
+    /// list. Stream code is unchanged — the hub simply routes through the
+    /// cluster's placement function.
+    pub fn connect_cluster<S: AsRef<str>>(
+        process: &str,
+        ds_addr: &str,
+        seeds: &[S],
+    ) -> Result<Arc<Self>> {
+        let broker: Arc<dyn StreamBroker> = Arc::new(ClusterClient::connect(seeds)?);
+        Self::connect_with(process, ds_addr, broker)
+    }
+
+    fn connect_with(
+        process: &str,
+        ds_addr: &str,
+        broker: Arc<dyn StreamBroker>,
+    ) -> Result<Arc<Self>> {
         let client = DistroStreamClient::connect(ds_addr)?;
-        let broker = BrokerClient::connect(broker_addr)?;
         Ok(Arc::new(Self {
             client: Arc::new(client),
-            broker: Arc::new(broker),
+            broker,
             process: process.to_string(),
             group: "app".to_string(),
             max_poll_records: AtomicU64::new(u64::MAX),
@@ -217,7 +257,7 @@ impl DistroStreamHub {
         &self.client
     }
 
-    pub fn broker(&self) -> &Arc<BrokerClient> {
+    pub fn broker(&self) -> &Arc<dyn StreamBroker> {
         &self.broker
     }
 
@@ -346,7 +386,10 @@ impl DistroStreamHub {
 
     /// Materialise a typed object stream from a received handle
     /// (task-parameter path).
-    pub fn open_object<T: StreamItem>(self: &Arc<Self>, handle: &StreamHandle) -> ObjectDistroStream<T> {
+    pub fn open_object<T: StreamItem>(
+        self: &Arc<Self>,
+        handle: &StreamHandle,
+    ) -> ObjectDistroStream<T> {
         debug_assert_eq!(handle.stype, StreamType::Object);
         ObjectDistroStream::attach(handle.clone(), Arc::clone(self))
     }

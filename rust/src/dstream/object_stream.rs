@@ -36,7 +36,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::broker::record::ProducerRecord;
-use crate::broker::AssignmentMode;
+use crate::broker::{AssignmentMode, StreamBroker};
 
 use super::api::{
     BatchPolicy, ConsumerMode, Result, StreamHandle, StreamId, StreamItem, StreamType,
@@ -147,7 +147,9 @@ impl<T: StreamItem> ObjectDistroStream<T> {
         let topic = self.handle.topic();
         self.hub.broker().ensure_topic(&topic, self.handle.partitions)?;
         self.hub.client().add_producer(self.handle.id, &self.identity)?;
-        let _ = self.publisher.set(OdsPublisher { topic, pending: Mutex::new(PendingBatch::default()) });
+        let _ = self
+            .publisher
+            .set(OdsPublisher { topic, pending: Mutex::new(PendingBatch::default()) });
         Ok(self.publisher.get().unwrap())
     }
 

@@ -462,9 +462,11 @@ mod tests {
     #[test]
     fn ids_are_unique_and_aliases_dedupe() {
         let mut r = reg();
-        let a = r.register(Some("s".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        let a =
+            r.register(Some("s".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
         let b = r.register(None, StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
-        let c = r.register(Some("s".into()), StreamType::Object, 4, None, ConsumerMode::ExactlyOnce);
+        let c =
+            r.register(Some("s".into()), StreamType::Object, 4, None, ConsumerMode::ExactlyOnce);
         assert_ne!(a, b);
         assert_eq!(a, c, "same alias must return the same stream");
         assert_eq!(r.len(), 2);
@@ -503,7 +505,8 @@ mod tests {
     #[test]
     fn poll_files_delivers_each_path_once() {
         let mut r = reg();
-        let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
+        let id =
+            r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
         let first = r.poll_files(id, vec!["a".into(), "b".into()], usize::MAX).unwrap();
         assert_eq!(first, vec!["a".to_string(), "b".to_string()]);
         let second =
@@ -514,7 +517,8 @@ mod tests {
     #[test]
     fn poll_files_cap_leaves_remainder_claimable() {
         let mut r = reg();
-        let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
+        let id =
+            r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
         let all: Vec<String> = (0..5).map(|i| format!("f{i}")).collect();
         // A capped poll takes 2 fresh paths; delivered ones don't count
         // against the cap on later polls.
@@ -527,7 +531,8 @@ mod tests {
     #[test]
     fn announced_files_deliver_once_through_either_path() {
         let mut r = reg();
-        let id = r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
+        let id =
+            r.register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce);
         assert!(r.announce_file(id, "/d/a"));
         // Announced path delivers even without appearing in the scan.
         assert_eq!(r.poll_files(id, vec![], usize::MAX).unwrap(), vec!["/d/a".to_string()]);
@@ -588,9 +593,11 @@ mod tests {
     #[test]
     fn unregister_frees_alias() {
         let mut r = reg();
-        let id = r.register(Some("x".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        let id =
+            r.register(Some("x".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
         assert!(r.unregister(id));
-        let id2 = r.register(Some("x".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
+        let id2 =
+            r.register(Some("x".into()), StreamType::Object, 1, None, ConsumerMode::ExactlyOnce);
         assert_ne!(id, id2);
     }
 

@@ -11,7 +11,9 @@
 use std::net::TcpListener;
 
 use hybridws::apps;
-use hybridws::broker::{BrokerConfig, BrokerCore, BrokerServer, Retention, StorageMode};
+use hybridws::broker::{
+    BrokerConfig, BrokerCore, BrokerServer, ClusterSpec, ClusterView, Retention, StorageMode,
+};
 use hybridws::coordinator::api::CometRuntime;
 use hybridws::coordinator::remote::serve_worker;
 use hybridws::dstream::DistroStreamServer;
@@ -52,9 +54,9 @@ fn usage() -> String {
         "hybridws {} — Hybrid Workflows (task-based + dataflows)\n\n\
          USAGE: hybridws <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
-           run <uc1|uc2|uc3|uc4>   run a use-case workload locally (--data-dir for durable streams)\n  \
+           run <uc1|uc2|uc3|uc4>   run a use-case workload locally (--data-dir durable streams, --cluster scale-out)\n  \
            worker                  serve as a remote worker (--listen, --slots)\n  \
-           broker                  standalone broker server (--listen, --data-dir, --retention-*)\n  \
+           broker                  broker server (--listen, --data-dir, --retention-*, --cluster-seed for sharding)\n  \
            dstream-server          standalone DistroStream Server (--listen)\n  \
            info                    registered tasks + AOT models",
         hybridws::version()
@@ -77,6 +79,12 @@ fn cmd_run(raw: &[String]) -> i32 {
         .opt("workers", Some("8,8"), "core slots per worker (comma list)")
         .opt("scale", Some("0.02"), "paper-time scale factor")
         .opt("data-dir", None, "durable streams: persist broker topics under this directory")
+        .opt(
+            "cluster",
+            None,
+            "scale-out streams: comma list of broker cluster seed addresses \
+             (each started with `hybridws broker --cluster-seed <same list>`)",
+        )
         .flag("models", "load AOT artifacts (requires `make artifacts`)");
     let a = parse_or_exit(spec, raw);
     let workers = a.usize_list("workers");
@@ -86,6 +94,10 @@ fn cmd_run(raw: &[String]) -> i32 {
         // Flip the embedded broker to StorageMode::Disk: stream records and
         // consumer-group offsets survive a restart of this process.
         builder = builder.data_dir(dir);
+    }
+    if let Some(seeds) = a.get("cluster") {
+        let seeds: Vec<&str> = seeds.split(',').filter(|s| !s.is_empty()).collect();
+        builder = builder.cluster(&seeds);
     }
     if a.flag("models") {
         builder = builder.with_models();
@@ -168,7 +180,7 @@ fn cmd_worker(raw: &[String]) -> i32 {
 }
 
 fn cmd_broker(raw: &[String]) -> i32 {
-    let spec = ArgSpec::new("standalone stream-broker server")
+    let spec = ArgSpec::new("stream-broker server (standalone or cluster member)")
         .opt("listen", Some("127.0.0.1:9092"), "address to listen on")
         .opt("data-dir", None, "durable topics: segmented logs + offset journal under this dir")
         .opt("segment-mb", Some("8"), "segment size in MiB (disk mode)")
@@ -177,6 +189,19 @@ fn cmd_broker(raw: &[String]) -> i32 {
             "retention-min",
             Some("0"),
             "drop sealed segments older than this many minutes (0 = keep)",
+        )
+        .opt(
+            "cluster-seed",
+            None,
+            "join a sharded cluster: comma list of ALL member addresses \
+             (give every member the same list; this broker serves only the \
+             partitions the placement function assigns to it)",
+        )
+        .opt(
+            "advertise",
+            None,
+            "the address clients reach this member under (default: --listen); \
+             must appear in --cluster-seed verbatim",
         );
     let a = parse_or_exit(spec, raw);
     let core = match a.get("data-dir") {
@@ -213,7 +238,34 @@ fn cmd_broker(raw: &[String]) -> i32 {
             }
         }
     };
-    match BrokerServer::start(core, a.str("listen")) {
+    let listen = a.str("listen");
+    let server = match a.get("cluster-seed") {
+        None => BrokerServer::start(core, listen),
+        Some(seeds) => {
+            let spec =
+                ClusterSpec::new(seeds.split(',').filter(|s| !s.is_empty()).map(str::to_string));
+            let advertise = a.get("advertise").unwrap_or(listen).to_string();
+            if !spec.contains(&advertise) {
+                eprintln!(
+                    "--advertise {advertise:?} is not in --cluster-seed {:?} — every member \
+                     must appear in the shared seed list verbatim",
+                    spec.members()
+                );
+                return 2;
+            }
+            println!(
+                "cluster member {advertise} of {:?} (owner-routed sharding)",
+                spec.members()
+            );
+            match TcpListener::bind(listen) {
+                Ok(listener) => {
+                    BrokerServer::start_cluster(core, listener, ClusterView::new(spec, advertise))
+                }
+                Err(e) => Err(e),
+            }
+        }
+    };
+    match server {
         Ok(server) => {
             println!("broker listening on {}", server.addr);
             loop {

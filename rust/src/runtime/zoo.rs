@@ -185,9 +185,14 @@ mod tests {
     #[test]
     fn manifest_lists_expected_models() {
         let names: Vec<_> = zoo().specs().iter().map(|s| s.name.clone()).collect();
-        for expected in
-            ["big_compute", "frame_stats", "heat_chunk", "heat_step", "iter_update", "sensor_filter"]
-        {
+        for expected in [
+            "big_compute",
+            "frame_stats",
+            "heat_chunk",
+            "heat_step",
+            "iter_update",
+            "sensor_filter",
+        ] {
             assert!(names.contains(&expected.to_string()), "missing {expected}");
         }
     }

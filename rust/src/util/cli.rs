@@ -36,7 +36,12 @@ impl ArgSpec {
     }
 
     /// Declare `--key <value>` with an optional default.
-    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
         self.opts.push(OptSpec { name, help, takes_value: true, default });
         self
     }

@@ -121,8 +121,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.pos += 1;
         }
         std::str::from_utf8(&self.s[start..self.pos])
@@ -152,16 +154,8 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => out.push('\\'),
                         Some(b'/') => out.push('/'),
                         Some(b'u') => {
-                            // \uXXXX (no surrogate-pair support; manifest is ASCII)
-                            if self.pos + 4 >= self.s.len() {
-                                return self.err("bad \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.s[self.pos + 1..self.pos + 5])
-                                .map_err(|_| JsonError { at: self.pos, msg: "bad \\u".into() })?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| JsonError { at: self.pos, msg: "bad \\u".into() })?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
-                            self.pos += 4;
+                            let ch = self.unicode_escape()?;
+                            out.push(ch);
                         }
                         _ => return self.err("bad escape"),
                     }
@@ -182,6 +176,44 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at `at`.
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        self.s
+            .get(at..at + 4)
+            .and_then(|h| std::str::from_utf8(h).ok())
+            .and_then(|h| u32::from_str_radix(h, 16).ok())
+            .ok_or(JsonError { at: self.pos, msg: "bad \\u escape".into() })
+    }
+
+    /// Decode a `\uXXXX` escape (cursor on the `u`): any BMP code point
+    /// directly, supplementary-plane characters as a UTF-16 surrogate
+    /// **pair** (`\uD83D\uDE00` → 😀). Lone or mismatched surrogates are
+    /// errors, not U+FFFD — a manifest with a torn escape should fail
+    /// loudly. Leaves the cursor on the final hex digit (the caller's
+    /// shared advance steps past it).
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let hi = self.hex4(self.pos + 1)?;
+        self.pos += 4;
+        let cp = match hi {
+            0xD800..=0xDBFF => {
+                if self.s.get(self.pos + 1).copied() != Some(b'\\')
+                    || self.s.get(self.pos + 2).copied() != Some(b'u')
+                {
+                    return self.err("unpaired high surrogate");
+                }
+                let lo = self.hex4(self.pos + 3)?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    return self.err("high surrogate not followed by a low surrogate");
+                }
+                self.pos += 6;
+                0x1_0000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+            }
+            0xDC00..=0xDFFF => return self.err("unpaired low surrogate"),
+            bmp => bmp,
+        };
+        char::from_u32(cp).ok_or(JsonError { at: self.pos, msg: "bad \\u escape".into() })
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
@@ -310,5 +342,37 @@ mod tests {
     #[test]
     fn unicode_passthrough() {
         assert_eq!(parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn unicode_escapes_decode_bmp_code_points() {
+        // "é" both as raw UTF-8 and as \u00E9 must parse identically.
+        assert_eq!(parse("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
+        assert_eq!(parse("\"\\u00E9\"").unwrap(), parse("\"é\"").unwrap());
+        // Higher BMP (snowman) and escapes embedded in surrounding text.
+        assert_eq!(parse("\"\\u2603\"").unwrap(), Json::Str("☃".into()));
+        assert_eq!(parse("\"a\\u00e9b\"").unwrap(), Json::Str("aéb".into()));
+    }
+
+    #[test]
+    fn unicode_escapes_decode_surrogate_pairs() {
+        // "😀" is U+1F600 — \uD83D\uDE00 as a UTF-16 surrogate pair.
+        assert_eq!(parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+        assert_eq!(parse("\"\\uD83D\\uDE00\"").unwrap(), parse("\"😀\"").unwrap());
+        // A pair in context, followed by more escaped text.
+        assert_eq!(parse("\"x\\uD83D\\uDE00\\u0021\"").unwrap(), Json::Str("x😀!".into()));
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected() {
+        // Unpaired high surrogate (end of string, or followed by non-escape).
+        assert!(parse("\"\\ud83d\"").is_err());
+        assert!(parse("\"\\ud83dx\"").is_err());
+        // High surrogate followed by a non-surrogate escape.
+        assert!(parse("\"\\ud83d\\u0041\"").is_err());
+        // Unpaired low surrogate.
+        assert!(parse("\"\\ude00\"").is_err());
+        // Truncated hex.
+        assert!(parse("\"\\u00\"").is_err());
     }
 }

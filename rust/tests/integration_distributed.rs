@@ -1,13 +1,197 @@
 //! Distributed-mode integration: remote workers over real TCP, standalone
-//! broker / DistroStream servers, and hub-over-TCP stream access.
+//! broker / DistroStream servers, hub-over-TCP stream access, and
+//! client reconnection across broker restarts (single-broker and cluster).
 
 use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use hybridws::broker::{BrokerClient, BrokerCore, BrokerServer};
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{
+    AssignmentMode, BrokerClient, BrokerConfig, BrokerCore, BrokerServer, ClusterClient,
+    ClusterSpec, ClusterView,
+};
 use hybridws::coordinator::prelude::*;
 use hybridws::coordinator::remote::serve_worker;
 use hybridws::dstream::{DistroStreamHub, DistroStreamServer};
 use hybridws::util::timeutil::TimeScale;
+
+/// Rebind a broker on the **same** address with the same storage config —
+/// the "broker restart" half of the reconnect tests. Rebinding retries
+/// briefly: the dying server's listener may take a beat to release the
+/// port.
+fn restart_broker(addr: &str, cfg: BrokerConfig) -> BrokerServer {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let core = BrokerCore::with_config(cfg.clone()).expect("recover broker state");
+        match BrokerServer::start(core, addr) {
+            Ok(server) => return server,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Same for one cluster member (pre-bound listener + cluster view).
+fn restart_cluster_member(addr: &str, cfg: BrokerConfig, spec: ClusterSpec) -> BrokerServer {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match TcpListener::bind(addr) {
+            Ok(listener) => {
+                let core = BrokerCore::with_config(cfg.clone()).expect("recover member state");
+                return BrokerServer::start_cluster(
+                    core,
+                    listener,
+                    ClusterView::new(spec, addr.to_string()),
+                )
+                .expect("restart cluster member");
+            }
+            Err(e) => {
+                assert!(Instant::now() < deadline, "rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[test]
+fn broker_client_reconnects_mid_long_poll_and_resumes_from_committed() {
+    let dir = std::env::temp_dir().join(format!("hybridws-reconnect-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = BrokerConfig::disk(&dir);
+    let server =
+        BrokerServer::start(BrokerCore::with_config(cfg.clone()).unwrap(), "127.0.0.1:0")
+            .unwrap();
+    let addr = server.addr.to_string();
+    let client = Arc::new(BrokerClient::connect(&addr).unwrap());
+    client.create_topic("t", 1).unwrap();
+    client
+        .publish_batch("t", (0..5u8).map(|i| ProducerRecord::new(vec![i])).collect())
+        .unwrap();
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    assert_eq!(client.poll("g", "t", "m", usize::MAX).unwrap().len(), 5);
+    client.commit("g", "t", &[(0, 3)]).unwrap();
+
+    // Park a long poll, then bounce the broker underneath it. The client
+    // must reconnect + re-join transparently; the broker's offset journal
+    // rewinds the group to its committed offset, so 3 and 4 redeliver.
+    let waiter = {
+        let c = Arc::clone(&client);
+        std::thread::spawn(move || {
+            c.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 20_000)
+        })
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    server.shutdown();
+    // Let parked connection threads notice the stop flag and exit before
+    // the restarted core re-opens the same segment files.
+    std::thread::sleep(Duration::from_millis(500));
+    let server = restart_broker(&addr, cfg);
+    let mf = waiter.join().unwrap().expect("long poll must survive the restart");
+    let offsets: Vec<u64> = mf
+        .batches
+        .iter()
+        .flat_map(|(_, rs)| rs.iter().map(|r| r.offset))
+        .collect();
+    assert_eq!(offsets, vec![3, 4], "resume from the committed offset, not the claim");
+    // The same client keeps working for later calls too.
+    client.publish("t", ProducerRecord::new(vec![9])).unwrap();
+    assert_eq!(client.poll("g", "t", "m", usize::MAX).unwrap().len(), 1);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cluster_client_reconnects_and_resumes_from_committed_offsets() {
+    let base =
+        std::env::temp_dir().join(format!("hybridws-cluster-reconnect-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let listeners: Vec<TcpListener> =
+        (0..2).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let spec = ClusterSpec::new(addrs.clone());
+    let cfgs: Vec<BrokerConfig> =
+        (0..2).map(|i| BrokerConfig::disk(base.join(format!("b{i}")))).collect();
+    let mut servers: Vec<Option<BrokerServer>> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, l)| {
+            Some(
+                BrokerServer::start_cluster(
+                    BrokerCore::with_config(cfgs[i].clone()).unwrap(),
+                    l,
+                    ClusterView::new(spec.clone(), addrs[i].clone()),
+                )
+                .unwrap(),
+            )
+        })
+        .collect();
+
+    let cc = Arc::new(ClusterClient::connect(&addrs).unwrap());
+    cc.ensure_topic("t", 16).unwrap();
+    cc.publish_batch("t", (0..20u8).map(|i| ProducerRecord::new(vec![i])).collect())
+        .unwrap();
+    cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mut seen = 0;
+    let mut last_positions = Vec::new();
+    while seen < 20 {
+        let mf = cc.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+        assert!(mf.record_count() > 0, "drain stalled at {seen}");
+        seen += mf.record_count();
+        last_positions = mf.positions;
+    }
+    let commits: Vec<(usize, u64)> =
+        last_positions.iter().enumerate().map(|(p, &(pos, _))| (p, pos)).collect();
+    cc.commit("g", "t", &commits).unwrap();
+
+    // Kill member 1, publish while it is down (owner-routed publishes to
+    // its shard must retry with backoff, not error), then restart it from
+    // its own data dir.
+    servers[1].take().unwrap().shutdown();
+    std::thread::sleep(Duration::from_millis(500));
+    let publisher = {
+        let cc = Arc::clone(&cc);
+        std::thread::spawn(move || {
+            cc.publish_batch(
+                "t",
+                (20..30u8).map(|i| ProducerRecord::new(vec![i])).collect(),
+            )
+        })
+    };
+    std::thread::sleep(Duration::from_millis(300));
+    servers[1] = Some(restart_cluster_member(&addrs[1], cfgs[1].clone(), spec.clone()));
+    publisher
+        .join()
+        .unwrap()
+        .expect("publishes during the outage must ride the retry backoff");
+
+    // Drain again WITHOUT any manual re-join: the cluster client heals the
+    // restarted member's group state itself, and the member's offset
+    // journal keeps the 20 committed records from redelivering.
+    let mut redelivered = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while redelivered.len() < 10 {
+        assert!(Instant::now() < deadline, "resume stalled: got {redelivered:?}");
+        let mf = cc
+            .fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 2_000)
+            .unwrap();
+        redelivered
+            .extend(mf.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.value.0[0])));
+    }
+    redelivered.sort_unstable();
+    assert_eq!(
+        redelivered,
+        (20..30u8).collect::<Vec<_>>(),
+        "exactly the post-restart records — committed ones must not redeliver"
+    );
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
 
 #[test]
 fn remote_worker_executes_object_tasks() {

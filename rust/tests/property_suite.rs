@@ -197,8 +197,12 @@ fn flaky_tasks_with_mixed_failures_converge() {
         ctx.set_output_as(0, &(ctx.attempt as u64));
         Ok(())
     });
-    let rt =
-        CometRuntime::builder().workers(&[4]).max_retries(3).scale(TimeScale::new(0.001)).build().unwrap();
+    let rt = CometRuntime::builder()
+        .workers(&[4])
+        .max_retries(3)
+        .scale(TimeScale::new(0.001))
+        .build()
+        .unwrap();
     // 8 tasks; ~half get 1-2 injected failures.
     rt.inject_failure("ps.flaky2", 6);
     let outs: Vec<DataRef> = (0..8).map(|_| rt.new_object()).collect();
@@ -227,8 +231,12 @@ fn stream_workflow_survives_task_retries() {
         s.close()?;
         Ok(())
     });
-    let rt =
-        CometRuntime::builder().workers(&[4]).max_retries(2).scale(TimeScale::new(0.001)).build().unwrap();
+    let rt = CometRuntime::builder()
+        .workers(&[4])
+        .max_retries(2)
+        .scale(TimeScale::new(0.001))
+        .build()
+        .unwrap();
     let s = rt.object_stream::<u64>(Some("ps-retry")).unwrap();
     rt.submit(TaskSpec::new("ps.retry_prod").arg(Arg::StreamOut(s.handle().clone()))).unwrap();
     let got = s.poll_timeout(std::time::Duration::from_secs(10)).unwrap();
