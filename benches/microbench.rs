@@ -1,9 +1,9 @@
 //! Microbenchmarks of the L3 hot paths (the §Perf instrumentation):
 //! broker publish/poll, wire codec, task analysis, scheduling throughput,
-//! FDS directory scan and PJRT execution latency — plus the wakeup-driven
-//! stream plane, which also emits machine-readable
-//! `BENCH_stream_plane.json` (run with `--smoke` for the CI-sized version
-//! that runs only the stream-plane bench).
+//! FDS directory scan and PJRT execution latency — plus the JSON-emitting
+//! plane benches (`BENCH_stream_plane.json`, `BENCH_persistence.json`,
+//! `BENCH_cluster.json`, `BENCH_wire.json`; run with `--smoke` for the
+//! CI-sized versions, which run only those).
 
 use std::time::{Duration, Instant};
 
@@ -496,6 +496,125 @@ fn bench_persistence(smoke: bool) {
     let _ = std::fs::remove_dir_all(&base);
 }
 
+/// Remote publish→wakeup latency with a pipelined producer: the consumer
+/// parks in a remote long-poll, the producer publishes one record per
+/// round through a `window`-deep pipeline.
+fn wire_wakeup_latencies(
+    producer: &hybridws::broker::BrokerClient,
+    consumer: hybridws::broker::BrokerClient,
+    topic: &str,
+    window: usize,
+    rounds: usize,
+) -> Vec<f64> {
+    use hybridws::broker::AssignmentMode;
+    consumer.join_group("g", topic, "m", AssignmentMode::Shared).unwrap();
+    // Drain whatever the throughput phase left behind so every latency
+    // round measures a fresh publish→wakeup, not a backlog drain.
+    while consumer
+        .fetch_many("g", topic, "m", usize::MAX, usize::MAX)
+        .unwrap()
+        .record_count()
+        > 0
+    {}
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<Instant>();
+    let topic_c = topic.to_string();
+    let waiter = std::thread::spawn(move || {
+        let mut lat_us = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            ready_tx.send(()).unwrap();
+            let mut got = 0;
+            while got == 0 {
+                got = consumer
+                    .fetch_many_wait("g", &topic_c, "m", usize::MAX, usize::MAX, 5_000)
+                    .unwrap()
+                    .record_count();
+            }
+            let t1 = Instant::now();
+            let t0 = stamp_rx.recv().unwrap();
+            lat_us.push(t1.duration_since(t0).as_secs_f64() * 1e6);
+        }
+        lat_us
+    });
+    let mut pipe = producer.pipeline(window);
+    for i in 0..rounds {
+        ready_rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(2)); // let the consumer park
+        let t0 = Instant::now();
+        pipe.publish(topic, ProducerRecord::new(vec![i as u8])).unwrap();
+        stamp_tx.send(t0).unwrap();
+    }
+    pipe.flush().unwrap();
+    waiter.join().unwrap()
+}
+
+/// The pipelined wire plane (PR 5), measured over real TCP loopback:
+/// remote publish throughput and publish→wakeup latency at in-flight
+/// windows 1 (the old lock-step behaviour) / 8 / 64 through one muxed
+/// connection. Emits `BENCH_wire.json`; the ISSUE 5 acceptance gate is
+/// window-64 throughput ≥ 3× lock-step on loopback.
+fn bench_wire_plane(smoke: bool) {
+    use hybridws::broker::{BrokerClient, BrokerCore, BrokerServer};
+    use hybridws::util::timeutil::percentile;
+    banner("micro", "pipelined wire plane: in-flight publish windows (TCP loopback)");
+    let n = if smoke { 6_000 } else { 60_000 };
+    let rounds = if smoke { 50 } else { 300 };
+    let payload = 100usize;
+    let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let t = Table::new(&["window", "publish_per_s", "wakeup_p50_us", "wakeup_p99_us"]);
+    let mut configs = Vec::new();
+    let mut rates = Vec::new();
+    for window in [1usize, 8, 64] {
+        let topic = format!("w{window}");
+        let producer = BrokerClient::connect(&addr).unwrap();
+        producer.create_topic(&topic, 4).unwrap();
+        // Small batches so the in-flight window — not batching — is the
+        // measured lever; window 1 waits every ack like the old lock-step.
+        let mut pipe = producer.pipeline(window);
+        let t0 = Instant::now();
+        let mut left = n;
+        while left > 0 {
+            let chunk = left.min(16);
+            let recs: Vec<ProducerRecord> =
+                (0..chunk).map(|_| ProducerRecord::new(vec![0xAB; payload])).collect();
+            pipe.publish_batch(&topic, recs).unwrap();
+            left -= chunk;
+        }
+        assert_eq!(pipe.flush().unwrap(), n as u64, "every batch must ack");
+        let records_per_s = n as f64 / t0.elapsed().as_secs_f64();
+        let consumer = BrokerClient::connect(&addr).unwrap();
+        let lat = wire_wakeup_latencies(&producer, consumer, &topic, window, rounds);
+        let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+        t.row(&[
+            window.to_string(),
+            format!("{records_per_s:.0}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+        configs.push(format!(
+            "{{\"window\":{window},\"publish_per_s\":{records_per_s:.0},\
+             \"wakeup_p50_us\":{p50:.2},\"wakeup_p99_us\":{p99:.2}}}"
+        ));
+        rates.push(records_per_s);
+    }
+    let speedup = if rates[0] > 0.0 { rates[2] / rates[0] } else { 0.0 };
+    println!("\npipelined (window 64) vs lock-step (window 1): {speedup:.2}x");
+    if speedup < 3.0 {
+        // Timing, not correctness: warn loudly but keep the run green on
+        // noisy machines.
+        println!("WARNING: window-64 publish under 3x lock-step — rerun on an idle machine");
+    }
+    let json = format!(
+        "{{\"bench\":\"wire\",\"smoke\":{smoke},\"records\":{n},\"payload\":{payload},\
+         \"configs\":[{}],\"speedup_w64_vs_lockstep\":{speedup:.3}}}",
+        configs.join(",")
+    );
+    std::fs::write("BENCH_wire.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_wire.json: {json}\n");
+    server.shutdown();
+}
+
 /// Start `n` in-process cluster members on ephemeral ports (real TCP, real
 /// owner-routing) and return the servers + the shared seed list.
 fn start_cluster(n: usize) -> (Vec<hybridws::broker::BrokerServer>, Vec<String>) {
@@ -669,11 +788,12 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     hybridws::apps::register_all();
     if smoke {
-        // CI-sized: the stream-plane + persistence + cluster benches,
-        // JSON-emitting.
+        // CI-sized: the stream-plane + persistence + cluster + wire-plane
+        // benches, JSON-emitting.
         bench_stream_plane(true);
         bench_persistence(true);
         bench_cluster(true);
+        bench_wire_plane(true);
         return;
     }
     bench_broker();
@@ -687,5 +807,6 @@ fn main() {
     bench_stream_plane(false);
     bench_persistence(false);
     bench_cluster(false);
+    bench_wire_plane(false);
     bench_pjrt();
 }

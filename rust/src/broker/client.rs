@@ -1,8 +1,14 @@
 //! `BrokerClient`: one API over two transports — embedded (`Arc<BrokerCore>`
-//! call-through) or remote (framed TCP). The DistroStream layer only ever
-//! sees this type (through [`super::StreamBroker`]), so streams are
-//! backend-location agnostic, exactly like the paper's
-//! ODSPublisher/ODSConsumer hide Kafka.
+//! call-through) or remote (pipelined mux TCP, see [`crate::util::mux`]).
+//! The DistroStream layer only ever sees this type (through
+//! [`super::StreamBroker`]), so streams are backend-location agnostic,
+//! exactly like the paper's ODSPublisher/ODSConsumer hide Kafka.
+//!
+//! The remote transport multiplexes every request over **one socket**:
+//! concurrent callers (publishers, parked long-polls, control calls) each
+//! hold an outstanding correlation id instead of serialising on a socket
+//! mutex, and [`BrokerClient::pipeline`] keeps a bounded window of publish
+//! frames in flight so throughput scales past `1/RTT`.
 //!
 //! The remote transport is **self-healing**: a send/recv failure drops the
 //! socket and retries with exponential backoff for
@@ -21,8 +27,7 @@
 //! durable storage (PR 3) the group resumes from its persisted committed
 //! offsets.
 
-use std::collections::HashMap;
-use std::net::TcpStream;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -30,29 +35,26 @@ use super::embedded::{BrokerCore, BrokerError, MultiFetch, Result, TopicStats};
 use super::group::AssignmentMode;
 use super::protocol::{error_from_code, ClusterMetaWire, Request, Response};
 use super::record::{ProducerRecord, Record};
-use crate::util::wire::{recv_msg, send_msg};
+use crate::util::mux::{MuxConn, MuxSlot, PendingReply};
 
 enum Transport {
     /// Zero-copy call-through: polls return `Arc`-shared records.
     Embedded(Arc<BrokerCore>),
-    /// Mutex: the request/response protocol is strictly serial per
-    /// connection; concurrent users each hold their own client. `None`
-    /// means the socket broke and the next request reconnects.
-    ///
-    /// Long-poll fetches travel over a **separate** lazily-opened socket
-    /// (`fetch_sock`): a consumer parked server-side must not serialise
-    /// against publishes and control calls on the main socket.
-    Remote {
-        sock: Mutex<Option<TcpStream>>,
-        addr: String,
-        fetch_sock: Mutex<Option<TcpStream>>,
-    },
+    /// One pipelined mux connection (PR 5) in a reconnectable slot: any
+    /// number of threads issue requests concurrently over the single
+    /// socket — each call is just an outstanding correlation id, so a
+    /// consumer parked in a server-side long-poll no longer serialises
+    /// against publishes and control calls (the old dedicated fetch socket
+    /// folded into the mux). A broken connection is dropped from the slot
+    /// and the next request reconnects.
+    Remote(MuxSlot),
 }
 
 /// Client-side slice of one remote long-poll round trip. Shorter than the
-/// server clamp: bounds how long the fetch socket is held per request (two
-/// consumers sharing a client alternate at this granularity) while staying
-/// ~1000× cheaper than the old 500 µs spin loop.
+/// server clamp: bounds how long one park outlives its caller's deadline
+/// while staying ~1000× cheaper than the old 500 µs spin loop. On the mux
+/// a parked slice is just an outstanding id — it holds no socket, so other
+/// consumers and publishers proceed concurrently.
 const REMOTE_WAIT_SLICE_MS: u64 = 250;
 
 /// How long a remote request keeps retrying reconnects before the
@@ -79,68 +81,68 @@ impl BrokerClient {
         Self { transport: Transport::Embedded(core), joined: Mutex::new(HashMap::new()) }
     }
 
-    /// Connect to a TCP broker server (eagerly — a dead address fails
-    /// here, not on first use).
+    /// Connect to a TCP broker server (eagerly — a dead or legacy-only
+    /// address fails here, at the mux handshake, not on first use).
     pub fn connect(addr: &str) -> Result<Self> {
-        let sock = Self::open(addr)?;
+        let conn = MuxConn::connect(addr)
+            .map(Arc::new)
+            .map_err(|e| BrokerError::Transport(format!("connect {addr}: {e}")))?;
         Ok(Self {
-            transport: Transport::Remote {
-                sock: Mutex::new(Some(sock)),
-                addr: addr.to_string(),
-                fetch_sock: Mutex::new(None),
-            },
+            transport: Transport::Remote(MuxSlot::connected(addr, conn)),
             joined: Mutex::new(HashMap::new()),
         })
     }
 
-    fn open(addr: &str) -> Result<TcpStream> {
-        let sock = TcpStream::connect(addr)
-            .map_err(|e| BrokerError::Transport(format!("connect {addr}: {e}")))?;
-        sock.set_nodelay(true).ok();
-        Ok(sock)
-    }
-
-    /// Clone an embedded client (remote clients own a socket; open another).
+    /// Clone an embedded client (remote clients own a connection; open
+    /// another).
     pub fn try_clone(&self) -> Option<Self> {
         match &self.transport {
             Transport::Embedded(core) => Some(Self::embedded(Arc::clone(core))),
-            Transport::Remote { .. } => None,
+            Transport::Remote(_) => None,
         }
     }
 
-    fn roundtrip(sock: &mut TcpStream, req: &Request) -> Result<Response> {
-        send_msg(sock, req).map_err(|e| BrokerError::Transport(format!("send: {e}")))?;
-        match recv_msg(sock) {
-            Ok(Some(resp)) => Ok(resp),
-            Ok(None) => Err(BrokerError::Transport("broker closed connection".into())),
-            Err(e) => Err(BrokerError::Transport(format!("recv: {e}"))),
+    /// The live mux connection, (re)established on demand (see
+    /// [`MuxSlot::get`] — concurrent callers all fly on the same `Arc`).
+    fn conn(&self) -> Result<Arc<MuxConn>> {
+        let Transport::Remote(slot) = &self.transport else {
+            unreachable!("conn() is remote-only");
+        };
+        slot.get()
+            .map_err(|e| BrokerError::Transport(format!("connect {}: {e}", slot.addr())))
+    }
+
+    /// Forget `failed` so the next request reconnects (unless a concurrent
+    /// caller already replaced it).
+    fn invalidate(&self, failed: &Arc<MuxConn>) {
+        if let Transport::Remote(slot) = &self.transport {
+            slot.invalidate(failed);
         }
     }
 
-    /// One attempt on the (re)connected main socket.
-    fn try_main(slot: &Mutex<Option<TcpStream>>, addr: &str, req: &Request) -> Result<Response> {
-        let mut slot = slot.lock().unwrap();
-        if slot.is_none() {
-            *slot = Some(Self::open(addr)?);
+    /// One attempt over the (re)connected mux: single round trip, no
+    /// retry — the callers own their retry policies.
+    fn try_once(&self, req: &Request) -> Result<Response> {
+        let conn = self.conn()?;
+        match conn.call::<Request, Response>(req) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.invalidate(&conn);
+                Err(BrokerError::Transport(format!("rpc: {e}")))
+            }
         }
-        let sock = slot.as_mut().expect("socket just ensured");
-        let resp = Self::roundtrip(sock, req);
-        if resp.is_err() {
-            *slot = None; // broken: the next attempt reconnects
-        }
-        resp
     }
 
     fn rpc(&self, req: Request) -> Result<Response> {
         match &self.transport {
             Transport::Embedded(core) => Ok(super::server::dispatch(core, req)),
-            Transport::Remote { sock, addr, .. } => {
+            Transport::Remote(_) => {
                 // Self-healing: reconnect-and-retry across a broker restart
                 // instead of surfacing the first broken-pipe error.
                 let deadline = Instant::now() + RECONNECT_WINDOW;
                 let mut backoff = RECONNECT_BACKOFF_START;
                 loop {
-                    match Self::try_main(sock, addr, &req) {
+                    match self.try_once(&req) {
                         Err(BrokerError::Transport(e)) => {
                             if Instant::now() + backoff > deadline {
                                 return Err(BrokerError::Transport(e));
@@ -153,26 +155,6 @@ impl BrokerClient {
                 }
             }
         }
-    }
-
-    /// One request over the dedicated long-poll socket (opened on first
-    /// use so clients that never long-poll cost one connection, not two).
-    /// Single attempt — the long-poll loop owns the retry policy.
-    fn fetch_rpc(&self, req: Request) -> Result<Response> {
-        let Transport::Remote { addr, fetch_sock, .. } = &self.transport else {
-            unreachable!("fetch_rpc is remote-only");
-        };
-        let mut slot = fetch_sock.lock().unwrap();
-        if slot.is_none() {
-            *slot = Some(Self::open(addr)?);
-        }
-        let sock = slot.as_mut().expect("fetch socket just ensured");
-        let resp = Self::roundtrip(sock, &req);
-        if resp.is_err() {
-            // Drop a broken socket so the next long-poll reconnects.
-            *slot = None;
-        }
-        resp
     }
 
     /// Replay a remembered join after a broker restart dropped the group.
@@ -371,11 +353,12 @@ impl BrokerClient {
     /// [`BrokerClient::fetch_many`] that **blocks** until data or deadline
     /// (the long-poll plane). Embedded: parks on the topic's publish
     /// `Condvar` — zero round trips while idle. Remote: holds one
-    /// outstanding `FetchMany` frame per wait slice; the server parks the
-    /// connection, so an idle consumer costs ~4 frames/s instead of the
-    /// ~2000 empty fetches/s of a 500 µs spin loop. A broker restart
-    /// mid-poll reconnects (and re-joins the group when this client had
-    /// joined it) instead of erroring.
+    /// outstanding `FetchMany` id on the mux per wait slice; the server
+    /// parks it on its own thread, so an idle consumer costs ~4 frames/s
+    /// instead of the ~2000 empty fetches/s of a 500 µs spin loop — and
+    /// publishes/control calls keep flowing on the same socket while it
+    /// parks. A broker restart mid-poll reconnects (and re-joins the group
+    /// when this client had joined it) instead of erroring.
     pub fn fetch_many_wait(
         &self,
         group: &str,
@@ -427,7 +410,9 @@ impl BrokerClient {
                 max_bytes,
                 wait_ms: slice,
             };
-            let resp = if slice == 0 { self.rpc(req) } else { self.fetch_rpc(req) };
+            // Waiting slices are single attempts (this loop owns the retry
+            // policy); a zero-wait sweep keeps the full reconnect window.
+            let resp = if slice == 0 { self.rpc(req) } else { self.try_once(&req) };
             match resp {
                 Ok(Response::Batches { batches, positions }) => {
                     let mf = MultiFetch {
@@ -557,6 +542,167 @@ impl BrokerClient {
             Response::Err { code, msg } => Err(error_from_code(code, msg)),
             other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
         }
+    }
+
+    // ---- pipelined publishing (PR 5) ------------------------------------
+
+    /// A bounded-window pipelined publisher over this client: up to
+    /// `window` publish frames stay in flight on the mux at once, so
+    /// remote throughput is no longer capped at `1/RTT`. Acks resolve
+    /// asynchronously; errors surface in submission order. Call
+    /// [`PublishPipeline::flush`] before dropping it — unflushed acks are
+    /// abandoned. Embedded transports complete each publish inline.
+    ///
+    /// Unlike the plain [`BrokerClient::publish_batch`], a pipelined
+    /// publish whose connection breaks is **not** retried (re-submitting a
+    /// window could reorder records); [`PublishPipeline::acked`] reports
+    /// progress so callers can resume.
+    pub fn pipeline(&self, window: usize) -> PublishPipeline<'_> {
+        PublishPipeline { client: self, window: window.max(1), inflight: VecDeque::new(), acked: 0 }
+    }
+
+    /// Submit a partition-targeted publish without waiting for its ack
+    /// (remote: one in-flight mux frame; embedded: completes inline) —
+    /// the primitive under [`super::cluster::ClusterClient`]'s pipelined
+    /// per-owner batch shipping.
+    pub fn publish_to_submit(
+        &self,
+        topic: &str,
+        partition: usize,
+        recs: Vec<ProducerRecord>,
+    ) -> PendingPublish {
+        let inner = match &self.transport {
+            Transport::Embedded(core) => {
+                PendingKind::Ready(core.publish_to(topic, partition, recs))
+            }
+            Transport::Remote(_) => {
+                let req = Request::PublishTo { topic: topic.into(), partition, recs };
+                match self.conn() {
+                    Ok(conn) => match conn.submit(&req) {
+                        Ok(reply) => PendingKind::Wire(reply),
+                        Err(e) => {
+                            self.invalidate(&conn);
+                            PendingKind::Ready(Err(BrokerError::Transport(format!("submit: {e}"))))
+                        }
+                    },
+                    Err(e) => PendingKind::Ready(Err(e)),
+                }
+            }
+        };
+        PendingPublish { inner }
+    }
+}
+
+/// An in-flight partition-targeted publish (see
+/// [`BrokerClient::publish_to_submit`]).
+pub struct PendingPublish {
+    inner: PendingKind,
+}
+
+enum PendingKind {
+    /// Completed inline (embedded transport, or a submit-time failure).
+    Ready(Result<Vec<u64>>),
+    /// Outstanding mux frame; resolved by correlation id.
+    Wire(PendingReply),
+}
+
+impl PendingPublish {
+    /// Block until the ack arrives; returns the assigned offsets in order.
+    pub fn wait(self) -> Result<Vec<u64>> {
+        match self.inner {
+            PendingKind::Ready(res) => res,
+            PendingKind::Wire(reply) => match reply.wait_msg::<Response>() {
+                Ok(Response::PubBatchAck { acks }) => {
+                    Ok(acks.into_iter().map(|(_, o)| o).collect())
+                }
+                Ok(Response::Err { code, msg }) => Err(error_from_code(code, msg)),
+                Ok(other) => {
+                    Err(BrokerError::Transport(format!("unexpected response {other:?}")))
+                }
+                Err(e) => Err(BrokerError::Transport(format!("ack: {e}"))),
+            },
+        }
+    }
+}
+
+/// Bounded-window pipelined publisher (see [`BrokerClient::pipeline`]).
+pub struct PublishPipeline<'a> {
+    client: &'a BrokerClient,
+    window: usize,
+    inflight: VecDeque<PendingAck>,
+    acked: u64,
+}
+
+enum PendingAck {
+    Ready(Result<Vec<(usize, u64)>>),
+    Wire(PendingReply),
+}
+
+impl PublishPipeline<'_> {
+    /// Publish one record through the window.
+    pub fn publish(&mut self, topic: &str, rec: ProducerRecord) -> Result<()> {
+        self.publish_batch(topic, vec![rec])
+    }
+
+    /// Publish a batch through the window: blocks only while the window is
+    /// full (waiting the **oldest** outstanding ack, so errors surface in
+    /// submission order), then ships the frame without waiting for its own
+    /// ack.
+    pub fn publish_batch(&mut self, topic: &str, recs: Vec<ProducerRecord>) -> Result<()> {
+        while self.inflight.len() >= self.window {
+            self.complete_oldest()?;
+        }
+        match &self.client.transport {
+            Transport::Embedded(core) => {
+                let res = core.publish_batch(topic, recs);
+                self.inflight.push_back(PendingAck::Ready(res));
+            }
+            Transport::Remote(_) => {
+                let conn = self.client.conn()?;
+                let req = Request::PublishBatch { topic: topic.into(), recs };
+                match conn.submit(&req) {
+                    Ok(reply) => self.inflight.push_back(PendingAck::Wire(reply)),
+                    Err(e) => {
+                        self.client.invalidate(&conn);
+                        return Err(BrokerError::Transport(format!("submit: {e}")));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn complete_oldest(&mut self) -> Result<()> {
+        let Some(pending) = self.inflight.pop_front() else {
+            return Ok(());
+        };
+        let acks = match pending {
+            PendingAck::Ready(res) => res?,
+            PendingAck::Wire(reply) => match reply.wait_msg::<Response>() {
+                Ok(Response::PubBatchAck { acks }) => acks,
+                Ok(Response::Err { code, msg }) => return Err(error_from_code(code, msg)),
+                Ok(other) => {
+                    return Err(BrokerError::Transport(format!("unexpected response {other:?}")))
+                }
+                Err(e) => return Err(BrokerError::Transport(format!("ack: {e}"))),
+            },
+        };
+        self.acked += acks.len() as u64;
+        Ok(())
+    }
+
+    /// Wait out every outstanding ack (first error, in submission order,
+    /// wins) and return the total records acked through this pipeline.
+    pub fn flush(&mut self) -> Result<u64> {
+        while !self.inflight.is_empty() {
+            self.complete_oldest()?;
+        }
+        Ok(self.acked)
+    }
+
+    /// Records acked so far (grows as the window turns over).
+    pub fn acked(&self) -> u64 {
+        self.acked
     }
 }
 
@@ -720,6 +866,65 @@ mod tests {
         let (count, waited) = waiter.join().unwrap();
         assert_eq!(count, 1);
         assert!(waited < Duration::from_secs(5), "server must wake the parked fetch");
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_publish_window_flushes_every_ack() {
+        let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+        let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.create_topic("t", 4).unwrap();
+        let mut pipe = client.pipeline(8);
+        for i in 0..100u8 {
+            pipe.publish("t", ProducerRecord::new(vec![i])).unwrap();
+        }
+        assert_eq!(pipe.flush().unwrap(), 100, "every submitted record must be acked");
+        assert_eq!(client.topic_stats("t").unwrap().records, 100);
+        // Submission-order errors: publishing to a missing topic surfaces
+        // the broker error through the pipeline, not a hang.
+        let mut bad = client.pipeline(4);
+        bad.publish("nope", ProducerRecord::new(vec![1])).unwrap();
+        assert!(matches!(bad.flush(), Err(BrokerError::UnknownTopic(_))));
+        server.shutdown();
+    }
+
+    #[test]
+    fn publish_to_submit_resolves_out_of_band() {
+        let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+        let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.create_topic("t", 2).unwrap();
+        // Two partition-targeted publishes in flight at once; both ack.
+        let a = client.publish_to_submit("t", 0, vec![ProducerRecord::new(vec![1])]);
+        let b = client.publish_to_submit("t", 1, vec![ProducerRecord::new(vec![2])]);
+        assert_eq!(b.wait().unwrap(), vec![0]);
+        assert_eq!(a.wait().unwrap(), vec![0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn parked_long_poll_does_not_block_the_mux() {
+        use std::time::{Duration, Instant};
+        let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+        let client = Arc::new(BrokerClient::connect(&server.addr.to_string()).unwrap());
+        client.create_topic("t", 1).unwrap();
+        client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+        // Park a long fetch on the shared connection...
+        let consumer = Arc::clone(&client);
+        let waiter = std::thread::spawn(move || {
+            consumer.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 10_000)
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        // ...and prove later requests on the SAME client still flow (the
+        // lock-step transport would queue them behind the park).
+        let t0 = Instant::now();
+        client.ping().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "ping must not wait for the parked fetch"
+        );
+        client.publish("t", ProducerRecord::new(vec![9])).unwrap();
+        let mf = waiter.join().unwrap().unwrap();
+        assert_eq!(mf.record_count(), 1, "the publish must wake the parked fetch");
         server.shutdown();
     }
 

@@ -7,7 +7,9 @@
 //!
 //! - **Publishes** are bucketed per partition client-side (same FNV key
 //!   hash as the broker's partitioner, round-robin for key-less records)
-//!   and shipped as one partition-targeted `PublishTo` frame per owner.
+//!   and shipped as one partition-targeted `PublishTo` frame per owner —
+//!   **pipelined** since PR 5: every bucket's frame is in flight on its
+//!   owner's mux before any ack is awaited.
 //! - **Fetches** run one long-poll per owning broker, merged through a
 //!   small wakeup mux: the first shard with data wakes the caller, late
 //!   results are stashed and drained by the next poll (nothing claimed is
@@ -34,7 +36,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::broker::client::BrokerClient;
+use crate::broker::client::{BrokerClient, PendingPublish};
 use crate::broker::embedded::{
     BrokerError, MultiFetch, Result, TopicStats, MAX_WAIT_HORIZON_MS,
 };
@@ -298,6 +300,17 @@ impl Shared {
 /// the DistroStream layer is backend-count agnostic.
 pub struct ClusterClient {
     shared: Arc<Shared>,
+}
+
+/// One pipelined per-partition bucket of a [`ClusterClient::publish_batch`]
+/// awaiting its ack (submission order preserved by the wait loop).
+struct InflightBucket {
+    partition: usize,
+    /// Positions of this bucket's records in the caller's batch.
+    indices: Vec<usize>,
+    /// The records, retained for the healing fallback path.
+    batch: Vec<ProducerRecord>,
+    pending: Result<PendingPublish>,
 }
 
 impl ClusterClient {
@@ -584,6 +597,14 @@ impl ClusterClient {
 
     /// Bucket per partition, ship one `PublishTo` frame per bucket to its
     /// owner; acks return in submission order.
+    ///
+    /// PR 5: the buckets are **pipelined** — every frame is submitted on
+    /// its owner's mux before any ack is awaited, so a multi-shard batch
+    /// costs the slowest owner's round trip instead of the sum over
+    /// buckets (and buckets sharing one owner ride the same in-flight
+    /// window). A bucket whose fast-path submit fails (stale owner, lost
+    /// topic, broker restart) falls back to the fully-healed sequential
+    /// path for just that bucket.
     pub fn publish_batch(
         &self,
         topic: &str,
@@ -599,6 +620,7 @@ impl ClusterClient {
         }
         let mut slots: Vec<Option<ProducerRecord>> = recs.into_iter().map(Some).collect();
         let mut acks = vec![(0usize, 0u64); slots.len()];
+        let mut inflight: Vec<InflightBucket> = Vec::new();
         for (p, bucket) in buckets.iter().enumerate() {
             if bucket.is_empty() {
                 continue;
@@ -607,9 +629,26 @@ impl ClusterClient {
                 .iter()
                 .map(|&i| slots[i].take().expect("record consumed twice"))
                 .collect();
-            let offsets = self.publish_partition(topic, p, batch)?;
-            for (&i, off) in bucket.iter().zip(offsets) {
-                acks[i] = (p, off);
+            let target = self.shared.owner(topic, p);
+            // The batch is kept (record clones are Arc-cheap) so a failed
+            // fast path can be replayed through the healing slow path.
+            let pending = self
+                .shared
+                .client(&target)
+                .map(|c| c.publish_to_submit(topic, p, batch.clone()));
+            inflight.push(InflightBucket { partition: p, indices: bucket.clone(), batch, pending });
+        }
+        for ib in inflight {
+            let offsets = match ib.pending.and_then(|pending| pending.wait()) {
+                Ok(offsets) => offsets,
+                // Reroute/heal (NotOwner refresh, re-ensure, reconnect
+                // windows) — at-least-once like every transport retry here:
+                // an acked-but-unconfirmed fast path may duplicate records,
+                // never lose them.
+                Err(_) => self.publish_partition(topic, ib.partition, ib.batch)?,
+            };
+            for (&i, off) in ib.indices.iter().zip(offsets) {
+                acks[i] = (ib.partition, off);
             }
         }
         Ok(acks)

@@ -49,7 +49,7 @@ pub mod topic;
 
 use std::sync::Arc;
 
-pub use client::BrokerClient;
+pub use client::{BrokerClient, PendingPublish, PublishPipeline};
 pub use cluster::{ClusterClient, ClusterSpec, ClusterView};
 pub use embedded::{BrokerCore, MultiFetch};
 pub use group::AssignmentMode;

@@ -2,6 +2,13 @@
 //!
 //! One request frame → one response frame. Tag bytes keep the codec
 //! hand-rolled but explicit; unknown tags surface as `DecodeError::BadTag`.
+//!
+//! Since PR 5 these encodings normally travel inside **mux frames**
+//! (`[len][corr][body]`, see [`crate::util::mux`]): one connection carries
+//! many in-flight request/response pairs, matched by correlation id, and
+//! responses may return out of submission order (parked long-polls). The
+//! bare one-shot framing survives as the legacy lock-step mode, still
+//! served for old peers and raw-socket tools.
 
 use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
 use crate::util::wire::Wire;
@@ -70,6 +77,19 @@ pub enum Request {
     /// Cluster membership snapshot; replies with [`Response::Cluster`]
     /// (empty member list when the broker is not part of a cluster).
     ClusterMeta,
+}
+
+impl Request {
+    /// Server-side park horizon of this request in ms: `> 0` marks a
+    /// long-poll, which a mux server must dispatch off its reader thread
+    /// so the requests pipelined behind it are not blocked while it parks
+    /// (its response then completes out of order, routed by id).
+    pub fn park_wait_ms(&self) -> u64 {
+        match self {
+            Request::FetchMany { wait_ms, .. } => *wait_ms,
+            _ => 0,
+        }
+    }
 }
 
 impl Wire for Request {

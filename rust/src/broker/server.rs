@@ -1,12 +1,20 @@
 //! TCP front-end for [`BrokerCore`]: one thread per connection, framed
 //! request/response (see [`super::protocol`]).
 //!
-//! Long-poll fetches ([`Request::FetchMany`] with `wait_ms > 0`) park the
-//! connection thread inside [`BrokerCore::fetch_many_wait`] — the client
-//! holds one outstanding request instead of spinning empty fetches.
-//! Connection threads honour [`BrokerServer::shutdown`] through a socket
-//! read timeout: between frames they poll the stop flag, so shutdown no
-//! longer leaks live threads waiting on peers that never close.
+//! The first frame of a connection picks its protocol (PR 5): a mux hello
+//! ([`crate::util::mux`]) upgrades to the **pipelined multiplexed plane**
+//! — many in-flight requests per socket, matched by correlation id, with
+//! long-polls parked on their own threads so their responses complete out
+//! of order behind later requests. Anything else is served in the legacy
+//! lock-step mode, one request/response pair at a time, with a reused
+//! per-connection encode buffer.
+//!
+//! Long-poll fetches ([`Request::FetchMany`] with `wait_ms > 0`) park
+//! inside [`BrokerCore::fetch_many_wait`] — the client holds one
+//! outstanding request instead of spinning empty fetches. Connection
+//! threads honour [`BrokerServer::shutdown`] through a socket read
+//! timeout: between frames they poll the stop flag, so shutdown no longer
+//! leaks live threads waiting on peers that never close.
 //!
 //! A server started with [`BrokerServer::start_cluster`] carries a
 //! [`ClusterView`]: it answers [`Request::ClusterMeta`], serves
@@ -22,7 +30,8 @@ use std::time::Duration;
 
 use log::{debug, warn};
 
-use crate::util::wire::{recv_msg_patient, send_msg};
+use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, ServeAction, Sniff};
+use crate::util::wire::{read_frame_patient, Wire};
 
 use super::cluster::{ClusterView, PLACEMENT_VERSION};
 use super::embedded::{BrokerCore, BrokerError};
@@ -139,29 +148,88 @@ fn handle_conn(
 ) {
     let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     debug!("broker conn from {peer}");
-    // The read timeout lets the loop poll the stop flag between frames;
-    // `recv_msg_patient` keeps partial frames intact across timeout ticks.
+    // Small lock-step replies must not sit out a Nagle delay (clients
+    // always set nodelay; the server-accepted half never did before PR 5).
+    let _ = sock.set_nodelay(true);
+    // The read timeout lets the loops poll the stop flag between frames;
+    // the patient readers keep partial frames intact across timeout ticks.
     let _ = sock.set_read_timeout(Some(CONN_READ_TIMEOUT));
-    loop {
-        let req: Request = match recv_msg_patient(&mut sock, || !stop.load(Ordering::SeqCst)) {
-            Ok(Some(r)) => r,
-            Ok(None) => break, // clean close, or stop requested while idle
-            Err(e) => {
-                debug!("broker conn {peer} read error: {e}");
-                break;
-            }
-        };
+    // The first frame picks the protocol: a mux hello upgrades the
+    // connection, anything else is a legacy lock-step request.
+    let first = match read_frame_patient(&mut sock, || !stop.load(Ordering::SeqCst)) {
+        Ok(Some(buf)) => buf,
+        Ok(None) => return,
+        Err(e) => {
+            debug!("broker conn {peer} read error: {e}");
+            return;
+        }
+    };
+    match sniff_first_frame(&mut sock, &first, &peer) {
+        Sniff::Mux => serve_mux(core, cluster, stop, sock, peer),
+        Sniff::Reject => {}
+        Sniff::Legacy => match Request::decode_exact(&first) {
+            Ok(req) => serve_legacy(core, cluster, stop, sock, peer, req),
+            Err(e) => debug!("broker conn {peer} bad first frame: {e}"),
+        },
+    }
+}
+
+/// The pre-PR 5 lock-step mode, on the shared loop ([`serve_legacy_conn`]):
+/// one request, one response, strictly serial. Kept for old peers and
+/// raw-socket tools.
+fn serve_legacy(
+    core: Arc<BrokerCore>,
+    cluster: Arc<Option<ClusterView>>,
+    stop: Arc<AtomicBool>,
+    sock: TcpStream,
+    peer: String,
+    first: Request,
+) {
+    let keep_going = {
+        let stop = Arc::clone(&stop);
+        move || !stop.load(Ordering::SeqCst)
+    };
+    let classify = move |req: &Request| {
         if matches!(req, Request::Shutdown) {
             stop.store(true, Ordering::SeqCst);
-            let _ = send_msg(&mut sock, &Response::Ok);
-            break;
+            ServeAction::Terminal
+        } else {
+            ServeAction::Inline
         }
-        let resp = dispatch_at(&core, (*cluster).as_ref(), req);
-        if let Err(e) = send_msg(&mut sock, &resp) {
-            debug!("broker conn {peer} write error: {e}");
-            break;
+    };
+    let dispatch = Arc::new(move |req: Request| dispatch_at(&core, (*cluster).as_ref(), req));
+    serve_legacy_conn(sock, &peer, keep_going, classify, dispatch, first);
+}
+
+/// The pipelined mux mode (PR 5), on the shared serve loop
+/// ([`serve_mux_conn`]): non-blocking requests dispatch inline (publish
+/// acks keep submission order); long-polls park on their own threads and
+/// answer out of order by correlation id. `Shutdown` sets the stop flag
+/// from the classifier before its ack goes out.
+fn serve_mux(
+    core: Arc<BrokerCore>,
+    cluster: Arc<Option<ClusterView>>,
+    stop: Arc<AtomicBool>,
+    sock: TcpStream,
+    peer: String,
+) {
+    debug!("broker conn {peer}: mux mode");
+    let keep_going = {
+        let stop = Arc::clone(&stop);
+        move || !stop.load(Ordering::SeqCst)
+    };
+    let classify = move |req: &Request| {
+        if matches!(req, Request::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            ServeAction::Terminal
+        } else if req.park_wait_ms() > 0 {
+            ServeAction::Park
+        } else {
+            ServeAction::Inline
         }
-    }
+    };
+    let dispatch = Arc::new(move |req: Request| dispatch_at(&core, (*cluster).as_ref(), req));
+    serve_mux_conn(sock, &peer, "broker-park", keep_going, classify, dispatch);
 }
 
 /// Map one request onto the core (standalone broker: no cluster view).
@@ -367,7 +435,7 @@ mod tests {
     use super::*;
     use crate::broker::group::AssignmentMode;
     use crate::broker::record::ProducerRecord;
-    use crate::util::wire::recv_msg;
+    use crate::util::wire::{recv_msg, send_msg};
 
     #[test]
     fn dispatch_covers_success_and_error() {

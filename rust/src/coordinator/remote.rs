@@ -254,9 +254,12 @@ impl RemoteWorker {
                         if reader_killed.load(Ordering::SeqCst) {
                             continue;
                         }
+                        // `to_arc` copies frame-view payloads out of their
+                        // wire frame so the registry never pins a whole
+                        // received frame for one output.
                         let outputs = outputs
                             .into_iter()
-                            .map(|(k, b)| (k, Arc::clone(b.0.as_arc())))
+                            .map(|(k, b)| (k, b.0.to_arc()))
                             .collect();
                         let finished = Event::Finished { task, worker: id, outputs, error };
                         if events.send(finished).is_err() {
@@ -391,7 +394,7 @@ fn run_remote_job(
     scale: TimeScale,
 ) -> anyhow::Result<Vec<(Key, Blob)>> {
     for (k, b) in inputs {
-        store.lock().unwrap().entry(k).or_insert_with(|| Arc::clone(b.0.as_arc()));
+        store.lock().unwrap().entry(k).or_insert_with(|| b.0.to_arc());
     }
     let mut out_keys: Vec<(usize, Key)> = Vec::new();
     let mut args = Vec::with_capacity(record.args.len());
@@ -450,9 +453,10 @@ fn run_remote_job(
             .find(|&&(i, _)| i == idx)
             .map(|&(_, k)| k)
             .ok_or_else(|| anyhow::anyhow!("output index mismatch"))?;
-        // One allocation serves both the local store and the reply frame.
+        // One allocation serves both the local store and the reply frame
+        // (`to_arc` on a whole-buffer view is an Arc clone, not a copy).
         let blob = Blob::new(bytes);
-        store.lock().unwrap().insert(key, Arc::clone(blob.0.as_arc()));
+        store.lock().unwrap().insert(key, blob.0.to_arc());
         keyed.push((key, blob));
     }
     Ok(keyed)

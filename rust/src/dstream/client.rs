@@ -11,24 +11,25 @@
 //! can be invalidated at any time by a producer closing).
 
 use std::collections::HashSet;
-use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
 
 use super::api::{ConsumerMode, DStreamError, Result, StreamId, StreamType};
 use super::protocol::{DsRequest, DsResponse, StreamInfoWire};
 use super::server::{dispatch, StreamRegistry};
-use crate::util::wire::{recv_msg, send_msg};
+use crate::util::mux::{MuxConn, MuxSlot};
 
 enum Transport {
     /// Shared in-process registry (single-node deployments, tests).
     Embedded(Arc<Mutex<StreamRegistry>>),
-    /// Framed TCP to a remote [`super::server::DistroStreamServer`].
-    ///
-    /// Long-poll `PollFiles` requests travel over a **separate**
-    /// lazily-opened socket (`poll_sock`): a consumer parked server-side
-    /// must not block `announce_file` (the very frame that would wake it)
-    /// or other metadata calls from threads sharing the client.
-    Remote { sock: Mutex<TcpStream>, addr: String, poll_sock: Mutex<Option<TcpStream>> },
+    /// One pipelined mux connection (PR 5) to a remote
+    /// [`super::server::DistroStreamServer`], in a reconnectable slot: a
+    /// consumer parked in a server-side long-poll `PollFiles` is just an
+    /// outstanding correlation id, so it no longer blocks `announce_file`
+    /// (the very frame that wakes it) or metadata calls from threads
+    /// sharing the client — the old dedicated poll socket folded into the
+    /// mux. A broken connection is dropped from the slot and the next
+    /// request reconnects.
+    Remote(MuxSlot),
 }
 
 /// Per-process client with a terminal-answer metadata cache.
@@ -44,58 +45,36 @@ impl DistroStreamClient {
     }
 
     pub fn connect(addr: &str) -> Result<Self> {
-        let sock = TcpStream::connect(addr)
+        let conn = MuxConn::connect(addr)
+            .map(Arc::new)
             .map_err(|e| DStreamError::Transport(format!("connect {addr}: {e}")))?;
-        sock.set_nodelay(true).ok();
         Ok(Self {
-            transport: Transport::Remote {
-                sock: Mutex::new(sock),
-                addr: addr.to_string(),
-                poll_sock: Mutex::new(None),
-            },
+            transport: Transport::Remote(MuxSlot::connected(addr, conn)),
             closed_cache: Mutex::new(HashSet::new()),
         })
-    }
-
-    fn roundtrip(sock: &mut TcpStream, req: &DsRequest) -> Result<DsResponse> {
-        send_msg(sock, req).map_err(|e| DStreamError::Transport(format!("send: {e}")))?;
-        match recv_msg(sock) {
-            Ok(Some(resp)) => Ok(resp),
-            Ok(None) => Err(DStreamError::Transport("server closed connection".into())),
-            Err(e) => Err(DStreamError::Transport(format!("recv: {e}"))),
-        }
     }
 
     fn rpc(&self, req: DsRequest) -> Result<DsResponse> {
         match &self.transport {
             Transport::Embedded(reg) => Ok(dispatch(reg, req)),
-            Transport::Remote { sock, .. } => {
-                let mut sock = sock.lock().unwrap();
-                Self::roundtrip(&mut sock, &req)
+            Transport::Remote(slot) => {
+                // The slot hands every concurrent caller (a parked
+                // long-poll, an announce, metadata lookups) the same live
+                // connection, so they are all in flight on the mux at once.
+                let c = slot.get().map_err(|e| {
+                    DStreamError::Transport(format!("connect {}: {e}", slot.addr()))
+                })?;
+                match c.call::<DsRequest, DsResponse>(&req) {
+                    Ok(resp) => Ok(resp),
+                    Err(e) => {
+                        // Forget the broken connection so the next request
+                        // reconnects.
+                        slot.invalidate(&c);
+                        Err(DStreamError::Transport(format!("rpc: {e}")))
+                    }
+                }
             }
         }
-    }
-
-    /// One request over the dedicated long-poll socket (remote only;
-    /// opened on first use).
-    fn poll_rpc(&self, req: DsRequest) -> Result<DsResponse> {
-        let Transport::Remote { addr, poll_sock, .. } = &self.transport else {
-            unreachable!("poll_rpc is remote-only");
-        };
-        let mut slot = poll_sock.lock().unwrap();
-        if slot.is_none() {
-            let sock = TcpStream::connect(addr)
-                .map_err(|e| DStreamError::Transport(format!("connect {addr}: {e}")))?;
-            sock.set_nodelay(true).ok();
-            *slot = Some(sock);
-        }
-        let sock = slot.as_mut().expect("poll socket just ensured");
-        let resp = Self::roundtrip(sock, &req);
-        if resp.is_err() {
-            // Drop a broken socket so the next long-poll reconnects.
-            *slot = None;
-        }
-        resp
     }
 
     fn expect_ok(&self, req: DsRequest) -> Result<()> {
@@ -165,14 +144,10 @@ impl DistroStreamClient {
         max: usize,
         wait_ms: u64,
     ) -> Result<Vec<String>> {
-        let req = DsRequest::PollFiles { id, candidates, max, wait_ms };
-        // Waiting polls park server-side: keep them off the shared
-        // metadata socket so they can't block the announce that wakes them.
-        let resp = match (&self.transport, wait_ms) {
-            (Transport::Remote { .. }, w) if w > 0 => self.poll_rpc(req)?,
-            _ => self.rpc(req)?,
-        };
-        match resp {
+        // A waiting poll parks server-side as one outstanding mux id: the
+        // announce that wakes it flows on the same connection (PR 5 — no
+        // dedicated poll socket any more).
+        match self.rpc(DsRequest::PollFiles { id, candidates, max, wait_ms })? {
             DsResponse::Files(fs) => Ok(fs),
             DsResponse::Unknown(id) => Err(DStreamError::UnknownStream(id)),
             other => Err(DStreamError::Transport(format!("unexpected response {other:?}"))),

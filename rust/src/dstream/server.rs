@@ -19,7 +19,8 @@ use std::time::{Duration, Instant};
 
 use log::{debug, warn};
 
-use crate::util::wire::{recv_msg_patient, send_msg};
+use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, ServeAction, Sniff};
+use crate::util::wire::{read_frame_patient, Wire};
 
 use super::api::{ConsumerMode, StreamId, StreamType};
 use super::protocol::{DsRequest, DsResponse, StreamInfoWire};
@@ -426,34 +427,84 @@ impl Drop for DistroStreamServer {
 }
 
 fn handle_conn(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
-    // Read timeout + patient recv: the loop polls the stop flag between
+    // Small replies must not sit out a Nagle delay (PR 5: servers now set
+    // nodelay on accepted sockets, like clients always did).
+    let _ = sock.set_nodelay(true);
+    // Read timeout + patient readers: the loops poll the stop flag between
     // frames, so shutdown no longer leaks threads blocked on idle peers.
     let _ = sock.set_read_timeout(Some(CONN_READ_TIMEOUT));
-    loop {
-        let req: DsRequest = match recv_msg_patient(&mut sock, || !stop.load(Ordering::SeqCst)) {
-            Ok(Some(r)) => r,
-            Ok(None) => break, // clean close, or stop requested while idle
-            Err(e) => {
-                debug!("dstream conn read error: {e}");
-                break;
-            }
-        };
+    // First frame picks the protocol: mux hello upgrades, else lock-step.
+    let first = match read_frame_patient(&mut sock, || !stop.load(Ordering::SeqCst)) {
+        Ok(Some(buf)) => buf,
+        Ok(None) => return,
+        Err(e) => {
+            debug!("dstream conn read error: {e}");
+            return;
+        }
+    };
+    match sniff_first_frame(&mut sock, &first, "dstream") {
+        Sniff::Mux => serve_mux(reg, stop, sock),
+        Sniff::Reject => {}
+        Sniff::Legacy => match DsRequest::decode_exact(&first) {
+            Ok(req) => serve_legacy(reg, stop, sock, req),
+            Err(e) => debug!("dstream conn bad first frame: {e}"),
+        },
+    }
+}
+
+/// Legacy lock-step mode (old peers, raw-socket tools), on the shared loop
+/// ([`serve_legacy_conn`]): one pair at a time, reused encode buffer,
+/// vectored reply writes.
+fn serve_legacy(
+    reg: Arc<Mutex<StreamRegistry>>,
+    stop: Arc<AtomicBool>,
+    sock: TcpStream,
+    first: DsRequest,
+) {
+    let keep_going = {
+        let stop = Arc::clone(&stop);
+        move || !stop.load(Ordering::SeqCst)
+    };
+    let classify = move |req: &DsRequest| {
         if matches!(req, DsRequest::Shutdown) {
             stop.store(true, Ordering::SeqCst);
-            let _ = send_msg(&mut sock, &DsResponse::Ok);
-            break;
+            ServeAction::Terminal
+        } else {
+            ServeAction::Inline
         }
-        let resp = dispatch(&reg, req);
-        if send_msg(&mut sock, &resp).is_err() {
-            break;
+    };
+    let dispatch_one = Arc::new(move |req: DsRequest| dispatch(&reg, req));
+    serve_legacy_conn(sock, "dstream", keep_going, classify, dispatch_one, first);
+}
+
+/// Pipelined mux mode (PR 5), on the shared serve loop
+/// ([`serve_mux_conn`]): long-poll `PollFiles` park on their own threads
+/// and answer out of order by correlation id, so an `AnnounceFile`
+/// pipelined behind a parked poll on the **same** connection is dispatched
+/// immediately — it is the very frame that wakes the poll.
+fn serve_mux(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, sock: TcpStream) {
+    let keep_going = {
+        let stop = Arc::clone(&stop);
+        move || !stop.load(Ordering::SeqCst)
+    };
+    let classify = move |req: &DsRequest| {
+        if matches!(req, DsRequest::Shutdown) {
+            stop.store(true, Ordering::SeqCst);
+            ServeAction::Terminal
+        } else if matches!(req, DsRequest::PollFiles { wait_ms, .. } if *wait_ms > 0) {
+            ServeAction::Park
+        } else {
+            ServeAction::Inline
         }
-    }
+    };
+    let dispatch_one = Arc::new(move |req: DsRequest| dispatch(&reg, req));
+    serve_mux_conn(sock, "dstream", "dstream-park", keep_going, classify, dispatch_one);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::wire::recv_msg;
+    use crate::util::wire::{recv_msg, send_msg};
 
     fn reg() -> StreamRegistry {
         StreamRegistry::new()

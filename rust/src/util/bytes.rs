@@ -42,56 +42,100 @@ impl std::error::Error for DecodeError {}
 /// Sanity cap for decoded collection/string/byte lengths (1 GiB).
 pub const MAX_LEN: u64 = 1 << 30;
 
-/// Immutable byte buffer that is **O(1) to clone** (`Arc`-backed).
+/// Immutable byte **view** that is **O(1) to clone** (`Arc`-backed): a
+/// shared allocation plus a byte range inside it.
 ///
 /// The streaming hot path stores every payload exactly once: a producer's
 /// `Vec<u8>` is wrapped (not copied) at construction, the partition log,
 /// every consumer-group fetch and the typed decode on the embedded backend
-/// all share the same allocation. Dereferences to `[u8]`, so slice methods
-/// and indexing work directly.
-#[derive(Clone, Default)]
-pub struct SharedBytes(Arc<Vec<u8>>);
+/// all share the same allocation. Since PR 5 the range makes the **remote**
+/// path zero-copy too: decoding a payload out of a received wire frame
+/// ([`ByteReader::shared`]) yields a sub-range view of the frame buffer
+/// instead of a fresh copy. Dereferences to `[u8]`, so slice methods and
+/// indexing work directly.
+#[derive(Clone)]
+pub struct SharedBytes {
+    buf: Arc<Vec<u8>>,
+    start: usize,
+    end: usize,
+}
+
+impl Default for SharedBytes {
+    fn default() -> Self {
+        Self::new(Vec::new())
+    }
+}
 
 impl SharedBytes {
     /// Wrap a buffer without copying it.
     pub fn new(bytes: Vec<u8>) -> Self {
-        Self(Arc::new(bytes))
+        Self::from_arc(Arc::new(bytes))
     }
 
     /// Share an existing `Arc` allocation (zero-copy hand-off from stores
     /// that already keep `Arc<Vec<u8>>`, e.g. the worker data registry).
     pub fn from_arc(bytes: Arc<Vec<u8>>) -> Self {
-        Self(bytes)
+        let end = bytes.len();
+        Self { buf: bytes, start: 0, end }
     }
 
-    /// Borrow the underlying `Arc` (for stores that keep `Arc<Vec<u8>>`).
-    pub fn as_arc(&self) -> &Arc<Vec<u8>> {
-        &self.0
+    /// The bytes as their own `Arc<Vec<u8>>` allocation: whole-buffer views
+    /// hand back the shared allocation (zero-copy); sub-range views (wire
+    /// frame slices) copy just their range so the caller never pins the
+    /// surrounding frame.
+    pub fn to_arc(&self) -> Arc<Vec<u8>> {
+        if self.start == 0 && self.end == self.buf.len() {
+            Arc::clone(&self.buf)
+        } else {
+            Arc::new(self.as_slice().to_vec())
+        }
+    }
+
+    /// A sub-view of this view (`start..end`, relative to it) sharing the
+    /// same allocation — the zero-copy decode primitive.
+    ///
+    /// # Panics
+    /// When the range is out of bounds or inverted.
+    pub fn slice(&self, start: usize, end: usize) -> SharedBytes {
+        assert!(start <= end && end <= self.len(), "SharedBytes::slice out of range");
+        SharedBytes {
+            buf: Arc::clone(&self.buf),
+            start: self.start + start,
+            end: self.start + end,
+        }
     }
 
     pub fn as_slice(&self) -> &[u8] {
-        &self.0
+        &self.buf[self.start..self.end]
     }
 
     pub fn len(&self) -> usize {
-        self.0.len()
+        self.end - self.start
     }
 
     pub fn is_empty(&self) -> bool {
-        self.0.is_empty()
+        self.start == self.end
     }
 
-    /// True when both handles share one allocation — the zero-copy
-    /// property the embedded data plane is tested against.
+    /// True when both views are **the same bytes** — one allocation, one
+    /// range. The zero-copy property the embedded data plane is tested
+    /// against.
     pub fn ptr_eq(&self, other: &SharedBytes) -> bool {
-        Arc::ptr_eq(&self.0, &other.0)
+        Arc::ptr_eq(&self.buf, &other.buf) && self.start == other.start && self.end == other.end
+    }
+
+    /// True when both views share one allocation, whatever their ranges —
+    /// the zero-copy witness of the **remote** path: every payload decoded
+    /// out of one wire frame reports the same buffer.
+    pub fn shares_buffer(&self, other: &SharedBytes) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
     }
 }
 
 impl Deref for SharedBytes {
     type Target = [u8];
     fn deref(&self) -> &[u8] {
-        &self.0
+        self.as_slice()
     }
 }
 
@@ -141,47 +185,119 @@ impl fmt::Debug for SharedBytes {
     }
 }
 
+/// Payloads shorter than this are copied inline even by segmented writers:
+/// below it, one more iovec entry costs more than the memcpy it saves.
+pub const SEG_INLINE_MAX: usize = 64;
+
 /// Append-only byte buffer with fixed-width little-endian put methods.
+///
+/// Two modes share one type so every `Wire` impl works with both:
+///
+/// - **Plain** ([`ByteWriter::new`]): everything lands in one contiguous
+///   buffer — `encode_vec`, disk frames, tests.
+/// - **Segmented** ([`ByteWriter::segmented`]): [`ByteWriter::put_shared`]
+///   records large payloads as out-of-line `Arc` segments instead of
+///   copying them, and the vectored send path
+///   ([`crate::util::wire::write_frame_parts`]) writes them straight from
+///   their allocation — the PR 5 zero-copy encode plane. The byte stream
+///   produced is identical in both modes.
 #[derive(Default, Debug, Clone)]
 pub struct ByteWriter {
     buf: Vec<u8>,
+    /// `Some` in segmented mode: `(split point in buf, payload)` pairs, in
+    /// write order; the logical byte stream interleaves `buf` with each
+    /// segment at its split point.
+    segs: Option<Vec<(usize, SharedBytes)>>,
 }
 
 impl ByteWriter {
     /// New empty writer.
     pub fn new() -> Self {
-        Self { buf: Vec::new() }
+        Self { buf: Vec::new(), segs: None }
     }
 
     /// New writer with reserved capacity (hot-path friendliness).
     pub fn with_capacity(cap: usize) -> Self {
-        Self { buf: Vec::with_capacity(cap) }
+        Self { buf: Vec::with_capacity(cap), segs: None }
     }
 
-    /// Finish and take the underlying buffer.
+    /// New writer in segmented mode: large [`ByteWriter::put_shared`]
+    /// payloads stay out-of-line for the vectored send path.
+    pub fn segmented() -> Self {
+        Self { buf: Vec::new(), segs: Some(Vec::new()) }
+    }
+
+    /// Finish and take the flattened byte stream.
     pub fn into_vec(self) -> Vec<u8> {
-        self.buf
+        match self.segs {
+            None => self.buf,
+            Some(segs) if segs.is_empty() => self.buf,
+            Some(segs) => {
+                let total = self.buf.len() + segs.iter().map(|(_, b)| b.len()).sum::<usize>();
+                let mut out = Vec::with_capacity(total);
+                let mut prev = 0usize;
+                for (split, b) in &segs {
+                    out.extend_from_slice(&self.buf[prev..*split]);
+                    out.extend_from_slice(b);
+                    prev = *split;
+                }
+                out.extend_from_slice(&self.buf[prev..]);
+                out
+            }
+        }
     }
 
-    /// Drop everything written so far but keep the allocation — lets hot
-    /// paths (batched stream encodes) reuse one writer across records.
+    /// Drop everything written so far but keep the allocations — lets hot
+    /// paths (batched stream encodes, per-connection send buffers) reuse
+    /// one writer across frames.
     pub fn clear(&mut self) {
         self.buf.clear();
+        if let Some(segs) = &mut self.segs {
+            segs.clear();
+        }
     }
 
-    /// Bytes written so far.
+    /// Logical bytes written so far (inline and out-of-line).
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.buf.len() + self.segs.as_deref().map_or(0, seg_bytes)
     }
 
     /// True if nothing has been written.
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.len() == 0
     }
 
-    /// Borrow the bytes written so far.
+    /// Borrow the bytes written so far. Plain mode only — a segmented
+    /// writer's stream is not contiguous (use [`ByteWriter::extend_chunks`]
+    /// or [`ByteWriter::into_vec`]). Hard assert (not just debug): silently
+    /// dropping out-of-line payload bytes would corrupt whatever the
+    /// caller writes, so misuse must fail loudly in production too.
     pub fn as_slice(&self) -> &[u8] {
+        assert!(
+            self.segs.as_deref().unwrap_or(&[]).is_empty(),
+            "as_slice on a segmented writer drops its out-of-line payloads"
+        );
         &self.buf
+    }
+
+    /// Append the logical byte stream to `out` as borrowed chunks (inline
+    /// ranges interleaved with out-of-line segments) — the input of one
+    /// vectored write.
+    pub fn extend_chunks<'a>(&'a self, out: &mut Vec<&'a [u8]>) {
+        let segs = self.segs.as_deref().unwrap_or(&[]);
+        let mut prev = 0usize;
+        for (split, b) in segs {
+            if *split > prev {
+                out.push(&self.buf[prev..*split]);
+            }
+            if !b.is_empty() {
+                out.push(b.as_slice());
+            }
+            prev = *split;
+        }
+        if self.buf.len() > prev {
+            out.push(&self.buf[prev..]);
+        }
     }
 
     pub fn put_u8(&mut self, v: u8) {
@@ -232,18 +348,50 @@ impl ByteWriter {
     pub fn put_str(&mut self, s: &str) {
         self.put_bytes(s.as_bytes());
     }
+
+    /// Length-prefixed shared byte blob. Segmented writers keep payloads
+    /// of at least [`SEG_INLINE_MAX`] bytes out-of-line (no memcpy — the
+    /// vectored send path writes them straight from their `Arc`); plain
+    /// writers copy inline. The produced byte stream is identical.
+    pub fn put_shared(&mut self, bytes: &SharedBytes) {
+        debug_assert!(bytes.len() as u64 <= MAX_LEN);
+        self.put_u32(bytes.len() as u32);
+        match &mut self.segs {
+            Some(segs) if bytes.len() >= SEG_INLINE_MAX => {
+                segs.push((self.buf.len(), bytes.clone()));
+            }
+            _ => self.buf.extend_from_slice(bytes),
+        }
+    }
+}
+
+/// Total out-of-line bytes held by a segment list.
+fn seg_bytes(segs: &[(usize, SharedBytes)]) -> usize {
+    segs.iter().map(|(_, b)| b.len()).sum()
 }
 
 /// Cursor over a byte slice with fixed-width little-endian take methods.
+///
+/// A reader constructed with [`ByteReader::shared`] additionally carries
+/// the `Arc`-backed buffer it cursors over, so [`ByteReader::get_shared`]
+/// can hand out zero-copy sub-views of the received frame instead of
+/// copying payload bytes — the PR 5 remote decode plane.
 pub struct ByteReader<'a> {
     buf: &'a [u8],
     pos: usize,
+    backing: Option<&'a SharedBytes>,
 }
 
 impl<'a> ByteReader<'a> {
     /// New reader over the whole slice.
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0 }
+        Self { buf, pos: 0, backing: None }
+    }
+
+    /// New reader over an `Arc`-backed frame: payloads taken with
+    /// [`ByteReader::get_shared`] are sub-views of `frame`, not copies.
+    pub fn shared(frame: &'a SharedBytes) -> Self {
+        Self { buf: frame.as_slice(), pos: 0, backing: Some(frame) }
     }
 
     /// Current cursor position.
@@ -317,6 +465,27 @@ impl<'a> ByteReader<'a> {
         let at = self.pos;
         let bytes = self.get_bytes()?;
         String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError::BadUtf8 { at })
+    }
+
+    /// Length-prefixed (u32) byte blob as a [`SharedBytes`]: a zero-copy
+    /// sub-view of the frame when the reader is [`ByteReader::shared`], a
+    /// fresh copy otherwise.
+    pub fn get_shared(&mut self) -> Result<SharedBytes, DecodeError> {
+        let at = self.pos;
+        let len = self.get_u32()? as u64;
+        if len > MAX_LEN {
+            return Err(DecodeError::TooLong { at, len });
+        }
+        let n = len as usize;
+        if self.remaining() < n {
+            return Err(DecodeError::Eof { at: self.pos, needed: n - self.remaining() });
+        }
+        let out = match self.backing {
+            Some(frame) => frame.slice(self.pos, self.pos + n),
+            None => SharedBytes::new(self.buf[self.pos..self.pos + n].to_vec()),
+        };
+        self.pos += n;
+        Ok(out)
     }
 }
 
@@ -413,5 +582,87 @@ mod tests {
         let b = SharedBytes::new(vec![2]);
         assert!(a < b);
         assert_eq!(a.cmp(&a.clone()), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn shared_bytes_slice_shares_the_allocation() {
+        let a = SharedBytes::new(vec![0, 1, 2, 3, 4, 5]);
+        let s = a.slice(2, 5);
+        assert_eq!(s.as_slice(), &[2, 3, 4]);
+        assert!(s.shares_buffer(&a), "a slice must view the same buffer");
+        assert!(!s.ptr_eq(&a), "different ranges are different views");
+        // Sub-slicing a slice stays relative to the view, not the buffer.
+        let ss = s.slice(1, 3);
+        assert_eq!(ss.as_slice(), &[3, 4]);
+        assert!(ss.shares_buffer(&a));
+        // Equal content from a different allocation shares nothing.
+        assert!(!s.shares_buffer(&SharedBytes::new(vec![2, 3, 4])));
+    }
+
+    #[test]
+    fn to_arc_is_zero_copy_for_whole_views_only() {
+        let a = SharedBytes::new(vec![7, 8, 9]);
+        assert!(Arc::ptr_eq(&a.to_arc(), &a.to_arc()), "whole view hands back its Arc");
+        let s = a.slice(1, 3);
+        let copied = s.to_arc();
+        assert_eq!(copied.as_slice(), &[8, 9], "sub-view copies exactly its range");
+    }
+
+    #[test]
+    fn segmented_writer_matches_plain_byte_stream() {
+        let big = SharedBytes::new(vec![0xAA; 200]); // ≥ SEG_INLINE_MAX → out-of-line
+        let tiny = SharedBytes::new(vec![1, 2, 3]); // < SEG_INLINE_MAX → inline
+        let build = |mut w: ByteWriter| {
+            w.put_u32(0xDEAD_BEEF);
+            w.put_shared(&big);
+            w.put_str("mid");
+            w.put_shared(&tiny);
+            w.put_shared(&big);
+            w.put_u8(7);
+            w
+        };
+        let plain = build(ByteWriter::new());
+        let seg = build(ByteWriter::segmented());
+        assert_eq!(plain.len(), seg.len());
+        let flat = seg.clone().into_vec();
+        assert_eq!(flat, plain.into_vec(), "segmented stream must be byte-identical");
+        // The chunk view reassembles to the same stream.
+        let mut chunks: Vec<&[u8]> = Vec::new();
+        seg.extend_chunks(&mut chunks);
+        let joined: Vec<u8> = chunks.concat();
+        assert_eq!(joined, flat);
+        assert!(chunks.len() >= 4, "large payloads must be out-of-line chunks");
+    }
+
+    #[test]
+    fn segmented_writer_clear_reuses_allocations() {
+        let big = SharedBytes::new(vec![9; 128]);
+        let mut w = ByteWriter::segmented();
+        w.put_shared(&big);
+        assert_eq!(w.len(), 4 + 128);
+        w.clear();
+        assert!(w.is_empty());
+        w.put_u8(1);
+        assert_eq!(w.into_vec(), vec![1]);
+    }
+
+    #[test]
+    fn shared_reader_decodes_views_of_the_frame() {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&[10, 11, 12]);
+        w.put_bytes(&[20, 21]);
+        let frame = SharedBytes::new(w.into_vec());
+        let mut r = ByteReader::shared(&frame);
+        let a = r.get_shared().unwrap();
+        let b = r.get_shared().unwrap();
+        assert!(r.is_exhausted());
+        assert_eq!(a.as_slice(), &[10, 11, 12]);
+        assert_eq!(b.as_slice(), &[20, 21]);
+        assert!(a.shares_buffer(&frame), "payloads must be frame views, not copies");
+        assert!(b.shares_buffer(&frame));
+        // An unbacked reader over the same bytes copies.
+        let flat = frame.as_slice().to_vec();
+        let mut r = ByteReader::new(&flat);
+        assert!(!r.get_shared().unwrap().shares_buffer(&frame));
     }
 }

@@ -3,6 +3,8 @@
 //! - [`bytes`] — growable byte writer / cursor reader.
 //! - [`wire`] — the [`wire::Wire`] binary-codec trait + length-prefixed
 //!   framing over any `Read`/`Write` (our serde + message framing).
+//! - [`mux`] — pipelined multiplexed connections: correlation-ID frames,
+//!   a coalescing writer, reader-side response routing (our tower/h2).
 //! - [`rng`] — SplitMix64 PRNG (deterministic, seedable; our `rand`).
 //! - [`logging`] — minimal `log` backend with env-driven level.
 //! - [`threadpool`] — fixed-size job pool used by workers and servers.
@@ -15,6 +17,7 @@ pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod mux;
 pub mod quick;
 pub mod rng;
 pub mod threadpool;

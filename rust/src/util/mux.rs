@@ -1,0 +1,777 @@
+//! Pipelined, multiplexed wire connections (PR 5).
+//!
+//! The lock-step RPC planes (broker, DistroStream registry) serialized one
+//! request/response pair per socket round trip, bounding remote throughput
+//! at `1/RTT`. This module multiplexes **many in-flight requests over one
+//! socket**:
+//!
+//! - Every frame carries a **correlation id** (`[u32 len][u64 corr][body]`
+//!   — the body is the unchanged `Wire` encoding of the request/response,
+//!   so the one-shot codec survives as the frame format).
+//! - A per-connection **writer thread** coalesces queued requests into
+//!   single vectored writes; payload segments go straight from their `Arc`
+//!   ([`crate::util::bytes::ByteWriter::segmented`]), never memcpy'd into
+//!   the encode buffer.
+//! - A per-connection **reader thread** dispatches response frames to the
+//!   callers waiting on their id — responses may arrive in any order, so
+//!   parked long-polls no longer block the requests pipelined behind them.
+//!
+//! Protocol negotiation: a mux client's first frame is a magic **hello**
+//! ([`hello_frame`]); servers answer with their own hello and switch the
+//! connection to mux framing. A legacy peer cannot decode the hello (the
+//! magic is an invalid request tag) and closes the connection, which the
+//! client reports as a clear handshake error — mixed old/new peers fail
+//! fast instead of desynchronising. Version-tagged: a peer speaking a
+//! different [`MUX_VERSION`] is rejected at the handshake.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::util::bytes::{ByteWriter, SharedBytes};
+use crate::util::wire::{
+    read_frame_patient, recv_msg_patient, send_msg_buf, write_all_vectored, write_frame,
+    write_frame_parts, Wire, MAX_FRAME,
+};
+
+/// First bytes of a mux hello frame. Never a valid request tag in any of
+/// the repo's protocols, so legacy servers reject the handshake instead of
+/// misreading it.
+pub const MUX_MAGIC: [u8; 4] = *b"HWMX";
+
+/// Mux protocol version — bumped on incompatible frame-format changes so
+/// mixed-version peers fail fast at the handshake with a clear error.
+pub const MUX_VERSION: u32 = 1;
+
+/// How long a connecting client waits for the server's hello ack before
+/// declaring the peer incompatible (a legacy server closes immediately; a
+/// silent one must not hang the connect forever).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The 8-byte hello/ack payload: magic + version.
+pub fn hello_frame() -> [u8; 8] {
+    let mut buf = [0u8; 8];
+    buf[..4].copy_from_slice(&MUX_MAGIC);
+    buf[4..].copy_from_slice(&MUX_VERSION.to_le_bytes());
+    buf
+}
+
+/// Parse a frame payload as a mux hello; `Some(version)` when it is one.
+pub fn parse_hello(buf: &[u8]) -> Option<u32> {
+    if buf.len() == 8 && buf[..4] == MUX_MAGIC {
+        Some(u32::from_le_bytes(buf[4..8].try_into().expect("4-byte slice")))
+    } else {
+        None
+    }
+}
+
+/// Read one mux frame: `(corr, body)` where `body` is a zero-copy view of
+/// the received frame buffer. `None` on clean close / stop between frames.
+pub fn read_mux_frame<R: Read>(
+    sock: &mut R,
+    keep_going: impl FnMut() -> bool,
+) -> io::Result<Option<(u64, SharedBytes)>> {
+    let Some(buf) = read_frame_patient(sock, keep_going)? else {
+        return Ok(None);
+    };
+    if buf.len() < 8 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "mux frame shorter than its correlation id",
+        ));
+    }
+    let corr = u64::from_le_bytes(buf[..8].try_into().expect("8-byte slice"));
+    let frame = SharedBytes::new(buf);
+    let body = frame.slice(8, frame.len());
+    Ok(Some((corr, body)))
+}
+
+/// Write one mux frame (`corr` + `body`) as a single vectored write.
+pub fn write_mux_frame<W: Write>(sock: &mut W, corr: u64, body: &ByteWriter) -> io::Result<()> {
+    write_frame_parts(sock, &corr.to_le_bytes(), body)
+}
+
+// ---- client side ---------------------------------------------------------
+
+/// One request queued for the writer thread.
+type OutFrame = (u64, ByteWriter);
+
+struct SendQueue {
+    frames: VecDeque<OutFrame>,
+    closed: bool,
+}
+
+struct PendingMap {
+    /// corr → `None` (awaiting) / `Some(body)` (response arrived).
+    slots: HashMap<u64, Option<SharedBytes>>,
+    /// Set once, when the connection broke; every waiter observes it.
+    dead: Option<String>,
+}
+
+struct Shared {
+    /// The original socket, kept for `shutdown` (reader/writer own clones).
+    sock: TcpStream,
+    queue: Mutex<SendQueue>,
+    send_cv: Condvar,
+    pending: Mutex<PendingMap>,
+    recv_cv: Condvar,
+    next_corr: AtomicU64,
+}
+
+impl Shared {
+    /// Terminal: record the reason, fail every waiter, stop both threads.
+    /// Lock order everywhere is `pending` before `queue`.
+    fn fail(&self, why: String) {
+        {
+            let mut p = self.pending.lock().unwrap();
+            if p.dead.is_none() {
+                p.dead = Some(why);
+            }
+        }
+        self.recv_cv.notify_all();
+        {
+            let mut q = self.queue.lock().unwrap();
+            q.closed = true;
+            q.frames.clear();
+        }
+        self.send_cv.notify_all();
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+}
+
+/// A pipelined, multiplexed client connection: any number of threads call
+/// [`MuxConn::call`] / [`MuxConn::submit`] concurrently over one socket;
+/// responses resolve by correlation id in whatever order the server
+/// completes them. Dropping the connection fails all outstanding calls.
+pub struct MuxConn {
+    shared: Arc<Shared>,
+}
+
+impl MuxConn {
+    /// Connect and perform the mux handshake. Fails fast — with an error
+    /// naming the handshake — against peers that only speak the legacy
+    /// lock-step protocol or a different mux version.
+    pub fn connect(addr: &str) -> io::Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        Self::establish(sock, addr)
+    }
+
+    fn establish(mut sock: TcpStream, addr: &str) -> io::Result<Self> {
+        sock.set_nodelay(true).ok();
+        sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        write_frame(&mut sock, &hello_frame())?;
+        // `keep_going = false`: one timeout window is the whole budget — a
+        // silent peer must fail the connect, not hang it.
+        let ack = read_frame_patient(&mut sock, || false).map_err(|e| {
+            io::Error::new(
+                e.kind(),
+                format!("mux handshake with {addr}: {e} (legacy lock-step peer?)"),
+            )
+        })?;
+        let Some(ack) = ack else {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                format!(
+                    "{addr} closed or stayed silent during the mux handshake — peer \
+                     speaks only the legacy lock-step protocol?"
+                ),
+            ));
+        };
+        match parse_hello(&ack) {
+            Some(v) if v == MUX_VERSION => {}
+            Some(v) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("mux version mismatch: we speak {MUX_VERSION}, {addr} speaks {v}"),
+                ));
+            }
+            None => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unexpected mux handshake reply from {addr}"),
+                ));
+            }
+        }
+        sock.set_read_timeout(None)?;
+        let rsock = sock.try_clone()?;
+        let wsock = sock.try_clone()?;
+        let shared = Arc::new(Shared {
+            sock,
+            queue: Mutex::new(SendQueue { frames: VecDeque::new(), closed: false }),
+            send_cv: Condvar::new(),
+            pending: Mutex::new(PendingMap { slots: HashMap::new(), dead: None }),
+            recv_cv: Condvar::new(),
+            next_corr: AtomicU64::new(1),
+        });
+        let reader_shared = Arc::clone(&shared);
+        if let Err(e) = std::thread::Builder::new()
+            .name("mux-reader".into())
+            .spawn(move || run_reader(rsock, reader_shared))
+        {
+            shared.fail(format!("spawn mux reader: {e}"));
+            return Err(e);
+        }
+        let writer_shared = Arc::clone(&shared);
+        if let Err(e) = std::thread::Builder::new()
+            .name("mux-writer".into())
+            .spawn(move || run_writer(wsock, writer_shared))
+        {
+            shared.fail(format!("spawn mux writer: {e}"));
+            return Err(e);
+        }
+        Ok(Self { shared })
+    }
+
+    /// Enqueue one request and return a handle that resolves to its
+    /// response — the pipelining primitive: submit many, wait later, and
+    /// the writer thread coalesces everything queued into vectored writes.
+    pub fn submit<T: Wire>(&self, msg: &T) -> io::Result<PendingReply> {
+        let corr = self.shared.next_corr.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            if let Some(why) = &p.dead {
+                return Err(io::Error::new(io::ErrorKind::BrokenPipe, why.clone()));
+            }
+            // Registered before the frame is queued: the response cannot
+            // race its waiter slot.
+            p.slots.insert(corr, None);
+        }
+        let mut body = ByteWriter::segmented();
+        msg.encode(&mut body);
+        assert!(8 + body.len() <= MAX_FRAME, "mux frame too large");
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.closed {
+                self.shared.pending.lock().unwrap().slots.remove(&corr);
+                return Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "mux connection closed",
+                ));
+            }
+            q.frames.push_back((corr, body));
+        }
+        self.shared.send_cv.notify_one();
+        Ok(PendingReply { shared: Arc::clone(&self.shared), corr, taken: false })
+    }
+
+    /// One full round trip: submit + wait + decode.
+    pub fn call<Q: Wire, R: Wire>(&self, req: &Q) -> io::Result<R> {
+        self.submit(req)?.wait_msg()
+    }
+
+    /// True once the connection broke (subsequent submits fail fast).
+    pub fn is_dead(&self) -> bool {
+        self.shared.pending.lock().unwrap().dead.is_some()
+    }
+}
+
+impl Drop for MuxConn {
+    fn drop(&mut self) {
+        // Stops both threads and fails any replies still pending.
+        self.shared.fail("mux connection dropped".into());
+    }
+}
+
+/// An in-flight request on a [`MuxConn`]. Dropping it abandons the call
+/// (the response frame is discarded on arrival).
+pub struct PendingReply {
+    shared: Arc<Shared>,
+    corr: u64,
+    taken: bool,
+}
+
+impl PendingReply {
+    /// Block until the response frame arrives; errors when the connection
+    /// dies first. The returned body is a zero-copy view of the frame.
+    pub fn wait(mut self) -> io::Result<SharedBytes> {
+        self.taken = true;
+        let mut p = self.shared.pending.lock().unwrap();
+        loop {
+            if matches!(p.slots.get(&self.corr), Some(Some(_))) {
+                let body = p.slots.remove(&self.corr).expect("slot present");
+                return Ok(body.expect("slot filled"));
+            }
+            if let Some(why) = &p.dead {
+                let why = why.clone();
+                p.slots.remove(&self.corr);
+                return Err(io::Error::new(io::ErrorKind::BrokenPipe, why));
+            }
+            p = self.shared.recv_cv.wait(p).unwrap();
+        }
+    }
+
+    /// [`PendingReply::wait`] + decode ([`Wire::decode_exact_shared`], so
+    /// payloads stay views of the response frame).
+    pub fn wait_msg<T: Wire>(self) -> io::Result<T> {
+        let body = self.wait()?;
+        T::decode_exact_shared(&body)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+    }
+}
+
+impl Drop for PendingReply {
+    fn drop(&mut self) {
+        if !self.taken {
+            // Abandoned call: free the slot; the reader drops unknown ids.
+            self.shared.pending.lock().unwrap().slots.remove(&self.corr);
+        }
+    }
+}
+
+/// Reader thread body: route response frames to their waiters by id.
+fn run_reader(mut sock: TcpStream, shared: Arc<Shared>) {
+    loop {
+        match read_mux_frame(&mut sock, || true) {
+            Ok(Some((corr, body))) => {
+                let mut p = shared.pending.lock().unwrap();
+                if let Some(slot) = p.slots.get_mut(&corr) {
+                    *slot = Some(body);
+                    drop(p);
+                    shared.recv_cv.notify_all();
+                }
+                // Unknown id: the caller abandoned the request — drop it.
+            }
+            Ok(None) => {
+                shared.fail("mux peer closed the connection".into());
+                return;
+            }
+            Err(e) => {
+                shared.fail(format!("mux recv: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Writer thread body: drain everything queued and push it down the socket
+/// as one vectored write per batch — requests submitted while a write is
+/// in flight coalesce into the next one.
+fn run_writer(mut sock: TcpStream, shared: Arc<Shared>) {
+    loop {
+        let batch: Vec<OutFrame> = {
+            let mut q = shared.queue.lock().unwrap();
+            while q.frames.is_empty() && !q.closed {
+                q = shared.send_cv.wait(q).unwrap();
+            }
+            if q.frames.is_empty() {
+                return; // closed and drained
+            }
+            q.frames.drain(..).collect()
+        };
+        if let Err(e) = write_batch(&mut sock, &batch) {
+            shared.fail(format!("mux send: {e}"));
+            return;
+        }
+    }
+}
+
+/// One vectored write for a whole batch of frames: per frame a 12-byte
+/// header (`len` + `corr`) followed by its body chunks, payload segments
+/// straight from their `Arc`.
+fn write_batch(sock: &mut TcpStream, batch: &[OutFrame]) -> io::Result<()> {
+    let mut headers = Vec::with_capacity(batch.len());
+    for (corr, body) in batch {
+        let total = 8 + body.len();
+        let mut h = [0u8; 12];
+        h[..4].copy_from_slice(&(total as u32).to_le_bytes());
+        h[4..].copy_from_slice(&corr.to_le_bytes());
+        headers.push(h);
+    }
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(batch.len() * 4);
+    for ((_, body), header) in batch.iter().zip(&headers) {
+        parts.push(header);
+        body.extend_chunks(&mut parts);
+    }
+    write_all_vectored(sock, &parts)
+}
+
+/// A reconnectable slot holding one shared [`MuxConn`] — the client-side
+/// transport state every mux client keeps per peer. The lock guards only
+/// the slot: callers run their requests on a clone of the `Arc`, so any
+/// number of them are in flight concurrently.
+pub struct MuxSlot {
+    addr: String,
+    slot: Mutex<Option<Arc<MuxConn>>>,
+}
+
+impl MuxSlot {
+    /// A slot over an already-established connection.
+    pub fn connected(addr: &str, conn: Arc<MuxConn>) -> Self {
+        Self { addr: addr.to_string(), slot: Mutex::new(Some(conn)) }
+    }
+
+    /// The peer address this slot (re)connects to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The live connection, (re)established on demand.
+    pub fn get(&self) -> io::Result<Arc<MuxConn>> {
+        let mut slot = self.slot.lock().unwrap();
+        if let Some(c) = &*slot {
+            return Ok(Arc::clone(c));
+        }
+        let c = Arc::new(MuxConn::connect(&self.addr)?);
+        *slot = Some(Arc::clone(&c));
+        Ok(c)
+    }
+
+    /// Forget `failed` so the next request reconnects (unless a concurrent
+    /// caller already replaced it).
+    pub fn invalidate(&self, failed: &Arc<MuxConn>) {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.as_ref().is_some_and(|c| Arc::ptr_eq(c, failed)) {
+            *slot = None;
+        }
+    }
+}
+
+// ---- server side ---------------------------------------------------------
+
+/// Cap on concurrently parked long-polls per mux connection. Beyond it,
+/// long-polls dispatch inline on the reader thread (correct, just
+/// serialized) instead of spawning yet another park thread.
+pub const MAX_PARKED_PER_CONN: usize = 64;
+
+/// What the serve loop does with one decoded request.
+pub enum ServeAction {
+    /// Dispatch inline on the reader thread (keeps submission order —
+    /// publish acks rely on this).
+    Inline,
+    /// Dispatch on a park thread (a long-poll that blocks); its response
+    /// completes out of order, routed back by correlation id.
+    Park,
+    /// Answer, then close the connection (shutdown frames). The classifier
+    /// performs its side effect (setting the stop flag) itself.
+    Terminal,
+}
+
+/// Outcome of sniffing a connection's first frame (servers call this with
+/// the raw payload before touching their protocol decoder).
+pub enum Sniff {
+    /// Not a hello: serve the legacy lock-step protocol, starting with
+    /// this frame.
+    Legacy,
+    /// A compatible hello, already acked: serve mux frames from here on.
+    Mux,
+    /// A hello we cannot speak with (version mismatch or a broken ack
+    /// write): drop the connection.
+    Reject,
+}
+
+/// Server half of the protocol negotiation: if `first` is a mux hello, ack
+/// it with ours and check versions.
+pub fn sniff_first_frame<W: Write>(sock: &mut W, first: &[u8], peer: &str) -> Sniff {
+    let Some(version) = parse_hello(first) else {
+        return Sniff::Legacy;
+    };
+    if write_frame(sock, &hello_frame()).is_err() {
+        return Sniff::Reject;
+    }
+    if version != MUX_VERSION {
+        log::warn!("mux conn {peer}: version {version} != ours {MUX_VERSION}");
+        return Sniff::Reject;
+    }
+    Sniff::Mux
+}
+
+/// Serve one upgraded mux connection (the shared body of the broker and
+/// DistroStream servers): decode `Q` frames, classify, dispatch — inline
+/// for ordered fast requests, on `park_name` threads for long-polls (capped
+/// at [`MAX_PARKED_PER_CONN`], overflowing back to inline) — and answer
+/// through one shared [`MuxResponder`]. Returns when the peer closes,
+/// `keep_going` goes false between frames, a send breaks, or a
+/// [`ServeAction::Terminal`] request was answered. Known cost: one
+/// short-lived thread per parked long-poll slice (~4/s per idle consumer);
+/// promoting parks to persistent per-connection workers is the natural
+/// next step if profiles show the spawn mattering.
+pub fn serve_mux_conn<Q, R, D>(
+    mut sock: TcpStream,
+    peer: &str,
+    park_name: &str,
+    mut keep_going: impl FnMut() -> bool,
+    classify: impl Fn(&Q) -> ServeAction,
+    dispatch: Arc<D>,
+) where
+    Q: Wire + Send + 'static,
+    R: Wire,
+    D: Fn(Q) -> R + Send + Sync + 'static,
+{
+    let responder = match sock.try_clone() {
+        Ok(w) => Arc::new(MuxResponder::new(w)),
+        Err(e) => {
+            log::debug!("mux conn {peer} clone failed: {e}");
+            return;
+        }
+    };
+    let parked = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    loop {
+        if responder.is_broken() {
+            break;
+        }
+        let (corr, body) = match read_mux_frame(&mut sock, &mut keep_going) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break, // clean close, or stop requested while idle
+            Err(e) => {
+                log::debug!("mux conn {peer} read error: {e}");
+                break;
+            }
+        };
+        let req = match Q::decode_exact_shared(&body) {
+            Ok(r) => r,
+            Err(e) => {
+                log::debug!("mux conn {peer} bad frame: {e}");
+                break;
+            }
+        };
+        match classify(&req) {
+            ServeAction::Terminal => {
+                responder.send(corr, &(*dispatch)(req));
+                break;
+            }
+            ServeAction::Park if parked.load(Ordering::SeqCst) < MAX_PARKED_PER_CONN => {
+                parked.fetch_add(1, Ordering::SeqCst);
+                // The request rides in a take-once slot so a failed spawn
+                // (thread exhaustion) can recover it and degrade to inline
+                // dispatch — the same graceful overflow as the park cap —
+                // instead of panicking the connection.
+                let job = Arc::new(Mutex::new(Some(req)));
+                let spawned = std::thread::Builder::new().name(park_name.to_string()).spawn({
+                    let job = Arc::clone(&job);
+                    let dispatch = Arc::clone(&dispatch);
+                    let responder = Arc::clone(&responder);
+                    let parked = Arc::clone(&parked);
+                    move || {
+                        if let Some(req) = job.lock().unwrap().take() {
+                            let resp = (*dispatch)(req);
+                            responder.send(corr, &resp);
+                        }
+                        parked.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+                if spawned.is_err() {
+                    parked.fetch_sub(1, Ordering::SeqCst);
+                    let Some(req) = job.lock().unwrap().take() else {
+                        continue;
+                    };
+                    let resp = (*dispatch)(req);
+                    if !responder.send(corr, &resp) {
+                        break;
+                    }
+                }
+            }
+            _ => {
+                let resp = (*dispatch)(req);
+                if !responder.send(corr, &resp) {
+                    break;
+                }
+            }
+        }
+    }
+    // Parked threads still hold the responder Arc and finish on their own;
+    // their sends fail harmlessly once the peer is gone.
+}
+
+/// Serve one legacy lock-step connection (the shared pre-PR 5 loop of the
+/// broker and DistroStream servers, kept for old peers and raw-socket
+/// tools): one request, one response, strictly serial — long-polls simply
+/// park this thread inside `dispatch`. The encode buffer is reused across
+/// frames and every reply is one vectored write. `first` is the request
+/// the caller already read while sniffing the protocol; a
+/// [`ServeAction::Terminal`] classification answers, then closes.
+pub fn serve_legacy_conn<Q, R, D>(
+    mut sock: TcpStream,
+    peer: &str,
+    mut keep_going: impl FnMut() -> bool,
+    classify: impl Fn(&Q) -> ServeAction,
+    dispatch: Arc<D>,
+    first: Q,
+) where
+    Q: Wire,
+    R: Wire,
+    D: Fn(Q) -> R,
+{
+    let mut scratch = ByteWriter::segmented();
+    let mut req = first;
+    loop {
+        let terminal = matches!(classify(&req), ServeAction::Terminal);
+        let resp = (*dispatch)(req);
+        if let Err(e) = send_msg_buf(&mut sock, &resp, &mut scratch) {
+            log::debug!("legacy conn {peer} write error: {e}");
+            return;
+        }
+        if terminal {
+            return;
+        }
+        req = match recv_msg_patient(&mut sock, &mut keep_going) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean close, or stop requested while idle
+            Err(e) => {
+                log::debug!("legacy conn {peer} read error: {e}");
+                return;
+            }
+        };
+    }
+}
+
+/// The write half of a server-side mux connection, shared by the reader
+/// loop (inline dispatches) and parked long-poll threads (out-of-order
+/// completions). Each response reuses the per-connection encode buffer and
+/// goes down in one vectored write.
+pub struct MuxResponder {
+    inner: Mutex<ResponderInner>,
+    broken: AtomicBool,
+}
+
+struct ResponderInner {
+    sock: TcpStream,
+    scratch: ByteWriter,
+}
+
+impl MuxResponder {
+    pub fn new(sock: TcpStream) -> Self {
+        Self {
+            inner: Mutex::new(ResponderInner { sock, scratch: ByteWriter::segmented() }),
+            broken: AtomicBool::new(false),
+        }
+    }
+
+    /// Send one response frame; `false` once the socket broke (the
+    /// connection is beyond saving — the serve loop should exit).
+    pub fn send<T: Wire>(&self, corr: u64, msg: &T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let ResponderInner { sock, scratch } = &mut *g;
+        scratch.clear();
+        msg.encode(scratch);
+        match write_mux_frame(sock, corr, scratch) {
+            Ok(()) => true,
+            Err(_) => {
+                self.broken.store(true, Ordering::SeqCst);
+                false
+            }
+        }
+    }
+
+    /// True once a send failed; reads from this peer are pointless.
+    pub fn is_broken(&self) -> bool {
+        self.broken.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::read_frame;
+    use std::net::TcpListener;
+
+    /// Minimal mux echo server: ack the handshake, then answer every frame
+    /// with its own body, optionally deferring batches to force reordering.
+    fn echo_server(reorder: bool) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let hello = read_frame(&mut sock).unwrap().unwrap();
+            assert_eq!(parse_hello(&hello), Some(MUX_VERSION));
+            write_frame(&mut sock, &hello_frame()).unwrap();
+            let responder = MuxResponder::new(sock.try_clone().unwrap());
+            let mut held: Vec<(u64, SharedBytes)> = Vec::new();
+            loop {
+                match read_mux_frame(&mut sock, || true) {
+                    Ok(Some((corr, body))) => {
+                        if reorder {
+                            // Hold a few frames, answer them newest-first.
+                            held.push((corr, body));
+                            if held.len() >= 3 {
+                                while let Some((c, b)) = held.pop() {
+                                    responder.send(c, &crate::util::wire::Blob(b));
+                                }
+                            }
+                        } else {
+                            responder.send(corr, &crate::util::wire::Blob(body));
+                        }
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            while let Some((c, b)) = held.pop() {
+                responder.send(c, &crate::util::wire::Blob(b));
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn calls_resolve_by_correlation_id_across_reordering() {
+        let (addr, server) = echo_server(true);
+        let conn = MuxConn::connect(&addr.to_string()).unwrap();
+        // Submit a window of requests, then wait them all: replies come
+        // back newest-first and must still land on the right callers.
+        let payloads: Vec<crate::util::wire::Blob> =
+            (0..9u8).map(|i| crate::util::wire::Blob::new(vec![i; 10])).collect();
+        let pending: Vec<PendingReply> =
+            payloads.iter().map(|p| conn.submit(p).unwrap()).collect();
+        for (p, sent) in pending.into_iter().zip(&payloads) {
+            let got: crate::util::wire::Blob = p.wait_msg().unwrap();
+            assert_eq!(&got, sent, "reply must match its own request");
+        }
+        drop(conn);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_connection_fails_pending_calls() {
+        let (addr, server) = echo_server(true);
+        let conn = MuxConn::connect(&addr.to_string()).unwrap();
+        // One frame: held by the reordering server (needs 3 to flush).
+        let a = conn.submit(&crate::util::wire::Blob::new(vec![1])).unwrap();
+        drop(conn); // kills the socket; server flushes into the void
+        assert!(a.wait().is_err(), "pending call must observe the death");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn legacy_peer_fails_the_handshake_fast() {
+        // A legacy server reads one frame, cannot decode it, closes.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let _ = read_frame(&mut sock);
+            // Close without answering — exactly what the old loop does on
+            // a BadTag decode error.
+        });
+        let err = MuxConn::connect(&addr.to_string()).unwrap_err();
+        assert!(
+            err.to_string().contains("handshake"),
+            "error must name the handshake: {err}"
+        );
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_a_clear_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let _ = read_frame(&mut sock);
+            let mut ack = hello_frame();
+            ack[4..].copy_from_slice(&99u32.to_le_bytes());
+            write_frame(&mut sock, &ack).unwrap();
+        });
+        let err = MuxConn::connect(&addr.to_string()).unwrap_err();
+        assert!(err.to_string().contains("version"), "got: {err}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn hello_roundtrip_and_rejections() {
+        assert_eq!(parse_hello(&hello_frame()), Some(MUX_VERSION));
+        assert_eq!(parse_hello(b"HWMX"), None, "length matters");
+        assert_eq!(parse_hello(&[0u8; 8]), None, "magic matters");
+    }
+}

@@ -7,7 +7,7 @@
 //! server).
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 
 use crate::util::bytes::{ByteReader, ByteWriter, DecodeError, SharedBytes, MAX_LEN};
 
@@ -29,6 +29,18 @@ pub trait Wire: Sized {
     /// Decode from a complete buffer, requiring full consumption.
     fn decode_exact(buf: &[u8]) -> Result<Self, DecodeError> {
         let mut r = ByteReader::new(buf);
+        let v = Self::decode(&mut r)?;
+        if !r.is_exhausted() {
+            return Err(DecodeError::TooLong { at: r.position(), len: r.remaining() as u64 });
+        }
+        Ok(v)
+    }
+
+    /// Decode from a complete `Arc`-backed frame, requiring full
+    /// consumption. [`Blob`] payloads come out as zero-copy sub-views of
+    /// `frame` — the receive half of the PR 5 zero-copy wire plane.
+    fn decode_exact_shared(frame: &SharedBytes) -> Result<Self, DecodeError> {
+        let mut r = ByteReader::shared(frame);
         let v = Self::decode(&mut r)?;
         if !r.is_exhausted() {
             return Err(DecodeError::TooLong { at: r.position(), len: r.remaining() as u64 });
@@ -161,9 +173,12 @@ impl Wire for () {
 ///
 /// `Arc`-backed ([`SharedBytes`]): cloning a `Blob` shares the allocation,
 /// so the embedded broker hot path (`publish → PartitionLog → fetch_many →
-/// poll`) moves **zero** payload bytes. The wire codec is where the single
-/// unavoidable copy of the TCP path happens (encode into the frame, decode
-/// out of it). Dereferences to `[u8]`.
+/// poll`) moves **zero** payload bytes. Since PR 5 the TCP path is
+/// zero-copy too: encoding through a segmented writer records the payload
+/// as an out-of-line segment (the vectored send writes it straight from
+/// its `Arc`), and decoding from a received frame ([`ByteReader::shared`],
+/// which every `recv` path uses) yields a sub-view of the frame buffer.
+/// Dereferences to `[u8]`.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Blob(pub SharedBytes);
 
@@ -194,6 +209,13 @@ impl Blob {
     pub fn ptr_eq(&self, other: &Blob) -> bool {
         self.0.ptr_eq(&other.0)
     }
+
+    /// True when both blobs view the same allocation, whatever their
+    /// ranges — the **remote** zero-copy witness: every payload decoded
+    /// out of one received frame reports the frame's buffer.
+    pub fn shares_buffer(&self, other: &Blob) -> bool {
+        self.0.shares_buffer(&other.0)
+    }
 }
 
 impl std::ops::Deref for Blob {
@@ -211,10 +233,13 @@ impl From<Vec<u8>> for Blob {
 
 impl Wire for Blob {
     fn encode(&self, w: &mut ByteWriter) {
-        w.put_bytes(&self.0);
+        // Segmented writers keep the payload out-of-line (written straight
+        // from its Arc by the vectored send path); plain writers copy.
+        w.put_shared(&self.0);
     }
     fn decode(r: &mut ByteReader) -> Result<Self, DecodeError> {
-        Ok(Blob::new(r.get_bytes()?.to_vec()))
+        // Shared readers hand back a zero-copy view of the frame buffer.
+        Ok(Blob(r.get_shared()?))
     }
 }
 
@@ -242,12 +267,84 @@ macro_rules! wire_struct {
 /// Frame = u32 length + payload. Hard cap to survive corrupt peers.
 pub const MAX_FRAME: usize = 1 << 30;
 
-/// Write one length-prefixed frame.
+/// Write one length-prefixed frame: header + payload in a single vectored
+/// write (one syscall) instead of two `write_all`s.
 pub fn write_frame<W: Write>(sock: &mut W, payload: &[u8]) -> std::io::Result<()> {
     assert!(payload.len() <= MAX_FRAME, "frame too large");
-    sock.write_all(&(payload.len() as u32).to_le_bytes())?;
-    sock.write_all(payload)?;
+    let len = (payload.len() as u32).to_le_bytes();
+    write_all_vectored(sock, &[&len, payload])?;
     sock.flush()
+}
+
+/// Write one length-prefixed frame whose payload is `prefix` followed by
+/// `body`'s byte stream, as a single vectored write: the length header,
+/// the prefix (e.g. a correlation id), the encode scratch and every
+/// out-of-line payload segment go down in one syscall — payload bytes are
+/// written **straight from their `Arc`**, never memcpy'd into the encode
+/// buffer. This is the send half of the PR 5 zero-copy wire plane.
+pub fn write_frame_parts<W: Write>(
+    sock: &mut W,
+    prefix: &[u8],
+    body: &ByteWriter,
+) -> std::io::Result<()> {
+    let total = prefix.len() + body.len();
+    assert!(total <= MAX_FRAME, "frame too large");
+    let len = (total as u32).to_le_bytes();
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(8);
+    parts.push(&len);
+    if !prefix.is_empty() {
+        parts.push(prefix);
+    }
+    body.extend_chunks(&mut parts);
+    write_all_vectored(sock, &parts)?;
+    sock.flush()
+}
+
+/// Write every byte of `parts`, in order, using vectored writes. Handles
+/// partial writes, `Interrupted`, and writers whose `write_vectored` only
+/// consumes the first buffer (the `Write` default). The iovec list per
+/// syscall is capped well under `IOV_MAX`.
+pub fn write_all_vectored<W: Write>(sock: &mut W, parts: &[&[u8]]) -> std::io::Result<()> {
+    const MAX_IOV: usize = 64;
+    let mut idx = 0usize; // current part
+    let mut off = 0usize; // bytes of parts[idx] already written
+    while idx < parts.len() {
+        if off >= parts[idx].len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity((parts.len() - idx).min(MAX_IOV));
+        iov.push(IoSlice::new(&parts[idx][off..]));
+        for p in parts[idx + 1..].iter().take(MAX_IOV - 1) {
+            if !p.is_empty() {
+                iov.push(IoSlice::new(p));
+            }
+        }
+        let mut n = match sock.write_vectored(&iov) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "vectored write made no progress",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while n > 0 {
+            let rem = parts[idx].len() - off;
+            if n >= rem {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Read one length-prefixed frame. Returns `None` on clean EOF at a frame
@@ -343,24 +440,44 @@ pub fn recv_msg_patient<R: Read, T: Wire>(
 ) -> std::io::Result<Option<T>> {
     match read_frame_patient(sock, keep_going)? {
         None => Ok(None),
-        Some(buf) => T::decode_exact(&buf)
-            .map(Some)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
+        Some(buf) => decode_frame(buf).map(Some),
     }
 }
 
-/// Send a `Wire` message as one frame.
-pub fn send_msg<W: Write, T: Wire>(sock: &mut W, msg: &T) -> std::io::Result<()> {
-    write_frame(sock, &msg.encode_vec())
+/// Decode one received frame, zero-copy: the buffer becomes an `Arc`-backed
+/// frame and every [`Blob`] in the message is a sub-view of it.
+fn decode_frame<T: Wire>(buf: Vec<u8>) -> std::io::Result<T> {
+    let frame = SharedBytes::new(buf);
+    T::decode_exact_shared(&frame)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
 }
 
-/// Receive a `Wire` message from one frame; `None` on clean EOF.
+/// Send a `Wire` message as one frame (one vectored write; large payloads
+/// go straight from their `Arc`, not through the encode buffer).
+pub fn send_msg<W: Write, T: Wire>(sock: &mut W, msg: &T) -> std::io::Result<()> {
+    let mut w = ByteWriter::segmented();
+    msg.encode(&mut w);
+    write_frame_parts(sock, &[], &w)
+}
+
+/// [`send_msg`] with a caller-owned encode buffer: `scratch` is cleared and
+/// reused, so per-connection send loops skip the per-frame allocation.
+pub fn send_msg_buf<W: Write, T: Wire>(
+    sock: &mut W,
+    msg: &T,
+    scratch: &mut ByteWriter,
+) -> std::io::Result<()> {
+    scratch.clear();
+    msg.encode(scratch);
+    write_frame_parts(sock, &[], scratch)
+}
+
+/// Receive a `Wire` message from one frame; `None` on clean EOF. [`Blob`]
+/// payloads are zero-copy views of the received frame.
 pub fn recv_msg<R: Read, T: Wire>(sock: &mut R) -> std::io::Result<Option<T>> {
     match read_frame(sock)? {
         None => Ok(None),
-        Some(buf) => T::decode_exact(&buf)
-            .map(Some)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
+        Some(buf) => decode_frame(buf).map(Some),
     }
 }
 
@@ -491,6 +608,93 @@ mod tests {
         assert_eq!(got.unwrap(), b"hello", "partial reads must not desync the framing");
         // Clean EOF after the frame.
         assert!(read_frame_patient(&mut sock, || true).unwrap().is_none());
+    }
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct TwoBlobs {
+        a: Blob,
+        b: Blob,
+    }
+    wire_struct!(TwoBlobs { a: Blob, b: Blob });
+
+    #[test]
+    fn shared_frame_decode_is_zero_copy() {
+        let msg = TwoBlobs { a: Blob::new(vec![1; 100]), b: Blob::new(vec![2; 100]) };
+        let frame = SharedBytes::new(msg.encode_vec());
+        let back = TwoBlobs::decode_exact_shared(&frame).unwrap();
+        assert_eq!(back, msg);
+        let witness = Blob(frame.slice(0, 0));
+        assert!(back.a.shares_buffer(&witness), "payload a must view the frame buffer");
+        assert!(back.b.shares_buffer(&witness), "payload b must view the frame buffer");
+        assert!(back.a.shares_buffer(&back.b));
+        // The plain decode path still copies.
+        let copied = TwoBlobs::decode_exact(frame.as_slice()).unwrap();
+        assert!(!copied.a.shares_buffer(&witness));
+    }
+
+    #[test]
+    fn vectored_frame_matches_plain_frame() {
+        let blob = Blob::new(vec![0x5A; 300]); // out-of-line in segmented mode
+        let mut w = ByteWriter::segmented();
+        blob.encode(&mut w);
+        let prefix = [7u8; 8];
+        let mut framed = Vec::new();
+        write_frame_parts(&mut framed, &prefix, &w).unwrap();
+        let mut flat = prefix.to_vec();
+        flat.extend(blob.encode_vec());
+        let mut expect = Vec::new();
+        write_frame(&mut expect, &flat).unwrap();
+        assert_eq!(framed, expect, "segmented vectored frame must be byte-identical");
+        let mut cur = std::io::Cursor::new(framed);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), flat);
+    }
+
+    /// A writer that accepts at most 3 bytes per call and only implements
+    /// `write` — `write_vectored` falls back to the std default (first
+    /// buffer only), exercising the partial-progress loop.
+    struct Trickle(Vec<u8>);
+
+    impl std::io::Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(3);
+            self.0.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_all_vectored_survives_partial_writers() {
+        let parts: Vec<&[u8]> = vec![b"he", b"", b"llo ", b"wire", b"", b" plane"];
+        let mut sink = Trickle(Vec::new());
+        write_all_vectored(&mut sink, &parts).unwrap();
+        assert_eq!(sink.0, b"hello wire plane");
+        // send_msg through the same trickle writer frames correctly.
+        let mut sink = Trickle(Vec::new());
+        let msg = TwoBlobs { a: Blob::new(vec![9; 80]), b: Blob::new(vec![8; 5]) };
+        send_msg(&mut sink, &msg).unwrap();
+        let mut cur = std::io::Cursor::new(sink.0);
+        let back: TwoBlobs = recv_msg(&mut cur).unwrap().unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn send_msg_buf_reuses_the_scratch() {
+        let mut scratch = ByteWriter::segmented();
+        let mut out = Vec::new();
+        for i in 0..3u8 {
+            let msg = TwoBlobs { a: Blob::new(vec![i; 70]), b: Blob::new(vec![i]) };
+            send_msg_buf(&mut out, &msg, &mut scratch).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(out);
+        for i in 0..3u8 {
+            let back: TwoBlobs = recv_msg(&mut cur).unwrap().unwrap();
+            assert_eq!(back.a.as_slice(), &vec![i; 70][..]);
+            assert_eq!(back.b.as_slice(), &[i]);
+        }
+        assert!(read_frame(&mut cur).unwrap().is_none());
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! PR 5 integration suite for the pipelined multiplexed wire plane:
+//! correlation-id routing under reordering (property-style), concurrent
+//! in-flight stress through one connection, zero-copy remote decode
+//! (Arc-identity), and legacy lock-step interop.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{AssignmentMode, BrokerClient, BrokerCore, BrokerServer};
+use hybridws::util::bytes::ByteWriter;
+use hybridws::util::mux::{hello_frame, parse_hello, read_mux_frame, write_mux_frame, MuxConn};
+use hybridws::util::rng::Rng;
+use hybridws::util::wire::{read_frame, recv_msg, send_msg, write_frame, Blob, Wire};
+
+fn start_server() -> (BrokerServer, String) {
+    let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    (server, addr)
+}
+
+/// Property-style: a raw mux server that buffers requests and answers them
+/// in a seeded-random order must still resolve every call to its own
+/// caller. Runs several seeds; each shuffles differently.
+#[test]
+fn mux_routes_replies_under_random_reordering() {
+    for seed in [1u64, 7, 42, 1234] {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let hello = read_frame(&mut sock).unwrap().unwrap();
+            assert!(parse_hello(&hello).is_some());
+            write_frame(&mut sock, &hello_frame()).unwrap();
+            // Short read timeout: every idle tick flushes whatever is
+            // held, so batching can never deadlock against the callers.
+            sock.set_read_timeout(Some(Duration::from_millis(5))).unwrap();
+            let mut wsock = sock.try_clone().unwrap();
+            let mut rng = Rng::new(seed);
+            let mut held: Vec<(u64, Vec<u8>)> = Vec::new();
+            loop {
+                let res = read_mux_frame(&mut sock, || {
+                    flush_held(&mut rng, &mut held, &mut wsock);
+                    true
+                });
+                match res {
+                    Ok(Some((corr, body))) => {
+                        held.push((corr, body.as_slice().to_vec()));
+                        // Flush a shuffled batch at random sizes.
+                        if held.len() >= 1 + (rng.next_u64() % 4) as usize {
+                            flush_held(&mut rng, &mut held, &mut wsock);
+                        }
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            flush_held(&mut rng, &mut held, &mut wsock);
+        });
+        let conn = Arc::new(MuxConn::connect(&addr).unwrap());
+        // Concurrent callers, each with distinct payloads, interleaved.
+        let mut workers = Vec::new();
+        for t in 0..4u8 {
+            let conn = Arc::clone(&conn);
+            workers.push(std::thread::spawn(move || {
+                for i in 0..25u8 {
+                    let sent = Blob::new(vec![t, i, t ^ i, 0xEE]);
+                    let got: Blob = conn.call(&sent).unwrap();
+                    assert_eq!(got, sent, "worker {t} call {i}: reply crossed callers");
+                }
+            }));
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        drop(conn);
+        server.join().unwrap();
+    }
+}
+
+fn shuffle(rng: &mut Rng, xs: &mut [(u64, Vec<u8>)]) {
+    for i in (1..xs.len()).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// Answer every held request (shuffled) with an echo of its body.
+fn flush_held(rng: &mut Rng, held: &mut Vec<(u64, Vec<u8>)>, wsock: &mut TcpStream) {
+    shuffle(rng, held);
+    for (c, b) in held.drain(..) {
+        let blob = Blob::new(b);
+        let mut w = ByteWriter::segmented();
+        blob.encode(&mut w);
+        let _ = write_mux_frame(wsock, c, &w);
+    }
+}
+
+/// N threads publish through ONE remote client (one socket). Every record
+/// must land exactly once and every ack must resolve.
+#[test]
+fn concurrent_publishers_share_one_connection() {
+    let (server, addr) = start_server();
+    let client = Arc::new(BrokerClient::connect(&addr).unwrap());
+    client.create_topic("t", 8).unwrap();
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 200;
+    let acked = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let client = Arc::clone(&client);
+            let acked = Arc::clone(&acked);
+            scope.spawn(move || {
+                let mut pipe = client.pipeline(16);
+                for i in 0..PER_THREAD {
+                    let payload = vec![t as u8, (i % 256) as u8, (i / 256) as u8];
+                    pipe.publish("t", ProducerRecord::new(payload)).unwrap();
+                }
+                acked.fetch_add(pipe.flush().unwrap() as usize, Ordering::SeqCst);
+            });
+        }
+        // Interleave control calls on the same socket while they publish.
+        let client = Arc::clone(&client);
+        scope.spawn(move || {
+            for _ in 0..50 {
+                client.ping().unwrap();
+                let _ = client.topic_stats("t").unwrap();
+            }
+        });
+    });
+    assert_eq!(acked.load(Ordering::SeqCst), THREADS * PER_THREAD);
+    let stats = client.topic_stats("t").unwrap();
+    assert_eq!(stats.records, THREADS * PER_THREAD, "no record lost or duplicated");
+    server.shutdown();
+}
+
+/// The zero-copy acceptance gate: a remote fetch decodes records as
+/// sub-views of the received response frame — sibling records report one
+/// shared buffer, which is impossible if any payload byte were copied
+/// between frame receive and consumer poll.
+#[test]
+fn remote_fetch_hands_out_frame_slices() {
+    let (server, addr) = start_server();
+    let client = BrokerClient::connect(&addr).unwrap();
+    client.create_topic("t", 1).unwrap();
+    // Payloads above the inline threshold so the server also sends them
+    // straight from the partition log's Arcs.
+    let batch: Vec<ProducerRecord> =
+        (0..4u8).map(|i| ProducerRecord::new(vec![i; 256])).collect();
+    client.publish_batch("t", batch).unwrap();
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+    let recs: Vec<_> = mf.batches.into_iter().flat_map(|(_, rs)| rs).collect();
+    assert_eq!(recs.len(), 4);
+    for (i, r) in recs.iter().enumerate() {
+        assert_eq!(r.value.as_slice(), &vec![i as u8; 256][..], "payload intact");
+    }
+    for pair in recs.windows(2) {
+        assert!(
+            pair[0].value.shares_buffer(&pair[1].value),
+            "records of one response frame must be slices of one buffer"
+        );
+    }
+    // poll() flows through the same decode plane.
+    let more = vec![ProducerRecord::new(vec![9; 128]), ProducerRecord::new(vec![8; 128])];
+    client.publish_batch("t", more).unwrap();
+    let polled = client.poll("g", "t", "m", usize::MAX).unwrap();
+    assert_eq!(polled.len(), 2);
+    assert!(polled[0].value.shares_buffer(&polled[1].value));
+    server.shutdown();
+}
+
+/// Old peers still work: a raw lock-step client (plain `send_msg` /
+/// `recv_msg`, no hello) against the upgraded server.
+#[test]
+fn legacy_lockstep_client_still_served() {
+    use hybridws::broker::protocol::{Request, Response};
+    let (server, addr) = start_server();
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    send_msg(&mut sock, &Request::Ping).unwrap();
+    assert_eq!(recv_msg::<_, Response>(&mut sock).unwrap(), Some(Response::Pong));
+    send_msg(&mut sock, &Request::CreateTopic { name: "t".into(), partitions: 1 }).unwrap();
+    assert_eq!(recv_msg::<_, Response>(&mut sock).unwrap(), Some(Response::Ok));
+    send_msg(
+        &mut sock,
+        &Request::Publish { topic: "t".into(), rec: ProducerRecord::new(vec![1, 2, 3]) },
+    )
+    .unwrap();
+    assert!(matches!(
+        recv_msg::<_, Response>(&mut sock).unwrap(),
+        Some(Response::PubAck { .. })
+    ));
+    // ... while a mux client shares the same broker state.
+    let muxed = BrokerClient::connect(&addr).unwrap();
+    assert_eq!(muxed.topic_stats("t").unwrap().records, 1);
+    drop(sock);
+    server.shutdown();
+}
+
+/// A parked long-poll is one outstanding id among many: a publish issued
+/// on the SAME client after the park must wake it, and a burst of pings
+/// behind the park must answer promptly (out-of-order completion).
+#[test]
+fn out_of_order_completion_under_parked_poll() {
+    let (server, addr) = start_server();
+    let client = Arc::new(BrokerClient::connect(&addr).unwrap());
+    client.create_topic("t", 1).unwrap();
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let consumer = Arc::clone(&client);
+    let parked = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let mf = consumer
+            .fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 10_000)
+            .unwrap();
+        (mf.record_count(), t0.elapsed())
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        client.ping().unwrap();
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(500),
+        "pings queued behind a parked poll: the mux is not out-of-order"
+    );
+    client.publish("t", ProducerRecord::new(vec![7])).unwrap();
+    let (count, waited) = parked.join().unwrap();
+    assert_eq!(count, 1);
+    assert!(waited < Duration::from_secs(5), "publish must wake the parked poll");
+    server.shutdown();
+}
+
+/// DistroStream side: one mux connection carries a parked `PollFiles` and
+/// the `announce_file` that wakes it.
+#[test]
+fn dstream_poll_and_announce_share_one_mux() {
+    use hybridws::dstream::client::DistroStreamClient;
+    use hybridws::dstream::server::DistroStreamServer;
+    use hybridws::dstream::{ConsumerMode, StreamType};
+    let server = DistroStreamServer::start("127.0.0.1:0").unwrap();
+    let client = Arc::new(DistroStreamClient::connect(&server.addr.to_string()).unwrap());
+    let id = client
+        .register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce)
+        .unwrap();
+    let poller = Arc::clone(&client);
+    let parked = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let files = poller.poll_files(id, vec![], usize::MAX, 5_000).unwrap();
+        (files, t0.elapsed())
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    // Same client, same socket: the announce must not queue behind the park.
+    client.announce_file(id, "/d/fresh").unwrap();
+    let (files, waited) = parked.join().unwrap();
+    assert_eq!(files, vec!["/d/fresh".to_string()]);
+    assert!(waited < Duration::from_secs(4), "announce must wake the parked poll");
+    server.shutdown();
+}
