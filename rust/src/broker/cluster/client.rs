@@ -43,6 +43,7 @@ use crate::broker::embedded::{
 use crate::broker::group::AssignmentMode;
 use crate::broker::record::{ProducerRecord, Record};
 use crate::broker::topic::key_partition;
+use crate::util::fault;
 
 use super::placement::ClusterSpec;
 
@@ -160,6 +161,12 @@ struct Shared {
 
 impl Shared {
     fn client(&self, addr: &str) -> Result<Arc<BrokerClient>> {
+        // Fault seam: a scripted partition between this client and `addr` —
+        // checked before the connection cache so it covers every call, not
+        // just fresh connects.
+        if fault::active() && fault::check(fault::site::CLUSTER_CONNECT, addr).is_some() {
+            return Err(BrokerError::Transport(format!("injected partition to {addr}")));
+        }
         if let Some(c) = self.conns.lock().unwrap().get(addr) {
             return Ok(Arc::clone(c));
         }

@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use log::{debug, warn};
 
+use crate::util::fault;
 use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, ServeAction, Sniff};
 use crate::util::wire::{read_frame_patient, Wire};
 
@@ -148,6 +149,17 @@ fn handle_conn(
 ) {
     let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     debug!("broker conn from {peer}");
+    // Fault seam: sever a scripted server-side connection before any frame
+    // is served (the client sees an abrupt close and must reconnect). The
+    // context is this broker's own address so scenarios can target one
+    // member of a cluster.
+    if fault::active() {
+        let local = sock.local_addr().map(|a| a.to_string()).unwrap_or_default();
+        if fault::check(fault::site::BROKER_CONN, &local).is_some() {
+            debug!("broker conn {peer}: injected drop");
+            return;
+        }
+    }
     // Small lock-step replies must not sit out a Nagle delay (clients
     // always set nodelay; the server-accepted half never did before PR 5).
     let _ = sock.set_nodelay(true);

@@ -26,6 +26,7 @@ use std::sync::Arc;
 use log::{error, warn};
 
 use crate::broker::record::{now_ms, Record};
+use crate::util::fault;
 
 use super::segment::{parse_segment_name, Segment};
 use super::{crc32, Retention};
@@ -298,6 +299,10 @@ fn read_meta(path: &Path) -> u64 {
 }
 
 fn write_meta(path: &Path, start: u64) -> io::Result<()> {
+    // Fault seam: a scripted failure persisting the log-start offset.
+    if fault::active() && fault::check(fault::site::LOG_META, &path.to_string_lossy()).is_some() {
+        return Err(fault::injected_error(fault::site::LOG_META));
+    }
     let start_bytes = start.to_le_bytes();
     let mut data = Vec::with_capacity(12);
     data.extend_from_slice(&crc32(&start_bytes).to_le_bytes());

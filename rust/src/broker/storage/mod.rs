@@ -143,7 +143,11 @@ impl BrokerConfig {
 
     /// Every topic durable under `data_dir` (default segments/retention).
     pub fn disk(data_dir: impl Into<PathBuf>) -> Self {
-        Self { default_mode: StorageMode::disk(data_dir), topic_modes: Vec::new() }
+        Self {
+            default_mode: StorageMode::disk(data_dir),
+            topic_modes: Vec::new(),
+            reap_session_scoped: false,
+        }
     }
 
     /// Replace the default mode (builder style).

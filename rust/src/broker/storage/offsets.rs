@@ -25,6 +25,7 @@ use log::{error, warn};
 // The `Wire` impl for `AssignmentMode` lives in `broker::protocol`.
 use crate::broker::group::AssignmentMode;
 use crate::util::bytes::ByteWriter;
+use crate::util::fault;
 use crate::util::wire::Wire;
 
 use super::{crc32, scan_frames};
@@ -142,6 +143,15 @@ impl OffsetStore {
     /// instead of failing the fetch/commit path.
     pub fn note(&mut self, e: &OffsetEntry) {
         if self.failed {
+            return;
+        }
+        // Fault seam: a scripted journal-append failure (exercises the
+        // degrade path without real disk trouble).
+        if fault::active()
+            && fault::check(fault::site::OFFSETS_NOTE, &self.path.to_string_lossy()).is_some()
+        {
+            let err = fault::injected_error(fault::site::OFFSETS_NOTE);
+            self.degrade("append", &err);
             return;
         }
         self.live.insert((e.group.clone(), e.partition), e.clone());

@@ -28,6 +28,7 @@ use std::sync::Arc;
 use log::warn;
 
 use crate::broker::record::Record;
+use crate::util::fault;
 use crate::util::wire::Wire;
 
 use super::{crc32, scan_frames, Crc32, FRAME_HEADER};
@@ -159,6 +160,18 @@ impl Segment {
             .file
             .as_mut()
             .ok_or_else(|| io::Error::new(io::ErrorKind::Other, "segment is sealed"))?;
+        // Fault seam: scripted disk trouble at the append boundary. `Fail`
+        // rejects outright; `ShortWrite` tears the frame header mid-write;
+        // `Corrupt` flips a framed byte after the CRC was computed. All
+        // surface as io::Error so `DiskLog`'s degrade policy kicks in.
+        let injected = if fault::active() {
+            fault::check(fault::site::SEG_APPEND, &self.path.to_string_lossy())
+        } else {
+            None
+        };
+        if matches!(injected, Some(fault::FaultAction::Fail)) {
+            return Err(fault::injected_error(fault::site::SEG_APPEND));
+        }
         // Record header (everything before the value bytes), byte-identical
         // to the wire encoding of `Record` minus the trailing value bytes.
         self.scratch.clear();
@@ -184,6 +197,26 @@ impl Segment {
         // the value bytes go out straight from the shared Arc allocation.
         self.scratch[0..4].copy_from_slice(&(body_len as u32).to_le_bytes());
         self.scratch[4..8].copy_from_slice(&crc.to_le_bytes());
+        match injected {
+            Some(fault::FaultAction::ShortWrite) => {
+                // Half a frame header reaches the disk, then the "crash".
+                file.write_all(&self.scratch[..FRAME_HEADER / 2])?;
+                return Err(fault::injected_error(fault::site::SEG_APPEND));
+            }
+            Some(fault::FaultAction::Corrupt) => {
+                // A full-length frame whose bytes no longer match its CRC.
+                let mut torn = self.scratch.clone();
+                let last = torn.len() - 1;
+                torn[last] ^= 0xFF;
+                file.write_all(&torn)?;
+                file.write_all(&rec.value)?;
+                return Err(fault::injected_error(fault::site::SEG_APPEND));
+            }
+            // `Fail` returned above; any other scripted action degrades to
+            // a plain failure rather than silently no-opping.
+            Some(_) => return Err(fault::injected_error(fault::site::SEG_APPEND)),
+            None => {}
+        }
         file.write_all(&self.scratch)?;
         file.write_all(&rec.value)?;
         let pos = self.bytes;
@@ -199,6 +232,12 @@ impl Segment {
     /// Seal: fsync and drop the append handle. Idempotent.
     pub fn seal(&mut self) -> io::Result<()> {
         if let Some(file) = self.file.take() {
+            // Fault seam: a scripted fsync failure at seal time.
+            if fault::active()
+                && fault::check(fault::site::SEG_SEAL, &self.path.to_string_lossy()).is_some()
+            {
+                return Err(fault::injected_error(fault::site::SEG_SEAL));
+            }
             file.sync_all()?;
         }
         Ok(())

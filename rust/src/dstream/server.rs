@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use log::{debug, warn};
 
+use crate::util::fault;
 use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, ServeAction, Sniff};
 use crate::util::wire::{read_frame_patient, Wire};
 
@@ -427,6 +428,15 @@ impl Drop for DistroStreamServer {
 }
 
 fn handle_conn(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, mut sock: TcpStream) {
+    // Fault seam: sever a scripted server-side connection before any frame
+    // is served (the ODS client sees an abrupt close and reconnects).
+    if fault::active() {
+        let local = sock.local_addr().map(|a| a.to_string()).unwrap_or_default();
+        if fault::check(fault::site::DSTREAM_CONN, &local).is_some() {
+            debug!("dstream conn: injected drop");
+            return;
+        }
+    }
     // Small replies must not sit out a Nagle delay (PR 5: servers now set
     // nodelay on accepted sockets, like clients always did).
     let _ = sock.set_nodelay(true);

@@ -11,10 +11,13 @@
 //! - [`cli`] — tiny declarative argument parser (our `clap`).
 //! - [`quick`] — mini property-based testing framework (our `proptest`).
 //! - [`timeutil`] — scaled durations, stopwatches, human formatting.
+//! - [`fault`] — seeded fault-injection plane (scripted chaos for the
+//!   wire, storage and cluster planes; our jepsen/failpoints).
 
 pub mod bench;
 pub mod bytes;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod logging;
 pub mod mux;

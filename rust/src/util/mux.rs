@@ -32,6 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::util::bytes::{ByteWriter, SharedBytes};
+use crate::util::fault;
 use crate::util::wire::{
     read_frame_patient, recv_msg_patient, send_msg_buf, write_all_vectored, write_frame,
     write_frame_parts, Wire, MAX_FRAME,
@@ -155,6 +156,10 @@ impl MuxConn {
     /// naming the handshake — against peers that only speak the legacy
     /// lock-step protocol or a different mux version.
     pub fn connect(addr: &str) -> io::Result<Self> {
+        // Fault seam: a scripted connect refusal (simulated partition).
+        if fault::active() && fault::check(fault::site::MUX_CONNECT, addr).is_some() {
+            return Err(fault::injected_error(fault::site::MUX_CONNECT));
+        }
         let sock = TcpStream::connect(addr)?;
         Self::establish(sock, addr)
     }
@@ -323,7 +328,21 @@ impl Drop for PendingReply {
 
 /// Reader thread body: route response frames to their waiters by id.
 fn run_reader(mut sock: TcpStream, shared: Arc<Shared>) {
+    let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     loop {
+        // Fault seam: stall reply delivery, or drop the connection.
+        if fault::active() {
+            match fault::check(fault::site::MUX_READ, &peer) {
+                Some(fault::FaultAction::Stall(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(_) => {
+                    shared.fail("injected mux read drop".into());
+                    return;
+                }
+                None => {}
+            }
+        }
         match read_mux_frame(&mut sock, || true) {
             Ok(Some((corr, body))) => {
                 let mut p = shared.pending.lock().unwrap();
@@ -350,8 +369,9 @@ fn run_reader(mut sock: TcpStream, shared: Arc<Shared>) {
 /// as one vectored write per batch — requests submitted while a write is
 /// in flight coalesce into the next one.
 fn run_writer(mut sock: TcpStream, shared: Arc<Shared>) {
+    let peer = sock.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     loop {
-        let batch: Vec<OutFrame> = {
+        let mut batch: Vec<OutFrame> = {
             let mut q = shared.queue.lock().unwrap();
             while q.frames.is_empty() && !q.closed {
                 q = shared.send_cv.wait(q).unwrap();
@@ -361,10 +381,43 @@ fn run_writer(mut sock: TcpStream, shared: Arc<Shared>) {
             }
             q.frames.drain(..).collect()
         };
+        // Fault seam: drop / tear / stall / reorder the outgoing batch.
+        if fault::active() {
+            match fault::check(fault::site::MUX_WRITE, &peer) {
+                Some(fault::FaultAction::Stall(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(fault::FaultAction::Reorder) => fault_shuffle(&mut batch),
+                Some(fault::FaultAction::ShortWrite) => {
+                    // A torn frame: a prefix of the first header escapes,
+                    // then the connection dies mid-write.
+                    let (_, body) = &batch[0];
+                    let mut h = [0u8; 12];
+                    h[..4].copy_from_slice(&((8 + body.len()) as u32).to_le_bytes());
+                    let _ = sock.write_all(&h[..6]);
+                    shared.fail("injected mux short write".into());
+                    return;
+                }
+                Some(_) => {
+                    shared.fail("injected mux connection drop".into());
+                    return;
+                }
+                None => {}
+            }
+        }
         if let Err(e) = write_batch(&mut sock, &batch) {
             shared.fail(format!("mux send: {e}"));
             return;
         }
+    }
+}
+
+/// Fisher–Yates over an outgoing batch with the fault plane's seeded RNG
+/// (reorder-window jitter: correlation-id routing must not care).
+fn fault_shuffle(batch: &mut [OutFrame]) {
+    for i in (1..batch.len()).rev() {
+        let j = (fault::next_u64() % (i as u64 + 1)) as usize;
+        batch.swap(i, j);
     }
 }
 

@@ -89,6 +89,25 @@ pub fn ceil_ms(d: Duration) -> u64 {
     }
 }
 
+/// Poll `pred` (every few milliseconds) until it holds or `timeout`
+/// elapses; reports whether it held. The bounded replacement for fixed
+/// `thread::sleep` synchronisation in tests: a slow machine waits as
+/// long as it needs, a fast one moves on in single-digit milliseconds,
+/// and a hang still fails — at the timeout, with the predicate's name
+/// in the assertion instead of a flaky downstream symptom.
+pub fn wait_until(mut pred: impl FnMut() -> bool, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if pred() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
 /// `12.3 MB/s` style throughput formatting.
 pub fn human_rate(bytes: u64, d: Duration) -> String {
     let bps = bytes as f64 / d.as_secs_f64().max(1e-9);
@@ -176,6 +195,17 @@ mod tests {
         let sw = Stopwatch::start();
         std::thread::sleep(Duration::from_millis(2));
         assert!(sw.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn wait_until_polls_to_success_or_deadline() {
+        assert!(wait_until(|| true, Duration::ZERO), "an already-true predicate needs no wait");
+        let t0 = Instant::now();
+        assert!(!wait_until(|| false, Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(20), "must wait out the full timeout");
+        // A predicate that flips mid-wait is caught well before timeout.
+        let flip = Instant::now() + Duration::from_millis(10);
+        assert!(wait_until(|| Instant::now() >= flip, Duration::from_secs(5)));
     }
 
     #[test]

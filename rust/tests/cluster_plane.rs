@@ -15,7 +15,7 @@ use hybridws::broker::{
 use hybridws::coordinator::prelude::*;
 use hybridws::dstream::api::topic_for_alias;
 use hybridws::dstream::ConsumerMode;
-use hybridws::util::timeutil::TimeScale;
+use hybridws::util::timeutil::{wait_until, TimeScale};
 
 /// Start `n` in-process cluster members. `disk_base = Some(dir)` makes
 /// each member durable under `dir/b<i>` (the restart scenarios);
@@ -201,8 +201,15 @@ fn cluster_workflow_survives_member_kill_and_restart() {
 
     // Phase 2: kill member 1 and restart it from its own data dir — its
     // shard of the unconsumed records must come back from disk.
+    let core = servers[1].as_ref().unwrap().core();
     servers[1].take().unwrap().shutdown();
-    std::thread::sleep(Duration::from_millis(500));
+    // Member 1's connection threads must drop its core before the restart
+    // re-opens the same segment files.
+    assert!(
+        wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(5)),
+        "member 1's connection threads must release its core before restart"
+    );
+    drop(core);
     let restarted = {
         let deadline = Instant::now() + Duration::from_secs(5);
         loop {

@@ -1,0 +1,695 @@
+//! Fault-plane scenario suite (ISSUE 6): scripted chaos for the wire,
+//! storage, and cluster planes. Each test re-runs a real broker workload
+//! under a seeded fault schedule and asserts the durability/ordering
+//! invariants from [`hybridws::util::fault::invariants`].
+//!
+//! Reproducibility: every test resolves its seed through
+//! [`fault::resolve_seed`] and prints it; a failing run replays
+//! byte-for-byte with
+//! `HYBRIDWS_FAULT_SEED=<seed> cargo test --test fault_plane <name>`.
+//! Drained fault logs land in `target/fault-logs/` (uploaded as artifacts
+//! by the CI `fault` job).
+//!
+//! The fault plane is process-global, so every test serialises on `GATE`.
+
+use std::collections::HashSet;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{
+    AssignmentMode, BrokerClient, BrokerConfig, BrokerCore, BrokerServer, ClusterClient,
+    ClusterSpec, ClusterView,
+};
+use hybridws::util::fault::{self, invariants, FaultAction, Rule, Scenario};
+use hybridws::util::rng::Rng;
+use hybridws::util::timeutil::wait_until;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Resolve and announce the seed for `test` (honours `HYBRIDWS_FAULT_SEED`).
+fn seed_for(test: &str, default: u64) -> u64 {
+    let seed = fault::resolve_seed(default);
+    println!(
+        "fault seed: {seed} (rerun with \
+         HYBRIDWS_FAULT_SEED={seed} cargo test --test fault_plane {test})"
+    );
+    seed
+}
+
+/// Persist a drained fault log under `target/fault-logs/` (CI artifacts).
+fn save_log(test: &str, seed: u64, log: &[String]) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target").join("fault-logs");
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(format!("{test}-{seed}.log")), log.join("\n"));
+}
+
+/// Uninstalls a manually-installed plane when a test panics before its own
+/// `uninstall` (scenario tests get this from `ScenarioHandle`'s Drop).
+struct PlaneGuard;
+
+impl Drop for PlaneGuard {
+    fn drop(&mut self) {
+        if fault::active() {
+            let _ = fault::uninstall();
+        }
+    }
+}
+
+/// Self-cleaning temp dir (same shape as storage_durability.rs).
+struct TmpDir(PathBuf);
+
+impl TmpDir {
+    fn new(tag: &str) -> Self {
+        let d = std::env::temp_dir().join(format!("hybridws-fault-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        TmpDir(d)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// All `.seg` files under `dir`, recursively.
+fn seg_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else { return out };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            out.extend(seg_files(&p));
+        } else if p.extension().is_some_and(|e| e == "seg") {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Start `n` in-process cluster members, durable under `disk_base/b<i>`
+/// when given (mirrors cluster_plane.rs).
+fn start_members(
+    n: usize,
+    disk_base: Option<&Path>,
+) -> (Vec<Option<BrokerServer>>, Vec<String>, ClusterSpec) {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let spec = ClusterSpec::new(addrs.clone());
+    let servers = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let core = match disk_base {
+                None => BrokerCore::new(),
+                Some(base) => {
+                    BrokerCore::with_config(BrokerConfig::disk(base.join(format!("b{i}"))))
+                        .unwrap()
+                }
+            };
+            let view = ClusterView::new(spec.clone(), addrs[i].clone());
+            Some(BrokerServer::start_cluster(core, l, view).unwrap())
+        })
+        .collect();
+    (servers, addrs, spec)
+}
+
+/// With no plane installed, every seam is a single relaxed atomic load and
+/// `check` answers `None` without touching any state.
+#[test]
+fn disabled_plane_is_inert() {
+    let _g = serialized();
+    assert!(!fault::active());
+    assert_eq!(fault::check(fault::site::MUX_WRITE, "anywhere"), None);
+    assert!(fault::seed().is_none());
+}
+
+/// The plane's decision stream — which rules fire, in what order, and the
+/// seeded RNG draws between them — replays exactly from the seed.
+#[test]
+fn scripted_schedule_replays_byte_for_byte_from_seed() {
+    let _g = serialized();
+    let seed = seed_for("scripted_schedule_replays_byte_for_byte_from_seed", 0xC0FFEE01);
+
+    // One run: arm a mixed schedule, drive a synthetic decision stream
+    // through `check`, record every decision the plane makes.
+    let run = |seed: u64| -> (Vec<Option<FaultAction>>, Vec<u64>, Vec<String>) {
+        fault::install(seed);
+        let _plane = PlaneGuard;
+        fault::inject(Rule::new(fault::site::MUX_WRITE, FaultAction::Reorder).times(3).after(2));
+        fault::inject(Rule::new(fault::site::MUX_READ, FaultAction::Stall(7)).matching("peer-a"));
+        fault::inject(Rule::new(fault::site::SEG_APPEND, FaultAction::Corrupt).after(1));
+        let mut rng = Rng::new(seed);
+        let mut decisions = Vec::new();
+        let mut draws = Vec::new();
+        for i in 0..32u32 {
+            let site = match rng.below(3) {
+                0 => fault::site::MUX_WRITE,
+                1 => fault::site::MUX_READ,
+                _ => fault::site::SEG_APPEND,
+            };
+            let ctx = if rng.chance(0.5) { "peer-a" } else { "peer-b" };
+            decisions.push(fault::check(site, ctx));
+            if i % 5 == 0 {
+                draws.push(fault::next_u64());
+            }
+        }
+        let log = fault::uninstall();
+        (decisions, draws, log)
+    };
+
+    let (d1, r1, l1) = run(seed);
+    let (d2, r2, l2) = run(seed);
+    assert_eq!(d1, d2, "decision stream must replay exactly from seed {seed}");
+    assert_eq!(r1, r2, "seeded RNG stream must replay exactly from seed {seed}");
+    // Log lines carry elapsed-ms wall-clock prefixes; everything after the
+    // "] " separator is the decision record and must match byte for byte.
+    let decisions_only = |log: &[String]| -> Vec<String> {
+        log.iter()
+            .map(|l| l.split_once("] ").map(|(_, s)| s.to_string()).unwrap_or_else(|| l.clone()))
+            .collect()
+    };
+    assert_eq!(decisions_only(&l1), decisions_only(&l2), "fault log must replay from seed {seed}");
+    save_log("scripted_schedule_replays_byte_for_byte_from_seed", seed, &l1);
+}
+
+/// Satellite 3: a scripted connection drop in the middle of a pipelined
+/// publish window. The pipeline must surface the failure (in submission
+/// order — acks complete oldest-first) and `flush` must drain rather than
+/// hang; no record the broker acked may be lost.
+#[test]
+fn pipelined_publishes_surface_injected_drop_without_hanging() {
+    let _g = serialized();
+    let seed = seed_for("pipelined_publishes_surface_injected_drop_without_hanging", 0xC0FFEE02);
+    let mut rng = Rng::new(seed);
+
+    let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    BrokerClient::connect(&addr).unwrap().create_topic("t", 1).unwrap();
+
+    fault::install(seed);
+    let _plane = PlaneGuard;
+    // Sever the publisher's mux connection on its k-th outgoing batch.
+    let k = rng.range(2, 6) as u32;
+    fault::inject(
+        Rule::new(fault::site::MUX_WRITE, FaultAction::Drop).matching(addr.clone()).after(k),
+    );
+
+    const SUBMITS: usize = 32;
+    let (tx, rx) = mpsc::channel();
+    let thread_addr = addr.clone();
+    std::thread::spawn(move || {
+        let client = BrokerClient::connect(&thread_addr).unwrap();
+        let mut pipe = client.pipeline(4);
+        let mut first_err_at = None;
+        for i in 0..SUBMITS {
+            if let Err(e) = pipe.publish("t", ProducerRecord::new(vec![i as u8])) {
+                first_err_at = Some((i, e.to_string()));
+                break;
+            }
+        }
+        let flush = pipe.flush().map_err(|e| e.to_string());
+        let acked = pipe.acked();
+        let _ = tx.send((first_err_at, flush, acked));
+    });
+
+    // The submission loop + flush must drain, not hang, even though a
+    // whole window of acks died with the connection.
+    let (first_err_at, flush, acked) = rx
+        .recv_timeout(Duration::from_secs(10))
+        .unwrap_or_else(|_| panic!("pipeline hung after injected drop (seed {seed})"));
+    assert!(
+        first_err_at.is_some() || flush.is_err(),
+        "the dropped window's acks must surface as an error, not vanish \
+         (flush: {flush:?}, seed {seed})"
+    );
+    assert!(
+        acked < SUBMITS as u64,
+        "acks from the severed connection cannot all have completed \
+         (acked {acked}, seed {seed})"
+    );
+    if let Some((i, _)) = &first_err_at {
+        // Oldest-first completion: nothing submitted after the failing
+        // call can have been counted as acked.
+        assert!(
+            acked <= *i as u64,
+            "error at submit {i} but {acked} acks counted — acks must \
+             complete in submission order (seed {seed})"
+        );
+    }
+
+    // No acked record lost: acks completed oldest-first on a single
+    // ordered connection, so they correspond to offsets 0..acked.
+    let probe = BrokerClient::connect(&addr).unwrap();
+    assert!(
+        wait_until(|| probe.ping().is_ok(), Duration::from_secs(2)),
+        "broker must still serve fresh connections (seed {seed})"
+    );
+    let stats = probe.topic_stats("t").unwrap();
+    let acks: Vec<(usize, u64)> = (0..acked).map(|o| (0, o)).collect();
+    invariants::no_acked_lost(&acks, &stats.high_watermarks)
+        .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    let log = fault::uninstall();
+    assert!(
+        log.iter().any(|l| l.contains("fire mux.write")),
+        "scripted drop never fired (seed {seed}): {log:?}"
+    );
+    save_log("pipelined_publishes_surface_injected_drop_without_hanging", seed, &log);
+    server.shutdown();
+}
+
+/// The headline scenario: a scripted kill + restart of one durable cluster
+/// member while a publisher keeps publishing straight through the outage.
+/// Afterwards every acked record is drained, claim cursors are monotone,
+/// commits stay under the watermark, and both members agree on the
+/// cluster meta.
+#[test]
+fn scripted_member_kill_and_restart_loses_no_acked_records() {
+    let _g = serialized();
+    let seed = seed_for("scripted_member_kill_and_restart_loses_no_acked_records", 0xC0FFEE03);
+    let tmp = TmpDir::new("cluster-kill");
+    let base = tmp.path().to_path_buf();
+
+    let (servers, addrs, spec) = start_members(2, Some(&base));
+    let servers = Arc::new(Mutex::new(servers));
+
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("t", 16).unwrap();
+
+    // The scripted outage: kill member 1 early, restart it from its own
+    // data dir mid-workload. Each event reports success over a channel —
+    // panics inside the scenario timer thread would otherwise vanish.
+    let (ev_tx, ev_rx) = mpsc::channel();
+    let kill_tx = ev_tx.clone();
+    let kill_servers = Arc::clone(&servers);
+    let restart_servers = Arc::clone(&servers);
+    let restart_addr = addrs[1].clone();
+    let restart_spec = spec.clone();
+    let restart_base = base.clone();
+    let handle = Scenario::new("member-kill-restart", seed)
+        .at_do(100, "kill member 1", move || {
+            let server = kill_servers.lock().unwrap()[1].take().unwrap();
+            let core = server.core();
+            server.shutdown();
+            // Connection threads must drop the core so the restarted core
+            // is the only writer on those segment files.
+            let ok = wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(5));
+            let _ = kill_tx.send(("kill", ok));
+        })
+        .at_do(700, "restart member 1", move || {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let listener = loop {
+                match TcpListener::bind(&restart_addr) {
+                    Ok(l) => break Some(l),
+                    Err(_) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => break None,
+                }
+            };
+            let ok = listener.is_some_and(|l| {
+                let core =
+                    BrokerCore::with_config(BrokerConfig::disk(restart_base.join("b1"))).unwrap();
+                let view = ClusterView::new(restart_spec.clone(), restart_addr.clone());
+                match BrokerServer::start_cluster(core, l, view) {
+                    Ok(s) => {
+                        restart_servers.lock().unwrap()[1] = Some(s);
+                        true
+                    }
+                    Err(_) => false,
+                }
+            });
+            let _ = ev_tx.send(("restart", ok));
+        })
+        .run();
+    assert_eq!(handle.seed(), seed);
+
+    // Publish straight through the outage: the cluster client's retry
+    // window (seconds) dwarfs the scripted downtime (hundreds of ms).
+    let mut rng = Rng::new(seed);
+    let mut acked: Vec<(usize, u64)> = Vec::new();
+    let mut acked_vals: HashSet<u64> = HashSet::new();
+    let mut next_val = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < Duration::from_millis(1100) {
+        let n = rng.range(1, 6);
+        let recs: Vec<ProducerRecord> = (0..n)
+            .map(|_| {
+                let v = next_val;
+                next_val += 1;
+                ProducerRecord::new(v.to_le_bytes().to_vec())
+            })
+            .collect();
+        let vals: Vec<u64> = (next_val - n as u64..next_val).collect();
+        match cc.publish_batch("t", recs) {
+            Ok(acks) => {
+                acked.extend(acks);
+                acked_vals.extend(vals);
+            }
+            Err(e) => panic!("publish must ride the retry window through the outage: {e} (seed {seed})"),
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+
+    let log = handle.finish();
+    let mut events: Vec<(&str, bool)> = ev_rx.try_iter().collect();
+    events.sort();
+    assert_eq!(
+        events.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+        vec!["kill", "restart"],
+        "both scripted events must have run (seed {seed})"
+    );
+    assert!(events.iter().all(|(_, ok)| *ok), "scripted kill/restart failed: {events:?} (seed {seed})");
+
+    // Drain everything; claim cursors must only move forward.
+    cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut claim_history: Vec<Vec<u64>> = vec![Vec::new(); 16];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !acked_vals.is_subset(&seen) && Instant::now() < deadline {
+        let mf = cc.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 500).unwrap();
+        for (_, recs) in &mf.batches {
+            for r in recs {
+                seen.insert(u64::from_le_bytes(r.value[..8].try_into().unwrap()));
+            }
+        }
+        for (p, (claim, _)) in mf.positions.iter().enumerate() {
+            claim_history[p].push(*claim);
+        }
+    }
+    let missing: Vec<u64> = acked_vals.difference(&seen).take(5).cloned().collect();
+    assert!(
+        acked_vals.is_subset(&seen),
+        "acked records lost across kill/restart — e.g. {missing:?} (seed {seed})"
+    );
+    for (p, history) in claim_history.iter().enumerate() {
+        invariants::monotone(history, &format!("claim cursor p{p}"))
+            .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+    }
+
+    let stats = cc.topic_stats("t").unwrap();
+    invariants::no_acked_lost(&acked, &stats.high_watermarks)
+        .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    // Commit everything claimed; commits must stay under the watermark.
+    let pos = cc.positions("g", "t").unwrap();
+    let commits: Vec<(usize, u64)> =
+        pos.iter().enumerate().map(|(p, (claim, _))| (p, *claim)).collect();
+    cc.commit("g", "t", &commits).unwrap();
+    let committed: Vec<(usize, u64)> = cc
+        .positions("g", "t")
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(p, (_, c))| (p, *c))
+        .collect();
+    invariants::watermark_covers_commits(&stats.high_watermarks, &committed)
+        .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    // Both members — including the restarted one — agree on the meta.
+    let views: Vec<(u64, Vec<String>)> = addrs
+        .iter()
+        .map(|a| {
+            let meta = BrokerClient::connect(a).unwrap().cluster_meta().unwrap();
+            (meta.epoch, meta.members)
+        })
+        .collect();
+    invariants::meta_converged(&views).unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    assert!(log.iter().any(|l| l.contains("kill member 1")), "missing kill event in log (seed {seed})");
+    assert!(log.iter().any(|l| l.contains("restart member 1")), "missing restart event in log (seed {seed})");
+    save_log("scripted_member_kill_and_restart_loses_no_acked_records", seed, &log);
+    for s in servers.lock().unwrap().iter_mut() {
+        if let Some(s) = s.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// Scripted crash + at-rest corruption: kill a durable broker, tear the
+/// live segment mid-frame (a torn tail, as a real crash would leave), and
+/// restart from the same dir. Recovery must clamp to the last intact
+/// record and the consumer group must resume from its committed offset.
+#[test]
+fn torn_segment_tail_recovers_to_last_intact_record() {
+    let _g = serialized();
+    let seed = seed_for("torn_segment_tail_recovers_to_last_intact_record", 0xC0FFEE04);
+    let mut rng = Rng::new(seed);
+    let tmp = TmpDir::new("torn-tail");
+    let data_dir = tmp.path().join("b0");
+    let cfg = BrokerConfig::disk(data_dir.clone());
+
+    let server = BrokerServer::start(BrokerCore::with_config(cfg.clone()).unwrap(), "127.0.0.1:0")
+        .unwrap();
+    let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+    client.create_topic("t", 1).unwrap();
+
+    let k = rng.range(8, 20);
+    for i in 0..k - 1 {
+        client.publish("t", ProducerRecord::new(vec![i as u8; rng.range(10, 80)])).unwrap();
+    }
+    let seg = {
+        let mut segs = seg_files(&data_dir);
+        assert_eq!(segs.len(), 1, "one live segment expected, got {segs:?}");
+        segs.pop().unwrap()
+    };
+    let s1 = std::fs::metadata(&seg).unwrap().len();
+    client.publish("t", ProducerRecord::new(vec![0xAB; rng.range(10, 80)])).unwrap();
+    let s2 = std::fs::metadata(&seg).unwrap().len();
+    assert!(s2 > s1, "final record must grow the segment ({s1} -> {s2})");
+
+    // Consume everything, commit strictly before the record we will tear.
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+    assert_eq!(mf.record_count(), k);
+    let committed = rng.range(1, k - 1) as u64;
+    client.commit("g", "t", &[(0, committed)]).unwrap();
+
+    // The scripted crash: kill, then cut the segment inside its final
+    // frame. Events run in order on the scenario's timer thread.
+    let cut = rng.range(s1 as usize + 1, s2 as usize) as u64;
+    let (done_tx, done_rx) = mpsc::channel();
+    let seg2 = seg.clone();
+    let handle = Scenario::new("torn-tail", seed)
+        .at_do(10, "kill broker", move || {
+            let core = server.core();
+            server.shutdown();
+            let ok = wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(5));
+            let _ = done_tx.send(ok);
+        })
+        .at_do(40, "tear segment tail", move || {
+            let f = std::fs::OpenOptions::new().write(true).open(&seg2).unwrap();
+            f.set_len(cut).unwrap();
+        })
+        .run();
+    drop(client);
+    let log = handle.finish();
+    assert!(
+        done_rx.recv_timeout(Duration::from_secs(10)).unwrap(),
+        "broker conn threads must release the core before surgery (seed {seed})"
+    );
+    assert_eq!(std::fs::metadata(&seg).unwrap().len(), cut, "surgery must have run (seed {seed})");
+
+    // Restart from the same data dir.
+    let server = BrokerServer::start(BrokerCore::with_config(cfg).unwrap(), "127.0.0.1:0").unwrap();
+    let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+    let stats = client.topic_stats("t").unwrap();
+    assert_eq!(
+        stats.recovered_records,
+        (k - 1) as u64,
+        "the torn final record must be discarded, everything before it kept (seed {seed})"
+    );
+    assert_eq!(stats.high_watermarks, vec![(k - 1) as u64]);
+
+    // The group resumes from its committed offset, not the torn tail.
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+    let offsets: Vec<u64> =
+        mf.batches.iter().flat_map(|(_, rs)| rs.iter().map(|r| r.offset)).collect();
+    assert_eq!(
+        offsets,
+        (committed..(k - 1) as u64).collect::<Vec<_>>(),
+        "group must resume from committed offset {committed} (seed {seed})"
+    );
+    invariants::watermark_covers_commits(&stats.high_watermarks, &[(0, committed)])
+        .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    assert!(log.iter().any(|l| l.contains("tear segment tail")), "missing tear event (seed {seed})");
+    save_log("torn_segment_tail_recovers_to_last_intact_record", seed, &log);
+    server.shutdown();
+}
+
+/// In-process disk trouble — a failed write, a torn frame header, a frame
+/// whose bytes no longer match its CRC — must degrade storage to memory,
+/// never fail a publish or lose a record the broker already acked.
+#[test]
+fn injected_storage_faults_degrade_without_losing_acked_records() {
+    let _g = serialized();
+    let seed = seed_for("injected_storage_faults_degrade_without_losing_acked_records", 0xC0FFEE05);
+    let tmp = TmpDir::new("degrade");
+    let core = BrokerCore::with_config(BrokerConfig::disk(tmp.path().join("b0"))).unwrap();
+    for i in 0..3 {
+        core.create_topic(&format!("t{i}"), 1).unwrap();
+    }
+
+    fault::install(seed);
+    let _plane = PlaneGuard;
+    // One flavour of disk trouble per topic (each topic has its own
+    // segment, so each rule keys on the topic's path).
+    let actions = [FaultAction::Fail, FaultAction::ShortWrite, FaultAction::Corrupt];
+    for (i, action) in actions.iter().enumerate() {
+        fault::inject(
+            Rule::new(fault::site::SEG_APPEND, *action).matching(format!("t{i}")).after(2),
+        );
+    }
+
+    let mut acked: Vec<Vec<(usize, u64)>> = vec![Vec::new(); 3];
+    for r in 0..8u8 {
+        for (i, topic_acks) in acked.iter_mut().enumerate() {
+            let acks = core
+                .publish_batch(&format!("t{i}"), vec![ProducerRecord::new(vec![r])])
+                .unwrap_or_else(|e| panic!("publish must degrade, not fail: {e} (seed {seed})"));
+            topic_acks.extend(acks);
+        }
+    }
+    // Every acked record is still served, straight through the degrade.
+    for (i, topic_acks) in acked.iter().enumerate() {
+        let t = format!("t{i}");
+        let stats = core.topic_stats(&t).unwrap();
+        assert_eq!(stats.records, 8, "{t}: all 8 publishes acked (seed {seed})");
+        invariants::no_acked_lost(topic_acks, &stats.high_watermarks)
+            .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+        core.join_group("g", &t, "m", AssignmentMode::Shared).unwrap();
+        let recs = core.poll("g", &t, "m", usize::MAX).unwrap();
+        assert_eq!(recs.len(), 8, "{t}: acked records must survive the degrade (seed {seed})");
+    }
+
+    // The cursor journal degrades the same way: a scripted append failure
+    // must not fail the commit.
+    fault::inject(Rule::new(fault::site::OFFSETS_NOTE, FaultAction::Fail));
+    core.commit("g", "t0", &[(0, 4)]).unwrap();
+
+    let log = fault::uninstall();
+    for needle in ["fire storage.segment.append", "fire storage.offsets.note"] {
+        assert!(log.iter().any(|l| l.contains(needle)), "{needle} never fired (seed {seed})");
+    }
+    save_log("injected_storage_faults_degrade_without_losing_acked_records", seed, &log);
+}
+
+/// Connection-level chaos heals: a refused dial retries clean, scripted
+/// server-side drops are outlived by the client's reconnect window, and a
+/// cluster client routes around a scripted partition to one member.
+#[test]
+fn clients_heal_through_scripted_connection_faults() {
+    let _g = serialized();
+    let seed = seed_for("clients_heal_through_scripted_connection_faults", 0xC0FFEE06);
+
+    let (mut servers, addrs, _spec) = start_members(2, None);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("t", 8).unwrap();
+
+    fault::install(seed);
+    let _plane = PlaneGuard;
+
+    // (1) A refused dial surfaces immediately; the retry connects clean.
+    fault::inject(Rule::new(fault::site::MUX_CONNECT, FaultAction::Refuse).matching(addrs[0].clone()));
+    assert!(BrokerClient::connect(&addrs[0]).is_err(), "scripted refusal must surface (seed {seed})");
+    BrokerClient::connect(&addrs[0]).unwrap().ping().unwrap();
+
+    // (2) The broker severs its next two accepted connections before
+    // serving a frame; dialing clients must heal once the drops exhaust.
+    fault::inject(
+        Rule::new(fault::site::BROKER_CONN, FaultAction::Drop).matching(addrs[0].clone()).times(2),
+    );
+    let healed = wait_until(
+        || BrokerClient::connect(&addrs[0]).map(|c| c.ping().is_ok()).unwrap_or(false),
+        Duration::from_secs(5),
+    );
+    assert!(healed, "client must heal once scripted drops are exhausted (seed {seed})");
+
+    // (3) A scripted partition between the cluster client and member 0:
+    // reads route to the healthy member, writes retry until it heals.
+    fault::inject(
+        Rule::new(fault::site::CLUSTER_CONNECT, FaultAction::Drop)
+            .matching(addrs[0].clone())
+            .times(3),
+    );
+    cc.ping().unwrap();
+    cc.ensure_topic("t2", 8).unwrap();
+
+    let log = fault::uninstall();
+    for needle in ["fire mux.connect", "fire broker.conn", "fire cluster.connect"] {
+        assert!(log.iter().any(|l| l.contains(needle)), "{needle} never fired (seed {seed})");
+    }
+    save_log("clients_heal_through_scripted_connection_faults", seed, &log);
+    for s in servers.iter_mut() {
+        if let Some(s) = s.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// Reorder + stall jitter on a shared mux: correlation-ID routing must
+/// keep every pipelined ack and interleaved ping matched to its request.
+#[test]
+fn reorder_and_stall_jitter_preserve_correlation_routing() {
+    let _g = serialized();
+    let seed = seed_for("reorder_and_stall_jitter_preserve_correlation_routing", 0xC0FFEE07);
+
+    let server = BrokerServer::start(BrokerCore::new(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let client = BrokerClient::connect(&addr).unwrap();
+    client.create_topic("t", 1).unwrap();
+
+    fault::install(seed);
+    let _plane = PlaneGuard;
+    fault::inject(Rule::new(fault::site::MUX_WRITE, FaultAction::Reorder).times(16));
+    fault::inject(Rule::new(fault::site::MUX_READ, FaultAction::Stall(3)).times(8));
+
+    const N: usize = 48;
+    let mut pipe = client.pipeline(8);
+    for i in 0..N {
+        pipe.publish("t", ProducerRecord::new((i as u64).to_le_bytes().to_vec())).unwrap();
+        if i % 8 == 0 {
+            // An interleaved synchronous rpc on the same jittered mux.
+            client.ping().unwrap();
+        }
+    }
+    assert_eq!(
+        pipe.flush().unwrap(),
+        N as u64,
+        "every pipelined publish must ack despite jitter (seed {seed})"
+    );
+    let stats = client.topic_stats("t").unwrap();
+    assert_eq!(stats.records, N);
+
+    // All values arrive (possibly permuted by the reorder window).
+    client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+    let mf = client.fetch_many("g", "t", "m", usize::MAX, usize::MAX).unwrap();
+    let mut vals: Vec<u64> = mf
+        .batches
+        .iter()
+        .flat_map(|(_, rs)| rs.iter().map(|r| u64::from_le_bytes(r.value[..8].try_into().unwrap())))
+        .collect();
+    vals.sort_unstable();
+    assert_eq!(vals, (0..N as u64).collect::<Vec<_>>(), "records lost or duplicated (seed {seed})");
+
+    let log = fault::uninstall();
+    save_log("reorder_and_stall_jitter_preserve_correlation_routing", seed, &log);
+    server.shutdown();
+}

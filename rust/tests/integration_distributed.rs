@@ -3,6 +3,7 @@
 //! client reconnection across broker restarts (single-broker and cluster).
 
 use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -14,7 +15,7 @@ use hybridws::broker::{
 use hybridws::coordinator::prelude::*;
 use hybridws::coordinator::remote::serve_worker;
 use hybridws::dstream::{DistroStreamHub, DistroStreamServer};
-use hybridws::util::timeutil::TimeScale;
+use hybridws::util::timeutil::{wait_until, TimeScale};
 
 /// Rebind a broker on the **same** address with the same storage config —
 /// the "broker restart" half of the reconnect tests. Rebinding retries
@@ -77,17 +78,31 @@ fn broker_client_reconnects_mid_long_poll_and_resumes_from_committed() {
     // Park a long poll, then bounce the broker underneath it. The client
     // must reconnect + re-join transparently; the broker's offset journal
     // rewinds the group to its committed offset, so 3 and 4 redeliver.
+    let parked = Arc::new(AtomicBool::new(false));
     let waiter = {
         let c = Arc::clone(&client);
+        let parked = Arc::clone(&parked);
         std::thread::spawn(move || {
+            parked.store(true, Ordering::SeqCst);
             c.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 20_000)
         })
     };
-    std::thread::sleep(Duration::from_millis(100));
+    assert!(
+        wait_until(|| parked.load(Ordering::SeqCst), Duration::from_secs(2)),
+        "long-poll thread never started"
+    );
+    // A beat for the wait frame to reach the broker and actually park.
+    std::thread::sleep(Duration::from_millis(30));
+    let core = server.core();
     server.shutdown();
-    // Let parked connection threads notice the stop flag and exit before
-    // the restarted core re-opens the same segment files.
-    std::thread::sleep(Duration::from_millis(500));
+    // Parked connection threads must notice the stop flag and drop the
+    // core before the restarted core re-opens the same segment files (the
+    // parked poll may ride out one bounded server-side wait first).
+    assert!(
+        wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(10)),
+        "broker connection threads must release the core before restart"
+    );
+    drop(core);
     let server = restart_broker(&addr, cfg);
     let mf = waiter.join().unwrap().expect("long poll must survive the restart");
     let offsets: Vec<u64> = mf
@@ -150,18 +165,31 @@ fn cluster_client_reconnects_and_resumes_from_committed_offsets() {
     // Kill member 1, publish while it is down (owner-routed publishes to
     // its shard must retry with backoff, not error), then restart it from
     // its own data dir.
+    let core = servers[1].as_ref().unwrap().core();
     servers[1].take().unwrap().shutdown();
-    std::thread::sleep(Duration::from_millis(500));
+    assert!(
+        wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(5)),
+        "member 1's connection threads must release its core before restart"
+    );
+    drop(core);
+    let publishing = Arc::new(AtomicBool::new(false));
     let publisher = {
         let cc = Arc::clone(&cc);
+        let publishing = Arc::clone(&publishing);
         std::thread::spawn(move || {
+            publishing.store(true, Ordering::SeqCst);
             cc.publish_batch(
                 "t",
                 (20..30u8).map(|i| ProducerRecord::new(vec![i])).collect(),
             )
         })
     };
-    std::thread::sleep(Duration::from_millis(300));
+    assert!(
+        wait_until(|| publishing.load(Ordering::SeqCst), Duration::from_secs(2)),
+        "outage publisher thread never started"
+    );
+    // A beat for the publish to hit the dead member and enter its backoff.
+    std::thread::sleep(Duration::from_millis(50));
     servers[1] = Some(restart_cluster_member(&addrs[1], cfgs[1].clone(), spec.clone()));
     publisher
         .join()

@@ -4,7 +4,7 @@
 use std::collections::HashSet;
 
 use hybridws::broker::record::ProducerRecord;
-use hybridws::broker::{AssignmentMode, BrokerCore};
+use hybridws::broker::{AssignmentMode, BrokerCore, ClusterSpec};
 use hybridws::coordinator::analyser::TaskAnalyser;
 use hybridws::coordinator::annotations::{Arg, TaskSpec};
 use hybridws::coordinator::data::DataRegistry;
@@ -73,6 +73,64 @@ fn prop_partitioned_groups_cover_all_records() {
             total += b.poll("g", "t", m, usize::MAX).unwrap().len();
         }
         ensure(total == records, "partitioned members must cover every record")
+    });
+}
+
+// ---- placement properties ---------------------------------------------------
+
+#[test]
+fn prop_rendezvous_placement_is_stable_and_minimal() {
+    // The rendezvous placement function must (1) give every participant
+    // the same owner regardless of seed-list order or epoch, and (2) when
+    // one of N members leaves, move only the departed member's partitions:
+    // survivors keep everything they owned (≈1/N of the keys move).
+    check_with("rendezvous stability + minimality", 40, |r: &mut Rng| {
+        (r.range(2, 9), r.range(1, 65), r.next_u64()) // members, partitions, salt
+    }, |&(members, parts, salt)| {
+        if members < 2 || parts == 0 {
+            return Ok(()); // shrunk-away case: nothing to compare
+        }
+        let addrs: Vec<String> = (0..members).map(|i| format!("10.0.0.{i}:7{i:03}")).collect();
+        let spec = ClusterSpec::new(addrs.clone());
+
+        // Same placement no matter how the seed list was ordered…
+        let mut reversed = addrs.clone();
+        reversed.reverse();
+        let spec_rev = ClusterSpec::new(reversed);
+        for p in 0..parts {
+            ensure(spec.owner("t", p) == spec_rev.owner("t", p), "owner depends on seed order")?;
+        }
+        // …and the epoch never affects placement (only change detection).
+        let mut bumped = spec.clone();
+        bumped.epoch = spec.epoch + salt % 1000 + 1;
+        for p in 0..parts {
+            ensure(spec.owner("t", p) == bumped.owner("t", p), "owner depends on epoch")?;
+        }
+
+        // Remove one member: survivors keep every partition they owned, so
+        // exactly the departed member's share moves.
+        let gone = addrs[salt as usize % members].clone();
+        let survivors: Vec<String> = addrs.iter().filter(|a| **a != gone).cloned().collect();
+        let shrunk = ClusterSpec::new(survivors);
+        let mut moved = 0usize;
+        for p in 0..parts {
+            let before = spec.owner("t", p);
+            if before == gone {
+                moved += 1;
+            } else {
+                ensure(before == shrunk.owner("t", p), "a surviving member's partition moved")?;
+            }
+        }
+        ensure(
+            moved == spec.owned_by(&gone, "t", parts).len(),
+            "moved set must be exactly the departed member's share",
+        )?;
+        // Rendezvous spreads shares evenly enough that the moved fraction
+        // stays near 1/N once there is room for the law of large numbers.
+        ensure(
+            members < 4 || parts < 32 || moved <= 3 * parts / members,
+            "rebalance moved far more than the departed member's share",
+        )
     });
 }
 

@@ -128,6 +128,94 @@ fn prop_torn_tail_truncated_at_every_byte_boundary() {
 }
 
 #[test]
+fn prop_offsets_journal_torn_tail_truncated_at_every_byte_boundary() {
+    use hybridws::broker::storage::{OffsetEntry, OffsetStore};
+
+    // The offsets.log counterpart of the segment property above: truncate
+    // (and corrupt) the cursor journal at every byte boundary of its final
+    // frame; replay must recover exactly the live set of the longest
+    // intact prefix — groups resume from the last intact committed offset.
+    check_with(
+        "offsets.log torn tail is prefix-exact",
+        8,
+        |r: &mut Rng| {
+            let n = r.range(2, 8);
+            (0..n)
+                .map(|_| (r.below(3), r.below(4), r.below(1000)))
+                .collect::<Vec<(u64, u64, u64)>>()
+        },
+        |cursors| {
+            if cursors.len() < 2 {
+                return Ok(()); // shrunk below the interesting shape
+            }
+            let entry = |&(g, p, pos): &(u64, u64, u64)| OffsetEntry {
+                group: format!("g{g}"),
+                mode: AssignmentMode::Shared,
+                partition: p,
+                position: pos,
+                committed: pos / 2, // the commit trails the claim
+            };
+            // Write the journal, noting the file length after every entry
+            // (the frame boundaries) — the journal is far below the
+            // compaction floor, so frames land on disk in note order.
+            let tmp = TmpDir::new("offsets");
+            let path = tmp.path().join("t").join("offsets.log");
+            let (mut store, empty) = OffsetStore::open(&path).unwrap();
+            ensure(empty.is_empty(), "fresh journal must be empty")?;
+            let mut boundaries = Vec::new();
+            for c in cursors {
+                store.note(&entry(c));
+                boundaries.push(store.len_bytes());
+            }
+            ensure(!store.failed(), "journal append failed")?;
+            drop(store);
+            let data = std::fs::read(&path).unwrap();
+            ensure(data.len() as u64 == *boundaries.last().unwrap(), "length accounting broken")?;
+            // Live set after replaying cursors[..k]: last per (group, partition).
+            let live_after = |k: usize| {
+                let mut live = std::collections::BTreeMap::new();
+                for c in &cursors[..k] {
+                    let e = entry(c);
+                    live.insert((e.group.clone(), e.partition), e);
+                }
+                live.into_values().collect::<Vec<OffsetEntry>>()
+            };
+
+            let n = cursors.len();
+            let prefix = boundaries[n - 2] as usize;
+
+            // (a) Truncate at every byte boundary of the final frame.
+            // `open` compacts the file in place, so each cut starts from a
+            // fresh copy of the original image.
+            for cut in prefix..=data.len() {
+                std::fs::write(&path, &data[..cut]).unwrap();
+                let (_, recovered) = OffsetStore::open(&path).unwrap();
+                let expect = live_after(if cut == data.len() { n } else { n - 1 });
+                ensure(
+                    recovered == expect,
+                    &format!("cut {cut}: recovered {recovered:?}, want {expect:?}"),
+                )?;
+            }
+
+            // (b) Corrupt any single byte of the final frame (length, CRC
+            // or body): the CRC gate must discard the frame, keeping the
+            // intact prefix.
+            for hit in prefix..data.len() {
+                let mut bad = data.clone();
+                bad[hit] ^= 0xFF;
+                std::fs::write(&path, &bad).unwrap();
+                let (_, recovered) = OffsetStore::open(&path).unwrap();
+                ensure(
+                    recovered == live_after(n - 1),
+                    &format!("corrupt byte {hit}: torn final frame must be discarded"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn restart_resumes_consumer_group_from_committed_offset() {
     // The embedded broker restarts (same data dir); the consumer group
     // resumes from its committed offset — committed records are not

@@ -4,7 +4,7 @@
 //! (Arc-identity), and legacy lock-step interop.
 
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -13,6 +13,7 @@ use hybridws::broker::{AssignmentMode, BrokerClient, BrokerCore, BrokerServer};
 use hybridws::util::bytes::ByteWriter;
 use hybridws::util::mux::{hello_frame, parse_hello, read_mux_frame, write_mux_frame, MuxConn};
 use hybridws::util::rng::Rng;
+use hybridws::util::timeutil::wait_until;
 use hybridws::util::wire::{read_frame, recv_msg, send_msg, write_frame, Blob, Wire};
 
 fn start_server() -> (BrokerServer, String) {
@@ -208,14 +209,22 @@ fn out_of_order_completion_under_parked_poll() {
     client.create_topic("t", 1).unwrap();
     client.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
     let consumer = Arc::clone(&client);
+    let polling = Arc::new(AtomicBool::new(false));
+    let poll_flag = Arc::clone(&polling);
     let parked = std::thread::spawn(move || {
         let t0 = Instant::now();
+        poll_flag.store(true, Ordering::SeqCst);
         let mf = consumer
             .fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 10_000)
             .unwrap();
         (mf.record_count(), t0.elapsed())
     });
-    std::thread::sleep(Duration::from_millis(40));
+    assert!(
+        wait_until(|| polling.load(Ordering::SeqCst), Duration::from_secs(2)),
+        "poll thread never started"
+    );
+    // A beat for the wait frame to reach the broker and actually park.
+    std::thread::sleep(Duration::from_millis(30));
     let t0 = Instant::now();
     for _ in 0..10 {
         client.ping().unwrap();
@@ -244,12 +253,20 @@ fn dstream_poll_and_announce_share_one_mux() {
         .register(None, StreamType::File, 1, Some("/d".into()), ConsumerMode::ExactlyOnce)
         .unwrap();
     let poller = Arc::clone(&client);
+    let polling = Arc::new(AtomicBool::new(false));
+    let poll_flag = Arc::clone(&polling);
     let parked = std::thread::spawn(move || {
         let t0 = Instant::now();
+        poll_flag.store(true, Ordering::SeqCst);
         let files = poller.poll_files(id, vec![], usize::MAX, 5_000).unwrap();
         (files, t0.elapsed())
     });
-    std::thread::sleep(Duration::from_millis(40));
+    assert!(
+        wait_until(|| polling.load(Ordering::SeqCst), Duration::from_secs(2)),
+        "poll thread never started"
+    );
+    // A beat for the poll frame to reach the server and actually park.
+    std::thread::sleep(Duration::from_millis(30));
     // Same client, same socket: the announce must not queue behind the park.
     client.announce_file(id, "/d/fresh").unwrap();
     let (files, waited) = parked.join().unwrap();
