@@ -1,0 +1,114 @@
+//! HA-plane bench (PR 7): publish latency under `acks=leader` vs
+//! `acks=quorum` on a replicated 3-member cluster, and the time a client
+//! needs to promote a follower after its partition leader is killed.
+//! Emits `BENCH_ha.json` (uploaded as a CI artifact so the failover perf
+//! trajectory accumulates per commit); run with `--smoke` for CI sizing.
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{
+    BrokerCore, BrokerServer, ClusterClient, ClusterSpec, ClusterView, ACKS_LEADER, ACKS_QUORUM,
+};
+use hybridws::util::bench::{banner, Table};
+use hybridws::util::timeutil::percentile;
+
+/// Start `n` in-process cluster members with `replication` replicas per
+/// partition on ephemeral ports (real TCP, real owner-routing + shipping).
+fn start_replicated(n: usize, replication: usize) -> (Vec<BrokerServer>, Vec<String>) {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind cluster member"))
+        .collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let spec = ClusterSpec::new(addrs.clone()).with_replication(replication);
+    let servers = listeners
+        .into_iter()
+        .zip(&addrs)
+        .map(|(l, a)| {
+            BrokerServer::start_cluster(
+                BrokerCore::new(),
+                l,
+                ClusterView::new(spec.clone(), a.clone()),
+            )
+            .expect("start cluster member")
+        })
+        .collect();
+    (servers, addrs)
+}
+
+/// Per-publish latency of single-record batches at the given acks level.
+/// `acks=leader` acks on the leader append (shipping stays asynchronous);
+/// `acks=quorum` holds each ack until every in-sync follower confirmed.
+fn publish_latencies(cc: &ClusterClient, topic: &str, acks: u8, rounds: usize) -> Vec<f64> {
+    cc.set_acks(acks);
+    let mut lat_us = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let rec = ProducerRecord::new(vec![i as u8; 100]);
+        let t0 = Instant::now();
+        cc.publish_batch(topic, vec![rec]).unwrap();
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lat_us
+}
+
+/// Kill one member of a replication-2 cluster and measure how long a
+/// quorum publisher needs to get a full-coverage batch acked again — the
+/// batch spans every partition, so it cannot complete until each dead-led
+/// partition detected the loss, probed the survivors and promoted the
+/// most-caught-up follower.
+fn time_to_promote() -> f64 {
+    let (mut servers, addrs) = start_replicated(3, 2);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.set_acks(ACKS_QUORUM);
+    cc.ensure_topic("ha", 16).unwrap();
+    let warm: Vec<ProducerRecord> =
+        (0..64).map(|i| ProducerRecord::new(vec![i as u8; 32])).collect();
+    cc.publish_batch("ha", warm).unwrap();
+
+    let victim = servers.swap_remove(0);
+    victim.shutdown();
+    let t0 = Instant::now();
+    let probe: Vec<ProducerRecord> =
+        (0..64).map(|i| ProducerRecord::new(vec![i as u8; 32])).collect();
+    cc.publish_batch("ha", probe).expect("post-kill publish must fail over");
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    for s in servers {
+        s.shutdown();
+    }
+    ms
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    banner("ha", "replicated cluster: acks levels + leader failover (TCP, replication 2)");
+    let rounds = if smoke { 100 } else { 1_000 };
+
+    let (servers, addrs) = start_replicated(3, 2);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("acks", 16).unwrap();
+    let leader_lat = publish_latencies(&cc, "acks", ACKS_LEADER, rounds);
+    let quorum_lat = publish_latencies(&cc, "acks", ACKS_QUORUM, rounds);
+    for s in servers {
+        s.shutdown();
+    }
+    let (l50, l99) = (percentile(&leader_lat, 50.0), percentile(&leader_lat, 99.0));
+    let (q50, q99) = (percentile(&quorum_lat, 50.0), percentile(&quorum_lat, 99.0));
+
+    let promote_ms = time_to_promote();
+
+    let t = Table::new(&["metric", "acks=leader", "acks=quorum"]);
+    t.row(&["publish_p50_us".into(), format!("{l50:.1}"), format!("{q50:.1}")]);
+    t.row(&["publish_p99_us".into(), format!("{l99:.1}"), format!("{q99:.1}")]);
+    println!("\ntime to promote after leader kill: {promote_ms:.1} ms");
+
+    let json = format!(
+        "{{\"bench\":\"ha\",\"smoke\":{smoke},\"rounds\":{rounds},\
+         \"leader_publish_p50_us\":{l50:.2},\"leader_publish_p99_us\":{l99:.2},\
+         \"quorum_publish_p50_us\":{q50:.2},\"quorum_publish_p99_us\":{q99:.2},\
+         \"promote_ms\":{promote_ms:.2}}}"
+    );
+    std::fs::write("BENCH_ha.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_ha.json: {json}\n");
+}

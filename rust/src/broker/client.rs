@@ -35,6 +35,7 @@ use super::embedded::{BrokerCore, BrokerError, MultiFetch, Result, TopicStats};
 use super::group::AssignmentMode;
 use super::protocol::{error_from_code, ClusterMetaWire, Request, Response};
 use super::record::{ProducerRecord, Record};
+use super::storage::OffsetEntry;
 use crate::util::mux::{MuxConn, MuxSlot, PendingReply};
 
 enum Transport {
@@ -117,6 +118,18 @@ impl BrokerClient {
     fn invalidate(&self, failed: &Arc<MuxConn>) {
         if let Transport::Remote(slot) = &self.transport {
             slot.invalidate(failed);
+        }
+    }
+
+    /// One attempt, any transport: embedded dispatch, or a single remote
+    /// round trip with **no** reconnect window. The replication and
+    /// failover planes use this — a replicator probing a dead follower
+    /// (or a client probing a dead leader) must learn about the death in
+    /// one connect timeout, not after the full 10 s reconnect window.
+    pub(crate) fn rpc_once(&self, req: Request) -> Result<Response> {
+        match &self.transport {
+            Transport::Embedded(core) => Ok(super::server::dispatch(core, req)),
+            Transport::Remote(_) => self.try_once(&req),
         }
     }
 
@@ -516,19 +529,75 @@ impl BrokerClient {
 
     /// Publish a batch to one **explicit** partition (the cluster data
     /// plane — see [`super::cluster::ClusterClient`]); returns the
-    /// assigned offsets in order. A cluster member that does not own the
-    /// partition answers [`BrokerError::NotOwner`].
+    /// assigned offsets in order. A cluster member that does not lead the
+    /// partition answers [`BrokerError::NotOwner`]. `acks` is
+    /// [`super::protocol::ACKS_LEADER`] or
+    /// [`super::protocol::ACKS_QUORUM`]: quorum
+    /// publishes return only after the leader's in-sync followers have
+    /// confirmed the records (standalone brokers ack immediately either
+    /// way — there is nobody to wait for).
     pub fn publish_to(
         &self,
         topic: &str,
         partition: usize,
         recs: Vec<ProducerRecord>,
+        acks: u8,
     ) -> Result<Vec<u64>> {
         if let Transport::Embedded(core) = &self.transport {
             return core.publish_to(topic, partition, recs);
         }
-        match self.rpc(Request::PublishTo { topic: topic.into(), partition, recs })? {
+        match self.rpc(Request::PublishTo { topic: topic.into(), partition, recs, acks })? {
             Response::PubBatchAck { acks } => Ok(acks.into_iter().map(|(_, o)| o).collect()),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    // ---- replication plane (PR 7) ---------------------------------------
+
+    /// Ship one replication frame to a follower: `recs` start at `base`
+    /// under leadership `epoch`. Returns the follower's high watermark
+    /// after the apply (`< base + recs.len()` = backfill request). Single
+    /// attempt — the replicator owns liveness policy.
+    pub(crate) fn replicate(
+        &self,
+        topic: &str,
+        partitions: usize,
+        partition: usize,
+        epoch: u64,
+        base: u64,
+        recs: Vec<Record>,
+    ) -> Result<u64> {
+        let req = Request::Replicate {
+            topic: topic.into(),
+            partitions,
+            partition,
+            epoch,
+            base,
+            recs,
+        };
+        match self.rpc_once(req)? {
+            Response::RepAck { hw } => Ok(hw),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Ship consumer-group cursors to a follower (single attempt).
+    pub(crate) fn sync_offsets(&self, topic: &str, entries: Vec<OffsetEntry>) -> Result<()> {
+        match self.rpc_once(Request::OffsetSync { topic: topic.into(), entries })? {
+            Response::Ok => Ok(()),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Ask this broker to take leadership of `(topic, partition)` (client
+    /// failover). Returns the new fencing epoch. Single attempt — the
+    /// caller is probing candidates and must fail fast.
+    pub fn promote(&self, topic: &str, partition: usize, partitions: usize) -> Result<u64> {
+        match self.rpc_once(Request::Promote { topic: topic.into(), partitions, partition })? {
+            Response::Epoch(e) => Ok(e),
             Response::Err { code, msg } => Err(error_from_code(code, msg)),
             other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
         }
@@ -570,13 +639,14 @@ impl BrokerClient {
         topic: &str,
         partition: usize,
         recs: Vec<ProducerRecord>,
+        acks: u8,
     ) -> PendingPublish {
         let inner = match &self.transport {
             Transport::Embedded(core) => {
                 PendingKind::Ready(core.publish_to(topic, partition, recs))
             }
             Transport::Remote(_) => {
-                let req = Request::PublishTo { topic: topic.into(), partition, recs };
+                let req = Request::PublishTo { topic: topic.into(), partition, recs, acks };
                 match self.conn() {
                     Ok(conn) => match conn.submit(&req) {
                         Ok(reply) => PendingKind::Wire(reply),
@@ -777,6 +847,7 @@ impl super::StreamBroker for BrokerClient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::protocol::ACKS_LEADER;
     use crate::broker::server::BrokerServer;
 
     fn exercise(client: &BrokerClient) {
@@ -894,8 +965,8 @@ mod tests {
         let client = BrokerClient::connect(&server.addr.to_string()).unwrap();
         client.create_topic("t", 2).unwrap();
         // Two partition-targeted publishes in flight at once; both ack.
-        let a = client.publish_to_submit("t", 0, vec![ProducerRecord::new(vec![1])]);
-        let b = client.publish_to_submit("t", 1, vec![ProducerRecord::new(vec![2])]);
+        let a = client.publish_to_submit("t", 0, vec![ProducerRecord::new(vec![1])], ACKS_LEADER);
+        let b = client.publish_to_submit("t", 1, vec![ProducerRecord::new(vec![2])], ACKS_LEADER);
         assert_eq!(b.wait().unwrap(), vec![0]);
         assert_eq!(a.wait().unwrap(), vec![0]);
         server.shutdown();

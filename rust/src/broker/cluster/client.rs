@@ -32,7 +32,7 @@
 //! hard global cap re-slice locally (the ODS layer's caps are advisory).
 
 use std::collections::{BTreeMap, HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -41,6 +41,7 @@ use crate::broker::embedded::{
     BrokerError, MultiFetch, Result, TopicStats, MAX_WAIT_HORIZON_MS,
 };
 use crate::broker::group::AssignmentMode;
+use crate::broker::protocol::{error_from_code, Request, Response, ACKS_LEADER};
 use crate::broker::record::{ProducerRecord, Record};
 use crate::broker::topic::key_partition;
 use crate::util::fault;
@@ -157,6 +158,14 @@ struct Shared {
     mux: FetchMux,
     /// Round-robin cursor for key-less publishes.
     rr: AtomicU64,
+    /// Failover routing (PR 7): `(topic, partition)` → the follower this
+    /// client promoted (or was redirected to) after the static owner died.
+    /// Consulted before the spec on every leader resolution.
+    overrides: Mutex<HashMap<(String, usize), String>>,
+    /// Acknowledgement level stamped on partition-targeted publishes
+    /// ([`crate::broker::protocol::ACKS_LEADER`] /
+    /// [`crate::broker::protocol::ACKS_QUORUM`]).
+    acks: AtomicU8,
 }
 
 impl Shared {
@@ -185,6 +194,56 @@ impl Shared {
 
     fn owner(&self, topic: &str, partition: usize) -> String {
         self.spec.read().unwrap().owner(topic, partition).to_string()
+    }
+
+    /// The cluster's replication factor (failover only engages above 1).
+    fn replication(&self) -> usize {
+        self.spec.read().unwrap().replication()
+    }
+
+    /// Current leader for `(topic, partition)`: a failover override wins,
+    /// otherwise the static placement owner.
+    fn leader_for(&self, topic: &str, partition: usize) -> String {
+        if let Some(a) = self.overrides.lock().unwrap().get(&(topic.to_string(), partition)) {
+            return a.clone();
+        }
+        self.owner(topic, partition)
+    }
+
+    fn set_override(&self, topic: &str, partition: usize, addr: &str) {
+        self.overrides
+            .lock()
+            .unwrap()
+            .insert((topic.to_string(), partition), addr.to_string());
+    }
+
+    /// Partitions of `topic` grouped by their *current* leader (overrides
+    /// applied) — the failover-aware counterpart of `spec.owners`.
+    fn leader_groups(&self, topic: &str, parts: usize) -> Vec<(String, Vec<usize>)> {
+        let mut out: Vec<(String, Vec<usize>)> = Vec::new();
+        for p in 0..parts {
+            let addr = self.leader_for(topic, p);
+            match out.iter_mut().find(|(a, _)| *a == addr) {
+                Some((_, ps)) => ps.push(p),
+                None => out.push((addr, vec![p])),
+            }
+        }
+        out
+    }
+
+    /// Replica brokers that may hold data for `ps` besides `dead` — the
+    /// candidates a read consults when a leader is unreachable.
+    fn read_candidates(&self, topic: &str, ps: &[usize], dead: &str) -> Vec<String> {
+        let spec = self.spec.read().unwrap();
+        let mut out: Vec<String> = Vec::new();
+        for &p in ps {
+            for r in spec.replicas(topic, p) {
+                if r != dead && !out.iter().any(|o| o == r) {
+                    out.push(r.to_string());
+                }
+            }
+        }
+        out
     }
 
     /// One operation against one broker, retried with exponential backoff
@@ -278,14 +337,17 @@ impl Shared {
     /// Fold one shard's cursor positions into the merged view — the shard
     /// owner is authoritative for exactly its partitions.
     fn note_positions(&self, group: &str, topic: &str, addr: &str, mf: &MultiFetch) {
-        let spec = self.spec.read().unwrap();
+        // Leader-aware (PR 7): after a failover the promoted follower is
+        // authoritative for the partitions it took over.
+        let leaders: Vec<String> =
+            (0..mf.positions.len()).map(|p| self.leader_for(topic, p)).collect();
         let mut cache = self.positions.lock().unwrap();
         let entry = cache.entry((group.to_string(), topic.to_string())).or_default();
         if entry.len() < mf.positions.len() {
             entry.resize(mf.positions.len(), (0, 0));
         }
         for (p, &pos) in mf.positions.iter().enumerate() {
-            if spec.owner(topic, p) == addr {
+            if leaders[p] == addr {
                 entry[p] = pos;
             }
         }
@@ -337,6 +399,8 @@ impl ClusterClient {
             positions: Mutex::new(HashMap::new()),
             mux: FetchMux::default(),
             rr: AtomicU64::new(0),
+            overrides: Mutex::new(HashMap::new()),
+            acks: AtomicU8::new(ACKS_LEADER),
         });
         let members = shared.members();
         let mut reachable: Option<String> = None;
@@ -367,6 +431,14 @@ impl ClusterClient {
     /// Snapshot of the active cluster spec.
     pub fn spec(&self) -> ClusterSpec {
         self.shared.spec.read().unwrap().clone()
+    }
+
+    /// Set the acknowledgement level for subsequent publishes:
+    /// [`crate::broker::protocol::ACKS_LEADER`] (default — leader append
+    /// acks) or [`crate::broker::protocol::ACKS_QUORUM`] (leader holds the
+    /// ack until every in-sync follower confirms the batch).
+    pub fn set_acks(&self, acks: u8) {
+        self.shared.acks.store(acks, Ordering::Relaxed);
     }
 
     // ---- routing helpers -------------------------------------------------
@@ -401,40 +473,141 @@ impl ClusterClient {
         }
     }
 
-    /// Ship one partition's batch to its owner, rerouting on `NotOwner`
-    /// (stale spec → refresh + follow the redirect) and re-ensuring the
-    /// topic on members that lost it in a restart.
+    /// Ship one partition's batch to its current leader, rerouting on
+    /// `NotOwner` (stale spec or fenced leader → refresh + follow the
+    /// redirect), re-ensuring the topic on members that lost it in a
+    /// restart, and — on replicated clusters — **failing over** to the
+    /// most-caught-up follower when the leader is unreachable.
     fn publish_partition(
         &self,
         topic: &str,
         partition: usize,
         recs: Vec<ProducerRecord>,
     ) -> Result<Vec<u64>> {
-        let mut target = self.shared.owner(topic, partition);
+        let acks = self.shared.acks.load(Ordering::Relaxed);
+        let replicated = self.shared.replication() > 1;
+        let mut target = self.shared.leader_for(topic, partition);
         let mut reroutes = 0;
         loop {
-            let res = self
-                .shared
-                .with_broker(&target, |c| c.publish_to(topic, partition, recs.clone()));
+            // Replicated clusters take a single transport attempt per
+            // target: promotion of a live follower must beat the
+            // ride-out-a-restart retry window, which stays the (only)
+            // healing strategy when there is no replica to promote.
+            let res = if replicated {
+                self.shared.client(&target).and_then(|c| {
+                    match c.rpc_once(Request::PublishTo {
+                        topic: topic.to_string(),
+                        partition,
+                        recs: recs.clone(),
+                        acks,
+                    })? {
+                        Response::PubBatchAck { acks } => {
+                            Ok(acks.into_iter().map(|(_, o)| o).collect())
+                        }
+                        Response::Err { code, msg } => Err(error_from_code(code, msg)),
+                        other => Err(BrokerError::Transport(format!(
+                            "unexpected publish reply {other:?}"
+                        ))),
+                    }
+                })
+            } else {
+                self.shared
+                    .with_broker(&target, |c| c.publish_to(topic, partition, recs.clone(), acks))
+            };
             match res {
                 Ok(offsets) => return Ok(offsets),
-                Err(BrokerError::NotOwner { owner }) if reroutes < 3 => {
+                Err(BrokerError::NotOwner { owner }) if reroutes < 4 => {
                     reroutes += 1;
                     self.shared.refresh_meta(&target);
                     target = if owner.is_empty() {
-                        self.shared.owner(topic, partition)
+                        self.shared.leader_for(topic, partition)
                     } else {
+                        // A fenced ex-leader redirects to the broker that
+                        // deposed it — remember the promotion.
+                        if replicated {
+                            self.shared.set_override(topic, partition, &owner);
+                        }
                         owner
                     };
                 }
-                Err(BrokerError::UnknownTopic(t)) if reroutes < 3 => {
+                Err(BrokerError::UnknownTopic(t)) if reroutes < 4 => {
                     reroutes += 1;
                     if !self.shared.reensure_on(&target, topic) {
                         return Err(BrokerError::UnknownTopic(t));
                     }
                 }
+                Err(BrokerError::Transport(e)) if replicated && reroutes < 4 => {
+                    reroutes += 1;
+                    self.shared.invalidate(&target);
+                    match self.fail_over(topic, partition, &target) {
+                        Some(next) => target = next,
+                        None => return Err(BrokerError::Transport(e)),
+                    }
+                }
                 Err(e) => return Err(e),
             }
+        }
+    }
+
+    /// Leader failover (PR 7): probe the partition's surviving replicas,
+    /// promote the one with the highest high-watermark (most in-sync) and
+    /// remember it as the partition's leader. Returns the promoted address,
+    /// or `None` when no replica answered.
+    fn fail_over(&self, topic: &str, partition: usize, dead: &str) -> Option<String> {
+        let candidates: Vec<String> = {
+            let spec = self.shared.spec.read().unwrap();
+            spec.replicas(topic, partition).into_iter().map(|s| s.to_string()).collect()
+        };
+        let mut best: Option<(String, u64)> = None;
+        for addr in candidates.iter().filter(|a| a.as_str() != dead) {
+            match self.probe_hw(addr, topic, partition) {
+                Ok(hw) => {
+                    let better = match &best {
+                        Some((_, b)) => hw > *b,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((addr.clone(), hw));
+                    }
+                }
+                // Live broker that lost the topic (memory-mode restart):
+                // promotable, but only if nothing better answers.
+                Err(BrokerError::UnknownTopic(_)) => {
+                    if best.is_none() {
+                        best = Some((addr.clone(), 0));
+                    }
+                }
+                Err(_) => self.shared.invalidate(addr),
+            }
+        }
+        let (addr, hw) = best?;
+        let parts = self.partitions_of(topic).ok()?;
+        let c = self.shared.client(&addr).ok()?;
+        match c.promote(topic, partition, parts) {
+            Ok(epoch) => {
+                log::warn!(
+                    "failover: promoted {addr} (hw {hw}) to lead {topic}[{partition}] \
+                     at epoch {epoch} after losing {dead}"
+                );
+                self.shared.set_override(topic, partition, &addr);
+                Some(addr)
+            }
+            Err(e) => {
+                log::warn!("failover: promote of {addr} for {topic}[{partition}] failed: {e}");
+                self.shared.invalidate(&addr);
+                None
+            }
+        }
+    }
+
+    /// Single-attempt liveness + catch-up probe: `addr`'s high watermark
+    /// for `(topic, partition)`.
+    fn probe_hw(&self, addr: &str, topic: &str, partition: usize) -> Result<u64> {
+        let c = self.shared.client(addr)?;
+        match c.rpc_once(Request::Offsets { topic: topic.to_string() })? {
+            Response::OffsetList(os) => Ok(os.get(partition).map(|&(_, hw)| hw).unwrap_or(0)),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected offsets reply {other:?}"))),
         }
     }
 
@@ -508,8 +681,23 @@ impl ClusterClient {
     /// Ensure on every member (cluster topics exist everywhere; data only
     /// lands on owned partitions).
     pub fn ensure_topic(&self, name: &str, partitions: usize) -> Result<()> {
+        let mut reached = false;
+        let mut last = BrokerError::Transport("empty cluster".into());
         for addr in self.shared.members() {
-            self.shared.with_broker(&addr, |c| c.ensure_topic(name, partitions))?;
+            match self.shared.with_broker(&addr, |c| c.ensure_topic(name, partitions)) {
+                Ok(()) => reached = true,
+                // A dead member of a replicated cluster picks the topic up
+                // later through the re-ensure self-heal.
+                Err(BrokerError::Transport(e)) if self.shared.replication() > 1 => {
+                    self.shared.invalidate(&addr);
+                    log::warn!("ensure_topic skipping unreachable {addr}: {e}");
+                    last = BrokerError::Transport(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !reached {
+            return Err(last);
         }
         self.shared.topics.lock().unwrap().insert(name.to_string(), partitions);
         Ok(())
@@ -636,13 +824,14 @@ impl ClusterClient {
                 .iter()
                 .map(|&i| slots[i].take().expect("record consumed twice"))
                 .collect();
-            let target = self.shared.owner(topic, p);
+            let target = self.shared.leader_for(topic, p);
+            let acks = self.shared.acks.load(Ordering::Relaxed);
             // The batch is kept (record clones are Arc-cheap) so a failed
             // fast path can be replayed through the healing slow path.
             let pending = self
                 .shared
                 .client(&target)
-                .map(|c| c.publish_to_submit(topic, p, batch.clone()));
+                .map(|c| c.publish_to_submit(topic, p, batch.clone(), acks));
             inflight.push(InflightBucket { partition: p, indices: bucket.clone(), batch, pending });
         }
         for ib in inflight {
@@ -677,11 +866,27 @@ impl ClusterClient {
             .unwrap()
             .insert((group.into(), topic.into(), member.into()), mode);
         let mut generation = 0;
+        let mut reached = false;
         for addr in self.shared.members() {
-            let g = self.call_healed(&addr, group, topic, |c| {
+            match self.call_healed(&addr, group, topic, |c| {
                 c.join_group(group, topic, member, mode)
-            })?;
-            generation = generation.max(g);
+            }) {
+                Ok(g) => {
+                    reached = true;
+                    generation = generation.max(g);
+                }
+                // Replicated clusters tolerate a dead member: its
+                // partitions' survivors carry the group, and the
+                // registration replays when it rejoins.
+                Err(BrokerError::Transport(e)) if self.shared.replication() > 1 => {
+                    self.shared.invalidate(&addr);
+                    log::warn!("join_group skipping unreachable {addr}: {e}");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !reached {
+            return Err(BrokerError::Transport("no cluster member reachable".into()));
         }
         Ok(generation)
     }
@@ -697,6 +902,10 @@ impl ClusterClient {
             match self.shared.with_broker(&addr, |c| c.leave_group(group, topic, member)) {
                 Ok(b) => left |= b,
                 Err(BrokerError::UnknownGroup(_)) | Err(BrokerError::UnknownMember { .. }) => {}
+                Err(BrokerError::Transport(e)) if self.shared.replication() > 1 => {
+                    self.shared.invalidate(&addr);
+                    log::warn!("leave_group skipping unreachable {addr}: {e}");
+                }
                 Err(e) => return Err(e),
             }
         }
@@ -818,8 +1027,11 @@ impl ClusterClient {
     }
 
     /// Non-blocking sweep (`wait_ms == 0`): drain any prefetched mux
-    /// results, else one fetch attempt per owning broker with the
-    /// remaining budgets; unreachable shards are skipped, not fatal.
+    /// results, else one fetch attempt per leading broker with the
+    /// remaining budgets. An unreachable leader is skipped, not fatal —
+    /// and on replicated clusters its partitions' followers are consulted
+    /// in its place, so a dead leader never makes replicated partitions
+    /// invisible to wait-0 polls.
     fn sweep(
         &self,
         key: &MuxKey,
@@ -833,13 +1045,10 @@ impl ClusterClient {
             if let Some(e) = err {
                 return Err(e);
             }
-            let owners: Vec<String> = {
-                let spec = self.shared.spec.read().unwrap();
-                spec.owners(topic, parts).into_iter().map(|(a, _)| a).collect()
-            };
+            let leaders = self.shared.leader_groups(topic, parts);
             let mut got = 0usize;
             let mut got_bytes = 0usize;
-            for addr in owners {
+            for (addr, ps) in leaders {
                 if got >= max || got_bytes >= max_bytes {
                     break;
                 }
@@ -853,10 +1062,32 @@ impl ClusterClient {
                         results.push((addr, mf));
                     }
                     Err(BrokerError::Transport(e)) => {
-                        // Skip this shard for this sweep; the records stay
-                        // on the broker and the next poll retries.
                         self.shared.invalidate(&addr);
-                        log::warn!("cluster sweep skipping {addr}: {e}");
+                        let mut healed = false;
+                        if self.shared.replication() > 1 {
+                            // Consult the dead leader's followers: they
+                            // carry replicated copies of its partitions, so
+                            // the sweep still surfaces their records.
+                            for alt in self.shared.read_candidates(topic, &ps, &addr) {
+                                match self.call_once(&alt, group, topic, |c| {
+                                    c.fetch_many(group, topic, member, rmax, rbytes)
+                                }) {
+                                    Ok(mf) => {
+                                        got += mf.record_count();
+                                        got_bytes = got_bytes.saturating_add(mf.byte_count());
+                                        results.push((alt, mf));
+                                        healed = true;
+                                        break;
+                                    }
+                                    Err(_) => self.shared.invalidate(&alt),
+                                }
+                            }
+                        }
+                        if !healed {
+                            // Skip this shard for this sweep; the records
+                            // stay on the broker and the next poll retries.
+                            log::warn!("cluster sweep skipping {addr}: {e}");
+                        }
                     }
                     Err(e) => return Err(e),
                 }
@@ -889,10 +1120,8 @@ impl ClusterClient {
         max_bytes: usize,
         remaining: Duration,
     ) {
-        let owners: Vec<String> = {
-            let spec = self.shared.spec.read().unwrap();
-            spec.owners(&key.1, parts).into_iter().map(|(a, _)| a).collect()
-        };
+        let owners: Vec<String> =
+            self.shared.leader_groups(&key.1, parts).into_iter().map(|(a, _)| a).collect();
         for addr in owners {
             if !self.shared.mux.mark_inflight(key, &addr) {
                 continue;
@@ -908,55 +1137,84 @@ impl ClusterClient {
 
     pub fn commit(&self, group: &str, topic: &str, commits: &[(usize, u64)]) -> Result<()> {
         let mut per_owner: Vec<(String, Vec<(usize, u64)>)> = Vec::new();
-        {
-            let spec = self.shared.spec.read().unwrap();
-            for &(p, off) in commits {
-                let addr = spec.owner(topic, p);
-                match per_owner.iter_mut().find(|(a, _)| a.as_str() == addr) {
-                    Some((_, subset)) => subset.push((p, off)),
-                    None => per_owner.push((addr.to_string(), vec![(p, off)])),
-                }
+        for &(p, off) in commits {
+            let addr = self.shared.leader_for(topic, p);
+            match per_owner.iter_mut().find(|(a, _)| *a == addr) {
+                Some((_, subset)) => subset.push((p, off)),
+                None => per_owner.push((addr, vec![(p, off)])),
             }
         }
         for (addr, subset) in per_owner {
-            self.call_healed(&addr, group, topic, |c| c.commit(group, topic, &subset))?;
+            match self.call_healed(&addr, group, topic, |c| c.commit(group, topic, &subset)) {
+                Ok(()) => {}
+                Err(BrokerError::Transport(e)) if self.shared.replication() > 1 => {
+                    // Leader died holding these partitions' cursors: fail
+                    // over per partition and land the commit on the
+                    // promoted follower (which carries the replicated
+                    // group offsets).
+                    for (p, off) in subset {
+                        let next = self
+                            .fail_over(topic, p, &addr)
+                            .ok_or_else(|| BrokerError::Transport(e.clone()))?;
+                        self.call_healed(&next, group, topic, |c| {
+                            c.commit(group, topic, &[(p, off)])
+                        })?;
+                    }
+                }
+                Err(e) => return Err(e),
+            }
         }
         Ok(())
     }
 
     pub fn delete_records(&self, topic: &str, partition: usize, up_to: u64) -> Result<usize> {
-        let addr = self.shared.owner(topic, partition);
+        let addr = self.shared.leader_for(topic, partition);
         // delete_records is group-less; "" routes heal through re-ensure only.
         self.call_healed(&addr, "", topic, |c| c.delete_records(topic, partition, up_to))
     }
 
     pub fn offsets(&self, topic: &str) -> Result<Vec<(u64, u64)>> {
-        let parts = self.partitions_of(topic)?;
-        let owners = self.shared.spec.read().unwrap().owners(topic, parts);
-        let mut out = vec![(0u64, 0u64); parts];
-        for (addr, ps) in owners {
-            let os = self.call_healed(&addr, "", topic, |c| c.offsets(topic))?;
-            for p in ps {
-                if p < os.len() {
-                    out[p] = os[p];
-                }
-            }
-        }
-        Ok(out)
+        self.per_leader_vec(topic, "", |c, topic| c.offsets(topic))
     }
 
-    /// Merged `(position, committed)` per partition — each shard owner
-    /// answers for its partitions.
+    /// Merged `(position, committed)` per partition — each partition's
+    /// current leader answers for its partitions.
     pub fn positions(&self, group: &str, topic: &str) -> Result<Vec<(u64, u64)>> {
+        self.per_leader_vec(topic, group, |c, topic| c.positions(group, topic))
+    }
+
+    /// Gather one `(u64, u64)` per partition from each partition's current
+    /// leader, failing over to a promoted follower when a leader is
+    /// unreachable on a replicated cluster.
+    fn per_leader_vec(
+        &self,
+        topic: &str,
+        group: &str,
+        op: impl Fn(&BrokerClient, &str) -> Result<Vec<(u64, u64)>>,
+    ) -> Result<Vec<(u64, u64)>> {
         let parts = self.partitions_of(topic)?;
-        let owners = self.shared.spec.read().unwrap().owners(topic, parts);
         let mut out = vec![(0u64, 0u64); parts];
-        for (addr, ps) in owners {
-            let pos = self.call_healed(&addr, group, topic, |c| c.positions(group, topic))?;
-            for p in ps {
-                if p < pos.len() {
-                    out[p] = pos[p];
+        for (addr, ps) in self.shared.leader_groups(topic, parts) {
+            match self.call_healed(&addr, group, topic, |c| op(c, topic)) {
+                Ok(os) => {
+                    for p in ps {
+                        if p < os.len() {
+                            out[p] = os[p];
+                        }
+                    }
                 }
+                Err(BrokerError::Transport(e)) if self.shared.replication() > 1 => {
+                    for p in ps {
+                        let next = self
+                            .fail_over(topic, p, &addr)
+                            .ok_or_else(|| BrokerError::Transport(e.clone()))?;
+                        let os = self.call_healed(&next, group, topic, |c| op(c, topic))?;
+                        if p < os.len() {
+                            out[p] = os[p];
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
             }
         }
         Ok(out)
@@ -966,6 +1224,10 @@ impl ClusterClient {
         for addr in self.shared.members() {
             match self.shared.with_broker(&addr, |c| c.crash_member(group, topic, member)) {
                 Ok(()) | Err(BrokerError::UnknownGroup(_)) => {}
+                Err(BrokerError::Transport(e)) if self.shared.replication() > 1 => {
+                    self.shared.invalidate(&addr);
+                    log::warn!("crash_member skipping unreachable {addr}: {e}");
+                }
                 Err(e) => return Err(e),
             }
         }

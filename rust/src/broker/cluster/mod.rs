@@ -31,11 +31,16 @@
 
 pub mod client;
 pub mod placement;
+pub mod replicate;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use super::embedded::{BrokerCore, Result};
 
 pub use client::ClusterClient;
 pub use placement::{ClusterSpec, PLACEMENT_VERSION};
+pub use replicate::{HaState, Replicator};
 
 /// A broker's view of the cluster it belongs to: the shared spec plus its
 /// own advertised address. Handed to
@@ -51,6 +56,17 @@ pub struct ClusterView {
     /// partition-less frames — rotated across the partitions this broker
     /// owns.
     rr: AtomicU64,
+    /// Failover bookkeeping (PR 7): partitions this broker was promoted to
+    /// lead out-of-placement, and partitions it was fenced away from.
+    ha: Arc<HaState>,
+    /// The segment-shipping worker, present only when the spec's
+    /// replication factor is > 1. Set once by
+    /// [`crate::broker::BrokerServer`] at startup.
+    replicator: OnceLock<Arc<Replicator>>,
+    /// Acks level applied to *legacy* partition-less publishes, which
+    /// carry no per-frame level (partition-targeted `PublishTo` frames
+    /// ship their own). Set by the broker CLI's `--acks`.
+    default_acks: u8,
 }
 
 impl ClusterView {
@@ -60,12 +76,93 @@ impl ClusterView {
             spec.contains(&self_addr),
             "self_addr {self_addr:?} is not a cluster member"
         );
-        Self { spec, self_addr, rr: AtomicU64::new(0) }
+        Self {
+            spec,
+            self_addr,
+            rr: AtomicU64::new(0),
+            ha: HaState::new(),
+            replicator: OnceLock::new(),
+            default_acks: super::protocol::ACKS_LEADER,
+        }
     }
 
-    /// True when this broker owns `(topic, partition)`.
+    /// Builder: the acks level for legacy partition-less publishes
+    /// ([`super::protocol::ACKS_LEADER`] or
+    /// [`super::protocol::ACKS_QUORUM`]).
+    pub fn with_default_acks(mut self, acks: u8) -> Self {
+        self.default_acks = acks;
+        self
+    }
+
+    /// Acks level applied to legacy partition-less publishes.
+    pub fn default_acks(&self) -> u8 {
+        self.default_acks
+    }
+
+    /// True when this broker owns `(topic, partition)` under the *static*
+    /// placement. Failover-unaware; see [`ClusterView::leads`] for the
+    /// authoritative check.
     pub fn owns(&self, topic: &str, partition: usize) -> bool {
         self.spec.owner(topic, partition) == self.self_addr
+    }
+
+    /// True when this broker is the *current* leader for
+    /// `(topic, partition)`: a live promotion wins, a fencing deposal
+    /// loses, and otherwise leadership follows the static placement.
+    pub fn leads(&self, topic: &str, partition: usize) -> bool {
+        if self.ha.promoted_epoch(topic, partition).is_some() {
+            return true;
+        }
+        if self.ha.deposed_info(topic, partition).is_some() {
+            return false;
+        }
+        self.spec.owner(topic, partition) == self.self_addr
+    }
+
+    /// Best-known current leader address for `(topic, partition)` — the
+    /// broker that fenced us if we were deposed, else the static owner.
+    /// Used to fill `NotOwner` redirects.
+    pub fn leader_of(&self, topic: &str, partition: usize) -> String {
+        if let Some((_, by)) = self.ha.deposed_info(topic, partition) {
+            if !by.is_empty() {
+                return by;
+            }
+        }
+        self.spec.owner(topic, partition).to_string()
+    }
+
+    /// Promote this broker to leader of `(topic, partition)`: bump the
+    /// partition's fencing epoch past everything it has seen, persist it,
+    /// and record the promotion so [`ClusterView::leads`] flips true.
+    /// Returns the new epoch. Idempotent in effect — repeated calls keep
+    /// bumping the epoch, which is harmless (epochs only need to grow).
+    pub fn promote(
+        &self,
+        core: &BrokerCore,
+        topic: &str,
+        partitions: usize,
+        partition: usize,
+    ) -> Result<u64> {
+        core.ensure_topic(topic, partitions.max(1))?;
+        let epoch = core.partition_epoch(topic, partition)? + 1;
+        core.set_partition_epoch(topic, partition, epoch)?;
+        self.ha.promote(topic, partition, epoch);
+        Ok(epoch)
+    }
+
+    /// Shared failover bookkeeping, for wiring into a [`Replicator`].
+    pub fn ha(&self) -> Arc<HaState> {
+        Arc::clone(&self.ha)
+    }
+
+    /// Install the replication worker (once, at server startup).
+    pub fn set_replicator(&self, rep: Arc<Replicator>) {
+        let _ = self.replicator.set(rep);
+    }
+
+    /// The replication worker, when this member runs with replication > 1.
+    pub fn replicator(&self) -> Option<Arc<Replicator>> {
+        self.replicator.get().cloned()
     }
 
     /// The partitions of `topic` this broker owns under a

@@ -16,6 +16,14 @@
 //! member is added or removed, only the partitions whose argmax changes
 //! move — on average `1/N` of them — unlike modulo placement, which
 //! reshuffles almost everything.
+//!
+//! Since PR 7 the same weights also order the **replica list**: sorting
+//! members by descending weight gives `[leader, follower, follower, …]`,
+//! of which the top `replication` entries host the partition. The top-1
+//! is the same argmax as before, so replication is placement-compatible
+//! with single-owner clusters — and when the leader dies, the next
+//! in-line follower is the natural promotion target (removing the leader
+//! from the member list makes today's second exactly tomorrow's first).
 
 use crate::broker::protocol::ClusterMetaWire;
 
@@ -36,6 +44,9 @@ pub struct ClusterSpec {
     pub version: u32,
     /// Sorted, deduplicated broker addresses.
     members: Vec<String>,
+    /// Replicas per partition (leader + followers). `1` = the pre-PR 7
+    /// single-owner behaviour; always clamped to the member count.
+    replication: usize,
 }
 
 impl ClusterSpec {
@@ -50,7 +61,20 @@ impl ClusterSpec {
         let mut members: Vec<String> = seeds.into_iter().map(Into::into).collect();
         members.sort();
         members.dedup();
-        Self { epoch: 0, version: PLACEMENT_VERSION, members }
+        Self { epoch: 0, version: PLACEMENT_VERSION, members, replication: 1 }
+    }
+
+    /// Builder: set the replicas-per-partition count (clamped to
+    /// `[1, member count]` so a degenerate flag never produces an empty or
+    /// impossible replica list).
+    pub fn with_replication(mut self, replication: usize) -> Self {
+        self.replication = replication.clamp(1, self.members.len().max(1));
+        self
+    }
+
+    /// Replicas per partition (1 = unreplicated).
+    pub fn replication(&self) -> usize {
+        self.replication
     }
 
     /// The sorted member addresses.
@@ -87,9 +111,42 @@ impl ClusterSpec {
         best
     }
 
-    /// Address of the member owning `(topic, partition)`.
+    /// Address of the member owning `(topic, partition)` — with
+    /// replication, the partition's **leader**.
     pub fn owner(&self, topic: &str, partition: usize) -> &str {
         &self.members[self.owner_index(topic, partition)]
+    }
+
+    /// Member indices hosting `(topic, partition)`, ordered by descending
+    /// rendezvous weight (ties → lower index): `[leader, follower, …]`,
+    /// `min(replication, members)` entries, all distinct. Index 0 is
+    /// always [`ClusterSpec::owner_index`], so a replicated spec places
+    /// leaders exactly where an unreplicated one places owners.
+    pub fn replica_indices(&self, topic: &str, partition: usize) -> Vec<usize> {
+        assert!(!self.members.is_empty(), "placement over an empty cluster");
+        let mut ranked: Vec<(u64, usize)> = self
+            .members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (weight(m, topic, partition), i))
+            .collect();
+        // Descending weight; equal weights break to the lower index (the
+        // same tie rule as `owner_index`).
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        ranked.into_iter().take(self.replication).map(|(_, i)| i).collect()
+    }
+
+    /// Replica addresses of `(topic, partition)`: `[leader, follower, …]`.
+    pub fn replicas(&self, topic: &str, partition: usize) -> Vec<&str> {
+        self.replica_indices(topic, partition)
+            .into_iter()
+            .map(|i| self.members[i].as_str())
+            .collect()
+    }
+
+    /// Does `addr` host `(topic, partition)` as leader or follower?
+    pub fn is_replica(&self, addr: &str, topic: &str, partition: usize) -> bool {
+        self.replicas(topic, partition).iter().any(|r| *r == addr)
     }
 
     /// Partitions of `topic` owned by `addr` under a `partitions`-wide
@@ -119,12 +176,15 @@ impl ClusterSpec {
             epoch: self.epoch,
             version: self.version,
             members: self.members.clone(),
+            replication: self.replication as u32,
         }
     }
 
     /// Rehydrate from the wire form (re-normalising the member list).
+    /// A pre-replication peer sends `replication: 0`, which clamps to 1.
     pub fn from_wire(wire: &ClusterMetaWire) -> Self {
-        let mut spec = Self::new(wire.members.iter().cloned());
+        let mut spec = Self::new(wire.members.iter().cloned())
+            .with_replication((wire.replication as usize).max(1));
         spec.epoch = wire.epoch;
         spec.version = wire.version;
         spec
@@ -219,6 +279,58 @@ mod tests {
         assert_eq!(back, s);
         for p in 0..32 {
             assert_eq!(back.owner("x", p), s.owner("x", p));
+        }
+    }
+
+    #[test]
+    fn replica_lists_are_distinct_and_lead_with_the_owner() {
+        let s = spec(4).with_replication(3);
+        for p in 0..64 {
+            let reps = s.replica_indices("t", p);
+            assert_eq!(reps.len(), 3);
+            let uniq: std::collections::HashSet<usize> = reps.iter().copied().collect();
+            assert_eq!(uniq.len(), 3, "replicas must be distinct members");
+            assert_eq!(reps[0], s.owner_index("t", p), "top-1 must stay the argmax owner");
+        }
+    }
+
+    #[test]
+    fn replication_clamps_to_member_count() {
+        let s = spec(2).with_replication(9);
+        assert_eq!(s.replication(), 2);
+        assert_eq!(s.replicas("t", 0).len(), 2);
+        let s1 = spec(3).with_replication(0);
+        assert_eq!(s1.replication(), 1, "replication 0 is meaningless — clamp to 1");
+    }
+
+    #[test]
+    fn killed_leader_promotes_the_next_ranked_follower() {
+        // Removing the leader from the member list must make the old
+        // second-ranked replica the new leader — that is what makes the
+        // ordered list a promotion order.
+        let four = spec(4).with_replication(2);
+        for p in 0..32 {
+            let reps: Vec<String> =
+                four.replicas("t", p).into_iter().map(str::to_string).collect();
+            let survivors: Vec<String> =
+                four.members().iter().filter(|m| **m != reps[0]).cloned().collect();
+            let three = ClusterSpec::new(survivors).with_replication(2);
+            assert_eq!(
+                three.owner("t", p),
+                reps[1],
+                "partition {p}: the surviving follower must inherit leadership"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_replication() {
+        let s = spec(3).with_replication(2);
+        let back = ClusterSpec::from_wire(&s.to_wire());
+        assert_eq!(back, s);
+        assert_eq!(back.replication(), 2);
+        for p in 0..16 {
+            assert_eq!(back.replicas("t", p), s.replicas("t", p));
         }
     }
 

@@ -1,0 +1,551 @@
+//! The HA plane: leader→follower log shipping with fencing epochs.
+//!
+//! Every partition has `ClusterSpec::replication()` replicas — the
+//! rendezvous ranking's top member leads, the rest follow. The leader's
+//! [`Replicator`] streams appended records to the followers over the
+//! PR 5 mux plane: the wire `Record` is byte-identical to the CRC-framed
+//! segment body, so a follower apply is append + CRC check and leader and
+//! follower segment files stay bit-for-bit identical.
+//!
+//! **Acks.** `acks=leader` returns once the leader appended (replication
+//! is asynchronous — Kafka-style, fast but a leader crash can lose the
+//! tail). `acks=quorum` blocks the publish until every **in-sync**
+//! follower confirmed the records. The in-sync set (ISR) shrinks when a
+//! follower dies or falls behind the quorum deadline — so a dead follower
+//! costs one deadline, never a wedged publish path — and recovers on a
+//! timed rejoin backoff once the follower answers again (the backfill
+//! protocol below catches it up first).
+//!
+//! **Fencing.** Leadership changes bump a per-partition epoch, persisted
+//! in the partition's `meta.bin`. Followers refuse `Replicate` frames
+//! carrying a stale epoch with [`BrokerError::Fenced`]; a deposed leader
+//! sees the refusal, marks itself deposed in [`HaState`] and starts
+//! answering `NotOwner { owner: fencer }` — so a stale leader rejoining
+//! after a network blip cannot keep accepting writes that the promoted
+//! follower would never see.
+//!
+//! **Backfill.** A follower acks every frame with its high watermark.
+//! A watermark short of the shipped range means the follower is missing a
+//! prefix (fresh replica, or it was down); the worker rewinds and
+//! re-ships from the follower's watermark until it converges.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::broker::client::BrokerClient;
+use crate::broker::embedded::{BrokerCore, BrokerError, Result};
+
+use super::placement::ClusterSpec;
+
+/// Records per replication frame — bounds frame size while backfilling a
+/// follower that is far behind.
+const REPLICATE_BATCH: usize = 512;
+
+/// How long `acks=quorum` waits for a follower before dropping it from
+/// the in-sync set (the publish then acks without it).
+const QUORUM_WAIT: Duration = Duration::from_secs(2);
+
+/// How long an out-of-sync follower stays benched before the worker
+/// probes it again.
+const REJOIN_BACKOFF: Duration = Duration::from_millis(750);
+
+/// Worker park slice: bounds shutdown latency when the queue is idle.
+const IDLE_PARK: Duration = Duration::from_millis(100);
+
+/// Per-broker leadership bookkeeping, shared between the dispatch layer
+/// (`ClusterView`) and the [`Replicator`]:
+///
+/// * `promoted` — partitions this broker leads **beyond** what the static
+///   placement says (client-driven failover), with the fencing epoch it
+///   was promoted at.
+/// * `deposed` — partitions this broker must stop leading because a
+///   follower fenced it (a newer leader exists), with the fencer's epoch
+///   and address (the `NotOwner` redirect target).
+#[derive(Debug, Default)]
+pub struct HaState {
+    promoted: Mutex<HashMap<(String, usize), u64>>,
+    deposed: Mutex<HashMap<(String, usize), (u64, String)>>,
+}
+
+impl HaState {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Record a promotion: this broker now leads `(topic, partition)` at
+    /// `epoch`. Clears any deposal (a re-promotion outranks it).
+    pub fn promote(&self, topic: &str, partition: usize, epoch: u64) {
+        let key = (topic.to_string(), partition);
+        self.deposed.lock().unwrap().remove(&key);
+        let mut promoted = self.promoted.lock().unwrap();
+        let e = promoted.entry(key).or_insert(0);
+        *e = (*e).max(epoch);
+    }
+
+    /// Epoch this broker was promoted at for `(topic, partition)`, if any.
+    pub fn promoted_epoch(&self, topic: &str, partition: usize) -> Option<u64> {
+        self.promoted.lock().unwrap().get(&(topic.to_string(), partition)).copied()
+    }
+
+    /// Record a deposal: a follower fenced this broker's replication at
+    /// `epoch`, enforced by `by`. Ignored if this broker was itself
+    /// promoted at an equal-or-newer epoch (it IS the newest leader).
+    pub fn depose(&self, topic: &str, partition: usize, epoch: u64, by: &str) {
+        let key = (topic.to_string(), partition);
+        if self.promoted.lock().unwrap().get(&key).is_some_and(|&own| own >= epoch) {
+            return;
+        }
+        self.promoted.lock().unwrap().remove(&key);
+        self.deposed.lock().unwrap().insert(key, (epoch, by.to_string()));
+    }
+
+    /// `(epoch, fencer address)` if this broker was deposed for
+    /// `(topic, partition)` — the dispatch layer's `NotOwner` redirect.
+    pub fn deposed_info(&self, topic: &str, partition: usize) -> Option<(u64, String)> {
+        self.deposed.lock().unwrap().get(&(topic.to_string(), partition)).cloned()
+    }
+}
+
+/// One queued shipping task.
+struct Job {
+    topic: String,
+    partitions: usize,
+    partition: usize,
+    /// First offset this job must make visible on followers.
+    base: u64,
+    /// Records appended by the triggering publish.
+    count: u64,
+    /// Also ship the topic's consumer-group cursors.
+    ship_offsets: bool,
+}
+
+/// Follower shipping state keyed by `(follower addr, topic, partition)`.
+type ReplicaKey = (String, String, usize);
+
+#[derive(Default)]
+struct Inner {
+    jobs: VecDeque<Job>,
+    /// Highest watermark each follower confirmed.
+    watermarks: HashMap<ReplicaKey, u64>,
+    /// Followers dropped from the in-sync set, with their bench time.
+    out_of_sync: HashMap<ReplicaKey, Instant>,
+}
+
+/// The leader-side replication worker: one background thread draining a
+/// job queue, one lazily-connected [`BrokerClient`] per follower.
+pub struct Replicator {
+    core: Arc<BrokerCore>,
+    spec: ClusterSpec,
+    self_addr: String,
+    ha: Arc<HaState>,
+    inner: Mutex<Inner>,
+    /// Signals the worker that jobs arrived (or shutdown).
+    job_cv: Condvar,
+    /// Signals quorum waiters that watermarks (or the ISR) changed.
+    ack_cv: Condvar,
+    shutdown: AtomicBool,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for Replicator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Replicator").field("self_addr", &self.self_addr).finish_non_exhaustive()
+    }
+}
+
+impl Replicator {
+    /// Spawn the shipping worker for a broker that replicates (call only
+    /// when `spec.replication() > 1`).
+    pub fn start(
+        core: Arc<BrokerCore>,
+        spec: ClusterSpec,
+        self_addr: impl Into<String>,
+        ha: Arc<HaState>,
+    ) -> Arc<Self> {
+        let rep = Arc::new(Self {
+            core,
+            spec,
+            self_addr: self_addr.into(),
+            ha,
+            inner: Mutex::new(Inner::default()),
+            job_cv: Condvar::new(),
+            ack_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            worker: Mutex::new(None),
+        });
+        let w = Arc::clone(&rep);
+        let handle = std::thread::Builder::new()
+            .name(format!("replicator-{}", rep.self_addr))
+            .spawn(move || w.run())
+            .expect("spawn replicator");
+        *rep.worker.lock().unwrap() = Some(handle);
+        rep
+    }
+
+    /// Stop the worker (idempotent; joins the thread).
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.job_cv.notify_all();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Queue `count` freshly appended records of `(topic, partition)`
+    /// (offsets `[base, base + count)`) for shipping to the followers.
+    pub fn enqueue(
+        &self,
+        topic: &str,
+        partitions: usize,
+        partition: usize,
+        base: u64,
+        count: u64,
+    ) {
+        if count == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.jobs.push_back(Job {
+            topic: topic.to_string(),
+            partitions,
+            partition,
+            base,
+            count,
+            ship_offsets: false,
+        });
+        self.job_cv.notify_all();
+    }
+
+    /// Queue a consumer-group cursor sync for `topic` (commit path: the
+    /// followers must know the resume points before a failover needs
+    /// them).
+    pub fn enqueue_offsets(&self, topic: &str, partitions: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        // Coalesce: a pending offset sync for the topic already covers it.
+        if inner.jobs.iter().any(|j| j.ship_offsets && j.topic == topic) {
+            return;
+        }
+        inner.jobs.push_back(Job {
+            topic: topic.to_string(),
+            partitions,
+            partition: 0,
+            base: 0,
+            count: 0,
+            ship_offsets: true,
+        });
+        self.job_cv.notify_all();
+    }
+
+    /// Block an `acks=quorum` publish until every in-sync follower of
+    /// `(topic, partition)` confirmed offsets `< target`, this broker was
+    /// fenced (→ [`BrokerError::Fenced`]), or [`QUORUM_WAIT`] elapsed —
+    /// laggards are then dropped from the in-sync set and the publish
+    /// acks without them (the ISR may legitimately shrink to just the
+    /// leader: availability over replica count, exactly like Kafka's
+    /// `min.insync.replicas=1`).
+    pub fn wait_quorum(&self, topic: &str, partition: usize, target: u64) -> Result<()> {
+        let deadline = Instant::now() + QUORUM_WAIT;
+        let followers = self.followers(topic, partition);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some((epoch, by)) = self.ha.deposed_info(topic, partition) {
+                return Err(BrokerError::Fenced { epoch, by });
+            }
+            let pending: Vec<&String> = followers
+                .iter()
+                .filter(|f| {
+                    let key = (f.to_string(), topic.to_string(), partition);
+                    !inner.out_of_sync.contains_key(&key)
+                        && inner.watermarks.get(&key).copied().unwrap_or(0) < target
+                })
+                .collect();
+            if pending.is_empty() {
+                return Ok(());
+            }
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                // Deadline: bench the laggards so the next publish does
+                // not pay this wait again; they rejoin via backfill.
+                let now = Instant::now();
+                let lagging: Vec<String> = pending.into_iter().cloned().collect();
+                for f in lagging {
+                    log::warn!(
+                        "quorum wait: follower {f} lagging on {topic}[{partition}] — \
+                         dropping from in-sync set"
+                    );
+                    inner.out_of_sync.insert((f, topic.to_string(), partition), now);
+                }
+                self.ack_cv.notify_all();
+                return Ok(());
+            };
+            let (g, _) = self.ack_cv.wait_timeout(inner, remaining).unwrap();
+            inner = g;
+        }
+    }
+
+    /// Highest watermark `follower` confirmed for `(topic, partition)`
+    /// (tests / introspection).
+    pub fn follower_watermark(&self, follower: &str, topic: &str, partition: usize) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .watermarks
+            .get(&(follower.to_string(), topic.to_string(), partition))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// The follower replicas of `(topic, partition)` — the placement's
+    /// replica list minus this broker.
+    fn followers(&self, topic: &str, partition: usize) -> Vec<String> {
+        self.spec
+            .replicas(topic, partition)
+            .into_iter()
+            .filter(|a| *a != self.self_addr)
+            .map(str::to_string)
+            .collect()
+    }
+
+    // ---- worker ---------------------------------------------------------
+
+    fn run(self: Arc<Self>) {
+        // Follower connections are worker-local: lazily opened, dropped on
+        // transport failure so the next probe reconnects.
+        let mut conns: HashMap<String, BrokerClient> = HashMap::new();
+        loop {
+            let job = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if let Some(job) = inner.jobs.pop_front() {
+                        break job;
+                    }
+                    let (g, _) = self.job_cv.wait_timeout(inner, IDLE_PARK).unwrap();
+                    inner = g;
+                }
+            };
+            if job.ship_offsets {
+                self.ship_offsets(&job, &mut conns);
+            } else {
+                self.ship_records(&job, &mut conns);
+            }
+        }
+    }
+
+    /// Ship one record job to every follower (benched followers are
+    /// probed again once their backoff elapsed — that probe is also the
+    /// rejoin path, because the backfill loop catches them up).
+    fn ship_records(&self, job: &Job, conns: &mut HashMap<String, BrokerClient>) {
+        if self.ha.deposed_info(&job.topic, job.partition).is_some() {
+            return; // fenced: a newer leader owns this partition now
+        }
+        let Ok(epoch) = self.core.partition_epoch(&job.topic, job.partition) else {
+            return; // topic deleted since the job was queued
+        };
+        let target = job.base + job.count;
+        for follower in self.followers(&job.topic, job.partition) {
+            let key = (follower.clone(), job.topic.clone(), job.partition);
+            {
+                let inner = self.inner.lock().unwrap();
+                if inner.watermarks.get(&key).copied().unwrap_or(0) >= target {
+                    continue; // a later job already covered this range
+                }
+                if let Some(benched_at) = inner.out_of_sync.get(&key) {
+                    if benched_at.elapsed() < REJOIN_BACKOFF {
+                        continue;
+                    }
+                }
+            }
+            match self.ship_to(&follower, job, epoch, target, conns) {
+                Ok(hw) => {
+                    let mut inner = self.inner.lock().unwrap();
+                    let wm = inner.watermarks.entry(key.clone()).or_insert(0);
+                    *wm = (*wm).max(hw);
+                    if hw >= target {
+                        inner.out_of_sync.remove(&key); // caught up: rejoin
+                    }
+                    drop(inner);
+                    self.ack_cv.notify_all();
+                }
+                Err(BrokerError::Fenced { epoch, by }) => {
+                    log::warn!(
+                        "replication of {}[{}] fenced at epoch {epoch} by {by} — \
+                         stepping down",
+                        job.topic,
+                        job.partition
+                    );
+                    self.ha.depose(&job.topic, job.partition, epoch, &by);
+                    self.ack_cv.notify_all();
+                    return; // deposed: stop shipping this partition
+                }
+                Err(e) => {
+                    log::warn!(
+                        "replication to {follower} for {}[{}] failed: {e} — \
+                         dropping from in-sync set",
+                        job.topic,
+                        job.partition
+                    );
+                    conns.remove(&follower);
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.out_of_sync.insert(key, Instant::now());
+                    drop(inner);
+                    self.ack_cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Drive one follower to `target`, backfilling as needed. Returns the
+    /// follower's final confirmed watermark.
+    fn ship_to(
+        &self,
+        follower: &str,
+        job: &Job,
+        epoch: u64,
+        target: u64,
+        conns: &mut HashMap<String, BrokerClient>,
+    ) -> Result<u64> {
+        if !conns.contains_key(follower) {
+            conns.insert(follower.to_string(), BrokerClient::connect(follower)?);
+        }
+        let client = &conns[follower];
+        let mut from = job.base;
+        loop {
+            let recs = self.core.read_records(
+                &job.topic,
+                job.partition,
+                from,
+                REPLICATE_BATCH,
+            )?;
+            // Retention may have trimmed below `from`; ship what exists.
+            let base = recs.first().map_or(from, |r| r.offset);
+            let shipped = recs.len() as u64;
+            let hw = client.replicate(
+                &job.topic,
+                job.partitions,
+                job.partition,
+                epoch,
+                base,
+                recs.iter().map(|r| (**r).clone()).collect(),
+            )?;
+            if hw >= target {
+                return Ok(hw);
+            }
+            if hw >= from && shipped > 0 && hw > base {
+                from = hw; // forward progress (possibly a partial apply)
+            } else if hw < from {
+                from = hw; // follower is behind: backfill from its hw
+            } else {
+                // No progress possible (e.g. the prefix was retention-
+                // trimmed away here): report what the follower has.
+                return Ok(hw);
+            }
+        }
+    }
+
+    /// Ship the topic's consumer-group cursors to every follower of every
+    /// partition (deduplicated). Best-effort single attempts: a dead
+    /// follower picks the cursors up with the next sync after it rejoins.
+    fn ship_offsets(&self, job: &Job, conns: &mut HashMap<String, BrokerClient>) {
+        let entries = self.core.group_offset_entries(&job.topic);
+        if entries.is_empty() {
+            return;
+        }
+        let mut targets: Vec<String> = Vec::new();
+        for p in 0..job.partitions {
+            for f in self.followers(&job.topic, p) {
+                if !targets.contains(&f) {
+                    targets.push(f);
+                }
+            }
+        }
+        for follower in targets {
+            if !conns.contains_key(&follower) {
+                match BrokerClient::connect(&follower) {
+                    Ok(c) => {
+                        conns.insert(follower.clone(), c);
+                    }
+                    Err(_) => continue,
+                }
+            }
+            if conns[&follower].sync_offsets(&job.topic, entries.clone()).is_err() {
+                conns.remove(&follower);
+            }
+        }
+    }
+}
+
+impl Drop for Replicator {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.job_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ha_state_promote_depose_precedence() {
+        let ha = HaState::new();
+        assert_eq!(ha.promoted_epoch("t", 0), None);
+        assert_eq!(ha.deposed_info("t", 0), None);
+        ha.promote("t", 0, 3);
+        assert_eq!(ha.promoted_epoch("t", 0), Some(3));
+        // A stale fencer (older epoch) cannot depose a newer promotion.
+        ha.depose("t", 0, 2, "b:1");
+        assert_eq!(ha.promoted_epoch("t", 0), Some(3));
+        assert_eq!(ha.deposed_info("t", 0), None);
+        // A newer fencer wins: promotion cleared, redirect recorded.
+        ha.depose("t", 0, 5, "b:1");
+        assert_eq!(ha.promoted_epoch("t", 0), None);
+        assert_eq!(ha.deposed_info("t", 0), Some((5, "b:1".to_string())));
+        // Re-promotion at a yet-newer epoch clears the deposal.
+        ha.promote("t", 0, 6);
+        assert_eq!(ha.promoted_epoch("t", 0), Some(6));
+        assert_eq!(ha.deposed_info("t", 0), None);
+    }
+
+    #[test]
+    fn quorum_wait_benches_lagging_followers() {
+        // A replicator whose follower never answers must not wedge the
+        // quorum publish path: the wait expires, the follower leaves the
+        // in-sync set, and later waits return immediately.
+        let core = BrokerCore::new();
+        core.create_topic("t", 1).unwrap();
+        let spec =
+            ClusterSpec::new(["127.0.0.1:1", "127.0.0.1:2"]).with_replication(2);
+        let rep = Replicator::start(core, spec, "127.0.0.1:1", HaState::new());
+        let t0 = Instant::now();
+        rep.wait_quorum("t", 0, 5).unwrap();
+        assert!(t0.elapsed() >= QUORUM_WAIT, "first wait pays the deadline");
+        let t0 = Instant::now();
+        rep.wait_quorum("t", 0, 5).unwrap();
+        assert!(t0.elapsed() < QUORUM_WAIT / 2, "benched follower skips the wait");
+        rep.stop();
+    }
+
+    #[test]
+    fn deposed_replicator_fails_quorum_waits() {
+        let core = BrokerCore::new();
+        core.create_topic("t", 1).unwrap();
+        let spec =
+            ClusterSpec::new(["127.0.0.1:1", "127.0.0.1:2"]).with_replication(2);
+        let ha = HaState::new();
+        let rep = Replicator::start(core, spec, "127.0.0.1:1", Arc::clone(&ha));
+        ha.depose("t", 0, 4, "127.0.0.1:2");
+        match rep.wait_quorum("t", 0, 1) {
+            Err(BrokerError::Fenced { epoch, by }) => {
+                assert_eq!(epoch, 4);
+                assert_eq!(by, "127.0.0.1:2");
+            }
+            other => panic!("expected Fenced, got {other:?}"),
+        }
+        rep.stop();
+    }
+}

@@ -42,6 +42,12 @@ pub enum BrokerError {
     /// address so clients can follow the redirect).
     #[error("not the partition owner; retry at {owner}")]
     NotOwner { owner: String },
+    /// Replication fencing: the caller's leadership epoch is stale — a
+    /// newer leader (elected at `epoch`, enforced by `by`) exists for the
+    /// partition. Deposed leaders stop accepting writes on sight of this
+    /// (wire code 9; payload `{epoch}@{by}`).
+    #[error("fenced at epoch {epoch} by {by}")]
+    Fenced { epoch: u64, by: String },
 }
 
 pub type Result<T> = std::result::Result<T, BrokerError>;
@@ -390,6 +396,148 @@ impl BrokerCore {
     /// Partition count of a topic (cluster routing / dispatch).
     pub fn partition_count(&self, topic: &str) -> Result<usize> {
         Ok(self.topic(topic)?.partition_count())
+    }
+
+    // ---- replication (HA plane) ----------------------------------------
+
+    /// Follower-side apply of one leader replication frame: append `recs`
+    /// (offsets and timestamps preserved verbatim — the wire `Record` is
+    /// byte-identical to the segment frame body) starting at `base`.
+    ///
+    /// Returns the follower's high watermark after the apply; the leader
+    /// treats a returned watermark `< base + recs.len()` as a backfill
+    /// request and resends from there. Specifically:
+    ///
+    /// * `epoch <` the locally adopted epoch → [`BrokerError::Fenced`]
+    ///   (the sender is a deposed leader; `by` is filled in by the server
+    ///   dispatch with this broker's address).
+    /// * `epoch >` local → adopt the new epoch (a promotion happened).
+    /// * `base >` local watermark → no append, return the watermark so
+    ///   the leader backfills the gap.
+    /// * Records at offsets `<` the watermark are skipped (duplicate
+    ///   delivery after a leader retry is idempotent).
+    ///
+    /// The topic is lazily opened with `partitions` partitions so a fresh
+    /// follower can start replicating without an admin round trip.
+    pub fn replica_append(
+        &self,
+        topic: &str,
+        partitions: usize,
+        partition: usize,
+        epoch: u64,
+        base: u64,
+        recs: Vec<Record>,
+    ) -> Result<u64> {
+        let (t, _) = self.open_topic(topic, partitions.max(1))?;
+        if partition >= t.partition_count() {
+            return Err(BrokerError::BadPartition {
+                topic: topic.into(),
+                partition,
+                count: t.partition_count(),
+            });
+        }
+        let local = t.partition_epoch(partition);
+        if epoch < local {
+            return Err(BrokerError::Fenced { epoch: local, by: String::new() });
+        }
+        if epoch > local {
+            t.set_partition_epoch(partition, epoch);
+        }
+        let hw = t.high_watermark(partition);
+        if base > hw {
+            return Ok(hw); // gap: ask the leader to backfill from hw
+        }
+        let mut appended = false;
+        for rec in recs {
+            let hw = t.high_watermark(partition);
+            if rec.offset < hw {
+                continue; // duplicate prefix from a leader retry
+            }
+            if rec.offset > hw {
+                break; // gap inside the batch: stop, report hw
+            }
+            t.append_replica(partition, Arc::new(rec));
+            appended = true;
+        }
+        if appended {
+            t.notify_publish(); // wake long-polls reading from this replica
+        }
+        Ok(t.high_watermark(partition))
+    }
+
+    /// Adopt replicated consumer-group cursors from the partition leader
+    /// (and journal them for durable topics). Adoption is forward-only —
+    /// `max()` against the local cursor — so a delayed sync frame can
+    /// never rewind a group that already advanced on a new leader.
+    pub fn sync_offsets(&self, topic: &str, entries: Vec<OffsetEntry>) -> Result<()> {
+        if self.topics.read().unwrap().get(topic).is_none() {
+            return Ok(()); // no replica state yet: nothing to anchor to
+        }
+        for e in &entries {
+            let entry = self.group_entry(&e.group, topic, e.mode);
+            let mut st = entry.lock().unwrap();
+            let cur = st.cursor_mut(e.partition as usize);
+            cur.committed = cur.committed.max(e.committed);
+            cur.position = cur.position.max(e.position).max(cur.committed);
+        }
+        if let Some(store) = self.offset_store(topic) {
+            let mut store = store.lock().unwrap();
+            for e in &entries {
+                store.note(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Leadership epoch currently adopted for one partition.
+    pub fn partition_epoch(&self, topic: &str, partition: usize) -> Result<u64> {
+        Ok(self.topic(topic)?.partition_epoch(partition))
+    }
+
+    /// Adopt `epoch` for one partition (promotion path — persisted in the
+    /// partition's `meta.bin` for durable topics).
+    pub fn set_partition_epoch(&self, topic: &str, partition: usize, epoch: u64) -> Result<()> {
+        self.topic(topic)?.set_partition_epoch(partition, epoch);
+        Ok(())
+    }
+
+    /// Raw log read for the replication plane: up to `max` records from
+    /// `from` — no group, no claims, shared `Arc<Record>` handles.
+    pub fn read_records(
+        &self,
+        topic: &str,
+        partition: usize,
+        from: u64,
+        max: usize,
+    ) -> Result<Vec<Arc<Record>>> {
+        Ok(self.topic(topic)?.fetch(partition, from, max))
+    }
+
+    /// Snapshot every consumer-group cursor of `topic` as journal entries
+    /// — the payload the leader ships to followers so groups resume from
+    /// their commit points after a failover.
+    pub fn group_offset_entries(&self, topic: &str) -> Vec<OffsetEntry> {
+        let Ok(t) = self.topic(topic) else {
+            return Vec::new();
+        };
+        let groups = self.groups.lock().unwrap();
+        let mut out = Vec::new();
+        for ((g, tname), st) in groups.iter() {
+            if tname != topic {
+                continue;
+            }
+            let st = st.lock().unwrap();
+            for p in 0..t.partition_count() {
+                out.push(OffsetEntry {
+                    group: g.clone(),
+                    mode: st.mode,
+                    partition: p as u64,
+                    position: st.position(p),
+                    committed: st.committed(p),
+                });
+            }
+        }
+        out
     }
 
     // ---- consume -------------------------------------------------------

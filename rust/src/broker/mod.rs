@@ -35,6 +35,15 @@
 //! object-safe face the DistroStream layer programs against, so a stream
 //! is backend-count agnostic exactly like the paper's homogeneous stream
 //! representation (§4.2).
+//!
+//! High availability ([`cluster::replicate`]): with a replication factor
+//! above 1 every partition gets an ordered replica list (leader +
+//! followers) from the same rendezvous ranking, the leader streams each
+//! append to its followers (byte-identical record frames, CRC-checked on
+//! apply), publishes choose [`protocol::ACKS_LEADER`] or
+//! [`protocol::ACKS_QUORUM`], and on leader death clients promote the
+//! most-caught-up follower — fenced against stale leaders by a
+//! monotonically increasing per-partition epoch.
 
 pub mod client;
 pub mod cluster;
@@ -50,9 +59,10 @@ pub mod topic;
 use std::sync::Arc;
 
 pub use client::{BrokerClient, PendingPublish, PublishPipeline};
-pub use cluster::{ClusterClient, ClusterSpec, ClusterView};
+pub use cluster::{ClusterClient, ClusterSpec, ClusterView, HaState, Replicator};
 pub use embedded::{BrokerCore, MultiFetch};
 pub use group::AssignmentMode;
+pub use protocol::{ACKS_LEADER, ACKS_QUORUM};
 pub use record::Record;
 pub use server::BrokerServer;
 pub use storage::{BrokerConfig, Retention, StorageMode};

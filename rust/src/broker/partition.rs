@@ -31,6 +31,9 @@ pub struct PartitionLog {
     next: u64,
     /// Total bytes retained (metrics/backpressure).
     bytes: usize,
+    /// Replication fencing epoch (memory-mode storage; in disk mode the
+    /// `DiskLog` persists it and this field mirrors it).
+    epoch: u64,
     /// Durable write-through twin (`None` = memory-only).
     disk: Option<DiskLog>,
 }
@@ -54,7 +57,8 @@ impl PartitionLog {
         let start = next - recovered.len() as u64;
         debug_assert!(recovered.first().map_or(true, |r| r.offset == start));
         let bytes = recovered.iter().map(|r| r.payload_len()).sum();
-        Ok(Self { records: recovered.into(), start, next, bytes, disk: Some(disk) })
+        let epoch = disk.epoch();
+        Ok(Self { records: recovered.into(), start, next, bytes, epoch, disk: Some(disk) })
     }
 
     /// Offset that the next appended record will get.
@@ -98,6 +102,39 @@ impl PartitionLog {
         self.bytes += stored.payload_len();
         self.records.push_back(stored);
         offset
+    }
+
+    /// Append a record replicated from the partition leader, preserving
+    /// its offset and timestamp verbatim (the HA plane's follower apply —
+    /// the wire `Record` is byte-identical to what the leader framed, so
+    /// the write-through keeps leader and follower segments identical).
+    /// The caller guarantees density (`rec.offset == high_watermark`).
+    pub fn append_replica(&mut self, rec: Arc<Record>) {
+        debug_assert_eq!(rec.offset, self.next, "replica apply must stay dense");
+        self.next = rec.offset + 1;
+        if let Some(disk) = &mut self.disk {
+            if let Some(new_start) = disk.append(&rec) {
+                self.trim_to(new_start);
+            }
+        }
+        self.bytes += rec.payload_len();
+        self.records.push_back(rec);
+    }
+
+    /// Replication fencing epoch last adopted by this partition.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Adopt a fencing epoch (forward-only; persisted in disk mode).
+    pub fn set_epoch(&mut self, epoch: u64) {
+        if epoch <= self.epoch {
+            return;
+        }
+        self.epoch = epoch;
+        if let Some(disk) = &mut self.disk {
+            disk.set_epoch(epoch);
+        }
     }
 
     /// Fetch up to `max` records with offset >= `from` (Arc clones — O(1)
@@ -339,6 +376,30 @@ mod tests {
         let d = std::env::temp_dir().join(format!("hybridws-part-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&d);
         d
+    }
+
+    #[test]
+    fn replica_append_preserves_offset_and_timestamp() {
+        let mut leader = PartitionLog::new();
+        for i in 0..4 {
+            leader.append(rec(i));
+        }
+        let mut follower = PartitionLog::new();
+        for r in leader.fetch(0, usize::MAX) {
+            follower.append_replica(r);
+        }
+        assert_eq!(follower.high_watermark(), 4);
+        let a = leader.fetch(0, usize::MAX);
+        let b = follower.fetch(0, usize::MAX);
+        for (l, f) in a.iter().zip(&b) {
+            assert_eq!(l.offset, f.offset);
+            assert_eq!(l.timestamp_ms, f.timestamp_ms, "timestamps replicate verbatim");
+            assert!(l.value.ptr_eq(&f.value), "in-process replication shares the allocation");
+        }
+        // Epochs adopt forward-only.
+        follower.set_epoch(2);
+        follower.set_epoch(1);
+        assert_eq!(follower.epoch(), 2);
     }
 
     #[test]

@@ -16,6 +16,13 @@ use crate::util::wire::Wire;
 use super::embedded::{BrokerError, TopicStats};
 use super::group::AssignmentMode;
 use super::record::{ProducerRecord, Record};
+use super::storage::OffsetEntry;
+
+/// `acks` level of a [`Request::PublishTo`]: the broker acks after its own
+/// append (leader) — the pre-PR 7 behaviour — or only once every in-sync
+/// follower has applied the batch (quorum).
+pub const ACKS_LEADER: u8 = 0;
+pub const ACKS_QUORUM: u8 = 1;
 
 impl Wire for AssignmentMode {
     fn encode(&self, w: &mut ByteWriter) {
@@ -70,13 +77,38 @@ pub enum Request {
     Shutdown,
     /// Partition-targeted batch publish (the cluster data plane): the
     /// client computed the partition from the shared placement function; a
-    /// broker that does not own it answers `NotOwner { owner_addr }` (wire
-    /// code 8) so stale clients self-correct. Replies with
+    /// broker that does not lead it answers `NotOwner { owner_addr }` (wire
+    /// code 8) so stale clients self-correct. `acks` picks the durability
+    /// level ([`ACKS_LEADER`] or [`ACKS_QUORUM`]). Replies with
     /// [`Response::PubBatchAck`].
-    PublishTo { topic: String, partition: usize, recs: Vec<ProducerRecord> },
+    PublishTo { topic: String, partition: usize, recs: Vec<ProducerRecord>, acks: u8 },
     /// Cluster membership snapshot; replies with [`Response::Cluster`]
     /// (empty member list when the broker is not part of a cluster).
     ClusterMeta,
+    /// Leader → follower log shipping (PR 7): apply `recs` — whose bodies
+    /// are byte-identical to the CRC-framed disk format — to the replica
+    /// of `(topic, partition)` starting at offset `base`. `epoch` fences
+    /// stale leaders: a follower that has adopted a higher fencing epoch
+    /// answers `Err` code 9 (`Fenced`) instead of applying. Replies with
+    /// [`Response::RepAck`] carrying the follower's high watermark (a
+    /// watermark below `base` asks the leader to back-fill).
+    Replicate {
+        topic: String,
+        partitions: usize,
+        partition: usize,
+        epoch: u64,
+        base: u64,
+        recs: Vec<Record>,
+    },
+    /// Leader → follower consumer-offset shipping: the commit journal
+    /// entries ride alongside the segment stream so a promoted follower
+    /// resumes every group from its committed offsets. Replies `Ok`.
+    OffsetSync { topic: String, entries: Vec<OffsetEntry> },
+    /// Client → follower promotion request after a leader death: the
+    /// follower bumps the partition's fencing epoch past anything the dead
+    /// leader could have issued and starts accepting writes. Replies with
+    /// [`Response::Epoch`] (the new fencing epoch).
+    Promote { topic: String, partitions: usize, partition: usize },
 }
 
 impl Request {
@@ -182,13 +214,34 @@ impl Wire for Request {
                 max_bytes.encode(w);
                 wait_ms.encode(w);
             }
-            Request::PublishTo { topic, partition, recs } => {
+            Request::PublishTo { topic, partition, recs, acks } => {
                 w.put_u8(18);
                 topic.encode(w);
                 partition.encode(w);
                 recs.encode(w);
+                w.put_u8(*acks);
             }
             Request::ClusterMeta => w.put_u8(19),
+            Request::Replicate { topic, partitions, partition, epoch, base, recs } => {
+                w.put_u8(20);
+                topic.encode(w);
+                partitions.encode(w);
+                partition.encode(w);
+                epoch.encode(w);
+                base.encode(w);
+                recs.encode(w);
+            }
+            Request::OffsetSync { topic, entries } => {
+                w.put_u8(21);
+                topic.encode(w);
+                entries.encode(w);
+            }
+            Request::Promote { topic, partitions, partition } => {
+                w.put_u8(22);
+                topic.encode(w);
+                partitions.encode(w);
+                partition.encode(w);
+            }
         }
     }
 
@@ -250,8 +303,23 @@ impl Wire for Request {
                 topic: Wire::decode(r)?,
                 partition: Wire::decode(r)?,
                 recs: Wire::decode(r)?,
+                acks: r.get_u8()?,
             },
             19 => Request::ClusterMeta,
+            20 => Request::Replicate {
+                topic: Wire::decode(r)?,
+                partitions: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+                epoch: Wire::decode(r)?,
+                base: Wire::decode(r)?,
+                recs: Wire::decode(r)?,
+            },
+            21 => Request::OffsetSync { topic: Wire::decode(r)?, entries: Wire::decode(r)? },
+            22 => Request::Promote {
+                topic: Wire::decode(r)?,
+                partitions: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+            },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
     }
@@ -277,19 +345,31 @@ pub enum Response {
     Batches { batches: Vec<(usize, Vec<Record>)>, positions: Vec<(u64, u64)> },
     /// Cluster membership snapshot (reply to [`Request::ClusterMeta`]).
     Cluster(ClusterMetaWire),
+    /// Follower's high watermark after applying (or refusing) a
+    /// [`Request::Replicate`] batch.
+    RepAck { hw: u64 },
+    /// A fencing epoch (reply to [`Request::Promote`]).
+    Epoch(u64),
     Err { code: u8, msg: String },
 }
 
 /// Wire form of the cluster description: epoch + member list + placement
-/// version. An empty member list means "not a cluster member".
+/// version + replicas-per-partition. An empty member list means "not a
+/// cluster member"; `replication: 0` (a pre-PR 7 peer) reads as 1.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClusterMetaWire {
     pub epoch: u64,
     pub version: u32,
     pub members: Vec<String>,
+    pub replication: u32,
 }
 
-crate::wire_struct!(ClusterMetaWire { epoch: u64, version: u32, members: Vec<String> });
+crate::wire_struct!(ClusterMetaWire {
+    epoch: u64,
+    version: u32,
+    members: Vec<String>,
+    replication: u32,
+});
 
 /// `TopicStats` mirror with Wire support.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -381,6 +461,14 @@ impl Wire for Response {
                 w.put_u8(12);
                 meta.encode(w);
             }
+            Response::RepAck { hw } => {
+                w.put_u8(13);
+                hw.encode(w);
+            }
+            Response::Epoch(e) => {
+                w.put_u8(14);
+                e.encode(w);
+            }
             Response::Err { code, msg } => {
                 w.put_u8(255);
                 w.put_u8(*code);
@@ -405,6 +493,8 @@ impl Wire for Response {
             10 => Response::Count(Wire::decode(r)?),
             11 => Response::Batches { batches: Wire::decode(r)?, positions: Wire::decode(r)? },
             12 => Response::Cluster(Wire::decode(r)?),
+            13 => Response::RepAck { hw: Wire::decode(r)? },
+            14 => Response::Epoch(Wire::decode(r)?),
             255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
         })
@@ -422,15 +512,18 @@ pub fn error_code(e: &BrokerError) -> u8 {
         BrokerError::Transport(_) => 6,
         BrokerError::Storage(_) => 7,
         BrokerError::NotOwner { .. } => 8,
+        BrokerError::Fenced { .. } => 9,
     }
 }
 
 /// `(code, msg)` for the wire. `NotOwner` ships **only** the owner address
 /// as its message so the receiving client can rehydrate the redirect
-/// target without parsing prose.
+/// target without parsing prose; `Fenced` ships `epoch@fencer_addr` the
+/// same way.
 pub fn error_payload(e: &BrokerError) -> (u8, String) {
     let msg = match e {
         BrokerError::NotOwner { owner } => owner.clone(),
+        BrokerError::Fenced { epoch, by } => format!("{epoch}@{by}"),
         other => other.to_string(),
     };
     (error_code(e), msg)
@@ -446,6 +539,10 @@ pub fn error_from_code(code: u8, msg: String) -> BrokerError {
         3 => BrokerError::BadPartition { topic: msg, partition: 0, count: 0 },
         7 => BrokerError::Storage(msg),
         8 => BrokerError::NotOwner { owner: msg },
+        9 => {
+            let (epoch, by) = msg.split_once('@').unwrap_or(("0", msg.as_str()));
+            BrokerError::Fenced { epoch: epoch.parse().unwrap_or(0), by: by.to_string() }
+        }
         _ => BrokerError::Transport(msg),
     }
 }
@@ -498,8 +595,33 @@ mod tests {
                 topic: "t".into(),
                 partition: 3,
                 recs: vec![ProducerRecord::new(vec![9])],
+                acks: ACKS_QUORUM,
             },
             Request::ClusterMeta,
+            Request::Replicate {
+                topic: "t".into(),
+                partitions: 16,
+                partition: 3,
+                epoch: 2,
+                base: 7,
+                recs: vec![Record {
+                    offset: 7,
+                    timestamp_ms: 99,
+                    key: None,
+                    value: Blob::new(vec![1, 2, 3]),
+                }],
+            },
+            Request::OffsetSync {
+                topic: "t".into(),
+                entries: vec![OffsetEntry {
+                    group: "g".into(),
+                    mode: AssignmentMode::Shared,
+                    partition: 3,
+                    position: 9,
+                    committed: 7,
+                }],
+            },
+            Request::Promote { topic: "t".into(), partitions: 16, partition: 3 },
         ];
         for req in reqs {
             let back = Request::decode_exact(&req.encode_vec()).unwrap();
@@ -551,7 +673,10 @@ mod tests {
                 epoch: 2,
                 version: 1,
                 members: vec!["127.0.0.1:9092".into(), "127.0.0.1:9093".into()],
+                replication: 2,
             }),
+            Response::RepAck { hw: 42 },
+            Response::Epoch(3),
             Response::Err { code: 1, msg: "t".into() },
         ];
         for resp in resps {
@@ -575,6 +700,21 @@ mod tests {
         assert_eq!(msg, "10.0.0.2:9092", "message must be the bare redirect target");
         match error_from_code(code, msg) {
             BrokerError::NotOwner { owner } => assert_eq!(owner, "10.0.0.2:9092"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fenced_ships_epoch_and_fencer() {
+        let e = BrokerError::Fenced { epoch: 5, by: "10.0.0.3:9092".into() };
+        let (code, msg) = error_payload(&e);
+        assert_eq!(code, 9);
+        assert_eq!(msg, "5@10.0.0.3:9092");
+        match error_from_code(code, msg) {
+            BrokerError::Fenced { epoch, by } => {
+                assert_eq!(epoch, 5);
+                assert_eq!(by, "10.0.0.3:9092");
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

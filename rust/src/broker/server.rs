@@ -34,9 +34,9 @@ use crate::util::fault;
 use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, ServeAction, Sniff};
 use crate::util::wire::{read_frame_patient, Wire};
 
-use super::cluster::{ClusterView, PLACEMENT_VERSION};
+use super::cluster::{ClusterView, Replicator, PLACEMENT_VERSION};
 use super::embedded::{BrokerCore, BrokerError};
-use super::protocol::{error_payload, ClusterMetaWire, Request, Response};
+use super::protocol::{error_payload, ClusterMetaWire, Request, Response, ACKS_QUORUM};
 use super::record::ProducerRecord;
 use super::topic::key_partition;
 
@@ -55,6 +55,9 @@ pub struct BrokerServer {
     core: Arc<BrokerCore>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// The cluster view (if any) — kept so shutdown can stop the
+    /// replication worker it started.
+    cluster: Arc<Option<ClusterView>>,
 }
 
 impl BrokerServer {
@@ -85,8 +88,22 @@ impl BrokerServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let cluster: Arc<Option<ClusterView>> = Arc::new(view);
+        // Replicating members (PR 7) run a segment-shipping worker that
+        // streams every leader-side append to the partition's followers.
+        if let Some(v) = cluster.as_ref() {
+            if v.spec.replication() > 1 {
+                let rep = Replicator::start(
+                    Arc::clone(&core),
+                    v.spec.clone(),
+                    v.self_addr.clone(),
+                    v.ha(),
+                );
+                v.set_replicator(rep);
+            }
+        }
         let accept_core = Arc::clone(&core);
         let accept_stop = Arc::clone(&stop);
+        let held_cluster = Arc::clone(&cluster);
         let accept_thread = std::thread::Builder::new()
             .name("broker-accept".into())
             .spawn(move || {
@@ -111,7 +128,20 @@ impl BrokerServer {
                     }
                 }
             })?;
-        Ok(Self { addr: local, core, stop, accept_thread: Some(accept_thread) })
+        Ok(Self {
+            addr: local,
+            core,
+            stop,
+            accept_thread: Some(accept_thread),
+            cluster: held_cluster,
+        })
+    }
+
+    /// Stop the replication worker, if this member started one. Idempotent.
+    fn stop_replication(&self) {
+        if let Some(rep) = self.cluster.as_ref().as_ref().and_then(|v| v.replicator()) {
+            rep.stop();
+        }
     }
 
     /// The served core (embedded-side inspection in tests).
@@ -122,6 +152,7 @@ impl BrokerServer {
     /// Stop accepting and join the accept thread. Existing connection
     /// threads exit when their peers close.
     pub fn shutdown(mut self) {
+        self.stop_replication();
         self.stop.store(true, Ordering::SeqCst);
         // Nudge the blocking accept with a no-op connection.
         let _ = TcpStream::connect(self.addr);
@@ -133,6 +164,7 @@ impl BrokerServer {
 
 impl Drop for BrokerServer {
     fn drop(&mut self) {
+        self.stop_replication();
         self.stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
@@ -290,6 +322,15 @@ fn cluster_publish(
             .map(|&i| slots[i].take().expect("record consumed twice"))
             .collect();
         let offsets = core.publish_to(topic, p, batch)?;
+        // Legacy frames carry no acks level: the broker's own default
+        // (`--acks`) decides whether the ack waits for the quorum.
+        if let (Some(rep), Some(&base)) = (view.replicator(), offsets.first()) {
+            let count = offsets.len() as u64;
+            rep.enqueue(topic, parts, p, base, count);
+            if view.default_acks() == ACKS_QUORUM {
+                rep.wait_quorum(topic, p, base + count)?;
+            }
+        }
         for (&i, off) in bucket.iter().zip(offsets) {
             acks[i] = (p, off);
         }
@@ -315,9 +356,10 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
                 epoch: 0,
                 version: PLACEMENT_VERSION,
                 members: Vec::new(),
+                replication: 1,
             },
         }),
-        Q::PublishTo { topic, partition, recs } => {
+        Q::PublishTo { topic, partition, recs, acks } => {
             if let Some(v) = cluster {
                 // The existence check must come first: ownership of an
                 // unknown topic is still computable, but the client needs
@@ -326,19 +368,77 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
                     Ok(_) => {}
                     Err(e) => return to_err(&e),
                 }
-                if !v.owns(&topic, partition) {
+                // Leadership, not static ownership: a promotion makes this
+                // broker serve out-of-placement partitions; a deposal makes
+                // it redirect to the broker that fenced it.
+                if !v.leads(&topic, partition) {
+                    return to_err(&BrokerError::NotOwner {
+                        owner: v.leader_of(&topic, partition),
+                    });
+                }
+            }
+            let count = recs.len() as u64;
+            match core.publish_to(&topic, partition, recs) {
+                Ok(offsets) => {
+                    if let Some(rep) = cluster.and_then(|v| v.replicator()) {
+                        if let Some(&base) = offsets.first() {
+                            let parts = core.partition_count(&topic).unwrap_or(partition + 1);
+                            rep.enqueue(&topic, parts, partition, base, count);
+                            if acks == ACKS_QUORUM {
+                                // Hold the ack until every in-sync follower
+                                // confirms the batch (laggards get benched
+                                // at the deadline; a fencing loses the
+                                // leadership and fails the publish).
+                                if let Err(e) = rep.wait_quorum(&topic, partition, base + count) {
+                                    return to_err(&e);
+                                }
+                            }
+                        }
+                    }
+                    A::PubBatchAck {
+                        acks: offsets.into_iter().map(|o| (partition, o)).collect(),
+                    }
+                }
+                Err(e) => to_err(&e),
+            }
+        }
+        Q::Replicate { topic, partitions, partition, epoch, base, recs } => {
+            // Follower-side apply. Works without a view too (standalone
+            // receivers in tests); the fencer address in a refusal is this
+            // broker's advertised address when it has one.
+            match core.replica_append(&topic, partitions, partition, epoch, base, recs) {
+                Ok(hw) => A::RepAck { hw },
+                Err(BrokerError::Fenced { epoch, by }) => {
+                    let by = if by.is_empty() {
+                        cluster.map(|v| v.self_addr.clone()).unwrap_or_default()
+                    } else {
+                        by
+                    };
+                    to_err(&BrokerError::Fenced { epoch, by })
+                }
+                Err(e) => to_err(&e),
+            }
+        }
+        Q::OffsetSync { topic, entries } => match core.sync_offsets(&topic, entries) {
+            Ok(()) => A::Ok,
+            Err(e) => to_err(&e),
+        },
+        Q::Promote { topic, partitions, partition } => match cluster {
+            None => to_err(&BrokerError::Transport(
+                "promote on a standalone broker".into(),
+            )),
+            Some(v) => {
+                if !v.spec.is_replica(&v.self_addr, &topic, partition) {
                     return to_err(&BrokerError::NotOwner {
                         owner: v.spec.owner(&topic, partition).to_string(),
                     });
                 }
+                match v.promote(core, &topic, partitions, partition) {
+                    Ok(e) => A::Epoch(e),
+                    Err(e) => to_err(&e),
+                }
             }
-            match core.publish_to(&topic, partition, recs) {
-                Ok(offsets) => A::PubBatchAck {
-                    acks: offsets.into_iter().map(|o| (partition, o)).collect(),
-                },
-                Err(e) => to_err(&e),
-            }
-        }
+        },
         Q::CreateTopic { name, partitions } => match core.create_topic(&name, partitions) {
             Ok(()) => A::Ok,
             Err(e) => to_err(&e),
@@ -416,7 +516,16 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
             }
         }
         Q::Commit { group, topic, commits } => match core.commit(&group, &topic, &commits) {
-            Ok(()) => A::Ok,
+            Ok(()) => {
+                // Replicate the group's cursors so consumers resume from
+                // their committed offsets on a promoted follower.
+                if let Some(rep) = cluster.and_then(|v| v.replicator()) {
+                    if let Ok(parts) = core.partition_count(&topic) {
+                        rep.enqueue_offsets(&topic, parts);
+                    }
+                }
+                A::Ok
+            }
             Err(e) => to_err(&e),
         },
         Q::DeleteRecords { topic, partition, up_to } => {
@@ -546,6 +655,7 @@ mod tests {
                 topic: "t".into(),
                 partition: owned[0],
                 recs: vec![ProducerRecord::new(vec![1])],
+                acks: crate::broker::protocol::ACKS_LEADER,
             },
         ) {
             Response::PubBatchAck { acks } => assert_eq!(acks, vec![(owned[0], 0)]),
@@ -559,6 +669,7 @@ mod tests {
                 topic: "t".into(),
                 partition: foreign[0],
                 recs: vec![ProducerRecord::new(vec![2])],
+                acks: crate::broker::protocol::ACKS_LEADER,
             },
         ) {
             Response::Err { code: 8, msg } => assert_eq!(msg, other),

@@ -31,7 +31,8 @@ use crate::util::fault;
 use super::segment::{parse_segment_name, Segment};
 use super::{crc32, Retention};
 
-/// Per-partition metadata file holding the persisted log-start offset.
+/// Per-partition metadata file holding the persisted log-start offset and
+/// the replication fencing epoch.
 const META_FILE: &str = "meta.bin";
 
 /// Segmented append-only log for one partition.
@@ -45,6 +46,10 @@ pub struct DiskLog {
     active: Segment,
     /// First live offset (survives restarts via `meta.bin`).
     start: u64,
+    /// Replication fencing epoch (survives restarts via `meta.bin`): a
+    /// restarted ex-leader rejoins knowing which leadership generation it
+    /// last saw, so a stale epoch cannot silently accept writes.
+    epoch: u64,
     /// Records replayed into memory by the last `open`.
     recovered: u64,
     /// Disk write failed — serve memory-only from here on.
@@ -61,7 +66,7 @@ impl DiskLog {
         retention: Retention,
     ) -> io::Result<(Self, Vec<Arc<Record>>)> {
         std::fs::create_dir_all(dir)?;
-        let start = read_meta(&dir.join(META_FILE));
+        let (start, epoch) = read_meta(&dir.join(META_FILE));
         let mut bases: Vec<u64> = std::fs::read_dir(dir)?
             .filter_map(|e| e.ok())
             .filter_map(|e| parse_segment_name(e.file_name().to_str()?))
@@ -120,6 +125,7 @@ impl DiskLog {
             sealed,
             active,
             start,
+            epoch,
             recovered: 0,
             failed: false,
         };
@@ -188,7 +194,7 @@ impl DiskLog {
             seg.delete()?;
         }
         if advanced.is_some() {
-            write_meta(&self.dir.join(META_FILE), self.start)?;
+            write_meta(&self.dir.join(META_FILE), self.start, self.epoch)?;
         }
         Ok(advanced)
     }
@@ -206,7 +212,7 @@ impl DiskLog {
             while self.sealed.first().is_some_and(|s| s.next_offset() <= up_to) {
                 self.sealed.remove(0).delete()?;
             }
-            write_meta(&self.dir.join(META_FILE), self.start)
+            write_meta(&self.dir.join(META_FILE), self.start, self.epoch)
         })();
         if let Err(e) = res {
             error!(
@@ -246,6 +252,32 @@ impl DiskLog {
         self.start
     }
 
+    /// Replication fencing epoch last adopted by this partition.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Persist a newly adopted fencing epoch (promotion / leader adopt).
+    /// Degrades to memory-only on I/O error like [`DiskLog::append`] — the
+    /// in-memory epoch still advances, so fencing keeps working for the
+    /// life of the process.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        if epoch <= self.epoch {
+            return;
+        }
+        self.epoch = epoch;
+        if self.failed {
+            return;
+        }
+        if let Err(e) = write_meta(&self.dir.join(META_FILE), self.start, self.epoch) {
+            error!(
+                "disk log {:?}: epoch persist failed ({e}) — degrading to memory-only",
+                self.dir
+            );
+            self.failed = true;
+        }
+    }
+
     /// Offset the next append must carry (recovered high watermark).
     pub fn next_offset(&self) -> u64 {
         self.active.next_offset()
@@ -279,34 +311,44 @@ impl DiskLog {
 
 // ---- meta file (persisted log start) -----------------------------------
 
-/// `meta.bin` = `crc32(start_le): u32 | start: u64`. Atomic tmp + rename;
-/// any corruption falls back to start 0 (recovery then serves everything
-/// still on disk — safe, merely conservative).
-fn read_meta(path: &Path) -> u64 {
+/// `meta.bin` = `crc32(body): u32 | start: u64 | epoch: u64`. Atomic tmp +
+/// rename; any corruption falls back to `(0, 0)` (recovery then serves
+/// everything still on disk — safe, merely conservative). Pre-epoch
+/// 12-byte files (`crc | start`) still read back: epoch defaults to 0, so
+/// a data dir written by an older broker upgrades in place.
+fn read_meta(path: &Path) -> (u64, u64) {
     let Ok(data) = std::fs::read(path) else {
-        return 0;
+        return (0, 0);
     };
-    if data.len() != 12 {
-        return 0;
-    }
+    let body = match data.len() {
+        12 | 20 => &data[4..],
+        _ => return (0, 0),
+    };
     let crc = u32::from_le_bytes(data[0..4].try_into().unwrap());
-    let start_bytes: [u8; 8] = data[4..12].try_into().unwrap();
-    if crc32(&start_bytes) != crc {
+    if crc32(body) != crc {
         warn!("disk log meta {path:?} corrupt — falling back to start 0");
-        return 0;
+        return (0, 0);
     }
-    u64::from_le_bytes(start_bytes)
+    let start = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let epoch = if body.len() == 16 {
+        u64::from_le_bytes(body[8..16].try_into().unwrap())
+    } else {
+        0
+    };
+    (start, epoch)
 }
 
-fn write_meta(path: &Path, start: u64) -> io::Result<()> {
+fn write_meta(path: &Path, start: u64, epoch: u64) -> io::Result<()> {
     // Fault seam: a scripted failure persisting the log-start offset.
     if fault::active() && fault::check(fault::site::LOG_META, &path.to_string_lossy()).is_some() {
         return Err(fault::injected_error(fault::site::LOG_META));
     }
-    let start_bytes = start.to_le_bytes();
-    let mut data = Vec::with_capacity(12);
-    data.extend_from_slice(&crc32(&start_bytes).to_le_bytes());
-    data.extend_from_slice(&start_bytes);
+    let mut body = Vec::with_capacity(16);
+    body.extend_from_slice(&start.to_le_bytes());
+    body.extend_from_slice(&epoch.to_le_bytes());
+    let mut data = Vec::with_capacity(20);
+    data.extend_from_slice(&crc32(&body).to_le_bytes());
+    data.extend_from_slice(&body);
     let tmp = path.with_extension("bin.tmp");
     std::fs::write(&tmp, &data)?;
     std::fs::rename(&tmp, path)
@@ -424,11 +466,35 @@ mod tests {
         let dir = tmp_dir("meta");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join(META_FILE);
-        assert_eq!(read_meta(&path), 0, "missing meta reads as 0");
-        write_meta(&path, 12345).unwrap();
-        assert_eq!(read_meta(&path), 12345);
-        std::fs::write(&path, b"garbage not 12 b").unwrap();
-        assert_eq!(read_meta(&path), 0);
+        assert_eq!(read_meta(&path), (0, 0), "missing meta reads as (0, 0)");
+        write_meta(&path, 12345, 7).unwrap();
+        assert_eq!(read_meta(&path), (12345, 7));
+        std::fs::write(&path, b"garbage, not a valid meta").unwrap();
+        assert_eq!(read_meta(&path), (0, 0));
+        // Pre-epoch 12-byte format still reads back with epoch 0.
+        let start_bytes = 99u64.to_le_bytes();
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(&crc32(&start_bytes).to_le_bytes());
+        legacy.extend_from_slice(&start_bytes);
+        std::fs::write(&path, &legacy).unwrap();
+        assert_eq!(read_meta(&path), (99, 0), "legacy meta upgrades in place");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn epoch_survives_restart_and_never_regresses() {
+        let dir = tmp_dir("epoch");
+        {
+            let (mut log, _) = DiskLog::open(&dir, 1 << 20, Retention::default()).unwrap();
+            assert_eq!(log.epoch(), 0);
+            log.set_epoch(3);
+            log.set_epoch(2); // stale adopt: ignored
+            assert_eq!(log.epoch(), 3);
+            log.append(&rec(0, vec![1]));
+        }
+        let (back, recs) = DiskLog::open(&dir, 1 << 20, Retention::default()).unwrap();
+        assert_eq!(back.epoch(), 3, "fencing epoch survives the restart");
+        assert_eq!(recs.len(), 1, "records unaffected by epoch writes");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

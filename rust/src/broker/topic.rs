@@ -223,6 +223,24 @@ impl Topic {
         acks
     }
 
+    /// Follower-side replica apply: append one leader record preserving
+    /// its offset and timestamp (no partitioner, no offset assignment).
+    /// The caller batches its own [`Topic::notify_publish`].
+    pub fn append_replica(&self, partition: usize, rec: Arc<Record>) {
+        self.partitions[partition].lock().unwrap().append_replica(rec);
+    }
+
+    /// Replication fencing epoch of one partition.
+    pub fn partition_epoch(&self, partition: usize) -> u64 {
+        self.partitions[partition].lock().unwrap().epoch()
+    }
+
+    /// Adopt a fencing epoch on one partition (forward-only; persisted
+    /// for durable partitions).
+    pub fn set_partition_epoch(&self, partition: usize, epoch: u64) {
+        self.partitions[partition].lock().unwrap().set_epoch(epoch);
+    }
+
     /// Fetch up to `max` records from a partition starting at `from`.
     pub fn fetch(&self, partition: usize, from: u64, max: usize) -> Vec<Arc<Record>> {
         self.partitions[partition].lock().unwrap().fetch(from, max)

@@ -202,6 +202,19 @@ fn cmd_broker(raw: &[String]) -> i32 {
             None,
             "the address clients reach this member under (default: --listen); \
              must appear in --cluster-seed verbatim",
+        )
+        .opt(
+            "replication-factor",
+            Some("1"),
+            "replicas per partition (leader + followers, clamped to the \
+             member count); above 1 the leader streams every append to its \
+             followers and clients fail over on leader death",
+        )
+        .opt(
+            "acks",
+            Some("leader"),
+            "publish acknowledgement level: 'leader' (ack on leader append) \
+             or 'quorum' (hold acks until every in-sync follower confirms)",
         );
     let a = parse_or_exit(spec, raw);
     let core = match a.get("data-dir") {
@@ -242,8 +255,18 @@ fn cmd_broker(raw: &[String]) -> i32 {
     let server = match a.get("cluster-seed") {
         None => BrokerServer::start(core, listen),
         Some(seeds) => {
+            let replication = a.usize("replication-factor").max(1);
             let spec =
-                ClusterSpec::new(seeds.split(',').filter(|s| !s.is_empty()).map(str::to_string));
+                ClusterSpec::new(seeds.split(',').filter(|s| !s.is_empty()).map(str::to_string))
+                    .with_replication(replication);
+            let acks = match a.str("acks") {
+                "leader" => hybridws::broker::protocol::ACKS_LEADER,
+                "quorum" => hybridws::broker::protocol::ACKS_QUORUM,
+                other => {
+                    eprintln!("--acks must be 'leader' or 'quorum', got {other:?}");
+                    return 2;
+                }
+            };
             let advertise = a.get("advertise").unwrap_or(listen).to_string();
             if !spec.contains(&advertise) {
                 eprintln!(
@@ -254,13 +277,18 @@ fn cmd_broker(raw: &[String]) -> i32 {
                 return 2;
             }
             println!(
-                "cluster member {advertise} of {:?} (owner-routed sharding)",
-                spec.members()
+                "cluster member {advertise} of {:?} (owner-routed sharding, \
+                 replication {}, acks={})",
+                spec.members(),
+                spec.replication(),
+                a.str("acks"),
             );
             match TcpListener::bind(listen) {
-                Ok(listener) => {
-                    BrokerServer::start_cluster(core, listener, ClusterView::new(spec, advertise))
-                }
+                Ok(listener) => BrokerServer::start_cluster(
+                    core,
+                    listener,
+                    ClusterView::new(spec, advertise).with_default_acks(acks),
+                ),
                 Err(e) => Err(e),
             }
         }

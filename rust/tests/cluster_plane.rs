@@ -5,30 +5,34 @@
 //! dir, and watch consumers resume from committed offsets with no manual
 //! intervention.
 
+use std::collections::HashSet;
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use hybridws::broker::record::ProducerRecord;
 use hybridws::broker::{
-    BrokerConfig, BrokerCore, BrokerServer, ClusterSpec, ClusterView, StreamBroker,
+    AssignmentMode, BrokerConfig, BrokerCore, BrokerServer, ClusterClient, ClusterSpec,
+    ClusterView, StreamBroker,
 };
 use hybridws::coordinator::prelude::*;
 use hybridws::dstream::api::topic_for_alias;
 use hybridws::dstream::ConsumerMode;
 use hybridws::util::timeutil::{wait_until, TimeScale};
 
-/// Start `n` in-process cluster members. `disk_base = Some(dir)` makes
-/// each member durable under `dir/b<i>` (the restart scenarios);
-/// `None` keeps them in memory.
+/// Start `n` in-process cluster members at `replication` replicas per
+/// partition. `disk_base = Some(dir)` makes each member durable under
+/// `dir/b<i>` (the restart scenarios); `None` keeps them in memory.
 fn start_members(
     n: usize,
+    replication: usize,
     disk_base: Option<&std::path::Path>,
 ) -> (Vec<BrokerServer>, Vec<String>, ClusterSpec) {
     let listeners: Vec<TcpListener> =
         (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
     let addrs: Vec<String> =
         listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
-    let spec = ClusterSpec::new(addrs.clone());
+    let spec = ClusterSpec::new(addrs.clone()).with_replication(replication);
     let servers = listeners
         .into_iter()
         .enumerate()
@@ -80,7 +84,7 @@ fn cluster_workflow_runs_uc3_style_writers_readers() {
         Ok(())
     });
 
-    let (servers, addrs, _spec) = start_members(2, None);
+    let (servers, addrs, _spec) = start_members(2, 1, None);
     let rt = CometRuntime::builder()
         .workers(&[2, 2])
         .cluster(&addrs)
@@ -122,7 +126,7 @@ fn cluster_workflow_runs_uc3_style_writers_readers() {
 
 #[test]
 fn cluster_publishes_shard_across_members() {
-    let (servers, addrs, _spec) = start_members(2, None);
+    let (servers, addrs, _spec) = start_members(2, 1, None);
     let rt = CometRuntime::builder()
         .workers(&[2])
         .cluster(&addrs)
@@ -170,7 +174,7 @@ fn cluster_workflow_survives_member_kill_and_restart() {
         Ok(())
     });
 
-    let (servers, addrs, spec) = start_members(2, Some(&base));
+    let (servers, addrs, spec) = start_members(2, 1, Some(&base));
     let mut servers: Vec<Option<BrokerServer>> = servers.into_iter().map(Some).collect();
     let rt = CometRuntime::builder()
         .workers(&[2])
@@ -211,25 +215,30 @@ fn cluster_workflow_survives_member_kill_and_restart() {
     );
     drop(core);
     let restarted = {
-        let deadline = Instant::now() + Duration::from_secs(5);
-        loop {
-            match TcpListener::bind(&addrs[1]) {
-                Ok(listener) => {
-                    let core =
-                        BrokerCore::with_config(BrokerConfig::disk(base.join("b1"))).unwrap();
-                    break BrokerServer::start_cluster(
-                        core,
-                        listener,
-                        ClusterView::new(spec.clone(), addrs[1].clone()),
-                    )
-                    .unwrap();
-                }
-                Err(e) => {
-                    assert!(Instant::now() < deadline, "rebind {}: {e}", addrs[1]);
-                    std::thread::sleep(Duration::from_millis(50));
-                }
-            }
-        }
+        // Gate the rebind on the OS actually releasing the port (no fixed
+        // sleeps — `wait_until` polls the bind itself).
+        let mut listener = None;
+        assert!(
+            wait_until(
+                || match TcpListener::bind(&addrs[1]) {
+                    Ok(l) => {
+                        listener = Some(l);
+                        true
+                    }
+                    Err(_) => false,
+                },
+                Duration::from_secs(5),
+            ),
+            "rebind {} timed out",
+            addrs[1]
+        );
+        let core = BrokerCore::with_config(BrokerConfig::disk(base.join("b1"))).unwrap();
+        BrokerServer::start_cluster(
+            core,
+            listener.unwrap(),
+            ClusterView::new(spec.clone(), addrs[1].clone()),
+        )
+        .unwrap()
     };
     let recovered = restarted.core().topic_stats(&topic).unwrap();
     assert_eq!(
@@ -263,4 +272,72 @@ fn cluster_workflow_survives_member_kill_and_restart() {
         s.shutdown();
     }
     let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn replicated_cluster_promotes_followers_after_leader_kill() {
+    // PR 7 (HA plane): with `--replication-factor 2` every partition's log
+    // lives on a follower too, so killing one member — with NO restart —
+    // must lose nothing: consumers drain the dead member's partitions from
+    // the promoted followers. The kill is gated on the replication
+    // watermark (every replica covering its leader's high watermark) via
+    // `wait_until`, never a fixed sleep.
+    let (servers, addrs, spec) = start_members(3, 2, None);
+    let mut servers: Vec<Option<BrokerServer>> = servers.into_iter().map(Some).collect();
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("t", 8).unwrap();
+    cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+
+    let recs: Vec<ProducerRecord> =
+        (0..64u64).map(|v| ProducerRecord::new(v.to_le_bytes().to_vec())).collect();
+    cc.publish_batch("t", recs).unwrap();
+
+    // Replication-watermark gate: shipping is asynchronous under
+    // acks=leader, so wait until every replica core covers its leader's
+    // high watermark — otherwise the promotion below could legitimately
+    // lose an unshipped tail.
+    let leader_hw: Vec<u64> = cc.offsets("t").unwrap().iter().map(|&(_, hw)| hw).collect();
+    assert!(
+        wait_until(
+            || (0..8).all(|p| {
+                spec.replica_indices("t", p).into_iter().all(|i| {
+                    servers[i]
+                        .as_ref()
+                        .unwrap()
+                        .core()
+                        .topic_stats("t")
+                        .map(|s| s.high_watermarks.get(p).copied().unwrap_or(0) >= leader_hw[p])
+                        .unwrap_or(false)
+                })
+            }),
+            Duration::from_secs(10),
+        ),
+        "replication watermark never covered the leaders' logs"
+    );
+
+    // Kill member 0, no restart: its partitions stay available only
+    // through their followers.
+    let core = servers[0].as_ref().unwrap().core();
+    servers[0].take().unwrap().shutdown();
+    assert!(
+        wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(5)),
+        "member 0 must release its core"
+    );
+    drop(core);
+
+    let mut seen: HashSet<u64> = HashSet::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while seen.len() < 64 && Instant::now() < deadline {
+        let mf = cc.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 500).unwrap();
+        for (_, batch) in &mf.batches {
+            for r in batch {
+                seen.insert(u64::from_le_bytes(r.value[..8].try_into().unwrap()));
+            }
+        }
+    }
+    assert_eq!(seen.len(), 64, "every record must survive the leader kill via its follower");
+
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
 }

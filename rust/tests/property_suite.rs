@@ -134,6 +134,72 @@ fn prop_rendezvous_placement_is_stable_and_minimal() {
     });
 }
 
+#[test]
+fn prop_replicated_placement_is_ordered_stable_and_promotes_followers() {
+    // PR 7: the ordered replica list (rank 0 = leader) must be (1) a pure
+    // function of (topic, partition) — identical across every seed-list
+    // order and epoch bump, (2) distinct members with the leader at rank
+    // 0, and (3) minimally disruptive on departure: only the departed
+    // member's leaderships move (≈1/N of them), and each promotes that
+    // partition's own first surviving follower — the rendezvous ranking
+    // of the survivors is unchanged by the removal, which is exactly what
+    // makes client-side failover deterministic without coordination.
+    check_with("ordered replica placement", 40, |r: &mut Rng| {
+        // members, replication, partitions, salt
+        (r.range(3, 9), r.range(2, 4), r.range(1, 65), r.next_u64())
+    }, |&(members, replication, parts, salt)| {
+        let addrs: Vec<String> = (0..members).map(|i| format!("10.1.0.{i}:8{i:03}")).collect();
+        let spec = ClusterSpec::new(addrs.clone()).with_replication(replication);
+
+        let mut reversed = addrs.clone();
+        reversed.reverse();
+        let spec_rev = ClusterSpec::new(reversed).with_replication(replication);
+        let mut bumped = spec.clone();
+        bumped.epoch = spec.epoch + salt % 1000 + 1;
+        let owned_list = |s: &ClusterSpec, p: usize| -> Vec<String> {
+            s.replicas("t", p).into_iter().map(str::to_string).collect()
+        };
+        for p in 0..parts {
+            let list = owned_list(&spec, p);
+            ensure(list.len() == replication.min(members), "replica list length wrong")?;
+            let uniq: HashSet<&String> = list.iter().collect();
+            ensure(uniq.len() == list.len(), "replica list repeats a member")?;
+            ensure(list[0] == spec.owner("t", p), "rank 0 must be the owner/leader")?;
+            ensure(list == owned_list(&spec_rev, p), "replica order depends on seed order")?;
+            ensure(list == owned_list(&bumped, p), "replica order depends on epoch")?;
+        }
+
+        // Departure: survivors keep every leadership; the departed
+        // member's partitions each promote their old first follower
+        // (distinctness makes it a survivor whenever the leader departed).
+        let gone = addrs[salt as usize % members].clone();
+        let survivors: Vec<String> = addrs.iter().filter(|a| **a != gone).cloned().collect();
+        let shrunk = ClusterSpec::new(survivors).with_replication(replication);
+        let mut moved = 0usize;
+        for p in 0..parts {
+            let before = owned_list(&spec, p);
+            let after_leader = shrunk.owner("t", p);
+            if before[0] == gone {
+                moved += 1;
+                ensure(
+                    after_leader == before[1],
+                    "promotion must land on the partition's first surviving follower",
+                )?;
+            } else {
+                ensure(after_leader == before[0], "a surviving leader was demoted")?;
+            }
+        }
+        ensure(
+            moved == spec.owned_by(&gone, "t", parts).len(),
+            "moved set must be exactly the departed leader's share",
+        )?;
+        ensure(
+            members < 4 || parts < 32 || moved <= 3 * parts / members,
+            "departure moved far more than the departed member's 1/N share",
+        )
+    });
+}
+
 // ---- analyser properties ----------------------------------------------------
 
 #[test]
