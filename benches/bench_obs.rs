@@ -1,0 +1,77 @@
+//! Observability-plane bench (PR 8): cost of the metrics registry on the
+//! publish hot path — the same embedded `publish_batch` loop timed with
+//! recording enabled (the default) and disabled (every site degrades to a
+//! relaxed load + not-taken branch). Also times one full scrape+render.
+//! Emits `BENCH_obs.json` (CI artifact); run with `--smoke` for CI sizing.
+//! The PR 8 acceptance bar: `overhead_pct` under 3.
+
+use std::time::Instant;
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::BrokerCore;
+use hybridws::util::bench::{banner, Table};
+use hybridws::util::obs;
+
+/// One timed pass: `batches` × `batch`-record publishes. Returns the
+/// record rate in records/s (construction cost rides in both arms alike).
+fn publish_pass(core: &BrokerCore, topic: &str, batches: usize, batch: usize) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..batches {
+        let recs: Vec<ProducerRecord> =
+            (0..batch).map(|j| ProducerRecord::new(vec![(i + j) as u8; 64])).collect();
+        core.publish_batch(topic, recs).unwrap();
+    }
+    (batches * batch) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite rates"));
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    banner("obs", "metrics registry overhead: instrumented vs disabled publish path");
+    let (batches, batch, reps) = if smoke { (200, 32, 3) } else { (2_000, 32, 5) };
+
+    let core = BrokerCore::new();
+    core.create_topic("obs", 4).unwrap();
+    // Warm-up: populate caches, JIT the branch predictors on both arms.
+    publish_pass(&core, "obs", batches / 4 + 1, batch);
+
+    // Interleave the arms so drift (allocator state, cache temperature)
+    // hits both equally; medians across reps absorb outlier passes.
+    let mut on = Vec::with_capacity(reps);
+    let mut off = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        obs::set_enabled(true);
+        on.push(publish_pass(&core, "obs", batches, batch));
+        obs::set_enabled(false);
+        off.push(publish_pass(&core, "obs", batches, batch));
+    }
+    obs::set_enabled(true);
+    let (on_rate, off_rate) = (median(on), median(off));
+    let overhead_pct = (off_rate - on_rate) / off_rate * 100.0;
+
+    // One full scrape + Prometheus render — the cost a `--metrics-addr`
+    // GET or a `Metrics` frame pays.
+    let t0 = Instant::now();
+    let prom = obs::snapshot().render_prometheus();
+    let scrape_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let t = Table::new(&["metric", "value"]);
+    t.row(&["publish_krps_enabled".into(), format!("{:.1}", on_rate / 1e3)]);
+    t.row(&["publish_krps_disabled".into(), format!("{:.1}", off_rate / 1e3)]);
+    t.row(&["overhead_pct".into(), format!("{overhead_pct:.2}")]);
+    t.row(&["scrape_render_us".into(), format!("{scrape_us:.1}")]);
+    t.row(&["exposition_bytes".into(), format!("{}", prom.len())]);
+
+    let records = batches * batch * reps;
+    let json = format!(
+        "{{\"bench\":\"obs\",\"smoke\":{smoke},\"records_per_arm\":{records},\
+         \"enabled_rps\":{on_rate:.0},\"disabled_rps\":{off_rate:.0},\
+         \"overhead_pct\":{overhead_pct:.3},\"scrape_render_us\":{scrape_us:.1}}}"
+    );
+    std::fs::write("BENCH_obs.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_obs.json: {json}\n");
+}

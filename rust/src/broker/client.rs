@@ -613,6 +613,20 @@ impl BrokerClient {
         }
     }
 
+    /// Scrape the broker's observability snapshot (PR 8): every counter,
+    /// gauge and histogram its process has registered. Embedded transports
+    /// read the shared in-process registry directly.
+    pub fn metrics(&self) -> Result<crate::util::obs::Snapshot> {
+        if matches!(self.transport, Transport::Embedded(_)) {
+            return Ok(crate::util::obs::snapshot());
+        }
+        match self.rpc(Request::Metrics)? {
+            Response::Metrics(snap) => Ok(snap),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
     // ---- pipelined publishing (PR 5) ------------------------------------
 
     /// A bounded-window pipelined publisher over this client: up to

@@ -262,6 +262,7 @@ impl Shared {
                     if Instant::now() + backoff > deadline {
                         return Err(BrokerError::Transport(format!("{addr}: {e}")));
                     }
+                    crate::obs_counter!("cluster.client.retries").inc();
                     std::thread::sleep(backoff);
                     backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
                 }
@@ -518,6 +519,7 @@ impl ClusterClient {
                 Ok(offsets) => return Ok(offsets),
                 Err(BrokerError::NotOwner { owner }) if reroutes < 4 => {
                     reroutes += 1;
+                    crate::obs_counter!("cluster.client.reroutes").inc();
                     self.shared.refresh_meta(&target);
                     target = if owner.is_empty() {
                         self.shared.leader_for(topic, partition)
@@ -589,6 +591,7 @@ impl ClusterClient {
                     "failover: promoted {addr} (hw {hw}) to lead {topic}[{partition}] \
                      at epoch {epoch} after losing {dead}"
                 );
+                crate::obs_counter!("cluster.client.failovers").inc();
                 self.shared.set_override(topic, partition, &addr);
                 Some(addr)
             }

@@ -147,6 +147,7 @@ impl ClusterView {
         let epoch = core.partition_epoch(topic, partition)? + 1;
         core.set_partition_epoch(topic, partition, epoch)?;
         self.ha.promote(topic, partition, epoch);
+        crate::obs_counter!("cluster.failover.promotions").inc();
         Ok(epoch)
     }
 

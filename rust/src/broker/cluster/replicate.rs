@@ -277,6 +277,7 @@ impl Replicator {
                     );
                     inner.out_of_sync.insert((f, topic.to_string(), partition), now);
                 }
+                crate::obs_gauge!("replicate.isr_benched").set(inner.out_of_sync.len() as i64);
                 self.ack_cv.notify_all();
                 return Ok(());
             };
@@ -364,11 +365,21 @@ impl Replicator {
                 Ok(hw) => {
                     let mut inner = self.inner.lock().unwrap();
                     let wm = inner.watermarks.entry(key.clone()).or_insert(0);
+                    let prev = *wm;
                     *wm = (*wm).max(hw);
+                    let lag = target.saturating_sub(*wm);
                     if hw >= target {
                         inner.out_of_sync.remove(&key); // caught up: rejoin
                     }
+                    let benched = inner.out_of_sync.len();
                     drop(inner);
+                    crate::obs_counter!("replicate.shipped_records").add(hw.saturating_sub(prev));
+                    crate::util::obs::gauge(&format!(
+                        "replicate.lag_records{{{follower}/{}/{}}}",
+                        job.topic, job.partition
+                    ))
+                    .set(lag as i64);
+                    crate::obs_gauge!("replicate.isr_benched").set(benched as i64);
                     self.ack_cv.notify_all();
                 }
                 Err(BrokerError::Fenced { epoch, by }) => {
@@ -392,6 +403,7 @@ impl Replicator {
                     conns.remove(&follower);
                     let mut inner = self.inner.lock().unwrap();
                     inner.out_of_sync.insert(key, Instant::now());
+                    crate::obs_gauge!("replicate.isr_benched").set(inner.out_of_sync.len() as i64);
                     drop(inner);
                     self.ack_cv.notify_all();
                 }

@@ -13,7 +13,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use thiserror::Error;
 
 use super::group::{AssignmentMode, GroupState};
-use super::record::{ProducerRecord, Record};
+use super::record::{now_ms, ProducerRecord, Record};
 use super::storage::{
     is_session_scoped_topic, looks_like_topic_dir, topic_dir_name, topic_from_dir_name,
     BrokerConfig, OffsetEntry, OffsetStore, StorageMode,
@@ -679,6 +679,21 @@ impl BrokerCore {
         // positions are on record for forensics.
         let claimed: Vec<usize> = batches.iter().map(|&(p, _)| p).collect();
         self.persist_cursors(group, topic, &st, &claimed);
+        if !batches.is_empty() {
+            crate::obs_counter!("broker.fetch.calls").inc();
+            let now = now_ms();
+            for (_, recs) in &batches {
+                crate::obs_counter!("broker.fetch.records").add(recs.len() as u64);
+                // End-to-end delivery latency: the batch's oldest record
+                // was stamped at publish; "now" is the fetch handing it to
+                // a consumer. One observation per batch keeps the hot path
+                // O(batches), not O(records).
+                if let Some(first) = recs.first() {
+                    crate::obs_hist!("broker.latency.publish_to_fetch_us")
+                        .observe_ms_span(first.timestamp_ms, now);
+                }
+            }
+        }
         Ok(MultiFetch { batches, positions })
     }
 

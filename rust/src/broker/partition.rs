@@ -99,6 +99,8 @@ impl PartitionLog {
                 self.trim_to(new_start);
             }
         }
+        crate::obs_counter!("broker.partition.append_records").inc();
+        crate::obs_counter!("broker.partition.append_bytes").add(stored.payload_len() as u64);
         self.bytes += stored.payload_len();
         self.records.push_back(stored);
         offset
@@ -117,6 +119,11 @@ impl PartitionLog {
                 self.trim_to(new_start);
             }
         }
+        // End-to-end replication latency: the leader stamped this record
+        // at its original append; "now" is the follower's apply.
+        crate::obs_hist!("broker.latency.publish_to_replica_us")
+            .observe_ms_span(rec.timestamp_ms, now_ms());
+        crate::obs_counter!("broker.partition.replica_records").inc();
         self.bytes += rec.payload_len();
         self.records.push_back(rec);
     }

@@ -11,6 +11,7 @@
 //! served for old peers and raw-socket tools.
 
 use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
+use crate::util::obs;
 use crate::util::wire::Wire;
 
 use super::embedded::{BrokerError, TopicStats};
@@ -109,6 +110,11 @@ pub enum Request {
     /// leader could have issued and starts accepting writes. Replies with
     /// [`Response::Epoch`] (the new fencing epoch).
     Promote { topic: String, partitions: usize, partition: usize },
+    /// Scrape this broker's full observability snapshot (PR 8): every
+    /// counter/gauge/histogram the process has registered — broker,
+    /// storage, mux, replication, scheduler, fault planes. Replies with
+    /// [`Response::Metrics`].
+    Metrics,
 }
 
 impl Request {
@@ -242,6 +248,7 @@ impl Wire for Request {
                 partitions.encode(w);
                 partition.encode(w);
             }
+            Request::Metrics => w.put_u8(23),
         }
     }
 
@@ -320,6 +327,7 @@ impl Wire for Request {
                 partitions: Wire::decode(r)?,
                 partition: Wire::decode(r)?,
             },
+            23 => Request::Metrics,
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
     }
@@ -350,6 +358,9 @@ pub enum Response {
     RepAck { hw: u64 },
     /// A fencing epoch (reply to [`Request::Promote`]).
     Epoch(u64),
+    /// The broker process's observability snapshot (reply to
+    /// [`Request::Metrics`]).
+    Metrics(obs::Snapshot),
     Err { code: u8, msg: String },
 }
 
@@ -469,6 +480,10 @@ impl Wire for Response {
                 w.put_u8(14);
                 e.encode(w);
             }
+            Response::Metrics(s) => {
+                w.put_u8(15);
+                s.encode(w);
+            }
             Response::Err { code, msg } => {
                 w.put_u8(255);
                 w.put_u8(*code);
@@ -495,6 +510,7 @@ impl Wire for Response {
             12 => Response::Cluster(Wire::decode(r)?),
             13 => Response::RepAck { hw: Wire::decode(r)? },
             14 => Response::Epoch(Wire::decode(r)?),
+            15 => Response::Metrics(Wire::decode(r)?),
             255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
         })
@@ -622,6 +638,7 @@ mod tests {
                 }],
             },
             Request::Promote { topic: "t".into(), partitions: 16, partition: 3 },
+            Request::Metrics,
         ];
         for req in reqs {
             let back = Request::decode_exact(&req.encode_vec()).unwrap();
@@ -677,6 +694,16 @@ mod tests {
             }),
             Response::RepAck { hw: 42 },
             Response::Epoch(3),
+            Response::Metrics(obs::Snapshot {
+                counters: vec![("broker.partition.append_records".into(), 7)],
+                gauges: vec![("mux.inflight".into(), -1), ("sched.queue_depth".into(), 3)],
+                hists: vec![obs::HistSnapshot {
+                    name: "broker.latency.publish_to_fetch_us".into(),
+                    count: 2,
+                    sum_us: 300,
+                    buckets: vec![0, 1, 1],
+                }],
+            }),
             Response::Err { code: 1, msg: "t".into() },
         ];
         for resp in resps {

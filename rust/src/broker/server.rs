@@ -350,6 +350,9 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
     match req {
         Q::Ping => A::Pong,
         Q::Shutdown => A::Ok,
+        // The scrape face of the PR 8 observability plane: one frame
+        // returns every metric the process has registered.
+        Q::Metrics => A::Metrics(crate::util::obs::snapshot()),
         Q::ClusterMeta => A::Cluster(match cluster {
             Some(v) => v.spec.to_wire(),
             None => ClusterMetaWire {

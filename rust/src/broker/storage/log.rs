@@ -129,6 +129,9 @@ impl DiskLog {
             recovered: 0,
             failed: false,
         };
+        // Live segment files this log contributes to the process-wide
+        // gauge; retention/deletion sites decrement it symmetrically.
+        crate::obs_gauge!("storage.segments").add(log.sealed.len() as i64 + 1);
         // Apply retention to what was recovered: a restart must not
         // resurrect sealed segments that aged out (or overflowed the byte
         // cap) while the broker was down or idle.
@@ -167,9 +170,14 @@ impl DiskLog {
             self.active.seal()?;
             let fresh = Segment::create(&self.dir, rec.offset)?;
             self.sealed.push(std::mem::replace(&mut self.active, fresh));
+            crate::obs_counter!("storage.segments.sealed").inc();
+            crate::obs_gauge!("storage.segments").add(1);
             advanced = self.enforce_retention()?;
         }
+        let before = self.active.bytes();
         self.active.append(rec)?;
+        crate::obs_counter!("storage.bytes_written")
+            .add(self.active.bytes().saturating_sub(before));
         Ok(advanced)
     }
 
@@ -192,6 +200,8 @@ impl DiskLog {
             self.start = self.start.max(seg.next_offset());
             advanced = Some(self.start);
             seg.delete()?;
+            crate::obs_counter!("storage.segments.reaped").inc();
+            crate::obs_gauge!("storage.segments").sub(1);
         }
         if advanced.is_some() {
             write_meta(&self.dir.join(META_FILE), self.start, self.epoch)?;
@@ -211,6 +221,8 @@ impl DiskLog {
         let res = (|| -> io::Result<()> {
             while self.sealed.first().is_some_and(|s| s.next_offset() <= up_to) {
                 self.sealed.remove(0).delete()?;
+                crate::obs_counter!("storage.segments.reaped").inc();
+                crate::obs_gauge!("storage.segments").sub(1);
             }
             write_meta(&self.dir.join(META_FILE), self.start, self.epoch)
         })();

@@ -218,6 +218,7 @@ fn enqueue(st: &mut State, id: TaskId) {
     let rec = st.records.get(&id).expect("record for ready task");
     st.scheduler.enqueue(rec);
     st.enqueue_time.insert(id, Instant::now());
+    crate::obs_gauge!("sched.queue_depth").set(st.scheduler.ready_count() as i64);
 }
 
 /// One scheduling pass (Fig 22 timing): place ready tasks, dispatch jobs.
@@ -268,6 +269,8 @@ fn run_schedule(st: &mut State) {
     if !stream_updates.is_empty() {
         st.scheduler.note_producer_locations(stream_updates);
     }
+    crate::obs_counter!("sched.dispatched").add(assignments.len() as u64);
+    crate::obs_gauge!("sched.queue_depth").set(st.scheduler.ready_count() as i64);
 }
 
 fn on_finished(

@@ -55,6 +55,7 @@ impl MetricsRegistry {
     }
 
     pub fn on_analysis(&self, id: TaskId, name: &str, d: Duration) {
+        crate::obs_hist!("task.analysis_us").observe(d);
         let mut t = self.tasks.lock().unwrap();
         let m = t.entry(id).or_default();
         m.name = name.to_string();
@@ -62,21 +63,25 @@ impl MetricsRegistry {
     }
 
     pub fn on_schedule(&self, id: TaskId, d: Duration) {
+        crate::obs_hist!("task.schedule_us").observe(d);
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().schedule_us += d.as_secs_f64() * 1e6;
     }
 
     pub fn on_queue(&self, id: TaskId, d: Duration) {
+        crate::obs_hist!("task.queue_us").observe(d);
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().queue_us = d.as_secs_f64() * 1e6;
     }
 
     pub fn on_transfer(&self, id: TaskId, d: Duration) {
+        crate::obs_hist!("task.transfer_us").observe(d);
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().transfer_us += d.as_secs_f64() * 1e6;
     }
 
     pub fn on_exec(&self, id: TaskId, worker: usize, d: Duration) {
+        crate::obs_hist!("task.exec_us").observe(d);
         let mut t = self.tasks.lock().unwrap();
         let m = t.entry(id).or_default();
         m.exec_us += d.as_secs_f64() * 1e6;
@@ -85,6 +90,8 @@ impl MetricsRegistry {
     }
 
     pub fn on_total(&self, id: TaskId, d: Duration) {
+        crate::obs_hist!("task.total_us").observe(d);
+        crate::obs_counter!("task.completed").inc();
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().total_us = d.as_secs_f64() * 1e6;
     }

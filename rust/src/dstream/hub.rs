@@ -209,6 +209,8 @@ impl DistroStreamHub {
 
     /// Record one publish batch against a stream's counters.
     pub(crate) fn note_publish(&self, id: StreamId, records: u64, bytes: u64) {
+        crate::obs_counter!("stream.records_out").add(records);
+        crate::obs_counter!("stream.bytes_out").add(bytes);
         let mut c = self.counters.lock().unwrap();
         let e = c.entry(id).or_default();
         e.records_out += records;
@@ -219,6 +221,8 @@ impl DistroStreamHub {
     /// Record one poll batch against a stream's counters (empty polls are
     /// not counted — batch efficiency is records per *delivering* batch).
     pub(crate) fn note_poll(&self, id: StreamId, records: u64, bytes: u64) {
+        crate::obs_counter!("stream.records_in").add(records);
+        crate::obs_counter!("stream.bytes_in").add(bytes);
         let mut c = self.counters.lock().unwrap();
         let e = c.entry(id).or_default();
         e.records_in += records;
@@ -229,6 +233,7 @@ impl DistroStreamHub {
     /// Record one broker fetch round trip (delivering or empty) — the
     /// wakeup plane's spin detector.
     pub(crate) fn note_fetch(&self, id: StreamId) {
+        crate::obs_counter!("stream.fetches").inc();
         self.counters.lock().unwrap().entry(id).or_default().fetches += 1;
     }
 

@@ -6,6 +6,7 @@
 //! - `worker --listen <addr> --slots N` — serve as a remote worker process.
 //! - `broker --listen <addr>` — run a standalone stream-broker server.
 //! - `dstream-server --listen <addr>` — run a standalone DistroStream Server.
+//! - `stats --brokers <addrs>` — scrape and render broker metrics (PR 8).
 //! - `info` — registered task functions + AOT model inventory.
 
 use std::net::TcpListener;
@@ -36,6 +37,7 @@ fn main() {
         "worker" => cmd_worker(&rest),
         "broker" => cmd_broker(&rest),
         "dstream-server" => cmd_dstream(&rest),
+        "stats" => cmd_stats(&rest),
         "info" => cmd_info(),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -56,8 +58,9 @@ fn usage() -> String {
          COMMANDS:\n  \
            run <uc1|uc2|uc3|uc4>   run a use-case workload locally (--data-dir durable streams, --cluster scale-out)\n  \
            worker                  serve as a remote worker (--listen, --slots)\n  \
-           broker                  broker server (--listen, --data-dir, --retention-*, --cluster-seed for sharding)\n  \
+           broker                  broker server (--listen, --data-dir, --retention-*, --cluster-seed for sharding, --metrics-addr for Prometheus)\n  \
            dstream-server          standalone DistroStream Server (--listen)\n  \
+           stats                   scrape broker metrics (--brokers, --watch) into one cluster-wide snapshot\n  \
            info                    registered tasks + AOT models",
         hybridws::version()
     )
@@ -215,6 +218,12 @@ fn cmd_broker(raw: &[String]) -> i32 {
             Some("leader"),
             "publish acknowledgement level: 'leader' (ack on leader append) \
              or 'quorum' (hold acks until every in-sync follower confirms)",
+        )
+        .opt(
+            "metrics-addr",
+            None,
+            "also serve this process's metrics as Prometheus text exposition \
+             on this address (e.g. 127.0.0.1:9400)",
         );
     let a = parse_or_exit(spec, raw);
     let core = match a.get("data-dir") {
@@ -296,6 +305,21 @@ fn cmd_broker(raw: &[String]) -> i32 {
     match server {
         Ok(server) => {
             println!("broker listening on {}", server.addr);
+            // Held for the process lifetime: dropping it would stop the
+            // exposition listener.
+            let _metrics_http = match a.get("metrics-addr") {
+                None => None,
+                Some(addr) => match hybridws::util::obs::serve_http(addr) {
+                    Ok(h) => {
+                        println!("metrics (Prometheus) on http://{}/metrics", h.local_addr());
+                        Some(h)
+                    }
+                    Err(e) => {
+                        eprintln!("metrics listener on {addr} failed: {e}");
+                        return 1;
+                    }
+                },
+            };
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -322,6 +346,55 @@ fn cmd_dstream(raw: &[String]) -> i32 {
             eprintln!("dstream-server failed: {e}");
             1
         }
+    }
+}
+
+fn cmd_stats(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("scrape broker metrics into one cluster-wide snapshot")
+        .opt(
+            "brokers",
+            Some("127.0.0.1:9092"),
+            "comma list of broker addresses to scrape (each one answers with \
+             its process-wide registry; the snapshots are merged)",
+        )
+        .opt("interval-ms", Some("1000"), "refresh period with --watch")
+        .flag("watch", "re-scrape and re-render every --interval-ms until killed")
+        .flag("prometheus", "render Prometheus text exposition instead of the table");
+    let a = parse_or_exit(spec, raw);
+    let brokers: Vec<String> =
+        a.str("brokers").split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+    if brokers.is_empty() {
+        eprintln!("--brokers must name at least one address");
+        return 2;
+    }
+    let watch = a.flag("watch");
+    let interval = std::time::Duration::from_millis(a.u64("interval-ms").max(50));
+    loop {
+        let mut merged = hybridws::util::obs::Snapshot::default();
+        let mut scraped = 0usize;
+        for addr in &brokers {
+            match hybridws::broker::BrokerClient::connect(addr).and_then(|c| c.metrics()) {
+                Ok(snap) => {
+                    merged.merge(&snap);
+                    scraped += 1;
+                }
+                Err(e) => eprintln!("scrape {addr}: {e}"),
+            }
+        }
+        if scraped == 0 {
+            eprintln!("no broker answered");
+            return 1;
+        }
+        if a.flag("prometheus") {
+            print!("{}", merged.render_prometheus());
+        } else {
+            println!("== {scraped}/{} brokers ==", brokers.len());
+            print!("{}", merged.render_text());
+        }
+        if !watch {
+            return 0;
+        }
+        std::thread::sleep(interval);
     }
 }
 

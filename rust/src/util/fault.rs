@@ -226,6 +226,11 @@ pub fn check(site: &str, ctx: &str) -> Option<FaultAction> {
         break;
     }
     let action = fired?;
+    // PR 8: fired decisions are also counted per seam in the observability
+    // registry, so tests can assert "the fault plane fired here" without
+    // parsing the scenario log.
+    crate::util::obs::counter(&format!("fault.decisions{{{site}}}")).inc();
+    crate::obs_counter!("fault.decisions").inc();
     let elapsed = state.t0.elapsed().as_millis();
     state.log.push(format!("[+{elapsed:>6} ms] fire {site} ({ctx}): {action:?}"));
     Some(action)

@@ -1,7 +1,10 @@
 //! Minimal `log` backend: level from `HYBRIDWS_LOG` (error|warn|info|debug|trace).
 //!
-//! Prints `HH:MM:SS.mmm LEVEL target: message` to stderr. Install once with
-//! [`init`]; repeated calls are no-ops (safe from tests and examples alike).
+//! Prints `YYYY-MM-DDTHH:MM:SS.mmmZ LEVEL target: message` to stderr (one
+//! RFC 3339-style UTC stamp — earlier revisions printed a date-less
+//! `HH:MM:SS` derived straight from the raw epoch seconds, which made logs
+//! from different days indistinguishable). Install once with [`init`];
+//! repeated calls are no-ops (safe from tests and examples alike).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -23,9 +26,7 @@ impl log::Log for StderrLogger {
             return;
         }
         let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
-        let secs = now.as_secs();
-        let millis = now.subsec_millis();
-        let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+        let stamp = format_utc(now.as_secs(), now.subsec_millis());
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -33,10 +34,35 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("{h:02}:{m:02}:{s:02}.{millis:03} {lvl} {}: {}", record.target(), record.args());
+        eprintln!("{stamp} {lvl} {}: {}", record.target(), record.args());
     }
 
     fn flush(&self) {}
+}
+
+/// Epoch seconds + millis → `YYYY-MM-DDTHH:MM:SS.mmmZ`. Civil-date math
+/// from days-since-epoch (valid for all of the Unix era), so the stamp
+/// carries the date instead of a bare wall-clock remainder.
+fn format_utc(secs: u64, millis: u32) -> String {
+    let days = secs / 86_400;
+    let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+    let (year, month, day) = civil_from_days(days as i64);
+    format!("{year:04}-{month:02}-{day:02}T{h:02}:{m:02}:{s:02}.{millis:03}Z")
+}
+
+/// Days since 1970-01-01 → `(year, month, day)` in the proleptic Gregorian
+/// calendar (the classic era-based algorithm).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097); // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11], March-based
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
 }
 
 /// Parse a level name; unknown names fall back to `Info`.
@@ -84,5 +110,25 @@ mod tests {
     fn unknown_level_defaults_to_info() {
         assert_eq!(parse_level("nonsense"), LevelFilter::Info);
         assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn timestamps_carry_the_date() {
+        assert_eq!(format_utc(0, 0), "1970-01-01T00:00:00.000Z");
+        // A modern date — the old `% 24`-only stamp would have shown a
+        // bare time with no way to tell the day.
+        assert_eq!(format_utc(1_786_147_200, 250), "2026-08-08T00:00:00.250Z");
+        // Leap-year day.
+        assert_eq!(format_utc(1_709_164_800, 0), "2024-02-29T00:00:00.000Z");
+        // End-of-year rollover, mid-day.
+        assert_eq!(format_utc(1_735_689_599, 999), "2024-12-31T23:59:59.999Z");
+    }
+
+    #[test]
+    fn civil_from_days_matches_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(365), (1971, 1, 1));
+        assert_eq!(civil_from_days(11_017), (2000, 3, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
     }
 }

@@ -13,6 +13,9 @@
 //! - [`timeutil`] — scaled durations, stopwatches, human formatting.
 //! - [`fault`] — seeded fault-injection plane (scripted chaos for the
 //!   wire, storage and cluster planes; our jepsen/failpoints).
+//! - [`obs`] — process-global metrics registry: counters/gauges/
+//!   histograms, Prometheus exposition, the `Metrics` scrape payload
+//!   (our prometheus-client + metrics crates).
 
 pub mod bench;
 pub mod bytes;
@@ -21,6 +24,7 @@ pub mod fault;
 pub mod json;
 pub mod logging;
 pub mod mux;
+pub mod obs;
 pub mod quick;
 pub mod rng;
 pub mod threadpool;

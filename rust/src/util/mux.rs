@@ -243,6 +243,7 @@ impl MuxConn {
             // Registered before the frame is queued: the response cannot
             // race its waiter slot.
             p.slots.insert(corr, None);
+            crate::obs_gauge!("mux.inflight").add(1);
         }
         let mut body = ByteWriter::segmented();
         msg.encode(&mut body);
@@ -250,7 +251,9 @@ impl MuxConn {
         {
             let mut q = self.shared.queue.lock().unwrap();
             if q.closed {
-                self.shared.pending.lock().unwrap().slots.remove(&corr);
+                if self.shared.pending.lock().unwrap().slots.remove(&corr).is_some() {
+                    crate::obs_gauge!("mux.inflight").sub(1);
+                }
                 return Err(io::Error::new(
                     io::ErrorKind::BrokenPipe,
                     "mux connection closed",
@@ -297,11 +300,14 @@ impl PendingReply {
         loop {
             if matches!(p.slots.get(&self.corr), Some(Some(_))) {
                 let body = p.slots.remove(&self.corr).expect("slot present");
+                crate::obs_gauge!("mux.inflight").sub(1);
                 return Ok(body.expect("slot filled"));
             }
             if let Some(why) = &p.dead {
                 let why = why.clone();
-                p.slots.remove(&self.corr);
+                if p.slots.remove(&self.corr).is_some() {
+                    crate::obs_gauge!("mux.inflight").sub(1);
+                }
                 return Err(io::Error::new(io::ErrorKind::BrokenPipe, why));
             }
             p = self.shared.recv_cv.wait(p).unwrap();
@@ -321,7 +327,9 @@ impl Drop for PendingReply {
     fn drop(&mut self) {
         if !self.taken {
             // Abandoned call: free the slot; the reader drops unknown ids.
-            self.shared.pending.lock().unwrap().slots.remove(&self.corr);
+            if self.shared.pending.lock().unwrap().slots.remove(&self.corr).is_some() {
+                crate::obs_gauge!("mux.inflight").sub(1);
+            }
         }
     }
 }
@@ -345,6 +353,7 @@ fn run_reader(mut sock: TcpStream, shared: Arc<Shared>) {
         }
         match read_mux_frame(&mut sock, || true) {
             Ok(Some((corr, body))) => {
+                crate::obs_counter!("mux.rx_frames").inc();
                 let mut p = shared.pending.lock().unwrap();
                 if let Some(slot) = p.slots.get_mut(&corr) {
                     *slot = Some(body);
@@ -409,6 +418,9 @@ fn run_writer(mut sock: TcpStream, shared: Arc<Shared>) {
             shared.fail(format!("mux send: {e}"));
             return;
         }
+        crate::obs_counter!("mux.tx_frames").add(batch.len() as u64);
+        let bytes: u64 = batch.iter().map(|(_, body)| 12 + body.len() as u64).sum();
+        crate::obs_counter!("mux.tx_bytes").add(bytes);
     }
 }
 
@@ -587,6 +599,7 @@ pub fn serve_mux_conn<Q, R, D>(
             }
             ServeAction::Park if parked.load(Ordering::SeqCst) < MAX_PARKED_PER_CONN => {
                 parked.fetch_add(1, Ordering::SeqCst);
+                crate::obs_gauge!("mux.parked_polls").add(1);
                 // The request rides in a take-once slot so a failed spawn
                 // (thread exhaustion) can recover it and degrade to inline
                 // dispatch — the same graceful overflow as the park cap —
@@ -603,10 +616,12 @@ pub fn serve_mux_conn<Q, R, D>(
                             responder.send(corr, &resp);
                         }
                         parked.fetch_sub(1, Ordering::SeqCst);
+                        crate::obs_gauge!("mux.parked_polls").sub(1);
                     }
                 });
                 if spawned.is_err() {
                     parked.fetch_sub(1, Ordering::SeqCst);
+                    crate::obs_gauge!("mux.parked_polls").sub(1);
                     let Some(req) = job.lock().unwrap().take() else {
                         continue;
                     };

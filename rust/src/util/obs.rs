@@ -1,0 +1,746 @@
+//! Process-global observability registry: the PR 8 metrics plane.
+//!
+//! Atomic counters, gauges and fixed-bucket histograms registered under
+//! stable hierarchical names (`broker.partition.append_records`,
+//! `mux.inflight`, `replicate.lag_records{…}`, `fault.decisions{…}`).
+//! Zero dependencies, lock-light: registration takes a registry mutex
+//! once per site (hot paths cache the `&'static` handle via the
+//! [`obs_counter!`]/[`obs_gauge!`]/[`obs_hist!`] macros), after which
+//! every update is a relaxed atomic op. A process-wide enable flag
+//! (default on) turns every record site into a no-op branch so the
+//! instrumentation overhead is measurable — `benches/bench_obs.rs`
+//! gates the enabled-vs-disabled publish-throughput delta.
+//!
+//! One [`snapshot`] covers every plane — tasks, streams, wire, storage,
+//! replication, faults — and renders three ways: Prometheus text
+//! exposition ([`Snapshot::render_prometheus`], served by
+//! [`serve_http`]), a human table ([`Snapshot::render_text`], the
+//! `hybridws stats` CLI), and the `Metrics` wire frame (`Snapshot` is
+//! itself `Wire`, so any `BrokerClient` can scrape a remote broker).
+//!
+//! Naming schema: dot-separated hierarchy `plane.component.metric`;
+//! dynamic-label series append `{label}` (e.g. `fault.decisions{mux.write}`,
+//! `replicate.lag_records{addr/topic/p}`). Cardinality is bounded by
+//! construction: labels are fault seams, follower addresses and topic
+//! partitions, never per-record values.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+// ---- metric kinds ------------------------------------------------------
+
+/// Monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (window depth, queue length, lag).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, n: i64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed power-of-two bucket count: bucket `i` holds observations with
+/// value ≤ `2^i` µs, the last bucket is the overflow catch-all
+/// (`2^31` µs ≈ 36 min — far beyond any latency this system produces).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed-bucket latency histogram (microsecond observations).
+///
+/// Power-of-two bounds mean bucketing is a leading-zeros computation and
+/// quantile estimation is a cumulative walk with log-linear interpolation
+/// inside the target bucket — no allocation, no sorting, safe to observe
+/// from the publish hot path.
+pub struct Histogram {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Index of the bucket that holds a `v` µs observation.
+fn bucket_of(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        (64 - (v - 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound (µs) of bucket `i`.
+fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+impl Histogram {
+    /// Record one latency observation in microseconds.
+    pub fn observe_us(&self, us: u64) {
+        if !enabled() {
+            return;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a [`Duration`] observation.
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record a latency given the publish stamp and "now" in epoch ms
+    /// (the cross-process end-to-end tracing path; clock skew between
+    /// machines can make the difference negative — clamp to 0).
+    pub fn observe_ms_span(&self, from_ms: u64, now_ms: u64) {
+        self.observe_us(now_ms.saturating_sub(from_ms) * 1000);
+    }
+
+    fn snap(&self, name: &str) -> HistSnapshot {
+        HistSnapshot {
+            name: name.to_string(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+// ---- registry ----------------------------------------------------------
+
+/// Global enable flag: when off, every record site is a relaxed load + a
+/// not-taken branch (the "uninstrumented" arm of `bench_obs`).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// True when the registry is recording (the default).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on/off process-wide (benchmarks and tests).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: HashMap<String, &'static Counter>,
+    gauges: HashMap<String, &'static Gauge>,
+    hists: HashMap<String, &'static Histogram>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+/// Get-or-register the counter `name`. The handle is `'static` (metrics
+/// live for the process) — hot paths cache it via [`obs_counter!`].
+pub fn counter(name: &str) -> &'static Counter {
+    let mut reg = registry().lock().unwrap();
+    if let Some(c) = reg.counters.get(name) {
+        return c;
+    }
+    let c: &'static Counter = Box::leak(Box::default());
+    reg.counters.insert(name.to_string(), c);
+    c
+}
+
+/// Get-or-register the gauge `name`.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut reg = registry().lock().unwrap();
+    if let Some(g) = reg.gauges.get(name) {
+        return g;
+    }
+    let g: &'static Gauge = Box::leak(Box::default());
+    reg.gauges.insert(name.to_string(), g);
+    g
+}
+
+/// Get-or-register the histogram `name`.
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut reg = registry().lock().unwrap();
+    if let Some(h) = reg.hists.get(name) {
+        return h;
+    }
+    let h: &'static Histogram = Box::leak(Box::default());
+    reg.hists.insert(name.to_string(), h);
+    h
+}
+
+/// Cache a `&'static Counter` in a per-site `OnceLock` so the steady-state
+/// hot path never touches the registry mutex.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static SITE: ::std::sync::OnceLock<&'static $crate::util::obs::Counter> =
+            ::std::sync::OnceLock::new();
+        *SITE.get_or_init(|| $crate::util::obs::counter($name))
+    }};
+}
+
+/// Per-site cached gauge handle (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static SITE: ::std::sync::OnceLock<&'static $crate::util::obs::Gauge> =
+            ::std::sync::OnceLock::new();
+        *SITE.get_or_init(|| $crate::util::obs::gauge($name))
+    }};
+}
+
+/// Per-site cached histogram handle (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_hist {
+    ($name:expr) => {{
+        static SITE: ::std::sync::OnceLock<&'static $crate::util::obs::Histogram> =
+            ::std::sync::OnceLock::new();
+        *SITE.get_or_init(|| $crate::util::obs::histogram($name))
+    }};
+}
+
+// ---- snapshot ----------------------------------------------------------
+
+/// Point-in-time copy of one histogram (wire-encodable).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    pub name: String,
+    pub count: u64,
+    pub sum_us: u64,
+    /// Per-bucket observation counts; bucket `i` bound is `2^i` µs.
+    pub buckets: Vec<u64>,
+}
+
+crate::wire_struct!(HistSnapshot { name: String, count: u64, sum_us: u64, buckets: Vec<u64> });
+
+impl HistSnapshot {
+    /// Estimated quantile in µs (`q` in `[0, 1]`): cumulative bucket walk
+    /// with log-linear interpolation inside the target bucket. Returns 0
+    /// for an empty histogram.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= rank {
+                let lower = if i == 0 { 0 } else { bucket_bound(i - 1) };
+                let upper = bucket_bound(i);
+                let frac = (rank - seen) as f64 / n as f64;
+                return lower + ((upper - lower) as f64 * frac) as u64;
+            }
+            seen += n;
+        }
+        bucket_bound(self.buckets.len().saturating_sub(1))
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
+    pub fn p999_us(&self) -> u64 {
+        self.quantile_us(0.999)
+    }
+
+    /// Mean observation in µs (0 when empty).
+    pub fn mean_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_us / self.count
+        }
+    }
+}
+
+/// Point-in-time copy of the whole registry, sorted by metric name.
+/// `Wire`-encodable: this is the payload of the `Metrics` response frame.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+crate::wire_struct!(Snapshot {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, i64)>,
+    hists: Vec<HistSnapshot>,
+});
+
+/// Snapshot every registered metric (sorted by name for stable output).
+pub fn snapshot() -> Snapshot {
+    let reg = registry().lock().unwrap();
+    let mut counters: Vec<(String, u64)> =
+        reg.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect();
+    let mut gauges: Vec<(String, i64)> =
+        reg.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect();
+    let mut hists: Vec<HistSnapshot> =
+        reg.hists.iter().map(|(k, h)| h.snap(k)).collect();
+    counters.sort_by(|a, b| a.0.cmp(&b.0));
+    gauges.sort_by(|a, b| a.0.cmp(&b.0));
+    hists.sort_by(|a, b| a.name.cmp(&b.name));
+    Snapshot { counters, gauges, hists }
+}
+
+/// `a.b.c{label}` → (`a_b_c`, `Some(label)`): the Prometheus mangling.
+fn prom_name(name: &str) -> (String, Option<&str>) {
+    let (base, label) = match name.split_once('{') {
+        Some((b, rest)) => (b, rest.strip_suffix('}')),
+        None => (name, None),
+    };
+    (base.replace(['.', '-'], "_"), label)
+}
+
+fn prom_line(
+    out: &mut String,
+    name: &str,
+    suffix: &str,
+    extra: &str,
+    value: impl std::fmt::Display,
+) {
+    let (base, label) = prom_name(name);
+    out.push_str(&base);
+    out.push_str(suffix);
+    match (label, extra.is_empty()) {
+        (Some(l), true) => out.push_str(&format!("{{site=\"{l}\"}}")),
+        (Some(l), false) => out.push_str(&format!("{{site=\"{l}\",{extra}}}")),
+        (None, true) => {}
+        (None, false) => out.push_str(&format!("{{{extra}}}")),
+    }
+    out.push(' ');
+    out.push_str(&value.to_string());
+    out.push('\n');
+}
+
+impl Snapshot {
+    /// Counter value by exact registry name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Gauge value by exact registry name.
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Histogram snapshot by exact registry name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    /// Sum of every counter whose name starts with `prefix` (e.g.
+    /// `fault.decisions{` sums the per-site decision series).
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.counters.iter().filter(|(n, _)| n.starts_with(prefix)).map(|&(_, v)| v).sum()
+    }
+
+    /// Fold another process's snapshot into this one — the cluster-wide
+    /// aggregation behind `hybridws stats`. Counters and gauges sum (a
+    /// summed gauge is a fleet total: segments across brokers, in-flight
+    /// across connections); histograms merge bucket-wise, so quantiles
+    /// stay estimable over the union of observations.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (name, v) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += *v,
+                None => self.counters.push((name.clone(), *v)),
+            }
+        }
+        for (name, v) in &other.gauges {
+            match self.gauges.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += *v,
+                None => self.gauges.push((name.clone(), *v)),
+            }
+        }
+        for h in &other.hists {
+            match self.hists.iter_mut().find(|mine| mine.name == h.name) {
+                Some(mine) => {
+                    mine.count += h.count;
+                    mine.sum_us += h.sum_us;
+                    if mine.buckets.len() < h.buckets.len() {
+                        mine.buckets.resize(h.buckets.len(), 0);
+                    }
+                    for (m, v) in mine.buckets.iter_mut().zip(&h.buckets) {
+                        *m += *v;
+                    }
+                }
+                None => self.hists.push(h.clone()),
+            }
+        }
+        self.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        self.gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        self.hists.sort_by(|a, b| a.name.cmp(&b.name));
+    }
+
+    /// Prometheus text exposition (format 0.0.4). Counters/gauges map to
+    /// their types; histograms render as summaries (`{quantile="…"}` +
+    /// `_sum`/`_count`), with quantiles estimated from the fixed buckets.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        // Labeled series sharing a base name are adjacent (the snapshot is
+        // sorted), so one `last_base` suffices to emit each TYPE line once.
+        let mut last_base = String::new();
+        let mut type_line = |out: &mut String, base: &str, kind: &str| {
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                last_base = base.to_string();
+            }
+        };
+        for (name, v) in &self.counters {
+            let (base, _) = prom_name(name);
+            type_line(&mut out, &base, "counter");
+            prom_line(&mut out, name, "_total", "", v);
+        }
+        for (name, v) in &self.gauges {
+            let (base, _) = prom_name(name);
+            type_line(&mut out, &base, "gauge");
+            prom_line(&mut out, name, "", "", v);
+        }
+        for h in &self.hists {
+            let (base, _) = prom_name(&h.name);
+            type_line(&mut out, &base, "summary");
+            prom_line(&mut out, &h.name, "", "quantile=\"0.5\"", h.p50_us());
+            prom_line(&mut out, &h.name, "", "quantile=\"0.99\"", h.p99_us());
+            prom_line(&mut out, &h.name, "", "quantile=\"0.999\"", h.p999_us());
+            prom_line(&mut out, &h.name, "_sum", "", h.sum_us);
+            prom_line(&mut out, &h.name, "_count", "", h.count);
+        }
+        out
+    }
+
+    /// Human-readable table (the `hybridws stats` CLI rendering).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (name, v) in &self.counters {
+                out.push_str(&format!("  {name:<48} {v}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (name, v) in &self.gauges {
+                out.push_str(&format!("  {name:<48} {v}\n"));
+            }
+        }
+        if !self.hists.is_empty() {
+            out.push_str("histograms (µs):\n");
+            for h in &self.hists {
+                out.push_str(&format!(
+                    "  {:<48} n={} mean={} p50={} p99={} p999={}\n",
+                    h.name,
+                    h.count,
+                    h.mean_us(),
+                    h.p50_us(),
+                    h.p99_us(),
+                    h.p999_us(),
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics registered)\n");
+        }
+        out
+    }
+}
+
+// ---- Prometheus HTTP exposition ---------------------------------------
+
+/// Handle to the `--metrics-addr` HTTP listener; dropping it (or calling
+/// [`MetricsHttp::shutdown`]) stops the accept loop.
+pub struct MetricsHttp {
+    addr: SocketAddr,
+    stop: std::sync::Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Serve the registry as Prometheus text exposition on `addr`. One
+/// accept-loop thread, one short-lived response per connection — every
+/// GET (any path) returns the full snapshot. Hand-rolled HTTP/1.1: this
+/// is a diagnostics endpoint, not a web server.
+pub fn serve_http(addr: &str) -> std::io::Result<MetricsHttp> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = std::sync::Arc::new(AtomicBool::new(false));
+    let stop2 = std::sync::Arc::clone(&stop);
+    let handle = std::thread::Builder::new().name("obs-http".into()).spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(mut sock) = conn else { continue };
+            let _ = sock.set_read_timeout(Some(Duration::from_millis(500)));
+            // Drain the request head; the path is irrelevant.
+            let mut head = [0u8; 1024];
+            let _ = sock.read(&mut head);
+            let body = snapshot().render_prometheus();
+            let resp = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                 charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len(),
+            );
+            let _ = sock.write_all(resp.as_bytes());
+        }
+    })?;
+    Ok(MetricsHttp { addr: local, stop, handle: Some(handle) })
+}
+
+impl MetricsHttp {
+    /// The bound address (port resolved when `addr` asked for `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the listener thread.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Wire;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let c = counter("test.obs.counter");
+        let base = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), base + 5);
+        // Same name → same instance.
+        assert_eq!(counter("test.obs.counter").get(), base + 5);
+
+        let g = gauge("test.obs.gauge");
+        g.set(7);
+        g.add(3);
+        g.sub(4);
+        assert_eq!(g.get(), 6);
+    }
+
+    #[test]
+    fn bucket_math_covers_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(5), 3);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(1025), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // Every value lands in the bucket whose bound covers it.
+        for v in [1u64, 2, 3, 9, 100, 4097, 1 << 20] {
+            let i = bucket_of(v);
+            assert!(bucket_bound(i) >= v, "bound of bucket {i} must cover {v}");
+            if i > 0 {
+                assert!(bucket_bound(i - 1) < v, "{v} must not fit the previous bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_are_sane() {
+        let h = histogram("test.obs.hist");
+        // 90 fast observations, 10 slow ones.
+        for _ in 0..90 {
+            h.observe_us(100);
+        }
+        for _ in 0..10 {
+            h.observe_us(60_000);
+        }
+        let snap = h.snap("test.obs.hist");
+        assert_eq!(snap.count, 100);
+        assert_eq!(snap.sum_us, 90 * 100 + 10 * 60_000);
+        let p50 = snap.p50_us();
+        assert!((64..=128).contains(&p50), "p50 {p50} must sit in the 100µs bucket");
+        let p99 = snap.p99_us();
+        assert!(p99 >= 32_768, "p99 {p99} must reflect the slow tail");
+        assert!(snap.p999_us() >= p99);
+        assert_eq!(snap.mean_us(), (90 * 100 + 10 * 60_000) / 100);
+        // Empty histogram: all zeros.
+        let empty = HistSnapshot::default();
+        assert_eq!(empty.quantile_us(0.99), 0);
+        assert_eq!(empty.mean_us(), 0);
+    }
+
+    #[test]
+    fn snapshot_wire_roundtrip() {
+        counter("test.obs.wire.c").add(3);
+        gauge("test.obs.wire.g").set(-9);
+        histogram("test.obs.wire.h").observe_us(1234);
+        let snap = snapshot();
+        let back = Snapshot::decode_exact(&snap.encode_vec()).unwrap();
+        assert_eq!(back, snap);
+        assert!(back.counter("test.obs.wire.c").unwrap() >= 3);
+        assert_eq!(back.gauge("test.obs.wire.g"), Some(-9));
+        assert!(back.hist("test.obs.wire.h").unwrap().count >= 1);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let c = counter("test.obs.disabled");
+        let h = histogram("test.obs.disabled.h");
+        let base = c.get();
+        set_enabled(false);
+        c.add(100);
+        h.observe_us(5);
+        set_enabled(true);
+        assert_eq!(c.get(), base, "disabled counter must not move");
+        c.inc();
+        assert_eq!(c.get(), base + 1);
+    }
+
+    #[test]
+    fn prometheus_rendering_mangles_names_and_labels() {
+        counter("test.prom.plain").inc();
+        counter("test.prom.labeled{seg.append}").add(2);
+        gauge("test.prom.depth").set(4);
+        histogram("test.prom.lat_us").observe_us(10);
+        let text = snapshot().render_prometheus();
+        assert!(text.contains("# TYPE test_prom_plain counter"));
+        assert!(text.contains("test_prom_plain_total "));
+        assert!(text.contains("test_prom_labeled_total{site=\"seg.append\"} 2"));
+        assert!(text.contains("# TYPE test_prom_depth gauge"));
+        assert!(text.contains("test_prom_depth 4"));
+        assert!(text.contains("test_prom_lat_us{quantile=\"0.99\"}"));
+        assert!(text.contains("test_prom_lat_us_count "));
+        // Exposition lines are `name[{labels}] value` — no stray braces.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad exposition line: {line}");
+        }
+    }
+
+    #[test]
+    fn http_exposition_serves_snapshot() {
+        counter("test.http.hits").inc();
+        let srv = serve_http("127.0.0.1:0").unwrap();
+        let mut sock = TcpStream::connect(srv.local_addr()).unwrap();
+        sock.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        sock.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("test_http_hits_total"));
+        drop(srv); // shutdown must not hang
+    }
+
+    #[test]
+    fn merge_sums_series_and_buckets() {
+        let mut a = Snapshot {
+            counters: vec![("c.one".into(), 3), ("c.two".into(), 1)],
+            gauges: vec![("g.depth".into(), 2)],
+            hists: vec![HistSnapshot {
+                name: "h.lat".into(),
+                count: 2,
+                sum_us: 30,
+                buckets: vec![1, 1],
+            }],
+        };
+        let b = Snapshot {
+            counters: vec![("c.one".into(), 4), ("c.three".into(), 9)],
+            gauges: vec![("g.depth".into(), 5), ("g.other".into(), -1)],
+            hists: vec![
+                HistSnapshot {
+                    name: "h.lat".into(),
+                    count: 1,
+                    sum_us: 100,
+                    buckets: vec![0, 0, 1],
+                },
+                HistSnapshot { name: "h.new".into(), count: 1, sum_us: 7, buckets: vec![1] },
+            ],
+        };
+        a.merge(&b);
+        assert_eq!(a.counter("c.one"), Some(7));
+        assert_eq!(a.counter("c.two"), Some(1));
+        assert_eq!(a.counter("c.three"), Some(9));
+        assert_eq!(a.gauge("g.depth"), Some(7));
+        assert_eq!(a.gauge("g.other"), Some(-1));
+        let h = a.hist("h.lat").unwrap();
+        assert_eq!((h.count, h.sum_us), (3, 130));
+        assert_eq!(h.buckets, vec![1, 1, 1]);
+        assert_eq!(a.hist("h.new").unwrap().count, 1);
+        // Merged output stays sorted (render paths rely on it).
+        let names: Vec<&str> = a.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["c.one", "c.three", "c.two"]);
+    }
+
+    #[test]
+    fn snapshot_helpers_find_series() {
+        counter("test.sum.a{x}").add(1);
+        counter("test.sum.a{y}").add(2);
+        let snap = snapshot();
+        assert!(snap.counter_sum("test.sum.a{") >= 3);
+        assert_eq!(snap.counter("test.sum.missing"), None);
+        assert_eq!(snap.gauge("test.sum.missing"), None);
+        assert!(snap.hist("test.sum.missing").is_none());
+    }
+}

@@ -24,6 +24,7 @@ use hybridws::broker::{
     ClusterSpec, ClusterView,
 };
 use hybridws::util::fault::{self, invariants, FaultAction, Rule, Scenario};
+use hybridws::util::obs;
 use hybridws::util::rng::Rng;
 use hybridws::util::timeutil::wait_until;
 
@@ -203,6 +204,11 @@ fn pipelined_publishes_surface_injected_drop_without_hanging() {
     let addr = server.addr.to_string();
     BrokerClient::connect(&addr).unwrap().create_topic("t", 1).unwrap();
 
+    // PR 8: fired decisions surface as per-seam registry counters, so the
+    // assertion below is a counter delta — no parsing of the scenario log.
+    let seam_counter = format!("fault.decisions{{{}}}", fault::site::MUX_WRITE);
+    let decisions_before = obs::snapshot().counter(&seam_counter).unwrap_or(0);
+
     fault::install(seed);
     let _plane = PlaneGuard;
     // Sever the publisher's mux connection on its k-th outgoing batch.
@@ -270,6 +276,12 @@ fn pipelined_publishes_surface_injected_drop_without_hanging() {
     assert!(
         log.iter().any(|l| l.contains("fire mux.write")),
         "scripted drop never fired (seed {seed}): {log:?}"
+    );
+    let decisions_after = obs::snapshot().counter(&seam_counter).unwrap_or(0);
+    assert!(
+        decisions_after > decisions_before,
+        "{seam_counter} must count the fired decision \
+         (before {decisions_before}, after {decisions_after}, seed {seed})"
     );
     save_log("pipelined_publishes_surface_injected_drop_without_hanging", seed, &log);
     server.shutdown();
