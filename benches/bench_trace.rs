@@ -1,0 +1,95 @@
+//! Tracing-plane bench (PR 9): cost of the trace seams on the publish hot
+//! path when **no trace is sampled** — the mode every production request
+//! pays. Two arms over the same embedded `publish_batch` loop:
+//!
+//! - `disabled`: the plane never installed — every seam is one relaxed
+//!   load + not-taken branch.
+//! - `installed_rate0`: the plane installed at sample rate 0 — seams also
+//!   check the ambient thread-local context, which is the real per-seam
+//!   cost a broker running `--trace-sample 0.001` pays on the 99.9% of
+//!   requests that are not sampled.
+//!
+//! Emits `BENCH_trace.json` (CI artifact); `--smoke` for CI sizing. The
+//! PR 9 acceptance bar: `overhead_pct` under 3.
+
+use std::time::Instant;
+
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::BrokerCore;
+use hybridws::util::bench::{banner, Table};
+use hybridws::util::trace;
+
+/// One timed pass: `batches` × `batch`-record publishes. Returns the
+/// record rate in records/s (construction cost rides in both arms alike).
+fn publish_pass(core: &BrokerCore, topic: &str, batches: usize, batch: usize) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..batches {
+        let recs: Vec<ProducerRecord> =
+            (0..batch).map(|j| ProducerRecord::new(vec![(i + j) as u8; 64])).collect();
+        core.publish_batch(topic, recs).unwrap();
+    }
+    (batches * batch) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite rates"));
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    banner("trace", "tracing plane overhead: unsampled seams vs tracing disabled");
+    let (batches, batch, reps) = if smoke { (200, 32, 3) } else { (2_000, 32, 5) };
+
+    let core = BrokerCore::new();
+    core.create_topic("trace", 4).unwrap();
+    // Warm-up: populate caches, settle the branch predictors on both arms.
+    publish_pass(&core, "trace", batches / 4 + 1, batch);
+
+    // Interleave the arms so drift (allocator state, cache temperature)
+    // hits both equally; medians across reps absorb outlier passes.
+    let mut on = Vec::with_capacity(reps);
+    let mut off = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        trace::install(0.0, 0x7ace);
+        on.push(publish_pass(&core, "trace", batches, batch));
+        trace::set_enabled(false);
+        off.push(publish_pass(&core, "trace", batches, batch));
+    }
+    trace::set_enabled(false);
+    let (on_rate, off_rate) = (median(on), median(off));
+    let overhead_pct = (off_rate - on_rate) / off_rate * 100.0;
+
+    // One fully-sampled publish: the span-tree cost a sampled request
+    // pays, plus a render of whatever the ring collected — informational,
+    // not gated (sampled requests are the rare case by construction).
+    trace::install(1.0, 0x7ace);
+    let t0 = Instant::now();
+    core.publish_batch("trace", vec![ProducerRecord::new(vec![1u8; 64])]).unwrap();
+    let sampled_publish_us = t0.elapsed().as_secs_f64() * 1e6;
+    let spans = trace::snapshot_wire(0);
+    let t0 = Instant::now();
+    let rendered = trace::render_traces(&spans, 0);
+    let render_us = t0.elapsed().as_secs_f64() * 1e6;
+    trace::set_enabled(false);
+
+    let t = Table::new(&["metric", "value"]);
+    t.row(&["publish_krps_rate0".into(), format!("{:.1}", on_rate / 1e3)]);
+    t.row(&["publish_krps_disabled".into(), format!("{:.1}", off_rate / 1e3)]);
+    t.row(&["overhead_pct".into(), format!("{overhead_pct:.2}")]);
+    t.row(&["sampled_publish_us".into(), format!("{sampled_publish_us:.1}")]);
+    t.row(&["ring_spans".into(), format!("{}", spans.len())]);
+    t.row(&["render_us".into(), format!("{render_us:.1}")]);
+    drop(rendered);
+
+    let records = batches * batch * reps;
+    let json = format!(
+        "{{\"bench\":\"trace\",\"smoke\":{smoke},\"records_per_arm\":{records},\
+         \"rate0_rps\":{on_rate:.0},\"disabled_rps\":{off_rate:.0},\
+         \"overhead_pct\":{overhead_pct:.3},\"sampled_publish_us\":{sampled_publish_us:.1},\
+         \"ring_spans\":{},\"render_us\":{render_us:.1}}}",
+        spans.len()
+    );
+    std::fs::write("BENCH_trace.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_trace.json: {json}\n");
+}

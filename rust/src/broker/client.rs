@@ -37,6 +37,7 @@ use super::protocol::{error_from_code, ClusterMetaWire, Request, Response};
 use super::record::{ProducerRecord, Record};
 use super::storage::OffsetEntry;
 use crate::util::mux::{MuxConn, MuxSlot, PendingReply};
+use crate::util::trace;
 
 enum Transport {
     /// Zero-copy call-through: polls return `Arc`-shared records.
@@ -244,6 +245,7 @@ impl BrokerClient {
     }
 
     pub fn publish(&self, topic: &str, rec: ProducerRecord) -> Result<(usize, u64)> {
+        let _root = trace::span_root("client.publish");
         match self.rpc(Request::Publish { topic: topic.into(), rec })? {
             Response::PubAck { partition, offset } => Ok((partition, offset)),
             Response::Err { code, msg } => Err(error_from_code(code, msg)),
@@ -256,6 +258,7 @@ impl BrokerClient {
         topic: &str,
         recs: Vec<ProducerRecord>,
     ) -> Result<Vec<(usize, u64)>> {
+        let _root = trace::span_root("client.publish");
         match self.rpc(Request::PublishBatch { topic: topic.into(), recs })? {
             Response::PubBatchAck { acks } => Ok(acks),
             Response::Err { code, msg } => Err(error_from_code(code, msg)),
@@ -313,7 +316,7 @@ impl BrokerClient {
         member: &str,
         max: usize,
     ) -> Result<Vec<Arc<Record>>> {
-        match self.poll_raw(group, topic, member, max) {
+        let res = match self.poll_raw(group, topic, member, max) {
             Err(e @ (BrokerError::UnknownGroup(_) | BrokerError::UnknownMember { .. })) => {
                 if self.rejoin(group, topic, member) {
                     self.poll_raw(group, topic, member, max)
@@ -322,7 +325,15 @@ impl BrokerClient {
                 }
             }
             other => other,
+        };
+        // Close the publish → consume loop: the response carried the
+        // publish's trace ctx (set by the fetch wakeup), so the delivery
+        // shows up as a leaf of the publish's span tree.
+        let rctx = trace::take_reply();
+        if rctx.sampled() && matches!(&res, Ok(rs) if !rs.is_empty()) {
+            trace::record_at(rctx, "consumer.poll", trace::now_us(), 0);
         }
+        res
     }
 
     fn poll_raw(
@@ -381,7 +392,7 @@ impl BrokerClient {
         max_bytes: usize,
         wait_ms: u64,
     ) -> Result<MultiFetch> {
-        match self.fetch_many_wait_raw(group, topic, member, max, max_bytes, wait_ms) {
+        let res = match self.fetch_many_wait_raw(group, topic, member, max, max_bytes, wait_ms) {
             Err(e @ (BrokerError::UnknownGroup(_) | BrokerError::UnknownMember { .. })) => {
                 if self.rejoin(group, topic, member) {
                     self.fetch_many_wait_raw(group, topic, member, max, max_bytes, wait_ms)
@@ -390,7 +401,13 @@ impl BrokerClient {
                 }
             }
             other => other,
+        };
+        // See `poll`: stitch the delivery into the publish's trace.
+        let rctx = trace::take_reply();
+        if rctx.sampled() && matches!(&res, Ok(mf) if !mf.batches.is_empty()) {
+            trace::record_at(rctx, "consumer.poll", trace::now_us(), 0);
         }
+        res
     }
 
     fn fetch_many_wait_raw(
@@ -543,6 +560,7 @@ impl BrokerClient {
         recs: Vec<ProducerRecord>,
         acks: u8,
     ) -> Result<Vec<u64>> {
+        let _root = trace::span_root("client.publish");
         if let Transport::Embedded(core) = &self.transport {
             return core.publish_to(topic, partition, recs);
         }
@@ -627,6 +645,21 @@ impl BrokerClient {
         }
     }
 
+    /// Drain the broker's span flight recorder (PR 9): every finished
+    /// span still in its bounded ring, oldest first. `trace_id = 0`
+    /// returns all traces; non-zero filters to one. Embedded transports
+    /// read the shared in-process ring directly.
+    pub fn spans(&self, trace_id: u64) -> Result<Vec<trace::Span>> {
+        if matches!(self.transport, Transport::Embedded(_)) {
+            return Ok(trace::snapshot_wire(trace_id));
+        }
+        match self.rpc(Request::Spans { trace_id })? {
+            Response::Spans(spans) => Ok(spans),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
     // ---- pipelined publishing (PR 5) ------------------------------------
 
     /// A bounded-window pipelined publisher over this client: up to
@@ -655,6 +688,7 @@ impl BrokerClient {
         recs: Vec<ProducerRecord>,
         acks: u8,
     ) -> PendingPublish {
+        let _root = trace::span_root("client.publish");
         let inner = match &self.transport {
             Transport::Embedded(core) => {
                 PendingKind::Ready(core.publish_to(topic, partition, recs))

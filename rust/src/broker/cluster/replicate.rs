@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::broker::client::BrokerClient;
 use crate::broker::embedded::{BrokerCore, BrokerError, Result};
+use crate::util::trace::{self, TraceCtx};
 
 use super::placement::ClusterSpec;
 
@@ -119,6 +120,9 @@ struct Job {
     count: u64,
     /// Also ship the topic's consumer-group cursors.
     ship_offsets: bool,
+    /// Trace context of the triggering publish — the shipping worker's
+    /// spans (and the Replicate frames it sends) chain onto it.
+    ctx: TraceCtx,
 }
 
 /// Follower shipping state keyed by `(follower addr, topic, partition)`.
@@ -196,6 +200,9 @@ impl Replicator {
 
     /// Queue `count` freshly appended records of `(topic, partition)`
     /// (offsets `[base, base + count)`) for shipping to the followers.
+    /// `ctx` is the publishing request's trace context (or
+    /// [`TraceCtx::NONE`]): the ship spans and the follower applies they
+    /// trigger stitch into the publish's trace.
     pub fn enqueue(
         &self,
         topic: &str,
@@ -203,6 +210,7 @@ impl Replicator {
         partition: usize,
         base: u64,
         count: u64,
+        ctx: TraceCtx,
     ) {
         if count == 0 {
             return;
@@ -215,6 +223,7 @@ impl Replicator {
             base,
             count,
             ship_offsets: false,
+            ctx,
         });
         self.job_cv.notify_all();
     }
@@ -235,6 +244,7 @@ impl Replicator {
             base: 0,
             count: 0,
             ship_offsets: true,
+            ctx: TraceCtx::NONE,
         });
         self.job_cv.notify_all();
     }
@@ -247,6 +257,7 @@ impl Replicator {
     /// leader: availability over replica count, exactly like Kafka's
     /// `min.insync.replicas=1`).
     pub fn wait_quorum(&self, topic: &str, partition: usize, target: u64) -> Result<()> {
+        let _span = trace::span("quorum.wait");
         let deadline = Instant::now() + QUORUM_WAIT;
         let followers = self.followers(topic, partition);
         let mut inner = self.inner.lock().unwrap();
@@ -332,6 +343,9 @@ impl Replicator {
             if job.ship_offsets {
                 self.ship_offsets(&job, &mut conns);
             } else {
+                // The guard makes the publish ctx ambient on this worker
+                // thread, so the Replicate frames shipped below carry it.
+                let _s = trace::span_in(job.ctx, "replicate.ship");
                 self.ship_records(&job, &mut conns);
             }
         }

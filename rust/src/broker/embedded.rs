@@ -19,6 +19,7 @@ use super::storage::{
     BrokerConfig, OffsetEntry, OffsetStore, StorageMode,
 };
 use super::topic::Topic;
+use crate::util::trace;
 
 /// Broker-level errors (mirrored over the wire by `protocol::ErrorCode`).
 #[derive(Debug, Error, Clone, PartialEq, Eq)]
@@ -680,6 +681,15 @@ impl BrokerCore {
         let claimed: Vec<usize> = batches.iter().map(|&(p, _)| p).collect();
         self.persist_cursors(group, topic, &st, &claimed);
         if !batches.is_empty() {
+            // Trace linkage: the publish that produced (some of) this data
+            // stashed its ctx on the topic — file a `fetch.wakeup` under it
+            // and hand the child ctx to the response path, so the consumer
+            // poll stitches into the publish's span tree.
+            let pctx = t.take_publish_ctx();
+            if pctx.sampled() {
+                let child = trace::record_at(pctx, "fetch.wakeup", trace::now_us(), 0);
+                trace::set_reply(child);
+            }
             crate::obs_counter!("broker.fetch.calls").inc();
             let now = now_ms();
             for (_, recs) in &batches {

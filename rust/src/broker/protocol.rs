@@ -12,6 +12,7 @@
 
 use crate::util::bytes::{ByteReader, ByteWriter, DecodeError};
 use crate::util::obs;
+use crate::util::trace;
 use crate::util::wire::Wire;
 
 use super::embedded::{BrokerError, TopicStats};
@@ -115,6 +116,11 @@ pub enum Request {
     /// storage, mux, replication, scheduler, fault planes. Replies with
     /// [`Response::Metrics`].
     Metrics,
+    /// Scrape this broker's span flight recorder (PR 9): every finished
+    /// span still in the ring, optionally filtered to one trace
+    /// (`trace_id == 0` exports everything). Replies with
+    /// [`Response::Spans`].
+    Spans { trace_id: u64 },
 }
 
 impl Request {
@@ -249,6 +255,10 @@ impl Wire for Request {
                 partition.encode(w);
             }
             Request::Metrics => w.put_u8(23),
+            Request::Spans { trace_id } => {
+                w.put_u8(24);
+                trace_id.encode(w);
+            }
         }
     }
 
@@ -328,6 +338,7 @@ impl Wire for Request {
                 partition: Wire::decode(r)?,
             },
             23 => Request::Metrics,
+            24 => Request::Spans { trace_id: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
     }
@@ -361,6 +372,9 @@ pub enum Response {
     /// The broker process's observability snapshot (reply to
     /// [`Request::Metrics`]).
     Metrics(obs::Snapshot),
+    /// The broker process's span flight recorder (reply to
+    /// [`Request::Spans`]).
+    Spans(Vec<trace::Span>),
     Err { code: u8, msg: String },
 }
 
@@ -484,6 +498,10 @@ impl Wire for Response {
                 w.put_u8(15);
                 s.encode(w);
             }
+            Response::Spans(ss) => {
+                w.put_u8(16);
+                ss.encode(w);
+            }
             Response::Err { code, msg } => {
                 w.put_u8(255);
                 w.put_u8(*code);
@@ -511,6 +529,7 @@ impl Wire for Response {
             13 => Response::RepAck { hw: Wire::decode(r)? },
             14 => Response::Epoch(Wire::decode(r)?),
             15 => Response::Metrics(Wire::decode(r)?),
+            16 => Response::Spans(Wire::decode(r)?),
             255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
         })
@@ -639,6 +658,7 @@ mod tests {
             },
             Request::Promote { topic: "t".into(), partitions: 16, partition: 3 },
             Request::Metrics,
+            Request::Spans { trace_id: 0xfeed_beef },
         ];
         for req in reqs {
             let back = Request::decode_exact(&req.encode_vec()).unwrap();
@@ -704,6 +724,15 @@ mod tests {
                     buckets: vec![0, 1, 1],
                 }],
             }),
+            Response::Spans(vec![trace::Span {
+                node: "127.0.0.1:9092".into(),
+                name: "partition.append".into(),
+                trace_id: 0xfeed_beef,
+                span_id: 2,
+                parent_id: 1,
+                start_us: 1_000,
+                dur_us: 42,
+            }]),
             Response::Err { code: 1, msg: "t".into() },
         ];
         for resp in resps {

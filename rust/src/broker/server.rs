@@ -32,6 +32,7 @@ use log::{debug, warn};
 
 use crate::util::fault;
 use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, ServeAction, Sniff};
+use crate::util::trace;
 use crate::util::wire::{read_frame_patient, Wire};
 
 use super::cluster::{ClusterView, Replicator, PLACEMENT_VERSION};
@@ -209,7 +210,7 @@ fn handle_conn(
         }
     };
     match sniff_first_frame(&mut sock, &first, &peer) {
-        Sniff::Mux => serve_mux(core, cluster, stop, sock, peer),
+        Sniff::Mux { trace } => serve_mux(core, cluster, stop, sock, peer, trace),
         Sniff::Reject => {}
         Sniff::Legacy => match Request::decode_exact(&first) {
             Ok(req) => serve_legacy(core, cluster, stop, sock, peer, req),
@@ -256,6 +257,7 @@ fn serve_mux(
     stop: Arc<AtomicBool>,
     sock: TcpStream,
     peer: String,
+    trace: bool,
 ) {
     debug!("broker conn {peer}: mux mode");
     let keep_going = {
@@ -273,7 +275,7 @@ fn serve_mux(
         }
     };
     let dispatch = Arc::new(move |req: Request| dispatch_at(&core, (*cluster).as_ref(), req));
-    serve_mux_conn(sock, &peer, "broker-park", keep_going, classify, dispatch);
+    serve_mux_conn(sock, &peer, "broker-park", trace, keep_going, classify, dispatch);
 }
 
 /// Map one request onto the core (standalone broker: no cluster view).
@@ -326,7 +328,7 @@ fn cluster_publish(
         // (`--acks`) decides whether the ack waits for the quorum.
         if let (Some(rep), Some(&base)) = (view.replicator(), offsets.first()) {
             let count = offsets.len() as u64;
-            rep.enqueue(topic, parts, p, base, count);
+            rep.enqueue(topic, parts, p, base, count, trace::current());
             if view.default_acks() == ACKS_QUORUM {
                 rep.wait_quorum(topic, p, base + count)?;
             }
@@ -343,6 +345,17 @@ fn cluster_publish(
 pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Request) -> Response {
     use Request as Q;
     use Response as A;
+    // The broker-side span of a sampled request: a child of whatever
+    // context the frame carried (ambient on this thread since the serve
+    // loop set it). Inert outside the hot verbs or when unsampled.
+    let _span = match &req {
+        Q::PublishTo { .. } => Some(trace::span("broker.publish_to")),
+        Q::Publish { .. } | Q::PublishBatch { .. } => Some(trace::span("broker.publish")),
+        Q::FetchMany { .. } => Some(trace::span("broker.fetch")),
+        Q::Poll { .. } => Some(trace::span("broker.poll")),
+        Q::Replicate { .. } => Some(trace::span("replica.apply")),
+        _ => None,
+    };
     let to_err = |e: &BrokerError| {
         let (code, msg) = error_payload(e);
         A::Err { code, msg }
@@ -353,6 +366,9 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
         // The scrape face of the PR 8 observability plane: one frame
         // returns every metric the process has registered.
         Q::Metrics => A::Metrics(crate::util::obs::snapshot()),
+        // The scrape face of the PR 9 tracing plane: this process's span
+        // flight recorder, optionally filtered to one trace.
+        Q::Spans { trace_id } => A::Spans(trace::snapshot_wire(trace_id)),
         Q::ClusterMeta => A::Cluster(match cluster {
             Some(v) => v.spec.to_wire(),
             None => ClusterMetaWire {
@@ -386,7 +402,7 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
                     if let Some(rep) = cluster.and_then(|v| v.replicator()) {
                         if let Some(&base) = offsets.first() {
                             let parts = core.partition_count(&topic).unwrap_or(partition + 1);
-                            rep.enqueue(&topic, parts, partition, base, count);
+                            rep.enqueue(&topic, parts, partition, base, count, trace::current());
                             if acks == ACKS_QUORUM {
                                 // Hold the ack until every in-sync follower
                                 // confirms the batch (laggards get benched

@@ -151,6 +151,7 @@ impl DiskLog {
         if self.failed {
             return None;
         }
+        let _s = crate::util::trace::span("segment.write");
         match self.try_append(rec) {
             Ok(advanced) => advanced,
             Err(e) => {

@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 use super::partition::PartitionLog;
 use super::record::{ProducerRecord, Record};
 use super::storage::{topic_dir_name, StorageMode};
+use crate::util::trace::{self, TraceCtx};
 
 /// FNV-1a offset basis — the one hash constant shared by the partitioner
 /// and the cluster placement function.
@@ -52,6 +53,14 @@ pub struct Topic {
     waiters: AtomicU64,
     wait_lock: Mutex<()>,
     wait_cv: Condvar,
+    /// Trace context of the most recent **sampled** publish, stashed so
+    /// the fetch that its wakeup satisfies can chain a `fetch.wakeup`
+    /// span onto the publish's trace. Two relaxed atomics, not one
+    /// locked pair: racing sampled publishes may interleave the halves,
+    /// which at worst files the wakeup under a sibling span of the same
+    /// workload — an orphan in the stitched tree, never corruption.
+    pub_trace: AtomicU64,
+    pub_span: AtomicU64,
 }
 
 impl Topic {
@@ -102,7 +111,28 @@ impl Topic {
             waiters: AtomicU64::new(0),
             wait_lock: Mutex::new(()),
             wait_cv: Condvar::new(),
+            pub_trace: AtomicU64::new(0),
+            pub_span: AtomicU64::new(0),
         }
+    }
+
+    /// Stash the ambient trace context for the next fetch wakeup (no-op
+    /// for unsampled publishes). Called **before** [`Topic::notify_publish`]
+    /// so a woken fetch observes it.
+    fn stash_publish_ctx(&self) {
+        let ctx = trace::current();
+        if ctx.sampled() {
+            self.pub_trace.store(ctx.trace_id, Ordering::Relaxed);
+            self.pub_span.store(ctx.span_id, Ordering::Relaxed);
+        }
+    }
+
+    /// Take (at most once) the trace context of the publish that most
+    /// recently appended to this topic — the fetch-wakeup linkage.
+    pub fn take_publish_ctx(&self) -> TraceCtx {
+        let trace_id = self.pub_trace.swap(0, Ordering::Relaxed);
+        let span_id = self.pub_span.swap(0, Ordering::Relaxed);
+        TraceCtx { trace_id, span_id }
     }
 
     // ---- publish notifier ----------------------------------------------
@@ -166,15 +196,19 @@ impl Topic {
 
     /// Append to the chosen partition; returns (partition, offset).
     pub fn publish(&self, rec: ProducerRecord) -> (usize, u64) {
+        let _s = trace::span("partition.append");
         let p = self.pick_partition(&rec);
         let offset = self.partitions[p].lock().unwrap().append(rec);
+        self.stash_publish_ctx();
         self.notify_publish();
         (p, offset)
     }
 
     /// Append to an explicit partition; returns the offset.
     pub fn publish_to(&self, partition: usize, rec: ProducerRecord) -> u64 {
+        let _s = trace::span("partition.append");
         let offset = self.partitions[partition].lock().unwrap().append(rec);
+        self.stash_publish_ctx();
         self.notify_publish();
         offset
     }
@@ -186,10 +220,12 @@ impl Topic {
         if recs.is_empty() {
             return Vec::new();
         }
+        let _s = trace::span("partition.append");
         let offsets = {
             let mut log = self.partitions[partition].lock().unwrap();
             recs.into_iter().map(|rec| log.append(rec)).collect()
         };
+        self.stash_publish_ctx();
         self.notify_publish();
         offsets
     }
@@ -200,6 +236,7 @@ impl Topic {
     /// partitions): one partitioner pass builds per-partition index
     /// buckets, then each non-empty bucket appends under one lock.
     pub fn publish_many(&self, recs: Vec<ProducerRecord>) -> Vec<(usize, u64)> {
+        let _s = trace::span("partition.append");
         let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.partitions.len()];
         for (i, rec) in recs.iter().enumerate() {
             buckets[self.pick_partition(rec)].push(i);
@@ -217,6 +254,7 @@ impl Topic {
             }
         }
         if !acks.is_empty() {
+            self.stash_publish_ctx();
             // One wakeup per batch — waiters drain everything they can see.
             self.notify_publish();
         }

@@ -18,6 +18,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::dstream::api::StreamId;
+use crate::util::trace::{self, TraceCtx};
 
 use super::analyser::TaskId;
 
@@ -47,6 +48,11 @@ pub type StreamStats = crate::dstream::StreamCounters;
 pub struct MetricsRegistry {
     tasks: Mutex<HashMap<TaskId, TaskMetrics>>,
     streams: Mutex<HashMap<StreamId, StreamStats>>,
+    /// Task-level trace roots (PR 9): opened at analysis, closed at
+    /// completion, with each phase duration filed as a child span — so a
+    /// task's lifecycle shows up in `hybridws trace` next to the broker
+    /// spans its data plane produced.
+    trace_roots: Mutex<HashMap<TaskId, TraceCtx>>,
 }
 
 impl MetricsRegistry {
@@ -54,8 +60,32 @@ impl MetricsRegistry {
         Self::default()
     }
 
+    /// File one already-timed phase as a child span of the task's trace
+    /// root (no-op for untraced tasks). The phase ended "now"; its start
+    /// is back-dated by the measured duration.
+    fn trace_phase(&self, id: TaskId, name: &'static str, d: Duration) {
+        if !trace::enabled() {
+            return;
+        }
+        let root =
+            self.trace_roots.lock().unwrap().get(&id).copied().unwrap_or(TraceCtx::NONE);
+        if root.sampled() {
+            let d_us = (d.as_secs_f64() * 1e6) as u64;
+            trace::record_at(root, name, trace::now_us().saturating_sub(d_us), d_us);
+        }
+    }
+
     pub fn on_analysis(&self, id: TaskId, name: &str, d: Duration) {
         crate::obs_hist!("task.analysis_us").observe(d);
+        // A task's trace starts at analysis: one sampling draw decides
+        // whether this task's whole lifecycle is recorded.
+        if trace::enabled() {
+            let root = trace::start_trace();
+            if root.sampled() {
+                self.trace_roots.lock().unwrap().insert(id, root);
+            }
+        }
+        self.trace_phase(id, "task.analysis", d);
         let mut t = self.tasks.lock().unwrap();
         let m = t.entry(id).or_default();
         m.name = name.to_string();
@@ -64,24 +94,28 @@ impl MetricsRegistry {
 
     pub fn on_schedule(&self, id: TaskId, d: Duration) {
         crate::obs_hist!("task.schedule_us").observe(d);
+        self.trace_phase(id, "task.schedule", d);
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().schedule_us += d.as_secs_f64() * 1e6;
     }
 
     pub fn on_queue(&self, id: TaskId, d: Duration) {
         crate::obs_hist!("task.queue_us").observe(d);
+        self.trace_phase(id, "task.queue", d);
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().queue_us = d.as_secs_f64() * 1e6;
     }
 
     pub fn on_transfer(&self, id: TaskId, d: Duration) {
         crate::obs_hist!("task.transfer_us").observe(d);
+        self.trace_phase(id, "task.transfer", d);
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().transfer_us += d.as_secs_f64() * 1e6;
     }
 
     pub fn on_exec(&self, id: TaskId, worker: usize, d: Duration) {
         crate::obs_hist!("task.exec_us").observe(d);
+        self.trace_phase(id, "task.exec", d);
         let mut t = self.tasks.lock().unwrap();
         let m = t.entry(id).or_default();
         m.exec_us += d.as_secs_f64() * 1e6;
@@ -92,6 +126,12 @@ impl MetricsRegistry {
     pub fn on_total(&self, id: TaskId, d: Duration) {
         crate::obs_hist!("task.total_us").observe(d);
         crate::obs_counter!("task.completed").inc();
+        // Close the task's trace: the root span covers the whole
+        // lifecycle and triggers the slow-request log when over budget.
+        if let Some(root) = self.trace_roots.lock().unwrap().remove(&id) {
+            let d_us = (d.as_secs_f64() * 1e6) as u64;
+            trace::record_root_at(root, "task", trace::now_us().saturating_sub(d_us), d_us);
+        }
         let mut t = self.tasks.lock().unwrap();
         t.entry(id).or_default().total_us = d.as_secs_f64() * 1e6;
     }
@@ -149,6 +189,7 @@ impl MetricsRegistry {
     pub fn clear(&self) {
         self.tasks.lock().unwrap().clear();
         self.streams.lock().unwrap().clear();
+        self.trace_roots.lock().unwrap().clear();
     }
 
     pub fn len(&self) -> usize {

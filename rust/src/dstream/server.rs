@@ -453,7 +453,7 @@ fn handle_conn(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, mut sock:
         }
     };
     match sniff_first_frame(&mut sock, &first, "dstream") {
-        Sniff::Mux => serve_mux(reg, stop, sock),
+        Sniff::Mux { trace } => serve_mux(reg, stop, sock, trace),
         Sniff::Reject => {}
         Sniff::Legacy => match DsRequest::decode_exact(&first) {
             Ok(req) => serve_legacy(reg, stop, sock, req),
@@ -492,7 +492,7 @@ fn serve_legacy(
 /// and answer out of order by correlation id, so an `AnnounceFile`
 /// pipelined behind a parked poll on the **same** connection is dispatched
 /// immediately — it is the very frame that wakes the poll.
-fn serve_mux(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, sock: TcpStream) {
+fn serve_mux(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, sock: TcpStream, trace: bool) {
     let keep_going = {
         let stop = Arc::clone(&stop);
         move || !stop.load(Ordering::SeqCst)
@@ -508,7 +508,7 @@ fn serve_mux(reg: Arc<Mutex<StreamRegistry>>, stop: Arc<AtomicBool>, sock: TcpSt
         }
     };
     let dispatch_one = Arc::new(move |req: DsRequest| dispatch(&reg, req));
-    serve_mux_conn(sock, "dstream", "dstream-park", keep_going, classify, dispatch_one);
+    serve_mux_conn(sock, "dstream", "dstream-park", trace, keep_going, classify, dispatch_one);
 }
 
 #[cfg(test)]

@@ -7,6 +7,8 @@
 //! - `broker --listen <addr>` — run a standalone stream-broker server.
 //! - `dstream-server --listen <addr>` — run a standalone DistroStream Server.
 //! - `stats --brokers <addrs>` — scrape and render broker metrics (PR 8).
+//! - `trace --brokers <addrs>` — merge broker span rings into stitched
+//!   trace timelines (PR 9).
 //! - `info` — registered task functions + AOT model inventory.
 
 use std::net::TcpListener;
@@ -38,6 +40,7 @@ fn main() {
         "broker" => cmd_broker(&rest),
         "dstream-server" => cmd_dstream(&rest),
         "stats" => cmd_stats(&rest),
+        "trace" => cmd_trace(&rest),
         "info" => cmd_info(),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -61,6 +64,7 @@ fn usage() -> String {
            broker                  broker server (--listen, --data-dir, --retention-*, --cluster-seed for sharding, --metrics-addr for Prometheus)\n  \
            dstream-server          standalone DistroStream Server (--listen)\n  \
            stats                   scrape broker metrics (--brokers, --watch) into one cluster-wide snapshot\n  \
+           trace                   merge broker span rings (--brokers) into stitched trace timelines (--trace-id, --slow-ms, --self-test)\n  \
            info                    registered tasks + AOT models",
         hybridws::version()
     )
@@ -223,9 +227,31 @@ fn cmd_broker(raw: &[String]) -> i32 {
             "metrics-addr",
             None,
             "also serve this process's metrics as Prometheus text exposition \
-             on this address (e.g. 127.0.0.1:9400)",
-        );
+             on this address (e.g. 127.0.0.1:9400); the same listener \
+             answers /healthz liveness probes",
+        )
+        .opt(
+            "trace-sample",
+            Some("0"),
+            "tracing plane (PR 9): probability [0,1] that a request starting \
+             here opens a new trace (0 still records spans for sampled \
+             contexts arriving over the wire)",
+        )
+        .opt(
+            "trace-slow-ms",
+            Some("0"),
+            "log any finished root span slower than this many ms with its \
+             full child breakdown (0 = off)",
+        )
+        .opt("trace-seed", Some("0"), "seed for the trace-id generator (reproducible runs)");
     let a = parse_or_exit(spec, raw);
+    let trace_sample = a.f64("trace-sample");
+    let trace_slow_ms = a.u64("trace-slow-ms");
+    if trace_sample > 0.0 || trace_slow_ms > 0 {
+        hybridws::util::trace::install(trace_sample, a.u64("trace-seed"));
+        hybridws::util::trace::set_slow_ms(trace_slow_ms);
+        println!("tracing: sample {trace_sample}, slow threshold {trace_slow_ms}ms");
+    }
     let core = match a.get("data-dir") {
         None => BrokerCore::new(),
         Some(dir) => {
@@ -305,6 +331,18 @@ fn cmd_broker(raw: &[String]) -> i32 {
     match server {
         Ok(server) => {
             println!("broker listening on {}", server.addr);
+            // Exported spans carry the broker's address as their node
+            // label; /healthz reports the same identity plus the start
+            // epoch so probes can detect restarts.
+            hybridws::util::trace::set_node(&server.addr.to_string());
+            let started = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            hybridws::util::obs::set_identity(&format!(
+                "broker {} epoch {started}",
+                server.addr
+            ));
             // Held for the process lifetime: dropping it would stop the
             // exposition listener.
             let _metrics_http = match a.get("metrics-addr") {
@@ -369,6 +407,10 @@ fn cmd_stats(raw: &[String]) -> i32 {
     }
     let watch = a.flag("watch");
     let interval = std::time::Duration::from_millis(a.u64("interval-ms").max(50));
+    // Watch mode renders per-second deltas against the previous scrape
+    // (counters and histogram counts as rates, gauges absolute); the
+    // first iteration has no baseline and renders the absolute table.
+    let mut prev: Option<(hybridws::util::obs::Snapshot, std::time::Instant)> = None;
     loop {
         let mut merged = hybridws::util::obs::Snapshot::default();
         let mut scraped = 0usize;
@@ -389,12 +431,130 @@ fn cmd_stats(raw: &[String]) -> i32 {
             print!("{}", merged.render_prometheus());
         } else {
             println!("== {scraped}/{} brokers ==", brokers.len());
-            print!("{}", merged.render_text());
+            match &prev {
+                Some((snap, at)) if watch => {
+                    print!("{}", merged.render_text_delta(snap, at.elapsed().as_secs_f64()));
+                }
+                _ => print!("{}", merged.render_text()),
+            }
         }
         if !watch {
             return 0;
         }
+        prev = Some((merged, std::time::Instant::now()));
         std::thread::sleep(interval);
+    }
+}
+
+/// `hybridws trace` — the stitched-timeline CLI (PR 9): drain every
+/// broker's span flight recorder, merge, and render causally-linked
+/// trees. `--self-test` additionally runs one fully-sampled publish +
+/// poll through the first broker and renders the resulting trace — the
+/// client-side spans live in *this* process's ring and are merged in.
+fn cmd_trace(raw: &[String]) -> i32 {
+    use hybridws::broker::BrokerClient;
+    use hybridws::util::trace;
+
+    let spec = ArgSpec::new("merge broker span rings into stitched trace timelines")
+        .opt(
+            "brokers",
+            Some("127.0.0.1:9092"),
+            "comma list of broker addresses whose span rings to merge",
+        )
+        .opt("trace-id", Some("0"), "render only this trace (decimal or 0x-prefixed hex; 0 = all)")
+        .opt("slow-ms", Some("0"), "render only traces whose root span took at least this many ms")
+        .flag(
+            "self-test",
+            "publish + poll one fully-traced record through the first broker \
+             and render its stitched tree (exit 1 if the tree is incomplete)",
+        );
+    let a = parse_or_exit(spec, raw);
+    let brokers: Vec<String> =
+        a.str("brokers").split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+    if brokers.is_empty() {
+        eprintln!("--brokers must name at least one address");
+        return 2;
+    }
+    let raw_id = a.str("trace-id");
+    let Some(mut trace_id) = parse_trace_id(raw_id) else {
+        eprintln!("--trace-id must be decimal or 0x-prefixed hex, got {raw_id:?}");
+        return 2;
+    };
+    let slow_us = a.u64("slow-ms") * 1000;
+
+    let mut spans: Vec<trace::Span> = Vec::new();
+    let self_test = a.flag("self-test");
+    if self_test {
+        trace::install(1.0, 0x7ace);
+        trace::set_node("trace-cli");
+        let topic = "trace-selftest";
+        let group = "trace-selftest-g";
+        let res = BrokerClient::connect(&brokers[0]).and_then(|client| {
+            client.ensure_topic(topic, 1)?;
+            client.join_group(group, topic, "m0", hybridws::broker::AssignmentMode::Shared)?;
+            client.publish(topic, hybridws::broker::record::ProducerRecord::new(
+                b"trace self-test".to_vec(),
+            ))?;
+            client.fetch_many_wait(group, topic, "m0", 16, usize::MAX, 2_000)
+        });
+        if let Err(e) = res {
+            eprintln!("self-test workload failed: {e}");
+            return 1;
+        }
+        // The client.publish root ran in this process — its ring seeds the
+        // merge and pins the trace id to render.
+        let local = trace::snapshot_wire(0);
+        if trace_id == 0 {
+            trace_id = local
+                .iter()
+                .find(|s| s.name == "client.publish")
+                .map(|s| s.trace_id)
+                .unwrap_or(0);
+        }
+        spans.extend(local);
+    }
+
+    let mut answered = 0usize;
+    for addr in &brokers {
+        match BrokerClient::connect(addr).and_then(|c| c.spans(trace_id)) {
+            Ok(remote) => {
+                spans.extend(remote);
+                answered += 1;
+            }
+            Err(e) => eprintln!("spans {addr}: {e}"),
+        }
+    }
+    if answered == 0 && !self_test {
+        eprintln!("no broker answered");
+        return 1;
+    }
+    if trace_id != 0 {
+        spans.retain(|s| s.trace_id == trace_id);
+    }
+    print!("{}", trace::render_traces(&spans, slow_us));
+    if self_test {
+        // A complete self-test tree spans both processes: the client root
+        // plus at least one broker-side span under the same trace id.
+        let client_side = spans.iter().any(|s| s.name == "client.publish");
+        let broker_side = spans.iter().any(|s| s.node != "trace-cli");
+        if !(client_side && broker_side) {
+            eprintln!(
+                "self-test: incomplete trace (client span: {client_side}, \
+                 broker spans: {broker_side}) — is the broker running with \
+                 --trace-sample or --trace-slow-ms?"
+            );
+            return 1;
+        }
+        println!("self-test: stitched trace 0x{trace_id:016x} spans both processes");
+    }
+    0
+}
+
+/// Parse a trace id as decimal or `0x`-prefixed hex.
+fn parse_trace_id(s: &str) -> Option<u64> {
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
     }
 }
 

@@ -16,6 +16,9 @@
 //! - [`obs`] — process-global metrics registry: counters/gauges/
 //!   histograms, Prometheus exposition, the `Metrics` scrape payload
 //!   (our prometheus-client + metrics crates).
+//! - [`trace`] — process-global tracing plane: wire-propagated trace
+//!   contexts, a bounded span flight recorder, stitched timeline
+//!   rendering (our opentelemetry).
 
 pub mod bench;
 pub mod bytes;
@@ -29,4 +32,5 @@ pub mod quick;
 pub mod rng;
 pub mod threadpool;
 pub mod timeutil;
+pub mod trace;
 pub mod wire;

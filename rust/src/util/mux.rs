@@ -21,8 +21,17 @@
 //! connection to mux framing. A legacy peer cannot decode the hello (the
 //! magic is an invalid request tag) and closes the connection, which the
 //! client reports as a clear handshake error — mixed old/new peers fail
-//! fast instead of desynchronising. Version-tagged: a peer speaking a
-//! different [`MUX_VERSION`] is rejected at the handshake.
+//! fast instead of desynchronising.
+//!
+//! Since PR 9 the hello **negotiates the frame-header version**: the
+//! server acks `min(peer_version, MUX_VERSION)` and both sides frame at
+//! the negotiated version. Version 2 widens the per-frame header with a
+//! propagated [`TraceCtx`] (`[u32 len][u64 corr][u64 trace_id]
+//! [u64 span_id][body]`, on requests *and* responses) so distributed
+//! traces cross the socket; version-1 peers keep the old 8-byte
+//! `[corr]` header. Pre-negotiation v1 servers ack their own hello and
+//! then drop mismatched connections, so a v2 client that receives a v1
+//! ack redials and speaks v1 from the first frame.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, Read, Write};
@@ -33,6 +42,7 @@ use std::time::Duration;
 
 use crate::util::bytes::{ByteWriter, SharedBytes};
 use crate::util::fault;
+use crate::util::trace::{self, TraceCtx};
 use crate::util::wire::{
     read_frame_patient, recv_msg_patient, send_msg_buf, write_all_vectored, write_frame,
     write_frame_parts, Wire, MAX_FRAME,
@@ -43,20 +53,28 @@ use crate::util::wire::{
 /// misreading it.
 pub const MUX_MAGIC: [u8; 4] = *b"HWMX";
 
-/// Mux protocol version — bumped on incompatible frame-format changes so
-/// mixed-version peers fail fast at the handshake with a clear error.
-pub const MUX_VERSION: u32 = 1;
+/// Mux protocol version. The hello negotiates `min` across the peers:
+/// - **1** — frames are `[u32 len][u64 corr][body]`.
+/// - **2** — frames are `[u32 len][u64 corr][u64 trace_id][u64 span_id]
+///   [body]`: every frame carries a trace context (zero = unsampled).
+pub const MUX_VERSION: u32 = 2;
 
 /// How long a connecting client waits for the server's hello ack before
 /// declaring the peer incompatible (a legacy server closes immediately; a
 /// silent one must not hang the connect forever).
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// The 8-byte hello/ack payload: magic + version.
+/// The 8-byte hello/ack payload: magic + our version.
 pub fn hello_frame() -> [u8; 8] {
+    hello_frame_v(MUX_VERSION)
+}
+
+/// A hello/ack at an explicit version (downgrade redials, negotiation
+/// acks).
+pub fn hello_frame_v(version: u32) -> [u8; 8] {
     let mut buf = [0u8; 8];
     buf[..4].copy_from_slice(&MUX_MAGIC);
-    buf[4..].copy_from_slice(&MUX_VERSION.to_le_bytes());
+    buf[4..].copy_from_slice(&version.to_le_bytes());
     buf
 }
 
@@ -69,36 +87,64 @@ pub fn parse_hello(buf: &[u8]) -> Option<u32> {
     }
 }
 
-/// Read one mux frame: `(corr, body)` where `body` is a zero-copy view of
-/// the received frame buffer. `None` on clean close / stop between frames.
+/// Read one mux frame: `(corr, ctx, body)` where `body` is a zero-copy
+/// view of the received frame buffer. `trace` selects the negotiated
+/// header layout (v2 carries a [`TraceCtx`]; v1 frames decode with
+/// `ctx == TraceCtx::NONE`). `None` on clean close / stop between frames.
 pub fn read_mux_frame<R: Read>(
     sock: &mut R,
+    trace: bool,
     keep_going: impl FnMut() -> bool,
-) -> io::Result<Option<(u64, SharedBytes)>> {
+) -> io::Result<Option<(u64, TraceCtx, SharedBytes)>> {
     let Some(buf) = read_frame_patient(sock, keep_going)? else {
         return Ok(None);
     };
-    if buf.len() < 8 {
+    let hdr = if trace { 24 } else { 8 };
+    if buf.len() < hdr {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
-            "mux frame shorter than its correlation id",
+            "mux frame shorter than its header",
         ));
     }
     let corr = u64::from_le_bytes(buf[..8].try_into().expect("8-byte slice"));
+    let ctx = if trace {
+        TraceCtx {
+            trace_id: u64::from_le_bytes(buf[8..16].try_into().expect("8-byte slice")),
+            span_id: u64::from_le_bytes(buf[16..24].try_into().expect("8-byte slice")),
+        }
+    } else {
+        TraceCtx::NONE
+    };
     let frame = SharedBytes::new(buf);
-    let body = frame.slice(8, frame.len());
-    Ok(Some((corr, body)))
+    let body = frame.slice(hdr, frame.len());
+    Ok(Some((corr, ctx, body)))
 }
 
-/// Write one mux frame (`corr` + `body`) as a single vectored write.
-pub fn write_mux_frame<W: Write>(sock: &mut W, corr: u64, body: &ByteWriter) -> io::Result<()> {
-    write_frame_parts(sock, &corr.to_le_bytes(), body)
+/// Write one mux frame (`corr` + optional trace context + `body`) as a
+/// single vectored write, framed at the negotiated version.
+pub fn write_mux_frame<W: Write>(
+    sock: &mut W,
+    corr: u64,
+    ctx: TraceCtx,
+    body: &ByteWriter,
+    trace: bool,
+) -> io::Result<()> {
+    if trace {
+        let mut prefix = [0u8; 24];
+        prefix[..8].copy_from_slice(&corr.to_le_bytes());
+        prefix[8..16].copy_from_slice(&ctx.trace_id.to_le_bytes());
+        prefix[16..24].copy_from_slice(&ctx.span_id.to_le_bytes());
+        write_frame_parts(sock, &prefix, body)
+    } else {
+        write_frame_parts(sock, &corr.to_le_bytes(), body)
+    }
 }
 
 // ---- client side ---------------------------------------------------------
 
-/// One request queued for the writer thread.
-type OutFrame = (u64, ByteWriter);
+/// One request queued for the writer thread: correlation id, the trace
+/// context captured at `submit` time, and the encoded body.
+type OutFrame = (u64, TraceCtx, ByteWriter);
 
 struct SendQueue {
     frames: VecDeque<OutFrame>,
@@ -106,8 +152,9 @@ struct SendQueue {
 }
 
 struct PendingMap {
-    /// corr → `None` (awaiting) / `Some(body)` (response arrived).
-    slots: HashMap<u64, Option<SharedBytes>>,
+    /// corr → `None` (awaiting) / `Some((ctx, body))` (response arrived;
+    /// `ctx` is the trace context the response frame carried).
+    slots: HashMap<u64, Option<(TraceCtx, SharedBytes)>>,
     /// Set once, when the connection broke; every waiter observes it.
     dead: Option<String>,
 }
@@ -115,6 +162,8 @@ struct PendingMap {
 struct Shared {
     /// The original socket, kept for `shutdown` (reader/writer own clones).
     sock: TcpStream,
+    /// Negotiated v2 framing (per-frame trace headers)?
+    trace: bool,
     queue: Mutex<SendQueue>,
     send_cv: Condvar,
     pending: Mutex<PendingMap>,
@@ -164,13 +213,14 @@ impl MuxConn {
         Self::establish(sock, addr)
     }
 
-    fn establish(mut sock: TcpStream, addr: &str) -> io::Result<Self> {
+    /// Send a hello at `version` and return the version the peer acked.
+    fn handshake(sock: &mut TcpStream, addr: &str, version: u32) -> io::Result<u32> {
         sock.set_nodelay(true).ok();
         sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-        write_frame(&mut sock, &hello_frame())?;
+        write_frame(sock, &hello_frame_v(version))?;
         // `keep_going = false`: one timeout window is the whole budget — a
         // silent peer must fail the connect, not hang it.
-        let ack = read_frame_patient(&mut sock, || false).map_err(|e| {
+        let ack = read_frame_patient(sock, || false).map_err(|e| {
             io::Error::new(
                 e.kind(),
                 format!("mux handshake with {addr}: {e} (legacy lock-step peer?)"),
@@ -185,26 +235,52 @@ impl MuxConn {
                 ),
             ));
         };
-        match parse_hello(&ack) {
-            Some(v) if v == MUX_VERSION => {}
-            Some(v) => {
+        let Some(acked) = parse_hello(&ack) else {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected mux handshake reply from {addr}"),
+            ));
+        };
+        sock.set_read_timeout(None)?;
+        Ok(acked)
+    }
+
+    fn establish(mut sock: TcpStream, addr: &str) -> io::Result<Self> {
+        let acked = Self::handshake(&mut sock, addr, MUX_VERSION)?;
+        let trace = match acked {
+            v if v == MUX_VERSION => true,
+            1 => {
+                // A v1 peer. Negotiating servers serve v1 on this very
+                // socket, but pre-negotiation servers ack their own hello
+                // and then drop mismatched connections — the socket may
+                // already be dead. Redial and speak v1 from the start;
+                // that works against both generations.
+                drop(sock);
+                sock = TcpStream::connect(addr)?;
+                let again = Self::handshake(&mut sock, addr, 1)?;
+                if again != 1 {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "mux version mismatch: {addr} acked downgrade hello 1 \
+                             with {again}"
+                        ),
+                    ));
+                }
+                false
+            }
+            v => {
                 return Err(io::Error::new(
                     io::ErrorKind::InvalidData,
                     format!("mux version mismatch: we speak {MUX_VERSION}, {addr} speaks {v}"),
                 ));
             }
-            None => {
-                return Err(io::Error::new(
-                    io::ErrorKind::InvalidData,
-                    format!("unexpected mux handshake reply from {addr}"),
-                ));
-            }
-        }
-        sock.set_read_timeout(None)?;
+        };
         let rsock = sock.try_clone()?;
         let wsock = sock.try_clone()?;
         let shared = Arc::new(Shared {
             sock,
+            trace,
             queue: Mutex::new(SendQueue { frames: VecDeque::new(), closed: false }),
             send_cv: Condvar::new(),
             pending: Mutex::new(PendingMap { slots: HashMap::new(), dead: None }),
@@ -235,6 +311,9 @@ impl MuxConn {
     /// the writer thread coalesces everything queued into vectored writes.
     pub fn submit<T: Wire>(&self, msg: &T) -> io::Result<PendingReply> {
         let corr = self.shared.next_corr.fetch_add(1, Ordering::Relaxed);
+        // Capture the submitting thread's ambient trace context here (the
+        // writer thread has its own, unrelated, thread-locals).
+        let ctx = trace::current();
         {
             let mut p = self.shared.pending.lock().unwrap();
             if let Some(why) = &p.dead {
@@ -247,7 +326,7 @@ impl MuxConn {
         }
         let mut body = ByteWriter::segmented();
         msg.encode(&mut body);
-        assert!(8 + body.len() <= MAX_FRAME, "mux frame too large");
+        assert!(24 + body.len() <= MAX_FRAME, "mux frame too large");
         {
             let mut q = self.shared.queue.lock().unwrap();
             if q.closed {
@@ -259,7 +338,7 @@ impl MuxConn {
                     "mux connection closed",
                 ));
             }
-            q.frames.push_back((corr, body));
+            q.frames.push_back((corr, ctx, body));
         }
         self.shared.send_cv.notify_one();
         Ok(PendingReply { shared: Arc::clone(&self.shared), corr, taken: false })
@@ -299,9 +378,13 @@ impl PendingReply {
         let mut p = self.shared.pending.lock().unwrap();
         loop {
             if matches!(p.slots.get(&self.corr), Some(Some(_))) {
-                let body = p.slots.remove(&self.corr).expect("slot present");
+                let slot = p.slots.remove(&self.corr).expect("slot present");
                 crate::obs_gauge!("mux.inflight").sub(1);
-                return Ok(body.expect("slot filled"));
+                let (ctx, body) = slot.expect("slot filled");
+                // Surface the server-side context the response carried to
+                // the waiting thread (fetch wakeup → consumer poll).
+                trace::set_reply(ctx);
+                return Ok(body);
             }
             if let Some(why) = &p.dead {
                 let why = why.clone();
@@ -351,12 +434,12 @@ fn run_reader(mut sock: TcpStream, shared: Arc<Shared>) {
                 None => {}
             }
         }
-        match read_mux_frame(&mut sock, || true) {
-            Ok(Some((corr, body))) => {
+        match read_mux_frame(&mut sock, shared.trace, || true) {
+            Ok(Some((corr, ctx, body))) => {
                 crate::obs_counter!("mux.rx_frames").inc();
                 let mut p = shared.pending.lock().unwrap();
                 if let Some(slot) = p.slots.get_mut(&corr) {
-                    *slot = Some(body);
+                    *slot = Some((ctx, body));
                     drop(p);
                     shared.recv_cv.notify_all();
                 }
@@ -400,9 +483,8 @@ fn run_writer(mut sock: TcpStream, shared: Arc<Shared>) {
                 Some(fault::FaultAction::ShortWrite) => {
                     // A torn frame: a prefix of the first header escapes,
                     // then the connection dies mid-write.
-                    let (_, body) = &batch[0];
-                    let mut h = [0u8; 12];
-                    h[..4].copy_from_slice(&((8 + body.len()) as u32).to_le_bytes());
+                    let (corr, ctx, body) = &batch[0];
+                    let (h, _) = frame_header(*corr, *ctx, body.len(), shared.trace);
                     let _ = sock.write_all(&h[..6]);
                     shared.fail("injected mux short write".into());
                     return;
@@ -414,13 +496,23 @@ fn run_writer(mut sock: TcpStream, shared: Arc<Shared>) {
                 None => {}
             }
         }
-        if let Err(e) = write_batch(&mut sock, &batch) {
+        if let Err(e) = write_batch(&mut sock, &batch, shared.trace) {
             shared.fail(format!("mux send: {e}"));
             return;
         }
+        let hdr = if shared.trace { HDR_V2 as u64 } else { HDR_V1 as u64 };
         crate::obs_counter!("mux.tx_frames").add(batch.len() as u64);
-        let bytes: u64 = batch.iter().map(|(_, body)| 12 + body.len() as u64).sum();
+        let bytes: u64 = batch.iter().map(|(_, _, body)| hdr + body.len() as u64).sum();
         crate::obs_counter!("mux.tx_bytes").add(bytes);
+        if trace::enabled() {
+            // Mark the instant each sampled request hit the socket: a
+            // zero-duration child of the submitting span, recording the
+            // submit→write pipeline delay in the stitched timeline.
+            let now = trace::now_us();
+            for (_, ctx, _) in &batch {
+                trace::record_at(*ctx, "mux.tx", now, 0);
+            }
+        }
     }
 }
 
@@ -433,21 +525,36 @@ fn fault_shuffle(batch: &mut [OutFrame]) {
     }
 }
 
-/// One vectored write for a whole batch of frames: per frame a 12-byte
-/// header (`len` + `corr`) followed by its body chunks, payload segments
-/// straight from their `Arc`.
-fn write_batch(sock: &mut TcpStream, batch: &[OutFrame]) -> io::Result<()> {
+/// On-the-wire header sizes (the `u32` length prefix + the per-frame
+/// header `read_mux_frame` strips).
+const HDR_V1: usize = 12; // [u32 len][u64 corr]
+const HDR_V2: usize = 28; // [u32 len][u64 corr][u64 trace_id][u64 span_id]
+
+/// Build one frame header at the negotiated version; returns the buffer
+/// and how many of its bytes are live.
+fn frame_header(corr: u64, ctx: TraceCtx, body_len: usize, trace: bool) -> ([u8; HDR_V2], usize) {
+    let mut h = [0u8; HDR_V2];
+    let (inner, hdr) = if trace { (24, HDR_V2) } else { (8, HDR_V1) };
+    h[..4].copy_from_slice(&((inner + body_len) as u32).to_le_bytes());
+    h[4..12].copy_from_slice(&corr.to_le_bytes());
+    if trace {
+        h[12..20].copy_from_slice(&ctx.trace_id.to_le_bytes());
+        h[20..28].copy_from_slice(&ctx.span_id.to_le_bytes());
+    }
+    (h, hdr)
+}
+
+/// One vectored write for a whole batch of frames: per frame its header
+/// (`len` + `corr` + the v2 trace context) followed by its body chunks,
+/// payload segments straight from their `Arc`.
+fn write_batch(sock: &mut TcpStream, batch: &[OutFrame], trace: bool) -> io::Result<()> {
     let mut headers = Vec::with_capacity(batch.len());
-    for (corr, body) in batch {
-        let total = 8 + body.len();
-        let mut h = [0u8; 12];
-        h[..4].copy_from_slice(&(total as u32).to_le_bytes());
-        h[4..].copy_from_slice(&corr.to_le_bytes());
-        headers.push(h);
+    for (corr, ctx, body) in batch {
+        headers.push(frame_header(*corr, *ctx, body.len(), trace));
     }
     let mut parts: Vec<&[u8]> = Vec::with_capacity(batch.len() * 4);
-    for ((_, body), header) in batch.iter().zip(&headers) {
-        parts.push(header);
+    for ((_, _, body), (header, live)) in batch.iter().zip(&headers) {
+        parts.push(&header[..*live]);
         body.extend_chunks(&mut parts);
     }
     write_all_vectored(sock, &parts)
@@ -520,27 +627,29 @@ pub enum Sniff {
     /// Not a hello: serve the legacy lock-step protocol, starting with
     /// this frame.
     Legacy,
-    /// A compatible hello, already acked: serve mux frames from here on.
-    Mux,
-    /// A hello we cannot speak with (version mismatch or a broken ack
+    /// A compatible hello, already acked: serve mux frames from here on,
+    /// with v2 trace headers iff `trace`.
+    Mux { trace: bool },
+    /// A hello we cannot speak with (an unusable version or a broken ack
     /// write): drop the connection.
     Reject,
 }
 
 /// Server half of the protocol negotiation: if `first` is a mux hello, ack
-/// it with ours and check versions.
+/// `min(peer_version, MUX_VERSION)` and frame at that version.
 pub fn sniff_first_frame<W: Write>(sock: &mut W, first: &[u8], peer: &str) -> Sniff {
     let Some(version) = parse_hello(first) else {
         return Sniff::Legacy;
     };
-    if write_frame(sock, &hello_frame()).is_err() {
+    let negotiated = version.min(MUX_VERSION);
+    if write_frame(sock, &hello_frame_v(negotiated)).is_err() {
         return Sniff::Reject;
     }
-    if version != MUX_VERSION {
-        log::warn!("mux conn {peer}: version {version} != ours {MUX_VERSION}");
+    if negotiated < 1 {
+        log::warn!("mux conn {peer}: cannot negotiate version {version} (ours {MUX_VERSION})");
         return Sniff::Reject;
     }
-    Sniff::Mux
+    Sniff::Mux { trace: negotiated >= 2 }
 }
 
 /// Serve one upgraded mux connection (the shared body of the broker and
@@ -557,6 +666,7 @@ pub fn serve_mux_conn<Q, R, D>(
     mut sock: TcpStream,
     peer: &str,
     park_name: &str,
+    trace: bool,
     mut keep_going: impl FnMut() -> bool,
     classify: impl Fn(&Q) -> ServeAction,
     dispatch: Arc<D>,
@@ -566,18 +676,28 @@ pub fn serve_mux_conn<Q, R, D>(
     D: Fn(Q) -> R + Send + Sync + 'static,
 {
     let responder = match sock.try_clone() {
-        Ok(w) => Arc::new(MuxResponder::new(w)),
+        Ok(w) => Arc::new(MuxResponder::new(w, trace)),
         Err(e) => {
             log::debug!("mux conn {peer} clone failed: {e}");
             return;
         }
+    };
+    // Dispatch with the frame's trace context ambient, and answer with
+    // whatever reply context the dispatch stashed (the server-side span a
+    // client wrapper chains onto — fetch wakeup → consumer poll).
+    let traced = move |ctx: TraceCtx, req: Q, dispatch: &D| -> (TraceCtx, R) {
+        let prev = trace::set_current(ctx);
+        let resp = dispatch(req);
+        let reply = trace::take_reply();
+        trace::set_current(prev);
+        (reply, resp)
     };
     let parked = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     loop {
         if responder.is_broken() {
             break;
         }
-        let (corr, body) = match read_mux_frame(&mut sock, &mut keep_going) {
+        let (corr, ctx, body) = match read_mux_frame(&mut sock, trace, &mut keep_going) {
             Ok(Some(frame)) => frame,
             Ok(None) => break, // clean close, or stop requested while idle
             Err(e) => {
@@ -594,7 +714,8 @@ pub fn serve_mux_conn<Q, R, D>(
         };
         match classify(&req) {
             ServeAction::Terminal => {
-                responder.send(corr, &(*dispatch)(req));
+                let (reply, resp) = traced(ctx, req, &dispatch);
+                responder.send_ctx(corr, reply, &resp);
                 break;
             }
             ServeAction::Park if parked.load(Ordering::SeqCst) < MAX_PARKED_PER_CONN => {
@@ -612,8 +733,8 @@ pub fn serve_mux_conn<Q, R, D>(
                     let parked = Arc::clone(&parked);
                     move || {
                         if let Some(req) = job.lock().unwrap().take() {
-                            let resp = (*dispatch)(req);
-                            responder.send(corr, &resp);
+                            let (reply, resp) = traced(ctx, req, &*dispatch);
+                            responder.send_ctx(corr, reply, &resp);
                         }
                         parked.fetch_sub(1, Ordering::SeqCst);
                         crate::obs_gauge!("mux.parked_polls").sub(1);
@@ -625,15 +746,15 @@ pub fn serve_mux_conn<Q, R, D>(
                     let Some(req) = job.lock().unwrap().take() else {
                         continue;
                     };
-                    let resp = (*dispatch)(req);
-                    if !responder.send(corr, &resp) {
+                    let (reply, resp) = traced(ctx, req, &dispatch);
+                    if !responder.send_ctx(corr, reply, &resp) {
                         break;
                     }
                 }
             }
             _ => {
-                let resp = (*dispatch)(req);
-                if !responder.send(corr, &resp) {
+                let (reply, resp) = traced(ctx, req, &dispatch);
+                if !responder.send_ctx(corr, reply, &resp) {
                     break;
                 }
             }
@@ -692,6 +813,8 @@ pub fn serve_legacy_conn<Q, R, D>(
 pub struct MuxResponder {
     inner: Mutex<ResponderInner>,
     broken: AtomicBool,
+    /// Negotiated v2 framing (responses carry a trace context)?
+    trace: bool,
 }
 
 struct ResponderInner {
@@ -700,21 +823,28 @@ struct ResponderInner {
 }
 
 impl MuxResponder {
-    pub fn new(sock: TcpStream) -> Self {
+    pub fn new(sock: TcpStream, trace: bool) -> Self {
         Self {
             inner: Mutex::new(ResponderInner { sock, scratch: ByteWriter::segmented() }),
             broken: AtomicBool::new(false),
+            trace,
         }
     }
 
-    /// Send one response frame; `false` once the socket broke (the
-    /// connection is beyond saving — the serve loop should exit).
+    /// Send one response frame with no trace context.
     pub fn send<T: Wire>(&self, corr: u64, msg: &T) -> bool {
+        self.send_ctx(corr, TraceCtx::NONE, msg)
+    }
+
+    /// Send one response frame carrying `ctx` (dropped on v1 framing);
+    /// `false` once the socket broke (the connection is beyond saving —
+    /// the serve loop should exit).
+    pub fn send_ctx<T: Wire>(&self, corr: u64, ctx: TraceCtx, msg: &T) -> bool {
         let mut g = self.inner.lock().unwrap();
         let ResponderInner { sock, scratch } = &mut *g;
         scratch.clear();
         msg.encode(scratch);
-        match write_mux_frame(sock, corr, scratch) {
+        match write_mux_frame(sock, corr, ctx, scratch, self.trace) {
             Ok(()) => true,
             Err(_) => {
                 self.broken.store(true, Ordering::SeqCst);
@@ -735,8 +865,10 @@ mod tests {
     use crate::util::wire::read_frame;
     use std::net::TcpListener;
 
-    /// Minimal mux echo server: ack the handshake, then answer every frame
-    /// with its own body, optionally deferring batches to force reordering.
+    /// Minimal mux echo server at the current (v2) framing: ack the
+    /// handshake, then answer every frame with its own body — echoing the
+    /// request's trace context back on the response — optionally deferring
+    /// batches to force reordering.
     fn echo_server(reorder: bool) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -745,28 +877,28 @@ mod tests {
             let hello = read_frame(&mut sock).unwrap().unwrap();
             assert_eq!(parse_hello(&hello), Some(MUX_VERSION));
             write_frame(&mut sock, &hello_frame()).unwrap();
-            let responder = MuxResponder::new(sock.try_clone().unwrap());
-            let mut held: Vec<(u64, SharedBytes)> = Vec::new();
+            let responder = MuxResponder::new(sock.try_clone().unwrap(), true);
+            let mut held: Vec<(u64, TraceCtx, SharedBytes)> = Vec::new();
             loop {
-                match read_mux_frame(&mut sock, || true) {
-                    Ok(Some((corr, body))) => {
+                match read_mux_frame(&mut sock, true, || true) {
+                    Ok(Some((corr, ctx, body))) => {
                         if reorder {
                             // Hold a few frames, answer them newest-first.
-                            held.push((corr, body));
+                            held.push((corr, ctx, body));
                             if held.len() >= 3 {
-                                while let Some((c, b)) = held.pop() {
-                                    responder.send(c, &crate::util::wire::Blob(b));
+                                while let Some((c, x, b)) = held.pop() {
+                                    responder.send_ctx(c, x, &crate::util::wire::Blob(b));
                                 }
                             }
                         } else {
-                            responder.send(corr, &crate::util::wire::Blob(body));
+                            responder.send_ctx(corr, ctx, &crate::util::wire::Blob(body));
                         }
                     }
                     Ok(None) | Err(_) => break,
                 }
             }
-            while let Some((c, b)) = held.pop() {
-                responder.send(c, &crate::util::wire::Blob(b));
+            while let Some((c, x, b)) = held.pop() {
+                responder.send_ctx(c, x, &crate::util::wire::Blob(b));
             }
         });
         (addr, handle)
@@ -839,7 +971,58 @@ mod tests {
     #[test]
     fn hello_roundtrip_and_rejections() {
         assert_eq!(parse_hello(&hello_frame()), Some(MUX_VERSION));
+        assert_eq!(parse_hello(&hello_frame_v(1)), Some(1));
         assert_eq!(parse_hello(b"HWMX"), None, "length matters");
         assert_eq!(parse_hello(&[0u8; 8]), None, "magic matters");
+    }
+
+    #[test]
+    fn frame_headers_roundtrip_at_both_versions() {
+        let ctx = TraceCtx { trace_id: 0xdead_beef, span_id: 42 };
+        let mut body = ByteWriter::segmented();
+        body.put_raw(b"payload");
+        for trace in [true, false] {
+            let mut buf = Vec::new();
+            write_mux_frame(&mut buf, 7, ctx, &body, trace).unwrap();
+            let mut rd = &buf[..];
+            let (corr, got, bytes) = read_mux_frame(&mut rd, trace, || true).unwrap().unwrap();
+            assert_eq!(corr, 7);
+            assert_eq!(&bytes[..], b"payload");
+            // v2 carries the context; v1 degrades it to NONE.
+            assert_eq!(got, if trace { ctx } else { TraceCtx::NONE });
+        }
+    }
+
+    #[test]
+    fn pre_negotiation_v1_server_downgrades_via_redial() {
+        // Emulate an old (pre-PR 9) server: ack with its own v1 hello,
+        // then drop the mismatched connection. The v2 client must redial
+        // speaking v1, after which calls work (sans trace headers).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // First dial: v2 hello → ack v1, close (the old reject path).
+            let (mut sock, _) = listener.accept().unwrap();
+            let hello = read_frame(&mut sock).unwrap().unwrap();
+            assert_eq!(parse_hello(&hello), Some(MUX_VERSION));
+            write_frame(&mut sock, &hello_frame_v(1)).unwrap();
+            drop(sock);
+            // Redial: v1 hello → ack v1, serve v1 echo frames.
+            let (mut sock, _) = listener.accept().unwrap();
+            let hello = read_frame(&mut sock).unwrap().unwrap();
+            assert_eq!(parse_hello(&hello), Some(1), "redial must speak v1");
+            write_frame(&mut sock, &hello_frame_v(1)).unwrap();
+            let responder = MuxResponder::new(sock.try_clone().unwrap(), false);
+            while let Ok(Some((corr, ctx, body))) = read_mux_frame(&mut sock, false, || true) {
+                assert_eq!(ctx, TraceCtx::NONE);
+                responder.send(corr, &crate::util::wire::Blob(body));
+            }
+        });
+        let conn = MuxConn::connect(&addr.to_string()).unwrap();
+        let sent = crate::util::wire::Blob::new(vec![9; 16]);
+        let got: crate::util::wire::Blob = conn.call(&sent).unwrap();
+        assert_eq!(got, sent);
+        drop(conn);
+        server.join().unwrap();
     }
 }

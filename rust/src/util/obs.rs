@@ -347,6 +347,21 @@ fn prom_name(name: &str) -> (String, Option<&str>) {
     (base.replace(['.', '-'], "_"), label)
 }
 
+/// Escape a label value per the exposition-format rules: `\`, `"` and
+/// newline would otherwise break the line/quote structure of the scrape.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn prom_line(
     out: &mut String,
     name: &str,
@@ -357,7 +372,7 @@ fn prom_line(
     let (base, label) = prom_name(name);
     out.push_str(&base);
     out.push_str(suffix);
-    match (label, extra.is_empty()) {
+    match (label.map(|l| escape_label(l)), extra.is_empty()) {
         (Some(l), true) => out.push_str(&format!("{{site=\"{l}\"}}")),
         (Some(l), false) => out.push_str(&format!("{{site=\"{l}\",{extra}}}")),
         (None, true) => {}
@@ -433,13 +448,14 @@ impl Snapshot {
     /// `_sum`/`_count`), with quantiles estimated from the fixed buckets.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        // Labeled series sharing a base name are adjacent (the snapshot is
-        // sorted), so one `last_base` suffices to emit each TYPE line once.
-        let mut last_base = String::new();
+        // Each metric family gets its TYPE line exactly once. A set, not
+        // a last-emitted comparison: the registry sorts by the *raw* name,
+        // and `'.' < '{'`, so `a.b.c` sorts between `a.b` and `a.b{x}` —
+        // same-family series are NOT guaranteed adjacent.
+        let mut emitted = std::collections::HashSet::new();
         let mut type_line = |out: &mut String, base: &str, kind: &str| {
-            if base != last_base {
+            if emitted.insert(base.to_string()) {
                 out.push_str(&format!("# TYPE {base} {kind}\n"));
-                last_base = base.to_string();
             }
         };
         for (name, v) in &self.counters {
@@ -460,6 +476,49 @@ impl Snapshot {
             prom_line(&mut out, &h.name, "", "quantile=\"0.999\"", h.p999_us());
             prom_line(&mut out, &h.name, "_sum", "", h.sum_us);
             prom_line(&mut out, &h.name, "_count", "", h.count);
+        }
+        out
+    }
+
+    /// Delta rendering for `hybridws stats --watch`: counters and
+    /// histogram observation counts as per-second rates against `prev`
+    /// (a snapshot taken `secs` ago), gauges absolute — a gauge is a
+    /// level, not an accumulation, so a rate would be noise. Quantiles
+    /// stay lifetime-cumulative (the fixed buckets cannot be
+    /// differenced without losing the interpolation).
+    pub fn render_text_delta(&self, prev: &Snapshot, secs: f64) -> String {
+        let secs = if secs > 0.0 { secs } else { 1.0 };
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters (/s):\n");
+            for (name, v) in &self.counters {
+                let rate = v.saturating_sub(prev.counter(name).unwrap_or(0)) as f64 / secs;
+                out.push_str(&format!("  {name:<48} {rate:.1}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges (absolute):\n");
+            for (name, v) in &self.gauges {
+                out.push_str(&format!("  {name:<48} {v}\n"));
+            }
+        }
+        if !self.hists.is_empty() {
+            out.push_str("histograms (µs, n/s):\n");
+            for h in &self.hists {
+                let before = prev.hist(&h.name).map(|p| p.count).unwrap_or(0);
+                let rate = h.count.saturating_sub(before) as f64 / secs;
+                out.push_str(&format!(
+                    "  {:<48} n={rate:.1} mean={} p50={} p99={} p999={}\n",
+                    h.name,
+                    h.mean_us(),
+                    h.p50_us(),
+                    h.p99_us(),
+                    h.p999_us(),
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics registered)\n");
         }
         out
     }
@@ -502,6 +561,21 @@ impl Snapshot {
 
 // ---- Prometheus HTTP exposition ---------------------------------------
 
+/// Who this process is, for the `/healthz` endpoint (e.g. `broker
+/// 127.0.0.1:9092 epoch 3`). Empty until [`set_identity`] is called.
+static IDENTITY: Mutex<String> = Mutex::new(String::new());
+
+/// Set the identity string `/healthz` reports (idempotent; last write
+/// wins — brokers refresh it when their epoch moves).
+pub fn set_identity(id: &str) {
+    *IDENTITY.lock().unwrap() = id.to_string();
+}
+
+/// The identity string `/healthz` reports (empty when unset).
+pub fn identity() -> String {
+    IDENTITY.lock().unwrap().clone()
+}
+
 /// Handle to the `--metrics-addr` HTTP listener; dropping it (or calling
 /// [`MetricsHttp::shutdown`]) stops the accept loop.
 pub struct MetricsHttp {
@@ -511,9 +585,11 @@ pub struct MetricsHttp {
 }
 
 /// Serve the registry as Prometheus text exposition on `addr`. One
-/// accept-loop thread, one short-lived response per connection — every
-/// GET (any path) returns the full snapshot. Hand-rolled HTTP/1.1: this
-/// is a diagnostics endpoint, not a web server.
+/// accept-loop thread, one short-lived response per connection. A GET of
+/// `/healthz` answers a liveness probe (200 plus the process identity,
+/// see [`set_identity`]); every other path returns the full snapshot.
+/// Hand-rolled HTTP/1.1: this is a diagnostics endpoint, not a web
+/// server.
 pub fn serve_http(addr: &str) -> std::io::Result<MetricsHttp> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
@@ -526,13 +602,24 @@ pub fn serve_http(addr: &str) -> std::io::Result<MetricsHttp> {
             }
             let Ok(mut sock) = conn else { continue };
             let _ = sock.set_read_timeout(Some(Duration::from_millis(500)));
-            // Drain the request head; the path is irrelevant.
             let mut head = [0u8; 1024];
-            let _ = sock.read(&mut head);
-            let body = snapshot().render_prometheus();
+            let n = sock.read(&mut head).unwrap_or(0);
+            // `GET <path> HTTP/1.1` — only the path matters.
+            let req = String::from_utf8_lossy(&head[..n]);
+            let path = req.split_whitespace().nth(1).unwrap_or("/");
+            let (body, ctype) = if path == "/healthz" || path.starts_with("/healthz?") {
+                let id = identity();
+                let body = if id.is_empty() { "ok\n".to_string() } else { format!("ok {id}\n") };
+                (body, "text/plain; charset=utf-8")
+            } else {
+                (
+                    snapshot().render_prometheus(),
+                    "text/plain; version=0.0.4; charset=utf-8",
+                )
+            };
             let resp = format!(
-                "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
-                 charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+                 Connection: close\r\n\r\n{body}",
                 body.len(),
             );
             let _ = sock.write_all(resp.as_bytes());
@@ -742,5 +829,87 @@ mod tests {
         assert_eq!(snap.counter("test.sum.missing"), None);
         assert_eq!(snap.gauge("test.sum.missing"), None);
         assert!(snap.hist("test.sum.missing").is_none());
+    }
+
+    #[test]
+    fn prometheus_label_values_are_escaped() {
+        // A label value holding `\`, `"` and a newline must not break the
+        // quote/line structure of the scrape.
+        let snap = Snapshot {
+            counters: vec![("t.esc{a\\b\"c\nd}".into(), 5)],
+            gauges: vec![],
+            hists: vec![],
+        };
+        let text = snap.render_prometheus();
+        assert!(
+            text.contains("t_esc_total{site=\"a\\\\b\\\"c\\nd\"} 5"),
+            "unescaped label value in:\n{text}"
+        );
+        // TYPE line + one series line — the raw newline must not survive.
+        assert_eq!(text.lines().count(), 2, "text:\n{text}");
+    }
+
+    #[test]
+    fn prometheus_type_lines_emit_once_per_family() {
+        // Registry order sorts by *raw* name and `'.' < '{'`, so `t.b.c`
+        // sits between `t.b` and `t.b{x}`: the two `t_b` series are not
+        // adjacent. The family must still get exactly one TYPE line.
+        let snap = Snapshot {
+            counters: vec![("t.b".into(), 1), ("t.b.c".into(), 2), ("t.b{x}".into(), 3)],
+            gauges: vec![],
+            hists: vec![],
+        };
+        let text = snap.render_prometheus();
+        let type_lines: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("# TYPE t_b ")).collect();
+        assert_eq!(type_lines, vec!["# TYPE t_b counter"], "text:\n{text}");
+        assert_eq!(
+            text.lines().filter(|l| *l == "# TYPE t_b_c counter").count(),
+            1,
+            "text:\n{text}"
+        );
+    }
+
+    #[test]
+    fn healthz_answers_liveness_with_identity() {
+        set_identity("broker 127.0.0.1:9092 epoch 3");
+        let srv = serve_http("127.0.0.1:0").unwrap();
+        let mut sock = TcpStream::connect(srv.local_addr()).unwrap();
+        sock.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        sock.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("ok broker 127.0.0.1:9092 epoch 3"), "got: {resp}");
+        assert!(!resp.contains("# TYPE"), "healthz must not dump the scrape: {resp}");
+    }
+
+    #[test]
+    fn delta_rendering_rates_counters_but_not_gauges() {
+        let hist = |count: u64, sum: u64| HistSnapshot {
+            name: "h.lat".into(),
+            count,
+            sum_us: sum,
+            buckets: vec![count],
+        };
+        let prev = Snapshot {
+            counters: vec![("c.rate".into(), 10)],
+            gauges: vec![("g.level".into(), 5)],
+            hists: vec![hist(10, 100)],
+        };
+        let cur = Snapshot {
+            counters: vec![("c.rate".into(), 30)],
+            gauges: vec![("g.level".into(), 7)],
+            hists: vec![hist(14, 140)],
+        };
+        let text = cur.render_text_delta(&prev, 2.0);
+        // (30 - 10) / 2s = 10.0/s; the gauge stays the absolute level.
+        assert!(text.contains("c.rate") && text.contains("10.0"), "text:\n{text}");
+        assert!(text.contains("g.level") && text.contains(" 7\n"), "text:\n{text}");
+        assert!(text.contains("n=2.0"), "hist count must rate: \n{text}");
+        // A series absent from `prev` rates from zero instead of panicking.
+        let fresh =
+            Snapshot { counters: vec![("c.new".into(), 4)], ..Default::default() };
+        let t2 = fresh.render_text_delta(&Snapshot::default(), 2.0);
+        assert!(t2.contains("2.0"), "text:\n{t2}");
     }
 }

@@ -1,0 +1,689 @@
+//! Process-global distributed tracing plane (PR 9): trace-context
+//! propagation, a bounded span flight recorder, and the text renderer
+//! behind the stitched `hybridws trace` timeline.
+//!
+//! Mirrors the design discipline of [`crate::util::obs`]: **when tracing
+//! is disabled every seam costs one relaxed atomic load** and touches no
+//! lock, no clock and no allocation. There is no background thread and no
+//! dependency — ids come from a seeded SplitMix64 stream, spans land in a
+//! fixed-capacity drop-oldest ring under one short mutex hold, and the
+//! ring is exported over the existing wire plane (`Request::Spans`).
+//!
+//! ## Model
+//!
+//! A [`TraceCtx`] is a `(trace_id, span_id)` pair. `trace_id == 0` means
+//! *unsampled* — the zero context is the universal "no tracing" value and
+//! travels for free. Sampling happens once, at the edge that starts a
+//! trace (client publish, coordinator task): a seeded hash draw against
+//! the configured rate. Every downstream seam only asks "does the context
+//! I was handed carry a non-zero trace id?", so a broker with sample rate
+//! 0 still records spans for traffic that arrives already sampled — the
+//! rate gates *new roots*, not propagation.
+//!
+//! Context travels two ways:
+//! - **in-process** via a thread-local ambient context ([`current`] /
+//!   [`set_current`], managed automatically by [`SpanGuard`]);
+//! - **cross-process** via two extra `u64`s in the v2 mux frame header
+//!   (negotiated by the `HWMX` hello — see [`crate::util::mux`]), on both
+//!   requests and responses so a fetch wakeup can link into the consumer's
+//!   poll span ([`set_reply`] / [`take_reply`]).
+//!
+//! Finished spans are stitched by `(trace_id, parent_span_id)` — no
+//! process ever needs the whole trace in memory; the `hybridws trace` CLI
+//! merges the per-process rings and [`render_traces`] rebuilds the tree.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use log::warn;
+
+/// Flight-recorder capacity (spans per process). At ~50 bytes a span the
+/// full ring is ~3 MB; overflow drops the oldest span and bumps the
+/// `trace.spans_dropped` obs counter.
+pub const RING_CAP: usize = 65_536;
+
+// ---------------------------------------------------------------------------
+// Globals
+// ---------------------------------------------------------------------------
+
+/// Master gate — the one relaxed load every seam pays when tracing is off.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Sampling threshold: a draw `< SAMPLE` starts a trace (`u64::MAX` =
+/// always, `0` = never).
+static SAMPLE: AtomicU64 = AtomicU64::new(0);
+/// Seed folded into the id stream so fault-plane replays are stable.
+static SEED: AtomicU64 = AtomicU64::new(0x9e3779b97f4a7c15);
+/// Monotone counter feeding the SplitMix64 id/sampling stream.
+static NEXT: AtomicU64 = AtomicU64::new(1);
+/// Slow-root threshold in µs (0 = slow logging off).
+static SLOW_US: AtomicU64 = AtomicU64::new(0);
+/// This process's label on exported spans (e.g. its listen address).
+static NODE: Mutex<String> = Mutex::new(String::new());
+
+/// Is the tracing plane live in this process? One relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Force the gate (tests / teardown). [`install`] is the normal path.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+/// Arm the tracing plane: sample new roots at `rate` (clamped to
+/// `[0, 1]`), seed the deterministic id stream, and open the gate. A rate
+/// of 0 still enables the plane — this process then records spans only
+/// for contexts that arrive already sampled.
+pub fn install(rate: f64, seed: u64) {
+    let r = rate.clamp(0.0, 1.0);
+    let t = if r >= 1.0 { u64::MAX } else { (r * u64::MAX as f64) as u64 };
+    SAMPLE.store(t, Relaxed);
+    SEED.store(seed, Relaxed);
+    ENABLED.store(true, Relaxed);
+}
+
+/// Label this process's exported spans (brokers use their listen addr).
+pub fn set_node(node: &str) {
+    *NODE.lock().unwrap() = node.to_string();
+}
+
+/// Log any finished *root* span slower than `ms` together with its child
+/// breakdown from the local ring. 0 disables.
+pub fn set_slow_ms(ms: u64) {
+    SLOW_US.store(ms.saturating_mul(1000), Relaxed);
+}
+
+/// SplitMix64 finalizer — the id stream and the sampling draw.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Next non-zero id from the seeded stream.
+fn next_id() -> u64 {
+    loop {
+        let n = NEXT.fetch_add(1, Relaxed);
+        let id = mix(n ^ SEED.load(Relaxed));
+        if id != 0 {
+            return id;
+        }
+    }
+}
+
+/// One sampling decision against the installed rate.
+fn sample_hit() -> bool {
+    match SAMPLE.load(Relaxed) {
+        0 => false,
+        u64::MAX => true,
+        t => mix(NEXT.fetch_add(1, Relaxed).wrapping_mul(0x2545f4914f6cdd1d)) < t,
+    }
+}
+
+/// Wall-clock microseconds since the epoch. Spans use wall time (not an
+/// arbitrary `Instant` base) so rings from different processes merge onto
+/// one timeline.
+pub fn now_us() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// TraceCtx + thread-local ambient context
+// ---------------------------------------------------------------------------
+
+/// A propagated trace context: which trace, and which span is the current
+/// parent. `trace_id == 0` is the unsampled/none value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// The unsampled context (all zero — what legacy peers implicitly send).
+    pub const NONE: TraceCtx = TraceCtx { trace_id: 0, span_id: 0 };
+
+    /// Does this context carry a live trace?
+    #[inline]
+    pub fn sampled(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+thread_local! {
+    /// Ambient context: the span new child spans attach to.
+    static CURRENT: Cell<TraceCtx> = const { Cell::new(TraceCtx::NONE) };
+    /// Context returned by the last RPC response on this thread — the
+    /// server-side span a client-side wrapper can parent onto (fetch
+    /// wakeup → consumer poll).
+    static REPLY: Cell<TraceCtx> = const { Cell::new(TraceCtx::NONE) };
+}
+
+/// The calling thread's ambient context ([`TraceCtx::NONE`] when off).
+#[inline]
+pub fn current() -> TraceCtx {
+    if !enabled() {
+        return TraceCtx::NONE;
+    }
+    CURRENT.with(|c| c.get())
+}
+
+/// Replace the ambient context, returning the previous one (restore it
+/// when the scope ends — [`SpanGuard`] does this automatically).
+pub fn set_current(ctx: TraceCtx) -> TraceCtx {
+    CURRENT.with(|c| c.replace(ctx))
+}
+
+/// Stash the context a response carried for the waiting client thread.
+pub fn set_reply(ctx: TraceCtx) {
+    if ctx.sampled() {
+        REPLY.with(|c| c.set(ctx));
+    }
+}
+
+/// Take (and clear) the last reply context seen on this thread.
+pub fn take_reply() -> TraceCtx {
+    if !enabled() {
+        return TraceCtx::NONE;
+    }
+    REPLY.with(|c| c.replace(TraceCtx::NONE))
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// A finished span in the flight recorder. `name` is `&'static str` so
+/// recording never allocates.
+#[derive(Debug, Clone, Copy)]
+struct SpanRec {
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    name: &'static str,
+    start_us: u64,
+    dur_us: u64,
+}
+
+/// RAII span: times the enclosing scope, makes itself the ambient context,
+/// and records into the ring on drop. Inert (one branch, no clock) when
+/// tracing is off or the parent is unsampled.
+pub struct SpanGuard {
+    ctx: TraceCtx,
+    parent_id: u64,
+    prev: TraceCtx,
+    name: &'static str,
+    start_us: u64,
+    live: bool,
+}
+
+impl SpanGuard {
+    const INERT: SpanGuard = SpanGuard {
+        ctx: TraceCtx::NONE,
+        parent_id: 0,
+        prev: TraceCtx::NONE,
+        name: "",
+        start_us: 0,
+        live: false,
+    };
+
+    /// The context children (local or remote) should attach to.
+    #[inline]
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    /// Is this guard actually recording?
+    #[inline]
+    pub fn live(&self) -> bool {
+        self.live
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let dur_us = now_us().saturating_sub(self.start_us);
+        push(SpanRec {
+            trace_id: self.ctx.trace_id,
+            span_id: self.ctx.span_id,
+            parent_id: self.parent_id,
+            name: self.name,
+            start_us: self.start_us,
+            dur_us,
+        });
+        set_current(self.prev);
+        if self.parent_id == 0 {
+            maybe_log_slow(self.ctx, dur_us);
+        }
+    }
+}
+
+fn span_make(trace_id: u64, parent_id: u64, name: &'static str) -> SpanGuard {
+    let ctx = TraceCtx { trace_id, span_id: next_id() };
+    let prev = set_current(ctx);
+    SpanGuard { ctx, parent_id, prev, name, start_us: now_us(), live: true }
+}
+
+/// Child span of the ambient context. Inert when there is none.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::INERT;
+    }
+    let cur = CURRENT.with(|c| c.get());
+    if !cur.sampled() {
+        return SpanGuard::INERT;
+    }
+    span_make(cur.trace_id, cur.span_id, name)
+}
+
+/// Root span: one sampling draw decides whether a new trace starts here.
+pub fn span_root(name: &'static str) -> SpanGuard {
+    if !enabled() || !sample_hit() {
+        return SpanGuard::INERT;
+    }
+    span_make(next_id(), 0, name)
+}
+
+/// Child span of an explicit (e.g. wire-carried) context.
+pub fn span_in(ctx: TraceCtx, name: &'static str) -> SpanGuard {
+    if !enabled() || !ctx.sampled() {
+        return SpanGuard::INERT;
+    }
+    span_make(ctx.trace_id, ctx.span_id, name)
+}
+
+/// Draw a root context without a guard — for callers that time phases
+/// themselves (the coordinator) and record via [`record_root_at`].
+pub fn start_trace() -> TraceCtx {
+    if !enabled() || !sample_hit() {
+        return TraceCtx::NONE;
+    }
+    TraceCtx { trace_id: next_id(), span_id: next_id() }
+}
+
+/// Record an already-timed child span under `parent`; returns the child's
+/// context so further work can chain onto it. No-op (returns
+/// [`TraceCtx::NONE`]) when tracing is off or `parent` is unsampled.
+pub fn record_at(parent: TraceCtx, name: &'static str, start_us: u64, dur_us: u64) -> TraceCtx {
+    if !enabled() || !parent.sampled() {
+        return TraceCtx::NONE;
+    }
+    let child = TraceCtx { trace_id: parent.trace_id, span_id: next_id() };
+    push(SpanRec {
+        trace_id: child.trace_id,
+        span_id: child.span_id,
+        parent_id: parent.span_id,
+        name,
+        start_us,
+        dur_us,
+    });
+    child
+}
+
+/// Record an already-timed *root* span for a context from
+/// [`start_trace`], and run the slow-root check.
+pub fn record_root_at(ctx: TraceCtx, name: &'static str, start_us: u64, dur_us: u64) {
+    if !enabled() || !ctx.sampled() {
+        return;
+    }
+    push(SpanRec {
+        trace_id: ctx.trace_id,
+        span_id: ctx.span_id,
+        parent_id: 0,
+        name,
+        start_us,
+        dur_us,
+    });
+    maybe_log_slow(ctx, dur_us);
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------------
+
+struct Ring {
+    buf: Vec<SpanRec>,
+    /// Index of the oldest span once the ring is full.
+    head: usize,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { buf: Vec::new(), head: 0 });
+
+fn push(rec: SpanRec) {
+    let mut r = RING.lock().unwrap();
+    if r.buf.len() < RING_CAP {
+        r.buf.push(rec);
+    } else {
+        let head = r.head;
+        r.buf[head] = rec;
+        r.head = (head + 1) % RING_CAP;
+        crate::obs_counter!("trace.spans_dropped").inc();
+    }
+}
+
+/// Spans currently held by this process (all, or this ring only). Mostly
+/// for tests; wire export goes through [`snapshot_wire`].
+pub fn ring_len() -> usize {
+    RING.lock().unwrap().buf.len()
+}
+
+/// Drop every recorded span (tests).
+pub fn clear() {
+    let mut r = RING.lock().unwrap();
+    r.buf.clear();
+    r.head = 0;
+}
+
+/// A span as exported over the wire (`Response::Spans`): the in-ring
+/// record plus this process's node label, with the static name owned.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub node: String,
+    pub name: String,
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+crate::wire_struct!(Span {
+    node: String,
+    name: String,
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    start_us: u64,
+    dur_us: u64,
+});
+
+/// Export the local ring, oldest first, optionally filtered to one trace
+/// (`trace_id == 0` exports everything).
+pub fn snapshot_wire(trace_id: u64) -> Vec<Span> {
+    let node = NODE.lock().unwrap().clone();
+    let r = RING.lock().unwrap();
+    let (newer, older) = r.buf.split_at(r.head.min(r.buf.len()));
+    older
+        .iter()
+        .chain(newer.iter())
+        .filter(|s| trace_id == 0 || s.trace_id == trace_id)
+        .map(|s| Span {
+            node: node.clone(),
+            name: s.name.to_string(),
+            trace_id: s.trace_id,
+            span_id: s.span_id,
+            parent_id: s.parent_id,
+            start_us: s.start_us,
+            dur_us: s.dur_us,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Stitching + rendering
+// ---------------------------------------------------------------------------
+
+/// Stitch spans (from any number of processes) into trees keyed by
+/// `(trace_id, parent_span_id)` and render an indented duration timeline.
+/// Traces whose root duration is below `slow_us` are skipped (`0` keeps
+/// all). Spans whose parent is missing from the merged set (ring overflow,
+/// unreachable broker) are rendered as extra roots marked `~orphan`.
+pub fn render_traces(spans: &[Span], slow_us: u64) -> String {
+    // Group by trace, preserving merge order for tie-breaks.
+    let mut traces: HashMap<u64, Vec<&Span>> = HashMap::new();
+    for s in spans {
+        traces.entry(s.trace_id).or_default().push(s);
+    }
+    let mut trace_ids: Vec<u64> = traces.keys().copied().collect();
+    // Oldest trace first: sort by the earliest span start within the trace.
+    trace_ids.sort_by_key(|id| {
+        (traces[id].iter().map(|s| s.start_us).min().unwrap_or(0), *id)
+    });
+
+    let mut out = String::new();
+    for id in trace_ids {
+        let spans = &traces[&id];
+        let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+        let mut children: HashMap<u64, Vec<&Span>> = HashMap::new();
+        let mut roots: Vec<&Span> = Vec::new();
+        for s in spans {
+            if s.parent_id != 0 && ids.contains(&s.parent_id) {
+                children.entry(s.parent_id).or_default().push(s);
+            } else {
+                roots.push(s);
+            }
+        }
+        let root_dur = roots.iter().map(|s| s.dur_us).max().unwrap_or(0);
+        if slow_us > 0 && root_dur < slow_us {
+            continue;
+        }
+        for v in children.values_mut() {
+            v.sort_by_key(|s| (s.start_us, s.span_id));
+        }
+        roots.sort_by_key(|s| (s.start_us, s.span_id));
+        let base = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+
+        out.push_str(&format!("trace 0x{id:016x} — {} span(s)\n", spans.len()));
+        for root in &roots {
+            let orphan = root.parent_id != 0;
+            render_node(&mut out, root, &children, base, 0, orphan);
+        }
+    }
+    if out.is_empty() {
+        out.push_str("(no traces)\n");
+    }
+    out
+}
+
+fn render_node(
+    out: &mut String,
+    s: &Span,
+    children: &HashMap<u64, Vec<&Span>>,
+    base: u64,
+    depth: usize,
+    orphan: bool,
+) {
+    let offset = s.start_us.saturating_sub(base);
+    let mark = if orphan { " ~orphan" } else { "" };
+    let node = if s.node.is_empty() { "?" } else { &s.node };
+    out.push_str(&format!(
+        "  {offset:>9}µs +{:<9} {:indent$}{name} [{node}]{mark}\n",
+        format!("{}µs", s.dur_us),
+        "",
+        indent = depth * 2,
+        name = s.name,
+    ));
+    if let Some(kids) = children.get(&s.span_id) {
+        for k in kids {
+            render_node(out, k, children, base, depth + 1, false);
+        }
+    }
+}
+
+/// Slow-root logger: render this trace's subtree from the local ring.
+fn maybe_log_slow(ctx: TraceCtx, dur_us: u64) {
+    let slow = SLOW_US.load(Relaxed);
+    if slow == 0 || dur_us < slow {
+        return;
+    }
+    let spans = snapshot_wire(ctx.trace_id);
+    warn!(
+        "slow trace 0x{:016x}: root took {}µs (threshold {}µs)\n{}",
+        ctx.trace_id,
+        dur_us,
+        slow,
+        render_traces(&spans, 0)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plane is process-global and the lib test binary runs modules in
+    /// parallel, so tests only assert on trace ids they created and use
+    /// `>=` where other tests may add spans concurrently.
+    fn arm() {
+        install(1.0, 0xfeed);
+    }
+
+    #[test]
+    fn disabled_seams_are_inert() {
+        // Regardless of what other tests did, an unsampled parent is inert.
+        assert_eq!(record_at(TraceCtx::NONE, "x", 0, 0), TraceCtx::NONE);
+        let g = span_in(TraceCtx::NONE, "x");
+        assert!(!g.live());
+        drop(g);
+        assert!(!TraceCtx::NONE.sampled());
+    }
+
+    #[test]
+    fn guards_nest_and_restore_ambient_context() {
+        arm();
+        let root = span_root("root");
+        assert!(root.live());
+        let rctx = root.ctx();
+        assert_eq!(current(), rctx);
+        {
+            let child = span("child");
+            assert!(child.live());
+            assert_eq!(child.ctx().trace_id, rctx.trace_id);
+            assert_ne!(child.ctx().span_id, rctx.span_id);
+            assert_eq!(current(), child.ctx());
+        }
+        assert_eq!(current(), rctx);
+        drop(root);
+        let spans = snapshot_wire(rctx.trace_id);
+        assert_eq!(spans.len(), 2);
+        let child = spans.iter().find(|s| s.name == "child").unwrap();
+        assert_eq!(child.parent_id, rctx.span_id);
+        let root = spans.iter().find(|s| s.name == "root").unwrap();
+        assert_eq!(root.parent_id, 0);
+    }
+
+    #[test]
+    fn record_at_chains_contexts() {
+        arm();
+        let root = start_trace();
+        assert!(root.sampled());
+        let a = record_at(root, "a", 10, 5);
+        let b = record_at(a, "b", 12, 1);
+        assert!(b.sampled());
+        assert_eq!(b.trace_id, root.trace_id);
+        record_root_at(root, "root", 0, 100);
+        let spans = snapshot_wire(root.trace_id);
+        assert_eq!(spans.len(), 3);
+        let sb = spans.iter().find(|s| s.name == "b").unwrap();
+        assert_eq!(sb.parent_id, a.span_id);
+    }
+
+    #[test]
+    fn rate_zero_installs_but_starts_no_roots() {
+        install(0.0, 1);
+        assert!(enabled());
+        assert_eq!(start_trace(), TraceCtx::NONE);
+        assert!(!span_root("r").live());
+        // Propagated contexts still record.
+        let foreign = TraceCtx { trace_id: 0xabcd, span_id: 7 };
+        let child = record_at(foreign, "prop", 1, 2);
+        assert!(child.sampled());
+        assert!(snapshot_wire(0xabcd).iter().any(|s| s.name == "prop"));
+        arm(); // restore full sampling for sibling tests
+    }
+
+    #[test]
+    fn reply_ctx_is_take_once() {
+        arm();
+        let ctx = TraceCtx { trace_id: 5, span_id: 6 };
+        set_reply(ctx);
+        assert_eq!(take_reply(), ctx);
+        assert_eq!(take_reply(), TraceCtx::NONE);
+        set_reply(TraceCtx::NONE); // unsampled replies are ignored
+        assert_eq!(take_reply(), TraceCtx::NONE);
+    }
+
+    #[test]
+    fn render_stitches_tree_and_marks_orphans() {
+        let spans = vec![
+            Span {
+                node: "a".into(),
+                name: "root".into(),
+                trace_id: 1,
+                span_id: 10,
+                parent_id: 0,
+                start_us: 100,
+                dur_us: 50,
+            },
+            Span {
+                node: "b".into(),
+                name: "child".into(),
+                trace_id: 1,
+                span_id: 11,
+                parent_id: 10,
+                start_us: 110,
+                dur_us: 20,
+            },
+            Span {
+                node: "b".into(),
+                name: "lost".into(),
+                trace_id: 1,
+                span_id: 12,
+                parent_id: 99, // parent not in the set
+                start_us: 120,
+                dur_us: 1,
+            },
+        ];
+        let out = render_traces(&spans, 0);
+        assert!(out.contains("trace 0x0000000000000001 — 3 span(s)"), "{out}");
+        let root_at = out.find("root [a]").unwrap();
+        let child_at = out.find("child [b]").unwrap();
+        assert!(root_at < child_at, "root renders before its child:\n{out}");
+        assert!(out.contains("lost [b] ~orphan"), "{out}");
+        // Child is indented deeper than the root.
+        let child_line = out.lines().find(|l| l.contains("child [b]")).unwrap();
+        let root_line = out.lines().find(|l| l.contains("root [a]")).unwrap();
+        let lead = |l: &str| l.chars().take_while(|c| *c != '+').count();
+        assert!(child_line.len() > root_line.len() || lead(child_line) >= lead(root_line));
+        // Slow filter drops the (fast) trace entirely.
+        assert_eq!(render_traces(&spans, 1_000), "(no traces)\n");
+    }
+
+    #[test]
+    fn snapshot_filters_by_trace_id() {
+        arm();
+        let a = start_trace();
+        let b = start_trace();
+        record_root_at(a, "ra", 0, 1);
+        record_root_at(b, "rb", 0, 1);
+        let only_a = snapshot_wire(a.trace_id);
+        assert!(only_a.iter().all(|s| s.trace_id == a.trace_id));
+        assert!(only_a.iter().any(|s| s.name == "ra"));
+        assert!(!only_a.iter().any(|s| s.name == "rb"));
+    }
+
+    #[test]
+    fn span_wire_roundtrip() {
+        use crate::util::wire::Wire;
+        let s = Span {
+            node: "127.0.0.1:9092".into(),
+            name: "partition.append".into(),
+            trace_id: 0xdead,
+            span_id: 2,
+            parent_id: 1,
+            start_us: 123,
+            dur_us: 45,
+        };
+        let bytes = s.encode_vec();
+        let back = Span::decode_exact(&bytes).unwrap();
+        assert_eq!(back, s);
+    }
+}

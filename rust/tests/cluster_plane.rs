@@ -7,7 +7,7 @@
 
 use std::collections::HashSet;
 use std::net::TcpListener;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use hybridws::broker::record::ProducerRecord;
@@ -19,6 +19,7 @@ use hybridws::coordinator::prelude::*;
 use hybridws::dstream::api::topic_for_alias;
 use hybridws::dstream::ConsumerMode;
 use hybridws::util::timeutil::{wait_until, TimeScale};
+use hybridws::util::trace::{self, TraceCtx};
 
 /// Start `n` in-process cluster members at `replication` replicas per
 /// partition. `disk_base = Some(dir)` makes each member durable under
@@ -401,6 +402,122 @@ fn replicated_cluster_promotes_followers_after_leader_kill() {
     assert_eq!(seen.len(), 64, "every record must survive the leader kill via its follower");
 
     for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+}
+
+// ---- tracing plane (PR 9) ------------------------------------------------
+
+/// The span flight recorder is process-global; the two tracing tests
+/// serialise on this gate so neither evicts the other's spans mid-assert.
+static TRACE_GATE: Mutex<()> = Mutex::new(());
+
+fn trace_gate() -> MutexGuard<'static, ()> {
+    TRACE_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// PR 9: the bounded span ring drops oldest on overflow and counts every
+/// drop in the observability plane. `≥` assertions throughout — other
+/// tests of this binary may record spans concurrently.
+#[test]
+fn span_ring_overflow_drops_oldest_and_counts() {
+    let _gate = trace_gate();
+    trace::install(1.0, 0xF00D);
+    let parent = TraceCtx { trace_id: 0xDEAD_0001, span_id: 1 };
+    let dropped_before =
+        hybridws::util::obs::counter("trace.spans_dropped").get();
+    let extra = 4_000u64;
+    // `start_us` doubles as the push index so eviction order is checkable.
+    for i in 0..(trace::RING_CAP as u64 + extra) {
+        trace::record_at(parent, "overflow.span", i, 1);
+    }
+    assert!(trace::ring_len() <= trace::RING_CAP, "ring must stay bounded");
+    let dropped =
+        hybridws::util::obs::counter("trace.spans_dropped").get() - dropped_before;
+    assert!(dropped >= extra, "at least {extra} drops expected, counted {dropped}");
+    let spans = trace::snapshot_wire(0xDEAD_0001);
+    assert!(!spans.is_empty(), "the newest spans must survive");
+    assert!(
+        spans.iter().all(|s| s.start_us >= extra),
+        "drop-oldest must evict exactly the oldest pushes"
+    );
+    trace::set_enabled(false);
+}
+
+/// PR 9 acceptance: one fully-sampled publish against a 3-member RF-3
+/// cluster yields ONE causally-connected span tree — client root, broker
+/// dispatch, partition append, both follower applies, and the fetch
+/// wakeup → consumer poll linkage all under the same trace id.
+#[test]
+fn replicated_publish_stitches_one_span_tree() {
+    let _gate = trace_gate();
+    trace::install(1.0, 0x7AC3);
+    trace::set_node("cluster-test");
+    trace::clear();
+
+    let (servers, addrs, _spec) = start_members(3, 3, None);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("traced", 1).unwrap();
+    cc.join_group("tg", "traced", "m", AssignmentMode::Shared).unwrap();
+    cc.publish_batch("traced", vec![ProducerRecord::new(vec![42u8; 32])]).unwrap();
+    let mf = cc.fetch_many_wait("tg", "traced", "m", usize::MAX, usize::MAX, 5_000).unwrap();
+    assert_eq!(mf.record_count(), 1, "the traced record must round-trip");
+
+    // Every member runs in this process, so all spans land in the one
+    // global ring. Replica shipping is asynchronous, and sibling tests in
+    // this binary may record their own publishes while sampling is on —
+    // wait until SOME trace rooted at `client.publish` carries the full
+    // replicated shape, then assert tree-connectivity on that one.
+    let full_shape = |spans: &[trace::Span]| {
+        let has = |n: &str| spans.iter().any(|s| s.name == n);
+        has("client.publish")
+            && has("partition.append")
+            && has("fetch.wakeup")
+            && has("consumer.poll")
+            && spans.iter().filter(|s| s.name == "replica.apply").count() >= 2
+    };
+    let find_complete = || {
+        trace::snapshot_wire(0)
+            .iter()
+            .filter(|s| s.name == "client.publish")
+            .map(|s| s.trace_id)
+            .find(|&id| full_shape(&trace::snapshot_wire(id)))
+    };
+    assert!(
+        wait_until(|| find_complete().is_some(), Duration::from_secs(10)),
+        "no trace collected the full replicated span shape; ring:\n{}",
+        trace::render_traces(&trace::snapshot_wire(0), 0)
+    );
+    let trace_id = find_complete().unwrap();
+
+    let spans = trace::snapshot_wire(trace_id);
+    let names: HashSet<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+    for expect in ["client.publish", "partition.append", "replica.apply", "fetch.wakeup",
+        "consumer.poll"]
+    {
+        assert!(names.contains(expect), "span {expect:?} missing from {names:?}");
+    }
+    // Exactly one root, and every other span's parent is present: the
+    // tree is connected, not a pile of fragments.
+    let ids: HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let roots: Vec<_> = spans.iter().filter(|s| s.parent_id == 0).collect();
+    assert_eq!(roots.len(), 1, "one publish → one root, got {roots:?}");
+    assert_eq!(roots[0].name, "client.publish");
+    for s in &spans {
+        assert!(
+            s.parent_id == 0 || ids.contains(&s.parent_id),
+            "span {} ({}) is orphaned from the tree",
+            s.name,
+            s.span_id
+        );
+    }
+    // The stitched rendering agrees: one trace, no orphan markers.
+    let rendered = trace::render_traces(&spans, 0);
+    assert!(rendered.contains("client.publish"), "rendering:\n{rendered}");
+    assert!(!rendered.contains("~orphan"), "rendering:\n{rendered}");
+
+    trace::set_enabled(false);
+    for s in servers {
         s.shutdown();
     }
 }

@@ -27,6 +27,7 @@ use hybridws::util::fault::{self, invariants, FaultAction, Rule, Scenario};
 use hybridws::util::obs;
 use hybridws::util::rng::Rng;
 use hybridws::util::timeutil::wait_until;
+use hybridws::util::trace;
 
 static GATE: Mutex<()> = Mutex::new(());
 
@@ -45,10 +46,20 @@ fn seed_for(test: &str, default: u64) -> u64 {
 }
 
 /// Persist a drained fault log under `target/fault-logs/` (CI artifacts).
+/// When the tracing plane recorded spans during the scenario, the stitched
+/// timeline is dumped alongside the decision log — fault forensics get
+/// "what the chaos decided" and "what the request path did" side by side.
 fn save_log(test: &str, seed: u64, log: &[String]) {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target").join("fault-logs");
     let _ = std::fs::create_dir_all(&dir);
     let _ = std::fs::write(dir.join(format!("{test}-{seed}.log")), log.join("\n"));
+    let spans = trace::snapshot_wire(0);
+    if !spans.is_empty() {
+        let _ = std::fs::write(
+            dir.join(format!("{test}-{seed}.trace")),
+            trace::render_traces(&spans, 0),
+        );
+    }
 }
 
 /// Uninstalls a manually-installed plane when a test panics before its own

@@ -11,8 +11,11 @@ use std::time::{Duration, Instant};
 use hybridws::broker::record::ProducerRecord;
 use hybridws::broker::{AssignmentMode, BrokerClient, BrokerCore, BrokerServer};
 use hybridws::util::bytes::ByteWriter;
-use hybridws::util::mux::{hello_frame, parse_hello, read_mux_frame, write_mux_frame, MuxConn};
+use hybridws::util::mux::{
+    hello_frame, hello_frame_v, parse_hello, read_mux_frame, write_mux_frame, MuxConn,
+};
 use hybridws::util::rng::Rng;
+use hybridws::util::trace::{self, TraceCtx};
 use hybridws::util::timeutil::wait_until;
 use hybridws::util::wire::{read_frame, recv_msg, send_msg, write_frame, Blob, Wire};
 
@@ -42,12 +45,12 @@ fn mux_routes_replies_under_random_reordering() {
             let mut rng = Rng::new(seed);
             let mut held: Vec<(u64, Vec<u8>)> = Vec::new();
             loop {
-                let res = read_mux_frame(&mut sock, || {
+                let res = read_mux_frame(&mut sock, true, || {
                     flush_held(&mut rng, &mut held, &mut wsock);
                     true
                 });
                 match res {
-                    Ok(Some((corr, body))) => {
+                    Ok(Some((corr, _ctx, body))) => {
                         held.push((corr, body.as_slice().to_vec()));
                         // Flush a shuffled batch at random sizes.
                         if held.len() >= 1 + (rng.next_u64() % 4) as usize {
@@ -94,7 +97,7 @@ fn flush_held(rng: &mut Rng, held: &mut Vec<(u64, Vec<u8>)>, wsock: &mut TcpStre
         let blob = Blob::new(b);
         let mut w = ByteWriter::segmented();
         blob.encode(&mut w);
-        let _ = write_mux_frame(wsock, c, &w);
+        let _ = write_mux_frame(wsock, c, TraceCtx::NONE, &w, true);
     }
 }
 
@@ -272,5 +275,71 @@ fn dstream_poll_and_announce_share_one_mux() {
     let (files, waited) = parked.join().unwrap();
     assert_eq!(files, vec!["/d/fresh".to_string()]);
     assert!(waited < Duration::from_secs(4), "announce must wake the parked poll");
+    server.shutdown();
+}
+
+/// PR 9: a v2 connection carries the ambient trace context on every
+/// request frame. A raw server acks the client's offered version, records
+/// the context each frame carried and echoes it back.
+#[test]
+fn v2_frames_carry_trace_context_end_to_end() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (tx, rx) = std::sync::mpsc::channel::<TraceCtx>();
+    let server = std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().unwrap();
+        let hello = read_frame(&mut sock).unwrap().unwrap();
+        assert_eq!(parse_hello(&hello), Some(2), "client must offer v2");
+        write_frame(&mut sock, &hello_frame()).unwrap();
+        let mut wsock = sock.try_clone().unwrap();
+        while let Ok(Some((corr, ctx, body))) = read_mux_frame(&mut sock, true, || true) {
+            tx.send(ctx).unwrap();
+            let blob = Blob::new(body.as_slice().to_vec());
+            let mut w = ByteWriter::segmented();
+            blob.encode(&mut w);
+            write_mux_frame(&mut wsock, corr, ctx, &w, true).unwrap();
+        }
+    });
+    trace::install(1.0, 0xC0FFEE);
+    let conn = MuxConn::connect(&addr).unwrap();
+    // An ambient span on this thread: its context must ride the frame.
+    let guard = trace::span_in(TraceCtx { trace_id: 0xABCD, span_id: 0x1234 }, "test.root");
+    assert!(guard.live(), "tracing must be on for this test");
+    let sent = Blob::new(vec![1, 2, 3]);
+    let got: Blob = conn.call(&sent).unwrap();
+    assert_eq!(got, sent);
+    let seen = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+    assert_eq!(seen.trace_id, 0xABCD, "request frame must carry the ambient trace id");
+    assert_ne!(seen.span_id, 0, "request frame must carry a live span id");
+    drop(guard);
+    drop(conn);
+    server.join().unwrap();
+    trace::set_enabled(false);
+}
+
+/// PR 9 downgrade interop: an old (v1) client against the upgraded
+/// server. The server must ack the peer's version and serve v1-framed
+/// requests without trace headers.
+#[test]
+fn v1_client_interops_with_v2_server() {
+    use hybridws::broker::protocol::{Request, Response};
+    let (server, addr) = start_server();
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut sock, &hello_frame_v(1)).unwrap();
+    let ack = read_frame(&mut sock).unwrap().unwrap();
+    assert_eq!(parse_hello(&ack), Some(1), "server must downgrade to the peer's version");
+    // One v1 frame: `[corr][body]`, no trace context anywhere.
+    let mut body = ByteWriter::segmented();
+    Request::CreateTopic { name: "t1".into(), partitions: 1 }.encode(&mut body);
+    write_mux_frame(&mut sock, 7, TraceCtx::NONE, &body, false).unwrap();
+    let mut rsock = sock.try_clone().unwrap();
+    let (corr, ctx, resp) = read_mux_frame(&mut rsock, false, || true).unwrap().unwrap();
+    assert_eq!(corr, 7);
+    assert_eq!(ctx, TraceCtx::NONE);
+    assert_eq!(Response::decode_exact(&resp).unwrap(), Response::Ok);
+    // The downgraded socket coexists with v2 clients on the same broker.
+    let muxed = BrokerClient::connect(&addr).unwrap();
+    assert_eq!(muxed.topic_stats("t1").unwrap().records, 0);
+    drop(sock);
     server.shutdown();
 }
