@@ -1,0 +1,171 @@
+//! Rebalance bench (PR 10): publish latency through a LIVE membership
+//! change vs steady state, plus time-to-converge for a join and a drain.
+//! A third broker joins a preloaded two-member cluster — pulling its
+//! rendezvous share of segments while the publisher keeps going — and one
+//! seed member is then drained back out. Emits `BENCH_rebalance.json`
+//! (uploaded as a CI artifact so the rebalance perf trajectory accumulates
+//! per commit); run with `--smoke` for CI sizing.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use hybridws::broker::cluster::migrate;
+use hybridws::broker::record::ProducerRecord;
+use hybridws::broker::{
+    BrokerClient, BrokerCore, BrokerServer, ClusterClient, ClusterSpec, ClusterView,
+};
+use hybridws::util::bench::{banner, Table};
+use hybridws::util::timeutil::percentile;
+
+/// Start `n` in-process cluster members on ephemeral ports (real TCP, real
+/// owner-routing; replication 1 — the moving parts here are the segments).
+fn start_plain(n: usize) -> (Vec<BrokerServer>, Vec<String>, ClusterSpec) {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind cluster member"))
+        .collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let spec = ClusterSpec::new(addrs.clone());
+    let servers = listeners
+        .into_iter()
+        .zip(&addrs)
+        .map(|(l, a)| {
+            BrokerServer::start_cluster(
+                BrokerCore::new(),
+                l,
+                ClusterView::new(spec.clone(), a.clone()),
+            )
+            .expect("start cluster member")
+        })
+        .collect();
+    (servers, addrs, spec)
+}
+
+/// Publish single-record batches until `done` reports the membership
+/// change has converged (but at least 32 samples, so a fast handoff still
+/// yields a measurable distribution). A batch that lands in a partition's
+/// fence→promote gap errors instead of acking; it is counted, not timed.
+fn publish_until(cc: &ClusterClient, topic: &str, done: &AtomicBool) -> (Vec<f64>, usize) {
+    let mut lat_us = Vec::new();
+    let mut errors = 0usize;
+    let mut i = 0u64;
+    while lat_us.len() < 32 || !done.load(Ordering::Relaxed) {
+        let rec = ProducerRecord::new(i.to_le_bytes().to_vec());
+        i += 1;
+        let t0 = Instant::now();
+        match cc.publish_batch(topic, vec![rec]) {
+            Ok(_) => lat_us.push(t0.elapsed().as_secs_f64() * 1e6),
+            Err(_) => errors += 1,
+        }
+    }
+    (lat_us, errors)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    banner("rebalance", "elastic membership: publish latency through a live join + drain");
+    let rounds = if smoke { 200 } else { 2_000 };
+    let preload = if smoke { 2_000 } else { 20_000 };
+
+    let (mut servers, addrs, spec) = start_plain(2);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("reb", 16).unwrap();
+
+    // Preload so the join below moves real segment data, not empty logs.
+    for chunk in 0..preload / 100 {
+        let recs: Vec<ProducerRecord> =
+            (0..100u64).map(|i| ProducerRecord::new(vec![(chunk as u64 + i) as u8; 64])).collect();
+        cc.publish_batch("reb", recs).expect("preload publish");
+    }
+
+    // Steady-state baseline on the two seed members.
+    let mut steady = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let t0 = Instant::now();
+        cc.publish_batch("reb", vec![ProducerRecord::new(vec![i as u8; 64])]).unwrap();
+        steady.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+
+    // Live join: the worker thread pulls the joiner's share while this
+    // thread keeps publishing. Time-to-converge is the full join — catch
+    // up, fence, finalize, spec flip, gossip.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind joiner");
+    let addr3 = listener.local_addr().unwrap().to_string();
+    let joiner = BrokerServer::start_cluster(
+        BrokerCore::new(),
+        listener,
+        ClusterView::new_joining(spec.clone(), addr3.clone()),
+    )
+    .expect("start joiner");
+    let seed_addr = addrs[0].clone();
+    let done = Arc::new(AtomicBool::new(false));
+    let worker_done = Arc::clone(&done);
+    let worker = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let view = joiner.cluster_view().expect("cluster server carries a view");
+        let res = migrate::join(&joiner.core(), view, &seed_addr);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        worker_done.store(true, Ordering::Relaxed);
+        (joiner, res, ms)
+    });
+    let (during_join, join_errors) = publish_until(&cc, "reb", &done);
+    let (joiner, join_res, join_ms) = worker.join().expect("join worker");
+    let (_, moved_in) = join_res.expect("live join failed");
+
+    // Live drain of seed member 0: the survivors pull its share back.
+    let done = Arc::new(AtomicBool::new(false));
+    let worker_done = Arc::clone(&done);
+    let drain_addr = addrs[0].clone();
+    let worker = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let res = BrokerClient::connect(&drain_addr).and_then(|c| c.drain_member(""));
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        worker_done.store(true, Ordering::Relaxed);
+        (res, ms)
+    });
+    let (during_drain, drain_errors) = publish_until(&cc, "reb", &done);
+    let (drain_res, drain_ms) = worker.join().expect("drain worker");
+    let moved_out = drain_res.expect("drain failed");
+
+    joiner.shutdown();
+    for s in servers.drain(..) {
+        s.shutdown();
+    }
+
+    let (s50, s99) = (percentile(&steady, 50.0), percentile(&steady, 99.0));
+    let (j50, j99) = (percentile(&during_join, 50.0), percentile(&during_join, 99.0));
+    let (d50, d99) = (percentile(&during_drain, 50.0), percentile(&during_drain, 99.0));
+
+    let t = Table::new(&["metric", "steady", "during join", "during drain"]);
+    t.row(&[
+        "publish_p50_us".into(),
+        format!("{s50:.1}"),
+        format!("{j50:.1}"),
+        format!("{d50:.1}"),
+    ]);
+    t.row(&[
+        "publish_p99_us".into(),
+        format!("{s99:.1}"),
+        format!("{j99:.1}"),
+        format!("{d99:.1}"),
+    ]);
+    println!(
+        "\njoin: {moved_in} partitions in {join_ms:.1} ms ({join_errors} publish errors); \
+         drain: {moved_out} partitions in {drain_ms:.1} ms ({drain_errors} publish errors)"
+    );
+
+    let json = format!(
+        "{{\"bench\":\"rebalance\",\"smoke\":{smoke},\"rounds\":{rounds},\"preload\":{preload},\
+         \"steady_p50_us\":{s50:.2},\"steady_p99_us\":{s99:.2},\
+         \"join_p50_us\":{j50:.2},\"join_p99_us\":{j99:.2},\
+         \"join_converge_ms\":{join_ms:.2},\"join_moved\":{moved_in},\
+         \"join_publish_errors\":{join_errors},\
+         \"drain_p50_us\":{d50:.2},\"drain_p99_us\":{d99:.2},\
+         \"drain_converge_ms\":{drain_ms:.2},\"drain_moved\":{moved_out},\
+         \"drain_publish_errors\":{drain_errors}}}"
+    );
+    std::fs::write("BENCH_rebalance.json", format!("{json}\n")).expect("write bench json");
+    println!("\nwrote BENCH_rebalance.json: {json}\n");
+}

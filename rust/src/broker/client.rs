@@ -660,6 +660,115 @@ impl BrokerClient {
         }
     }
 
+    // ---- membership plane (PR 10) ---------------------------------------
+
+    /// Ask a cluster member (the seed) for an epoch-bumped spec that
+    /// includes `member`. The seed derives it without installing it — the
+    /// joiner installs and gossips once its partition pulls finished.
+    pub fn join_cluster(&self, member: &str) -> Result<ClusterMetaWire> {
+        match self.rpc(Request::JoinCluster { member: member.into() })? {
+            Response::Cluster(meta) => Ok(meta),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Push an epoch-bumped spec to a peer (membership gossip). Returns
+    /// whatever spec the peer holds afterwards — newer news than ours
+    /// comes back on the same round trip. Single attempt: gossip is
+    /// best-effort by design.
+    pub fn spec_sync(&self, meta: ClusterMetaWire) -> Result<ClusterMetaWire> {
+        match self.rpc_once(Request::SpecSync { meta })? {
+            Response::Cluster(meta) => Ok(meta),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Migration catch-up read: `(source hw, source epoch, records)` of
+    /// `(topic, partition)` from offset `from`. Single attempt — the
+    /// migration state machine owns retry policy.
+    pub(crate) fn fetch_log(
+        &self,
+        topic: &str,
+        partition: usize,
+        from: u64,
+        max: usize,
+    ) -> Result<(u64, u64, Vec<Record>)> {
+        let req = Request::FetchLog { topic: topic.into(), partition, from, max };
+        match self.rpc_once(req)? {
+            Response::LogChunk { hw, epoch, recs } => Ok((hw, epoch, recs)),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Migration offset-journal read: every consumer group's cursors for
+    /// `topic` on this broker (single attempt).
+    pub(crate) fn fetch_offsets(&self, topic: &str) -> Result<Vec<OffsetEntry>> {
+        match self.rpc_once(Request::FetchOffsets { topic: topic.into() })? {
+            Response::OffsetDump(entries) => Ok(entries),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Fence `(topic, partition)` on this broker: it stops accepting
+    /// writes and redirects producers to `by`. Returns the fence epoch
+    /// (single attempt — a fence that cannot be delivered must surface,
+    /// not silently retry into a double handoff).
+    pub(crate) fn fence(
+        &self,
+        topic: &str,
+        partitions: usize,
+        partition: usize,
+        by: &str,
+    ) -> Result<u64> {
+        let req =
+            Request::Fence { topic: topic.into(), partitions, partition, by: by.into() };
+        match self.rpc_once(req)? {
+            Response::Epoch(e) => Ok(e),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Tell this broker to pull `(topic, partition)` from `from` and take
+    /// ownership (the drain path's per-partition handoff). Blocks until
+    /// the transfer promoted; returns the new owner's fencing epoch.
+    pub(crate) fn migrate_partition(
+        &self,
+        topic: &str,
+        partitions: usize,
+        partition: usize,
+        from: &str,
+    ) -> Result<u64> {
+        let req = Request::MigratePartition {
+            topic: topic.into(),
+            partitions,
+            partition,
+            from: from.into(),
+        };
+        match self.rpc_once(req)? {
+            Response::Epoch(e) => Ok(e),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Decommission a cluster member: it hands every owned partition to
+    /// the next rendezvous owner and gossips the spec without itself.
+    /// Empty `member` means "drain yourself". Returns the number of
+    /// partitions moved. Single attempt on purpose: retrying a drain that
+    /// timed out mid-handoff could race its own first run.
+    pub fn drain_member(&self, member: &str) -> Result<usize> {
+        match self.rpc_once(Request::DrainMember { member: member.into() })? {
+            Response::Count(moved) => Ok(moved),
+            Response::Err { code, msg } => Err(error_from_code(code, msg)),
+            other => Err(BrokerError::Transport(format!("unexpected response {other:?}"))),
+        }
+    }
+
     // ---- pipelined publishing (PR 5) ------------------------------------
 
     /// A bounded-window pipelined publisher over this client: up to

@@ -47,6 +47,7 @@ use crate::broker::topic::key_partition;
 use crate::util::fault;
 
 use super::placement::ClusterSpec;
+use super::{relock, rread, rwrite};
 
 /// First retry backoff after a transport failure.
 const RETRY_BACKOFF_START: Duration = Duration::from_millis(25);
@@ -86,7 +87,7 @@ struct MuxInner {
 impl FetchMux {
     /// Register an outstanding long-poll; `false` when one already runs.
     fn mark_inflight(&self, key: &MuxKey, addr: &str) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         inner.inflight.entry(key.clone()).or_default().insert(addr.to_string())
     }
 
@@ -94,13 +95,13 @@ impl FetchMux {
         if mf.batches.is_empty() {
             return; // positions were cached by the caller; nothing to wake for
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         inner.ready.entry(key.clone()).or_default().push((addr.to_string(), mf));
         self.cv.notify_all();
     }
 
     fn fail(&self, key: &MuxKey, err: BrokerError) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         inner.errors.insert(key.clone(), err);
         self.cv.notify_all();
     }
@@ -108,7 +109,7 @@ impl FetchMux {
     /// Drop the inflight mark (always called when a fetcher exits) and
     /// wake waiters so they can respawn or observe the expiry.
     fn finish(&self, key: &MuxKey, addr: &str) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         if let Some(set) = inner.inflight.get_mut(key) {
             set.remove(addr);
             if set.is_empty() {
@@ -119,23 +120,25 @@ impl FetchMux {
     }
 
     fn take_ready(&self, key: &MuxKey) -> (ShardResults, Option<BrokerError>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         (inner.ready.remove(key).unwrap_or_default(), inner.errors.remove(key))
     }
 
     /// True while any fetcher still has an outstanding long-poll for `key`.
     fn any_inflight(&self, key: &MuxKey) -> bool {
-        self.inner.lock().unwrap().inflight.get(key).is_some_and(|s| !s.is_empty())
+        relock(&self.inner).inflight.get(key).is_some_and(|s| !s.is_empty())
     }
 
     /// Park until something happens for `key` (result, error, fetcher
     /// exit) or `timeout` elapses.
     fn wait(&self, key: &MuxKey, timeout: Duration) {
-        let inner = self.inner.lock().unwrap();
+        let inner = relock(&self.inner);
         let has_news = inner.ready.get(key).is_some_and(|v| !v.is_empty())
             || inner.errors.contains_key(key);
         if !has_news {
-            let (_unused, _timed_out) = self.cv.wait_timeout(inner, timeout).unwrap();
+            // Poison-tolerant like every cluster lock: a panicked fetcher
+            // must degrade this wait, not crash the consumer.
+            let _ = self.cv.wait_timeout(inner, timeout).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -176,45 +179,42 @@ impl Shared {
         if fault::active() && fault::check(fault::site::CLUSTER_CONNECT, addr).is_some() {
             return Err(BrokerError::Transport(format!("injected partition to {addr}")));
         }
-        if let Some(c) = self.conns.lock().unwrap().get(addr) {
+        if let Some(c) = relock(&self.conns).get(addr) {
             return Ok(Arc::clone(c));
         }
         let c = Arc::new(BrokerClient::connect(addr)?);
-        self.conns.lock().unwrap().insert(addr.to_string(), Arc::clone(&c));
+        relock(&self.conns).insert(addr.to_string(), Arc::clone(&c));
         Ok(c)
     }
 
     fn invalidate(&self, addr: &str) {
-        self.conns.lock().unwrap().remove(addr);
+        relock(&self.conns).remove(addr);
     }
 
     fn members(&self) -> Vec<String> {
-        self.spec.read().unwrap().members().to_vec()
+        rread(&self.spec).members().to_vec()
     }
 
     fn owner(&self, topic: &str, partition: usize) -> String {
-        self.spec.read().unwrap().owner(topic, partition).to_string()
+        rread(&self.spec).owner(topic, partition).to_string()
     }
 
     /// The cluster's replication factor (failover only engages above 1).
     fn replication(&self) -> usize {
-        self.spec.read().unwrap().replication()
+        rread(&self.spec).replication()
     }
 
     /// Current leader for `(topic, partition)`: a failover override wins,
     /// otherwise the static placement owner.
     fn leader_for(&self, topic: &str, partition: usize) -> String {
-        if let Some(a) = self.overrides.lock().unwrap().get(&(topic.to_string(), partition)) {
+        if let Some(a) = relock(&self.overrides).get(&(topic.to_string(), partition)) {
             return a.clone();
         }
         self.owner(topic, partition)
     }
 
     fn set_override(&self, topic: &str, partition: usize, addr: &str) {
-        self.overrides
-            .lock()
-            .unwrap()
-            .insert((topic.to_string(), partition), addr.to_string());
+        relock(&self.overrides).insert((topic.to_string(), partition), addr.to_string());
     }
 
     /// Partitions of `topic` grouped by their *current* leader (overrides
@@ -234,7 +234,7 @@ impl Shared {
     /// Replica brokers that may hold data for `ps` besides `dead` — the
     /// candidates a read consults when a leader is unreachable.
     fn read_candidates(&self, topic: &str, ps: &[usize], dead: &str) -> Vec<String> {
-        let spec = self.spec.read().unwrap();
+        let spec = rread(&self.spec);
         let mut out: Vec<String> = Vec::new();
         for &p in ps {
             for r in spec.replicas(topic, p) {
@@ -286,7 +286,7 @@ impl Shared {
                 continue; // broker not running in cluster mode
             }
             let fresh = ClusterSpec::from_wire(&wire);
-            let mut spec = self.spec.write().unwrap();
+            let mut spec = rwrite(&self.spec);
             if fresh.epoch > spec.epoch
                 || (fresh.epoch == spec.epoch && fresh.members() != spec.members())
             {
@@ -305,10 +305,7 @@ impl Shared {
     /// restart drops volatile group membership; cursors are recovered from
     /// the shard's offset journal). `true` when at least one join landed.
     fn rejoin_on(&self, addr: &str, group: &str, topic: &str) -> bool {
-        let ours: Vec<(String, AssignmentMode)> = self
-            .registrations
-            .lock()
-            .unwrap()
+        let ours: Vec<(String, AssignmentMode)> = relock(&self.registrations)
             .iter()
             .filter(|((g, t, _), _)| g == group && t == topic)
             .map(|((_, _, m), &mode)| (m.clone(), mode))
@@ -329,7 +326,7 @@ impl Shared {
     /// Re-create a known topic on one broker (a restarted memory-mode
     /// member lost it; durable members recover their own shard).
     fn reensure_on(&self, addr: &str, topic: &str) -> bool {
-        let Some(parts) = self.topics.lock().unwrap().get(topic).copied() else {
+        let Some(parts) = relock(&self.topics).get(topic).copied() else {
             return false;
         };
         self.client(addr).and_then(|c| c.ensure_topic(topic, parts)).is_ok()
@@ -342,7 +339,7 @@ impl Shared {
         // authoritative for the partitions it took over.
         let leaders: Vec<String> =
             (0..mf.positions.len()).map(|p| self.leader_for(topic, p)).collect();
-        let mut cache = self.positions.lock().unwrap();
+        let mut cache = relock(&self.positions);
         let entry = cache.entry((group.to_string(), topic.to_string())).or_default();
         if entry.len() < mf.positions.len() {
             entry.resize(mf.positions.len(), (0, 0));
@@ -355,7 +352,7 @@ impl Shared {
     }
 
     fn merged_positions(&self, group: &str, topic: &str, parts: usize) -> Vec<(u64, u64)> {
-        let cache = self.positions.lock().unwrap();
+        let cache = relock(&self.positions);
         let mut out = cache
             .get(&(group.to_string(), topic.to_string()))
             .cloned()
@@ -431,7 +428,7 @@ impl ClusterClient {
 
     /// Snapshot of the active cluster spec.
     pub fn spec(&self) -> ClusterSpec {
-        self.shared.spec.read().unwrap().clone()
+        rread(&self.shared.spec).clone()
     }
 
     /// Set the acknowledgement level for subsequent publishes:
@@ -447,7 +444,7 @@ impl ClusterClient {
     /// Partition count used for routing `topic` (learned at ensure/create
     /// time, or looked up from any member for pre-existing topics).
     fn partitions_of(&self, topic: &str) -> Result<usize> {
-        if let Some(n) = self.shared.topics.lock().unwrap().get(topic).copied() {
+        if let Some(n) = relock(&self.shared.topics).get(topic).copied() {
             return Ok(n);
         }
         let mut last_err = BrokerError::UnknownTopic(topic.into());
@@ -455,7 +452,7 @@ impl ClusterClient {
             match self.shared.with_broker(&addr, |c| c.offsets(topic)) {
                 Ok(os) => {
                     let n = os.len().max(1);
-                    self.shared.topics.lock().unwrap().insert(topic.to_string(), n);
+                    relock(&self.shared.topics).insert(topic.to_string(), n);
                     return Ok(n);
                 }
                 Err(e) => last_err = e,
@@ -557,7 +554,7 @@ impl ClusterClient {
     /// or `None` when no replica answered.
     fn fail_over(&self, topic: &str, partition: usize, dead: &str) -> Option<String> {
         let candidates: Vec<String> = {
-            let spec = self.shared.spec.read().unwrap();
+            let spec = rread(&self.shared.spec);
             spec.replicas(topic, partition).into_iter().map(|s| s.to_string()).collect()
         };
         let mut best: Option<(String, u64)> = None;
@@ -677,7 +674,7 @@ impl ClusterClient {
                 self.shared.with_broker(&addr, |c| c.ensure_topic(name, partitions))?;
             }
         }
-        self.shared.topics.lock().unwrap().insert(name.to_string(), partitions);
+        relock(&self.shared.topics).insert(name.to_string(), partitions);
         Ok(())
     }
 
@@ -702,17 +699,13 @@ impl ClusterClient {
         if !reached {
             return Err(last);
         }
-        self.shared.topics.lock().unwrap().insert(name.to_string(), partitions);
+        relock(&self.shared.topics).insert(name.to_string(), partitions);
         Ok(())
     }
 
     pub fn delete_topic(&self, name: &str) -> Result<()> {
-        self.shared.topics.lock().unwrap().remove(name);
-        self.shared
-            .positions
-            .lock()
-            .unwrap()
-            .retain(|(_, t), _| t != name);
+        relock(&self.shared.topics).remove(name);
+        relock(&self.shared.positions).retain(|(_, t), _| t != name);
         let mut found = false;
         for addr in self.shared.members() {
             match self.shared.with_broker(&addr, |c| c.delete_topic(name)) {
@@ -755,7 +748,7 @@ impl ClusterClient {
     /// member's empty non-owned partition segments on durable topics.)
     pub fn topic_stats(&self, name: &str) -> Result<TopicStats> {
         let parts = self.partitions_of(name)?;
-        let owners = self.shared.spec.read().unwrap().owners(name, parts);
+        let owners = rread(&self.shared.spec).owners(name, parts);
         let mut out = TopicStats {
             partitions: parts,
             records: 0,
@@ -863,10 +856,7 @@ impl ClusterClient {
         member: &str,
         mode: AssignmentMode,
     ) -> Result<u64> {
-        self.shared
-            .registrations
-            .lock()
-            .unwrap()
+        relock(&self.shared.registrations)
             .insert((group.into(), topic.into(), member.into()), mode);
         let mut generation = 0;
         let mut reached = false;
@@ -895,10 +885,7 @@ impl ClusterClient {
     }
 
     pub fn leave_group(&self, group: &str, topic: &str, member: &str) -> Result<bool> {
-        self.shared
-            .registrations
-            .lock()
-            .unwrap()
+        relock(&self.shared.registrations)
             .remove(&(group.to_string(), topic.to_string(), member.to_string()));
         let mut left = false;
         for addr in self.shared.members() {
@@ -1130,11 +1117,18 @@ impl ClusterClient {
                 continue;
             }
             let shared = Arc::clone(&self.shared);
-            let key = key.clone();
-            std::thread::Builder::new()
+            let tkey = key.clone();
+            let taddr = addr.clone();
+            let spawned = std::thread::Builder::new()
                 .name("cluster-fetch".into())
-                .spawn(move || run_fetcher(shared, key, addr, max, max_bytes, remaining))
-                .expect("spawn cluster fetcher thread");
+                .spawn(move || run_fetcher(shared, tkey, taddr, max, max_bytes, remaining));
+            if let Err(e) = spawned {
+                // Degrade, don't crash the consumer: unmark the in-flight
+                // slot so the caller's wait loop re-attempts the spawn
+                // (or times out at its own deadline).
+                log::error!("cluster fetcher thread failed to spawn: {e} — shard fetch degraded");
+                self.shared.mux.finish(key, &addr);
+            }
         }
     }
 

@@ -1,0 +1,337 @@
+//! The membership plane (PR 10): fenced live partition migration.
+//!
+//! A `ClusterSpec` change (join or drain) moves only the partitions whose
+//! rendezvous argmax changed — ~1/N of them — but each of those must
+//! change hands **without losing acked records or consumer positions**,
+//! while producers and consumers keep running. This module is the handoff
+//! state machine the new owner drives for every moved partition:
+//!
+//! ```text
+//!        old owner (source)                    new owner (this broker)
+//!   ──────────────────────────              ──────────────────────────
+//!   serving reads + writes          (1)     FetchLog loop from local hw
+//!        │  keeps accepting  ◄──────────────  replica_append catch-up
+//!        │                          (2)     FetchOffsets → sync_offsets
+//!        ▼                          (3)     Fence { by: self }
+//!   fenced: epoch bumped,   ◄──────────────
+//!   answers NotOwner{new}           (4)     final FetchLog drain of the
+//!        │                                  frozen tail + offset re-pull
+//!        ▼                          (5)     promote: epoch past fence,
+//!   redirects producers                     HaState::promote → serving
+//! ```
+//!
+//! Ordering is what makes this safe. The transfer runs **under the old
+//! spec** — clients still route to the source, which keeps accepting
+//! writes (dual-accept window: both logs exist, only the source takes
+//! traffic). The fence (3) freezes the source *before* the final drain
+//! (4), so step 4's watermark is exact; the source answers
+//! `NotOwner { new }` from its deposal record from then on, so a producer
+//! caught mid-handoff pays exactly one reroute. The new owner promotes
+//! (5) **before** the spec flips anywhere, so the redirect target is
+//! already serving. Only then does the epoch-bumped spec propagate —
+//! broker-to-broker via `SpecSync` gossip, client-side via the existing
+//! `ClusterMeta` refresh — and placement catches up with reality.
+//!
+//! A crash mid-handoff is benign at every step: before (3) the source is
+//! still the undisputed owner and nothing was installed anywhere; after
+//! (3) the fenced source redirects to a new owner that either finished
+//! (serving) or can re-run the pull idempotently (`replica_append` skips
+//! duplicate prefixes; offset adoption is forward-only).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::broker::client::BrokerClient;
+use crate::broker::embedded::{BrokerCore, BrokerError, Result};
+use crate::util::fault::{self, FaultAction};
+use crate::util::trace;
+
+use super::placement::ClusterSpec;
+use super::ClusterView;
+
+/// Records per catch-up fetch — the same bound the PR 7 replicator uses,
+/// for the same reason: frame size stays bounded however far behind the
+/// new owner starts.
+const MIGRATE_BATCH: usize = 512;
+
+/// Give up on a catch-up loop that makes no forward progress after this
+/// many consecutive rounds (retention-trimmed prefix on the source, or a
+/// source answering nonsense) instead of wedging the migration thread.
+const STALL_ROUNDS: u32 = 3;
+
+/// Pull `(topic, partition)` from its current owner `from` and take
+/// ownership: catch up the log and the consumer-offset journal, fence the
+/// source, drain the frozen tail, then promote locally. Returns the new
+/// owner's post-promotion fencing epoch.
+///
+/// Runs on the **new** owner (the joiner pulling its rendezvous share, or
+/// a survivor told to take a drained member's partition via
+/// `MigratePartition`). Idempotent: re-running after a crash re-ships
+/// only what is missing.
+pub fn pull_partition(
+    core: &BrokerCore,
+    view: &ClusterView,
+    topic: &str,
+    partitions: usize,
+    partition: usize,
+    from: &str,
+) -> Result<u64> {
+    let _root = trace::span("migrate.transfer");
+    let t0 = Instant::now();
+    crate::obs_gauge!("cluster.migration.partitions_moving").add(1);
+    let res = pull_partition_inner(core, view, topic, partitions, partition, from);
+    crate::obs_gauge!("cluster.migration.partitions_moving").add(-1);
+    match &res {
+        Ok(_) => {
+            crate::obs_counter!("cluster.migration.partitions_moved").inc();
+            crate::obs_hist!("cluster.migration.handoff_us")
+                .observe(t0.elapsed().as_micros() as u64);
+        }
+        Err(e) => {
+            log::warn!("migration of {topic}[{partition}] from {from} failed: {e}");
+            crate::obs_counter!("cluster.migration.failures").inc();
+        }
+    }
+    res
+}
+
+fn pull_partition_inner(
+    core: &BrokerCore,
+    view: &ClusterView,
+    topic: &str,
+    partitions: usize,
+    partition: usize,
+    from: &str,
+) -> Result<u64> {
+    check_seam(topic, partition, from)?;
+    core.ensure_topic(topic, partitions.max(1))?;
+    let src = BrokerClient::connect(from)?;
+
+    // (1) Catch-up: ship the source's log into the local replica while the
+    // source keeps serving traffic (the dual-accept window).
+    {
+        let _s = trace::span("migrate.catchup");
+        catch_up(core, &src, topic, partitions, partition, from)?;
+    }
+
+    // (2) Consumer-offset journal, first pass — most of it lands here so
+    // the post-fence re-pull is small.
+    core.sync_offsets(topic, src.fetch_offsets(topic)?)?;
+
+    // (3) Fence the source: it bumps its epoch past everything it issued,
+    // records the deposal and answers `NotOwner { us }` from now on. The
+    // log is frozen from this instant.
+    let fence_epoch = {
+        let _s = trace::span("migrate.fence");
+        check_seam(topic, partition, from)?;
+        src.fence(topic, partitions, partition, &view.self_addr)?
+    };
+
+    // (4) Drain the frozen tail — whatever raced in between (1) and (3) —
+    // and re-pull the offsets committed during the window.
+    {
+        let _s = trace::span("migrate.finalize");
+        catch_up(core, &src, topic, partitions, partition, from)?;
+        if let Ok(entries) = src.fetch_offsets(topic) {
+            let _ = core.sync_offsets(topic, entries);
+        }
+    }
+
+    // (5) Adopt: make sure our epoch is at least the fence epoch, then
+    // promote past it so this broker outranks every epoch the source ever
+    // issued, and `ClusterView::leads` flips true *before* any spec does.
+    if core.partition_epoch(topic, partition)? < fence_epoch {
+        core.set_partition_epoch(topic, partition, fence_epoch)?;
+    }
+    view.promote(core, topic, partitions, partition)
+}
+
+/// Ship records from `src` until the local watermark reaches the source's.
+/// Forward-progress is guaranteed by `replica_append`'s idempotent apply;
+/// a source whose prefix was retention-trimmed below our watermark cannot
+/// be represented as a contiguous local log, so a stalled loop returns
+/// with what it has instead of spinning (bounded by [`STALL_ROUNDS`]).
+fn catch_up(
+    core: &BrokerCore,
+    src: &BrokerClient,
+    topic: &str,
+    partitions: usize,
+    partition: usize,
+    from: &str,
+) -> Result<()> {
+    let mut local = core.high_watermark(topic, partition)?;
+    let mut stalled = 0u32;
+    loop {
+        check_seam(topic, partition, from)?;
+        let (src_hw, epoch, recs) = src.fetch_log(topic, partition, local, MIGRATE_BATCH)?;
+        if !recs.is_empty() {
+            let base = recs[0].offset;
+            let bytes: u64 = recs.iter().map(|r| r.value.len() as u64).sum();
+            let applied = core.replica_append(topic, partitions, partition, epoch, base, recs)?;
+            if applied > local {
+                crate::obs_counter!("cluster.migration.records_transferred")
+                    .add(applied - local);
+                crate::obs_counter!("cluster.migration.bytes_transferred").add(bytes);
+                local = applied;
+                stalled = 0;
+            } else {
+                stalled += 1;
+            }
+        } else {
+            stalled += 1;
+        }
+        if local >= src_hw {
+            return Ok(());
+        }
+        if stalled >= STALL_ROUNDS {
+            log::warn!(
+                "migration catch-up of {topic}[{partition}] from {from} stalled at \
+                 {local}/{src_hw} — continuing with a truncated prefix"
+            );
+            return Ok(());
+        }
+    }
+}
+
+/// The `cluster.migrate` fault seam: scripted chaos can refuse, fail or
+/// stall any step of a transfer. Context is `topic[partition]@source`, so
+/// schedules can target one partition or one source. `Stall` sleeps in
+/// place (stretching the dual-accept window); every other action degrades
+/// to failing the step — the most disruptive thing a migration seam can
+/// do, per the fault plane's no-silent-no-op rule.
+fn check_seam(topic: &str, partition: usize, from: &str) -> Result<()> {
+    if !fault::active() {
+        return Ok(());
+    }
+    match fault::check(fault::site::CLUSTER_MIGRATE, &format!("{topic}[{partition}]@{from}")) {
+        None => Ok(()),
+        Some(FaultAction::Stall(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(_) => Err(BrokerError::Transport(format!(
+            "injected migration fault for {topic}[{partition}] from {from}"
+        ))),
+    }
+}
+
+/// Join a running cluster, driven by the joiner. The seed answers
+/// `JoinCluster` with the epoch-bumped spec including us (without
+/// installing it); we pull our rendezvous share partition by partition
+/// under the old placement, and only once every transfer promoted do we
+/// install the new spec and gossip it to every member. Returns the
+/// adopted spec and the number of partitions pulled.
+///
+/// The joiner's server must already be listening (it is the redirect
+/// target the moment the first fence lands) with a
+/// [`ClusterView::new_joining`] view.
+pub fn join(core: &BrokerCore, view: &ClusterView, seed: &str) -> Result<(ClusterSpec, usize)> {
+    let seed_client = BrokerClient::connect(seed)?;
+    let next = ClusterSpec::from_wire(&seed_client.join_cluster(&view.self_addr)?);
+    if !next.contains(&view.self_addr) {
+        return Err(BrokerError::Transport(format!(
+            "seed {seed} answered a spec without us: {:?}",
+            next.members()
+        )));
+    }
+    let cur = view.spec();
+    let mut moved = 0usize;
+    for (topic, partitions) in cluster_topics(&cur, &view.self_addr) {
+        for p in 0..partitions {
+            if next.owner(&topic, p) != view.self_addr {
+                continue; // not our share
+            }
+            if !cur.is_empty() && cur.owner(&topic, p) == view.self_addr {
+                continue; // already ours (re-join after a crash)
+            }
+            let source = cur.owner(&topic, p).to_string();
+            pull_partition(core, view, &topic, partitions, p, &source)?;
+            moved += 1;
+        }
+    }
+    view.install_spec(next.clone());
+    gossip(&next, &view.self_addr);
+    Ok((next, moved))
+}
+
+/// Drain this broker: hand every partition it owns to that partition's
+/// next rendezvous owner (which runs [`pull_partition`] against us via
+/// `MigratePartition`), then install + gossip the spec without us.
+/// Returns the number of partitions handed off. Runs on the **draining**
+/// broker, in response to `DrainMember`.
+pub fn drain(core: &BrokerCore, view: &ClusterView) -> Result<usize> {
+    let cur = view.spec();
+    if !cur.contains(&view.self_addr) {
+        return Ok(0); // already drained (idempotent retry)
+    }
+    let next = cur.removed(&view.self_addr);
+    if next.is_empty() {
+        return Err(BrokerError::Transport(
+            "cannot drain the last cluster member — nothing would own the data".into(),
+        ));
+    }
+    let mut conns: HashMap<String, BrokerClient> = HashMap::new();
+    let mut moved = 0usize;
+    for topic in core.topic_names() {
+        let partitions = core.partition_count(&topic)?;
+        for p in 0..partitions {
+            if cur.owner(&topic, p) != view.self_addr {
+                continue;
+            }
+            let target = next.owner(&topic, p).to_string();
+            if !conns.contains_key(&target) {
+                conns.insert(target.clone(), BrokerClient::connect(&target)?);
+            }
+            conns[&target].migrate_partition(&topic, partitions, p, &view.self_addr)?;
+            moved += 1;
+        }
+    }
+    view.install_spec(next.clone());
+    gossip(&next, &view.self_addr);
+    Ok(moved)
+}
+
+/// Every topic the cluster serves, with its partition count — collected
+/// from each current member (best-effort per member: a dead member's
+/// topics are found through the survivors that replicate them).
+fn cluster_topics(spec: &ClusterSpec, exclude: &str) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for m in spec.members() {
+        if m == exclude {
+            continue;
+        }
+        let Ok(c) = BrokerClient::connect(m) else {
+            continue;
+        };
+        let Ok(names) = c.topic_names() else {
+            continue;
+        };
+        for t in names {
+            let Ok(stats) = c.topic_stats(&t) else {
+                continue;
+            };
+            match out.iter_mut().find(|(name, _)| *name == t) {
+                Some((_, n)) => *n = (*n).max(stats.partitions),
+                None => out.push((t, stats.partitions)),
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Best-effort spec gossip: push `spec` to every member except `exclude`.
+/// A member that cannot be reached converges later — any peer or client
+/// that talks to an updated member adopts the higher epoch, and the
+/// drained/joined broker keeps answering `SpecSync` pushes itself.
+fn gossip(spec: &ClusterSpec, exclude: &str) {
+    for m in spec.members() {
+        if m == exclude {
+            continue;
+        }
+        match BrokerClient::connect(m).and_then(|c| c.spec_sync(spec.to_wire())) {
+            Ok(_) => {}
+            Err(e) => log::warn!("spec gossip to {m} failed (will converge later): {e}"),
+        }
+    }
+}

@@ -30,11 +30,12 @@
 //! offsets persisted in that shard's `offsets.log`.
 
 pub mod client;
+pub mod migrate;
 pub mod placement;
 pub mod replicate;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use super::embedded::{BrokerCore, Result};
 
@@ -42,15 +43,45 @@ pub use client::ClusterClient;
 pub use placement::{ClusterSpec, PLACEMENT_VERSION};
 pub use replicate::{HaState, Replicator};
 
+/// Poison-tolerant mutex lock for the cluster plane's shared state. A
+/// panic on one thread (a scripted fault, an assertion in a test sharing
+/// the process) poisons the lock; the data under these locks is
+/// crash-consistent bookkeeping (watermarks, deposals, routing caches)
+/// where a stale read degrades service, while propagating the panic
+/// would take the whole broker down — so every cluster hot path degrades
+/// instead of crashing.
+pub(crate) fn relock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant `RwLock` read — see [`relock`].
+pub(crate) fn rread<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant `RwLock` write — see [`relock`].
+pub(crate) fn rwrite<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
 /// A broker's view of the cluster it belongs to: the shared spec plus its
 /// own advertised address. Handed to
 /// [`crate::broker::BrokerServer::start_cluster`]; the dispatch layer uses
 /// it to enforce ownership (`NotOwner`) and answer `ClusterMeta`.
+///
+/// Since PR 10 the spec is **dynamic**: membership changes arrive as
+/// epoch-bumped specs (`JoinCluster`/`SpecSync`/drain) and are adopted via
+/// [`ClusterView::install_spec`], which only ever moves the epoch forward.
+/// Everything that reads placement takes a cheap snapshot through
+/// [`ClusterView::spec`], so a membership flip is one `RwLock` write and
+/// in-flight requests keep routing on whichever spec they snapshotted —
+/// at worst one `NotOwner` reroute behind the flip.
 #[derive(Debug)]
 pub struct ClusterView {
-    pub spec: ClusterSpec,
+    spec: RwLock<ClusterSpec>,
     /// The address clients reach *this* broker under (must be one of the
-    /// spec's members, spelled identically).
+    /// spec's members, spelled identically — except during a live join,
+    /// see [`ClusterView::new_joining`]).
     pub self_addr: String,
     /// Round-robin cursor for key-less publishes arriving over the legacy
     /// partition-less frames — rotated across the partitions this broker
@@ -77,13 +108,56 @@ impl ClusterView {
             "self_addr {self_addr:?} is not a cluster member"
         );
         Self {
-            spec,
+            spec: RwLock::new(spec),
             self_addr,
             rr: AtomicU64::new(0),
             ha: HaState::new(),
             replicator: OnceLock::new(),
             default_acks: super::protocol::ACKS_LEADER,
         }
+    }
+
+    /// A view for a broker that is **joining** a running cluster: it holds
+    /// the cluster's current spec but its own address is not in it yet, so
+    /// it owns nothing, receives no routed traffic, and can pull its
+    /// rendezvous share in peace. [`ClusterView::install_spec`] with the
+    /// epoch-bumped spec (which does contain it) completes the join.
+    pub fn new_joining(spec: ClusterSpec, self_addr: impl Into<String>) -> Self {
+        Self {
+            spec: RwLock::new(spec),
+            self_addr: self_addr.into(),
+            rr: AtomicU64::new(0),
+            ha: HaState::new(),
+            replicator: OnceLock::new(),
+            default_acks: super::protocol::ACKS_LEADER,
+        }
+    }
+
+    /// Snapshot the current spec. A clone of a few strings — cheap enough
+    /// for request paths, and it means a concurrent membership flip never
+    /// sees a request half-routed under two specs.
+    pub fn spec(&self) -> ClusterSpec {
+        rread(&self.spec).clone()
+    }
+
+    /// Adopt `next` iff its epoch is newer than the current spec's.
+    /// Returns whether the flip happened. Also hands the new spec to the
+    /// replication worker (if any), so follower sets follow membership.
+    /// Lock poison is tolerated: membership must keep converging even
+    /// after an unrelated panic on some other thread.
+    pub fn install_spec(&self, next: ClusterSpec) -> bool {
+        {
+            let mut cur = rwrite(&self.spec);
+            if next.epoch <= cur.epoch {
+                return false;
+            }
+            *cur = next.clone();
+        }
+        if let Some(rep) = self.replicator() {
+            rep.update_spec(next);
+        }
+        crate::obs_counter!("cluster.membership.spec_flips").inc();
+        true
     }
 
     /// Builder: the acks level for legacy partition-less publishes
@@ -99,11 +173,12 @@ impl ClusterView {
         self.default_acks
     }
 
-    /// True when this broker owns `(topic, partition)` under the *static*
-    /// placement. Failover-unaware; see [`ClusterView::leads`] for the
-    /// authoritative check.
+    /// True when this broker owns `(topic, partition)` under the current
+    /// spec's placement. Failover-unaware; see [`ClusterView::leads`] for
+    /// the authoritative check.
     pub fn owns(&self, topic: &str, partition: usize) -> bool {
-        self.spec.owner(topic, partition) == self.self_addr
+        let spec = rread(&self.spec);
+        !spec.is_empty() && spec.owner(topic, partition) == self.self_addr
     }
 
     /// True when this broker is the *current* leader for
@@ -116,7 +191,7 @@ impl ClusterView {
         if self.ha.deposed_info(topic, partition).is_some() {
             return false;
         }
-        self.spec.owner(topic, partition) == self.self_addr
+        self.owns(topic, partition)
     }
 
     /// Best-known current leader address for `(topic, partition)` — the
@@ -128,7 +203,11 @@ impl ClusterView {
                 return by;
             }
         }
-        self.spec.owner(topic, partition).to_string()
+        let spec = rread(&self.spec);
+        if spec.is_empty() {
+            return self.self_addr.clone();
+        }
+        spec.owner(topic, partition).to_string()
     }
 
     /// Promote this broker to leader of `(topic, partition)`: bump the
@@ -169,7 +248,7 @@ impl ClusterView {
     /// The partitions of `topic` this broker owns under a
     /// `partitions`-wide layout.
     pub fn owned_partitions(&self, topic: &str, partitions: usize) -> Vec<usize> {
-        self.spec.owned_by(&self.self_addr, topic, partitions)
+        rread(&self.spec).owned_by(&self.self_addr, topic, partitions)
     }
 
     /// Rotate over `owned` for key-less legacy publishes.
@@ -198,6 +277,32 @@ mod tests {
         let owned_a = va.owned_partitions("t", 16);
         let owned_b = vb.owned_partitions("t", 16);
         assert_eq!(owned_a.len() + owned_b.len(), 16);
+    }
+
+    #[test]
+    fn install_spec_only_moves_forward() {
+        let spec = ClusterSpec::new(["a:1", "b:1"]);
+        let v = ClusterView::new(spec.clone(), "a:1");
+        let stale = spec.clone(); // epoch 0, same as current — must be rejected
+        assert!(!v.install_spec(stale));
+        let next = spec.joined("c:1");
+        assert!(v.install_spec(next.clone()));
+        assert_eq!(v.spec(), next);
+        // Re-installing the same epoch is a no-op too.
+        assert!(!v.install_spec(next));
+    }
+
+    #[test]
+    fn joining_view_owns_nothing_until_the_spec_flips() {
+        let spec = ClusterSpec::new(["a:1", "b:1"]);
+        let v = ClusterView::new_joining(spec.clone(), "c:1");
+        assert!(v.owned_partitions("t", 16).is_empty());
+        let next = spec.joined("c:1");
+        assert!(v.install_spec(next));
+        assert!(
+            !v.owned_partitions("t", 64).is_empty(),
+            "after the flip the joiner must hold its rendezvous share"
+        );
     }
 
     #[test]

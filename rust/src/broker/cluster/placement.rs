@@ -170,6 +170,37 @@ impl ClusterSpec {
         out
     }
 
+    /// Derive the spec after `member` joins: same placement version, the
+    /// member list re-normalised with the newcomer, replication re-clamped
+    /// and — the part that makes the change *observable* — the epoch bumped
+    /// past this spec's. Every participant comparing epochs adopts the
+    /// higher one, so a join propagates by gossip without a coordinator.
+    /// Joining a member that is already present still bumps the epoch (the
+    /// caller asked for a membership event; an idempotent re-join must
+    /// still win the gossip race against the stale spec).
+    pub fn joined(&self, member: &str) -> ClusterSpec {
+        let mut next =
+            Self::new(self.members.iter().cloned().chain(std::iter::once(member.to_string())))
+                .with_replication(self.replication);
+        next.epoch = self.epoch + 1;
+        next.version = self.version;
+        next
+    }
+
+    /// Derive the spec after `member` leaves (drain/decommission): the
+    /// member list without it, replication re-clamped to the survivors,
+    /// epoch bumped. Removing the last member is the caller's error —
+    /// placement over an empty cluster is meaningless — so the survivors
+    /// list may be empty here and callers must check [`Self::is_empty`]
+    /// before using the result for ownership.
+    pub fn removed(&self, member: &str) -> ClusterSpec {
+        let mut next = Self::new(self.members.iter().filter(|m| *m != member).cloned())
+            .with_replication(self.replication);
+        next.epoch = self.epoch + 1;
+        next.version = self.version;
+        next
+    }
+
     /// Wire form (the `ClusterMeta` response payload).
     pub fn to_wire(&self) -> ClusterMetaWire {
         ClusterMetaWire {
@@ -332,6 +363,61 @@ mod tests {
         for p in 0..16 {
             assert_eq!(back.replicas("t", p), s.replicas("t", p));
         }
+    }
+
+    #[test]
+    fn joined_bumps_epoch_and_moves_a_bounded_share() {
+        let three = spec(3);
+        let four = three.joined("127.0.0.1:9003");
+        assert_eq!(four.epoch, three.epoch + 1);
+        assert_eq!(four.version, three.version);
+        assert_eq!(four.len(), 4);
+        let parts = 64usize;
+        let mut moved = 0;
+        for p in 0..parts {
+            let before = three.owner("t", p);
+            let after = four.owner("t", p);
+            if before != after {
+                moved += 1;
+                assert_eq!(after, "127.0.0.1:9003", "partition {p} moved to a non-joiner");
+            }
+        }
+        // Rendezvous: the joiner takes ~1/N; allow generous slack but
+        // reject a reshuffle (modulo placement would move ~3/4 here).
+        assert!(moved > 0, "the joiner took nothing — degenerate placement");
+        assert!(moved <= parts / 2, "join moved {moved}/{parts} partitions — not rendezvous");
+    }
+
+    #[test]
+    fn removed_bumps_epoch_and_moves_only_the_leaver_share() {
+        let four = spec(4);
+        let leaver = four.members()[2].clone();
+        let three = four.removed(&leaver);
+        assert_eq!(three.epoch, four.epoch + 1);
+        assert_eq!(three.len(), 3);
+        assert!(!three.contains(&leaver));
+        for p in 0..64 {
+            if four.owner("t", p) != leaver {
+                assert_eq!(four.owner("t", p), three.owner("t", p), "partition {p} swapped owners needlessly");
+            } else {
+                assert_ne!(three.owner("t", p), leaver);
+            }
+        }
+    }
+
+    #[test]
+    fn joined_is_idempotent_on_members_but_not_on_epoch() {
+        let s = spec(3);
+        let again = s.joined(&s.members()[0].clone());
+        assert_eq!(again.members(), s.members(), "re-joining an existing member adds nothing");
+        assert_eq!(again.epoch, s.epoch + 1, "but the membership event still bumps the epoch");
+    }
+
+    #[test]
+    fn removed_reclamps_replication_to_survivors() {
+        let s = spec(2).with_replication(2);
+        let one = s.removed(&s.members()[1].clone());
+        assert_eq!(one.replication(), 1, "replication must re-clamp to the survivor count");
     }
 
     #[test]

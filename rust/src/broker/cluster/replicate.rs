@@ -39,6 +39,7 @@ use crate::broker::embedded::{BrokerCore, BrokerError, Result};
 use crate::util::trace::{self, TraceCtx};
 
 use super::placement::ClusterSpec;
+use super::relock;
 
 /// Records per replication frame — bounds frame size while backfilling a
 /// follower that is far behind.
@@ -79,15 +80,15 @@ impl HaState {
     /// `epoch`. Clears any deposal (a re-promotion outranks it).
     pub fn promote(&self, topic: &str, partition: usize, epoch: u64) {
         let key = (topic.to_string(), partition);
-        self.deposed.lock().unwrap().remove(&key);
-        let mut promoted = self.promoted.lock().unwrap();
+        relock(&self.deposed).remove(&key);
+        let mut promoted = relock(&self.promoted);
         let e = promoted.entry(key).or_insert(0);
         *e = (*e).max(epoch);
     }
 
     /// Epoch this broker was promoted at for `(topic, partition)`, if any.
     pub fn promoted_epoch(&self, topic: &str, partition: usize) -> Option<u64> {
-        self.promoted.lock().unwrap().get(&(topic.to_string(), partition)).copied()
+        relock(&self.promoted).get(&(topic.to_string(), partition)).copied()
     }
 
     /// Record a deposal: a follower fenced this broker's replication at
@@ -95,17 +96,17 @@ impl HaState {
     /// promoted at an equal-or-newer epoch (it IS the newest leader).
     pub fn depose(&self, topic: &str, partition: usize, epoch: u64, by: &str) {
         let key = (topic.to_string(), partition);
-        if self.promoted.lock().unwrap().get(&key).is_some_and(|&own| own >= epoch) {
+        if relock(&self.promoted).get(&key).is_some_and(|&own| own >= epoch) {
             return;
         }
-        self.promoted.lock().unwrap().remove(&key);
-        self.deposed.lock().unwrap().insert(key, (epoch, by.to_string()));
+        relock(&self.promoted).remove(&key);
+        relock(&self.deposed).insert(key, (epoch, by.to_string()));
     }
 
     /// `(epoch, fencer address)` if this broker was deposed for
     /// `(topic, partition)` — the dispatch layer's `NotOwner` redirect.
     pub fn deposed_info(&self, topic: &str, partition: usize) -> Option<(u64, String)> {
-        self.deposed.lock().unwrap().get(&(topic.to_string(), partition)).cloned()
+        relock(&self.deposed).get(&(topic.to_string(), partition)).cloned()
     }
 }
 
@@ -141,7 +142,10 @@ struct Inner {
 /// job queue, one lazily-connected [`BrokerClient`] per follower.
 pub struct Replicator {
     core: Arc<BrokerCore>,
-    spec: ClusterSpec,
+    /// The membership spec the follower sets derive from. Mutable since
+    /// PR 10: an epoch-bumped spec installed by the membership plane
+    /// (join/drain) re-targets shipping without restarting the worker.
+    spec: Mutex<ClusterSpec>,
     self_addr: String,
     ha: Arc<HaState>,
     inner: Mutex<Inner>,
@@ -170,7 +174,7 @@ impl Replicator {
     ) -> Arc<Self> {
         let rep = Arc::new(Self {
             core,
-            spec,
+            spec: Mutex::new(spec),
             self_addr: self_addr.into(),
             ha,
             inner: Mutex::new(Inner::default()),
@@ -180,19 +184,42 @@ impl Replicator {
             worker: Mutex::new(None),
         });
         let w = Arc::clone(&rep);
-        let handle = std::thread::Builder::new()
+        // Spawn failure (fd/thread exhaustion) degrades to an unshipped
+        // queue — quorum waits then bench every follower and publishes
+        // keep acking at leader durability — instead of crashing the
+        // broker that was asked to replicate.
+        match std::thread::Builder::new()
             .name(format!("replicator-{}", rep.self_addr))
             .spawn(move || w.run())
-            .expect("spawn replicator");
-        *rep.worker.lock().unwrap() = Some(handle);
+        {
+            Ok(handle) => *relock(&rep.worker) = Some(handle),
+            Err(e) => log::error!(
+                "replicator worker thread failed to spawn: {e} — replication degraded \
+                 (publishes ack at leader durability only)"
+            ),
+        }
         rep
+    }
+
+    /// Adopt an epoch-bumped membership spec: follower sets computed after
+    /// this call follow the new placement. Already-queued jobs re-read the
+    /// spec when they ship, so a drain that removed a member stops
+    /// shipping to it without draining the queue first. Older epochs are
+    /// ignored (gossip can race).
+    pub fn update_spec(&self, next: ClusterSpec) {
+        let mut spec = relock(&self.spec);
+        if next.epoch > spec.epoch {
+            *spec = next;
+            drop(spec);
+            self.ack_cv.notify_all();
+        }
     }
 
     /// Stop the worker (idempotent; joins the thread).
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.job_cv.notify_all();
-        let handle = self.worker.lock().unwrap().take();
+        let handle = relock(&self.worker).take();
         if let Some(h) = handle {
             let _ = h.join();
         }
@@ -215,7 +242,7 @@ impl Replicator {
         if count == 0 {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         inner.jobs.push_back(Job {
             topic: topic.to_string(),
             partitions,
@@ -232,7 +259,7 @@ impl Replicator {
     /// followers must know the resume points before a failover needs
     /// them).
     pub fn enqueue_offsets(&self, topic: &str, partitions: usize) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         // Coalesce: a pending offset sync for the topic already covers it.
         if inner.jobs.iter().any(|j| j.ship_offsets && j.topic == topic) {
             return;
@@ -260,7 +287,7 @@ impl Replicator {
         let _span = trace::span("quorum.wait");
         let deadline = Instant::now() + QUORUM_WAIT;
         let followers = self.followers(topic, partition);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.inner);
         loop {
             if let Some((epoch, by)) = self.ha.deposed_info(topic, partition) {
                 return Err(BrokerError::Fenced { epoch, by });
@@ -292,7 +319,7 @@ impl Replicator {
                 self.ack_cv.notify_all();
                 return Ok(());
             };
-            let (g, _) = self.ack_cv.wait_timeout(inner, remaining).unwrap();
+            let (g, _) = self.ack_cv.wait_timeout(inner, remaining).unwrap_or_else(|e| e.into_inner());
             inner = g;
         }
     }
@@ -300,9 +327,7 @@ impl Replicator {
     /// Highest watermark `follower` confirmed for `(topic, partition)`
     /// (tests / introspection).
     pub fn follower_watermark(&self, follower: &str, topic: &str, partition: usize) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
+        relock(&self.inner)
             .watermarks
             .get(&(follower.to_string(), topic.to_string(), partition))
             .copied()
@@ -312,8 +337,11 @@ impl Replicator {
     /// The follower replicas of `(topic, partition)` — the placement's
     /// replica list minus this broker.
     fn followers(&self, topic: &str, partition: usize) -> Vec<String> {
-        self.spec
-            .replicas(topic, partition)
+        let spec = relock(&self.spec);
+        if spec.is_empty() {
+            return Vec::new();
+        }
+        spec.replicas(topic, partition)
             .into_iter()
             .filter(|a| *a != self.self_addr)
             .map(str::to_string)
@@ -328,7 +356,7 @@ impl Replicator {
         let mut conns: HashMap<String, BrokerClient> = HashMap::new();
         loop {
             let job = {
-                let mut inner = self.inner.lock().unwrap();
+                let mut inner = relock(&self.inner);
                 loop {
                     if self.shutdown.load(Ordering::SeqCst) {
                         return;
@@ -336,7 +364,7 @@ impl Replicator {
                     if let Some(job) = inner.jobs.pop_front() {
                         break job;
                     }
-                    let (g, _) = self.job_cv.wait_timeout(inner, IDLE_PARK).unwrap();
+                    let (g, _) = self.job_cv.wait_timeout(inner, IDLE_PARK).unwrap_or_else(|e| e.into_inner());
                     inner = g;
                 }
             };
@@ -365,7 +393,7 @@ impl Replicator {
         for follower in self.followers(&job.topic, job.partition) {
             let key = (follower.clone(), job.topic.clone(), job.partition);
             {
-                let inner = self.inner.lock().unwrap();
+                let inner = relock(&self.inner);
                 if inner.watermarks.get(&key).copied().unwrap_or(0) >= target {
                     continue; // a later job already covered this range
                 }
@@ -377,7 +405,7 @@ impl Replicator {
             }
             match self.ship_to(&follower, job, epoch, target, conns) {
                 Ok(hw) => {
-                    let mut inner = self.inner.lock().unwrap();
+                    let mut inner = relock(&self.inner);
                     let wm = inner.watermarks.entry(key.clone()).or_insert(0);
                     let prev = *wm;
                     *wm = (*wm).max(hw);
@@ -415,7 +443,7 @@ impl Replicator {
                         job.partition
                     );
                     conns.remove(&follower);
-                    let mut inner = self.inner.lock().unwrap();
+                    let mut inner = relock(&self.inner);
                     inner.out_of_sync.insert(key, Instant::now());
                     crate::obs_gauge!("replicate.isr_benched").set(inner.out_of_sync.len() as i64);
                     drop(inner);
@@ -553,6 +581,22 @@ mod tests {
         let t0 = Instant::now();
         rep.wait_quorum("t", 0, 5).unwrap();
         assert!(t0.elapsed() < QUORUM_WAIT / 2, "benched follower skips the wait");
+        rep.stop();
+    }
+
+    #[test]
+    fn update_spec_retargets_followers() {
+        let core = BrokerCore::new();
+        core.create_topic("t", 1).unwrap();
+        let spec = ClusterSpec::new(["127.0.0.1:1", "127.0.0.1:2"]).with_replication(2);
+        let rep = Replicator::start(core, spec.clone(), "127.0.0.1:1", HaState::new());
+        assert_eq!(rep.followers("t", 0), vec!["127.0.0.1:2".to_string()]);
+        // Draining :2 re-clamps replication to the lone survivor.
+        rep.update_spec(spec.removed("127.0.0.1:2"));
+        assert!(rep.followers("t", 0).is_empty());
+        // A stale spec (older epoch) cannot roll membership back.
+        rep.update_spec(spec);
+        assert!(rep.followers("t", 0).is_empty());
         rep.stop();
     }
 

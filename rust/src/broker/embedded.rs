@@ -495,6 +495,13 @@ impl BrokerCore {
         Ok(self.topic(topic)?.partition_epoch(partition))
     }
 
+    /// High watermark of one partition — the next offset to be assigned.
+    /// The replication and migration planes use it to measure how far a
+    /// catch-up still has to go.
+    pub fn high_watermark(&self, topic: &str, partition: usize) -> Result<u64> {
+        Ok(self.topic(topic)?.high_watermark(partition))
+    }
+
     /// Adopt `epoch` for one partition (promotion path — persisted in the
     /// partition's `meta.bin` for durable topics).
     pub fn set_partition_epoch(&self, topic: &str, partition: usize, epoch: u64) -> Result<()> {

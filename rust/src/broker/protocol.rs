@@ -121,6 +121,46 @@ pub enum Request {
     /// (`trace_id == 0` exports everything). Replies with
     /// [`Response::Spans`].
     Spans { trace_id: u64 },
+    /// Membership plane (PR 10), joiner → seed: `member` wants in. The
+    /// seed derives the epoch-bumped spec with the newcomer and replies
+    /// with [`Response::Cluster`] carrying it — the joiner then pulls its
+    /// rendezvous share of partitions from their current owners *before*
+    /// installing the new spec anywhere (see `cluster::migrate`).
+    JoinCluster { member: String },
+    /// Membership gossip: push an epoch-bumped spec to a peer. The peer
+    /// adopts it iff the epoch is higher than its own and always replies
+    /// with [`Response::Cluster`] carrying whatever spec it now holds, so
+    /// a push to a peer that already heard newer news returns the newer
+    /// spec to the pusher.
+    SpecSync { meta: ClusterMetaWire },
+    /// Migration catch-up read (new owner → old owner): records of
+    /// `(topic, partition)` from offset `from`, at most `max`. Replies
+    /// with [`Response::LogChunk`] carrying the partition's high
+    /// watermark + fencing epoch alongside the records, so one frame
+    /// tells the puller both what it got and how far behind it still is.
+    FetchLog { topic: String, partition: usize, from: u64, max: usize },
+    /// Migration offset-journal read (new owner → old owner): every
+    /// consumer group's `(position, committed)` cursors for `topic`.
+    /// Replies with [`Response::OffsetDump`].
+    FetchOffsets { topic: String },
+    /// Migration fence (new owner → old owner): stop accepting writes for
+    /// `(topic, partition)` and answer `NotOwner { by }` from now on. The
+    /// old owner bumps its fencing epoch past everything it ever issued
+    /// and records the deposal, freezing the log so the final catch-up
+    /// read is exact. Replies with [`Response::Epoch`] (the fence epoch).
+    Fence { topic: String, partitions: usize, partition: usize, by: String },
+    /// Drain-driven handoff (draining broker → new owner): "pull
+    /// `(topic, partition)` from `from`, fence it, and take ownership".
+    /// The receiver runs the same pull/fence/adopt state machine a joiner
+    /// runs for its own share. Replies with [`Response::Epoch`] (the
+    /// receiver's post-adoption fencing epoch).
+    MigratePartition { topic: String, partitions: usize, partition: usize, from: String },
+    /// Decommission request (CLI → draining broker): hand every owned
+    /// partition to its next rendezvous owner, gossip the epoch-bumped
+    /// spec without this member, and reply [`Response::Count`] with the
+    /// number of partitions moved. An empty `member` means "drain
+    /// yourself" — the receiver substitutes its own advertised address.
+    DrainMember { member: String },
 }
 
 impl Request {
@@ -259,6 +299,43 @@ impl Wire for Request {
                 w.put_u8(24);
                 trace_id.encode(w);
             }
+            Request::JoinCluster { member } => {
+                w.put_u8(25);
+                member.encode(w);
+            }
+            Request::SpecSync { meta } => {
+                w.put_u8(26);
+                meta.encode(w);
+            }
+            Request::FetchLog { topic, partition, from, max } => {
+                w.put_u8(27);
+                topic.encode(w);
+                partition.encode(w);
+                from.encode(w);
+                max.encode(w);
+            }
+            Request::FetchOffsets { topic } => {
+                w.put_u8(28);
+                topic.encode(w);
+            }
+            Request::Fence { topic, partitions, partition, by } => {
+                w.put_u8(29);
+                topic.encode(w);
+                partitions.encode(w);
+                partition.encode(w);
+                by.encode(w);
+            }
+            Request::MigratePartition { topic, partitions, partition, from } => {
+                w.put_u8(30);
+                topic.encode(w);
+                partitions.encode(w);
+                partition.encode(w);
+                from.encode(w);
+            }
+            Request::DrainMember { member } => {
+                w.put_u8(31);
+                member.encode(w);
+            }
         }
     }
 
@@ -339,6 +416,28 @@ impl Wire for Request {
             },
             23 => Request::Metrics,
             24 => Request::Spans { trace_id: Wire::decode(r)? },
+            25 => Request::JoinCluster { member: Wire::decode(r)? },
+            26 => Request::SpecSync { meta: Wire::decode(r)? },
+            27 => Request::FetchLog {
+                topic: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+                from: Wire::decode(r)?,
+                max: Wire::decode(r)?,
+            },
+            28 => Request::FetchOffsets { topic: Wire::decode(r)? },
+            29 => Request::Fence {
+                topic: Wire::decode(r)?,
+                partitions: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+                by: Wire::decode(r)?,
+            },
+            30 => Request::MigratePartition {
+                topic: Wire::decode(r)?,
+                partitions: Wire::decode(r)?,
+                partition: Wire::decode(r)?,
+                from: Wire::decode(r)?,
+            },
+            31 => Request::DrainMember { member: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Request" }),
         })
     }
@@ -375,6 +474,13 @@ pub enum Response {
     /// The broker process's span flight recorder (reply to
     /// [`Request::Spans`]).
     Spans(Vec<trace::Span>),
+    /// Migration catch-up chunk (reply to [`Request::FetchLog`]): the
+    /// partition's records from the requested offset plus the source's
+    /// high watermark and fencing epoch — `recs` empty and `hw` equal to
+    /// the puller's own watermark means it has caught up.
+    LogChunk { hw: u64, epoch: u64, recs: Vec<Record> },
+    /// Migration offset-journal dump (reply to [`Request::FetchOffsets`]).
+    OffsetDump(Vec<OffsetEntry>),
     Err { code: u8, msg: String },
 }
 
@@ -502,6 +608,16 @@ impl Wire for Response {
                 w.put_u8(16);
                 ss.encode(w);
             }
+            Response::LogChunk { hw, epoch, recs } => {
+                w.put_u8(17);
+                hw.encode(w);
+                epoch.encode(w);
+                recs.encode(w);
+            }
+            Response::OffsetDump(entries) => {
+                w.put_u8(18);
+                entries.encode(w);
+            }
             Response::Err { code, msg } => {
                 w.put_u8(255);
                 w.put_u8(*code);
@@ -530,6 +646,12 @@ impl Wire for Response {
             14 => Response::Epoch(Wire::decode(r)?),
             15 => Response::Metrics(Wire::decode(r)?),
             16 => Response::Spans(Wire::decode(r)?),
+            17 => Response::LogChunk {
+                hw: Wire::decode(r)?,
+                epoch: Wire::decode(r)?,
+                recs: Wire::decode(r)?,
+            },
+            18 => Response::OffsetDump(Wire::decode(r)?),
             255 => Response::Err { code: r.get_u8()?, msg: Wire::decode(r)? },
             tag => return Err(DecodeError::BadTag { at, tag: tag as u32, ty: "Response" }),
         })
@@ -659,6 +781,30 @@ mod tests {
             Request::Promote { topic: "t".into(), partitions: 16, partition: 3 },
             Request::Metrics,
             Request::Spans { trace_id: 0xfeed_beef },
+            Request::JoinCluster { member: "127.0.0.1:9095".into() },
+            Request::SpecSync {
+                meta: ClusterMetaWire {
+                    epoch: 3,
+                    version: 1,
+                    members: vec!["127.0.0.1:9092".into(), "127.0.0.1:9095".into()],
+                    replication: 2,
+                },
+            },
+            Request::FetchLog { topic: "t".into(), partition: 3, from: 42, max: 512 },
+            Request::FetchOffsets { topic: "t".into() },
+            Request::Fence {
+                topic: "t".into(),
+                partitions: 16,
+                partition: 3,
+                by: "127.0.0.1:9095".into(),
+            },
+            Request::MigratePartition {
+                topic: "t".into(),
+                partitions: 16,
+                partition: 3,
+                from: "127.0.0.1:9092".into(),
+            },
+            Request::DrainMember { member: "127.0.0.1:9093".into() },
         ];
         for req in reqs {
             let back = Request::decode_exact(&req.encode_vec()).unwrap();
@@ -732,6 +878,23 @@ mod tests {
                 parent_id: 1,
                 start_us: 1_000,
                 dur_us: 42,
+            }]),
+            Response::LogChunk {
+                hw: 43,
+                epoch: 2,
+                recs: vec![Record {
+                    offset: 42,
+                    timestamp_ms: 7,
+                    key: None,
+                    value: Blob::new(vec![4, 5]),
+                }],
+            },
+            Response::OffsetDump(vec![OffsetEntry {
+                group: "g".into(),
+                mode: AssignmentMode::Partitioned,
+                partition: 1,
+                position: 5,
+                committed: 4,
             }]),
             Response::Err { code: 1, msg: "t".into() },
         ];

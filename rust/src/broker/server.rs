@@ -35,7 +35,7 @@ use crate::util::mux::{serve_legacy_conn, serve_mux_conn, sniff_first_frame, Ser
 use crate::util::trace;
 use crate::util::wire::{read_frame_patient, Wire};
 
-use super::cluster::{ClusterView, Replicator, PLACEMENT_VERSION};
+use super::cluster::{migrate, ClusterSpec, ClusterView, Replicator, PLACEMENT_VERSION};
 use super::embedded::{BrokerCore, BrokerError};
 use super::protocol::{error_payload, ClusterMetaWire, Request, Response, ACKS_QUORUM};
 use super::record::ProducerRecord;
@@ -92,13 +92,9 @@ impl BrokerServer {
         // Replicating members (PR 7) run a segment-shipping worker that
         // streams every leader-side append to the partition's followers.
         if let Some(v) = cluster.as_ref() {
-            if v.spec.replication() > 1 {
-                let rep = Replicator::start(
-                    Arc::clone(&core),
-                    v.spec.clone(),
-                    v.self_addr.clone(),
-                    v.ha(),
-                );
+            let spec = v.spec();
+            if spec.replication() > 1 {
+                let rep = Replicator::start(Arc::clone(&core), spec, v.self_addr.clone(), v.ha());
                 v.set_replicator(rep);
             }
         }
@@ -148,6 +144,13 @@ impl BrokerServer {
     /// The served core (embedded-side inspection in tests).
     pub fn core(&self) -> Arc<BrokerCore> {
         Arc::clone(&self.core)
+    }
+
+    /// The cluster view, when this server was started as a member — the
+    /// join CLI drives [`migrate::join`] against it after the listener is
+    /// already serving (the joiner must answer redirects mid-pull).
+    pub fn cluster_view(&self) -> Option<&ClusterView> {
+        self.cluster.as_ref().as_ref()
     }
 
     /// Stop accepting and join the accept thread. Existing connection
@@ -294,6 +297,9 @@ fn cluster_publish(
     recs: Vec<ProducerRecord>,
 ) -> Result<Vec<(usize, u64)>, BrokerError> {
     let parts = core.partition_count(topic)?;
+    // One spec snapshot for the whole batch: a membership flip mid-loop
+    // must not route half the records under each placement.
+    let spec = view.spec();
     let owned = view.owned_partitions(topic, parts);
     let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); parts];
     for (i, rec) in recs.iter().enumerate() {
@@ -302,13 +308,13 @@ fn cluster_publish(
                 let p = key_partition(&k.0, parts);
                 if !view.owns(topic, p) {
                     return Err(BrokerError::NotOwner {
-                        owner: view.spec.owner(topic, p).to_string(),
+                        owner: spec.owner(topic, p).to_string(),
                     });
                 }
                 p
             }
             None => view.next_owned(&owned).ok_or_else(|| BrokerError::NotOwner {
-                owner: view.spec.owner(topic, 0).to_string(),
+                owner: spec.owner(topic, 0).to_string(),
             })?,
         };
         buckets[p].push(i);
@@ -354,6 +360,7 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
         Q::FetchMany { .. } => Some(trace::span("broker.fetch")),
         Q::Poll { .. } => Some(trace::span("broker.poll")),
         Q::Replicate { .. } => Some(trace::span("replica.apply")),
+        Q::FetchLog { .. } => Some(trace::span("migrate.serve_log")),
         _ => None,
     };
     let to_err = |e: &BrokerError| {
@@ -370,7 +377,7 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
         // flight recorder, optionally filtered to one trace.
         Q::Spans { trace_id } => A::Spans(trace::snapshot_wire(trace_id)),
         Q::ClusterMeta => A::Cluster(match cluster {
-            Some(v) => v.spec.to_wire(),
+            Some(v) => v.spec().to_wire(),
             None => ClusterMetaWire {
                 epoch: 0,
                 version: PLACEMENT_VERSION,
@@ -447,9 +454,10 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
                 "promote on a standalone broker".into(),
             )),
             Some(v) => {
-                if !v.spec.is_replica(&v.self_addr, &topic, partition) {
+                let spec = v.spec();
+                if !spec.is_replica(&v.self_addr, &topic, partition) {
                     return to_err(&BrokerError::NotOwner {
-                        owner: v.spec.owner(&topic, partition).to_string(),
+                        owner: spec.owner(&topic, partition).to_string(),
                     });
                 }
                 match v.promote(core, &topic, partitions, partition) {
@@ -567,6 +575,95 @@ pub fn dispatch_at(core: &BrokerCore, cluster: Option<&ClusterView>, req: Reques
                 Err(e) => to_err(&e),
             }
         }
+        // ---- membership plane (PR 10) --------------------------------
+        Q::JoinCluster { member } => match cluster {
+            None => to_err(&BrokerError::Transport("join on a standalone broker".into())),
+            // Derive and answer — do NOT install. Installing here would
+            // route traffic to a joiner whose logs are still empty; the
+            // joiner installs (and gossips) only after every pull
+            // promoted. See `migrate::join`.
+            Some(v) => A::Cluster(v.spec().joined(&member).to_wire()),
+        },
+        Q::SpecSync { meta } => match cluster {
+            None => to_err(&BrokerError::Transport("spec sync on a standalone broker".into())),
+            Some(v) => {
+                v.install_spec(ClusterSpec::from_wire(&meta));
+                // Always answer the spec we now hold: a pusher behind
+                // newer news learns it from its own gossip round.
+                A::Cluster(v.spec().to_wire())
+            }
+        },
+        Q::FetchLog { topic, partition, from, max } => {
+            // Served regardless of ownership (like `Replicate`): the
+            // puller reads from a source that may already be fenced —
+            // that frozen tail is exactly what the final drain wants.
+            match core.partition_count(&topic) {
+                Ok(count) if partition < count => {}
+                Ok(count) => {
+                    return to_err(&BrokerError::BadPartition { topic, partition, count })
+                }
+                Err(e) => return to_err(&e),
+            }
+            let hw = match core.high_watermark(&topic, partition) {
+                Ok(hw) => hw,
+                Err(e) => return to_err(&e),
+            };
+            let epoch = core.partition_epoch(&topic, partition).unwrap_or(0);
+            match core.read_records(&topic, partition, from, max) {
+                Ok(rs) => A::LogChunk {
+                    hw,
+                    epoch,
+                    recs: rs.iter().map(|r| (**r).clone()).collect(),
+                },
+                Err(e) => to_err(&e),
+            }
+        }
+        Q::FetchOffsets { topic } => A::OffsetDump(core.group_offset_entries(&topic)),
+        Q::Fence { topic, partitions, partition, by } => match cluster {
+            None => to_err(&BrokerError::Transport("fence on a standalone broker".into())),
+            Some(v) => {
+                // Freeze the partition: bump the epoch past everything
+                // this broker ever issued and record the deposal, so
+                // `leads` flips false and producers get `NotOwner { by }`.
+                if let Err(e) = core.ensure_topic(&topic, partitions.max(1)) {
+                    return to_err(&e);
+                }
+                let epoch = match core.partition_epoch(&topic, partition) {
+                    Ok(e) => e + 1,
+                    Err(e) => return to_err(&e),
+                };
+                if let Err(e) = core.set_partition_epoch(&topic, partition, epoch) {
+                    return to_err(&e);
+                }
+                v.ha().depose(&topic, partition, epoch, &by);
+                A::Epoch(epoch)
+            }
+        },
+        Q::MigratePartition { topic, partitions, partition, from } => match cluster {
+            None => to_err(&BrokerError::Transport("migrate on a standalone broker".into())),
+            Some(v) => match migrate::pull_partition(core, v, &topic, partitions, partition, &from)
+            {
+                Ok(epoch) => A::Epoch(epoch),
+                Err(e) => to_err(&e),
+            },
+        },
+        Q::DrainMember { member } => match cluster {
+            None => to_err(&BrokerError::Transport("drain on a standalone broker".into())),
+            Some(v) => {
+                // An empty member means "drain yourself"; a mismatched one
+                // is a mis-routed CLI call, refused before any handoff.
+                if !member.is_empty() && member != v.self_addr {
+                    return to_err(&BrokerError::Transport(format!(
+                        "drain addressed to {member} but this broker is {}",
+                        v.self_addr
+                    )));
+                }
+                match migrate::drain(core, v) {
+                    Ok(moved) => A::Count(moved),
+                    Err(e) => to_err(&e),
+                }
+            }
+        },
     }
 }
 

@@ -4,7 +4,11 @@
 //!
 //! - `run <uc1|uc2|uc3|uc4>` — run a use-case workload on a local runtime.
 //! - `worker --listen <addr> --slots N` — serve as a remote worker process.
-//! - `broker --listen <addr>` — run a standalone stream-broker server.
+//! - `broker --listen <addr>` — run a standalone stream-broker server
+//!   (`--cluster-seed` for static membership, `--join <seed>` to join a
+//!   running cluster live — PR 10).
+//! - `drain <addr>` — decommission a cluster member: it hands every owned
+//!   partition off under a fenced migration, then leaves the spec (PR 10).
 //! - `dstream-server --listen <addr>` — run a standalone DistroStream Server.
 //! - `stats --brokers <addrs>` — scrape and render broker metrics (PR 8).
 //! - `trace --brokers <addrs>` — merge broker span rings into stitched
@@ -38,6 +42,7 @@ fn main() {
         "run" => cmd_run(&rest),
         "worker" => cmd_worker(&rest),
         "broker" => cmd_broker(&rest),
+        "drain" => cmd_drain(&rest),
         "dstream-server" => cmd_dstream(&rest),
         "stats" => cmd_stats(&rest),
         "trace" => cmd_trace(&rest),
@@ -61,7 +66,8 @@ fn usage() -> String {
          COMMANDS:\n  \
            run <uc1|uc2|uc3|uc4>   run a use-case workload locally (--data-dir durable streams, --cluster scale-out)\n  \
            worker                  serve as a remote worker (--listen, --slots)\n  \
-           broker                  broker server (--listen, --data-dir, --retention-*, --cluster-seed for sharding, --metrics-addr for Prometheus)\n  \
+           broker                  broker server (--listen, --data-dir, --retention-*, --cluster-seed for sharding, --join <seed> for live join, --metrics-addr for Prometheus)\n  \
+           drain <addr>            decommission a cluster member: fenced handoff of every owned partition, then leave the spec\n  \
            dstream-server          standalone DistroStream Server (--listen)\n  \
            stats                   scrape broker metrics (--brokers, --watch) into one cluster-wide snapshot\n  \
            trace                   merge broker span rings (--brokers) into stitched trace timelines (--trace-id, --slow-ms, --self-test)\n  \
@@ -205,10 +211,19 @@ fn cmd_broker(raw: &[String]) -> i32 {
              partitions the placement function assigns to it)",
         )
         .opt(
+            "join",
+            None,
+            "join a RUNNING cluster live (PR 10): the address of any current \
+             member; this broker fetches the spec, pulls its rendezvous \
+             share under fenced migration, then flips the epoch-bumped \
+             membership everywhere (mutually exclusive with --cluster-seed)",
+        )
+        .opt(
             "advertise",
             None,
             "the address clients reach this member under (default: --listen); \
-             must appear in --cluster-seed verbatim",
+             must appear in --cluster-seed verbatim (with --join it is the \
+             address gossiped to the cluster instead)",
         )
         .opt(
             "replication-factor",
@@ -287,44 +302,100 @@ fn cmd_broker(raw: &[String]) -> i32 {
         }
     };
     let listen = a.str("listen");
-    let server = match a.get("cluster-seed") {
-        None => BrokerServer::start(core, listen),
-        Some(seeds) => {
-            let replication = a.usize("replication-factor").max(1);
-            let spec =
-                ClusterSpec::new(seeds.split(',').filter(|s| !s.is_empty()).map(str::to_string))
-                    .with_replication(replication);
-            let acks = match a.str("acks") {
-                "leader" => hybridws::broker::protocol::ACKS_LEADER,
-                "quorum" => hybridws::broker::protocol::ACKS_QUORUM,
-                other => {
-                    eprintln!("--acks must be 'leader' or 'quorum', got {other:?}");
+    let acks = match a.str("acks") {
+        "leader" => hybridws::broker::protocol::ACKS_LEADER,
+        "quorum" => hybridws::broker::protocol::ACKS_QUORUM,
+        other => {
+            eprintln!("--acks must be 'leader' or 'quorum', got {other:?}");
+            return 2;
+        }
+    };
+    if a.get("join").is_some() && a.get("cluster-seed").is_some() {
+        eprintln!("--join and --cluster-seed are mutually exclusive: --cluster-seed boots a \
+                   static cluster, --join enters a running one");
+        return 2;
+    }
+    let server = if let Some(seed) = a.get("join") {
+        // Live join (PR 10): fetch the running cluster's spec from any
+        // member, start serving as a *joining* view (owning nothing, so no
+        // routed traffic arrives early), then pull our rendezvous share
+        // under fenced migration and flip the epoch-bumped spec everywhere.
+        let advertise = a.get("advertise").unwrap_or(listen).to_string();
+        let wire = match hybridws::broker::BrokerClient::connect(seed)
+            .and_then(|c| c.cluster_meta())
+        {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("join: seed {seed} unreachable: {e}");
+                return 1;
+            }
+        };
+        if wire.members.is_empty() {
+            eprintln!("join: seed {seed} is not running in cluster mode");
+            return 2;
+        }
+        let cur = ClusterSpec::from_wire(&wire);
+        println!(
+            "joining cluster {:?} (epoch {}) via {seed} as {advertise}",
+            cur.members(),
+            cur.epoch
+        );
+        match TcpListener::bind(listen) {
+            Ok(listener) => BrokerServer::start_cluster(
+                core,
+                listener,
+                ClusterView::new_joining(cur, advertise).with_default_acks(acks),
+            )
+            .map(|server| {
+                let view = server.cluster_view().expect("cluster server carries a view");
+                match hybridws::broker::cluster::migrate::join(&server.core(), view, seed) {
+                    Ok((spec, moved)) => println!(
+                        "joined at epoch {}: pulled {moved} partitions, {} members",
+                        spec.epoch,
+                        spec.len()
+                    ),
+                    // The server keeps running: a failed join leaves the
+                    // old spec intact everywhere and the CLI can re-run
+                    // the (idempotent) join against another seed.
+                    Err(e) => eprintln!("join incomplete (retry with --join): {e}"),
+                }
+                server
+            }),
+            Err(e) => Err(e),
+        }
+    } else {
+        match a.get("cluster-seed") {
+            None => BrokerServer::start(core, listen),
+            Some(seeds) => {
+                let replication = a.usize("replication-factor").max(1);
+                let spec = ClusterSpec::new(
+                    seeds.split(',').filter(|s| !s.is_empty()).map(str::to_string),
+                )
+                .with_replication(replication);
+                let advertise = a.get("advertise").unwrap_or(listen).to_string();
+                if !spec.contains(&advertise) {
+                    eprintln!(
+                        "--advertise {advertise:?} is not in --cluster-seed {:?} — every member \
+                         must appear in the shared seed list verbatim",
+                        spec.members()
+                    );
                     return 2;
                 }
-            };
-            let advertise = a.get("advertise").unwrap_or(listen).to_string();
-            if !spec.contains(&advertise) {
-                eprintln!(
-                    "--advertise {advertise:?} is not in --cluster-seed {:?} — every member \
-                     must appear in the shared seed list verbatim",
-                    spec.members()
+                println!(
+                    "cluster member {advertise} of {:?} (owner-routed sharding, \
+                     replication {}, acks={})",
+                    spec.members(),
+                    spec.replication(),
+                    a.str("acks"),
                 );
-                return 2;
-            }
-            println!(
-                "cluster member {advertise} of {:?} (owner-routed sharding, \
-                 replication {}, acks={})",
-                spec.members(),
-                spec.replication(),
-                a.str("acks"),
-            );
-            match TcpListener::bind(listen) {
-                Ok(listener) => BrokerServer::start_cluster(
-                    core,
-                    listener,
-                    ClusterView::new(spec, advertise).with_default_acks(acks),
-                ),
-                Err(e) => Err(e),
+                match TcpListener::bind(listen) {
+                    Ok(listener) => BrokerServer::start_cluster(
+                        core,
+                        listener,
+                        ClusterView::new(spec, advertise).with_default_acks(acks),
+                    ),
+                    Err(e) => Err(e),
+                }
             }
         }
     };
@@ -364,6 +435,33 @@ fn cmd_broker(raw: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("broker failed: {e}");
+            1
+        }
+    }
+}
+
+/// `hybridws drain <addr>` — decommission one cluster member (PR 10): the
+/// broker at `addr` hands every partition it owns to that partition's next
+/// rendezvous owner under the fenced migration state machine, installs the
+/// epoch-bumped spec without itself and gossips it. The process keeps
+/// serving (it answers redirects and `SpecSync`) until killed.
+fn cmd_drain(raw: &[String]) -> i32 {
+    let spec = ArgSpec::new("decommission a cluster member via fenced live migration")
+        .positional("addr", "the advertised address of the member to drain");
+    let a = parse_or_exit(spec, raw);
+    let Some(addr) = a.positional(0) else {
+        eprintln!("drain: the member address is required (e.g. `hybridws drain 127.0.0.1:9093`)");
+        return 2;
+    };
+    // An empty member means "drain yourself" — the broker substitutes its
+    // own advertised address, so the CLI needs no spelling agreement.
+    match hybridws::broker::BrokerClient::connect(addr).and_then(|c| c.drain_member("")) {
+        Ok(moved) => {
+            println!("drained {addr}: {moved} partitions handed off");
+            0
+        }
+        Err(e) => {
+            eprintln!("drain {addr} failed: {e}");
             1
         }
     }

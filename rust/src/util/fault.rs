@@ -65,6 +65,11 @@ pub mod site {
     /// Cluster client's per-member connection factory: refuse, i.e. a
     /// scripted client↔member partition. Context is the member address.
     pub const CLUSTER_CONNECT: &str = "cluster.connect";
+    /// Partition-migration state machine (PR 10): checked before every
+    /// catch-up fetch and before the fence. `Stall` stretches the
+    /// dual-accept window in place; anything else fails the step.
+    /// Context is `topic[partition]@source`.
+    pub const CLUSTER_MIGRATE: &str = "cluster.migrate";
 }
 
 /// What an armed [`Rule`] does when it fires. Sites implement the

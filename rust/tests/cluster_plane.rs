@@ -406,6 +406,183 @@ fn replicated_cluster_promotes_followers_after_leader_kill() {
     }
 }
 
+// ---- membership plane (PR 10) ---------------------------------------------
+
+/// PR 10 acceptance (kill-free path): a third broker joins a RUNNING
+/// two-member cluster under continuous publish — pulling its rendezvous
+/// share of segments and consumer cursors live, flipping ownership under a
+/// bumped fencing epoch — and a member is then drained back out, all
+/// without losing one acked record or regressing a committed offset. The
+/// publisher never stops: it rides the `NotOwner` reroute + meta refresh
+/// across both epoch bumps.
+#[test]
+fn elastic_membership_scales_out_and_in_under_continuous_publish() {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    let (mut servers, addrs, spec0) = start_members(2, 1, None);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("elastic", 16).unwrap();
+    cc.join_group("g", "elastic", "m", AssignmentMode::Shared).unwrap();
+
+    // Continuous publisher: a value is only counted once its batch acks. A
+    // batch that errors inside a handoff window is NOT retried by value —
+    // its records may have landed anyway, so every check below is
+    // subset-based (at-least-once stays sound, lost acks do not).
+    let stop = Arc::new(AtomicBool::new(false));
+    let acked_count = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let pub_cc = ClusterClient::connect(&addrs).unwrap();
+    let pub_stop = Arc::clone(&stop);
+    let pub_count = Arc::clone(&acked_count);
+    let publisher = std::thread::spawn(move || {
+        let mut acked: Vec<(usize, u64)> = Vec::new();
+        let mut acked_vals: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        while !pub_stop.load(Ordering::Relaxed) {
+            let vals: Vec<u64> = (next..next + 4).collect();
+            next += 4;
+            let recs: Vec<ProducerRecord> =
+                vals.iter().map(|v| ProducerRecord::new(v.to_le_bytes().to_vec())).collect();
+            // An Err here means a batch hit the fence→promote gap of a
+            // moving partition and outran the reroute budget; the next
+            // batch follows the redirect.
+            if let Ok(acks) = pub_cc.publish_batch("elastic", recs) {
+                acked.extend(acks);
+                acked_vals.extend(vals);
+                pub_count.fetch_add(4, Ordering::Relaxed);
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let _ = tx.send((acked, acked_vals));
+    });
+    let advanced = |by: u64| {
+        let from = acked_count.load(Ordering::Relaxed);
+        assert!(
+            wait_until(
+                || acked_count.load(Ordering::Relaxed) >= from + by,
+                Duration::from_secs(20)
+            ),
+            "publisher stalled instead of riding the membership change"
+        );
+    };
+    advanced(40); // steady state on the two seed members first
+
+    // Commit what has been claimed so far: these positions must never
+    // regress across the two membership changes below.
+    let mf = cc.fetch_many_wait("g", "elastic", "m", usize::MAX, usize::MAX, 500).unwrap();
+    let mut seen: HashSet<u64> = HashSet::new();
+    for (_, recs) in &mf.batches {
+        for r in recs {
+            seen.insert(u64::from_le_bytes(r.value[..8].try_into().unwrap()));
+        }
+    }
+    let claims: Vec<(usize, u64)> =
+        mf.positions.iter().enumerate().map(|(p, (claim, _))| (p, *claim)).collect();
+    cc.commit("g", "elastic", &claims).unwrap();
+    let committed0: Vec<u64> =
+        cc.positions("g", "elastic").unwrap().iter().map(|&(_, c)| c).collect();
+
+    // Scale OUT: start a third broker and join it live — the
+    // `hybridws broker --join <seed>` path. It must pull its rendezvous
+    // share and flip ownership under a bumped epoch while the publisher
+    // keeps running.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr3 = listener.local_addr().unwrap().to_string();
+    let joined = BrokerServer::start_cluster(
+        BrokerCore::new(),
+        listener,
+        ClusterView::new_joining(spec0.clone(), addr3.clone()),
+    )
+    .unwrap();
+    let view3 = joined.cluster_view().expect("cluster server carries a view");
+    let (spec1, moved_in) =
+        hybridws::broker::cluster::migrate::join(&joined.core(), view3, &addrs[0]).unwrap();
+    assert_eq!(spec1.epoch, spec0.epoch + 1, "a join must bump the spec epoch");
+    assert_eq!(spec1.len(), 3);
+    let share = spec1.owned_by(&addr3, "elastic", 16);
+    assert!(!share.is_empty(), "the joiner must win a rendezvous share of 16 partitions");
+    assert_eq!(moved_in, share.len(), "exactly the joiner's share must have been pulled");
+    // The join's gossip converges every member on the bumped meta.
+    for a in addrs.iter().chain(std::iter::once(&addr3)) {
+        let meta = BrokerClient::connect(a).unwrap().cluster_meta().unwrap();
+        assert_eq!(
+            (meta.epoch, meta.members.len()),
+            (spec1.epoch, 3),
+            "{a} did not adopt the join"
+        );
+    }
+    advanced(40); // acks keep flowing across the widened cluster
+
+    // Scale IN: drain seed member 0 — the `hybridws drain <addr>` path.
+    // Its partitions migrate to the survivors under another epoch bump.
+    let drained_share = spec1.owned_by(&addrs[0], "elastic", 16).len();
+    let moved_out = BrokerClient::connect(&addrs[0]).unwrap().drain_member("").unwrap();
+    assert_eq!(moved_out, drained_share, "a drain must hand off exactly the member's share");
+    let spec2 = ClusterSpec::from_wire(
+        &BrokerClient::connect(&addr3).unwrap().cluster_meta().unwrap(),
+    );
+    assert_eq!(spec2.epoch, spec1.epoch + 1, "a drain must bump the spec epoch again");
+    assert!(!spec2.contains(&addrs[0]), "the drained member must leave the spec");
+    assert_eq!(spec2.len(), 2);
+    advanced(40); // and still flowing on the shrunk cluster
+
+    stop.store(true, Ordering::Relaxed);
+    publisher.join().unwrap();
+    let (acked, acked_vals) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert!(acked_vals.len() >= 120, "the three phases must each have acked records");
+
+    // Drain the topic dry: every acked value arrives (exactly-once modulo
+    // the handoff's at-least-once edge, hence the set), and the claim
+    // cursors converge on the high watermarks.
+    let acked_set: HashSet<u64> = acked_vals.iter().copied().collect();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mf = cc.fetch_many_wait("g", "elastic", "m", usize::MAX, usize::MAX, 500).unwrap();
+        for (_, recs) in &mf.batches {
+            for r in recs {
+                seen.insert(u64::from_le_bytes(r.value[..8].try_into().unwrap()));
+            }
+        }
+        let claims: Vec<(usize, u64)> =
+            mf.positions.iter().enumerate().map(|(p, (claim, _))| (p, *claim)).collect();
+        cc.commit("g", "elastic", &claims).unwrap();
+        if (mf.record_count() == 0 && acked_set.is_subset(&seen)) || Instant::now() > deadline {
+            break;
+        }
+    }
+    let missing: Vec<u64> = acked_set.difference(&seen).take(5).copied().collect();
+    assert!(
+        acked_set.is_subset(&seen),
+        "acked records lost across join + drain — e.g. {missing:?}"
+    );
+
+    // Merged commit positions: the group's cursors — journalled, migrated
+    // twice, and answered by the final owners — cover every record, and
+    // none of the early commits regressed.
+    let stats = cc.topic_stats("elastic").unwrap();
+    for &(p, off) in &acked {
+        assert!(
+            off < stats.high_watermarks[p],
+            "acked offset {off} not covered by p{p}'s watermark {}",
+            stats.high_watermarks[p]
+        );
+    }
+    let committed: Vec<u64> =
+        cc.positions("g", "elastic").unwrap().iter().map(|&(_, c)| c).collect();
+    assert_eq!(
+        committed, stats.high_watermarks,
+        "merged commit positions must cover every record after the drain"
+    );
+    for (p, (&before, &after)) in committed0.iter().zip(&committed).enumerate() {
+        assert!(after >= before, "p{p}: committed offset regressed from {before} to {after}");
+    }
+
+    joined.shutdown();
+    for s in servers.drain(..) {
+        s.shutdown();
+    }
+}
+
 // ---- tracing plane (PR 9) ------------------------------------------------
 
 /// The span flight recorder is process-global; the two tracing tests

@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use hybridws::broker::cluster::migrate;
 use hybridws::broker::record::ProducerRecord;
 use hybridws::broker::{
     AssignmentMode, BrokerClient, BrokerConfig, BrokerCore, BrokerServer, ClusterClient,
@@ -835,6 +836,348 @@ fn quorum_publishes_survive_leader_kill_via_promotion() {
         "missing kill event in log (seed {seed})"
     );
     save_log("quorum_publishes_survive_leader_kill_via_promotion", seed, &log);
+    for s in servers.lock().unwrap().iter_mut() {
+        if let Some(s) = s.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// PR 10 satellite: scale OUT under load with scripted stalls on the
+/// migration seam. A third member joins a running two-member cluster while
+/// a publisher hammers; `Stall` rules on `cluster.migrate` stretch the
+/// dual-accept window so the catch-up loop demonstrably overlaps live
+/// writes. No acked record may be lost, claim cursors stay monotone, and
+/// all three members must converge on the bumped epoch with the joiner
+/// owning its rendezvous share.
+#[test]
+fn scale_out_under_load_keeps_every_acked_record() {
+    let _g = serialized();
+    let seed = seed_for("scale_out_under_load_keeps_every_acked_record", 0xC0FFEE09);
+
+    let (mut servers, addrs, spec) = start_members(2, 1, None);
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.ensure_topic("t", 16).unwrap();
+    cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+
+    // The joiner's server starts up-front (owning nothing — see
+    // `ClusterView::new_joining`); the scripted event performs the live
+    // join mid-load, stretched by the stall rule armed just before it.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr3 = listener.local_addr().unwrap().to_string();
+    let joiner = BrokerServer::start_cluster(
+        BrokerCore::new(),
+        listener,
+        ClusterView::new_joining(spec.clone(), addr3.clone()),
+    )
+    .unwrap();
+    let joiner = Arc::new(Mutex::new(Some(joiner)));
+
+    let (ev_tx, ev_rx) = mpsc::channel();
+    let join_slot = Arc::clone(&joiner);
+    let join_seed_addr = addrs[0].clone();
+    let handle = Scenario::new("scale-out-under-load", seed)
+        .at(
+            20,
+            "stall the first migration fetches",
+            Rule::new(fault::site::CLUSTER_MIGRATE, FaultAction::Stall(40)).times(4),
+        )
+        .at_do(120, "join third member", move || {
+            let guard = join_slot.lock().unwrap();
+            let s = guard.as_ref().expect("joiner still running");
+            let view = s.cluster_view().expect("cluster server carries a view");
+            let res = migrate::join(&s.core(), view, &join_seed_addr)
+                .map(|(spec, moved)| (spec.epoch, moved))
+                .map_err(|e| e.to_string());
+            let _ = ev_tx.send(res);
+        })
+        .run();
+
+    // Publish straight through the join. A batch may hit the fence→promote
+    // gap of a moving partition and outrun the reroute budget: its values
+    // stay uncounted (every check below is subset-based) and the next
+    // batch follows the redirect.
+    let mut rng = Rng::new(seed);
+    let mut acked: Vec<(usize, u64)> = Vec::new();
+    let mut acked_vals: HashSet<u64> = HashSet::new();
+    let mut next_val = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < Duration::from_millis(1200) {
+        let n = rng.range(1, 6);
+        let recs: Vec<ProducerRecord> = (0..n)
+            .map(|_| {
+                let v = next_val;
+                next_val += 1;
+                ProducerRecord::new(v.to_le_bytes().to_vec())
+            })
+            .collect();
+        let vals: Vec<u64> = (next_val - n as u64..next_val).collect();
+        if let Ok(acks) = cc.publish_batch("t", recs) {
+            acked.extend(acks);
+            acked_vals.extend(vals);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let log = handle.finish();
+
+    let (epoch_after, moved) = ev_rx
+        .recv_timeout(Duration::from_secs(10))
+        .unwrap_or_else(|_| panic!("the scripted join never reported (seed {seed})"))
+        .unwrap_or_else(|e| panic!("live join failed: {e} (seed {seed})"));
+    assert!(moved >= 1, "the joiner must have pulled its share (seed {seed})");
+
+    // Publishing must heal once the handoff windows close.
+    let tail: Vec<ProducerRecord> = (0..8u64)
+        .map(|i| {
+            let v = next_val + i;
+            ProducerRecord::new(v.to_le_bytes().to_vec())
+        })
+        .collect();
+    let tail_vals: Vec<u64> = (next_val..next_val + 8).collect();
+    let acks = cc
+        .publish_batch("t", tail)
+        .unwrap_or_else(|e| panic!("publishing must heal after the join: {e} (seed {seed})"));
+    acked.extend(acks);
+    acked_vals.extend(tail_vals);
+
+    // Drain every acked value; claim cursors must only move forward.
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut claim_history: Vec<Vec<u64>> = vec![Vec::new(); 16];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !acked_vals.is_subset(&seen) && Instant::now() < deadline {
+        let mf = cc.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 500).unwrap();
+        for (_, recs) in &mf.batches {
+            for r in recs {
+                seen.insert(u64::from_le_bytes(r.value[..8].try_into().unwrap()));
+            }
+        }
+        for (p, (claim, _)) in mf.positions.iter().enumerate() {
+            claim_history[p].push(*claim);
+        }
+    }
+    let missing: Vec<u64> = acked_vals.difference(&seen).take(5).cloned().collect();
+    assert!(
+        acked_vals.is_subset(&seen),
+        "acked records lost across the live join — e.g. {missing:?} (seed {seed})"
+    );
+    for (p, history) in claim_history.iter().enumerate() {
+        invariants::monotone(history, &format!("claim cursor p{p}"))
+            .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+    }
+
+    // No acked record lost, measured against the POST-join owners' merged
+    // watermarks (queried broker-direct so a stale client spec cannot
+    // flatter the check).
+    let spec_after = ClusterSpec::from_wire(
+        &BrokerClient::connect(&addr3).unwrap().cluster_meta().unwrap(),
+    );
+    assert_eq!(spec_after.epoch, epoch_after, "gossip must have installed the bumped spec");
+    assert!(
+        !spec_after.owned_by(&addr3, "t", 16).is_empty(),
+        "the joiner must own part of the topic under the bumped spec (seed {seed})"
+    );
+    let mut hw = vec![0u64; 16];
+    for (addr, ps) in spec_after.owners("t", 16) {
+        let s = BrokerClient::connect(&addr).unwrap().topic_stats("t").unwrap();
+        for p in ps {
+            hw[p] = s.high_watermarks[p];
+        }
+    }
+    invariants::no_acked_lost(&acked, &hw).unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    // All three members agree on the epoch-bumped meta.
+    let views: Vec<(u64, Vec<String>)> = addrs
+        .iter()
+        .chain(std::iter::once(&addr3))
+        .map(|a| {
+            let meta = BrokerClient::connect(a).unwrap().cluster_meta().unwrap();
+            (meta.epoch, meta.members)
+        })
+        .collect();
+    invariants::meta_converged(&views).unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    assert!(
+        log.iter().any(|l| l.contains("fire cluster.migrate")),
+        "the migration seam never fired (seed {seed}): {log:?}"
+    );
+    save_log("scale_out_under_load_keeps_every_acked_record", seed, &log);
+    if let Some(s) = joiner.lock().unwrap().take() {
+        s.shutdown();
+    }
+    for s in servers.iter_mut() {
+        if let Some(s) = s.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// PR 10 satellite: kill the migration SOURCE mid-drain. A replication-2
+/// member is being drained (its partitions pulled by the survivors through
+/// stalled migration fetches) when a scripted kill takes it down. The
+/// drain rpc must surface a degraded error — never hang or panic — and
+/// every quorum-acked record must still drain from the survivors via the
+/// PR 7 failover plane, with monotone cursors and converged meta.
+#[test]
+fn drain_with_leader_kill_degrades_and_loses_nothing() {
+    let _g = serialized();
+    let seed = seed_for("drain_with_leader_kill_degrades_and_loses_nothing", 0xC0FFEE0A);
+
+    let (servers, addrs, spec) = start_members(3, 2, None);
+    let servers = Arc::new(Mutex::new(servers));
+    let cc = ClusterClient::connect(&addrs).unwrap();
+    cc.set_acks(hybridws::broker::ACKS_QUORUM);
+    cc.ensure_topic("t", 16).unwrap();
+    cc.join_group("g", "t", "m", AssignmentMode::Shared).unwrap();
+
+    // Everything is quorum-acked BEFORE the drain: each ack means the
+    // partition's follower confirmed the batch, so whichever of the two
+    // replicas survives the kill can serve it.
+    let mut rng = Rng::new(seed);
+    let mut acked: Vec<(usize, u64)> = Vec::new();
+    let mut acked_vals: HashSet<u64> = HashSet::new();
+    let mut next_val = 0u64;
+    for _ in 0..24 {
+        let n = rng.range(1, 6);
+        let recs: Vec<ProducerRecord> = (0..n)
+            .map(|_| {
+                let v = next_val;
+                next_val += 1;
+                ProducerRecord::new(v.to_le_bytes().to_vec())
+            })
+            .collect();
+        let vals: Vec<u64> = (next_val - n as u64..next_val).collect();
+        let acks = cc.publish_batch("t", recs).unwrap();
+        acked.extend(acks);
+        acked_vals.extend(vals);
+    }
+
+    let victim = 1usize;
+    assert!(
+        !spec.owned_by(&addrs[victim], "t", 16).is_empty(),
+        "degenerate placement: the victim leads nothing"
+    );
+
+    // Stall every migration fetch so the drain is still mid-transfer when
+    // the scripted kill lands at 250ms.
+    let (ev_tx, ev_rx) = mpsc::channel();
+    let kill_servers = Arc::clone(&servers);
+    let handle = Scenario::new("drain-with-leader-kill", seed)
+        .at(
+            0,
+            "stall every migration fetch",
+            Rule::new(fault::site::CLUSTER_MIGRATE, FaultAction::Stall(60)).times(20),
+        )
+        .at_do(250, "kill the draining source", move || {
+            let server = kill_servers.lock().unwrap()[victim].take().unwrap();
+            let core = server.core();
+            server.shutdown();
+            let ok = wait_until(|| Arc::strong_count(&core) == 1, Duration::from_secs(10));
+            let _ = ev_tx.send(("kill", ok));
+        })
+        .run();
+
+    // The drain call blocks on the victim; run it off-thread so a hang is
+    // a test failure, not a test timeout.
+    let (drain_tx, drain_rx) = mpsc::channel();
+    let victim_addr = addrs[victim].clone();
+    std::thread::spawn(move || {
+        let res = BrokerClient::connect(&victim_addr)
+            .and_then(|c| c.drain_member(""))
+            .map_err(|e| e.to_string());
+        let _ = drain_tx.send(res);
+    });
+    let drained = drain_rx
+        .recv_timeout(Duration::from_secs(20))
+        .unwrap_or_else(|_| panic!("drain must surface an error, not hang (seed {seed})"));
+    assert!(
+        drained.is_err(),
+        "the kill at 250ms must interrupt the stalled drain, got {drained:?} (seed {seed})"
+    );
+
+    let log = handle.finish();
+    let events: Vec<(&str, bool)> = ev_rx.try_iter().collect();
+    assert_eq!(events.len(), 1, "the scripted kill must have run (seed {seed})");
+    assert!(events[0].1, "scripted kill failed to release the core (seed {seed})");
+
+    // The cluster still accepts writes: leader-acked now (the dead member
+    // can no longer confirm a quorum for partitions it follows).
+    cc.set_acks(hybridws::broker::ACKS_LEADER);
+    let tail: Vec<ProducerRecord> = (0..8u64)
+        .map(|i| ProducerRecord::new((next_val + i).to_le_bytes().to_vec()))
+        .collect();
+    let tail_vals: Vec<u64> = (next_val..next_val + 8).collect();
+    let acks = cc
+        .publish_batch("t", tail)
+        .unwrap_or_else(|e| panic!("publishes must fail over past the dead source: {e} (seed {seed})"));
+    acked.extend(acks);
+    acked_vals.extend(tail_vals);
+
+    // Every acked record drains from the survivors — some partitions were
+    // already fenced over to their migration targets, the rest fail over
+    // to their replicated followers; both paths must serve.
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut claim_history: Vec<Vec<u64>> = vec![Vec::new(); 16];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !acked_vals.is_subset(&seen) && Instant::now() < deadline {
+        let mf = cc.fetch_many_wait("g", "t", "m", usize::MAX, usize::MAX, 500).unwrap();
+        for (_, recs) in &mf.batches {
+            for r in recs {
+                seen.insert(u64::from_le_bytes(r.value[..8].try_into().unwrap()));
+            }
+        }
+        for (p, (claim, _)) in mf.positions.iter().enumerate() {
+            claim_history[p].push(*claim);
+        }
+    }
+    let missing: Vec<u64> = acked_vals.difference(&seen).take(5).cloned().collect();
+    assert!(
+        acked_vals.is_subset(&seen),
+        "acked records lost across the killed drain — e.g. {missing:?} (seed {seed})"
+    );
+    for (p, history) in claim_history.iter().enumerate() {
+        invariants::monotone(history, &format!("claim cursor p{p}"))
+            .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+    }
+
+    // Failover-aware offsets cover every ack, and commits stay under them.
+    let fresh_hw: Vec<u64> = cc.offsets("t").unwrap().iter().map(|&(_, hw)| hw).collect();
+    invariants::no_acked_lost(&acked, &fresh_hw).unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+    let pos = cc.positions("g", "t").unwrap();
+    let commits: Vec<(usize, u64)> =
+        pos.iter().enumerate().map(|(p, (claim, _))| (p, *claim)).collect();
+    cc.commit("g", "t", &commits).unwrap();
+    let committed: Vec<(usize, u64)> = cc
+        .positions("g", "t")
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(p, (_, c))| (p, *c))
+        .collect();
+    invariants::watermark_covers_commits(&fresh_hw, &committed)
+        .unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    // The interrupted drain never installed a spec: the survivors agree on
+    // the ORIGINAL meta (the dead member cannot answer and is excluded).
+    let views: Vec<(u64, Vec<String>)> = addrs
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != victim)
+        .map(|(_, a)| {
+            let meta = BrokerClient::connect(a).unwrap().cluster_meta().unwrap();
+            (meta.epoch, meta.members)
+        })
+        .collect();
+    invariants::meta_converged(&views).unwrap_or_else(|e| panic!("{e} (seed {seed})"));
+
+    assert!(
+        log.iter().any(|l| l.contains("fire cluster.migrate")),
+        "the migration seam never fired (seed {seed}): {log:?}"
+    );
+    assert!(
+        log.iter().any(|l| l.contains("kill the draining source")),
+        "missing kill event in log (seed {seed})"
+    );
+    save_log("drain_with_leader_kill_degrades_and_loses_nothing", seed, &log);
     for s in servers.lock().unwrap().iter_mut() {
         if let Some(s) = s.take() {
             s.shutdown();

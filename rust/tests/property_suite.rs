@@ -200,6 +200,84 @@ fn prop_replicated_placement_is_ordered_stable_and_promotes_followers() {
     });
 }
 
+#[test]
+fn prop_epoch_bumped_join_and_drain_move_minimal_partitions() {
+    // PR 10: `joined`/`removed` derive the epoch-bumped specs that live
+    // membership changes install. They must (1) bump the epoch by exactly
+    // one — that is what makes the change win the gossip race — and (2) be
+    // minimally disruptive: a join moves only the partitions the newcomer
+    // wins outright (≈1/(N+1)), a drain moves only the departed member's
+    // share, and neither EVER swaps a partition between two surviving
+    // members. A join followed by draining the same member restores the
+    // original placement exactly, two epochs later.
+    check_with("epoch-bumped join/drain minimality", 40, |r: &mut Rng| {
+        (r.range(2, 8), r.range(1, 65), r.next_u64()) // members, partitions, salt
+    }, |&(members, parts, salt)| {
+        let addrs: Vec<String> = (0..members).map(|i| format!("10.2.0.{i}:9{i:03}")).collect();
+        let spec = ClusterSpec::new(addrs.clone());
+
+        // Join: the newcomer takes exactly what rendezvous awards it.
+        let newbie = "10.2.0.250:9250".to_string();
+        let joined = spec.joined(&newbie);
+        ensure(joined.epoch == spec.epoch + 1, "join must bump the epoch by one")?;
+        ensure(joined.contains(&newbie) && joined.len() == members + 1, "join must add the member")?;
+        let mut moved_in = 0usize;
+        for p in 0..parts {
+            let after = joined.owner("t", p);
+            if after == newbie {
+                moved_in += 1;
+            } else {
+                ensure(
+                    after == spec.owner("t", p),
+                    "join swapped a partition between two surviving members",
+                )?;
+            }
+        }
+        ensure(
+            moved_in == joined.owned_by(&newbie, "t", parts).len(),
+            "the moved set must be exactly the joiner's share",
+        )?;
+        ensure(
+            members < 4 || parts < 32 || moved_in <= 3 * parts / (members + 1),
+            "join moved far more than the joiner's 1/(N+1) share",
+        )?;
+
+        // Drain: only the departed member's share moves.
+        let gone = addrs[salt as usize % members].clone();
+        let removed = spec.removed(&gone);
+        ensure(removed.epoch == spec.epoch + 1, "drain must bump the epoch by one")?;
+        ensure(!removed.contains(&gone) && removed.len() == members - 1, "drain must drop the member")?;
+        let mut moved_out = 0usize;
+        for p in 0..parts {
+            let before = spec.owner("t", p);
+            if before == gone {
+                moved_out += 1;
+                ensure(removed.owner("t", p) != gone, "the departed member must own nothing")?;
+            } else {
+                ensure(
+                    removed.owner("t", p) == before,
+                    "drain swapped a partition between two surviving members",
+                )?;
+            }
+        }
+        ensure(
+            moved_out == spec.owned_by(&gone, "t", parts).len(),
+            "the moved set must be exactly the departed member's share",
+        )?;
+
+        // Round trip: join then drain the same member restores placement.
+        let back = joined.removed(&newbie);
+        ensure(back.epoch == spec.epoch + 2, "each membership event costs one epoch")?;
+        for p in 0..parts {
+            ensure(
+                back.owner("t", p) == spec.owner("t", p),
+                "join + drain of the same member must restore the placement",
+            )?;
+        }
+        Ok(())
+    });
+}
+
 // ---- analyser properties ----------------------------------------------------
 
 #[test]
